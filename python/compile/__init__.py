@@ -1,0 +1,5 @@
+"""Build-time compile path: L2 JAX models + L1 Pallas kernels -> HLO text.
+
+Never imported at runtime; the Rust binary consumes only the emitted
+artifacts/*.hlo.txt files through PJRT.
+"""

@@ -1,0 +1,105 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the Rust runtime.
+
+Usage (normally via `make artifacts`):
+
+    cd python && python -m compile.aot --out-dir ../artifacts \
+        [--batch-sizes 64,256,1024] [--grid-sizes 16,64,128]
+
+Emits, per size:
+    artifacts/batched_update_{B}.hlo.txt   (prod[B,2], psi[B,2,2], cur[B,2])
+    artifacts/grid_step_{n}.hlo.txt        (pot, h, v, msgs tensors)
+
+Interchange is HLO **text**, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. Lowered with return_tuple=True; the
+Rust loader unwraps the tuple.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_batched_update(batch: int, impl: str = "ref") -> str:
+    """impl="ref": fused jnp graph (fast on XLA CPU, the default artifact).
+    impl="pallas": the L1 kernel in interpret mode (TPU-shaped; emitted as
+    *_pallas.hlo.txt for cross-validation)."""
+    fn = model.batched_update_model_ref if impl == "ref" else model.batched_update_model
+    lowered = jax.jit(fn).lower(
+        spec((batch, 2)), spec((batch, 2, 2)), spec((batch, 2))
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_grid_step(n: int, impl: str = "ref") -> str:
+    from compile.kernels.ref import ref_grid_step
+
+    fn = ref_grid_step if impl == "ref" else model.grid_step_model
+    lowered = jax.jit(fn).lower(
+        spec((n, n, 2)), spec((n, n - 1, 2, 2)), spec((n - 1, n, 2, 2)),
+        spec((4, n, n, 2)),
+    )
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch-sizes", default="64,256,1024")
+    ap.add_argument("--grid-sizes", default="16,64,128")
+    # Back-compat shim for the scaffold's `--out` single-file form.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    out_dir = args.out_dir if args.out is None else os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    def emit(path, text):
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    batches = [int(x) for x in args.batch_sizes.split(",") if x]
+    grids = [int(x) for x in args.grid_sizes.split(",") if x]
+    for b in batches:
+        emit(os.path.join(out_dir, f"batched_update_{b}.hlo.txt"),
+             lower_batched_update(b, impl="ref"))
+    for n in grids:
+        emit(os.path.join(out_dir, f"grid_step_{n}.hlo.txt"),
+             lower_grid_step(n, impl="ref"))
+    # Pallas-kernel flavors (smallest sizes) for runtime cross-validation.
+    if batches:
+        b = min(batches)
+        emit(os.path.join(out_dir, f"batched_update_{b}_pallas.hlo.txt"),
+             lower_batched_update(b, impl="pallas"))
+    if grids:
+        n = min(grids)
+        emit(os.path.join(out_dir, f"grid_step_{n}_pallas.hlo.txt"),
+             lower_grid_step(n, impl="pallas"))
+
+    # Marker consumed by the Makefile's up-to-date check.
+    with open(os.path.join(out_dir, ".stamp"), "w") as f:
+        f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""L1: the batched binary message-update Pallas kernel.
+
+The compute hot-spot of belief propagation on binary models is the dense
+per-message "apply edge factor + normalize + residual" step:
+
+    new[b, j] = normalize_j( sum_i prod[b, i] * psi[b, i, j] )
+    res[b]    = || new[b, :] - cur[b, :] ||_2
+
+This kernel processes the batch in VMEM-sized tiles of `block` messages.
+On TPU the [block, 2] x [block, 2, 2] batched matvec maps onto the VPU
+(too narrow for the MXU; see DESIGN.md section Hardware-Adaptation for the
+roofline discussion) with the HBM->VMEM schedule expressed by the
+BlockSpecs below. On CPU the kernel MUST run with interpret=True: real
+TPU lowering emits a Mosaic custom-call that the CPU PJRT plugin cannot
+execute.
+
+Correctness oracle: kernels.ref.ref_batched_update (pure jnp), enforced by
+python/tests/test_kernel.py across hypothesis-driven shape/value sweeps.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile: 64 messages x 2 states = one f32 VMEM tile lane-pair on
+# TPU-like 8x128 vector registers; also divides every artifact batch size.
+DEFAULT_BLOCK = 64
+
+
+def _update_kernel(prod_ref, psi_ref, cur_ref, new_ref, res_ref):
+    """Kernel body over one [block] tile of messages."""
+    prod = prod_ref[...]          # [block, 2]
+    psi = psi_ref[...]            # [block, 2, 2]
+    cur = cur_ref[...]            # [block, 2]
+
+    # Batched 1x2 @ 2x2 matvec, unrolled over the tiny state dimension so
+    # the compiler sees pure [block]-wide vector ops (VPU-friendly).
+    un0 = prod[:, 0] * psi[:, 0, 0] + prod[:, 1] * psi[:, 1, 0]
+    un1 = prod[:, 0] * psi[:, 0, 1] + prod[:, 1] * psi[:, 1, 1]
+    z = un0 + un1
+    safe = z > 0.0
+    zinv = jnp.where(safe, 1.0 / jnp.where(safe, z, 1.0), 0.0)
+    n0 = jnp.where(safe, un0 * zinv, 0.5)
+    n1 = jnp.where(safe, un1 * zinv, 0.5)
+
+    d0 = n0 - cur[:, 0]
+    d1 = n1 - cur[:, 1]
+    res_ref[...] = jnp.sqrt(d0 * d0 + d1 * d1)
+    new_ref[...] = jnp.stack([n0, n1], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def batched_update(prod, psi, cur, block=DEFAULT_BLOCK):
+    """Pallas-backed batched update; pads the batch to a tile multiple.
+
+    Args/returns as kernels.ref.ref_batched_update.
+    """
+    b = prod.shape[0]
+    bt = min(block, b) if b > 0 else block
+    pad = (-b) % bt
+    if pad:
+        # Identity lanes: psi = I, prod = cur = uniform -> res 0.
+        prod = jnp.concatenate([prod, jnp.full((pad, 2), 0.5, prod.dtype)])
+        eye = jnp.broadcast_to(jnp.eye(2, dtype=psi.dtype), (pad, 2, 2))
+        psi = jnp.concatenate([psi, eye])
+        cur = jnp.concatenate([cur, jnp.full((pad, 2), 0.5, cur.dtype)])
+    total = prod.shape[0]
+    grid = (total // bt,)
+
+    new, res = pl.pallas_call(
+        _update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, 2), lambda i: (i, 0)),
+            pl.BlockSpec((bt, 2, 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bt, 2), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, 2), lambda i: (i, 0)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((total, 2), prod.dtype),
+            jax.ShapeDtypeStruct((total,), prod.dtype),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(prod, psi, cur)
+    return new[:b], res[:b]
+
+
+def vmem_bytes(block=DEFAULT_BLOCK, dtype_bytes=4):
+    """Estimated VMEM working set per tile (for DESIGN.md's roofline
+    accounting): prod + psi + cur + new + res."""
+    per_msg = (2 + 4 + 2 + 2 + 1) * dtype_bytes
+    return block * per_msg

@@ -1,0 +1,91 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its `ref_*` counterpart to float32 tolerance across randomized
+shape/value sweeps (see python/tests/). They are also used directly by the
+L2 model as the fallback implementation when a kernel is disabled.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_batched_update(prod, psi, cur):
+    """Batched binary message update.
+
+    Args:
+      prod: [B, 2] gather products psi_i(x_i) * prod mu_{k->i}(x_i)
+        (precomputed by the Rust coordinator).
+      psi:  [B, 2, 2] edge factor matrices psi(x_i, x_j).
+      cur:  [B, 2] current message values.
+
+    Returns:
+      (new, res): normalized updated messages [B, 2] and L2 residuals [B].
+    """
+    un = jnp.einsum("bi,bij->bj", prod, psi)
+    z = jnp.sum(un, axis=-1, keepdims=True)
+    new = jnp.where(z > 0, un / jnp.where(z > 0, z, 1.0), 0.5)
+    res = jnp.sqrt(jnp.sum((new - cur) ** 2, axis=-1))
+    return new, res
+
+
+def ref_grid_step(pot, h, v, msgs):
+    """One synchronous BP round over an n x n binary grid.
+
+    Message layout (matches rust/src/runtime/grid.rs):
+      msgs[d, r, c, :] = message INTO node (r, c) from direction d, where
+      d = 0: from the left neighbor  (r, c-1)
+      d = 1: from the right neighbor (r, c+1)
+      d = 2: from above (r-1, c)
+      d = 3: from below (r+1, c)
+    Boundary slots (e.g. d=0 at c=0) hold the uniform message (0.5, 0.5)
+    and are preserved.
+
+    Args:
+      pot:  [n, n, 2] node potentials.
+      h:    [n, n-1, 2, 2] horizontal factors psi(x_{r,c}, x_{r,c+1}).
+      v:    [n-1, n, 2, 2] vertical factors psi(x_{r,c}, x_{r+1,c}).
+      msgs: [4, n, n, 2].
+
+    Returns:
+      (new_msgs [4, n, n, 2], max_res scalar) with max_res the max L2
+      residual over all message slots (boundary slots never change).
+    """
+    n = pot.shape[0]
+
+    # Product of potential and all incoming messages at each node.
+    belief = pot * msgs[0] * msgs[1] * msgs[2] * msgs[3]
+
+    def normalize(un):
+        z = jnp.sum(un, axis=-1, keepdims=True)
+        return jnp.where(z > 0, un / jnp.where(z > 0, z, 1.0), 0.5)
+
+    # Cavity product at each node excluding direction d.
+    def cavity(d):
+        m = msgs[d]
+        return belief / jnp.where(m > 0, m, 1.0)
+
+    new = msgs
+
+    # d=0 slot at (r, c>=1): message (r,c-1)->(r,c). The source node
+    # (r,c-1) must exclude what it received FROM (r,c): its d=1 slot.
+    src = cavity(1)[:, : n - 1, :]
+    out0 = normalize(jnp.einsum("rci,rcij->rcj", src, h))
+    new = new.at[0, :, 1:, :].set(out0)
+
+    # d=1 slot at (r, c<n-1): message (r,c+1)->(r,c); factor transposed.
+    src = cavity(0)[:, 1:, :]
+    out1 = normalize(jnp.einsum("rcj,rcij->rci", src, h))
+    new = new.at[1, :, : n - 1, :].set(out1)
+
+    # d=2 slot at (r>=1, c): message (r-1,c)->(r,c).
+    src = cavity(3)[: n - 1, :, :]
+    out2 = normalize(jnp.einsum("rci,rcij->rcj", src, v))
+    new = new.at[2, 1:, :, :].set(out2)
+
+    # d=3 slot at (r<n-1, c): message (r+1,c)->(r,c); factor transposed.
+    src = cavity(2)[1:, :, :]
+    out3 = normalize(jnp.einsum("rcj,rcij->rci", src, v))
+    new = new.at[3, : n - 1, :, :].set(out3)
+
+    res = jnp.sqrt(jnp.sum((new - msgs) ** 2, axis=-1))
+    return new, jnp.max(res)

@@ -1,0 +1,90 @@
+"""L2: JAX compute graphs lowered to the AOT artifacts.
+
+Two entry points, both built on the L1 Pallas kernel
+(kernels.message_update.batched_update):
+
+- `batched_update_model(prod, psi, cur)` — the generic batched binary
+  message update used by the Rust coordinator's `relaxed_residual_batched`
+  engine (the Multiqueue pops a batch, Rust gathers the cavity products,
+  the kernel does the dense matvec + normalize + residual).
+
+- `grid_step_model(pot, h, v, msgs)` — one full synchronous BP round over
+  an n x n binary grid (Ising/Potts), used by the `synch` engine's PJRT
+  path. The elementwise belief/cavity algebra stays in jnp (XLA fuses it);
+  the four per-direction dense update batches are routed through the same
+  Pallas kernel.
+
+Tensor layouts match rust/src/runtime/{batch,grid}.rs exactly; the pure-jnp
+oracles in kernels.ref define the semantics.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.message_update import batched_update
+from compile.kernels.ref import ref_batched_update
+
+
+def batched_update_model(prod, psi, cur):
+    """[B,2],[B,2,2],[B,2] -> ([B,2] new, [B] res). Pallas-kernel flavor."""
+    return batched_update(prod, psi, cur)
+
+
+def batched_update_model_ref(prod, psi, cur):
+    """Same computation from the pure-jnp oracle.
+
+    This is what the default CPU artifacts are lowered from: Pallas with
+    interpret=True lowers its tile grid to while/dynamic-slice HLO that the
+    XLA *CPU* backend executes ~34x slower than the equivalent fused jnp
+    graph (measured; EXPERIMENTS.md section Perf). The two flavors are
+    asserted numerically identical in pytest and in the Rust
+    pjrt_integration tests; the Pallas flavor is the TPU-targeted
+    implementation and is still emitted as `*_pallas.hlo.txt` for
+    cross-validation.
+    """
+    return ref_batched_update(prod, psi, cur)
+
+
+def grid_step_model(pot, h, v, msgs):
+    """One synchronous round; see kernels.ref.ref_grid_step for layout."""
+    n = pot.shape[0]
+
+    belief = pot * msgs[0] * msgs[1] * msgs[2] * msgs[3]
+
+    def cavity(d):
+        m = msgs[d]
+        return belief / jnp.where(m > 0, m, 1.0)
+
+    def run(src, psi_mats, old):
+        """Flatten a [.., 2] direction batch through the Pallas kernel."""
+        shape = src.shape[:-1]
+        new_flat, res_flat = batched_update(
+            src.reshape(-1, 2), psi_mats.reshape(-1, 2, 2), old.reshape(-1, 2)
+        )
+        return new_flat.reshape(*shape, 2), res_flat.reshape(shape)
+
+    new = msgs
+    max_res = jnp.zeros((), dtype=msgs.dtype)
+
+    # d=0: (r,c-1)->(r,c); source cavity excludes its d=1 slot.
+    out0, r0 = run(cavity(1)[:, : n - 1, :], h, msgs[0, :, 1:, :])
+    new = new.at[0, :, 1:, :].set(out0)
+    max_res = jnp.maximum(max_res, jnp.max(r0))
+
+    # d=1: (r,c+1)->(r,c); transposed factor.
+    ht = jnp.swapaxes(h, -1, -2)
+    out1, r1 = run(cavity(0)[:, 1:, :], ht, msgs[1, :, : n - 1, :])
+    new = new.at[1, :, : n - 1, :].set(out1)
+    max_res = jnp.maximum(max_res, jnp.max(r1))
+
+    # d=2: (r-1,c)->(r,c).
+    out2, r2 = run(cavity(3)[: n - 1, :, :], v, msgs[2, 1:, :, :])
+    new = new.at[2, 1:, :, :].set(out2)
+    max_res = jnp.maximum(max_res, jnp.max(r2))
+
+    # d=3: (r+1,c)->(r,c); transposed factor.
+    vt = jnp.swapaxes(v, -1, -2)
+    out3, r3 = run(cavity(2)[1:, :, :], vt, msgs[3, : n - 1, :, :])
+    new = new.at[3, : n - 1, :, :].set(out3)
+    max_res = jnp.maximum(max_res, jnp.max(r3))
+
+    return new, max_res

@@ -1,0 +1,6 @@
+"""Make `pytest python/tests/` work from the repository root by putting
+the `python/` directory (the `compile` package root) on sys.path."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

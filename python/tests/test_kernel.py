@@ -1,0 +1,102 @@
+"""L1 kernel correctness: Pallas batched_update vs the pure-jnp oracle,
+including hypothesis-driven sweeps over batch sizes, block sizes, and value
+regimes (degenerate factors, zero normalizers, denormal-ish inputs)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.message_update import batched_update, vmem_bytes, DEFAULT_BLOCK
+from compile.kernels.ref import ref_batched_update
+
+
+def rand(key, shape, lo=0.0, hi=1.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape,
+                              dtype=jnp.float32, minval=lo, maxval=hi)
+
+
+def assert_matches_ref(prod, psi, cur, **kw):
+    new_k, res_k = batched_update(prod, psi, cur, **kw)
+    new_r, res_r = ref_batched_update(prod, psi, cur)
+    np.testing.assert_allclose(new_k, new_r, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(res_k, res_r, rtol=1e-5, atol=1e-6)
+
+
+class TestKernelVsRef:
+    def test_aligned_batch(self):
+        assert_matches_ref(rand(0, (128, 2), 0.01, 1), rand(1, (128, 2, 2)),
+                           rand(2, (128, 2)))
+
+    def test_unaligned_batch_padding(self):
+        assert_matches_ref(rand(3, (100, 2), 0.01, 1), rand(4, (100, 2, 2)),
+                           rand(5, (100, 2)))
+
+    def test_batch_smaller_than_block(self):
+        assert_matches_ref(rand(6, (3, 2), 0.01, 1), rand(7, (3, 2, 2)),
+                           rand(8, (3, 2)))
+
+    def test_single_message(self):
+        assert_matches_ref(rand(9, (1, 2), 0.01, 1), rand(10, (1, 2, 2)),
+                           rand(11, (1, 2)))
+
+    @pytest.mark.parametrize("block", [8, 32, 64, 128])
+    def test_block_sizes(self, block):
+        assert_matches_ref(rand(12, (256, 2), 0.01, 1), rand(13, (256, 2, 2)),
+                           rand(14, (256, 2)), block=block)
+
+    def test_zero_normalizer_uniform_fallback(self):
+        prod = jnp.array([[0.4, 0.6]], dtype=jnp.float32)
+        psi = jnp.zeros((1, 2, 2), dtype=jnp.float32)
+        cur = jnp.array([[0.5, 0.5]], dtype=jnp.float32)
+        new, res = batched_update(prod, psi, cur)
+        np.testing.assert_allclose(new, [[0.5, 0.5]], atol=1e-7)
+        np.testing.assert_allclose(res, [0.0], atol=1e-7)
+
+    def test_deterministic_factor(self):
+        # Equality factor propagates prod exactly.
+        prod = jnp.array([[0.1, 0.9]], dtype=jnp.float32)
+        psi = jnp.broadcast_to(jnp.eye(2, dtype=jnp.float32), (1, 2, 2))
+        cur = jnp.array([[0.5, 0.5]], dtype=jnp.float32)
+        new, res = batched_update(prod, psi, cur)
+        np.testing.assert_allclose(new, [[0.1, 0.9]], rtol=1e-6)
+        np.testing.assert_allclose(res, [np.sqrt(0.4**2 * 2)], rtol=1e-5)
+
+    def test_outputs_are_normalized(self):
+        new, _ = batched_update(rand(15, (500, 2), 0.01, 1),
+                                rand(16, (500, 2, 2), 0.0, 5.0),
+                                rand(17, (500, 2)))
+        np.testing.assert_allclose(jnp.sum(new, axis=-1), 1.0, rtol=1e-5)
+
+    def test_residual_zero_at_fixed_point(self):
+        prod = rand(18, (64, 2), 0.01, 1)
+        psi = rand(19, (64, 2, 2), 0.01, 1)
+        new, _ = batched_update(prod, psi, rand(20, (64, 2)))
+        _, res2 = batched_update(prod, psi, new)
+        np.testing.assert_allclose(res2, 0.0, atol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=300),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_hypothesis_sweep(b, seed, scale):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    prod = jax.random.uniform(k1, (b, 2), dtype=jnp.float32) * scale + 1e-6
+    psi = jax.random.uniform(k2, (b, 2, 2), dtype=jnp.float32) * scale
+    cur = jax.random.uniform(k3, (b, 2), dtype=jnp.float32)
+    cur = cur / jnp.sum(cur, axis=-1, keepdims=True)
+    new_k, res_k = batched_update(prod, psi, cur)
+    new_r, res_r = ref_batched_update(prod, psi, cur)
+    np.testing.assert_allclose(new_k, new_r, rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(res_k, res_r, rtol=2e-5, atol=1e-6)
+
+
+def test_vmem_estimate_sane():
+    # One tile must fit comfortably in a 16 MiB TPU VMEM.
+    assert vmem_bytes(DEFAULT_BLOCK) < 1 << 20
+    assert vmem_bytes(1024) == 1024 * 11 * 4

@@ -1,0 +1,82 @@
+"""L2 model correctness: the grid sweep vs its oracle, convergence of
+repeated sweeps, and boundary-slot preservation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import ref_grid_step
+from compile.model import grid_step_model
+
+
+def make_grid(n, seed, coupling=1.0):
+    k = jax.random.split(jax.random.PRNGKey(seed), 4)
+    pot = jax.random.uniform(k[0], (n, n, 2), dtype=jnp.float32) + 0.1
+    h = jnp.exp(jax.random.uniform(k[1], (n, n - 1, 2, 2), dtype=jnp.float32,
+                                   minval=-coupling, maxval=coupling))
+    v = jnp.exp(jax.random.uniform(k[2], (n - 1, n, 2, 2), dtype=jnp.float32,
+                                   minval=-coupling, maxval=coupling))
+    msgs = jnp.full((4, n, n, 2), 0.5, dtype=jnp.float32)
+    return pot, h, v, msgs
+
+
+@pytest.mark.parametrize("n", [2, 3, 5, 8])
+def test_matches_ref(n):
+    pot, h, v, msgs = make_grid(n, n)
+    a_m, a_r = grid_step_model(pot, h, v, msgs)
+    b_m, b_r = ref_grid_step(pot, h, v, msgs)
+    np.testing.assert_allclose(a_m, b_m, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(a_r, b_r, rtol=1e-4, atol=1e-5)
+
+
+def test_boundary_slots_preserved():
+    n = 4
+    pot, h, v, msgs = make_grid(n, 1)
+    new, _ = grid_step_model(pot, h, v, msgs)
+    # d=0 at c=0, d=1 at c=n-1, d=2 at r=0, d=3 at r=n-1 stay uniform.
+    np.testing.assert_allclose(new[0, :, 0, :], 0.5, atol=1e-7)
+    np.testing.assert_allclose(new[1, :, n - 1, :], 0.5, atol=1e-7)
+    np.testing.assert_allclose(new[2, 0, :, :], 0.5, atol=1e-7)
+    np.testing.assert_allclose(new[3, n - 1, :, :], 0.5, atol=1e-7)
+
+
+def test_messages_normalized():
+    pot, h, v, msgs = make_grid(6, 2)
+    new, _ = grid_step_model(pot, h, v, msgs)
+    np.testing.assert_allclose(jnp.sum(new, axis=-1), 1.0, rtol=1e-5)
+
+
+def test_repeated_sweeps_converge():
+    pot, h, v, msgs = make_grid(5, 3, coupling=0.5)
+    res = None
+    for _ in range(200):
+        msgs, res = grid_step_model(pot, h, v, msgs)
+        if float(res) < 1e-5:
+            break
+    assert float(res) < 1e-5, f"did not converge: {float(res)}"
+
+
+def test_fixed_point_residual_zero():
+    pot, h, v, msgs = make_grid(4, 5, coupling=0.3)
+    for _ in range(300):
+        msgs, res = grid_step_model(pot, h, v, msgs)
+        if float(res) < 1e-7:
+            break
+    new, res2 = grid_step_model(pot, h, v, msgs)
+    assert float(res2) < 1e-5
+    np.testing.assert_allclose(new, msgs, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(min_value=2, max_value=7),
+       seed=st.integers(min_value=0, max_value=10**6))
+def test_hypothesis_grid_vs_ref(n, seed):
+    pot, h, v, msgs = make_grid(n, seed)
+    # One random pre-step so messages are non-uniform.
+    msgs, _ = ref_grid_step(pot, h, v, msgs)
+    a_m, a_r = grid_step_model(pot, h, v, msgs)
+    b_m, b_r = ref_grid_step(pot, h, v, msgs)
+    np.testing.assert_allclose(a_m, b_m, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(a_r, b_r, rtol=1e-4, atol=1e-5)

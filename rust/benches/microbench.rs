@@ -1,0 +1,100 @@
+//! `cargo bench --bench microbench` — component-level benchmarks feeding
+//! the §Perf analysis in EXPERIMENTS.md: scheduler op throughput, message
+//! update rate per model family, lookahead refresh cost, and PJRT call
+//! overhead (when artifacts exist).
+
+use relaxed_bp::benchlib::{BenchConfig, BenchGroup};
+use relaxed_bp::bp::{compute_message, msg_buf, Lookahead, Messages};
+use relaxed_bp::configio::ModelSpec;
+use relaxed_bp::engines::batched::{BatchCompute, NativeBatch};
+use relaxed_bp::model::builders;
+use relaxed_bp::runtime::{artifacts_dir, batch::PjrtBatch};
+use relaxed_bp::sched::{Entry, ExactQueue, Multiqueue, RandomQueues, Scheduler};
+use relaxed_bp::util::Xoshiro256;
+
+fn cfg() -> BenchConfig {
+    BenchConfig { warmup: 1, samples: 5, budget_secs: 30.0, verbose: true }
+}
+
+fn bench_scheduler(g: &mut BenchGroup, name: &str, q: &dyn Scheduler) {
+    let ops = 200_000u32;
+    g.bench(&format!("{name}/insert_pop_{ops}"), || {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for t in 0..ops {
+            q.insert(Entry { prio: rng.next_f64(), task: t, epoch: 0 }, &mut rng);
+        }
+        let mut popped = 0u32;
+        while q.pop(&mut rng).is_some() {
+            popped += 1;
+        }
+        assert_eq!(popped, ops);
+        (2 * ops) as f64
+    });
+}
+
+fn main() {
+    // ---- Scheduler ops ----
+    let mut g = BenchGroup::new("schedulers").with_config(cfg());
+    bench_scheduler(&mut g, "exact", &ExactQueue::new());
+    bench_scheduler(&mut g, "multiqueue_8", &Multiqueue::new(8));
+    bench_scheduler(&mut g, "multiqueue_32", &Multiqueue::new(32));
+    bench_scheduler(&mut g, "random_queues_8", &RandomQueues::new(8));
+    g.report();
+
+    // ---- Message update kernel (native) per model family ----
+    let mut g = BenchGroup::new("message_update").with_config(cfg());
+    for spec in [
+        ModelSpec::Tree { n: 10_000 },
+        ModelSpec::Ising { n: 100 },
+        ModelSpec::Ldpc { n: 3_000, flip_prob: 0.07 },
+    ] {
+        let mrf = builders::build(&spec, 1);
+        let msgs = Messages::uniform(&mrf);
+        let me = mrf.num_messages() as u32;
+        g.bench(&format!("{}/full_sweep_{me}", spec.name()), || {
+            let mut out = msg_buf();
+            for e in 0..me {
+                compute_message(&mrf, &msgs, e, &mut out);
+            }
+            me as f64
+        });
+    }
+    g.report();
+
+    // ---- Lookahead refresh + commit cycle ----
+    let mut g = BenchGroup::new("lookahead").with_config(cfg());
+    let mrf = builders::build(&ModelSpec::Ising { n: 100 }, 1);
+    let msgs = Messages::uniform(&mrf);
+    let la = Lookahead::init(&mrf, &msgs);
+    let me = mrf.num_messages() as u32;
+    g.bench("ising100/refresh_sweep", || {
+        for e in 0..me {
+            la.refresh(&mrf, &msgs, e);
+        }
+        me as f64
+    });
+    g.report();
+
+    // ---- Batched backends: native vs PJRT ----
+    let mut g = BenchGroup::new("batched_backends").with_config(cfg());
+    let mrf = builders::build(&ModelSpec::Ising { n: 64 }, 1);
+    let msgs = Messages::uniform(&mrf);
+    let edges: Vec<u32> = (0..1024u32).collect();
+    let stride = mrf.max_domain();
+    let mut out = vec![0.0; edges.len() * stride];
+    let mut res = vec![0.0; edges.len()];
+    g.bench("native/1024", || {
+        NativeBatch.compute_batch(&mrf, &msgs, &edges, &mut out, &mut res);
+        edges.len() as f64
+    });
+    if artifacts_dir().join("batched_update_1024.hlo.txt").exists() {
+        let pjrt = PjrtBatch::load_default(1024).expect("artifact");
+        g.bench("pjrt/1024", || {
+            pjrt.compute_batch(&mrf, &msgs, &edges, &mut out, &mut res);
+            edges.len() as f64
+        });
+    } else {
+        eprintln!("[microbench] skipping PJRT backend (run `make artifacts`)");
+    }
+    g.report();
+}

@@ -1,0 +1,87 @@
+//! `cargo bench --bench paper_figures` — the scaling-figure series
+//! (Figures 2, 4–7) at benchmark scale, plus the Lemma 2 / Claim 4 tree
+//! experiments. Full-size: `relaxed-bp experiment fig4 …`.
+
+use relaxed_bp::benchlib::BenchGroup;
+use relaxed_bp::configio::{AlgorithmSpec, ModelSpec, RunConfig};
+use relaxed_bp::harness::Harness;
+use relaxed_bp::model::builders;
+use relaxed_bp::run::run_on_model;
+
+fn harness() -> Harness {
+    let scale = std::env::var("RBP_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.01);
+    Harness { scale, threads: vec![1, 2, 4], max_threads: 4, ..Harness::default() }
+}
+
+fn series(g: &mut BenchGroup, h: &Harness, spec: &ModelSpec, algs: &[AlgorithmSpec]) {
+    let mrf = builders::build(spec, h.seed);
+    for alg in algs {
+        for &p in &h.threads {
+            let name = format!("{}/{}/p{}", spec.name(), alg.name(), p);
+            let mrf = mrf.clone();
+            let spec = spec.clone();
+            let alg = alg.clone();
+            let seed = h.seed;
+            g.bench(&name, move || {
+                let cfg = RunConfig::new(spec.clone(), alg.clone())
+                    .with_threads(p)
+                    .with_seed(seed);
+                run_on_model(&cfg, mrf.clone()).expect("run").stats.metrics.total.updates as f64
+            });
+        }
+    }
+}
+
+fn main() {
+    let h = harness();
+    let models = h.models();
+
+    // Figure 2: Ising, three algorithms.
+    let mut f2 = BenchGroup::new("fig2_ising_headline");
+    series(
+        &mut f2,
+        &h,
+        &models[1],
+        &[
+            AlgorithmSpec::Synchronous,
+            AlgorithmSpec::Splash { h: 10 },
+            AlgorithmSpec::RelaxedResidual,
+        ],
+    );
+    f2.report();
+
+    // Figures 4–7: scaling roster per model.
+    let roster = [
+        AlgorithmSpec::Synchronous,
+        AlgorithmSpec::CoarseGrained,
+        AlgorithmSpec::RelaxedResidual,
+        AlgorithmSpec::WeightDecay,
+        AlgorithmSpec::RelaxedSmartSplash { h: 2 },
+    ];
+    for (fig, spec) in [("fig4_tree", &models[0]), ("fig5_ising", &models[1]),
+                        ("fig6_potts", &models[2]), ("fig7_ldpc", &models[3])] {
+        let mut g = BenchGroup::new(fig);
+        series(&mut g, &h, spec, &roster);
+        g.report();
+    }
+
+    // Lemma 2 / Claim 4: relaxation overhead on analytic tree instances.
+    let mut l2 = BenchGroup::new("lemma2_tree_overhead");
+    let n = 20_000;
+    for spec in [
+        ModelSpec::UniformTree { n, arity: 2 },
+        ModelSpec::Path { n: n / 10 },
+        ModelSpec::AdversarialTree { n },
+    ] {
+        series(
+            &mut l2,
+            &h,
+            &spec,
+            &[AlgorithmSpec::RelaxedResidual, AlgorithmSpec::RelaxedOptimalTree],
+        );
+    }
+    l2.report();
+}

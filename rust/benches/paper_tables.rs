@@ -1,0 +1,96 @@
+//! `cargo bench --bench paper_tables` — regenerates the paper's tables at
+//! benchmark scale (one BenchGroup per table). The full-size reproduction
+//! lives in `relaxed-bp experiment …`; these benches give quick,
+//! statistically summarized signals per table with the in-repo benchlib
+//! (criterion is unavailable offline).
+//!
+//! Scale via env: RBP_BENCH_SCALE (default 0.01 = 1% of paper-small sizes),
+//! RBP_BENCH_SAMPLES, RBP_BENCH_BUDGET.
+
+use relaxed_bp::benchlib::BenchGroup;
+use relaxed_bp::configio::{AlgorithmSpec, ModelSpec, RunConfig};
+use relaxed_bp::harness::Harness;
+use relaxed_bp::model::builders;
+use relaxed_bp::run::run_on_model;
+
+fn harness() -> Harness {
+    let scale = std::env::var("RBP_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.01);
+    Harness { scale, threads: vec![1, 2, 4], max_threads: 4, ..Harness::default() }
+}
+
+fn bench_cell(g: &mut BenchGroup, h: &Harness, spec: &ModelSpec, alg: AlgorithmSpec, p: usize) {
+    let mrf = builders::build(spec, h.seed);
+    let name = format!("{}/{}/p{}", spec.name(), alg.name(), p);
+    g.bench(&name, || {
+        let cfg = RunConfig::new(spec.clone(), alg.clone())
+            .with_threads(p)
+            .with_seed(h.seed);
+        let rep = run_on_model(&cfg, mrf.clone()).expect("run");
+        rep.stats.metrics.total.updates as f64
+    });
+}
+
+fn main() {
+    let h = harness();
+
+    // Table 1 / 5: speedups vs sequential residual at max threads.
+    let mut t1 = BenchGroup::new("table1_speedups");
+    for spec in h.models() {
+        bench_cell(&mut t1, &h, &spec, AlgorithmSpec::SequentialResidual, 1);
+        for alg in [
+            AlgorithmSpec::Synchronous,
+            AlgorithmSpec::CoarseGrained,
+            AlgorithmSpec::Splash { h: 10 },
+            AlgorithmSpec::RandomSplash { h: 2 },
+            AlgorithmSpec::RelaxedResidual,
+            AlgorithmSpec::WeightDecay,
+            AlgorithmSpec::Priority,
+            AlgorithmSpec::RelaxedSmartSplash { h: 2 },
+        ] {
+            bench_cell(&mut t1, &h, &spec, alg, h.max_threads);
+        }
+    }
+    t1.report();
+
+    // Table 2 / 6 uses the same runs; the metric column above (updates)
+    // is that table's content. Table 3: relaxed vs exact across threads.
+    let mut t3 = BenchGroup::new("table3_relaxation_overhead");
+    for spec in h.models() {
+        bench_cell(&mut t3, &h, &spec, AlgorithmSpec::SequentialResidual, 1);
+        for &p in &h.threads {
+            bench_cell(&mut t3, &h, &spec, AlgorithmSpec::RelaxedResidual, p);
+        }
+    }
+    t3.report();
+
+    // Table 4: relaxed residual vs the best non-relaxed alternative.
+    let mut t4 = BenchGroup::new("table4_vs_best_nonrelaxed");
+    for spec in h.models() {
+        for &p in &h.threads {
+            bench_cell(&mut t4, &h, &spec, AlgorithmSpec::RelaxedResidual, p);
+            bench_cell(&mut t4, &h, &spec, AlgorithmSpec::Synchronous, p);
+            bench_cell(&mut t4, &h, &spec, AlgorithmSpec::Splash { h: 2 }, p);
+        }
+    }
+    t4.report();
+
+    // Table 7: randomized synchronous.
+    let mut t7 = BenchGroup::new("table7_random_synch");
+    for spec in h.models() {
+        bench_cell(&mut t7, &h, &spec, AlgorithmSpec::Synchronous, h.max_threads);
+        bench_cell(&mut t7, &h, &spec, AlgorithmSpec::RelaxedResidual, 1);
+        for low_p in [0.1, 0.4, 0.7] {
+            bench_cell(
+                &mut t7,
+                &h,
+                &spec,
+                AlgorithmSpec::RandomSynchronous { low_p },
+                h.max_threads,
+            );
+        }
+    }
+    t7.report();
+}

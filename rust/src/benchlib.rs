@@ -1,0 +1,222 @@
+//! Lightweight criterion-style benchmark harness.
+//!
+//! criterion is unavailable in the offline build, so the `cargo bench`
+//! targets (`rust/benches/*.rs`, built with `harness = false`) use this
+//! module: warmup, repeated measurement, robust statistics, and markdown /
+//! CSV reporters. End-to-end BP convergence runs are seconds long, so the
+//! harness measures a configurable number of full runs rather than
+//! criterion's adaptive sampling.
+
+use crate::util::stats::{fmt_duration, Summary};
+use std::io::Write;
+use std::time::Instant;
+
+/// One measured benchmark: a label, the sample of wall-clock times, and an
+/// optional scalar "metric" stream (e.g. message updates) recorded per run.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub times_secs: Vec<f64>,
+    pub metrics: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn time_summary(&self) -> Option<Summary> {
+        Summary::of(&self.times_secs)
+    }
+
+    pub fn metric_summary(&self) -> Option<Summary> {
+        Summary::of(&self.metrics)
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Warmup runs discarded from statistics.
+    pub warmup: usize,
+    /// Measured runs.
+    pub samples: usize,
+    /// Hard per-benchmark wall-clock budget in seconds: once exceeded, stop
+    /// sampling early (at least one sample is always taken).
+    pub budget_secs: f64,
+    /// Print progress to stderr.
+    pub verbose: bool,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        // CLI override hooks: RBP_BENCH_SAMPLES / RBP_BENCH_BUDGET.
+        let samples = std::env::var("RBP_BENCH_SAMPLES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(3);
+        let budget_secs = std::env::var("RBP_BENCH_BUDGET")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(60.0);
+        BenchConfig { warmup: 1, samples, budget_secs, verbose: true }
+    }
+}
+
+/// A group of related benchmarks rendered as one table (≈ criterion group).
+pub struct BenchGroup {
+    pub title: String,
+    pub config: BenchConfig,
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchGroup {
+    pub fn new(title: &str) -> Self {
+        Self { title: title.to_string(), config: BenchConfig::default(), results: Vec::new() }
+    }
+
+    pub fn with_config(mut self, config: BenchConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Run `f` repeatedly; `f` returns an optional scalar metric for the run
+    /// (e.g. number of message updates).
+    pub fn bench<F: FnMut() -> f64>(&mut self, name: &str, mut f: F) {
+        if self.config.verbose {
+            eprintln!("[bench] {} / {name}", self.title);
+        }
+        let started = Instant::now();
+        for _ in 0..self.config.warmup {
+            let _ = f();
+            if started.elapsed().as_secs_f64() > self.config.budget_secs {
+                break;
+            }
+        }
+        let mut times = Vec::with_capacity(self.config.samples);
+        let mut metrics = Vec::with_capacity(self.config.samples);
+        for i in 0..self.config.samples {
+            let t0 = Instant::now();
+            let m = f();
+            times.push(t0.elapsed().as_secs_f64());
+            metrics.push(m);
+            if i + 1 < self.config.samples
+                && started.elapsed().as_secs_f64() > self.config.budget_secs
+            {
+                if self.config.verbose {
+                    eprintln!("[bench]   budget exceeded after {} samples", i + 1);
+                }
+                break;
+            }
+        }
+        self.results.push(BenchResult { name: name.to_string(), times_secs: times, metrics });
+    }
+
+    /// Render the group as a markdown table.
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!("### {}\n\n", self.title);
+        s.push_str("| benchmark | samples | mean time | stddev | min | max | metric (mean) |\n");
+        s.push_str("|---|---|---|---|---|---|---|\n");
+        for r in &self.results {
+            if let Some(t) = r.time_summary() {
+                let metric = r
+                    .metric_summary()
+                    .map(|m| format!("{:.1}", m.mean))
+                    .unwrap_or_else(|| "-".into());
+                s.push_str(&format!(
+                    "| {} | {} | {} | {} | {} | {} | {} |\n",
+                    r.name,
+                    t.n,
+                    fmt_duration(t.mean),
+                    fmt_duration(t.stddev),
+                    fmt_duration(t.min),
+                    fmt_duration(t.max),
+                    metric
+                ));
+            }
+        }
+        s
+    }
+
+    /// Render as CSV rows: `group,name,sample_idx,time_secs,metric`.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("group,name,sample,time_secs,metric\n");
+        for r in &self.results {
+            for (i, (t, m)) in r.times_secs.iter().zip(&r.metrics).enumerate() {
+                s.push_str(&format!("{},{},{},{},{}\n", self.title, r.name, i, t, m));
+            }
+        }
+        s
+    }
+
+    /// Print markdown to stdout and append CSV under `results/bench/`.
+    pub fn report(&self) {
+        println!("{}", self.to_markdown());
+        let dir = std::path::Path::new("results/bench");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let path = dir.join(format!("{}.csv", sanitize(&self.title)));
+            if let Ok(mut f) = std::fs::File::create(&path) {
+                let _ = f.write_all(self.to_csv().as_bytes());
+            }
+        }
+    }
+}
+
+fn sanitize(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet(samples: usize) -> BenchConfig {
+        BenchConfig { warmup: 0, samples, budget_secs: 10.0, verbose: false }
+    }
+
+    #[test]
+    fn bench_records_samples() {
+        let mut g = BenchGroup::new("t").with_config(quiet(4));
+        let mut calls = 0;
+        g.bench("noop", || {
+            calls += 1;
+            calls as f64
+        });
+        assert_eq!(calls, 4);
+        assert_eq!(g.results[0].times_secs.len(), 4);
+        assert_eq!(g.results[0].metrics, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn budget_cuts_sampling() {
+        let cfg = BenchConfig { warmup: 0, samples: 100, budget_secs: 0.05, verbose: false };
+        let mut g = BenchGroup::new("t").with_config(cfg);
+        g.bench("sleep", || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            0.0
+        });
+        assert!(g.results[0].times_secs.len() < 100);
+        assert!(!g.results[0].times_secs.is_empty());
+    }
+
+    #[test]
+    fn markdown_contains_rows() {
+        let mut g = BenchGroup::new("grp").with_config(quiet(2));
+        g.bench("a", || 1.0);
+        let md = g.to_markdown();
+        assert!(md.contains("### grp"));
+        assert!(md.contains("| a |"));
+    }
+
+    #[test]
+    fn csv_shape() {
+        let mut g = BenchGroup::new("grp").with_config(quiet(2));
+        g.bench("a", || 1.0);
+        let csv = g.to_csv();
+        assert_eq!(csv.lines().count(), 3); // header + 2 samples
+        assert!(csv.starts_with("group,name,sample"));
+    }
+
+    #[test]
+    fn sanitize_path_chars() {
+        assert_eq!(sanitize("Table 1 / speedups"), "Table_1___speedups");
+    }
+}

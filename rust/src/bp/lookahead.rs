@@ -1,0 +1,232 @@
+//! Residual lookahead cache.
+//!
+//! Residual BP (Elidan et al. 2006) performs *lookahead*: for every message
+//! it keeps the recomputed value `μ'` alongside the live value `μ`, and the
+//! priority of the message is `res(μ) = ‖μ' − μ‖₂`. Updating a message
+//! commits the precomputed `μ'` and refreshes the pending values of the
+//! affected messages (the out-edges of the destination node).
+//!
+//! The cache shares the flat atomic layout of [`Messages`], so concurrent
+//! refreshes are benign races exactly like message writes.
+
+use super::state::{msg_buf, Messages, MsgSource};
+use super::update::{compute_message, residual_l2};
+use crate::model::Mrf;
+use crate::util::AtomicF64;
+
+/// Pending (`μ'`) values and residuals for every message.
+pub struct Lookahead {
+    /// Pending message values, same layout as the live state.
+    pending: Messages,
+    /// `res(e) = ‖pending[e] − live[e]‖₂`, maintained on refresh/commit.
+    residual: Vec<AtomicF64>,
+}
+
+impl Lookahead {
+    /// Build the cache: compute `μ'` and the residual for every edge from
+    /// the current live state.
+    pub fn init(mrf: &Mrf, live: &Messages) -> Self {
+        let pending = Messages::uniform(mrf);
+        let mut residual = Vec::with_capacity(mrf.num_messages());
+        residual.resize_with(mrf.num_messages(), AtomicF64::default);
+        let la = Lookahead { pending, residual };
+        for e in 0..mrf.num_messages() as u32 {
+            la.refresh(mrf, live, e);
+        }
+        la
+    }
+
+    /// Current residual (priority) of edge `e`.
+    #[inline]
+    pub fn residual(&self, e: u32) -> f64 {
+        self.residual[e as usize].load()
+    }
+
+    /// Recompute `μ'_e` from the live state; store it and its residual.
+    /// Returns the new residual.
+    pub fn refresh(&self, mrf: &Mrf, live: &Messages, e: u32) -> f64 {
+        // Binary fast path: 2-wide stack buffers, no 64-wide zeroing
+        // (memset was ~12% of baseline cycles; EXPERIMENTS.md §Perf).
+        if mrf.msg_len(e) == 2 {
+            let mut new = [0.0f64; 2];
+            compute_message(mrf, live, e, &mut new);
+            let mut cur = [0.0f64; 2];
+            live.read_msg(mrf, e, &mut cur);
+            let d0 = new[0] - cur[0];
+            let d1 = new[1] - cur[1];
+            let res = (d0 * d0 + d1 * d1).sqrt();
+            self.pending.write_msg(mrf, e, &new);
+            self.residual[e as usize].store(res);
+            return res;
+        }
+        let mut new = msg_buf();
+        let len = compute_message(mrf, live, e, &mut new);
+        let mut cur = msg_buf();
+        live.read_msg(mrf, e, &mut cur);
+        let res = residual_l2(&new[..len], &cur[..len]);
+        self.pending.write_msg(mrf, e, &new);
+        self.residual[e as usize].store(res);
+        res
+    }
+
+    /// Commit `μ'_e` into the live state and zero `res(e)`. Returns the
+    /// residual that was satisfied (0 if the edge was already converged —
+    /// a *wasted* update in the paper's terminology).
+    ///
+    /// The caller is responsible for refreshing the affected out-edges of
+    /// `dst(e)` afterwards (see [`Lookahead::affected_edges`]).
+    pub fn commit(&self, mrf: &Mrf, live: &Messages, e: u32) -> f64 {
+        let res = self.residual[e as usize].load();
+        if mrf.msg_len(e) == 2 {
+            let mut val = [0.0f64; 2];
+            self.pending.read_msg(mrf, e, &mut val);
+            live.write_msg(mrf, e, &val);
+        } else {
+            let mut val = msg_buf();
+            let len = self.pending.read_msg(mrf, e, &mut val);
+            live.write_msg(mrf, e, &val[..len]);
+        }
+        self.residual[e as usize].store(0.0);
+        res
+    }
+
+    /// The edges whose pending value changes when `e = (i→j)` is committed:
+    /// every out-edge of `j` except the reverse `j→i`.
+    #[inline]
+    pub fn affected_edges<'a>(&self, mrf: &'a Mrf, e: u32) -> impl Iterator<Item = u32> + 'a {
+        let j = mrf.graph.edge_dst[e as usize] as usize;
+        let rev = mrf.graph.reverse(e);
+        mrf.graph
+            .slots(j)
+            .map(move |s| mrf.graph.adj_out[s])
+            .filter(move |&k| k != rev)
+    }
+
+    /// Max residual over all edges (sequential convergence check).
+    pub fn max_residual(&self) -> f64 {
+        self.residual.iter().map(|r| r.load()).fold(0.0, f64::max)
+    }
+
+    /// Read pending value of edge `e` into `out`; returns length.
+    pub fn read_pending(&self, mrf: &Mrf, e: u32, out: &mut [f64]) -> usize {
+        self.pending.read_msg(mrf, e, out)
+    }
+
+    /// Directly overwrite the pending value + residual of edge `e`
+    /// (used by the PJRT batched path, which computes updates externally).
+    pub fn store_pending(&self, mrf: &Mrf, e: u32, vals: &[f64], res: f64) {
+        self.pending.write_msg(mrf, e, vals);
+        self.residual[e as usize].store(res);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builders;
+    use crate::configio::ModelSpec;
+
+    #[test]
+    fn init_residuals_nonzero_only_at_root() {
+        // Tree model: only the root's outgoing messages have information to
+        // push (priors elsewhere are uniform and factors are equality).
+        let m = builders::build(&ModelSpec::Tree { n: 15 }, 1);
+        let live = Messages::uniform(&m);
+        let la = Lookahead::init(&m, &live);
+        for e in 0..m.num_messages() as u32 {
+            let src = m.graph.edge_src[e as usize];
+            let res = la.residual(e);
+            if src == 0 {
+                assert!(res > 0.1, "root out-edge {e} res={res}");
+            } else {
+                assert!(res < 1e-12, "edge {e} res={res}");
+            }
+        }
+    }
+
+    #[test]
+    fn commit_zeroes_residual_and_updates_live() {
+        let m = builders::build(&ModelSpec::Path { n: 3 }, 1);
+        let live = Messages::uniform(&m);
+        let la = Lookahead::init(&m, &live);
+        assert!(la.residual(0) > 0.0);
+        let res = la.commit(&m, &live, 0);
+        assert!(res > 0.0);
+        assert_eq!(la.residual(0), 0.0);
+        let mut buf = msg_buf();
+        live.read_msg(&m, 0, &mut buf);
+        assert!((buf[0] - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn affected_edges_excludes_reverse() {
+        let m = builders::build(&ModelSpec::Tree { n: 7 }, 1);
+        let live = Messages::uniform(&m);
+        let la = Lookahead::init(&m, &live);
+        // Edge 0 is root→1. Affected edges are 1's out-edges except 1→root.
+        let e = 0u32;
+        let j = m.graph.edge_dst[0] as usize;
+        let affected: Vec<u32> = la.affected_edges(&m, e).collect();
+        assert_eq!(affected.len(), m.graph.degree(j) - 1);
+        for &k in &affected {
+            assert_eq!(m.graph.edge_src[k as usize] as usize, j);
+            assert_ne!(k, m.graph.reverse(e));
+        }
+    }
+
+    #[test]
+    fn propagation_chain() {
+        // Commit root's edge, refresh affected, check the frontier advanced.
+        let m = builders::build(&ModelSpec::Path { n: 4 }, 1);
+        let live = Messages::uniform(&m);
+        let la = Lookahead::init(&m, &live);
+        let frontier: Vec<u32> = (0..m.num_messages() as u32)
+            .filter(|&e| la.residual(e) > 1e-9)
+            .collect();
+        assert_eq!(frontier, vec![0]); // only root's out-edge
+        la.commit(&m, &live, 0);
+        let affected: Vec<u32> = la.affected_edges(&m, 0).collect();
+        for &k in &affected {
+            la.refresh(&m, &live, k);
+        }
+        let frontier2: Vec<u32> = (0..m.num_messages() as u32)
+            .filter(|&e| la.residual(e) > 1e-9)
+            .collect();
+        assert_eq!(frontier2, affected); // moved one hop down the path
+    }
+
+    #[test]
+    fn max_residual_decreases_on_tree() {
+        let m = builders::build(&ModelSpec::Tree { n: 7 }, 1);
+        let live = Messages::uniform(&m);
+        let la = Lookahead::init(&m, &live);
+        // Run sequential residual to convergence by always committing max.
+        let mut steps = 0;
+        while la.max_residual() > 1e-9 {
+            let e = (0..m.num_messages() as u32)
+                .max_by(|&a, &b| la.residual(a).partial_cmp(&la.residual(b)).unwrap())
+                .unwrap();
+            la.commit(&m, &live, e);
+            let affected: Vec<u32> = la.affected_edges(&m, e).collect();
+            for &k in &affected {
+                la.refresh(&m, &live, k);
+            }
+            steps += 1;
+            assert!(steps < 100, "should converge quickly");
+        }
+        // Tree with root evidence: exactly the 6 away-from-root edges fire.
+        assert_eq!(steps, 6);
+    }
+
+    #[test]
+    fn store_pending_roundtrip() {
+        let m = builders::build(&ModelSpec::Path { n: 3 }, 1);
+        let live = Messages::uniform(&m);
+        let la = Lookahead::init(&m, &live);
+        la.store_pending(&m, 1, &[0.4, 0.6], 0.123);
+        assert_eq!(la.residual(1), 0.123);
+        let mut buf = msg_buf();
+        la.read_pending(&m, 1, &mut buf);
+        assert_eq!(&buf[..2], &[0.4, 0.6]);
+    }
+}

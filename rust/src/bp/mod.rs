@@ -1,0 +1,14 @@
+//! Belief-propagation core: message state, the update rule, the residual
+//! lookahead cache, marginal extraction, and the exact enumeration oracle.
+
+pub mod lookahead;
+pub mod marginals;
+pub mod oracle;
+pub mod state;
+pub mod update;
+
+pub use lookahead::Lookahead;
+pub use marginals::{all_marginals, decode_bits, max_marginal_diff, node_marginal};
+pub use oracle::exact_marginals;
+pub use state::{msg_buf, Messages, MsgBuf, MsgSource};
+pub use update::{compute_message, incoming_product, normalize, residual_l2, residual_linf};

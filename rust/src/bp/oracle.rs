@@ -1,0 +1,147 @@
+//! Exact marginalization by exhaustive enumeration.
+//!
+//! The correctness oracle for the whole stack: on models small enough to
+//! enumerate (`Π_i |D_i|` bounded), compute exact marginals directly from
+//! the MRF's joint distribution
+//! `Pr[X = x] ∝ Π_i ψ_i(x_i) · Π_{ij} ψ_ij(x_i, x_j)` and compare against
+//! BP's beliefs. On trees, BP is exact at convergence, so the comparison is
+//! tight; on loopy graphs the oracle quantifies the loopy-BP approximation
+//! error in tests.
+
+use crate::model::Mrf;
+
+/// Exact marginals, or `None` if the state space exceeds `limit`
+/// assignments.
+pub fn exact_marginals(mrf: &Mrf, limit: u64) -> Option<Vec<Vec<f64>>> {
+    let n = mrf.num_nodes();
+    // State-space size with overflow care.
+    let mut total: u64 = 1;
+    for &d in &mrf.domain {
+        total = total.checked_mul(d as u64)?;
+        if total > limit {
+            return None;
+        }
+    }
+
+    let mut acc: Vec<Vec<f64>> = mrf.domain.iter().map(|&d| vec![0.0; d as usize]).collect();
+    let mut assign = vec![0usize; n];
+    let mut z = 0.0f64;
+
+    // Precompute undirected edge list (even directed edges).
+    let m_undirected = mrf.num_messages() / 2;
+    let edges: Vec<(usize, usize, usize)> = (0..m_undirected)
+        .map(|k| {
+            let e = 2 * k;
+            (
+                mrf.graph.edge_src[e] as usize,
+                mrf.graph.edge_dst[e] as usize,
+                e,
+            )
+        })
+        .collect();
+
+    loop {
+        // Joint weight of this assignment.
+        let mut w = 1.0f64;
+        for i in 0..n {
+            w *= mrf.node_factors.of(i)[assign[i]];
+            if w == 0.0 {
+                break;
+            }
+        }
+        if w != 0.0 {
+            for &(a, b, e) in &edges {
+                w *= mrf.pool.get(mrf.edge_factor[e], assign[a], assign[b]);
+                if w == 0.0 {
+                    break;
+                }
+            }
+        }
+        if w != 0.0 {
+            z += w;
+            for i in 0..n {
+                acc[i][assign[i]] += w;
+            }
+        }
+
+        // Mixed-radix increment.
+        let mut pos = 0;
+        loop {
+            if pos == n {
+                // Done: normalize and return.
+                if z > 0.0 {
+                    for a in &mut acc {
+                        for v in a.iter_mut() {
+                            *v /= z;
+                        }
+                    }
+                }
+                return Some(acc);
+            }
+            assign[pos] += 1;
+            if assign[pos] < mrf.domain[pos] as usize {
+                break;
+            }
+            assign[pos] = 0;
+            pos += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builders;
+    use crate::configio::ModelSpec;
+
+    #[test]
+    fn two_node_chain_by_hand() {
+        // Path 0-1 with root prior (0.1,0.9) and equality factor: the joint
+        // has only two nonzero assignments, (0,0) w=0.1·0.25… — actually
+        // with uniform non-root priors: w(0,0)=0.1·0.5, w(1,1)=0.9·0.5.
+        let m = builders::build(&ModelSpec::Path { n: 2 }, 1);
+        let mg = exact_marginals(&m, 1 << 20).unwrap();
+        assert!((mg[0][0] - 0.1).abs() < 1e-12);
+        assert!((mg[1][1] - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tree_marginals_all_follow_root() {
+        // Equality factors force all nodes to share the root's distribution.
+        let m = builders::build(&ModelSpec::Tree { n: 7 }, 1);
+        let mg = exact_marginals(&m, 1 << 20).unwrap();
+        for (i, node) in mg.iter().enumerate() {
+            assert!((node[0] - 0.1).abs() < 1e-12, "node {i}: {node:?}");
+        }
+    }
+
+    #[test]
+    fn limit_respected() {
+        let m = builders::build(&ModelSpec::Tree { n: 40 }, 1);
+        assert!(exact_marginals(&m, 1 << 20).is_none());
+    }
+
+    #[test]
+    fn marginals_normalized_on_loopy_model() {
+        let m = builders::build(&ModelSpec::Ising { n: 3 }, 5);
+        let mg = exact_marginals(&m, 1 << 20).unwrap();
+        for node in &mg {
+            let s: f64 = node.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn ldpc_tiny_parity_enforced() {
+        // Smallest instance: 6 variables, 3 constraints (may need a couple
+        // of seeds for a simple graph). Exact joint must put zero mass on
+        // odd-parity constraint-node states, so variable marginals reflect
+        // the code structure. State space: 2^6 · 64^3 = 2^24.
+        let inst = builders::ldpc::build(6, 0.07, 2);
+        let mg = exact_marginals(&inst.mrf, 1 << 25).unwrap();
+        for (i, node) in mg.iter().enumerate().take(inst.num_vars) {
+            let s: f64 = node.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9, "node {i}");
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! Shared message state.
+//!
+//! One flat array of [`AtomicF64`] cells holds every message vector
+//! (layout from [`Mrf::msg_offset`]). Worker threads read and write cells
+//! with relaxed atomics — the same benign-race discipline as the paper's
+//! Java implementation. A message read can observe a concurrent writer's
+//! partial update; BP tolerates such races (they act as slightly stale
+//! inputs) and the engines' claim flags prevent two threads from *writing*
+//! one message concurrently.
+
+use crate::model::{Mrf, MAX_DOMAIN};
+use crate::util::AtomicF64;
+
+/// Fixed-size stack buffer for one message / one domain's worth of values.
+pub type MsgBuf = [f64; MAX_DOMAIN];
+
+/// Allocate a zeroed message buffer.
+#[inline]
+pub fn msg_buf() -> MsgBuf {
+    [0.0; MAX_DOMAIN]
+}
+
+/// Something messages can be read from: the live atomic state or a plain
+/// snapshot (used by the synchronous engine's double buffering and by
+/// marginal computation on frozen state).
+pub trait MsgSource {
+    /// Copy message `e` into `out[..len]`; returns `len`.
+    fn read_msg(&self, mrf: &Mrf, e: u32, out: &mut [f64]) -> usize;
+}
+
+/// The live, concurrently-updatable message state.
+pub struct Messages {
+    data: Vec<AtomicF64>,
+}
+
+impl Messages {
+    /// All messages initialized uniform (1/|D|).
+    pub fn uniform(mrf: &Mrf) -> Self {
+        let mut data = Vec::with_capacity(mrf.total_msg_len);
+        data.resize_with(mrf.total_msg_len, AtomicF64::default);
+        let m = Messages { data };
+        for e in 0..mrf.num_messages() as u32 {
+            let len = mrf.msg_len(e);
+            let v = 1.0 / len as f64;
+            let off = mrf.msg_offset[e as usize] as usize;
+            for k in 0..len {
+                m.data[off + k].store(v);
+            }
+        }
+        m
+    }
+
+    /// Write message `e` from `vals[..len]`.
+    #[inline]
+    pub fn write_msg(&self, mrf: &Mrf, e: u32, vals: &[f64]) {
+        let off = mrf.msg_offset[e as usize] as usize;
+        let len = mrf.msg_len(e);
+        debug_assert!(vals.len() >= len);
+        for k in 0..len {
+            self.data[off + k].store(vals[k]);
+        }
+    }
+
+    /// Copy the full state into a plain vector (for snapshots/tests).
+    pub fn snapshot(&self) -> Vec<f64> {
+        self.data.iter().map(|c| c.load()).collect()
+    }
+
+    /// Overwrite the full state from a snapshot.
+    pub fn restore(&self, snap: &[f64]) {
+        assert_eq!(snap.len(), self.data.len());
+        for (c, &v) in self.data.iter().zip(snap) {
+            c.store(v);
+        }
+    }
+
+    /// Raw cell access (used by the lookahead cache which shares layout).
+    #[inline]
+    pub fn cell(&self, idx: usize) -> &AtomicF64 {
+        &self.data[idx]
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+impl MsgSource for Messages {
+    #[inline]
+    fn read_msg(&self, mrf: &Mrf, e: u32, out: &mut [f64]) -> usize {
+        let off = mrf.msg_offset[e as usize] as usize;
+        let len = mrf.msg_len(e);
+        for k in 0..len {
+            out[k] = self.data[off + k].load();
+        }
+        len
+    }
+}
+
+/// A frozen snapshot (flat `Vec<f64>` in the same layout) is also a source.
+impl MsgSource for [f64] {
+    #[inline]
+    fn read_msg(&self, mrf: &Mrf, e: u32, out: &mut [f64]) -> usize {
+        let off = mrf.msg_offset[e as usize] as usize;
+        let len = mrf.msg_len(e);
+        out[..len].copy_from_slice(&self[off..off + len]);
+        len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builders;
+    use crate::configio::ModelSpec;
+
+    #[test]
+    fn uniform_init() {
+        let m = builders::build(&ModelSpec::Tree { n: 7 }, 1);
+        let msgs = Messages::uniform(&m);
+        let mut buf = msg_buf();
+        for e in 0..m.num_messages() as u32 {
+            let len = msgs.read_msg(&m, e, &mut buf);
+            assert_eq!(len, 2);
+            assert_eq!(&buf[..2], &[0.5, 0.5]);
+        }
+    }
+
+    #[test]
+    fn uniform_init_wide_domain() {
+        let m = builders::build(&ModelSpec::Ldpc { n: 12, flip_prob: 0.07 }, 1);
+        let msgs = Messages::uniform(&m);
+        let mut buf = msg_buf();
+        // find a variable→constraint edge (length 64)
+        let e = (0..m.num_messages() as u32).find(|&e| m.msg_len(e) == 64).unwrap();
+        let len = msgs.read_msg(&m, e, &mut buf);
+        assert_eq!(len, 64);
+        assert!((buf[..64].iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let m = builders::build(&ModelSpec::Path { n: 3 }, 1);
+        let msgs = Messages::uniform(&m);
+        msgs.write_msg(&m, 1, &[0.25, 0.75]);
+        let mut buf = msg_buf();
+        msgs.read_msg(&m, 1, &mut buf);
+        assert_eq!(&buf[..2], &[0.25, 0.75]);
+        // neighbors untouched
+        msgs.read_msg(&m, 0, &mut buf);
+        assert_eq!(&buf[..2], &[0.5, 0.5]);
+    }
+
+    #[test]
+    fn snapshot_restore() {
+        let m = builders::build(&ModelSpec::Path { n: 4 }, 1);
+        let msgs = Messages::uniform(&m);
+        msgs.write_msg(&m, 0, &[0.9, 0.1]);
+        let snap = msgs.snapshot();
+        msgs.write_msg(&m, 0, &[0.5, 0.5]);
+        msgs.restore(&snap);
+        let mut buf = msg_buf();
+        msgs.read_msg(&m, 0, &mut buf);
+        assert_eq!(&buf[..2], &[0.9, 0.1]);
+    }
+
+    #[test]
+    fn slice_source_matches_layout() {
+        let m = builders::build(&ModelSpec::Path { n: 3 }, 1);
+        let msgs = Messages::uniform(&m);
+        msgs.write_msg(&m, 2, &[0.3, 0.7]);
+        let snap = msgs.snapshot();
+        let mut a = msg_buf();
+        let mut b = msg_buf();
+        for e in 0..m.num_messages() as u32 {
+            msgs.read_msg(&m, e, &mut a);
+            snap.as_slice().read_msg(&m, e, &mut b);
+            assert_eq!(&a[..2], &b[..2]);
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Supports the subcommand + flags shape used by the `relaxed-bp` binary:
+//! `relaxed-bp <subcommand> [--flag value] [--switch] [positional...]`.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, `--key value` options, `--switch`
+/// booleans, and positional arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    /// `known_switches` lists flags that take no value; everything else that
+    /// starts with `--` consumes the next token as its value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, known_switches: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // --key=value form
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                if known_switches.contains(&name) {
+                    out.switches.push(name.to_string());
+                    continue;
+                }
+                let val = it
+                    .next()
+                    .ok_or_else(|| anyhow!("option --{name} expects a value"))?;
+                out.options.insert(name.to_string(), val);
+            } else if tok.starts_with('-') && tok.len() > 1 {
+                bail!("short options are not supported: {tok}");
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(known_switches: &[&str]) -> Result<Args> {
+        Args::parse(std::env::args().skip(1), known_switches)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow!("bad value for --{key}: {e}")),
+        }
+    }
+
+    pub fn opt_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.opt_parse(key)?.unwrap_or(default))
+    }
+
+    pub fn has_switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn basic_subcommand_and_options() {
+        let a = Args::parse(
+            sv(&["run", "--model", "ising:300", "--threads", "8", "extra"]),
+            &[],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.opt("model"), Some("ising:300"));
+        assert_eq!(a.opt_or::<usize>("threads", 1).unwrap(), 8);
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = Args::parse(sv(&["run", "--seed=7"]), &[]).unwrap();
+        assert_eq!(a.opt_or::<u64>("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn switches() {
+        let a = Args::parse(sv(&["bench", "--verbose", "--out", "x"]), &["verbose"]).unwrap();
+        assert!(a.has_switch("verbose"));
+        assert_eq!(a.opt("out"), Some("x"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(sv(&["run", "--model"]), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_parse_errors() {
+        let a = Args::parse(sv(&["run", "--threads", "NaNcy"]), &[]).unwrap();
+        assert!(a.opt_or::<usize>("threads", 1).is_err());
+    }
+
+    #[test]
+    fn short_flags_rejected() {
+        assert!(Args::parse(sv(&["-x"]), &[]).is_err());
+    }
+
+    #[test]
+    fn default_when_missing() {
+        let a = Args::parse(sv(&["run"]), &[]).unwrap();
+        assert_eq!(a.opt_or::<f64>("epsilon", 1e-5).unwrap(), 1e-5);
+        assert_eq!(a.opt_parse::<usize>("threads").unwrap(), None);
+    }
+}

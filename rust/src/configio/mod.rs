@@ -1,0 +1,459 @@
+//! Configuration system: JSON-backed run configs for the CLI, the harness,
+//! and the examples. A [`RunConfig`] fully determines a BP run (model,
+//! algorithm, thread count, convergence threshold, seed, scheduler knobs),
+//! so experiments are reproducible from a single file.
+
+pub mod json;
+
+pub use json::{parse, Json, JsonError};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Which Markov random field to build.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ModelSpec {
+    /// Full binary tree with `n` vertices; root prior (0.1, 0.9),
+    /// deterministic equality edge factors (paper §5.2).
+    Tree { n: usize },
+    /// Ising model on an `n×n` grid, α,β ~ U[-1,1] (paper §5.2).
+    Ising { n: usize },
+    /// Potts-style model on an `n×n` grid, α,β ~ U[-2.5,2.5] (paper §5.2).
+    Potts { n: usize },
+    /// (3,6)-LDPC decoding MRF with `n` variable nodes (n/2 constraints),
+    /// BSC error probability `eps` (paper §5.2 uses 0.07).
+    Ldpc { n: usize, flip_prob: f64 },
+    /// Path graph of `n` vertices rooted at one end (Lemma 2 bad case).
+    Path { n: usize },
+    /// Lemma 2 adversarial tree: main path of length `sqrt(n)` with side
+    /// paths attached (Figure 3).
+    AdversarialTree { n: usize },
+    /// Uniform-expansion full `arity`-ary tree (Lemma 2 good case): identical
+    /// non-deterministic edge factors, information flows from the root.
+    UniformTree { n: usize, arity: usize },
+}
+
+impl ModelSpec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelSpec::Tree { .. } => "tree",
+            ModelSpec::Ising { .. } => "ising",
+            ModelSpec::Potts { .. } => "potts",
+            ModelSpec::Ldpc { .. } => "ldpc",
+            ModelSpec::Path { .. } => "path",
+            ModelSpec::AdversarialTree { .. } => "adversarial_tree",
+            ModelSpec::UniformTree { .. } => "uniform_tree",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            ModelSpec::Tree { n } => Json::obj(vec![
+                ("kind", Json::Str("tree".into())),
+                ("n", Json::Num(*n as f64)),
+            ]),
+            ModelSpec::Ising { n } => Json::obj(vec![
+                ("kind", Json::Str("ising".into())),
+                ("n", Json::Num(*n as f64)),
+            ]),
+            ModelSpec::Potts { n } => Json::obj(vec![
+                ("kind", Json::Str("potts".into())),
+                ("n", Json::Num(*n as f64)),
+            ]),
+            ModelSpec::Ldpc { n, flip_prob } => Json::obj(vec![
+                ("kind", Json::Str("ldpc".into())),
+                ("n", Json::Num(*n as f64)),
+                ("flip_prob", Json::Num(*flip_prob)),
+            ]),
+            ModelSpec::Path { n } => Json::obj(vec![
+                ("kind", Json::Str("path".into())),
+                ("n", Json::Num(*n as f64)),
+            ]),
+            ModelSpec::AdversarialTree { n } => Json::obj(vec![
+                ("kind", Json::Str("adversarial_tree".into())),
+                ("n", Json::Num(*n as f64)),
+            ]),
+            ModelSpec::UniformTree { n, arity } => Json::obj(vec![
+                ("kind", Json::Str("uniform_tree".into())),
+                ("n", Json::Num(*n as f64)),
+                ("arity", Json::Num(*arity as f64)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<ModelSpec> {
+        let kind = v
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("model.kind missing"))?;
+        let n = v
+            .get("n")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("model.n missing"))?;
+        Ok(match kind {
+            "tree" => ModelSpec::Tree { n },
+            "ising" => ModelSpec::Ising { n },
+            "potts" => ModelSpec::Potts { n },
+            "ldpc" => ModelSpec::Ldpc {
+                n,
+                flip_prob: v.get("flip_prob").and_then(Json::as_f64).unwrap_or(0.07),
+            },
+            "path" => ModelSpec::Path { n },
+            "adversarial_tree" => ModelSpec::AdversarialTree { n },
+            "uniform_tree" => ModelSpec::UniformTree {
+                n,
+                arity: v.get("arity").and_then(Json::as_usize).unwrap_or(2),
+            },
+            other => bail!("unknown model kind '{other}'"),
+        })
+    }
+
+    /// Parse CLI-style `kind:n[:extra]`, e.g. `ising:300` or `ldpc:30000:0.07`.
+    pub fn parse_cli(s: &str) -> Result<ModelSpec> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let kind = parts[0];
+        let n: usize = parts
+            .get(1)
+            .ok_or_else(|| anyhow!("model spec '{s}' needs a size, e.g. ising:300"))?
+            .parse()
+            .context("bad model size")?;
+        Ok(match kind {
+            "tree" => ModelSpec::Tree { n },
+            "ising" => ModelSpec::Ising { n },
+            "potts" => ModelSpec::Potts { n },
+            "ldpc" => ModelSpec::Ldpc {
+                n,
+                flip_prob: parts.get(2).map(|p| p.parse()).transpose()?.unwrap_or(0.07),
+            },
+            "path" => ModelSpec::Path { n },
+            "adversarial_tree" => ModelSpec::AdversarialTree { n },
+            "uniform_tree" => ModelSpec::UniformTree {
+                n,
+                arity: parts.get(2).map(|p| p.parse()).transpose()?.unwrap_or(2),
+            },
+            other => bail!("unknown model kind '{other}'"),
+        })
+    }
+}
+
+/// Which BP scheduling algorithm to run. Mirrors the paper's §5.1 roster.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AlgorithmSpec {
+    /// Sequential residual BP — the baseline all tables normalize to.
+    SequentialResidual,
+    /// Round-based synchronous BP (parallel over message chunks).
+    Synchronous,
+    /// Exact residual BP on one lock-protected PQ (Coarse-Grained, "CG").
+    CoarseGrained,
+    /// Relaxed residual BP on the Multiqueue — the headline algorithm.
+    RelaxedResidual,
+    /// Weight-decay priorities res/m(e) on the Multiqueue ("WD").
+    WeightDecay,
+    /// Residual-without-lookahead on the Multiqueue ("Priority").
+    Priority,
+    /// Exact splash with depth `h` on one locked PQ ("S h").
+    Splash { h: usize },
+    /// Exact smart splash (BFS-tree edges only) on one locked PQ.
+    SmartSplash { h: usize },
+    /// Relaxed smart splash on the Multiqueue ("RSS h").
+    RelaxedSmartSplash { h: usize },
+    /// Journal-version randomized splash on naive random queues ("RS h").
+    RandomSplash { h: usize },
+    /// Yin–Gao bucket algorithm: top 0.1·|V| vertices per round.
+    Bucket,
+    /// Van der Merwe randomized synchronous with parameter `low_p`.
+    RandomSynchronous { low_p: f64 },
+    /// Extension: relaxed residual popping batches of `batch` tasks, updates
+    /// executed through the AOT PJRT kernel.
+    RelaxedResidualBatched { batch: usize },
+    /// Appendix A optimal tree schedule (exact scheduler).
+    OptimalTree,
+    /// Appendix A optimal tree schedule on the Multiqueue.
+    RelaxedOptimalTree,
+}
+
+impl AlgorithmSpec {
+    /// Short display name matching the paper's table headers.
+    pub fn name(&self) -> String {
+        match self {
+            AlgorithmSpec::SequentialResidual => "residual".into(),
+            AlgorithmSpec::Synchronous => "synch".into(),
+            AlgorithmSpec::CoarseGrained => "coarse_grained".into(),
+            AlgorithmSpec::RelaxedResidual => "relaxed_residual".into(),
+            AlgorithmSpec::WeightDecay => "weight_decay".into(),
+            AlgorithmSpec::Priority => "priority".into(),
+            AlgorithmSpec::Splash { h } => format!("splash_{h}"),
+            AlgorithmSpec::SmartSplash { h } => format!("smart_splash_{h}"),
+            AlgorithmSpec::RelaxedSmartSplash { h } => format!("relaxed_smart_splash_{h}"),
+            AlgorithmSpec::RandomSplash { h } => format!("random_splash_{h}"),
+            AlgorithmSpec::Bucket => "bucket".into(),
+            AlgorithmSpec::RandomSynchronous { low_p } => format!("random_synch_{low_p}"),
+            AlgorithmSpec::RelaxedResidualBatched { batch } => {
+                format!("relaxed_residual_batched_{batch}")
+            }
+            AlgorithmSpec::OptimalTree => "optimal_tree".into(),
+            AlgorithmSpec::RelaxedOptimalTree => "relaxed_optimal_tree".into(),
+        }
+    }
+
+    /// Canonical CLI form, parseable by [`AlgorithmSpec::parse_cli`]
+    /// (e.g. `smart_splash:2`); used for JSON round-trips.
+    pub fn to_cli(&self) -> String {
+        match self {
+            AlgorithmSpec::Splash { h } => format!("splash:{h}"),
+            AlgorithmSpec::SmartSplash { h } => format!("smart_splash:{h}"),
+            AlgorithmSpec::RelaxedSmartSplash { h } => format!("relaxed_smart_splash:{h}"),
+            AlgorithmSpec::RandomSplash { h } => format!("random_splash:{h}"),
+            AlgorithmSpec::RandomSynchronous { low_p } => format!("random_synch:{low_p}"),
+            AlgorithmSpec::RelaxedResidualBatched { batch } => {
+                format!("relaxed_residual_batched:{batch}")
+            }
+            other => other.name(),
+        }
+    }
+
+    /// Parse CLI-style `name[:param]`, e.g. `splash:2`, `random_synch:0.4`.
+    pub fn parse_cli(s: &str) -> Result<AlgorithmSpec> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let arg = parts.get(1).copied();
+        let h = || -> Result<usize> {
+            arg.map(|a| a.parse().context("bad H"))
+                .transpose()
+                .map(|o| o.unwrap_or(2))
+        };
+        Ok(match parts[0] {
+            "residual" | "sequential_residual" => AlgorithmSpec::SequentialResidual,
+            "synch" | "synchronous" => AlgorithmSpec::Synchronous,
+            "coarse_grained" | "cg" => AlgorithmSpec::CoarseGrained,
+            "relaxed_residual" | "rr" => AlgorithmSpec::RelaxedResidual,
+            "weight_decay" | "wd" => AlgorithmSpec::WeightDecay,
+            "priority" => AlgorithmSpec::Priority,
+            "splash" | "s" => AlgorithmSpec::Splash { h: h()? },
+            "smart_splash" | "ss" => AlgorithmSpec::SmartSplash { h: h()? },
+            "relaxed_smart_splash" | "rss" => AlgorithmSpec::RelaxedSmartSplash { h: h()? },
+            "random_splash" | "rs" => AlgorithmSpec::RandomSplash { h: h()? },
+            "bucket" => AlgorithmSpec::Bucket,
+            "random_synch" => AlgorithmSpec::RandomSynchronous {
+                low_p: arg.map(|a| a.parse()).transpose()?.unwrap_or(0.4),
+            },
+            "relaxed_residual_batched" | "rrb" => AlgorithmSpec::RelaxedResidualBatched {
+                batch: arg.map(|a| a.parse()).transpose()?.unwrap_or(256),
+            },
+            "optimal_tree" => AlgorithmSpec::OptimalTree,
+            "relaxed_optimal_tree" => AlgorithmSpec::RelaxedOptimalTree,
+            other => bail!("unknown algorithm '{other}'"),
+        })
+    }
+
+    /// True for algorithms whose scheduler is relaxed (dashed lines in the
+    /// paper's plots).
+    pub fn is_relaxed(&self) -> bool {
+        matches!(
+            self,
+            AlgorithmSpec::RelaxedResidual
+                | AlgorithmSpec::WeightDecay
+                | AlgorithmSpec::Priority
+                | AlgorithmSpec::RelaxedSmartSplash { .. }
+                | AlgorithmSpec::RelaxedResidualBatched { .. }
+                | AlgorithmSpec::RelaxedOptimalTree
+        )
+    }
+}
+
+/// A complete, reproducible description of one BP run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    pub model: ModelSpec,
+    pub algorithm: AlgorithmSpec,
+    /// Worker threads (1 for sequential algorithms).
+    pub threads: usize,
+    /// Convergence threshold on task priority (paper: 1e-5 grids, 1e-2 LDPC).
+    pub epsilon: f64,
+    /// RNG seed for model generation and scheduler randomness.
+    pub seed: u64,
+    /// Multiqueue heaps per thread (paper: 4).
+    pub queues_per_thread: usize,
+    /// Hard wall-clock limit in seconds (paper uses 5 min); 0 = unlimited.
+    pub time_limit_secs: f64,
+    /// Safety cap on total updates (guards non-convergent configs); 0 = off.
+    pub max_updates: u64,
+    /// Use the PJRT/AOT compute path where the engine supports it.
+    pub use_pjrt: bool,
+}
+
+impl RunConfig {
+    pub fn new(model: ModelSpec, algorithm: AlgorithmSpec) -> Self {
+        // Paper: 1e-5 for grids/trees, 1e-2 for LDPC. We default LDPC to
+        // 1e-3 instead: with this pairwise-MRF encoding the residual-family
+        // schedules can stop at 1e-2 before all bit flips resolve (see
+        // EXPERIMENTS.md §Deviations); 1e-3 decodes reliably for all
+        // algorithms while preserving the relative comparisons.
+        let epsilon = match model {
+            ModelSpec::Ldpc { .. } => 1e-3,
+            _ => 1e-5,
+        };
+        RunConfig {
+            model,
+            algorithm,
+            threads: 1,
+            epsilon,
+            seed: 42,
+            queues_per_thread: 4,
+            time_limit_secs: 300.0,
+            max_updates: 0,
+            use_pjrt: false,
+        }
+    }
+
+    pub fn with_threads(mut self, t: usize) -> Self {
+        self.threads = t;
+        self
+    }
+
+    pub fn with_seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    pub fn with_epsilon(mut self, e: f64) -> Self {
+        self.epsilon = e;
+        self
+    }
+
+    pub fn with_max_updates(mut self, m: u64) -> Self {
+        self.max_updates = m;
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", self.model.to_json()),
+            ("algorithm", Json::Str(self.algorithm.to_cli())),
+            ("threads", Json::Num(self.threads as f64)),
+            ("epsilon", Json::Num(self.epsilon)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("queues_per_thread", Json::Num(self.queues_per_thread as f64)),
+            ("time_limit_secs", Json::Num(self.time_limit_secs)),
+            ("max_updates", Json::Num(self.max_updates as f64)),
+            ("use_pjrt", Json::Bool(self.use_pjrt)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<RunConfig> {
+        let model = ModelSpec::from_json(v.get("model").ok_or_else(|| anyhow!("model missing"))?)?;
+        let alg = AlgorithmSpec::parse_cli(
+            v.get("algorithm")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("algorithm missing"))?,
+        )?;
+        let mut cfg = RunConfig::new(model, alg);
+        if let Some(t) = v.get("threads").and_then(Json::as_usize) {
+            cfg.threads = t;
+        }
+        if let Some(e) = v.get("epsilon").and_then(Json::as_f64) {
+            cfg.epsilon = e;
+        }
+        if let Some(s) = v.get("seed").and_then(Json::as_u64) {
+            cfg.seed = s;
+        }
+        if let Some(q) = v.get("queues_per_thread").and_then(Json::as_usize) {
+            cfg.queues_per_thread = q;
+        }
+        if let Some(t) = v.get("time_limit_secs").and_then(Json::as_f64) {
+            cfg.time_limit_secs = t;
+        }
+        if let Some(m) = v.get("max_updates").and_then(Json::as_u64) {
+            cfg.max_updates = m;
+        }
+        if let Some(b) = v.get("use_pjrt").and_then(Json::as_bool) {
+            cfg.use_pjrt = b;
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: &str) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let v = parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        RunConfig::from_json(&v)
+    }
+
+    /// Save to a JSON file (pretty-printed).
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {path}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_cli_roundtrip() {
+        let m = ModelSpec::parse_cli("ising:300").unwrap();
+        assert_eq!(m, ModelSpec::Ising { n: 300 });
+        let m = ModelSpec::parse_cli("ldpc:30000:0.05").unwrap();
+        assert_eq!(m, ModelSpec::Ldpc { n: 30000, flip_prob: 0.05 });
+        assert!(ModelSpec::parse_cli("nope:3").is_err());
+        assert!(ModelSpec::parse_cli("ising").is_err());
+    }
+
+    #[test]
+    fn algorithm_cli_parse() {
+        assert_eq!(
+            AlgorithmSpec::parse_cli("rr").unwrap(),
+            AlgorithmSpec::RelaxedResidual
+        );
+        assert_eq!(
+            AlgorithmSpec::parse_cli("splash:10").unwrap(),
+            AlgorithmSpec::Splash { h: 10 }
+        );
+        assert_eq!(
+            AlgorithmSpec::parse_cli("random_synch:0.1").unwrap(),
+            AlgorithmSpec::RandomSynchronous { low_p: 0.1 }
+        );
+        assert!(AlgorithmSpec::parse_cli("wat").is_err());
+    }
+
+    #[test]
+    fn relaxed_flag() {
+        assert!(AlgorithmSpec::RelaxedResidual.is_relaxed());
+        assert!(!AlgorithmSpec::CoarseGrained.is_relaxed());
+        assert!(!AlgorithmSpec::RandomSplash { h: 2 }.is_relaxed());
+        assert!(AlgorithmSpec::RelaxedSmartSplash { h: 2 }.is_relaxed());
+    }
+
+    #[test]
+    fn config_json_roundtrip() {
+        let cfg = RunConfig::new(
+            ModelSpec::Ldpc { n: 1000, flip_prob: 0.07 },
+            AlgorithmSpec::RelaxedSmartSplash { h: 2 },
+        )
+        .with_threads(8)
+        .with_seed(7);
+        let j = cfg.to_json().to_string_pretty();
+        let back = RunConfig::from_json(&parse(&j).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn default_epsilon_per_model() {
+        let c = RunConfig::new(ModelSpec::Ising { n: 10 }, AlgorithmSpec::RelaxedResidual);
+        assert_eq!(c.epsilon, 1e-5);
+        let c = RunConfig::new(
+            ModelSpec::Ldpc { n: 10, flip_prob: 0.07 },
+            AlgorithmSpec::RelaxedResidual,
+        );
+        assert_eq!(c.epsilon, 1e-3);
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let cfg = RunConfig::new(ModelSpec::Tree { n: 100 }, AlgorithmSpec::Synchronous);
+        let path = "/tmp/relaxed_bp_test_cfg.json";
+        cfg.save(path).unwrap();
+        let back = RunConfig::load(path).unwrap();
+        assert_eq!(back, cfg);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,117 @@
+//! Per-thread counters and the aggregated run metrics.
+//!
+//! Workers mutate a plain [`Counters`] (no atomics on the hot path); the
+//! coordinator sums them after join. `updates` counts *committed* message
+//! updates — the quantity the paper's Tables 2, 3 and 6 report — while
+//! `wasted_pops` / `stale_pops` expose the relaxation overhead directly.
+
+/// Plain per-thread event counters.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Counters {
+    /// Committed message updates (the paper's "updates").
+    pub updates: u64,
+    /// Updates committed with residual ≥ ε ("useful" in §4's terminology).
+    pub useful_updates: u64,
+    /// Tasks popped whose priority had already fallen below ε.
+    pub wasted_pops: u64,
+    /// Entries discarded because their epoch was stale.
+    pub stale_pops: u64,
+    /// Live entries that lost the claim race to another worker.
+    pub claim_failures: u64,
+    /// Successful pops (any kind).
+    pub pops: u64,
+    /// Scheduler inserts performed by this worker.
+    pub inserts: u64,
+    /// Rounds (synchronous-style engines only).
+    pub rounds: u64,
+    /// Splash operations (splash engines only).
+    pub splashes: u64,
+}
+
+impl Counters {
+    pub fn add(&mut self, other: &Counters) {
+        self.updates += other.updates;
+        self.useful_updates += other.useful_updates;
+        self.wasted_pops += other.wasted_pops;
+        self.stale_pops += other.stale_pops;
+        self.claim_failures += other.claim_failures;
+        self.pops += other.pops;
+        self.inserts += other.inserts;
+        self.rounds += other.rounds;
+        self.splashes += other.splashes;
+    }
+}
+
+/// Aggregated metrics across all workers.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsReport {
+    pub total: Counters,
+    pub per_thread_updates: Vec<u64>,
+}
+
+impl MetricsReport {
+    pub fn aggregate(per_thread: &[Counters]) -> Self {
+        let mut total = Counters::default();
+        for c in per_thread {
+            total.add(c);
+        }
+        MetricsReport {
+            total,
+            per_thread_updates: per_thread.iter().map(|c| c.updates).collect(),
+        }
+    }
+
+    pub fn total_updates(&self) -> u64 {
+        self.total.updates
+    }
+
+    /// Imbalance: max/mean of per-thread update counts (1.0 = perfect).
+    pub fn load_imbalance(&self) -> f64 {
+        if self.per_thread_updates.is_empty() {
+            return 1.0;
+        }
+        let max = *self.per_thread_updates.iter().max().unwrap() as f64;
+        let mean = self.per_thread_updates.iter().sum::<u64>() as f64
+            / self.per_thread_updates.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_sums_fields() {
+        let mut a = Counters { updates: 5, wasted_pops: 1, ..Default::default() };
+        let b = Counters { updates: 3, stale_pops: 2, ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.updates, 8);
+        assert_eq!(a.wasted_pops, 1);
+        assert_eq!(a.stale_pops, 2);
+    }
+
+    #[test]
+    fn aggregate_and_imbalance() {
+        let per = vec![
+            Counters { updates: 100, ..Default::default() },
+            Counters { updates: 300, ..Default::default() },
+        ];
+        let m = MetricsReport::aggregate(&per);
+        assert_eq!(m.total_updates(), 400);
+        assert_eq!(m.per_thread_updates, vec![100, 300]);
+        assert!((m.load_imbalance() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_degenerate() {
+        let m = MetricsReport::aggregate(&[]);
+        assert_eq!(m.load_imbalance(), 1.0);
+        let m = MetricsReport::aggregate(&[Counters::default()]);
+        assert_eq!(m.load_imbalance(), 1.0);
+    }
+}

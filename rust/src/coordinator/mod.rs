@@ -1,0 +1,244 @@
+//! Coordination layer: per-thread metrics, run budgets, and the quiescence
+//! (termination) protocol shared by all queue-driven engines.
+//!
+//! ## Termination protocol
+//!
+//! Queue-driven BP has no natural "end of input": the run is over when no
+//! task has priority ≥ ε. We detect this with two global counters:
+//!
+//! - `entries` — entries logically in the scheduler. Incremented *before*
+//!   an insert, decremented *after* a successful pop, so `entries == 0`
+//!   implies the queues are empty and no insert is in flight.
+//! - `in_flight` — workers currently holding a popped task (or attempting a
+//!   pop). Incremented before the pop, decremented when processing ends.
+//!
+//! When a worker observes `entries == 0 && in_flight == 0` (its own
+//! contribution removed), it elects itself verifier via CAS and re-scans
+//! true task priorities; any task ≥ ε is re-inserted (repairing losses from
+//! the benign message races), otherwise the run is converged. This makes
+//! the final state's residuals *actually* below ε regardless of races.
+
+pub mod metrics;
+
+pub use metrics::{Counters, MetricsReport};
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::time::Instant;
+
+/// Wall-clock + update-count budget for a run.
+#[derive(Debug, Clone)]
+pub struct Budget {
+    start: Instant,
+    /// Seconds; `f64::INFINITY` when unlimited.
+    limit_secs: f64,
+    /// Max total updates; `u64::MAX` when unlimited.
+    max_updates: u64,
+}
+
+impl Budget {
+    pub fn new(limit_secs: f64, max_updates: u64) -> Self {
+        Budget {
+            start: Instant::now(),
+            limit_secs: if limit_secs <= 0.0 { f64::INFINITY } else { limit_secs },
+            max_updates: if max_updates == 0 { u64::MAX } else { max_updates },
+        }
+    }
+
+    #[inline]
+    pub fn expired(&self, updates_so_far: u64) -> bool {
+        updates_so_far >= self.max_updates || self.elapsed() > self.limit_secs
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Shared state for the quiescence protocol.
+pub struct Termination {
+    pub entries: AtomicUsize,
+    pub in_flight: AtomicUsize,
+    pub done: AtomicBool,
+    verifier: AtomicBool,
+    /// Global (approximate) update counter used for budget checks; workers
+    /// flush their local counts in batches.
+    pub global_updates: AtomicU64,
+}
+
+impl Termination {
+    pub fn new() -> Self {
+        Termination {
+            entries: AtomicUsize::new(0),
+            in_flight: AtomicUsize::new(0),
+            done: AtomicBool::new(false),
+            verifier: AtomicBool::new(false),
+            global_updates: AtomicU64::new(0),
+        }
+    }
+
+    /// Account for an entry that is about to be inserted.
+    #[inline]
+    pub fn before_insert(&self) {
+        self.entries.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Account for a successfully popped entry.
+    #[inline]
+    pub fn after_pop(&self) {
+        self.entries.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    #[inline]
+    pub fn enter(&self) {
+        self.in_flight.fetch_add(1, Ordering::AcqRel);
+    }
+
+    #[inline]
+    pub fn exit(&self) {
+        self.in_flight.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    #[inline]
+    pub fn is_done(&self) -> bool {
+        self.done.load(Ordering::Acquire)
+    }
+
+    pub fn set_done(&self) {
+        self.done.store(true, Ordering::Release);
+    }
+
+    /// Quiescent from this worker's perspective (its own `in_flight`
+    /// contribution must already be removed).
+    #[inline]
+    pub fn quiescent(&self) -> bool {
+        self.entries.load(Ordering::Acquire) == 0 && self.in_flight.load(Ordering::Acquire) == 0
+    }
+
+    /// Try to become the single verifier; `verify` must return `true` if
+    /// the system is converged (then the run ends) or `false` if it found
+    /// and re-inserted work. Returns whether this thread ran verification.
+    pub fn try_verify<F: FnOnce() -> bool>(&self, verify: F) -> bool {
+        if self
+            .verifier
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            return false;
+        }
+        // Re-check quiescence while holding the verifier role: a racing
+        // worker may have popped/inserted in between.
+        if self.quiescent() {
+            if verify() {
+                self.set_done();
+            }
+        }
+        self.verifier.store(false, Ordering::Release);
+        true
+    }
+}
+
+impl Default for Termination {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Run `worker(thread_id)` on `threads` scoped threads and collect results.
+pub fn run_workers<R: Send>(
+    threads: usize,
+    worker: impl Fn(usize) -> R + Sync,
+) -> Vec<R> {
+    assert!(threads >= 1);
+    if threads == 1 {
+        return vec![worker(0)];
+    }
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let worker = &worker;
+                s.spawn(move || worker(t))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn budget_unlimited() {
+        let b = Budget::new(0.0, 0);
+        assert!(!b.expired(u64::MAX - 1));
+    }
+
+    #[test]
+    fn budget_updates_cap() {
+        let b = Budget::new(0.0, 100);
+        assert!(!b.expired(99));
+        assert!(b.expired(100));
+    }
+
+    #[test]
+    fn budget_time_cap() {
+        let b = Budget::new(0.001, 0);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(b.expired(0));
+    }
+
+    #[test]
+    fn termination_counters() {
+        let t = Termination::new();
+        assert!(t.quiescent());
+        t.before_insert();
+        assert!(!t.quiescent());
+        t.after_pop();
+        assert!(t.quiescent());
+        t.enter();
+        assert!(!t.quiescent());
+        t.exit();
+        assert!(t.quiescent());
+    }
+
+    #[test]
+    fn verifier_is_exclusive_and_sets_done() {
+        let t = Termination::new();
+        let ran = t.try_verify(|| true);
+        assert!(ran);
+        assert!(t.is_done());
+    }
+
+    #[test]
+    fn verifier_aborts_when_not_quiescent() {
+        let t = Termination::new();
+        t.before_insert();
+        let ran = t.try_verify(|| true);
+        assert!(ran, "acquired the role");
+        assert!(!t.is_done(), "but did not verify: not quiescent");
+    }
+
+    #[test]
+    fn verifier_reinsertion_keeps_running() {
+        let t = Termination::new();
+        t.try_verify(|| false);
+        assert!(!t.is_done());
+    }
+
+    #[test]
+    fn run_workers_collects_in_order() {
+        let out = run_workers(4, |t| t * 10);
+        assert_eq!(out, vec![0, 10, 20, 30]);
+    }
+
+    #[test]
+    fn run_workers_shares_state() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&counter);
+        run_workers(8, move |_| {
+            c.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 8);
+    }
+}

@@ -1,0 +1,260 @@
+//! The Appendix-A optimal tree schedule, exact and relaxed.
+//!
+//! On a tree, BP converges after each message is updated exactly once in
+//! the two-phase order: leaves→root, then root→leaves. Appendix A encodes
+//! this as a priority function needing O(1) metadata per message:
+//!
+//! 1. leaf out-messages start with priority `n`; everything else 0;
+//! 2. an executed message's priority drops to 0;
+//! 3. once all `μ_{k→i}, k ∈ N(i)\{j}` have been executed with non-zero
+//!    priority, `μ_{i→j}`'s priority becomes `min(their priorities) − 1`.
+//!
+//! Claim 4: the relaxed version performs `O(n + q²·H)` updates. To exercise
+//! exactly the analytical model, *all* messages live in the scheduler for
+//! the whole run (zero-priority pops are the *wasted updates* the claim
+//! counts), and the run ends when all `2(n−1)` messages have had their
+//! useful (non-zero-priority) update.
+
+use super::{Engine, EngineStats};
+use crate::bp::{compute_message, msg_buf, Messages};
+use crate::configio::RunConfig;
+use crate::coordinator::{run_workers, Budget, Counters, MetricsReport, Termination};
+use crate::model::Mrf;
+use crate::sched::{Entry, ExactQueue, Multiqueue, Scheduler, TaskStates};
+use crate::util::{AtomicF64, Timer, Xoshiro256};
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+
+pub struct OptimalTree {
+    pub relaxed: bool,
+}
+
+impl Engine for OptimalTree {
+    fn name(&self) -> String {
+        if self.relaxed {
+            "relaxed_optimal_tree".into()
+        } else {
+            "optimal_tree".into()
+        }
+    }
+
+    fn run(&self, mrf: &Mrf, msgs: &Messages, cfg: &RunConfig) -> Result<EngineStats> {
+        // Must be a tree: |E| = |V| − 1 and connected.
+        let me = mrf.num_messages();
+        if me != 2 * (mrf.num_nodes() - 1) {
+            bail!("optimal_tree engine requires a tree model");
+        }
+        let timer = Timer::start();
+        let budget = Budget::new(cfg.time_limit_secs, cfg.max_updates);
+        let n = mrf.num_nodes();
+
+        let sched: Box<dyn Scheduler> = if self.relaxed {
+            Box::new(Multiqueue::for_threads(cfg.threads, cfg.queues_per_thread))
+        } else {
+            Box::new(ExactQueue::with_capacity(me))
+        };
+        let sched = sched.as_ref();
+
+        // Per-message metadata.
+        let prio: Vec<AtomicF64> = (0..me).map(|_| AtomicF64::new(0.0)).collect();
+        // Messages μ_{k→i} (k ≠ j) still to fire before (i→j) activates.
+        let remaining: Vec<AtomicU32> = (0..me)
+            .map(|e| {
+                let i = mrf.graph.edge_src[e] as usize;
+                AtomicU32::new((mrf.graph.degree(i) - 1) as u32)
+            })
+            .collect();
+        let min_in_prio: Vec<AtomicF64> = (0..me).map(|_| AtomicF64::new(f64::MAX)).collect();
+
+        let ts = TaskStates::new(me);
+        let term = Termination::new();
+        let timed_out = AtomicBool::new(false);
+        let useful_count = AtomicU64::new(0);
+        let target_useful = me as u64;
+
+        // Seed: ALL messages enter the scheduler; leaf out-edges at n.
+        {
+            let mut rng = Xoshiro256::stream(cfg.seed, 0x0CEA);
+            for e in 0..me as u32 {
+                let i = mrf.graph.edge_src[e as usize] as usize;
+                let p = if mrf.graph.degree(i) == 1 { n as f64 } else { 0.0 };
+                prio[e as usize].store(p);
+                term.before_insert();
+                sched.insert(Entry { prio: p, task: e, epoch: ts.epoch(e) }, &mut rng);
+            }
+        }
+
+        let per_thread = run_workers(cfg.threads, |tid| {
+            let mut rng = Xoshiro256::stream(cfg.seed, 4000 + tid as u64);
+            let mut c = Counters::default();
+            let mut buf = msg_buf();
+            let mut since_flush: u64 = 0;
+
+            while !term.is_done() {
+                term.enter();
+                match sched.pop(&mut rng) {
+                    Some(ent) => {
+                        term.after_pop();
+                        c.pops += 1;
+                        if ent.epoch != ts.epoch(ent.task) {
+                            c.stale_pops += 1;
+                            term.exit();
+                            continue;
+                        }
+                        if !ts.try_claim(ent.task, ent.epoch) {
+                            c.claim_failures += 1;
+                            term.exit();
+                            continue;
+                        }
+                        let e = ent.task;
+                        let p = prio[e as usize].load();
+                        // Execute the update (even with priority 0 — those
+                        // are the wasted updates of Claim 4).
+                        let len = compute_message(mrf, msgs, e, &mut buf);
+                        msgs.write_msg(mrf, e, &buf[..len]);
+                        c.updates += 1;
+                        since_flush += 1;
+
+                        if p > 0.0 {
+                            c.useful_updates += 1;
+                            prio[e as usize].store(0.0);
+                            // Propagate rule (3) to out-edges of dst.
+                            let j = mrf.graph.edge_dst[e as usize] as usize;
+                            let rev = mrf.graph.reverse(e);
+                            for s in mrf.graph.slots(j) {
+                                let k = mrf.graph.adj_out[s];
+                                if k == rev {
+                                    continue;
+                                }
+                                min_in_prio[k as usize].fetch_min(p);
+                                if remaining[k as usize].fetch_sub(1, Ordering::AcqRel) == 1 {
+                                    let newp = min_in_prio[k as usize].load() - 1.0;
+                                    prio[k as usize].store(newp);
+                                    let epoch = ts.bump(k);
+                                    term.before_insert();
+                                    sched.insert(
+                                        Entry { prio: newp, task: k, epoch },
+                                        &mut rng,
+                                    );
+                                    c.inserts += 1;
+                                }
+                            }
+                            let done =
+                                useful_count.fetch_add(1, Ordering::AcqRel) + 1 == target_useful;
+                            if done {
+                                term.set_done();
+                            }
+                            // Re-insert with priority 0: the task stays in
+                            // the scheduler pool per the analytical model.
+                            let epoch = ts.bump(e);
+                            term.before_insert();
+                            sched.insert(Entry { prio: 0.0, task: e, epoch }, &mut rng);
+                        } else {
+                            c.wasted_pops += 1;
+                            // Wasted update: put it straight back.
+                            let epoch = ts.bump(e);
+                            term.before_insert();
+                            sched.insert(Entry { prio: 0.0, task: e, epoch }, &mut rng);
+                        }
+                        ts.release(e);
+                        term.exit();
+
+                        if since_flush >= 256 {
+                            let g = term
+                                .global_updates
+                                .fetch_add(since_flush, Ordering::Relaxed)
+                                + since_flush;
+                            since_flush = 0;
+                            if budget.expired(g) {
+                                timed_out.store(true, Ordering::Release);
+                                term.set_done();
+                            }
+                        }
+                    }
+                    None => {
+                        term.exit();
+                        // The pool always holds every task; an empty pop can
+                        // only race with other pops. Spin.
+                        std::thread::yield_now();
+                        if budget.expired(term.global_updates.load(Ordering::Relaxed)) {
+                            timed_out.store(true, Ordering::Release);
+                            term.set_done();
+                        }
+                    }
+                }
+            }
+            c
+        });
+
+        let useful = useful_count.load(Ordering::Acquire);
+        Ok(EngineStats {
+            converged: useful == target_useful,
+            wall_secs: timer.elapsed_secs(),
+            metrics: MetricsReport::aggregate(&per_thread),
+            final_max_priority: 0.0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bp::all_marginals;
+    use crate::configio::{AlgorithmSpec, ModelSpec};
+    use crate::model::builders;
+
+    #[test]
+    fn exact_schedule_does_minimum_work() {
+        let spec = ModelSpec::Tree { n: 63 };
+        let mrf = builders::build(&spec, 1);
+        let msgs = Messages::uniform(&mrf);
+        let cfg = RunConfig::new(spec, AlgorithmSpec::OptimalTree);
+        let stats = OptimalTree { relaxed: false }.run(&mrf, &msgs, &cfg).unwrap();
+        assert!(stats.converged);
+        assert_eq!(stats.metrics.total.useful_updates, 124); // 2(n−1)
+        // The exact scheduler never pops a zero before a positive exists…
+        // (zero-priority re-inserts can surface only after all positives
+        // drain, at which point the run is over).
+        assert_eq!(stats.metrics.total.updates, 124);
+        let bp = all_marginals(&mrf, &msgs);
+        for m in bp {
+            assert!((m[0] - 0.1).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn relaxed_schedule_bounded_waste() {
+        let spec = ModelSpec::Tree { n: 255 };
+        let mrf = builders::build(&spec, 1);
+        let msgs = Messages::uniform(&mrf);
+        let cfg = RunConfig::new(spec, AlgorithmSpec::RelaxedOptimalTree).with_threads(2);
+        let stats = OptimalTree { relaxed: true }.run(&mrf, &msgs, &cfg).unwrap();
+        assert!(stats.converged);
+        assert_eq!(stats.metrics.total.useful_updates, 508);
+        // Claim 4: waste is O(q²·H), far below O(n·q) here.
+        let waste = stats.metrics.total.updates - stats.metrics.total.useful_updates;
+        assert!(waste < 5080, "waste={waste}");
+    }
+
+    #[test]
+    fn rejects_non_tree() {
+        let spec = ModelSpec::Ising { n: 3 };
+        let mrf = builders::build(&spec, 1);
+        let msgs = Messages::uniform(&mrf);
+        let cfg = RunConfig::new(spec, AlgorithmSpec::OptimalTree);
+        assert!(OptimalTree { relaxed: false }.run(&mrf, &msgs, &cfg).is_err());
+    }
+
+    #[test]
+    fn exact_marginals_on_path() {
+        let spec = ModelSpec::Path { n: 10 };
+        let mrf = builders::build(&spec, 1);
+        let msgs = Messages::uniform(&mrf);
+        let cfg = RunConfig::new(spec, AlgorithmSpec::OptimalTree);
+        let stats = OptimalTree { relaxed: false }.run(&mrf, &msgs, &cfg).unwrap();
+        assert!(stats.converged);
+        let bp = all_marginals(&mrf, &msgs);
+        let exact = crate::bp::exact_marginals(&mrf, 1 << 20).unwrap();
+        assert!(crate::bp::max_marginal_diff(&bp, &exact) < 1e-9);
+    }
+}

@@ -1,0 +1,181 @@
+//! Randomized synchronous BP (Van der Merwe–Joseph–Gopalakrishnan, HPEC
+//! 2019), designed for GPUs — the paper's Appendix B.2 baseline.
+//!
+//! Each round updates a *subset* of messages synchronously. When the run
+//! is converging (the count of unconverged messages dropped since the last
+//! round), all unconverged messages are updated; when it is converging
+//! *slowly*, only a random fraction `lowP` of them is updated — the random
+//! subsetting injects the schedule noise that lets the algorithm escape
+//! cyclic non-convergent behavior. (On CPUs the per-round residual scans
+//! make this uncompetitive, which is the paper's point in Table 7.)
+
+use super::{Engine, EngineStats};
+use crate::bp::{Lookahead, Messages};
+use crate::configio::RunConfig;
+use crate::coordinator::{run_workers, Budget, Counters, MetricsReport};
+use crate::model::Mrf;
+use crate::util::{Timer, Xoshiro256};
+use anyhow::Result;
+
+pub struct RandomSynch {
+    /// Fraction of unconverged messages updated in slow rounds.
+    pub low_p: f64,
+}
+
+impl Engine for RandomSynch {
+    fn name(&self) -> String {
+        format!("random_synch_{}", self.low_p)
+    }
+
+    fn run(&self, mrf: &Mrf, msgs: &Messages, cfg: &RunConfig) -> Result<EngineStats> {
+        let timer = Timer::start();
+        let budget = Budget::new(cfg.time_limit_secs, cfg.max_updates);
+        let eps = cfg.epsilon;
+        let threads = cfg.threads.max(1);
+        let me = mrf.num_messages();
+
+        let la = Lookahead::init(mrf, msgs);
+        let mut rng = Xoshiro256::stream(cfg.seed, 0xBEEF);
+        let mut total = Counters::default();
+        let mut prev_unconverged = usize::MAX;
+        let mut converged_flag = true;
+        let mut global: u64 = 0;
+
+        loop {
+            // Unconverged messages under the current residuals.
+            let unconverged: Vec<u32> = (0..me as u32).filter(|&e| la.residual(e) >= eps).collect();
+            if unconverged.is_empty() {
+                break;
+            }
+            // Slow convergence → random lowP subset; otherwise all.
+            let slow = unconverged.len() >= prev_unconverged;
+            prev_unconverged = unconverged.len();
+            let selected: Vec<u32> = if slow {
+                let k = ((unconverged.len() as f64 * self.low_p).ceil() as usize).max(1);
+                rng.sample_indices(unconverged.len(), k)
+                    .into_iter()
+                    .map(|i| unconverged[i])
+                    .collect()
+            } else {
+                unconverged
+            };
+
+            // Synchronous block update of the selection.
+            let chunk = selected.len().div_ceil(threads);
+            let per_thread = run_workers(threads, |tid| {
+                let mut c = Counters::default();
+                let lo = (tid * chunk).min(selected.len());
+                let hi = ((tid + 1) * chunk).min(selected.len());
+                for &e in &selected[lo..hi] {
+                    let r = la.residual(e);
+                    la.commit(mrf, msgs, e);
+                    c.updates += 1;
+                    if r >= eps {
+                        c.useful_updates += 1;
+                    }
+                }
+                c
+            });
+            let mut round_updates = 0;
+            for c in &per_thread {
+                round_updates += c.updates;
+                total.add(c);
+            }
+            total.rounds += 1;
+
+            // Refresh residuals of affected edges (out-edges of every dst).
+            let mut dsts: Vec<u32> =
+                selected.iter().map(|&e| mrf.graph.edge_dst[e as usize]).collect();
+            dsts.sort_unstable();
+            dsts.dedup();
+            let chunk2 = dsts.len().div_ceil(threads);
+            run_workers(threads, |tid| {
+                let lo = (tid * chunk2).min(dsts.len());
+                let hi = ((tid + 1) * chunk2).min(dsts.len());
+                for &j in &dsts[lo..hi] {
+                    for s in mrf.graph.slots(j as usize) {
+                        la.refresh(mrf, msgs, mrf.graph.adj_out[s]);
+                    }
+                }
+            });
+
+            global += round_updates;
+            if budget.expired(global) {
+                converged_flag = false;
+                break;
+            }
+        }
+
+        let final_max = la.max_residual();
+        Ok(EngineStats {
+            converged: converged_flag && final_max < eps,
+            wall_secs: timer.elapsed_secs(),
+            metrics: MetricsReport::aggregate(&[total]),
+            final_max_priority: final_max,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bp::{all_marginals, max_marginal_diff};
+    use crate::configio::{AlgorithmSpec, ModelSpec};
+    use crate::model::builders;
+
+    #[test]
+    fn converges_on_tree() {
+        let spec = ModelSpec::Tree { n: 31 };
+        let mrf = builders::build(&spec, 1);
+        let msgs = Messages::uniform(&mrf);
+        let cfg =
+            RunConfig::new(spec, AlgorithmSpec::RandomSynchronous { low_p: 0.4 }).with_threads(2);
+        let stats = RandomSynch { low_p: 0.4 }.run(&mrf, &msgs, &cfg).unwrap();
+        assert!(stats.converged);
+        let bp = all_marginals(&mrf, &msgs);
+        for m in bp {
+            assert!((m[0] - 0.1).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matches_residual_fixed_point_on_small_grid() {
+        // Compare against sequential residual (same BP fixed point) rather
+        // than the exact oracle — the loopy-BP bias on tight grids is
+        // schedule-independent but can exceed oracle tolerances.
+        let spec = ModelSpec::Ising { n: 3 };
+        let mrf = builders::build(&spec, 6);
+        let msgs = Messages::uniform(&mrf);
+        let cfg = RunConfig::new(spec.clone(), AlgorithmSpec::RandomSynchronous { low_p: 0.7 });
+        let stats = RandomSynch { low_p: 0.7 }.run(&mrf, &msgs, &cfg).unwrap();
+        assert!(stats.converged);
+        let bp = all_marginals(&mrf, &msgs);
+
+        let mrf2 = builders::build(&spec, 6);
+        let msgs2 = Messages::uniform(&mrf2);
+        let cfg2 = RunConfig::new(spec, AlgorithmSpec::SequentialResidual).with_seed(6);
+        let s2 = crate::engines::sequential::SequentialResidual
+            .run(&mrf2, &msgs2, &cfg2)
+            .unwrap();
+        assert!(s2.converged);
+        let seq = all_marginals(&mrf2, &msgs2);
+        assert!(
+            max_marginal_diff(&bp, &seq) < 1e-2,
+            "diff = {}",
+            max_marginal_diff(&bp, &seq)
+        );
+    }
+
+    #[test]
+    fn low_p_bounds_selection() {
+        // With low_p = 0.1 updates per round in slow phases are ≤ ~10% of
+        // unconverged messages; just verify the run completes and counts.
+        let spec = ModelSpec::Potts { n: 4 };
+        let mrf = builders::build(&spec, 8);
+        let msgs = Messages::uniform(&mrf);
+        let cfg = RunConfig::new(spec, AlgorithmSpec::RandomSynchronous { low_p: 0.1 });
+        let stats = RandomSynch { low_p: 0.1 }.run(&mrf, &msgs, &cfg).unwrap();
+        assert!(stats.converged);
+        assert!(stats.metrics.total.rounds >= 1);
+    }
+}

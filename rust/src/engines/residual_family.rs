@@ -1,0 +1,369 @@
+//! The concurrent residual-BP family: Coarse-Grained (exact PQ), Relaxed
+//! Residual (Multiqueue), and Weight-Decay (Multiqueue with `res/m`
+//! priorities) — §3.2/§3.3 of the paper.
+//!
+//! All three share one worker loop; they differ only in the scheduler
+//! behind the [`Scheduler`] trait and in the priority function:
+//!
+//! - residual: `prio(e) = res(e) = ‖μ'_e − μ_e‖₂`;
+//! - weight-decay (Knoll et al. 2015): `prio(e) = res(e) / m(e)` where
+//!   `m(e)` counts how many times `e` has been committed — de-prioritizing
+//!   messages stuck in large-residual cycles.
+//!
+//! The loop follows §3.3: pop → validate epoch → claim ("mark in-process")
+//! → commit the precomputed update → refresh + requeue affected messages →
+//! release. Termination uses the coordinator's quiescence + verify
+//! protocol, which re-scans true residuals before declaring convergence.
+
+use super::{Engine, EngineStats};
+use crate::bp::{Lookahead, Messages};
+use crate::configio::RunConfig;
+use crate::coordinator::{run_workers, Budget, Counters, MetricsReport, Termination};
+use crate::model::Mrf;
+use crate::sched::{Entry, ExactQueue, Multiqueue, Scheduler, TaskStates};
+use crate::util::{Timer, Xoshiro256};
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    CoarseGrained,
+    Relaxed,
+    WeightDecay,
+}
+
+pub struct ResidualEngine {
+    kind: Kind,
+}
+
+impl ResidualEngine {
+    /// Exact residual BP on a single locked PQ (paper's "Coarse-Grained").
+    pub fn coarse_grained() -> Self {
+        Self { kind: Kind::CoarseGrained }
+    }
+
+    /// Relaxed residual BP on the Multiqueue (the headline algorithm).
+    pub fn relaxed() -> Self {
+        Self { kind: Kind::Relaxed }
+    }
+
+    /// Weight-decay priorities on the Multiqueue.
+    pub fn weight_decay() -> Self {
+        Self { kind: Kind::WeightDecay }
+    }
+}
+
+impl Engine for ResidualEngine {
+    fn name(&self) -> String {
+        match self.kind {
+            Kind::CoarseGrained => "coarse_grained".into(),
+            Kind::Relaxed => "relaxed_residual".into(),
+            Kind::WeightDecay => "weight_decay".into(),
+        }
+    }
+
+    fn run(&self, mrf: &Mrf, msgs: &Messages, cfg: &RunConfig) -> Result<EngineStats> {
+        let sched: Box<dyn Scheduler> = match self.kind {
+            Kind::CoarseGrained => Box::new(ExactQueue::with_capacity(mrf.num_messages())),
+            _ => Box::new(Multiqueue::for_threads(cfg.threads, cfg.queues_per_thread)),
+        };
+        let update_counts = match self.kind {
+            Kind::WeightDecay => {
+                let mut v = Vec::with_capacity(mrf.num_messages());
+                v.resize_with(mrf.num_messages(), || AtomicU32::new(0));
+                Some(v)
+            }
+            _ => None,
+        };
+        run_residual_loop(mrf, msgs, cfg, sched.as_ref(), update_counts.as_deref())
+    }
+}
+
+/// Priority of edge `e` given its residual (weight-decay divides by the
+/// execution count).
+#[inline]
+fn priority(res: f64, e: u32, counts: Option<&[AtomicU32]>) -> f64 {
+    match counts {
+        None => res,
+        Some(c) => res / (c[e as usize].load(Ordering::Relaxed).max(1) as f64),
+    }
+}
+
+/// The shared worker loop. Exposed to the batched engine as well.
+pub(crate) fn run_residual_loop(
+    mrf: &Mrf,
+    msgs: &Messages,
+    cfg: &RunConfig,
+    sched: &dyn Scheduler,
+    counts: Option<&[AtomicU32]>,
+) -> Result<EngineStats> {
+    let timer = Timer::start();
+    let budget = Budget::new(cfg.time_limit_secs, cfg.max_updates);
+    let eps = cfg.epsilon;
+
+    let la = Lookahead::init(mrf, msgs);
+    let ts = TaskStates::new(mrf.num_messages());
+    let term = Termination::new();
+    let timed_out = AtomicBool::new(false);
+
+    // Seed the scheduler.
+    {
+        let mut rng = Xoshiro256::stream(cfg.seed, 0xFEED);
+        for e in 0..mrf.num_messages() as u32 {
+            let p = priority(la.residual(e), e, counts);
+            if p >= eps {
+                term.before_insert();
+                sched.insert(Entry { prio: p, task: e, epoch: ts.epoch(e) }, &mut rng);
+            }
+        }
+    }
+
+    let per_thread = run_workers(cfg.threads, |tid| {
+        let mut rng = Xoshiro256::stream(cfg.seed, 1000 + tid as u64);
+        let mut c = Counters::default();
+        let mut since_flush: u64 = 0;
+        let mut idle_spins: u32 = 0;
+
+        while !term.is_done() {
+            term.enter();
+            let popped = sched.pop(&mut rng);
+            match popped {
+                Some(ent) => {
+                    term.after_pop();
+                    c.pops += 1;
+                    idle_spins = 0;
+                    if ent.epoch != ts.epoch(ent.task) {
+                        c.stale_pops += 1;
+                        term.exit();
+                        continue;
+                    }
+                    if !ts.try_claim(ent.task, ent.epoch) {
+                        c.claim_failures += 1;
+                        term.exit();
+                        continue;
+                    }
+                    // Commit the precomputed update.
+                    let res = la.commit(mrf, msgs, ent.task);
+                    c.updates += 1;
+                    since_flush += 1;
+                    if res >= eps {
+                        c.useful_updates += 1;
+                    } else {
+                        c.wasted_pops += 1;
+                    }
+                    if let Some(counts) = counts {
+                        counts[ent.task as usize].fetch_add(1, Ordering::Relaxed);
+                    }
+                    // Refresh + requeue the affected out-edges of dst.
+                    let j = mrf.graph.edge_dst[ent.task as usize] as usize;
+                    let rev = mrf.graph.reverse(ent.task);
+                    for s in mrf.graph.slots(j) {
+                        let k = mrf.graph.adj_out[s];
+                        if k == rev {
+                            continue;
+                        }
+                        let r = la.refresh(mrf, msgs, k);
+                        let p = priority(r, k, counts);
+                        let epoch = ts.bump(k);
+                        if p >= eps {
+                            term.before_insert();
+                            sched.insert(Entry { prio: p, task: k, epoch }, &mut rng);
+                            c.inserts += 1;
+                        }
+                    }
+                    ts.release(ent.task);
+                    term.exit();
+
+                    // Periodic budget check (updates flushed in batches).
+                    if since_flush >= 256 {
+                        let g = term
+                            .global_updates
+                            .fetch_add(since_flush, Ordering::Relaxed)
+                            + since_flush;
+                        since_flush = 0;
+                        if budget.expired(g) {
+                            timed_out.store(true, Ordering::Release);
+                            term.set_done();
+                        }
+                    }
+                }
+                None => {
+                    term.exit();
+                    if term.quiescent() {
+                        term.try_verify(|| {
+                            // Full refresh of every edge repairs any
+                            // residual lost to benign write races.
+                            let mut found = false;
+                            for e in 0..mrf.num_messages() as u32 {
+                                let r = la.refresh(mrf, msgs, e);
+                                let p = priority(r, e, counts);
+                                if p >= eps {
+                                    let epoch = ts.bump(e);
+                                    term.before_insert();
+                                    sched.insert(Entry { prio: p, task: e, epoch }, &mut rng);
+                                    found = true;
+                                }
+                            }
+                            !found
+                        });
+                    } else {
+                        idle_spins += 1;
+                        if idle_spins > 64 {
+                            std::thread::yield_now();
+                        } else {
+                            std::hint::spin_loop();
+                        }
+                        // An idle thread must also enforce the wall clock,
+                        // otherwise a deadlocked run would never stop.
+                        if budget.expired(term.global_updates.load(Ordering::Relaxed)) {
+                            timed_out.store(true, Ordering::Release);
+                            term.set_done();
+                        }
+                    }
+                }
+            }
+        }
+        c
+    });
+
+    let final_max = la.max_residual();
+    Ok(EngineStats {
+        converged: !timed_out.load(Ordering::Acquire),
+        wall_secs: timer.elapsed_secs(),
+        metrics: MetricsReport::aggregate(&per_thread),
+        final_max_priority: final_max,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bp::{all_marginals, exact_marginals, max_marginal_diff};
+    use crate::configio::{AlgorithmSpec, ModelSpec};
+    use crate::model::builders;
+
+    fn run_with(
+        engine: &ResidualEngine,
+        spec: ModelSpec,
+        threads: usize,
+        seed: u64,
+    ) -> (Mrf, Messages, EngineStats) {
+        let mrf = builders::build(&spec, seed);
+        let msgs = Messages::uniform(&mrf);
+        let cfg = RunConfig::new(spec, AlgorithmSpec::RelaxedResidual)
+            .with_threads(threads)
+            .with_seed(seed);
+        let stats = engine.run(&mrf, &msgs, &cfg).unwrap();
+        (mrf, msgs, stats)
+    }
+
+    #[test]
+    fn relaxed_tree_converges_near_optimal() {
+        let (_, _, stats) =
+            run_with(&ResidualEngine::relaxed(), ModelSpec::Tree { n: 255 }, 1, 1);
+        assert!(stats.converged);
+        // Relaxation may waste a few updates but not blow up (Lemma 2).
+        assert!(stats.metrics.total.updates >= 254);
+        assert!(stats.metrics.total.updates < 2 * 254, "{}", stats.metrics.total.updates);
+        assert!(stats.final_max_priority < 1e-5);
+    }
+
+    #[test]
+    fn relaxed_matches_exact_marginals_on_tree() {
+        let (mrf, msgs, stats) =
+            run_with(&ResidualEngine::relaxed(), ModelSpec::Tree { n: 15 }, 2, 3);
+        assert!(stats.converged);
+        let bp = all_marginals(&mrf, &msgs);
+        let exact = exact_marginals(&mrf, 1 << 20).unwrap();
+        assert!(max_marginal_diff(&bp, &exact) < 1e-4);
+    }
+
+    #[test]
+    fn coarse_grained_converges_multithreaded() {
+        let (mrf, msgs, stats) =
+            run_with(&ResidualEngine::coarse_grained(), ModelSpec::Ising { n: 6 }, 4, 5);
+        assert!(stats.converged, "max prio {}", stats.final_max_priority);
+        let bp = all_marginals(&mrf, &msgs);
+        for m in &bp {
+            assert!((m.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn relaxed_ising_multithreaded_matches_sequential_marginals() {
+        let spec = ModelSpec::Ising { n: 6 };
+        let (mrf, msgs, stats) = run_with(&ResidualEngine::relaxed(), spec.clone(), 4, 7);
+        assert!(stats.converged);
+        let relaxed_marg = all_marginals(&mrf, &msgs);
+
+        let mrf2 = builders::build(&spec, 7);
+        let msgs2 = Messages::uniform(&mrf2);
+        let cfg2 = RunConfig::new(spec, AlgorithmSpec::SequentialResidual).with_seed(7);
+        let s2 = super::super::sequential::SequentialResidual.run(&mrf2, &msgs2, &cfg2).unwrap();
+        assert!(s2.converged);
+        let seq_marg = all_marginals(&mrf2, &msgs2);
+
+        // Same fixed point (within convergence tolerance amplification).
+        assert!(
+            max_marginal_diff(&relaxed_marg, &seq_marg) < 1e-2,
+            "diff = {}",
+            max_marginal_diff(&relaxed_marg, &seq_marg)
+        );
+    }
+
+    #[test]
+    fn weight_decay_converges() {
+        let (_, _, stats) =
+            run_with(&ResidualEngine::weight_decay(), ModelSpec::Potts { n: 6 }, 2, 9);
+        assert!(stats.converged);
+        assert!(stats.metrics.total.updates > 0);
+    }
+
+    #[test]
+    fn ldpc_decodes_relaxed_multithreaded() {
+        let inst = builders::ldpc::build(60, 0.05, 11);
+        let msgs = Messages::uniform(&inst.mrf);
+        let cfg = RunConfig::new(
+            ModelSpec::Ldpc { n: 60, flip_prob: 0.05 },
+            AlgorithmSpec::RelaxedResidual,
+        )
+        .with_threads(4)
+        .with_seed(11);
+        let stats = ResidualEngine::relaxed().run(&inst.mrf, &msgs, &cfg).unwrap();
+        assert!(stats.converged);
+        let bits = crate::bp::decode_bits(&inst.mrf, &msgs, inst.num_vars);
+        assert_eq!(bits, inst.sent);
+    }
+
+    #[test]
+    fn budget_timeout_reported() {
+        let spec = ModelSpec::Ising { n: 12 };
+        let mrf = builders::build(&spec, 1);
+        let msgs = Messages::uniform(&mrf);
+        let cfg = RunConfig::new(spec, AlgorithmSpec::RelaxedResidual)
+            .with_threads(2)
+            .with_max_updates(300);
+        let stats = ResidualEngine::relaxed().run(&mrf, &msgs, &cfg).unwrap();
+        assert!(!stats.converged);
+    }
+
+    #[test]
+    fn update_overhead_vs_sequential_small() {
+        // Table 3's phenomenon in miniature: relaxed performs only slightly
+        // more updates than the sequential baseline.
+        let spec = ModelSpec::Ising { n: 8 };
+        let mrf = builders::build(&spec, 21);
+        let msgs = Messages::uniform(&mrf);
+        let cfg = RunConfig::new(spec.clone(), AlgorithmSpec::SequentialResidual).with_seed(21);
+        let seq = super::super::sequential::SequentialResidual.run(&mrf, &msgs, &cfg).unwrap();
+
+        let mrf2 = builders::build(&spec, 21);
+        let msgs2 = Messages::uniform(&mrf2);
+        let cfg2 = RunConfig::new(spec, AlgorithmSpec::RelaxedResidual).with_seed(21);
+        let rel = ResidualEngine::relaxed().run(&mrf2, &msgs2, &cfg2).unwrap();
+
+        assert!(seq.converged && rel.converged);
+        let ratio = rel.metrics.total.updates as f64 / seq.metrics.total.updates as f64;
+        assert!(ratio < 1.6, "single-thread relaxed overhead ratio {ratio}");
+    }
+}

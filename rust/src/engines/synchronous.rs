@@ -1,0 +1,207 @@
+//! Synchronous (round-based) belief propagation.
+//!
+//! Every round recomputes all messages from the previous round's values —
+//! the trivially parallel schedule. Workers stay alive across rounds and
+//! meet at a barrier; edges are partitioned statically. Double-buffered:
+//! round `r` reads buffer `r mod 2` and writes the other one.
+//!
+//! When `cfg.use_pjrt` is set and the model is an all-binary grid, the
+//! per-round dense sweep is instead executed by the AOT-compiled JAX/Pallas
+//! artifact through the PJRT runtime (see `runtime::grid`), demonstrating
+//! the three-layer hot path. The native path below is the fallback for
+//! arbitrary topologies.
+
+use super::{Engine, EngineStats};
+use crate::bp::{compute_message, msg_buf, residual_l2, Messages, MsgSource};
+use crate::configio::RunConfig;
+use crate::coordinator::{run_workers, Budget, Counters, MetricsReport};
+use crate::model::Mrf;
+use crate::util::{AtomicF64, Timer};
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Barrier;
+
+pub struct Synchronous;
+
+/// Shared round-control block.
+struct Ctrl {
+    done: AtomicBool,
+    timed_out: AtomicBool,
+    round: AtomicU64,
+    max_diff: AtomicF64,
+    result_parity: AtomicU64,
+}
+
+impl Engine for Synchronous {
+    fn name(&self) -> String {
+        "synch".into()
+    }
+
+    fn run(&self, mrf: &Mrf, msgs: &Messages, cfg: &RunConfig) -> Result<EngineStats> {
+        // Three-layer hot path: grid models can run each round through the
+        // AOT JAX/Pallas sweep on the PJRT CPU client.
+        if cfg.use_pjrt {
+            match crate::runtime::grid::run_sync_pjrt(mrf, msgs, cfg) {
+                Ok(stats) => return Ok(stats),
+                Err(e) => eprintln!("[synch] PJRT path unavailable ({e}); native fallback"),
+            }
+        }
+        let timer = Timer::start();
+        let budget = Budget::new(cfg.time_limit_secs, cfg.max_updates);
+        let eps = cfg.epsilon;
+        let threads = cfg.threads.max(1);
+        let me = mrf.num_messages();
+
+        // Double buffers; parity 0 holds the initial state.
+        let bufs = [Messages::uniform(mrf), Messages::uniform(mrf)];
+        bufs[0].restore(&msgs.snapshot());
+
+        let ctrl = Ctrl {
+            done: AtomicBool::new(me == 0),
+            timed_out: AtomicBool::new(false),
+            round: AtomicU64::new(0),
+            max_diff: AtomicF64::new(0.0),
+            result_parity: AtomicU64::new(0),
+        };
+        let barrier = Barrier::new(threads);
+
+        // Static edge partition.
+        let chunk = me.div_ceil(threads);
+
+        let per_thread = run_workers(threads, |tid| {
+            let mut c = Counters::default();
+            let lo = (tid * chunk).min(me);
+            let hi = ((tid + 1) * chunk).min(me);
+            let mut new = msg_buf();
+            let mut cur = msg_buf();
+
+            loop {
+                barrier.wait();
+                if ctrl.done.load(Ordering::Acquire) {
+                    break;
+                }
+                let r = ctrl.round.load(Ordering::Acquire);
+                let src = &bufs[(r % 2) as usize];
+                let dst = &bufs[((r + 1) % 2) as usize];
+                let mut local_max = 0.0f64;
+                for e in lo as u32..hi as u32 {
+                    let len = compute_message(mrf, src, e, &mut new);
+                    src.read_msg(mrf, e, &mut cur);
+                    local_max = local_max.max(residual_l2(&new[..len], &cur[..len]));
+                    dst.write_msg(mrf, e, &new[..len]);
+                    c.updates += 1;
+                }
+                ctrl.max_diff.fetch_max(local_max);
+                if tid == 0 {
+                    c.rounds += 1; // rounds are global, count once
+                }
+                barrier.wait();
+                if tid == 0 {
+                    let diff = ctrl.max_diff.load();
+                    let total_updates = (r + 1) * me as u64;
+                    ctrl.result_parity.store((r + 1) % 2, Ordering::Release);
+                    if diff < eps {
+                        ctrl.done.store(true, Ordering::Release);
+                    } else if budget.expired(total_updates) {
+                        ctrl.timed_out.store(true, Ordering::Release);
+                        ctrl.done.store(true, Ordering::Release);
+                    } else {
+                        ctrl.max_diff.store(0.0);
+                        ctrl.round.store(r + 1, Ordering::Release);
+                    }
+                }
+            }
+            c
+        });
+
+        // Copy the final buffer into the caller's state.
+        let parity = ctrl.result_parity.load(Ordering::Acquire) as usize;
+        msgs.restore(&bufs[parity].snapshot());
+
+        Ok(EngineStats {
+            converged: !ctrl.timed_out.load(Ordering::Acquire),
+            wall_secs: timer.elapsed_secs(),
+            metrics: MetricsReport::aggregate(&per_thread),
+            final_max_priority: ctrl.max_diff.load(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bp::{all_marginals, exact_marginals, max_marginal_diff};
+    use crate::configio::{AlgorithmSpec, ModelSpec};
+    use crate::model::builders;
+
+    fn run_sync(spec: ModelSpec, threads: usize, seed: u64) -> (Mrf, Messages, EngineStats) {
+        let mrf = builders::build(&spec, seed);
+        let msgs = Messages::uniform(&mrf);
+        let cfg = RunConfig::new(spec, AlgorithmSpec::Synchronous)
+            .with_threads(threads)
+            .with_seed(seed);
+        let stats = Synchronous.run(&mrf, &msgs, &cfg).unwrap();
+        (mrf, msgs, stats)
+    }
+
+    #[test]
+    fn tree_converges_in_height_rounds() {
+        // Information travels one hop per round: #rounds ≈ height + 1.
+        let (_, _, stats) = run_sync(ModelSpec::Tree { n: 127 }, 1, 1); // height 6
+        assert!(stats.converged);
+        let rounds = stats.metrics.total.rounds;
+        assert!((6..=9).contains(&rounds), "rounds={rounds}");
+        // Every round updates every message: updates = rounds × 252.
+        assert_eq!(stats.metrics.total.updates, rounds * 252);
+    }
+
+    #[test]
+    fn multithreaded_matches_single_thread() {
+        let (m1, s1, st1) = run_sync(ModelSpec::Ising { n: 5 }, 1, 3);
+        let (m2, s2, st2) = run_sync(ModelSpec::Ising { n: 5 }, 4, 3);
+        assert!(st1.converged && st2.converged);
+        assert_eq!(st1.metrics.total.rounds, st2.metrics.total.rounds);
+        let a = all_marginals(&m1, &s1);
+        let b = all_marginals(&m2, &s2);
+        // Bitwise-identical schedules → identical marginals.
+        assert!(max_marginal_diff(&a, &b) < 1e-12);
+    }
+
+    #[test]
+    fn matches_oracle_on_small_grid() {
+        let (mrf, msgs, stats) = run_sync(ModelSpec::Ising { n: 3 }, 2, 5);
+        assert!(stats.converged);
+        let bp = all_marginals(&mrf, &msgs);
+        let exact = exact_marginals(&mrf, 1 << 20).unwrap();
+        assert!(max_marginal_diff(&bp, &exact) < 0.05);
+    }
+
+    #[test]
+    fn ldpc_decodes_synchronously() {
+        let inst = builders::ldpc::build(240, 0.04, 2);
+        let msgs = Messages::uniform(&inst.mrf);
+        // Tighter epsilon than the paper's 1e-2: on tiny codes the loose
+        // threshold can stop before marginal flips fully resolve.
+        let cfg = RunConfig::new(
+            ModelSpec::Ldpc { n: 240, flip_prob: 0.04 },
+            AlgorithmSpec::Synchronous,
+        )
+        .with_threads(2)
+        .with_epsilon(1e-4);
+        let stats = Synchronous.run(&inst.mrf, &msgs, &cfg).unwrap();
+        assert!(stats.converged);
+        let bits = crate::bp::decode_bits(&inst.mrf, &msgs, inst.num_vars);
+        assert_eq!(bits, inst.sent);
+    }
+
+    #[test]
+    fn budget_cuts_rounds() {
+        let spec = ModelSpec::Ising { n: 6 };
+        let mrf = builders::build(&spec, 1);
+        let msgs = Messages::uniform(&mrf);
+        let cfg = RunConfig::new(spec, AlgorithmSpec::Synchronous).with_max_updates(1);
+        let stats = Synchronous.run(&mrf, &msgs, &cfg).unwrap();
+        assert!(!stats.converged);
+        assert_eq!(stats.metrics.total.rounds, 1);
+    }
+}

@@ -1,0 +1,618 @@
+//! Experiment harness: regenerates every table and figure in the paper's
+//! evaluation (§5, Appendix B) plus the §4 analytical experiments.
+//!
+//! | id | paper artifact | function |
+//! |---|---|---|
+//! | `table1` / `table5` | speedups vs sequential residual (moderate sizes, max threads) | [`Harness::tables_moderate`] |
+//! | `table2` / `table6` | update counts vs sequential residual | (same run) |
+//! | `table3` | relaxed-vs-exact extra updates across thread counts | [`Harness::table3`] |
+//! | `table4` | relaxed residual vs best non-relaxed | [`Harness::table4`] |
+//! | `table7` | randomized synchronous (lowP sweep) | [`Harness::table7`] |
+//! | `fig2`   | 1000² Ising wall-clock + updates at p ∈ {20,35,70} | [`Harness::fig2`] |
+//! | `fig4`–`fig7` | per-model scaling curves (time & updates vs p) | [`Harness::fig_scaling`] |
+//! | `lemma2` | good-case vs bad-case relaxation overhead on trees | [`Harness::lemma2`] |
+//!
+//! Sizes scale with `--scale` (1.0 = the paper's "small" §5.5 sizes; the
+//! default is tuned so the full suite completes on this single-core
+//! container). Every report lands in `results/` as markdown + CSV.
+
+pub mod report;
+
+pub use report::{ratio_cell, Report, Row};
+
+use crate::configio::{AlgorithmSpec, ModelSpec, RunConfig};
+use crate::model::{builders, Mrf};
+use crate::run::run_on_model;
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Harness {
+    /// Instance-size multiplier; 1.0 = the paper's "small" sizes
+    /// (tree 10⁶, grids 300², LDPC 30 000).
+    pub scale: f64,
+    /// Thread counts for scaling sweeps (paper: 1..70 on 72 cores).
+    pub threads: Vec<usize>,
+    /// The "many threads" point used by Tables 1/2/5/6 (paper: 70).
+    pub max_threads: usize,
+    pub out_dir: PathBuf,
+    pub seed: u64,
+    /// Per-cell wall-clock limit in seconds (paper: 5 minutes).
+    pub time_limit: f64,
+    pub use_pjrt: bool,
+}
+
+impl Default for Harness {
+    fn default() -> Self {
+        Harness {
+            scale: 0.05,
+            threads: vec![1, 2, 4, 8],
+            max_threads: 8,
+            out_dir: PathBuf::from("results"),
+            seed: 42,
+            time_limit: 120.0,
+            use_pjrt: false,
+        }
+    }
+}
+
+impl Harness {
+    /// The four benchmark models at the configured scale.
+    pub fn models(&self) -> Vec<ModelSpec> {
+        vec![
+            ModelSpec::Tree { n: scaled(1_000_000, self.scale).max(15) },
+            ModelSpec::Ising { n: side(300, self.scale).max(4) },
+            ModelSpec::Potts { n: side(300, self.scale).max(4) },
+            ModelSpec::Ldpc { n: scaled(30_000, self.scale).max(24), flip_prob: 0.07 },
+        ]
+    }
+
+    fn cfg(&self, spec: &ModelSpec, alg: AlgorithmSpec, threads: usize) -> RunConfig {
+        let mut cfg = RunConfig::new(spec.clone(), alg).with_threads(threads).with_seed(self.seed);
+        cfg.time_limit_secs = self.time_limit;
+        cfg.use_pjrt = self.use_pjrt;
+        cfg
+    }
+
+    /// Run one cell on a shared model instance.
+    pub fn run_cell(
+        &self,
+        mrf: &Mrf,
+        spec: &ModelSpec,
+        alg: AlgorithmSpec,
+        threads: usize,
+    ) -> Result<Row> {
+        let cfg = self.cfg(spec, alg.clone(), threads);
+        eprintln!(
+            "[harness] {} / {} / p={} …",
+            spec.name(),
+            alg.name(),
+            threads
+        );
+        let rep = run_on_model(&cfg, mrf.clone())?;
+        let m = &rep.stats.metrics.total;
+        Ok(Row {
+            model: spec.name().to_string(),
+            algorithm: alg.name(),
+            threads,
+            wall_secs: rep.stats.wall_secs,
+            updates: m.updates,
+            useful_updates: m.useful_updates,
+            wasted_pops: m.wasted_pops,
+            stale_pops: m.stale_pops,
+            converged: rep.stats.converged,
+            seed: self.seed,
+        })
+    }
+
+    /// The full §5.1 roster used by Tables 1/2 (main) and 5/6 (appendix).
+    pub fn moderate_roster(&self) -> Vec<AlgorithmSpec> {
+        vec![
+            AlgorithmSpec::Synchronous,
+            AlgorithmSpec::CoarseGrained,
+            AlgorithmSpec::Splash { h: 2 },
+            AlgorithmSpec::Splash { h: 10 },
+            AlgorithmSpec::RandomSplash { h: 2 },
+            AlgorithmSpec::RandomSplash { h: 10 },
+            AlgorithmSpec::Bucket,
+            AlgorithmSpec::RelaxedResidual,
+            AlgorithmSpec::WeightDecay,
+            AlgorithmSpec::Priority,
+            AlgorithmSpec::RelaxedSmartSplash { h: 2 },
+            AlgorithmSpec::RelaxedSmartSplash { h: 10 },
+        ]
+    }
+
+    /// Tables 1 & 2 (and the appendix Tables 5 & 6): every algorithm at
+    /// `max_threads` vs the sequential residual baseline, on all four
+    /// models, reporting wall-clock speedup and update ratios.
+    pub fn tables_moderate(&self) -> Result<Report> {
+        let mut rep = Report::new(
+            "table1_2_5_6",
+            "Speedups and update counts vs sequential residual (Tables 1, 2, 5, 6)",
+        );
+        self.standard_notes(&mut rep);
+        rep.note(format!("concurrent algorithms at p = {}", self.max_threads));
+
+        let roster = self.moderate_roster();
+        let mut speedup_md = String::from("| input | baseline |");
+        let mut updates_md = String::from("| input | baseline updates |");
+        for a in &roster {
+            speedup_md.push_str(&format!(" {} |", a.name()));
+            updates_md.push_str(&format!(" {} |", a.name()));
+        }
+        speedup_md.push('\n');
+        updates_md.push('\n');
+        let sep = format!("|{}\n", "---|".repeat(roster.len() + 2));
+        speedup_md.push_str(&sep);
+        updates_md.push_str(&sep);
+
+        for spec in self.models() {
+            let mrf = builders::build(&spec, self.seed);
+            let base = self.run_cell(&mrf, &spec, AlgorithmSpec::SequentialResidual, 1)?;
+            speedup_md
+                .push_str(&format!("| {} | {:.2} s |", spec.name(), base.wall_secs));
+            updates_md.push_str(&format!("| {} | {} |", spec.name(), base.updates));
+            rep.push(base.clone());
+            for alg in &roster {
+                let row = self.run_cell(&mrf, &spec, alg.clone(), self.max_threads)?;
+                speedup_md.push_str(&format!(
+                    " {} |",
+                    ratio_cell(row.converged, base.wall_secs / row.wall_secs)
+                ));
+                updates_md.push_str(&format!(
+                    " {} |",
+                    ratio_cell(row.converged, row.updates as f64 / base.updates as f64)
+                ));
+                rep.push(row);
+            }
+            speedup_md.push('\n');
+            updates_md.push('\n');
+        }
+        rep.add_table(format!(
+            "### Speedups vs sequential residual (higher is better)\n\n{speedup_md}"
+        ));
+        rep.add_table(format!(
+            "### Total updates relative to sequential residual (lower is better)\n\n{updates_md}"
+        ));
+        rep.emit(&self.out_dir)?;
+        Ok(rep)
+    }
+
+    /// Table 3: extra updates of relaxed residual vs the exact sequential
+    /// baseline, across thread counts.
+    pub fn table3(&self) -> Result<Report> {
+        let mut rep = Report::new(
+            "table3",
+            "Additional updates of relaxed residual vs exact residual (Table 3)",
+        );
+        self.standard_notes(&mut rep);
+
+        let models = self.models();
+        let mut baselines = Vec::new();
+        let mut mrfs = Vec::new();
+        for spec in &models {
+            let mrf = builders::build(spec, self.seed);
+            let base = self.run_cell(&mrf, spec, AlgorithmSpec::SequentialResidual, 1)?;
+            rep.push(base.clone());
+            baselines.push(base);
+            mrfs.push(mrf);
+        }
+
+        let mut md = String::from("| threads |");
+        for spec in &models {
+            md.push_str(&format!(" {} |", spec.name()));
+        }
+        md.push_str("\n|");
+        md.push_str(&"---|".repeat(models.len() + 1));
+        md.push('\n');
+        md.push_str("| exact (1) |");
+        for b in &baselines {
+            md.push_str(&format!(" {} |", b.updates));
+        }
+        md.push('\n');
+
+        for &p in &self.threads {
+            md.push_str(&format!("| relaxed {p} |"));
+            for (i, spec) in models.iter().enumerate() {
+                let row = self.run_cell(&mrfs[i], spec, AlgorithmSpec::RelaxedResidual, p)?;
+                let pct =
+                    100.0 * (row.updates as f64 / baselines[i].updates as f64 - 1.0);
+                md.push_str(&format!(
+                    " {} |",
+                    if row.converged { format!("{pct:+.2}%") } else { "—".into() }
+                ));
+                rep.push(row);
+            }
+            md.push('\n');
+        }
+        rep.add_table(format!("### Extra updates from relaxation\n\n{md}"));
+        rep.emit(&self.out_dir)?;
+        Ok(rep)
+    }
+
+    /// Table 4: relaxed residual speedup vs the best non-relaxed
+    /// alternative per model and thread count.
+    pub fn table4(&self) -> Result<Report> {
+        let mut rep = Report::new(
+            "table4",
+            "Relaxed residual vs best non-relaxed alternative (Table 4)",
+        );
+        self.standard_notes(&mut rep);
+        let non_relaxed = vec![
+            AlgorithmSpec::Synchronous,
+            AlgorithmSpec::CoarseGrained,
+            AlgorithmSpec::Splash { h: 2 },
+            AlgorithmSpec::Splash { h: 10 },
+        ];
+        let models = self.models();
+        let mut md = String::from("| threads |");
+        for spec in &models {
+            md.push_str(&format!(" {} |", spec.name()));
+        }
+        md.push_str("\n|");
+        md.push_str(&"---|".repeat(models.len() + 1));
+        md.push('\n');
+
+        for &p in &self.threads {
+            md.push_str(&format!("| {p} |"));
+            for spec in &models {
+                let mrf = builders::build(spec, self.seed);
+                let rr = self.run_cell(&mrf, spec, AlgorithmSpec::RelaxedResidual, p)?;
+                let mut best: Option<f64> = None;
+                for alg in &non_relaxed {
+                    let row = self.run_cell(&mrf, spec, alg.clone(), p)?;
+                    if row.converged {
+                        best = Some(best.map_or(row.wall_secs, |b: f64| b.min(row.wall_secs)));
+                    }
+                    rep.push(row);
+                }
+                md.push_str(&format!(
+                    " {} |",
+                    match (rr.converged, best) {
+                        (true, Some(b)) => ratio_cell(true, b / rr.wall_secs),
+                        _ => "—".into(),
+                    }
+                ));
+                rep.push(rr);
+            }
+            md.push('\n');
+        }
+        rep.add_table(format!(
+            "### Speedup of relaxed residual over best non-relaxed (>1 = relaxed wins)\n\n{md}"
+        ));
+        rep.emit(&self.out_dir)?;
+        Ok(rep)
+    }
+
+    /// Table 7: randomized synchronous with lowP ∈ {0.1, 0.4, 0.7} vs the
+    /// synchronous baseline at max threads and relaxed residual at p = 1.
+    pub fn table7(&self) -> Result<Report> {
+        let mut rep =
+            Report::new("table7", "Randomized synchronous vs baselines (Table 7)");
+        self.standard_notes(&mut rep);
+        let models = self.models();
+        let mut md = String::from("| algorithm |");
+        for spec in &models {
+            md.push_str(&format!(" {} |", spec.name()));
+        }
+        md.push_str("\n|");
+        md.push_str(&"---|".repeat(models.len() + 1));
+        md.push('\n');
+
+        let mut line = |label: &str, rows: Vec<Row>, rep: &mut Report| {
+            md.push_str(&format!("| {label} |"));
+            for r in rows {
+                md.push_str(&format!(
+                    " {} |",
+                    if r.converged { format!("{:.3} s", r.wall_secs) } else { "—".into() }
+                ));
+                rep.push(r);
+            }
+            md.push('\n');
+        };
+
+        let synch: Vec<Row> = models
+            .iter()
+            .map(|s| {
+                let mrf = builders::build(s, self.seed);
+                self.run_cell(&mrf, s, AlgorithmSpec::Synchronous, self.max_threads)
+            })
+            .collect::<Result<_>>()?;
+        line(&format!("synch {}", self.max_threads), synch, &mut rep);
+
+        let rr1: Vec<Row> = models
+            .iter()
+            .map(|s| {
+                let mrf = builders::build(s, self.seed);
+                self.run_cell(&mrf, s, AlgorithmSpec::RelaxedResidual, 1)
+            })
+            .collect::<Result<_>>()?;
+        line("relaxed residual 1", rr1, &mut rep);
+
+        for low_p in [0.1, 0.4, 0.7] {
+            let rows: Vec<Row> = models
+                .iter()
+                .map(|s| {
+                    let mrf = builders::build(s, self.seed);
+                    self.run_cell(
+                        &mrf,
+                        s,
+                        AlgorithmSpec::RandomSynchronous { low_p },
+                        self.max_threads,
+                    )
+                })
+                .collect::<Result<_>>()?;
+            line(
+                &format!("random synch {} (lowP={low_p})", self.max_threads),
+                rows,
+                &mut rep,
+            );
+        }
+        rep.add_table(format!("### Running time (s)\n\n{md}"));
+        rep.emit(&self.out_dir)?;
+        Ok(rep)
+    }
+
+    /// Figure 2: Ising grid, three thread counts, three algorithms,
+    /// time + update series.
+    pub fn fig2(&self) -> Result<Report> {
+        let mut rep = Report::new("fig2", "Ising grid: Synch vs Splash(10) vs Relaxed Residual (Figure 2)");
+        self.standard_notes(&mut rep);
+        // Paper: 1000² and p ∈ {20, 35, 70}; scaled analogues here.
+        let spec = ModelSpec::Ising { n: side(1000, self.scale).max(8) };
+        let points: Vec<usize> = self.fig2_threads();
+        rep.note(format!("model: ising {0}×{0}", match spec { ModelSpec::Ising { n } => n, _ => 0 }));
+        let mrf = builders::build(&spec, self.seed);
+        let base = self.run_cell(&mrf, &spec, AlgorithmSpec::SequentialResidual, 1)?;
+        rep.push(base.clone());
+        let algs = [
+            AlgorithmSpec::Synchronous,
+            AlgorithmSpec::Splash { h: 10 },
+            AlgorithmSpec::RelaxedResidual,
+        ];
+        let mut md = String::from("| p | algorithm | time (s) | updates (rel. seq residual) |\n|---|---|---|---|\n");
+        for &p in &points {
+            for alg in &algs {
+                let row = self.run_cell(&mrf, &spec, alg.clone(), p)?;
+                md.push_str(&format!(
+                    "| {p} | {} | {} | {} |\n",
+                    alg.name(),
+                    if row.converged { format!("{:.3}", row.wall_secs) } else { "—".into() },
+                    ratio_cell(row.converged, row.updates as f64 / base.updates as f64),
+                ));
+                rep.push(row);
+            }
+        }
+        rep.add_table(md);
+        rep.emit(&self.out_dir)?;
+        Ok(rep)
+    }
+
+    fn fig2_threads(&self) -> Vec<usize> {
+        // Paper's {20, 35, 70} scaled onto this testbed's sweep range.
+        let hi = self.max_threads;
+        let mut v: Vec<usize> = vec![(hi + 1) / 4, (hi + 1) / 2, hi]
+            .into_iter()
+            .map(|p| p.max(1))
+            .collect();
+        v.dedup();
+        v
+    }
+
+    /// Figures 4–7: per-model scaling study (time & updates vs threads)
+    /// for the main roster. `which` ∈ {tree, ising, potts, ldpc}.
+    pub fn fig_scaling(&self, which: &str) -> Result<Report> {
+        let (fig_id, spec) = match which {
+            "tree" => ("fig4", self.models()[0].clone()),
+            "ising" => ("fig5", self.models()[1].clone()),
+            "potts" => ("fig6", self.models()[2].clone()),
+            "ldpc" => ("fig7", self.models()[3].clone()),
+            other => anyhow::bail!("unknown figure model '{other}'"),
+        };
+        let mut rep = Report::new(
+            fig_id,
+            &format!("{which} model scaling: time and updates vs threads (Figure {})", &fig_id[3..]),
+        );
+        self.standard_notes(&mut rep);
+
+        let algs: Vec<AlgorithmSpec> = vec![
+            AlgorithmSpec::Synchronous,
+            AlgorithmSpec::CoarseGrained,
+            AlgorithmSpec::RelaxedResidual,
+            AlgorithmSpec::WeightDecay,
+            AlgorithmSpec::Priority,
+            AlgorithmSpec::Splash { h: 2 },
+            AlgorithmSpec::RandomSplash { h: 2 },
+            AlgorithmSpec::RelaxedSmartSplash { h: 2 },
+        ];
+        let mrf = builders::build(&spec, self.seed);
+        let base = self.run_cell(&mrf, &spec, AlgorithmSpec::SequentialResidual, 1)?;
+        rep.push(base.clone());
+
+        let mut time_md = String::from("| algorithm |");
+        let mut upd_md = String::from("| algorithm |");
+        for &p in &self.threads {
+            time_md.push_str(&format!(" p={p} |"));
+            upd_md.push_str(&format!(" p={p} |"));
+        }
+        let sep = format!("\n|{}\n", "---|".repeat(self.threads.len() + 1));
+        time_md.push_str(&sep);
+        upd_md.push_str(&sep);
+        time_md.push_str(&format!("| seq residual | {:.3} s (p=1) |\n", base.wall_secs));
+        upd_md.push_str(&format!("| seq residual | {} (p=1) |\n", base.updates));
+
+        for alg in &algs {
+            time_md.push_str(&format!("| {} |", alg.name()));
+            upd_md.push_str(&format!("| {} |", alg.name()));
+            for &p in &self.threads {
+                let row = self.run_cell(&mrf, &spec, alg.clone(), p)?;
+                time_md.push_str(&format!(
+                    " {} |",
+                    if row.converged { format!("{:.3}", row.wall_secs) } else { "—".into() }
+                ));
+                upd_md.push_str(&format!(
+                    " {} |",
+                    if row.converged { format!("{}", row.updates) } else { "—".into() }
+                ));
+                rep.push(row);
+            }
+            time_md.push('\n');
+            upd_md.push('\n');
+        }
+        rep.add_table(format!("### Execution time (s) vs threads\n\n{time_md}"));
+        rep.add_table(format!("### Updates vs threads\n\n{upd_md}"));
+        rep.emit(&self.out_dir)?;
+        Ok(rep)
+    }
+
+    /// §4 / Lemma 2 / Claim 4: relaxation overhead on trees — good case
+    /// (uniform expansion), bad cases (path, adversarial tree).
+    pub fn lemma2(&self) -> Result<Report> {
+        let mut rep = Report::new(
+            "lemma2",
+            "Relaxation overhead on trees: good vs bad instances (§4, Appendix A)",
+        );
+        self.standard_notes(&mut rep);
+        let n = scaled(100_000, self.scale).max(1_000);
+        let specs = vec![
+            ModelSpec::UniformTree { n, arity: 2 },
+            ModelSpec::Tree { n },
+            ModelSpec::Path { n: (n / 10).max(100) },
+            ModelSpec::AdversarialTree { n },
+        ];
+        let mut md = String::from(
+            "| instance | p | algorithm | useful | total updates | waste (%) |\n|---|---|---|---|---|---|\n",
+        );
+        for spec in &specs {
+            let mrf = builders::build(spec, self.seed);
+            for &p in &self.threads {
+                for alg in [AlgorithmSpec::RelaxedResidual, AlgorithmSpec::RelaxedOptimalTree] {
+                    // Optimal-tree needs a tree; all these are trees.
+                    let row = self.run_cell(&mrf, spec, alg.clone(), p)?;
+                    let waste = 100.0 * (row.updates.saturating_sub(row.useful_updates)) as f64
+                        / row.updates.max(1) as f64;
+                    md.push_str(&format!(
+                        "| {} | {p} | {} | {} | {} | {:.2}% |\n",
+                        spec.name(),
+                        alg.name(),
+                        row.useful_updates,
+                        row.updates,
+                        waste,
+                    ));
+                    rep.push(row);
+                }
+            }
+        }
+        rep.add_table(format!(
+            "### Useful vs wasted updates under relaxation (Lemma 2 / Claim 4)\n\n{md}"
+        ));
+        rep.emit(&self.out_dir)?;
+        Ok(rep)
+    }
+
+    /// Run everything.
+    pub fn all(&self) -> Result<()> {
+        self.tables_moderate()?;
+        self.table3()?;
+        self.table4()?;
+        self.table7()?;
+        self.fig2()?;
+        for which in ["tree", "ising", "potts", "ldpc"] {
+            self.fig_scaling(which)?;
+        }
+        self.lemma2()?;
+        Ok(())
+    }
+
+    fn standard_notes(&self, rep: &mut Report) {
+        rep.note(format!(
+            "scale = {} (1.0 = the paper's 'small' sizes: tree 10⁶, grids 300², LDPC 30k)",
+            self.scale
+        ));
+        rep.note(format!("thread sweep = {:?}, max = {}", self.threads, self.max_threads));
+        rep.note(
+            "testbed: single-core container — wall-clock speedups are NOT comparable to \
+             the paper's 72-core Xeon; update counts and relative algorithm behavior are. \
+             See EXPERIMENTS.md.",
+        );
+        rep.note(format!("seed = {}, per-cell time limit = {} s", self.seed, self.time_limit));
+    }
+}
+
+/// Scale a node count linearly.
+fn scaled(n: usize, scale: f64) -> usize {
+    ((n as f64) * scale).round() as usize
+}
+
+/// Scale a grid side so the *area* scales linearly.
+fn side(n: usize, scale: f64) -> usize {
+    ((n as f64) * scale.sqrt()).round() as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Harness {
+        Harness {
+            scale: 0.0004, // tree 400, grid 6², ldpc 24
+            threads: vec![1, 2],
+            max_threads: 2,
+            out_dir: PathBuf::from("/tmp/rbp_harness_test"),
+            seed: 7,
+            time_limit: 60.0,
+            use_pjrt: false,
+        }
+    }
+
+    #[test]
+    fn scaling_helpers() {
+        assert_eq!(scaled(1000, 0.1), 100);
+        assert_eq!(side(300, 1.0), 300);
+        assert_eq!(side(300, 0.25), 150);
+    }
+
+    #[test]
+    fn models_respect_scale() {
+        let h = tiny();
+        let m = h.models();
+        assert_eq!(m.len(), 4);
+        if let ModelSpec::Tree { n } = m[0] {
+            assert_eq!(n, 400);
+        } else {
+            panic!();
+        }
+    }
+
+    #[test]
+    fn fig2_threads_monotone() {
+        let mut h = tiny();
+        h.max_threads = 8;
+        let t = h.fig2_threads();
+        assert!(t.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(*t.last().unwrap(), 8);
+    }
+
+    #[test]
+    fn run_cell_tiny_tree() {
+        let h = tiny();
+        let spec = ModelSpec::Tree { n: 63 };
+        let mrf = builders::build(&spec, h.seed);
+        let row = h
+            .run_cell(&mrf, &spec, AlgorithmSpec::RelaxedResidual, 2)
+            .unwrap();
+        assert!(row.converged);
+        assert!(row.updates >= 62);
+    }
+
+    #[test]
+    fn table3_tiny_end_to_end() {
+        let h = tiny();
+        let rep = h.table3().unwrap();
+        assert!(rep.rows.len() >= 4 + 2 * 4);
+        assert!(rep.to_markdown().contains("relaxed 2"));
+        std::fs::remove_dir_all("/tmp/rbp_harness_test").ok();
+    }
+}

@@ -1,0 +1,201 @@
+//! Result tables: collection, markdown/CSV rendering, and file output.
+
+use crate::configio::Json;
+use crate::util::fmt_duration;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// One measured cell of an experiment.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub model: String,
+    pub algorithm: String,
+    pub threads: usize,
+    pub wall_secs: f64,
+    pub updates: u64,
+    pub useful_updates: u64,
+    pub wasted_pops: u64,
+    pub stale_pops: u64,
+    pub converged: bool,
+    pub seed: u64,
+}
+
+impl Row {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("algorithm", Json::Str(self.algorithm.clone())),
+            ("threads", Json::Num(self.threads as f64)),
+            ("wall_secs", Json::Num(self.wall_secs)),
+            ("updates", Json::Num(self.updates as f64)),
+            ("useful_updates", Json::Num(self.useful_updates as f64)),
+            ("wasted_pops", Json::Num(self.wasted_pops as f64)),
+            ("stale_pops", Json::Num(self.stale_pops as f64)),
+            ("converged", Json::Bool(self.converged)),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+}
+
+/// An experiment's collected rows plus free-form header notes.
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    pub notes: Vec<String>,
+    pub rows: Vec<Row>,
+    /// Pre-rendered markdown tables (experiment-specific pivots).
+    pub tables: Vec<String>,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str) -> Self {
+        Report {
+            id: id.to_string(),
+            title: title.to_string(),
+            notes: Vec::new(),
+            rows: Vec::new(),
+            tables: Vec::new(),
+        }
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    pub fn push(&mut self, row: Row) {
+        self.rows.push(row);
+    }
+
+    pub fn add_table(&mut self, md: String) {
+        self.tables.push(md);
+    }
+
+    /// Raw per-row markdown (appendix of each report).
+    pub fn raw_table(&self) -> String {
+        let mut s = String::from(
+            "| model | algorithm | p | time | updates | useful | wasted pops | converged |\n\
+             |---|---|---|---|---|---|---|---|\n",
+        );
+        for r in &self.rows {
+            s.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {} | {} | {} |\n",
+                r.model,
+                r.algorithm,
+                r.threads,
+                fmt_duration(r.wall_secs),
+                r.updates,
+                r.useful_updates,
+                r.wasted_pops,
+                if r.converged { "yes" } else { "NO" },
+            ));
+        }
+        s
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!("## {} — {}\n\n", self.id, self.title);
+        for n in &self.notes {
+            s.push_str(&format!("- {n}\n"));
+        }
+        s.push('\n');
+        for t in &self.tables {
+            s.push_str(t);
+            s.push('\n');
+        }
+        s.push_str("### Raw measurements\n\n");
+        s.push_str(&self.raw_table());
+        s
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "model,algorithm,threads,wall_secs,updates,useful_updates,wasted_pops,stale_pops,converged,seed\n",
+        );
+        for r in &self.rows {
+            s.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{}\n",
+                r.model,
+                r.algorithm,
+                r.threads,
+                r.wall_secs,
+                r.updates,
+                r.useful_updates,
+                r.wasted_pops,
+                r.stale_pops,
+                r.converged,
+                r.seed
+            ));
+        }
+        s
+    }
+
+    /// Write `<dir>/<id>.md` and `<dir>/<id>.csv`; print markdown.
+    pub fn emit(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir).with_context(|| format!("mkdir {}", dir.display()))?;
+        std::fs::write(dir.join(format!("{}.md", self.id)), self.to_markdown())?;
+        std::fs::write(dir.join(format!("{}.csv", self.id)), self.to_csv())?;
+        println!("{}", self.to_markdown());
+        Ok(())
+    }
+}
+
+/// Ratio formatted like the paper's tables ("2.54x", "—" for DNF).
+pub fn ratio_cell(ok: bool, ratio: f64) -> String {
+    if ok && ratio.is_finite() {
+        format!("{ratio:.3}x")
+    } else {
+        "—".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row() -> Row {
+        Row {
+            model: "ising".into(),
+            algorithm: "relaxed_residual".into(),
+            threads: 4,
+            wall_secs: 1.25,
+            updates: 1000,
+            useful_updates: 900,
+            wasted_pops: 100,
+            stale_pops: 5,
+            converged: true,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn markdown_and_csv_render() {
+        let mut rep = Report::new("table1", "Speedups");
+        rep.note("testbed: 1 core");
+        rep.push(row());
+        rep.add_table("| a |\n|---|\n| b |\n".into());
+        let md = rep.to_markdown();
+        assert!(md.contains("## table1"));
+        assert!(md.contains("relaxed_residual"));
+        assert!(md.contains("testbed"));
+        let csv = rep.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn ratio_formatting() {
+        assert_eq!(ratio_cell(true, 2.538), "2.538x");
+        assert_eq!(ratio_cell(false, 2.5), "—");
+        assert_eq!(ratio_cell(true, f64::INFINITY), "—");
+    }
+
+    #[test]
+    fn emit_writes_files() {
+        let mut rep = Report::new("test_emit", "t");
+        rep.push(row());
+        let dir = std::path::PathBuf::from("/tmp/rbp_report_test");
+        rep.emit(&dir).unwrap();
+        assert!(dir.join("test_emit.md").exists());
+        assert!(dir.join("test_emit.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

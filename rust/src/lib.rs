@@ -1,0 +1,29 @@
+//! # relaxed-bp
+//!
+//! A complete reproduction of *Relaxed Scheduling for Scalable Belief
+//! Propagation* (Aksenov, Alistarh, Korhonen, 2020) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! - The **coordinator** (this crate) implements the paper's contribution:
+//!   priority-based BP schedules parallelized through a relaxed Multiqueue
+//!   scheduler, alongside every baseline the paper evaluates.
+//! - **Build-time Python** (`python/compile/`) lowers the dense message
+//!   update kernels (Pallas) and synchronous-sweep compute graphs (JAX) to
+//!   HLO text, which the [`runtime`] module loads and executes through the
+//!   PJRT CPU client — Python is never on the inference path.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod benchlib;
+pub mod bp;
+pub mod cli;
+pub mod configio;
+pub mod coordinator;
+pub mod engines;
+pub mod harness;
+pub mod model;
+pub mod run;
+pub mod runtime;
+pub mod sched;
+pub mod util;

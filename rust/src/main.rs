@@ -1,0 +1,211 @@
+//! `relaxed-bp` — command-line launcher for the relaxed-scheduling BP
+//! framework.
+//!
+//! ```text
+//! relaxed-bp run --model ising:300 --algorithm rr --threads 8 [--epsilon 1e-5]
+//!                [--seed 42] [--config run.json] [--use-pjrt] [--out report.json]
+//! relaxed-bp experiment <table1|table3|table4|table7|fig2|fig4|fig5|fig6|fig7|lemma2|all>
+//!                [--scale 0.05] [--threads 1,2,4,8] [--max-threads 8] [--out-dir results]
+//! relaxed-bp generate --model ldpc:30000 --out model.rbpm [--seed 42]
+//! relaxed-bp list-algorithms
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+use relaxed_bp::cli::Args;
+use relaxed_bp::configio::{AlgorithmSpec, ModelSpec, RunConfig};
+use relaxed_bp::harness::Harness;
+use relaxed_bp::model::{builders, io as model_io};
+use relaxed_bp::run::run_config;
+
+const SWITCHES: &[&str] = &["use-pjrt", "verbose", "marginals"];
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env(SWITCHES)?;
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("list-algorithms") => {
+            for a in [
+                "residual (sequential baseline)",
+                "synch",
+                "coarse_grained | cg",
+                "relaxed_residual | rr",
+                "weight_decay | wd",
+                "priority",
+                "splash:H | s:H",
+                "smart_splash:H | ss:H",
+                "relaxed_smart_splash:H | rss:H",
+                "random_splash:H | rs:H",
+                "bucket",
+                "random_synch:lowP",
+                "relaxed_residual_batched:B | rrb:B",
+                "optimal_tree / relaxed_optimal_tree (tree models only)",
+            ] {
+                println!("  {a}");
+            }
+            Ok(())
+        }
+        _ => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let mut cfg = if let Some(path) = args.opt("config") {
+        RunConfig::load(path)?
+    } else {
+        let model = ModelSpec::parse_cli(
+            args.opt("model").ok_or_else(|| anyhow!("--model required (e.g. ising:300)"))?,
+        )?;
+        let alg = AlgorithmSpec::parse_cli(args.opt("algorithm").unwrap_or("rr"))?;
+        RunConfig::new(model, alg)
+    };
+    if let Some(t) = args.opt_parse::<usize>("threads")? {
+        cfg.threads = t;
+    }
+    if let Some(e) = args.opt_parse::<f64>("epsilon")? {
+        cfg.epsilon = e;
+    }
+    if let Some(s) = args.opt_parse::<u64>("seed")? {
+        cfg.seed = s;
+    }
+    if let Some(l) = args.opt_parse::<f64>("time-limit")? {
+        cfg.time_limit_secs = l;
+    }
+    if let Some(m) = args.opt_parse::<u64>("max-updates")? {
+        cfg.max_updates = m;
+    }
+    if args.has_switch("use-pjrt") {
+        cfg.use_pjrt = true;
+    }
+
+    let report = run_config(&cfg)?;
+    let json = report.to_json();
+    println!("{}", json.to_string_pretty());
+    if args.has_switch("marginals") {
+        for (i, m) in report.marginals().iter().enumerate().take(20) {
+            println!("marginal[{i}] = {m:?}");
+        }
+    }
+    if let Some(out) = args.opt("out") {
+        std::fs::write(out, json.to_string_pretty())?;
+        eprintln!("wrote {out}");
+    }
+    if !report.stats.converged {
+        bail!("run did not converge within budget");
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow!("experiment name required; see --help"))?;
+    let mut h = Harness::default();
+    if let Some(s) = args.opt_parse::<f64>("scale")? {
+        h.scale = s;
+    }
+    if let Some(list) = args.opt("threads") {
+        h.threads = list
+            .split(',')
+            .map(|p| p.parse::<usize>())
+            .collect::<std::result::Result<_, _>>()
+            .map_err(|e| anyhow!("bad --threads: {e}"))?;
+    }
+    if let Some(m) = args.opt_parse::<usize>("max-threads")? {
+        h.max_threads = m;
+    }
+    if let Some(d) = args.opt("out-dir") {
+        h.out_dir = d.into();
+    }
+    if let Some(s) = args.opt_parse::<u64>("seed")? {
+        h.seed = s;
+    }
+    if let Some(t) = args.opt_parse::<f64>("time-limit")? {
+        h.time_limit = t;
+    }
+    if args.has_switch("use-pjrt") {
+        h.use_pjrt = true;
+    }
+
+    match which {
+        "table1" | "table2" | "table5" | "table6" | "moderate" => {
+            h.tables_moderate()?;
+        }
+        "table3" => {
+            h.table3()?;
+        }
+        "table4" => {
+            h.table4()?;
+        }
+        "table7" => {
+            h.table7()?;
+        }
+        "fig2" => {
+            h.fig2()?;
+        }
+        "fig4" => {
+            h.fig_scaling("tree")?;
+        }
+        "fig5" => {
+            h.fig_scaling("ising")?;
+        }
+        "fig6" => {
+            h.fig_scaling("potts")?;
+        }
+        "fig7" => {
+            h.fig_scaling("ldpc")?;
+        }
+        "lemma2" => {
+            h.lemma2()?;
+        }
+        "all" => h.all()?,
+        other => bail!("unknown experiment '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let model = ModelSpec::parse_cli(
+        args.opt("model").ok_or_else(|| anyhow!("--model required"))?,
+    )?;
+    let seed = args.opt_or("seed", 42u64)?;
+    let out = args.opt("out").ok_or_else(|| anyhow!("--out required"))?;
+    let mrf = builders::build(&model, seed);
+    model_io::save(&mrf, out)?;
+    println!(
+        "wrote {out}: {} nodes, {} messages, ~{} MiB",
+        mrf.num_nodes(),
+        mrf.num_messages(),
+        mrf.approx_bytes() / (1 << 20)
+    );
+    Ok(())
+}
+
+const HELP: &str = "\
+relaxed-bp — Relaxed Scheduling for Scalable Belief Propagation (reproduction)
+
+USAGE:
+  relaxed-bp run --model <kind:size> --algorithm <alg> [--threads N]
+                 [--epsilon E] [--seed S] [--time-limit SECS] [--use-pjrt]
+                 [--config cfg.json] [--out report.json] [--marginals]
+  relaxed-bp experiment <id> [--scale F] [--threads 1,2,4,8]
+                 [--max-threads N] [--out-dir DIR] [--seed S] [--use-pjrt]
+      ids: table1 table3 table4 table7 fig2 fig4 fig5 fig6 fig7 lemma2 all
+  relaxed-bp generate --model <kind:size> --out model.rbpm [--seed S]
+  relaxed-bp list-algorithms
+
+MODELS: tree:N ising:N potts:N ldpc:N[:flip] path:N adversarial_tree:N
+        uniform_tree:N[:arity]";

@@ -1,0 +1,215 @@
+//! Factor storage: node potentials and a deduplicated pool of edge-factor
+//! matrices.
+//!
+//! Node factors `ψ_i : D_i → ℝ⁺` are stored flat with per-node offsets
+//! (domains vary: 2 for binary variables, 64 for LDPC constraint nodes).
+//!
+//! Edge factors `ψ_ij : D_i × D_j → ℝ⁺` are stored once per undirected edge
+//! in a shared pool, row-major in the `(src, dst)` orientation of the
+//! *even* directed edge `2k`; the odd edge `2k+1` reads the same matrix
+//! transposed. Models with repeated structure (LDPC's six bit-position
+//! indicators, the tree's equality factor) register a matrix once and share
+//! it across millions of edges.
+
+/// Reference to an edge-factor matrix: pool offset plus a transpose flag
+/// packed into one u32 (high bit = transposed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FactorRef(pub u32);
+
+const TRANSPOSE_BIT: u32 = 1 << 31;
+
+impl FactorRef {
+    pub fn new(pool_index: u32, transposed: bool) -> Self {
+        debug_assert!(pool_index < TRANSPOSE_BIT);
+        FactorRef(pool_index | if transposed { TRANSPOSE_BIT } else { 0 })
+    }
+
+    #[inline]
+    pub fn pool_index(self) -> usize {
+        (self.0 & !TRANSPOSE_BIT) as usize
+    }
+
+    #[inline]
+    pub fn transposed(self) -> bool {
+        self.0 & TRANSPOSE_BIT != 0
+    }
+}
+
+/// Deduplicated pool of edge-factor matrices.
+#[derive(Debug, Clone, Default)]
+pub struct FactorPool {
+    /// Matrix data, concatenated row-major.
+    data: Vec<f64>,
+    /// Per-matrix (offset, rows, cols).
+    entries: Vec<(u32, u16, u16)>,
+}
+
+impl FactorPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a `rows × cols` row-major matrix; returns its pool index.
+    pub fn add(&mut self, rows: usize, cols: usize, values: &[f64]) -> u32 {
+        assert_eq!(values.len(), rows * cols, "factor matrix shape mismatch");
+        assert!(values.iter().all(|v| *v >= 0.0 && v.is_finite()), "factors must be finite ≥ 0");
+        let off = self.data.len() as u32;
+        self.data.extend_from_slice(values);
+        let idx = self.entries.len() as u32;
+        self.entries.push((off, rows as u16, cols as u16));
+        idx
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Matrix shape `(rows, cols)` in storage orientation.
+    pub fn shape(&self, index: usize) -> (usize, usize) {
+        let (_, r, c) = self.entries[index];
+        (r as usize, c as usize)
+    }
+
+    /// Raw matrix slice in storage orientation.
+    #[inline]
+    pub fn matrix(&self, index: usize) -> &[f64] {
+        let (off, r, c) = self.entries[index];
+        &self.data[off as usize..off as usize + r as usize * c as usize]
+    }
+
+    /// Element access through a [`FactorRef`]: `get(fr, a, b)` returns
+    /// `ψ(x_src = a, x_dst = b)` for the directed edge holding `fr`.
+    #[inline]
+    pub fn get(&self, fr: FactorRef, a: usize, b: usize) -> f64 {
+        let (off, r, c) = self.entries[fr.pool_index()];
+        let (off, r, c) = (off as usize, r as usize, c as usize);
+        if fr.transposed() {
+            debug_assert!(b < r && a < c);
+            self.data[off + b * c + a]
+        } else {
+            debug_assert!(a < r && b < c);
+            self.data[off + a * c + b]
+        }
+    }
+
+    /// Shape as seen through the reference: `(|D_src|, |D_dst|)`.
+    pub fn shape_of(&self, fr: FactorRef) -> (usize, usize) {
+        let (r, c) = self.shape(fr.pool_index());
+        if fr.transposed() {
+            (c, r)
+        } else {
+            (r, c)
+        }
+    }
+
+    /// Total f64s stored (for memory accounting).
+    pub fn data_len(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Flat node-factor table with per-node offsets.
+#[derive(Debug, Clone, Default)]
+pub struct NodeFactors {
+    offsets: Vec<u32>,
+    data: Vec<f64>,
+}
+
+impl NodeFactors {
+    /// Build from per-node factor vectors; `domains[i]` must equal
+    /// `factors[i].len()`.
+    pub fn from_vecs(factors: &[Vec<f64>]) -> Self {
+        let mut offsets = Vec::with_capacity(factors.len() + 1);
+        let mut data = Vec::new();
+        offsets.push(0u32);
+        for f in factors {
+            assert!(!f.is_empty(), "empty node factor");
+            assert!(f.iter().all(|v| *v >= 0.0 && v.is_finite()));
+            data.extend_from_slice(f);
+            offsets.push(data.len() as u32);
+        }
+        Self { offsets, data }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    /// `ψ_i` as a slice of length `|D_i|`.
+    #[inline]
+    pub fn of(&self, i: usize) -> &[f64] {
+        &self.data[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+
+    pub fn domain(&self, i: usize) -> usize {
+        (self.offsets[i + 1] - self.offsets[i]) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factor_ref_packing() {
+        let fr = FactorRef::new(12345, true);
+        assert_eq!(fr.pool_index(), 12345);
+        assert!(fr.transposed());
+        let fr = FactorRef::new(0, false);
+        assert_eq!(fr.pool_index(), 0);
+        assert!(!fr.transposed());
+    }
+
+    #[test]
+    fn pool_get_and_transpose() {
+        let mut p = FactorPool::new();
+        // 2x3 matrix [[1,2,3],[4,5,6]]
+        let idx = p.add(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let fwd = FactorRef::new(idx, false);
+        let rev = FactorRef::new(idx, true);
+        assert_eq!(p.get(fwd, 0, 2), 3.0);
+        assert_eq!(p.get(fwd, 1, 0), 4.0);
+        // transposed: get(rev, a, b) = M[b][a]
+        assert_eq!(p.get(rev, 2, 0), 3.0);
+        assert_eq!(p.get(rev, 0, 1), 4.0);
+        assert_eq!(p.shape_of(fwd), (2, 3));
+        assert_eq!(p.shape_of(rev), (3, 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn pool_rejects_bad_shape() {
+        FactorPool::new().add(2, 2, &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn pool_rejects_negative() {
+        FactorPool::new().add(1, 2, &[1.0, -0.5]);
+    }
+
+    #[test]
+    fn node_factors_variable_width() {
+        let nf = NodeFactors::from_vecs(&[vec![0.1, 0.9], vec![1.0; 64], vec![0.5, 0.5]]);
+        assert_eq!(nf.num_nodes(), 3);
+        assert_eq!(nf.domain(0), 2);
+        assert_eq!(nf.domain(1), 64);
+        assert_eq!(nf.of(0), &[0.1, 0.9]);
+        assert_eq!(nf.of(2), &[0.5, 0.5]);
+    }
+
+    #[test]
+    fn pool_multiple_matrices() {
+        let mut p = FactorPool::new();
+        let a = p.add(2, 2, &[1.0, 0.0, 0.0, 1.0]);
+        let b = p.add(2, 2, &[2.0, 3.0, 4.0, 5.0]);
+        assert_ne!(a, b);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.matrix(b as usize), &[2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(p.get(FactorRef::new(a, false), 1, 1), 1.0);
+    }
+}

@@ -1,0 +1,296 @@
+//! Undirected-graph construction and the CSR (compressed sparse row)
+//! adjacency used by the MRF.
+//!
+//! BP works with *directed* edges (one message per direction), so the
+//! builder assigns each undirected edge `{i, j}` two directed-edge ids and
+//! records, for every adjacency slot, which directed edge points *into* the
+//! node and which points *out*. All ids are `u32` (models up to ~4B edges,
+//! far beyond what fits in RAM anyway) to halve index memory.
+
+/// Builder: collect undirected edges, then freeze into a [`Csr`].
+#[derive(Debug, Default, Clone)]
+pub struct GraphBuilder {
+    n: usize,
+    edges: Vec<(u32, u32)>,
+}
+
+impl GraphBuilder {
+    pub fn new(n: usize) -> Self {
+        assert!(n <= u32::MAX as usize, "node count exceeds u32");
+        Self { n, edges: Vec::new() }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.n
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Add undirected edge `{a, b}`. Self-loops and duplicate edges are
+    /// rejected at freeze time (BP's update rule assumes simple graphs).
+    pub fn add_edge(&mut self, a: usize, b: usize) {
+        debug_assert!(a < self.n && b < self.n, "edge ({a},{b}) out of range");
+        self.edges.push((a as u32, b as u32));
+    }
+
+    /// Freeze into CSR form. Panics on self-loops or duplicate edges.
+    pub fn build(self) -> Csr {
+        let n = self.n;
+        let m = self.edges.len();
+        let mut degree = vec![0u32; n];
+        for &(a, b) in &self.edges {
+            assert_ne!(a, b, "self-loop at node {a}");
+            degree[a as usize] += 1;
+            degree[b as usize] += 1;
+        }
+        let mut offsets = vec![0u32; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + degree[i];
+        }
+        let total = offsets[n] as usize;
+        debug_assert_eq!(total, 2 * m);
+
+        // Directed edge ids: undirected edge k gets ids 2k (a→b) and 2k+1 (b→a).
+        let mut adj_node = vec![0u32; total];
+        let mut adj_out = vec![0u32; total]; // directed edge leaving the row node
+        let mut adj_in = vec![0u32; total]; // directed edge entering the row node
+        let mut cursor: Vec<u32> = offsets[..n].to_vec();
+        for (k, &(a, b)) in self.edges.iter().enumerate() {
+            let out_ab = (2 * k) as u32;
+            let out_ba = (2 * k + 1) as u32;
+            let ca = cursor[a as usize] as usize;
+            adj_node[ca] = b;
+            adj_out[ca] = out_ab;
+            adj_in[ca] = out_ba;
+            cursor[a as usize] += 1;
+            let cb = cursor[b as usize] as usize;
+            adj_node[cb] = a;
+            adj_out[cb] = out_ba;
+            adj_in[cb] = out_ab;
+            cursor[b as usize] += 1;
+        }
+
+        // Per-directed-edge endpoints.
+        let mut edge_src = vec![0u32; 2 * m];
+        let mut edge_dst = vec![0u32; 2 * m];
+        for (k, &(a, b)) in self.edges.iter().enumerate() {
+            edge_src[2 * k] = a;
+            edge_dst[2 * k] = b;
+            edge_src[2 * k + 1] = b;
+            edge_dst[2 * k + 1] = a;
+        }
+
+        let csr = Csr { offsets, adj_node, adj_out, adj_in, edge_src, edge_dst };
+        csr.assert_simple();
+        csr
+    }
+}
+
+/// Frozen adjacency structure.
+///
+/// Directed edge ids: undirected edge `k` yields `2k` and `2k+1`, so the
+/// reverse of directed edge `e` is always `e ^ 1` — used heavily in the
+/// update rule (exclude the reverse message) with no extra lookup table.
+#[derive(Debug, Clone)]
+pub struct Csr {
+    /// `offsets[i]..offsets[i+1]` indexes node i's adjacency slots.
+    pub offsets: Vec<u32>,
+    /// Neighbor node id per slot.
+    pub adj_node: Vec<u32>,
+    /// Directed edge id leaving the row node, per slot.
+    pub adj_out: Vec<u32>,
+    /// Directed edge id entering the row node, per slot.
+    pub adj_in: Vec<u32>,
+    /// Source node per directed edge.
+    pub edge_src: Vec<u32>,
+    /// Destination node per directed edge.
+    pub edge_dst: Vec<u32>,
+}
+
+impl Csr {
+    pub fn num_nodes(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of *directed* edges (= 2 × undirected).
+    pub fn num_directed_edges(&self) -> usize {
+        self.edge_src.len()
+    }
+
+    pub fn degree(&self, i: usize) -> usize {
+        (self.offsets[i + 1] - self.offsets[i]) as usize
+    }
+
+    /// Adjacency slot range of node `i`.
+    #[inline]
+    pub fn slots(&self, i: usize) -> std::ops::Range<usize> {
+        self.offsets[i] as usize..self.offsets[i + 1] as usize
+    }
+
+    /// Neighbors of node `i`.
+    pub fn neighbors(&self, i: usize) -> &[u32] {
+        &self.adj_node[self.slots(i)]
+    }
+
+    /// Directed edges leaving `i` (one per neighbor, aligned with
+    /// [`Csr::neighbors`]).
+    pub fn out_edges(&self, i: usize) -> &[u32] {
+        &self.adj_out[self.slots(i)]
+    }
+
+    /// Directed edges entering `i` (aligned with [`Csr::neighbors`]).
+    pub fn in_edges(&self, i: usize) -> &[u32] {
+        &self.adj_in[self.slots(i)]
+    }
+
+    /// Reverse of a directed edge (constant time by construction).
+    #[inline]
+    pub fn reverse(&self, e: u32) -> u32 {
+        e ^ 1
+    }
+
+    /// BFS distances from `root` (u32::MAX = unreachable).
+    pub fn bfs_distances(&self, root: usize) -> Vec<u32> {
+        let mut dist = vec![u32::MAX; self.num_nodes()];
+        let mut queue = std::collections::VecDeque::new();
+        dist[root] = 0;
+        queue.push_back(root as u32);
+        while let Some(u) = queue.pop_front() {
+            let d = dist[u as usize];
+            for &v in self.neighbors(u as usize) {
+                if dist[v as usize] == u32::MAX {
+                    dist[v as usize] = d + 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+        dist
+    }
+
+    /// Check the graph is simple (no duplicate edges / self-loops).
+    fn assert_simple(&self) {
+        for i in 0..self.num_nodes() {
+            let nbrs = self.neighbors(i);
+            let mut sorted: Vec<u32> = nbrs.to_vec();
+            sorted.sort_unstable();
+            for w in sorted.windows(2) {
+                assert_ne!(w[0], w[1], "duplicate edge at node {i}");
+            }
+            assert!(!nbrs.contains(&(i as u32)), "self-loop at node {i}");
+        }
+    }
+
+    /// Sanity-check internal consistency (used by tests and debug builds).
+    pub fn validate(&self) {
+        let n = self.num_nodes();
+        let me = self.num_directed_edges();
+        assert_eq!(self.offsets[n] as usize, me);
+        for i in 0..n {
+            for s in self.slots(i) {
+                let j = self.adj_node[s] as usize;
+                let out = self.adj_out[s];
+                let inn = self.adj_in[s];
+                assert_eq!(self.edge_src[out as usize] as usize, i);
+                assert_eq!(self.edge_dst[out as usize] as usize, j);
+                assert_eq!(self.edge_src[inn as usize] as usize, j);
+                assert_eq!(self.edge_dst[inn as usize] as usize, i);
+                assert_eq!(self.reverse(out), inn);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> Csr {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(0, 2);
+        b.build()
+    }
+
+    #[test]
+    fn csr_shape() {
+        let g = triangle();
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(g.num_directed_edges(), 6);
+        for i in 0..3 {
+            assert_eq!(g.degree(i), 2);
+        }
+        g.validate();
+    }
+
+    #[test]
+    fn reverse_is_involution() {
+        let g = triangle();
+        for e in 0..g.num_directed_edges() as u32 {
+            assert_eq!(g.reverse(g.reverse(e)), e);
+            assert_ne!(g.reverse(e), e);
+            assert_eq!(g.edge_src[e as usize], g.edge_dst[g.reverse(e) as usize]);
+        }
+    }
+
+    #[test]
+    fn neighbors_and_edges_aligned() {
+        let g = triangle();
+        for i in 0..3 {
+            let nbrs = g.neighbors(i);
+            let outs = g.out_edges(i);
+            let ins = g.in_edges(i);
+            assert_eq!(nbrs.len(), outs.len());
+            for k in 0..nbrs.len() {
+                assert_eq!(g.edge_dst[outs[k] as usize], nbrs[k]);
+                assert_eq!(g.edge_src[ins[k] as usize], nbrs[k]);
+                assert_eq!(g.edge_dst[ins[k] as usize] as usize, i);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loop")]
+    fn rejects_self_loop() {
+        let mut b = GraphBuilder::new(2);
+        b.add_edge(1, 1);
+        b.build();
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate edge")]
+    fn rejects_duplicate() {
+        let mut b = GraphBuilder::new(2);
+        b.add_edge(0, 1);
+        b.add_edge(1, 0);
+        b.build();
+    }
+
+    #[test]
+    fn bfs_on_path() {
+        let mut b = GraphBuilder::new(5);
+        for i in 0..4 {
+            b.add_edge(i, i + 1);
+        }
+        let g = b.build();
+        let d = g.bfs_distances(0);
+        assert_eq!(d, vec![0, 1, 2, 3, 4]);
+        let d2 = g.bfs_distances(2);
+        assert_eq!(d2, vec![2, 1, 0, 1, 2]);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = GraphBuilder::new(4).build();
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.num_directed_edges(), 0);
+        for i in 0..4 {
+            assert_eq!(g.degree(i), 0);
+        }
+        let d = g.bfs_distances(1);
+        assert_eq!(d[0], u32::MAX);
+        assert_eq!(d[1], 0);
+    }
+}

@@ -1,0 +1,276 @@
+//! Binary MRF serialization.
+//!
+//! Lets `relaxed-bp generate` write an instance once and have every
+//! algorithm/thread-count sweep load the identical model (important for the
+//! paper's tables, where all algorithms must see the same random couplings).
+//!
+//! Format (little-endian): magic `RBPM`, version, name, node count, domains,
+//! node factors, undirected edge list with pool indices, factor pool.
+
+use super::{FactorPool, GraphBuilder, Mrf, NodeFactors};
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+
+const MAGIC: &[u8; 4] = b"RBPM";
+const VERSION: u32 = 1;
+
+struct Writer<W: Write>(W);
+
+impl<W: Write> Writer<W> {
+    fn u32(&mut self, v: u32) -> Result<()> {
+        self.0.write_all(&v.to_le_bytes()).map_err(Into::into)
+    }
+    fn u64(&mut self, v: u64) -> Result<()> {
+        self.0.write_all(&v.to_le_bytes()).map_err(Into::into)
+    }
+    fn f64(&mut self, v: f64) -> Result<()> {
+        self.0.write_all(&v.to_le_bytes()).map_err(Into::into)
+    }
+    fn bytes(&mut self, b: &[u8]) -> Result<()> {
+        self.u64(b.len() as u64)?;
+        self.0.write_all(b).map_err(Into::into)
+    }
+    fn f64s(&mut self, xs: &[f64]) -> Result<()> {
+        self.u64(xs.len() as u64)?;
+        for &x in xs {
+            self.f64(x)?;
+        }
+        Ok(())
+    }
+    fn u32s(&mut self, xs: &[u32]) -> Result<()> {
+        self.u64(xs.len() as u64)?;
+        for &x in xs {
+            self.u32(x)?;
+        }
+        Ok(())
+    }
+}
+
+struct Reader<R: Read>(R);
+
+impl<R: Read> Reader<R> {
+    fn u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.0.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.0.read_exact(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        let mut b = [0u8; 8];
+        self.0.read_exact(&mut b)?;
+        Ok(f64::from_le_bytes(b))
+    }
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u64()? as usize;
+        if n > 1 << 34 {
+            bail!("corrupt file: oversized field");
+        }
+        let mut b = vec![0u8; n];
+        self.0.read_exact(&mut b)?;
+        Ok(b)
+    }
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.u64()? as usize;
+        if n > 1 << 31 {
+            bail!("corrupt file: oversized array");
+        }
+        (0..n).map(|_| self.f64()).collect()
+    }
+    fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.u64()? as usize;
+        if n > 1 << 31 {
+            bail!("corrupt file: oversized array");
+        }
+        (0..n).map(|_| self.u32()).collect()
+    }
+}
+
+/// Serialize an MRF to a writer.
+pub fn write_mrf<W: Write>(mrf: &Mrf, w: W) -> Result<()> {
+    let mut w = Writer(BufWriter::new(w));
+    w.0.write_all(MAGIC)?;
+    w.u32(VERSION)?;
+    w.bytes(mrf.name.as_bytes())?;
+
+    let n = mrf.num_nodes();
+    w.u64(n as u64)?;
+    w.u32s(&mrf.domain)?;
+
+    // Node factors, flat.
+    for i in 0..n {
+        w.f64s(mrf.node_factors.of(i))?;
+    }
+
+    // Undirected edges: (src, dst, pool index) from the even directed edges.
+    let m = mrf.num_messages() / 2;
+    w.u64(m as u64)?;
+    for k in 0..m {
+        let e = 2 * k;
+        w.u32(mrf.graph.edge_src[e])?;
+        w.u32(mrf.graph.edge_dst[e])?;
+        w.u32(mrf.edge_factor[e].pool_index() as u32)?;
+    }
+
+    // Pool.
+    w.u64(mrf.pool.len() as u64)?;
+    for idx in 0..mrf.pool.len() {
+        let (r, c) = mrf.pool.shape(idx);
+        w.u32(r as u32)?;
+        w.u32(c as u32)?;
+        w.f64s(mrf.pool.matrix(idx))?;
+    }
+    w.0.flush()?;
+    Ok(())
+}
+
+/// Deserialize an MRF from a reader.
+pub fn read_mrf<R: Read>(r: R) -> Result<Mrf> {
+    let mut r = Reader(BufReader::new(r));
+    let mut magic = [0u8; 4];
+    r.0.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not an RBPM file");
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        bail!("unsupported RBPM version {version}");
+    }
+    let name = String::from_utf8(r.bytes()?).context("bad name")?;
+
+    let n = r.u64()? as usize;
+    let domain = r.u32s()?;
+    if domain.len() != n {
+        bail!("domain length mismatch");
+    }
+
+    let mut factors = Vec::with_capacity(n);
+    for i in 0..n {
+        let f = r.f64s()?;
+        if f.len() != domain[i] as usize {
+            bail!("node factor width mismatch at {i}");
+        }
+        factors.push(f);
+    }
+
+    let m = r.u64()? as usize;
+    let mut gb = GraphBuilder::new(n);
+    let mut edge_pool_index = Vec::with_capacity(m);
+    for _ in 0..m {
+        let a = r.u32()?;
+        let b = r.u32()?;
+        let p = r.u32()?;
+        gb.add_edge(a as usize, b as usize);
+        edge_pool_index.push(p);
+    }
+
+    let pool_len = r.u64()? as usize;
+    let mut pool = FactorPool::new();
+    for _ in 0..pool_len {
+        let rows = r.u32()? as usize;
+        let cols = r.u32()? as usize;
+        let data = r.f64s()?;
+        if data.len() != rows * cols {
+            bail!("pool matrix shape mismatch");
+        }
+        pool.add(rows, cols, &data);
+    }
+
+    Ok(Mrf::assemble(
+        &name,
+        gb.build(),
+        domain,
+        NodeFactors::from_vecs(&factors),
+        edge_pool_index,
+        pool,
+    ))
+}
+
+/// Save to a file path.
+pub fn save(mrf: &Mrf, path: &str) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("creating {path}"))?;
+    write_mrf(mrf, f)
+}
+
+/// Load from a file path.
+pub fn load(path: &str) -> Result<Mrf> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {path}"))?;
+    read_mrf(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builders;
+    use crate::configio::ModelSpec;
+
+    fn roundtrip(spec: &ModelSpec) {
+        let m = builders::build(spec, 5);
+        let mut buf = Vec::new();
+        write_mrf(&m, &mut buf).unwrap();
+        let back = read_mrf(&buf[..]).unwrap();
+        assert_eq!(back.name, m.name);
+        assert_eq!(back.num_nodes(), m.num_nodes());
+        assert_eq!(back.num_messages(), m.num_messages());
+        assert_eq!(back.domain, m.domain);
+        assert_eq!(back.graph.adj_node, m.graph.adj_node);
+        assert_eq!(back.msg_offset, m.msg_offset);
+        for i in 0..m.num_nodes() {
+            assert_eq!(back.node_factors.of(i), m.node_factors.of(i));
+        }
+        for e in 0..m.num_messages() {
+            let fr_a = m.edge_factor[e];
+            let fr_b = back.edge_factor[e];
+            assert_eq!(m.pool.shape_of(fr_a), back.pool.shape_of(fr_b));
+            let (dr, dc) = m.pool.shape_of(fr_a);
+            for a in 0..dr {
+                for b in 0..dc {
+                    assert_eq!(m.pool.get(fr_a, a, b), back.pool.get(fr_b, a, b));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_tree() {
+        roundtrip(&ModelSpec::Tree { n: 31 });
+    }
+
+    #[test]
+    fn roundtrip_ising() {
+        roundtrip(&ModelSpec::Ising { n: 5 });
+    }
+
+    #[test]
+    fn roundtrip_ldpc() {
+        roundtrip(&ModelSpec::Ldpc { n: 12, flip_prob: 0.07 });
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let res = read_mrf(&b"NOPE"[..]);
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let m = builders::build(&ModelSpec::Tree { n: 7 }, 1);
+        let mut buf = Vec::new();
+        write_mrf(&m, &mut buf).unwrap();
+        buf.truncate(buf.len() / 2);
+        assert!(read_mrf(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let m = builders::build(&ModelSpec::Potts { n: 3 }, 2);
+        let path = "/tmp/rbp_io_test.rbpm";
+        save(&m, path).unwrap();
+        let back = load(path).unwrap();
+        assert_eq!(back.num_messages(), m.num_messages());
+        std::fs::remove_file(path).ok();
+    }
+}

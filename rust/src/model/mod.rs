@@ -1,0 +1,233 @@
+//! Pairwise Markov random field representation.
+//!
+//! An [`Mrf`] bundles the graph topology ([`graph::Csr`]), variable domains,
+//! node potentials, and the edge-factor pool, plus the per-directed-edge
+//! message layout (offset + length) that the BP engines index into.
+//!
+//! Model generators for all of the paper's benchmark families live in
+//! [`builders`]; binary serialization in [`io`].
+
+pub mod builders;
+pub mod factors;
+pub mod graph;
+pub mod io;
+
+pub use factors::{FactorPool, FactorRef, NodeFactors};
+pub use graph::{Csr, GraphBuilder};
+
+/// Largest variable domain supported by the stack-buffer update kernels
+/// (LDPC constraint nodes need 2^6 = 64).
+pub const MAX_DOMAIN: usize = 64;
+
+/// A pairwise Markov random field, frozen for inference.
+#[derive(Debug, Clone)]
+pub struct Mrf {
+    /// Adjacency in CSR form; directed edge `e`'s reverse is `e ^ 1`.
+    pub graph: Csr,
+    /// `|D_i|` per node.
+    pub domain: Vec<u32>,
+    /// Node potentials `ψ_i`.
+    pub node_factors: NodeFactors,
+    /// Edge-factor matrix per directed edge, as a [`FactorRef`] into `pool`.
+    /// `edge_factor[e]` is oriented `(src(e), dst(e))`.
+    pub edge_factor: Vec<FactorRef>,
+    /// Shared matrix pool.
+    pub pool: FactorPool,
+    /// Message-vector offset per directed edge into the flat message array;
+    /// the message for edge `e` has length `domain[dst(e)]`.
+    pub msg_offset: Vec<u32>,
+    /// Total length of the flat message array.
+    pub total_msg_len: usize,
+    /// Human-readable model name (for reports).
+    pub name: String,
+}
+
+impl Mrf {
+    /// Assemble and validate an MRF from parts. `edge_pool_index[k]` gives
+    /// the pool matrix for undirected edge `k`, stored in the orientation of
+    /// directed edge `2k` (src = first endpoint passed to the builder).
+    pub fn assemble(
+        name: &str,
+        graph: Csr,
+        domain: Vec<u32>,
+        node_factors: NodeFactors,
+        edge_pool_index: Vec<u32>,
+        pool: FactorPool,
+    ) -> Mrf {
+        let n = graph.num_nodes();
+        let me = graph.num_directed_edges();
+        assert_eq!(domain.len(), n);
+        assert_eq!(node_factors.num_nodes(), n);
+        assert_eq!(edge_pool_index.len() * 2, me);
+        for i in 0..n {
+            assert_eq!(node_factors.domain(i), domain[i] as usize, "node {i} factor width");
+            assert!(
+                (domain[i] as usize) <= MAX_DOMAIN,
+                "domain of node {i} exceeds MAX_DOMAIN"
+            );
+        }
+
+        // Directed-edge factor refs: even edge = stored orientation,
+        // odd edge = transposed.
+        let mut edge_factor = Vec::with_capacity(me);
+        for k in 0..edge_pool_index.len() {
+            edge_factor.push(FactorRef::new(edge_pool_index[k], false));
+            edge_factor.push(FactorRef::new(edge_pool_index[k], true));
+        }
+
+        // Validate factor shapes against endpoint domains.
+        for e in 0..me {
+            let (ds, dd) = pool.shape_of(edge_factor[e]);
+            let src = graph.edge_src[e] as usize;
+            let dst = graph.edge_dst[e] as usize;
+            assert_eq!(ds, domain[src] as usize, "edge {e} src domain");
+            assert_eq!(dd, domain[dst] as usize, "edge {e} dst domain");
+        }
+
+        // Message layout: message for edge e has |D_dst| entries.
+        let mut msg_offset = Vec::with_capacity(me);
+        let mut off = 0u64;
+        for e in 0..me {
+            msg_offset.push(off as u32);
+            off += domain[graph.edge_dst[e] as usize] as u64;
+        }
+        assert!(off <= u32::MAX as u64, "message array exceeds u32 indexing");
+
+        Mrf {
+            graph,
+            domain,
+            node_factors,
+            edge_factor,
+            pool,
+            msg_offset,
+            total_msg_len: off as usize,
+            name: name.to_string(),
+        }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.graph.num_nodes()
+    }
+
+    /// Number of directed edges = number of BP messages.
+    pub fn num_messages(&self) -> usize {
+        self.graph.num_directed_edges()
+    }
+
+    /// Message length for directed edge `e` (= `|D_dst(e)|`).
+    #[inline]
+    pub fn msg_len(&self, e: u32) -> usize {
+        self.domain[self.graph.edge_dst[e as usize] as usize] as usize
+    }
+
+    /// Byte-range of edge `e`'s message in the flat array.
+    #[inline]
+    pub fn msg_range(&self, e: u32) -> std::ops::Range<usize> {
+        let off = self.msg_offset[e as usize] as usize;
+        off..off + self.msg_len(e)
+    }
+
+    /// True if every variable is binary (enables the specialized kernels and
+    /// the PJRT batched path).
+    pub fn all_binary(&self) -> bool {
+        self.domain.iter().all(|&d| d == 2)
+    }
+
+    /// Largest domain in the model.
+    pub fn max_domain(&self) -> usize {
+        self.domain.iter().copied().max().unwrap_or(0) as usize
+    }
+
+    /// Rough memory footprint of the model + one message array, in bytes
+    /// (for the harness's instance-size reporting).
+    pub fn approx_bytes(&self) -> usize {
+        self.total_msg_len * 8 * 2 // messages + lookahead
+            + self.pool.data_len() * 8
+            + self.graph.adj_node.len() * 12
+            + self.num_messages() * 12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-build a 2-node binary MRF with one edge.
+    fn tiny() -> Mrf {
+        let mut gb = GraphBuilder::new(2);
+        gb.add_edge(0, 1);
+        let g = gb.build();
+        let mut pool = FactorPool::new();
+        let f = pool.add(2, 2, &[0.9, 0.1, 0.2, 0.8]);
+        Mrf::assemble(
+            "tiny",
+            g,
+            vec![2, 2],
+            NodeFactors::from_vecs(&[vec![0.3, 0.7], vec![0.5, 0.5]]),
+            vec![f],
+            pool,
+        )
+    }
+
+    #[test]
+    fn layout() {
+        let m = tiny();
+        assert_eq!(m.num_nodes(), 2);
+        assert_eq!(m.num_messages(), 2);
+        assert_eq!(m.msg_len(0), 2);
+        assert_eq!(m.msg_len(1), 2);
+        assert_eq!(m.total_msg_len, 4);
+        assert_eq!(m.msg_range(0), 0..2);
+        assert_eq!(m.msg_range(1), 2..4);
+        assert!(m.all_binary());
+        assert_eq!(m.max_domain(), 2);
+    }
+
+    #[test]
+    fn directed_factor_orientation() {
+        let m = tiny();
+        // Edge 0 is 0→1 in stored orientation, edge 1 is transposed.
+        assert_eq!(m.pool.get(m.edge_factor[0], 0, 1), 0.1); // ψ(x0=0, x1=1)
+        assert_eq!(m.pool.get(m.edge_factor[1], 1, 0), 0.1); // ψ(x1=1, x0=0) transposed
+        assert_eq!(m.pool.get(m.edge_factor[0], 1, 0), 0.2);
+        assert_eq!(m.pool.get(m.edge_factor[1], 0, 1), 0.2);
+    }
+
+    #[test]
+    #[should_panic(expected = "factor width")]
+    fn rejects_mismatched_node_factor() {
+        let g = GraphBuilder::new(1).build();
+        Mrf::assemble(
+            "bad",
+            g,
+            vec![2],
+            NodeFactors::from_vecs(&[vec![1.0, 1.0, 1.0]]),
+            vec![],
+            FactorPool::new(),
+        );
+    }
+
+    #[test]
+    fn variable_width_messages() {
+        // variable (domain 2) — constraint (domain 4)
+        let mut gb = GraphBuilder::new(2);
+        gb.add_edge(0, 1);
+        let g = gb.build();
+        let mut pool = FactorPool::new();
+        // ψ(x, y): 2x4
+        let f = pool.add(2, 4, &[1.0, 0.0, 1.0, 0.0, 0.0, 1.0, 0.0, 1.0]);
+        let m = Mrf::assemble(
+            "vw",
+            g,
+            vec![2, 4],
+            NodeFactors::from_vecs(&[vec![0.5, 0.5], vec![1.0; 4]]),
+            vec![f],
+            pool,
+        );
+        assert_eq!(m.msg_len(0), 4); // 0→1 carries |D_1| = 4
+        assert_eq!(m.msg_len(1), 2); // 1→0 carries |D_0| = 2
+        assert_eq!(m.total_msg_len, 6);
+        assert!(!m.all_binary());
+        assert_eq!(m.max_domain(), 4);
+    }
+}

@@ -1,0 +1,97 @@
+//! High-level entry point: build the model, run the configured engine,
+//! and package the results.
+
+use crate::bp::{all_marginals, Messages};
+use crate::configio::{Json, RunConfig};
+use crate::engines::{build_engine, EngineStats};
+use crate::model::{builders, Mrf};
+use anyhow::Result;
+
+/// Everything a caller needs after one run.
+pub struct RunReport {
+    pub stats: EngineStats,
+    pub mrf: Mrf,
+    pub msgs: Messages,
+    pub config: RunConfig,
+}
+
+impl RunReport {
+    pub fn marginals(&self) -> Vec<Vec<f64>> {
+        all_marginals(&self.mrf, &self.msgs)
+    }
+
+    /// JSON summary (without the full marginal dump).
+    pub fn to_json(&self) -> Json {
+        let m = &self.stats.metrics.total;
+        Json::obj(vec![
+            ("config", self.config.to_json()),
+            ("converged", Json::Bool(self.stats.converged)),
+            ("wall_secs", Json::Num(self.stats.wall_secs)),
+            ("updates", Json::Num(m.updates as f64)),
+            ("useful_updates", Json::Num(m.useful_updates as f64)),
+            ("wasted_pops", Json::Num(m.wasted_pops as f64)),
+            ("stale_pops", Json::Num(m.stale_pops as f64)),
+            ("claim_failures", Json::Num(m.claim_failures as f64)),
+            ("rounds", Json::Num(m.rounds as f64)),
+            ("splashes", Json::Num(m.splashes as f64)),
+            (
+                "updates_per_sec",
+                Json::Num(if self.stats.wall_secs > 0.0 {
+                    m.updates as f64 / self.stats.wall_secs
+                } else {
+                    0.0
+                }),
+            ),
+            ("final_max_priority", Json::Num(self.stats.final_max_priority)),
+            (
+                "load_imbalance",
+                Json::Num(self.stats.metrics.load_imbalance()),
+            ),
+        ])
+    }
+}
+
+/// Build the model from `cfg`, run the configured engine on fresh uniform
+/// messages, and return the report.
+pub fn run_config(cfg: &RunConfig) -> Result<RunReport> {
+    let mrf = builders::build(&cfg.model, cfg.seed);
+    run_on_model(cfg, mrf)
+}
+
+/// Run on a pre-built model (lets sweeps reuse one instance across
+/// algorithms and thread counts, as the paper's tables require).
+pub fn run_on_model(cfg: &RunConfig, mrf: Mrf) -> Result<RunReport> {
+    let msgs = Messages::uniform(&mrf);
+    let engine = build_engine(&cfg.algorithm);
+    let stats = engine.run(&mrf, &msgs, cfg)?;
+    Ok(RunReport { stats, mrf, msgs, config: cfg.clone() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configio::{AlgorithmSpec, ModelSpec};
+
+    #[test]
+    fn run_config_end_to_end() {
+        let cfg = RunConfig::new(ModelSpec::Tree { n: 31 }, AlgorithmSpec::RelaxedResidual)
+            .with_threads(2);
+        let report = run_config(&cfg).unwrap();
+        assert!(report.stats.converged);
+        let marg = report.marginals();
+        assert_eq!(marg.len(), 31);
+        let j = report.to_json();
+        assert_eq!(j.get("converged").unwrap().as_bool(), Some(true));
+        assert!(j.get("updates").unwrap().as_f64().unwrap() >= 30.0);
+    }
+
+    #[test]
+    fn reuse_model_across_algorithms() {
+        let mrf = crate::model::builders::build(&ModelSpec::Ising { n: 5 }, 3);
+        for alg in [AlgorithmSpec::SequentialResidual, AlgorithmSpec::Synchronous] {
+            let cfg = RunConfig::new(ModelSpec::Ising { n: 5 }, alg).with_seed(3);
+            let r = run_on_model(&cfg, mrf.clone()).unwrap();
+            assert!(r.stats.converged);
+        }
+    }
+}

@@ -1,0 +1,221 @@
+//! PJRT runtime: loads AOT-compiled HLO artifacts (produced once, at build
+//! time, by `python/compile/aot.py`) and executes them on the XLA CPU
+//! client from the Rust hot path. Python is never involved at run time.
+//!
+//! Interchange format is **HLO text** (`artifacts/*.hlo.txt`): jax ≥ 0.5
+//! serializes `HloModuleProto`s with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects, while the text parser reassigns ids and
+//! round-trips cleanly (see `/opt/xla-example/README.md`).
+//!
+//! ## Threading model
+//!
+//! The `xla` crate's client/executable handles are `Rc`-based (neither
+//! `Send` nor `Sync`), so each [`Executable`] owns a dedicated **executor
+//! thread** holding the PJRT client and the compiled program; callers on
+//! any thread exchange plain `f64` tensors with it over channels. Calls
+//! are serialized per executable — our callers batch enough work per call
+//! that pipelining one executable across threads would not pay off.
+
+pub mod batch;
+pub mod grid;
+
+use anyhow::{anyhow, Result};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+/// Directory holding `*.hlo.txt` artifacts. Defaults to `artifacts/`
+/// relative to the working directory; override with `RBP_ARTIFACTS`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("RBP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// A dense input tensor (converted to f32 on the executor thread — the
+/// kernels are compiled for f32, ample for residual thresholds ≥ 1e-6).
+pub struct TensorIn {
+    pub data: Vec<f64>,
+    pub dims: Vec<i64>,
+}
+
+impl TensorIn {
+    pub fn new(data: Vec<f64>, dims: &[i64]) -> Self {
+        debug_assert_eq!(dims.iter().product::<i64>() as usize, data.len());
+        TensorIn { data, dims: dims.to_vec() }
+    }
+}
+
+enum Job {
+    /// Convert + cache literals that will be prepended to every subsequent
+    /// run's inputs (e.g. a grid's factor tensors: uploaded once, not per
+    /// round — a 6× round-time win, see EXPERIMENTS.md §Perf).
+    SetPrefix(Vec<TensorIn>, mpsc::Sender<Result<()>>),
+    Run(Vec<TensorIn>, mpsc::Sender<Result<Vec<Vec<f64>>>>),
+}
+
+/// A compiled artifact, ready to execute from any thread.
+pub struct Executable {
+    tx: Mutex<mpsc::Sender<Job>>,
+    pub path: PathBuf,
+}
+
+impl Executable {
+    /// Load and compile an HLO-text artifact on a fresh executor thread.
+    pub fn load(path: &Path) -> Result<Executable> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let p = path.to_path_buf();
+        std::thread::Builder::new()
+            .name("pjrt-exec".into())
+            .spawn(move || executor_thread(p, rx, ready_tx))
+            .map_err(|e| anyhow!("spawning executor: {e}"))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("executor thread died during setup"))??;
+        Ok(Executable { tx: Mutex::new(tx), path: path.to_path_buf() })
+    }
+
+    /// Load `<artifacts_dir>/<name>.hlo.txt`.
+    pub fn load_named(name: &str) -> Result<Executable> {
+        let path = artifacts_dir().join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            return Err(anyhow!(
+                "artifact {} not found — run `make artifacts`",
+                path.display()
+            ));
+        }
+        Self::load(&path)
+    }
+
+    /// Execute with dense inputs; returns the flattened tuple outputs as
+    /// f64 vectors. (aot.py lowers with `return_tuple=True`.) Any inputs
+    /// registered via [`Executable::set_prefix`] are prepended.
+    pub fn run(&self, inputs: Vec<TensorIn>) -> Result<Vec<Vec<f64>>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        {
+            let tx = self.tx.lock().unwrap();
+            tx.send(Job::Run(inputs, reply_tx))
+                .map_err(|_| anyhow!("executor thread gone"))?;
+        }
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("executor thread dropped the reply"))?
+    }
+
+    /// Upload constant leading inputs once; subsequent [`Executable::run`]
+    /// calls only carry the varying suffix.
+    pub fn set_prefix(&self, inputs: Vec<TensorIn>) -> Result<()> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        {
+            let tx = self.tx.lock().unwrap();
+            tx.send(Job::SetPrefix(inputs, reply_tx))
+                .map_err(|_| anyhow!("executor thread gone"))?;
+        }
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("executor thread dropped the reply"))?
+    }
+}
+
+fn to_literal(t: &TensorIn) -> Result<xla::Literal> {
+    let f32s: Vec<f32> = t.data.iter().map(|&x| x as f32).collect();
+    xla::Literal::vec1(&f32s)
+        .reshape(&t.dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Body of the executor thread: owns all `Rc`-based xla handles.
+fn executor_thread(path: PathBuf, rx: mpsc::Receiver<Job>, ready: mpsc::Sender<Result<()>>) {
+    let setup = (|| -> Result<(xla::PjRtClient, xla::PjRtLoadedExecutable)> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        Ok((client, exe))
+    })();
+
+    let (_client, exe) = match setup {
+        Ok(pair) => {
+            let _ = ready.send(Ok(()));
+            pair
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    // Serve jobs until the Executable is dropped (channel closes).
+    let mut prefix: Vec<xla::Literal> = Vec::new();
+    for job in rx {
+        match job {
+            Job::SetPrefix(inputs, reply) => {
+                let result = inputs.iter().map(to_literal).collect::<Result<Vec<_>>>();
+                match result {
+                    Ok(lits) => {
+                        prefix = lits;
+                        let _ = reply.send(Ok(()));
+                    }
+                    Err(e) => {
+                        let _ = reply.send(Err(e));
+                    }
+                }
+            }
+            Job::Run(inputs, reply) => {
+                let result = (|| -> Result<Vec<Vec<f64>>> {
+                    let mut literals: Vec<&xla::Literal> = prefix.iter().collect();
+                    let varying =
+                        inputs.iter().map(to_literal).collect::<Result<Vec<_>>>()?;
+                    literals.extend(varying.iter());
+                    let result = exe
+                        .execute::<&xla::Literal>(&literals)
+                        .map_err(|e| anyhow!("executing {}: {e:?}", path.display()))?;
+                    let lit = result[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+                    let parts =
+                        lit.to_tuple().map_err(|e| anyhow!("untupling: {e:?}"))?;
+                    parts
+                        .iter()
+                        .map(|p| {
+                            let v: Vec<f32> =
+                                p.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+                            Ok(v.into_iter().map(|x| x as f64).collect())
+                        })
+                        .collect()
+                })();
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_dir_default() {
+        let d = artifacts_dir();
+        assert!(d.ends_with("artifacts") || d.is_absolute());
+    }
+
+    #[test]
+    fn missing_artifact_is_clean_error() {
+        let err = Executable::load_named("definitely_missing_artifact")
+            .err()
+            .expect("should fail");
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn tensor_in_shape_check() {
+        let t = TensorIn::new(vec![0.0; 6], &[2, 3]);
+        assert_eq!(t.dims, vec![2, 3]);
+    }
+}

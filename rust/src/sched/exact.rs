@@ -1,0 +1,112 @@
+//! The exact (strict) scheduler: a single binary heap behind one lock.
+//!
+//! This is the paper's *Coarse-Grained* baseline — linearizable
+//! `DeleteMin`, always returning the true maximum-priority entry, at the
+//! cost of all threads contending on one lock. Its poor scaling is the
+//! motivation for the relaxed Multiqueue.
+
+use super::{Entry, Scheduler};
+use crate::util::Xoshiro256;
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+pub struct ExactQueue {
+    heap: Mutex<BinaryHeap<Entry>>,
+    len: AtomicUsize,
+}
+
+impl ExactQueue {
+    pub fn new() -> Self {
+        ExactQueue { heap: Mutex::new(BinaryHeap::new()), len: AtomicUsize::new(0) }
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        ExactQueue {
+            heap: Mutex::new(BinaryHeap::with_capacity(cap)),
+            len: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl Default for ExactQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for ExactQueue {
+    fn insert(&self, entry: Entry, _rng: &mut Xoshiro256) {
+        let mut h = self.heap.lock().unwrap();
+        h.push(entry);
+        self.len.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn pop(&self, _rng: &mut Xoshiro256) -> Option<Entry> {
+        let mut h = self.heap.lock().unwrap();
+        let e = h.pop();
+        if e.is_some() {
+            self.len.fetch_sub(1, Ordering::Relaxed);
+        }
+        e
+    }
+
+    fn approx_len(&self) -> usize {
+        self.len.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Xoshiro256 {
+        Xoshiro256::seed_from_u64(1)
+    }
+
+    #[test]
+    fn strict_priority_order() {
+        let q = ExactQueue::new();
+        let mut r = rng();
+        for (i, p) in [0.3, 0.9, 0.1, 0.5].iter().enumerate() {
+            q.insert(Entry { prio: *p, task: i as u32, epoch: 0 }, &mut r);
+        }
+        let order: Vec<f64> = std::iter::from_fn(|| q.pop(&mut r)).map(|e| e.prio).collect();
+        assert_eq!(order, vec![0.9, 0.5, 0.3, 0.1]);
+        assert_eq!(q.approx_len(), 0);
+    }
+
+    #[test]
+    fn empty_pop_none() {
+        let q = ExactQueue::new();
+        assert!(q.pop(&mut rng()).is_none());
+    }
+
+    #[test]
+    fn concurrent_no_lost_entries() {
+        let q = std::sync::Arc::new(ExactQueue::new());
+        let n_threads = 4;
+        let per_thread = 500;
+        std::thread::scope(|s| {
+            for t in 0..n_threads {
+                let q = std::sync::Arc::clone(&q);
+                s.spawn(move || {
+                    let mut r = Xoshiro256::stream(9, t as u64);
+                    for i in 0..per_thread {
+                        q.insert(
+                            Entry { prio: r.next_f64(), task: (t * per_thread + i) as u32, epoch: 0 },
+                            &mut r,
+                        );
+                    }
+                });
+            }
+        });
+        assert_eq!(q.approx_len(), n_threads * per_thread);
+        let mut r = rng();
+        let mut seen = std::collections::HashSet::new();
+        while let Some(e) = q.pop(&mut r) {
+            assert!(seen.insert(e.task), "duplicate task {}", e.task);
+        }
+        assert_eq!(seen.len(), n_threads * per_thread);
+    }
+}

@@ -1,0 +1,252 @@
+//! Indexed (position-tracking) binary max-heap for the *sequential*
+//! residual engine.
+//!
+//! The concurrent engines must use lazy epoch-validated entries (heaps
+//! can't do increase-key under concurrent access), but the sequential
+//! baseline pays dearly for the churn: every refresh inserts a fresh entry
+//! and every pop sifts past stale ones (≈27% of baseline cycles in the
+//! §Perf profile). This heap keeps exactly one slot per task and supports
+//! `update(task, prio)` via sift-up/down in place, eliminating stale
+//! traffic entirely.
+
+/// Max-heap over task ids `0..n` with in-place priority updates.
+pub struct IndexedHeap {
+    /// Heap array of task ids.
+    heap: Vec<u32>,
+    /// Position of each task in `heap`, or `ABSENT`.
+    pos: Vec<u32>,
+    /// Current priority of each task (valid when present).
+    prio: Vec<f64>,
+}
+
+const ABSENT: u32 = u32::MAX;
+/// Heap arity: 4-ary halves the sift-down depth vs binary and keeps the
+/// children of a node on one cache line — measurably faster for this
+/// update-heavy workload (EXPERIMENTS.md §Perf).
+const ARITY: usize = 4;
+
+impl IndexedHeap {
+    pub fn new(n: usize) -> Self {
+        IndexedHeap { heap: Vec::with_capacity(n), pos: vec![ABSENT; n], prio: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn contains(&self, task: u32) -> bool {
+        self.pos[task as usize] != ABSENT
+    }
+
+    pub fn priority(&self, task: u32) -> Option<f64> {
+        self.contains(task).then(|| self.prio[task as usize])
+    }
+
+    /// Insert `task` or update its priority in place.
+    pub fn update(&mut self, task: u32, prio: f64) {
+        let t = task as usize;
+        if self.pos[t] == ABSENT {
+            self.prio[t] = prio;
+            self.pos[t] = self.heap.len() as u32;
+            self.heap.push(task);
+            self.sift_up(self.heap.len() - 1);
+        } else {
+            let old = self.prio[t];
+            self.prio[t] = prio;
+            let p = self.pos[t] as usize;
+            if prio > old {
+                self.sift_up(p);
+            } else if prio < old {
+                self.sift_down(p);
+            }
+        }
+    }
+
+    /// Remove `task` if present.
+    pub fn remove(&mut self, task: u32) {
+        let t = task as usize;
+        let p = self.pos[t];
+        if p == ABSENT {
+            return;
+        }
+        let p = p as usize;
+        let last = self.heap.len() - 1;
+        self.swap(p, last);
+        self.heap.pop();
+        self.pos[t] = ABSENT;
+        if p < self.heap.len() {
+            let moved_prio = self.prio[self.heap[p] as usize];
+            // Restore invariant in whichever direction is needed.
+            if p > 0 && moved_prio > self.prio[self.heap[(p - 1) / ARITY] as usize] {
+                self.sift_up(p);
+            } else {
+                self.sift_down(p);
+            }
+        }
+    }
+
+    /// Pop the max-priority task.
+    pub fn pop(&mut self) -> Option<(u32, f64)> {
+        if self.heap.is_empty() {
+            return None;
+        }
+        let top = self.heap[0];
+        let prio = self.prio[top as usize];
+        self.remove(top);
+        Some((top, prio))
+    }
+
+    pub fn peek(&self) -> Option<(u32, f64)> {
+        self.heap.first().map(|&t| (t, self.prio[t as usize]))
+    }
+
+    #[inline]
+    fn swap(&mut self, a: usize, b: usize) {
+        self.heap.swap(a, b);
+        self.pos[self.heap[a] as usize] = a as u32;
+        self.pos[self.heap[b] as usize] = b as u32;
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / ARITY;
+            if self.prio[self.heap[i] as usize] <= self.prio[self.heap[parent] as usize] {
+                break;
+            }
+            self.swap(i, parent);
+            i = parent;
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let first = ARITY * i + 1;
+            if first >= n {
+                break;
+            }
+            let last = (first + ARITY).min(n);
+            let mut best = first;
+            let mut best_prio = self.prio[self.heap[first] as usize];
+            for k in first + 1..last {
+                let p = self.prio[self.heap[k] as usize];
+                if p > best_prio {
+                    best = k;
+                    best_prio = p;
+                }
+            }
+            if best_prio <= self.prio[self.heap[i] as usize] {
+                break;
+            }
+            self.swap(i, best);
+            i = best;
+        }
+    }
+
+    /// Debug invariant check (tests only).
+    #[cfg(test)]
+    fn validate(&self) {
+        for i in 1..self.heap.len() {
+            let parent = (i - 1) / ARITY;
+            assert!(
+                self.prio[self.heap[parent] as usize] >= self.prio[self.heap[i] as usize],
+                "heap property violated at {i}"
+            );
+        }
+        for (t, &p) in self.pos.iter().enumerate() {
+            if p != ABSENT {
+                assert_eq!(self.heap[p as usize] as usize, t, "pos table broken");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn push_pop_order() {
+        let mut h = IndexedHeap::new(5);
+        for (t, p) in [(0u32, 0.3), (1, 0.9), (2, 0.1), (3, 0.5), (4, 0.7)] {
+            h.update(t, p);
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| h.pop().map(|(t, _)| t)).collect();
+        assert_eq!(order, vec![1, 4, 3, 0, 2]);
+    }
+
+    #[test]
+    fn update_moves_both_directions() {
+        let mut h = IndexedHeap::new(3);
+        h.update(0, 0.1);
+        h.update(1, 0.2);
+        h.update(2, 0.3);
+        h.update(0, 0.9); // increase
+        assert_eq!(h.peek(), Some((0, 0.9)));
+        h.update(0, 0.05); // decrease
+        assert_eq!(h.peek(), Some((2, 0.3)));
+        h.validate();
+    }
+
+    #[test]
+    fn remove_middle() {
+        let mut h = IndexedHeap::new(6);
+        for t in 0..6u32 {
+            h.update(t, t as f64);
+        }
+        h.remove(3);
+        assert!(!h.contains(3));
+        h.validate();
+        let order: Vec<u32> = std::iter::from_fn(|| h.pop().map(|(t, _)| t)).collect();
+        assert_eq!(order, vec![5, 4, 2, 1, 0]);
+    }
+
+    #[test]
+    fn remove_absent_is_noop() {
+        let mut h = IndexedHeap::new(2);
+        h.update(0, 1.0);
+        h.remove(1);
+        assert_eq!(h.len(), 1);
+    }
+
+    #[test]
+    fn randomized_against_reference() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for _case in 0..50 {
+            let n = 2 + rng.index(64);
+            let mut h = IndexedHeap::new(n);
+            let mut reference: std::collections::HashMap<u32, f64> = Default::default();
+            for _ in 0..200 {
+                let t = rng.index(n) as u32;
+                match rng.index(3) {
+                    0 | 1 => {
+                        let p = rng.next_f64();
+                        h.update(t, p);
+                        reference.insert(t, p);
+                    }
+                    _ => {
+                        h.remove(t);
+                        reference.remove(&t);
+                    }
+                }
+                h.validate();
+                assert_eq!(h.len(), reference.len());
+            }
+            // Drain: must come out in sorted order and match the map.
+            let mut last = f64::INFINITY;
+            let mut seen = 0;
+            while let Some((t, p)) = h.pop() {
+                assert!(p <= last);
+                last = p;
+                assert_eq!(reference.get(&t), Some(&p));
+                seen += 1;
+            }
+            assert_eq!(seen, reference.len());
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! Task schedulers: the exact priority queue, the paper's relaxed
+//! Multiqueue, and the naive random-queue scheduler used by Random Splash.
+//!
+//! ## Entry / epoch protocol
+//!
+//! Priorities of BP tasks change as neighboring messages are updated, but
+//! concurrent heaps cannot efficiently support `increase_key`. All
+//! schedulers here use the standard *lazy entry* idiom instead:
+//!
+//! - every priority change bumps the task's **epoch** in [`TaskStates`] and
+//!   inserts a fresh [`Entry`] carrying that epoch;
+//! - a popped entry whose epoch no longer matches the task's current epoch
+//!   is *stale* and discarded;
+//! - before processing, a worker must **claim** the task (CAS on the claim
+//!   bit) so a task is never processed by two threads at once — the paper's
+//!   "marked as in-process".
+//!
+//! Every inserted entry is popped exactly once, so a global counter of
+//! in-queue entries (maintained by the coordinator) gives quiescence
+//! detection for termination.
+
+pub mod exact;
+pub mod indexed_heap;
+pub mod multiqueue;
+pub mod random_queues;
+
+pub use exact::ExactQueue;
+pub use indexed_heap::IndexedHeap;
+pub use multiqueue::Multiqueue;
+pub use random_queues::RandomQueues;
+
+use crate::util::Xoshiro256;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A queue entry: task id, its priority at insertion time, and the epoch
+/// that validates it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Entry {
+    pub prio: f64,
+    pub task: u32,
+    pub epoch: u32,
+}
+
+impl Eq for Entry {}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Max-heap on priority; priorities are never NaN (residuals are
+        // finite by construction). Tie-break on task id for determinism.
+        self.prio
+            .partial_cmp(&other.prio)
+            .expect("priority must not be NaN")
+            .then(self.task.cmp(&other.task))
+    }
+}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The scheduler abstraction shared by all engines.
+///
+/// `insert` and `pop` take the worker's thread-local RNG; the exact queue
+/// ignores it, the relaxed queues use it for queue choice.
+pub trait Scheduler: Send + Sync {
+    fn insert(&self, entry: Entry, rng: &mut Xoshiro256);
+    /// Pop some entry (for relaxed schedulers: from the better of two random
+    /// queues). `None` means "no entry found right now" — the queues looked
+    /// empty; the coordinator decides whether that means termination.
+    fn pop(&self, rng: &mut Xoshiro256) -> Option<Entry>;
+    /// Estimated number of entries across all internal queues.
+    fn approx_len(&self) -> usize;
+}
+
+/// Per-task claim bit + epoch word.
+///
+/// Layout: bit 63 = claimed; low 32 bits = epoch (wrapping; bits 32–62 may
+/// accumulate carries and are masked off on read).
+pub struct TaskStates {
+    words: Vec<AtomicU64>,
+}
+
+const CLAIM_BIT: u64 = 1 << 63;
+const EPOCH_MASK: u64 = 0xFFFF_FFFF;
+
+impl TaskStates {
+    pub fn new(n: usize) -> Self {
+        let mut words = Vec::with_capacity(n);
+        words.resize_with(n, || AtomicU64::new(0));
+        TaskStates { words }
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    /// Current epoch of `task`.
+    #[inline]
+    pub fn epoch(&self, task: u32) -> u32 {
+        (self.words[task as usize].load(Ordering::Acquire) & EPOCH_MASK) as u32
+    }
+
+    #[inline]
+    pub fn is_claimed(&self, task: u32) -> bool {
+        self.words[task as usize].load(Ordering::Acquire) & CLAIM_BIT != 0
+    }
+
+    /// Invalidate all existing entries for `task` and return the fresh
+    /// epoch to attach to a new entry.
+    #[inline]
+    pub fn bump(&self, task: u32) -> u32 {
+        let old = self.words[task as usize].fetch_add(1, Ordering::AcqRel);
+        (old.wrapping_add(1) & EPOCH_MASK) as u32
+    }
+
+    /// Claim `task` if it is unclaimed *and* its epoch still equals
+    /// `epoch`. Returns false on stale entry or concurrent claim.
+    pub fn try_claim(&self, task: u32, epoch: u32) -> bool {
+        let w = &self.words[task as usize];
+        let mut cur = w.load(Ordering::Acquire);
+        loop {
+            if cur & CLAIM_BIT != 0 || (cur & EPOCH_MASK) as u32 != epoch {
+                return false;
+            }
+            match w.compare_exchange_weak(
+                cur,
+                cur | CLAIM_BIT,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return true,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Release a claim (the claim holder only).
+    #[inline]
+    pub fn release(&self, task: u32) {
+        self.words[task as usize].fetch_and(!CLAIM_BIT, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn entry_ordering() {
+        let a = Entry { prio: 1.0, task: 0, epoch: 0 };
+        let b = Entry { prio: 2.0, task: 1, epoch: 0 };
+        assert!(b > a);
+        let mut heap = std::collections::BinaryHeap::new();
+        heap.push(a);
+        heap.push(b);
+        assert_eq!(heap.pop().unwrap().prio, 2.0);
+    }
+
+    #[test]
+    fn entry_tie_break_deterministic() {
+        let a = Entry { prio: 1.0, task: 3, epoch: 0 };
+        let b = Entry { prio: 1.0, task: 7, epoch: 0 };
+        assert!(b > a);
+    }
+
+    #[test]
+    fn claim_lifecycle() {
+        let ts = TaskStates::new(4);
+        assert_eq!(ts.epoch(2), 0);
+        assert!(!ts.is_claimed(2));
+        assert!(ts.try_claim(2, 0));
+        assert!(ts.is_claimed(2));
+        // second claim fails
+        assert!(!ts.try_claim(2, 0));
+        ts.release(2);
+        assert!(!ts.is_claimed(2));
+        assert!(ts.try_claim(2, 0));
+    }
+
+    #[test]
+    fn stale_epoch_rejected() {
+        let ts = TaskStates::new(2);
+        let e1 = ts.bump(0);
+        assert_eq!(e1, 1);
+        assert!(!ts.try_claim(0, 0), "old epoch is stale");
+        assert!(ts.try_claim(0, e1));
+    }
+
+    #[test]
+    fn bump_while_claimed_preserves_claim() {
+        let ts = TaskStates::new(1);
+        assert!(ts.try_claim(0, 0));
+        let e = ts.bump(0);
+        assert!(ts.is_claimed(0));
+        assert_eq!(ts.epoch(0), e);
+        // entry with new epoch still can't claim while held
+        assert!(!ts.try_claim(0, e));
+        ts.release(0);
+        assert!(ts.try_claim(0, e));
+    }
+
+    #[test]
+    fn concurrent_claim_exclusive() {
+        let ts = Arc::new(TaskStates::new(1));
+        let wins: usize = std::thread::scope(|s| {
+            (0..8)
+                .map(|_| {
+                    let ts = Arc::clone(&ts);
+                    s.spawn(move || ts.try_claim(0, 0) as usize)
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .sum()
+        });
+        assert_eq!(wins, 1, "exactly one thread may claim");
+    }
+}

@@ -1,0 +1,149 @@
+//! The naive relaxed queue used by the journal version of Residual Splash
+//! (Gonzalez et al.): `p` exact priority queues with *random* insert and
+//! *random single-queue* delete.
+//!
+//! Crucially, `pop` examines ONE random queue (no two-choice), so — as
+//! shown by Alistarh et al. [PODC'17] — this structure is **not** a
+//! q-relaxed scheduler for any fixed q: its rank error diverges as
+//! operations accumulate, effectively degrading toward random task
+//! selection. The paper includes it ("RS") precisely to demonstrate that a
+//! principled relaxed scheduler matters; we reproduce it faithfully.
+
+use super::{Entry, Scheduler};
+use crate::util::{AtomicF64, CachePadded, Xoshiro256};
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+struct SubQueue {
+    heap: Mutex<BinaryHeap<Entry>>,
+    top: AtomicF64,
+}
+
+pub struct RandomQueues {
+    queues: Vec<CachePadded<SubQueue>>,
+    len: AtomicUsize,
+}
+
+impl RandomQueues {
+    pub fn new(m: usize) -> Self {
+        assert!(m >= 1);
+        let mut queues = Vec::with_capacity(m);
+        queues.resize_with(m, || {
+            CachePadded(SubQueue {
+                heap: Mutex::new(BinaryHeap::new()),
+                top: AtomicF64::new(f64::NEG_INFINITY),
+            })
+        });
+        RandomQueues { queues, len: AtomicUsize::new(0) }
+    }
+
+    pub fn num_queues(&self) -> usize {
+        self.queues.len()
+    }
+}
+
+impl Scheduler for RandomQueues {
+    fn insert(&self, entry: Entry, rng: &mut Xoshiro256) {
+        let i = rng.index(self.queues.len());
+        let q = &self.queues[i];
+        let mut heap = q.heap.lock().unwrap();
+        heap.push(entry);
+        q.top.store(heap.peek().map_or(f64::NEG_INFINITY, |e| e.prio));
+        self.len.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn pop(&self, rng: &mut Xoshiro256) -> Option<Entry> {
+        let m = self.queues.len();
+        // One random queue; a few retries on empty picks, then a full scan
+        // so None reliably signals emptiness.
+        for _ in 0..4 {
+            let i = rng.index(m);
+            let q = &self.queues[i];
+            if q.top.load() == f64::NEG_INFINITY {
+                continue;
+            }
+            let mut heap = q.heap.lock().unwrap();
+            if let Some(e) = heap.pop() {
+                q.top.store(heap.peek().map_or(f64::NEG_INFINITY, |e| e.prio));
+                self.len.fetch_sub(1, Ordering::Relaxed);
+                return Some(e);
+            }
+        }
+        for i in 0..m {
+            let q = &self.queues[i];
+            let mut heap = q.heap.lock().unwrap();
+            if let Some(e) = heap.pop() {
+                q.top.store(heap.peek().map_or(f64::NEG_INFINITY, |e| e.prio));
+                self.len.fetch_sub(1, Ordering::Relaxed);
+                return Some(e);
+            }
+        }
+        None
+    }
+
+    fn approx_len(&self) -> usize {
+        self.len.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Xoshiro256 {
+        Xoshiro256::seed_from_u64(5)
+    }
+
+    #[test]
+    fn no_lost_entries() {
+        let q = RandomQueues::new(4);
+        let mut r = rng();
+        for t in 0..500u32 {
+            q.insert(Entry { prio: t as f64, task: t, epoch: 0 }, &mut r);
+        }
+        let mut seen = std::collections::HashSet::new();
+        while let Some(e) = q.pop(&mut r) {
+            assert!(seen.insert(e.task));
+        }
+        assert_eq!(seen.len(), 500);
+    }
+
+    #[test]
+    fn rank_error_worse_than_multiqueue() {
+        // Statistical demonstration of the structural difference: random
+        // single-queue delete has higher mean rank error than two-choice
+        // (same number of sub-queues, same entries).
+        let n = 2000u32;
+        let mq = super::super::Multiqueue::new(8);
+        let rq = RandomQueues::new(8);
+        let mut r = rng();
+        for t in 0..n {
+            mq.insert(Entry { prio: t as f64, task: t, epoch: 0 }, &mut r);
+            rq.insert(Entry { prio: t as f64, task: t, epoch: 0 }, &mut r);
+        }
+        let mean_rank = |pop: &mut dyn FnMut() -> Option<Entry>| {
+            let mut live: std::collections::BTreeSet<u32> = (0..n).collect();
+            let mut total = 0usize;
+            while let Some(e) = pop() {
+                total += live.range(e.task + 1..).count();
+                live.remove(&e.task);
+            }
+            total as f64 / n as f64
+        };
+        let mut r1 = rng();
+        let mq_rank = mean_rank(&mut || mq.pop(&mut r1));
+        let mut r2 = rng();
+        let rq_rank = mean_rank(&mut || rq.pop(&mut r2));
+        assert!(
+            rq_rank > mq_rank * 2.0,
+            "random-queue rank {rq_rank} should exceed multiqueue rank {mq_rank}"
+        );
+    }
+
+    #[test]
+    fn empty_returns_none() {
+        let q = RandomQueues::new(3);
+        assert!(q.pop(&mut rng()).is_none());
+    }
+}

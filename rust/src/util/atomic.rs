@@ -1,0 +1,222 @@
+//! Atomic floating-point cells and cache-padded wrappers.
+//!
+//! The concurrent BP engines share the message state between worker threads
+//! with *benign races*, exactly like the paper's Java implementation (plain
+//! volatile arrays): a reader may observe a message vector mid-update. BP
+//! tolerates this — the algorithm converges to the same fixed point — but
+//! Rust requires that such shared mutation go through atomics. [`AtomicF64`]
+//! provides relaxed-ordering f64 loads/stores via bit-casting to `u64`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// An `f64` cell that can be read and written concurrently.
+///
+/// All operations use `Relaxed` ordering: BP message updates are idempotent
+/// re-normalizations and the engines do not rely on cross-cell ordering for
+/// correctness (only the scheduler's claim flags synchronize).
+#[derive(Debug)]
+pub struct AtomicF64 {
+    bits: AtomicU64,
+}
+
+impl AtomicF64 {
+    #[inline]
+    pub fn new(v: f64) -> Self {
+        Self { bits: AtomicU64::new(v.to_bits()) }
+    }
+
+    #[inline]
+    pub fn load(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    #[inline]
+    pub fn store(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Atomically add `v`; returns the previous value. Used by the
+    /// no-lookahead engine's accumulated-change scores.
+    pub fn fetch_add(&self, v: f64) -> f64 {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let cur_f = f64::from_bits(cur);
+            match self.bits.compare_exchange_weak(
+                cur,
+                (cur_f + v).to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return cur_f,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Atomically set to `min(self, v)`; returns the previous value.
+    pub fn fetch_min(&self, v: f64) -> f64 {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let cur_f = f64::from_bits(cur);
+            if v >= cur_f {
+                return cur_f;
+            }
+            match self.bits.compare_exchange_weak(
+                cur,
+                v.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return cur_f,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Atomically set to `max(self, v)`; returns the previous value.
+    /// Used by convergence tracking (max residual seen this epoch).
+    pub fn fetch_max(&self, v: f64) -> f64 {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let cur_f = f64::from_bits(cur);
+            if v <= cur_f {
+                return cur_f;
+            }
+            match self.bits.compare_exchange_weak(
+                cur,
+                v.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return cur_f,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+}
+
+impl Default for AtomicF64 {
+    fn default() -> Self {
+        Self::new(0.0)
+    }
+}
+
+impl Clone for AtomicF64 {
+    fn clone(&self) -> Self {
+        Self::new(self.load())
+    }
+}
+
+/// Pad-to-cache-line wrapper to avoid false sharing on hot per-thread
+/// counters. 128 bytes covers adjacent-line prefetching on x86.
+#[repr(align(128))]
+#[derive(Debug, Default)]
+pub struct CachePadded<T>(pub T);
+
+impl<T> std::ops::Deref for CachePadded<T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.0
+    }
+}
+
+impl<T> std::ops::DerefMut for CachePadded<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn roundtrip() {
+        let a = AtomicF64::new(1.5);
+        assert_eq!(a.load(), 1.5);
+        a.store(-0.25);
+        assert_eq!(a.load(), -0.25);
+    }
+
+    #[test]
+    fn special_values() {
+        let a = AtomicF64::new(f64::NAN);
+        assert!(a.load().is_nan());
+        a.store(f64::INFINITY);
+        assert_eq!(a.load(), f64::INFINITY);
+        a.store(0.0);
+        assert_eq!(a.load(), 0.0);
+        a.store(-0.0);
+        assert_eq!(a.load().to_bits(), (-0.0f64).to_bits());
+    }
+
+    #[test]
+    fn fetch_max_monotone() {
+        let a = AtomicF64::new(0.0);
+        assert_eq!(a.fetch_max(1.0), 0.0);
+        assert_eq!(a.fetch_max(0.5), 1.0);
+        assert_eq!(a.load(), 1.0);
+        a.fetch_max(2.0);
+        assert_eq!(a.load(), 2.0);
+    }
+
+    #[test]
+    fn fetch_add_accumulates() {
+        let a = AtomicF64::new(1.0);
+        assert_eq!(a.fetch_add(0.5), 1.0);
+        assert_eq!(a.load(), 1.5);
+        a.fetch_add(-2.0);
+        assert_eq!(a.load(), -0.5);
+    }
+
+    #[test]
+    fn fetch_add_concurrent_sums() {
+        let a = Arc::new(AtomicF64::new(0.0));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let a = Arc::clone(&a);
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        a.fetch_add(1.0);
+                    }
+                });
+            }
+        });
+        assert_eq!(a.load(), 4000.0);
+    }
+
+    #[test]
+    fn fetch_min_monotone() {
+        let a = AtomicF64::new(5.0);
+        assert_eq!(a.fetch_min(3.0), 5.0);
+        assert_eq!(a.fetch_min(4.0), 3.0);
+        assert_eq!(a.load(), 3.0);
+    }
+
+    #[test]
+    fn fetch_max_concurrent() {
+        let a = Arc::new(AtomicF64::new(0.0));
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let a = Arc::clone(&a);
+                std::thread::spawn(move || {
+                    for i in 0..1000 {
+                        a.fetch_max((t * 1000 + i) as f64);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(a.load(), 3999.0);
+    }
+
+    #[test]
+    fn cache_padded_alignment() {
+        assert!(std::mem::align_of::<CachePadded<u64>>() >= 128);
+        let c = CachePadded(5u64);
+        assert_eq!(*c, 5);
+    }
+}

@@ -1,0 +1,48 @@
+//! Shared low-level utilities: deterministic PRNG, atomic f64 cells,
+//! statistics, and timing helpers. These stand in for the `rand` /
+//! `criterion`-adjacent crates that are unavailable in the offline build.
+
+pub mod atomic;
+pub mod rng;
+pub mod stats;
+
+pub use atomic::{AtomicF64, CachePadded};
+pub use rng::{SplitMix64, Xoshiro256};
+pub use stats::{fmt_count, fmt_duration, Summary};
+
+use std::time::Instant;
+
+/// Simple scope timer returning elapsed seconds.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.elapsed_secs();
+        let b = t.elapsed_secs();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+}

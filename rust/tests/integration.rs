@@ -1,0 +1,231 @@
+//! Cross-module integration tests: every engine against every model
+//! family, fixed-point agreement across schedules, serialization flows,
+//! and the harness end to end.
+
+use relaxed_bp::bp::{all_marginals, decode_bits, max_marginal_diff, Messages};
+use relaxed_bp::configio::{parse, AlgorithmSpec, ModelSpec, RunConfig};
+use relaxed_bp::engines::build_engine;
+use relaxed_bp::harness::Harness;
+use relaxed_bp::model::{builders, io as model_io};
+use relaxed_bp::run::{run_config, run_on_model};
+
+/// The full engine roster applicable to general (possibly loopy) models.
+fn general_roster() -> Vec<AlgorithmSpec> {
+    vec![
+        AlgorithmSpec::SequentialResidual,
+        AlgorithmSpec::Synchronous,
+        AlgorithmSpec::CoarseGrained,
+        AlgorithmSpec::RelaxedResidual,
+        AlgorithmSpec::WeightDecay,
+        AlgorithmSpec::Priority,
+        AlgorithmSpec::Splash { h: 2 },
+        AlgorithmSpec::SmartSplash { h: 2 },
+        AlgorithmSpec::RelaxedSmartSplash { h: 2 },
+        AlgorithmSpec::RandomSplash { h: 2 },
+        AlgorithmSpec::Bucket,
+        AlgorithmSpec::RandomSynchronous { low_p: 0.4 },
+        AlgorithmSpec::RelaxedResidualBatched { batch: 16 },
+    ]
+}
+
+#[test]
+fn every_engine_reaches_the_same_fixed_point_on_ising() {
+    let spec = ModelSpec::Ising { n: 6 };
+    let mrf = builders::build(&spec, 11);
+
+    // Reference fixed point from the sequential baseline.
+    let msgs_ref = Messages::uniform(&mrf);
+    let cfg_ref = RunConfig::new(spec.clone(), AlgorithmSpec::SequentialResidual).with_seed(11);
+    let s = build_engine(&cfg_ref.algorithm).run(&mrf, &msgs_ref, &cfg_ref).unwrap();
+    assert!(s.converged);
+    let reference = all_marginals(&mrf, &msgs_ref);
+
+    for alg in general_roster() {
+        let msgs = Messages::uniform(&mrf);
+        let cfg = RunConfig::new(spec.clone(), alg.clone()).with_threads(3).with_seed(11);
+        let stats = build_engine(&alg).run(&mrf, &msgs, &cfg).unwrap();
+        assert!(stats.converged, "{} did not converge", alg.name());
+        let got = all_marginals(&mrf, &msgs);
+        let diff = max_marginal_diff(&got, &reference);
+        assert!(diff < 2e-2, "{}: marginal diff {diff}", alg.name());
+    }
+}
+
+#[test]
+fn every_engine_is_exact_on_the_tree_model() {
+    let spec = ModelSpec::Tree { n: 63 };
+    let mrf = builders::build(&spec, 1);
+    for alg in general_roster() {
+        let msgs = Messages::uniform(&mrf);
+        let cfg = RunConfig::new(spec.clone(), alg.clone()).with_threads(2).with_seed(5);
+        let stats = build_engine(&alg).run(&mrf, &msgs, &cfg).unwrap();
+        assert!(stats.converged, "{}", alg.name());
+        // Equality factors: every node's belief equals the root prior.
+        for (i, m) in all_marginals(&mrf, &msgs).iter().enumerate() {
+            assert!(
+                (m[0] - 0.1).abs() < 1e-3,
+                "{} node {i}: {m:?}",
+                alg.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn ldpc_decode_agreement_across_main_engines() {
+    let inst = builders::ldpc::build(120, 0.05, 3);
+    let spec = ModelSpec::Ldpc { n: 120, flip_prob: 0.05 };
+    for alg in [
+        AlgorithmSpec::SequentialResidual,
+        AlgorithmSpec::Synchronous,
+        AlgorithmSpec::RelaxedResidual,
+        AlgorithmSpec::RelaxedSmartSplash { h: 2 },
+        AlgorithmSpec::WeightDecay,
+    ] {
+        let msgs = Messages::uniform(&inst.mrf);
+        let cfg = RunConfig::new(spec.clone(), alg.clone()).with_threads(2).with_seed(3);
+        let stats = build_engine(&alg).run(&inst.mrf, &msgs, &cfg).unwrap();
+        assert!(stats.converged, "{}", alg.name());
+        let bits = decode_bits(&inst.mrf, &msgs, inst.num_vars);
+        assert_eq!(bits, inst.sent, "{} decode", alg.name());
+    }
+}
+
+#[test]
+fn model_io_roundtrip_preserves_inference_results() {
+    let spec = ModelSpec::Potts { n: 5 };
+    let mrf = builders::build(&spec, 9);
+    let path = "/tmp/rbp_integration_model.rbpm";
+    model_io::save(&mrf, path).unwrap();
+    let loaded = model_io::load(path).unwrap();
+    std::fs::remove_file(path).ok();
+
+    let cfg = RunConfig::new(spec, AlgorithmSpec::SequentialResidual).with_seed(9);
+    let a = run_on_model(&cfg, mrf).unwrap();
+    let b = run_on_model(&cfg, loaded).unwrap();
+    assert!(a.stats.converged && b.stats.converged);
+    assert_eq!(a.stats.metrics.total.updates, b.stats.metrics.total.updates);
+    assert!(max_marginal_diff(&a.marginals(), &b.marginals()) < 1e-12);
+}
+
+#[test]
+fn run_config_json_flow() {
+    let text = r#"{
+        "model": {"kind": "ising", "n": 5},
+        "algorithm": "rss:2",
+        "threads": 2,
+        "seed": 4
+    }"#;
+    let cfg = RunConfig::from_json(&parse(text).unwrap()).unwrap();
+    assert_eq!(cfg.algorithm, AlgorithmSpec::RelaxedSmartSplash { h: 2 });
+    let report = run_config(&cfg).unwrap();
+    assert!(report.stats.converged);
+    // The JSON report round-trips through our own parser.
+    let back = parse(&report.to_json().to_string_pretty()).unwrap();
+    assert_eq!(back.get("converged").unwrap().as_bool(), Some(true));
+}
+
+#[test]
+fn harness_tiny_full_suite_produces_reports() {
+    let out = std::path::PathBuf::from("/tmp/rbp_integration_results");
+    std::fs::remove_dir_all(&out).ok();
+    let h = Harness {
+        scale: 0.0004,
+        threads: vec![1, 2],
+        max_threads: 2,
+        out_dir: out.clone(),
+        seed: 3,
+        time_limit: 60.0,
+        use_pjrt: false,
+    };
+    h.table3().unwrap();
+    h.table7().unwrap();
+    h.fig2().unwrap();
+    for f in ["table3", "table7", "fig2"] {
+        assert!(out.join(format!("{f}.md")).exists(), "{f}.md");
+        assert!(out.join(format!("{f}.csv")).exists(), "{f}.csv");
+    }
+    std::fs::remove_dir_all(&out).ok();
+}
+
+#[test]
+fn sequential_residual_is_bit_deterministic() {
+    let cfg = RunConfig::new(ModelSpec::Ising { n: 7 }, AlgorithmSpec::SequentialResidual)
+        .with_seed(13);
+    let a = run_config(&cfg).unwrap();
+    let b = run_config(&cfg).unwrap();
+    assert_eq!(a.stats.metrics.total.updates, b.stats.metrics.total.updates);
+    assert_eq!(a.msgs.snapshot(), b.msgs.snapshot());
+}
+
+#[test]
+fn relaxed_overhead_stays_bounded_on_threads() {
+    // Table 3's qualitative claim at test scale: the relaxed update
+    // overhead at several threads stays within a small factor.
+    let spec = ModelSpec::Ising { n: 10 };
+    let mrf = builders::build(&spec, 17);
+    let cfg = RunConfig::new(spec.clone(), AlgorithmSpec::SequentialResidual).with_seed(17);
+    let base = run_on_model(&cfg, mrf.clone()).unwrap();
+    assert!(base.stats.converged);
+    for p in [1, 2, 4] {
+        let cfg = RunConfig::new(spec.clone(), AlgorithmSpec::RelaxedResidual)
+            .with_threads(p)
+            .with_seed(17);
+        let r = run_on_model(&cfg, mrf.clone()).unwrap();
+        assert!(r.stats.converged);
+        let ratio =
+            r.stats.metrics.total.updates as f64 / base.stats.metrics.total.updates as f64;
+        assert!(ratio < 1.5, "p={p}: ratio {ratio}");
+    }
+}
+
+#[test]
+fn adversarial_tree_wastes_more_than_uniform_tree() {
+    // Lemma 2's direction: at equal relaxation, the adversarial instance
+    // forces (weakly) more wasted work than the uniform-expansion tree.
+    let n = 900;
+    let run = |spec: ModelSpec| {
+        let mrf = builders::build(&spec, 5);
+        let msgs = Messages::uniform(&mrf);
+        let cfg = RunConfig::new(spec, AlgorithmSpec::RelaxedResidual)
+            .with_threads(4)
+            .with_seed(5);
+        let stats = build_engine(&cfg.algorithm).run(&mrf, &msgs, &cfg).unwrap();
+        assert!(stats.converged);
+        let m = stats.metrics.total.clone();
+        (m.updates, m.useful_updates, mrf.num_messages() as u64)
+    };
+    let (u_upd, u_useful, u_edges) = run(ModelSpec::UniformTree { n, arity: 2 });
+    let (a_upd, a_useful, a_edges) = run(ModelSpec::AdversarialTree { n });
+    // Useful updates ≈ one per away-from-root edge in both cases.
+    assert!(u_useful <= u_edges && a_useful <= a_edges);
+    let u_waste = u_upd as f64 / u_useful.max(1) as f64;
+    let a_waste = a_upd as f64 / a_useful.max(1) as f64;
+    assert!(
+        a_waste >= u_waste * 0.9,
+        "adversarial waste {a_waste:.3} vs uniform {u_waste:.3}"
+    );
+}
+
+#[test]
+fn optimal_tree_engines_on_path_and_tree() {
+    for spec in [ModelSpec::Path { n: 200 }, ModelSpec::Tree { n: 255 }] {
+        let mrf = builders::build(&spec, 1);
+        for relaxed in [false, true] {
+            let alg = if relaxed {
+                AlgorithmSpec::RelaxedOptimalTree
+            } else {
+                AlgorithmSpec::OptimalTree
+            };
+            let msgs = Messages::uniform(&mrf);
+            let cfg = RunConfig::new(spec.clone(), alg.clone()).with_threads(2);
+            let stats = build_engine(&alg).run(&mrf, &msgs, &cfg).unwrap();
+            assert!(stats.converged, "{:?} relaxed={relaxed}", spec.name());
+            assert_eq!(
+                stats.metrics.total.useful_updates,
+                mrf.num_messages() as u64,
+                "each message exactly one useful update"
+            );
+        }
+    }
+}

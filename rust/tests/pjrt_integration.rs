@@ -1,0 +1,156 @@
+//! End-to-end validation of the three-layer hot path: AOT artifacts
+//! (JAX/Pallas → HLO text) executed through the PJRT CPU client must agree
+//! with the native Rust engines to f32 tolerance.
+//!
+//! These tests require `make artifacts` to have run; they skip (pass
+//! trivially, with a notice) when the artifacts are absent so `cargo test`
+//! works on a fresh checkout.
+
+use relaxed_bp::bp::{all_marginals, max_marginal_diff, Messages};
+use relaxed_bp::configio::{AlgorithmSpec, ModelSpec, RunConfig};
+use relaxed_bp::engines::batched::{BatchCompute, NativeBatch};
+use relaxed_bp::engines::{build_engine, Engine};
+use relaxed_bp::model::builders;
+use relaxed_bp::runtime::{artifacts_dir, batch::PjrtBatch, grid};
+
+fn have(name: &str) -> bool {
+    let ok = artifacts_dir().join(format!("{name}.hlo.txt")).exists();
+    if !ok {
+        eprintln!("SKIP: artifact {name} missing (run `make artifacts`)");
+    }
+    ok
+}
+
+#[test]
+fn pjrt_batched_matches_native_batch() {
+    if !have("batched_update_64") {
+        return;
+    }
+    let mrf = builders::build(&ModelSpec::Ising { n: 8 }, 3);
+    let msgs = Messages::uniform(&mrf);
+    // Perturb the state so updates are non-trivial.
+    for e in 0..mrf.num_messages() as u32 {
+        if e % 3 == 0 {
+            msgs.write_msg(&mrf, e, &[0.2, 0.8]);
+        }
+    }
+    let edges: Vec<u32> = (0..mrf.num_messages() as u32).step_by(2).collect();
+    let stride = mrf.max_domain();
+
+    let pjrt = PjrtBatch::load_default(64).expect("load artifact");
+    let mut out_p = vec![0.0; edges.len() * stride];
+    let mut res_p = vec![0.0; edges.len()];
+    pjrt.compute_batch(&mrf, &msgs, &edges, &mut out_p, &mut res_p);
+
+    let mut out_n = vec![0.0; edges.len() * stride];
+    let mut res_n = vec![0.0; edges.len()];
+    NativeBatch.compute_batch(&mrf, &msgs, &edges, &mut out_n, &mut res_n);
+
+    for k in 0..edges.len() {
+        for x in 0..2 {
+            let (a, b) = (out_p[k * stride + x], out_n[k * stride + x]);
+            assert!((a - b).abs() < 1e-5, "edge {k} state {x}: pjrt={a} native={b}");
+        }
+        assert!((res_p[k] - res_n[k]).abs() < 1e-5, "res {k}");
+    }
+}
+
+#[test]
+fn pjrt_grid_sync_matches_native_sync_marginals() {
+    if !have("grid_step_16") {
+        return;
+    }
+    let spec = ModelSpec::Ising { n: 16 };
+    let mrf = builders::build(&spec, 5);
+
+    // Native synchronous.
+    let msgs_native = Messages::uniform(&mrf);
+    let cfg_native = RunConfig::new(spec.clone(), AlgorithmSpec::Synchronous).with_seed(5);
+    let eng = build_engine(&AlgorithmSpec::Synchronous);
+    let s_native = eng.run(&mrf, &msgs_native, &cfg_native).unwrap();
+    assert!(s_native.converged);
+
+    // PJRT synchronous.
+    let msgs_pjrt = Messages::uniform(&mrf);
+    let mut cfg_pjrt = cfg_native.clone();
+    cfg_pjrt.use_pjrt = true;
+    let s_pjrt = grid::run_sync_pjrt(&mrf, &msgs_pjrt, &cfg_pjrt).unwrap();
+    assert!(s_pjrt.converged);
+
+    // Same schedule, f32 vs f64 arithmetic: marginals agree to ~1e-4.
+    let a = all_marginals(&mrf, &msgs_native);
+    let b = all_marginals(&mrf, &msgs_pjrt);
+    let diff = max_marginal_diff(&a, &b);
+    assert!(diff < 1e-3, "pjrt vs native marginal diff {diff}");
+    // Round counts should be close (f32 rounding can change the last round).
+    let (rn, rp) = (
+        s_native.metrics.total.rounds,
+        s_pjrt.metrics.total.rounds,
+    );
+    assert!(
+        (rn as i64 - rp as i64).abs() <= 3,
+        "native {rn} vs pjrt {rp} rounds"
+    );
+}
+
+#[test]
+fn pallas_flavor_artifact_matches_ref_flavor() {
+    // The shipped CPU artifacts are lowered from the jnp reference; the
+    // Pallas interpret-mode flavor (`*_pallas`) must compute identical
+    // numbers through the same PJRT runtime (see DESIGN.md
+    // §Hardware-Adaptation).
+    if !have("batched_update_64") || !have("batched_update_64_pallas") {
+        return;
+    }
+    use relaxed_bp::runtime::{Executable, TensorIn};
+    let ref_exe = Executable::load_named("batched_update_64").unwrap();
+    let pal_exe = Executable::load_named("batched_update_64_pallas").unwrap();
+    let mut prod = vec![0.0f64; 64 * 2];
+    let mut psi = vec![0.0f64; 64 * 4];
+    let mut cur = vec![0.0f64; 64 * 2];
+    let mut rng = relaxed_bp::util::Xoshiro256::seed_from_u64(3);
+    for v in prod.iter_mut().chain(psi.iter_mut()).chain(cur.iter_mut()) {
+        *v = rng.uniform(0.01, 1.0);
+    }
+    let inputs = || {
+        vec![
+            TensorIn::new(prod.clone(), &[64, 2]),
+            TensorIn::new(psi.clone(), &[64, 2, 2]),
+            TensorIn::new(cur.clone(), &[64, 2]),
+        ]
+    };
+    let a = ref_exe.run(inputs()).unwrap();
+    let b = pal_exe.run(inputs()).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().flatten().zip(b.iter().flatten()) {
+        assert!((x - y).abs() < 1e-6, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn pjrt_batched_engine_converges_and_decodes_grid() {
+    if !have("batched_update_64") {
+        return;
+    }
+    let spec = ModelSpec::Ising { n: 10 };
+    let mrf = builders::build(&spec, 9);
+    let msgs = Messages::uniform(&mrf);
+    let mut cfg = RunConfig::new(spec.clone(), AlgorithmSpec::RelaxedResidualBatched { batch: 32 })
+        .with_threads(2)
+        .with_seed(9);
+    cfg.use_pjrt = true;
+    let eng = build_engine(&cfg.algorithm.clone());
+    let stats = eng.run(&mrf, &msgs, &cfg).unwrap();
+    assert!(stats.converged);
+
+    // Against the sequential-residual fixed point.
+    let mrf2 = builders::build(&spec, 9);
+    let msgs2 = Messages::uniform(&mrf2);
+    let cfg2 = RunConfig::new(spec, AlgorithmSpec::SequentialResidual).with_seed(9);
+    let eng2 = build_engine(&AlgorithmSpec::SequentialResidual);
+    let s2 = eng2.run(&mrf2, &msgs2, &cfg2).unwrap();
+    assert!(s2.converged);
+
+    let diff = max_marginal_diff(&all_marginals(&mrf, &msgs), &all_marginals(&mrf2, &msgs2));
+    assert!(diff < 1e-2, "diff {diff}");
+}

@@ -1,0 +1,359 @@
+//! Property-based tests. `proptest` is unavailable in the offline build,
+//! so these use a seed-sweep harness over the library's own deterministic
+//! PRNG: each property runs against many independently generated random
+//! cases, and a failure message always contains the seed for replay.
+
+use relaxed_bp::bp::{
+    all_marginals, compute_message, exact_marginals, max_marginal_diff, msg_buf, residual_l2,
+    Lookahead, Messages, MsgSource,
+};
+use relaxed_bp::configio::{parse, AlgorithmSpec, Json, ModelSpec, RunConfig};
+use relaxed_bp::engines::build_engine;
+use relaxed_bp::model::{builders, io as model_io, FactorPool, GraphBuilder, Mrf, NodeFactors};
+use relaxed_bp::sched::{Entry, Multiqueue, RandomQueues, Scheduler, TaskStates};
+use relaxed_bp::util::Xoshiro256;
+
+const CASES: u64 = 30;
+
+/// Random tree MRF with random positive factors (binary domains).
+fn random_tree_mrf(rng: &mut Xoshiro256) -> Mrf {
+    let n = 2 + rng.index(14); // 2..=15 nodes: oracle-enumerable
+    let mut gb = GraphBuilder::new(n);
+    let mut pool = FactorPool::new();
+    let mut edge_idx = Vec::new();
+    for i in 1..n {
+        let parent = rng.index(i);
+        gb.add_edge(parent, i);
+        let m = [
+            rng.uniform(0.05, 1.0),
+            rng.uniform(0.05, 1.0),
+            rng.uniform(0.05, 1.0),
+            rng.uniform(0.05, 1.0),
+        ];
+        edge_idx.push(pool.add(2, 2, &m));
+    }
+    let factors: Vec<Vec<f64>> = (0..n)
+        .map(|_| vec![rng.uniform(0.05, 1.0), rng.uniform(0.05, 1.0)])
+        .collect();
+    Mrf::assemble(
+        "random_tree",
+        gb.build(),
+        vec![2; n],
+        NodeFactors::from_vecs(&factors),
+        edge_idx,
+        pool,
+    )
+}
+
+#[test]
+fn prop_bp_exact_on_random_trees() {
+    // BP at convergence computes exact marginals on any tree.
+    for seed in 0..CASES {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mrf = random_tree_mrf(&mut rng);
+        let msgs = Messages::uniform(&mrf);
+        let cfg = RunConfig::new(
+            ModelSpec::Tree { n: mrf.num_nodes() },
+            AlgorithmSpec::SequentialResidual,
+        )
+        .with_epsilon(1e-10);
+        let stats = build_engine(&cfg.algorithm).run(&mrf, &msgs, &cfg).unwrap();
+        assert!(stats.converged, "seed {seed}");
+        let bp = all_marginals(&mrf, &msgs);
+        let exact = exact_marginals(&mrf, 1 << 22).unwrap();
+        let diff = max_marginal_diff(&bp, &exact);
+        assert!(diff < 1e-7, "seed {seed}: diff {diff}");
+    }
+}
+
+#[test]
+fn prop_relaxed_matches_exact_on_random_trees() {
+    for seed in 0..CASES {
+        let mut rng = Xoshiro256::seed_from_u64(1000 + seed);
+        let mrf = random_tree_mrf(&mut rng);
+        let msgs = Messages::uniform(&mrf);
+        let cfg = RunConfig::new(
+            ModelSpec::Tree { n: mrf.num_nodes() },
+            AlgorithmSpec::RelaxedResidual,
+        )
+        .with_threads(2)
+        .with_seed(seed)
+        .with_epsilon(1e-10);
+        let stats = build_engine(&cfg.algorithm).run(&mrf, &msgs, &cfg).unwrap();
+        assert!(stats.converged, "seed {seed}");
+        let bp = all_marginals(&mrf, &msgs);
+        let exact = exact_marginals(&mrf, 1 << 22).unwrap();
+        let diff = max_marginal_diff(&bp, &exact);
+        assert!(diff < 1e-7, "seed {seed}: diff {diff}");
+    }
+}
+
+#[test]
+fn prop_update_rule_invariants() {
+    // For any model and any reachable message state: outputs normalized,
+    // non-negative, and recomputation is deterministic.
+    for seed in 0..CASES {
+        let mut rng = Xoshiro256::seed_from_u64(2000 + seed);
+        let mrf = random_tree_mrf(&mut rng);
+        let msgs = Messages::uniform(&mrf);
+        // Randomize the state.
+        for e in 0..mrf.num_messages() as u32 {
+            let a = rng.uniform(0.01, 0.99);
+            msgs.write_msg(&mrf, e, &[a, 1.0 - a]);
+        }
+        let mut out1 = msg_buf();
+        let mut out2 = msg_buf();
+        for e in 0..mrf.num_messages() as u32 {
+            let len = compute_message(&mrf, &msgs, e, &mut out1);
+            let sum: f64 = out1[..len].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9, "seed {seed} edge {e}: sum {sum}");
+            assert!(out1[..len].iter().all(|&v| v >= 0.0), "seed {seed} edge {e}");
+            compute_message(&mrf, &msgs, e, &mut out2);
+            assert_eq!(&out1[..len], &out2[..len], "seed {seed} edge {e}");
+        }
+    }
+}
+
+#[test]
+fn prop_lookahead_residual_consistency() {
+    // After init, the stored residual equals the L2 distance between
+    // pending and live; after commit it is zero and live == old pending.
+    for seed in 0..CASES {
+        let mut rng = Xoshiro256::seed_from_u64(3000 + seed);
+        let mrf = random_tree_mrf(&mut rng);
+        let msgs = Messages::uniform(&mrf);
+        let la = Lookahead::init(&mrf, &msgs);
+        for e in 0..mrf.num_messages() as u32 {
+            let mut pend = msg_buf();
+            let mut live = msg_buf();
+            let len = la.read_pending(&mrf, e, &mut pend);
+            msgs.read_msg(&mrf, e, &mut live);
+            let expect = residual_l2(&pend[..len], &live[..len]);
+            assert!(
+                (la.residual(e) - expect).abs() < 1e-12,
+                "seed {seed} edge {e}"
+            );
+            la.commit(&mrf, &msgs, e);
+            assert_eq!(la.residual(e), 0.0);
+            msgs.read_msg(&mrf, e, &mut live);
+            assert_eq!(&pend[..len], &live[..len], "seed {seed} edge {e}");
+        }
+    }
+}
+
+#[test]
+fn prop_multiqueue_preserves_multiset() {
+    // Any interleaving of inserts/pops loses nothing and duplicates nothing.
+    for seed in 0..CASES {
+        let mut rng = Xoshiro256::seed_from_u64(4000 + seed);
+        let q = Multiqueue::new(1 + rng.index(8));
+        let n = 50 + rng.index(500);
+        let mut inserted = Vec::new();
+        let mut popped = Vec::new();
+        for t in 0..n as u32 {
+            if rng.bernoulli(0.7) || inserted.len() == popped.len() {
+                q.insert(Entry { prio: rng.next_f64(), task: t, epoch: 0 }, &mut rng);
+                inserted.push(t);
+            } else if let Some(e) = q.pop(&mut rng) {
+                popped.push(e.task);
+            }
+        }
+        while let Some(e) = q.pop(&mut rng) {
+            popped.push(e.task);
+        }
+        inserted.sort_unstable();
+        popped.sort_unstable();
+        assert_eq!(inserted, popped, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_multiqueue_rank_beats_random_queues() {
+    // Structural property behind Theorem 1: two-choice rank error is
+    // consistently below single-random-queue rank error.
+    let mut mq_wins = 0;
+    for seed in 0..10u64 {
+        let n = 1000u32;
+        let mq = Multiqueue::new(8);
+        let rq = RandomQueues::new(8);
+        let mut rng = Xoshiro256::seed_from_u64(5000 + seed);
+        for t in 0..n {
+            mq.insert(Entry { prio: t as f64, task: t, epoch: 0 }, &mut rng);
+            rq.insert(Entry { prio: t as f64, task: t, epoch: 0 }, &mut rng);
+        }
+        let rank_err = |pop: &mut dyn FnMut() -> Option<Entry>| {
+            let mut live: std::collections::BTreeSet<u32> = (0..n).collect();
+            let mut total = 0usize;
+            while let Some(e) = pop() {
+                total += live.range(e.task + 1..).count();
+                live.remove(&e.task);
+            }
+            total
+        };
+        let mut r1 = Xoshiro256::seed_from_u64(seed);
+        let mq_err = rank_err(&mut || mq.pop(&mut r1));
+        let mut r2 = Xoshiro256::seed_from_u64(seed);
+        let rq_err = rank_err(&mut || rq.pop(&mut r2));
+        if mq_err < rq_err {
+            mq_wins += 1;
+        }
+    }
+    assert!(mq_wins >= 9, "multiqueue should ~always have lower rank error: {mq_wins}/10");
+}
+
+#[test]
+fn prop_task_states_claim_exclusive_under_contention() {
+    for seed in 0..10u64 {
+        let ts = std::sync::Arc::new(TaskStates::new(64));
+        let claims: Vec<usize> = std::thread::scope(|s| {
+            (0..4)
+                .map(|t| {
+                    let ts = std::sync::Arc::clone(&ts);
+                    s.spawn(move || {
+                        let mut rng = Xoshiro256::stream(seed, t);
+                        let mut won = 0;
+                        for _ in 0..256 {
+                            let task = rng.index(64) as u32;
+                            if ts.try_claim(task, 0) {
+                                won += 1;
+                            }
+                        }
+                        won
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        let total: usize = claims.iter().sum();
+        assert!(total <= 64, "seed {seed}: {total} claims on 64 tasks");
+    }
+}
+
+#[test]
+fn prop_graph_builder_csr_consistency() {
+    // Random simple graphs: CSR invariants hold.
+    for seed in 0..CASES {
+        let mut rng = Xoshiro256::seed_from_u64(6000 + seed);
+        let n = 3 + rng.index(40);
+        let mut gb = GraphBuilder::new(n);
+        let mut present = std::collections::HashSet::new();
+        let mut m = 0;
+        for _ in 0..n * 2 {
+            let a = rng.index(n);
+            let b = rng.index(n);
+            if a != b && present.insert((a.min(b), a.max(b))) {
+                gb.add_edge(a, b);
+                m += 1;
+            }
+        }
+        let g = gb.build();
+        g.validate();
+        assert_eq!(g.num_directed_edges(), 2 * m, "seed {seed}");
+        let deg_sum: usize = (0..n).map(|i| g.degree(i)).sum();
+        assert_eq!(deg_sum, 2 * m, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_mrf_io_roundtrip_random_models() {
+    for seed in 0..CASES {
+        let mut rng = Xoshiro256::seed_from_u64(7000 + seed);
+        let mrf = random_tree_mrf(&mut rng);
+        let mut buf = Vec::new();
+        model_io::write_mrf(&mrf, &mut buf).unwrap();
+        let back = model_io::read_mrf(&buf[..]).unwrap();
+        assert_eq!(back.num_nodes(), mrf.num_nodes(), "seed {seed}");
+        assert_eq!(back.msg_offset, mrf.msg_offset, "seed {seed}");
+        for i in 0..mrf.num_nodes() {
+            assert_eq!(back.node_factors.of(i), mrf.node_factors.of(i), "seed {seed}");
+        }
+    }
+}
+
+/// Random JSON value generator for parser round-trip fuzzing.
+fn random_json(rng: &mut Xoshiro256, depth: usize) -> Json {
+    match if depth == 0 { rng.index(4) } else { rng.index(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.bernoulli(0.5)),
+        2 => Json::Num((rng.uniform(-1e6, 1e6) * 100.0).round() / 100.0),
+        3 => {
+            let len = rng.index(12);
+            Json::Str(
+                (0..len)
+                    .map(|_| {
+                        let c = rng.index(128) as u8;
+                        if c.is_ascii_graphic() || c == b' ' { c as char } else { 'x' }
+                    })
+                    .collect(),
+            )
+        }
+        4 => Json::Arr((0..rng.index(5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.index(5))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    for seed in 0..200u64 {
+        let mut rng = Xoshiro256::seed_from_u64(8000 + seed);
+        let v = random_json(&mut rng, 3);
+        for text in [v.to_string_compact(), v.to_string_pretty()] {
+            let back = parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+            assert_eq!(back, v, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_ldpc_decodes_across_seeds() {
+    // BSC(0.05) is well below the (3,6) threshold: decode must succeed for
+    // essentially every instance at this size.
+    let mut ok = 0;
+    let total = 10;
+    for seed in 0..total {
+        let inst = builders::ldpc::build(120, 0.05, 9000 + seed);
+        let msgs = Messages::uniform(&inst.mrf);
+        let cfg = RunConfig::new(
+            ModelSpec::Ldpc { n: 120, flip_prob: 0.05 },
+            AlgorithmSpec::RelaxedResidual,
+        )
+        .with_threads(2)
+        .with_seed(seed);
+        let stats = build_engine(&cfg.algorithm).run(&inst.mrf, &msgs, &cfg).unwrap();
+        if stats.converged {
+            let bits = relaxed_bp::bp::decode_bits(&inst.mrf, &msgs, inst.num_vars);
+            if bits == inst.sent {
+                ok += 1;
+            }
+        }
+    }
+    assert!(ok >= total - 1, "decoded {ok}/{total}");
+}
+
+#[test]
+fn prop_marginal_agreement_random_seeds_multithreaded() {
+    // Relaxed residual at p=4 agrees with the sequential fixed point on
+    // random Ising instances.
+    for seed in 0..8u64 {
+        let spec = ModelSpec::Ising { n: 6 };
+        let mrf = builders::build(&spec, 10_000 + seed);
+        let msgs_a = Messages::uniform(&mrf);
+        let cfg_a = RunConfig::new(spec.clone(), AlgorithmSpec::SequentialResidual)
+            .with_seed(10_000 + seed);
+        let sa = build_engine(&cfg_a.algorithm).run(&mrf, &msgs_a, &cfg_a).unwrap();
+        let msgs_b = Messages::uniform(&mrf);
+        let cfg_b = RunConfig::new(spec, AlgorithmSpec::RelaxedResidual)
+            .with_threads(4)
+            .with_seed(10_000 + seed);
+        let sb = build_engine(&cfg_b.algorithm).run(&mrf, &msgs_b, &cfg_b).unwrap();
+        assert!(sa.converged && sb.converged, "seed {seed}");
+        let diff = max_marginal_diff(&all_marginals(&mrf, &msgs_a), &all_marginals(&mrf, &msgs_b));
+        assert!(diff < 1e-2, "seed {seed}: diff {diff}");
+    }
+}
