@@ -7,7 +7,7 @@
 
 use relaxed_bp::bp::{decode_bits, Messages};
 use relaxed_bp::configio::{AlgorithmSpec, ModelSpec, RunConfig};
-use relaxed_bp::engines::build_engine;
+use relaxed_bp::engines::{build_engine, Engine};
 use relaxed_bp::model::{FactorPool, GraphBuilder, Mrf, NodeFactors};
 use relaxed_bp::util::Xoshiro256;
 

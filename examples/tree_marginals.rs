@@ -6,7 +6,7 @@
 
 use relaxed_bp::bp::{all_marginals, exact_marginals, max_marginal_diff, Messages};
 use relaxed_bp::configio::{AlgorithmSpec, ModelSpec, RunConfig};
-use relaxed_bp::engines::build_engine;
+use relaxed_bp::engines::{build_engine, Engine};
 use relaxed_bp::model::builders;
 
 fn main() -> anyhow::Result<()> {

@@ -20,7 +20,9 @@ pub struct Counters {
     pub claim_failures: u64,
     /// Successful pops (any kind).
     pub pops: u64,
-    /// Scheduler inserts performed by this worker.
+    /// Scheduler inserts performed by this worker, including verifier
+    /// repair re-inserts (seed-phase inserts are not attributed to any
+    /// worker and are excluded).
     pub inserts: u64,
     /// Rounds (synchronous-style engines only).
     pub rounds: u64,

@@ -1,6 +1,11 @@
 //! Coordination layer: per-thread metrics, run budgets, and the quiescence
 //! (termination) protocol shared by all queue-driven engines.
 //!
+//! Engines do not drive this protocol by hand: the
+//! [`exec::WorkerPool`](crate::exec::WorkerPool) runtime is the only
+//! caller of the pop/insert accounting and verifier election on the hot
+//! path (policies reach it through `ExecCtx`).
+//!
 //! ## Termination protocol
 //!
 //! Queue-driven BP has no natural "end of input": the run is over when no

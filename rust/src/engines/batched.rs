@@ -1,10 +1,10 @@
 //! Batched relaxed residual BP — the three-layer extension.
 //!
 //! Identical scheduling semantics to relaxed residual BP, but each worker
-//! drains up to `batch` tasks from the Multiqueue before computing, then
-//! performs all lookahead refreshes for the combined affected-edge set as
-//! **one dense batch**. The batch compute is pluggable via
-//! [`BatchCompute`]:
+//! drains up to `batch` tasks from the Multiqueue before computing (the
+//! pool's batch-draining mode), then performs all lookahead refreshes for
+//! the combined affected-edge set as **one dense batch**. The batch
+//! compute is pluggable via [`BatchCompute`]:
 //!
 //! - [`NativeBatch`] — scalar loop (baseline / arbitrary domains);
 //! - `runtime::batch::PjrtBatch` — the AOT-compiled JAX/Pallas kernel
@@ -17,12 +17,10 @@
 use super::{Engine, EngineStats};
 use crate::bp::{compute_message, msg_buf, residual_l2, Lookahead, Messages, MsgSource};
 use crate::configio::RunConfig;
-use crate::coordinator::{run_workers, Budget, Counters, MetricsReport, Termination};
+use crate::exec::{ExecCtx, TaskPolicy, WorkerPool};
 use crate::model::Mrf;
-use crate::sched::{Entry, Multiqueue, Scheduler, TaskStates};
-use crate::util::{Timer, Xoshiro256};
+use crate::sched::SchedChoice;
 use anyhow::Result;
-use std::sync::atomic::{AtomicBool, Ordering};
 
 /// A backend that recomputes `μ'` for a batch of edges from the live state.
 ///
@@ -84,165 +82,120 @@ impl Engine for RelaxedResidualBatched {
         } else {
             None
         };
-        match &pjrt {
-            Some(b) => run_batched(mrf, msgs, cfg, self.batch, b),
-            None => run_batched(mrf, msgs, cfg, self.batch, &NativeBatch),
+        let backend: &dyn BatchCompute = match &pjrt {
+            Some(b) => b,
+            None => &NativeBatch,
+        };
+        let policy = BatchedPolicy::new(mrf, msgs, cfg, backend);
+        Ok(WorkerPool::from_config(cfg, SchedChoice::Relaxed)
+            .batch(self.batch.max(1))
+            .run(&policy))
+    }
+}
+
+/// Per-worker batch buffers.
+pub(crate) struct BatchScratch {
+    /// Combined affected-edge set of the processed batch.
+    affected: Vec<u32>,
+    /// Dense batch output (`affected.len() * stride`).
+    out: Vec<f64>,
+    /// Per-affected-edge residuals.
+    res: Vec<f64>,
+}
+
+/// Relaxed-residual policy whose affected-set refresh runs as one dense
+/// batch through a pluggable [`BatchCompute`] backend.
+pub(crate) struct BatchedPolicy<'a> {
+    mrf: &'a Mrf,
+    msgs: &'a Messages,
+    la: Lookahead,
+    backend: &'a dyn BatchCompute,
+    /// `mrf.max_domain()`, hoisted: it is an O(V) scan per call.
+    stride: usize,
+    eps: f64,
+}
+
+impl<'a> BatchedPolicy<'a> {
+    pub(crate) fn new(
+        mrf: &'a Mrf,
+        msgs: &'a Messages,
+        cfg: &RunConfig,
+        backend: &'a dyn BatchCompute,
+    ) -> Self {
+        BatchedPolicy {
+            mrf,
+            msgs,
+            la: Lookahead::init(mrf, msgs),
+            backend,
+            stride: mrf.max_domain(),
+            eps: cfg.epsilon,
         }
     }
 }
 
-pub(crate) fn run_batched(
-    mrf: &Mrf,
-    msgs: &Messages,
-    cfg: &RunConfig,
-    batch: usize,
-    backend: &dyn BatchCompute,
-) -> Result<EngineStats> {
-    let timer = Timer::start();
-    let budget = Budget::new(cfg.time_limit_secs, cfg.max_updates);
-    let eps = cfg.epsilon;
-    let batch = batch.max(1);
-    let stride = mrf.max_domain();
+impl TaskPolicy for BatchedPolicy<'_> {
+    type Scratch = BatchScratch;
 
-    let sched = Multiqueue::for_threads(cfg.threads, cfg.queues_per_thread);
-    let la = Lookahead::init(mrf, msgs);
-    let ts = TaskStates::new(mrf.num_messages());
-    let term = Termination::new();
-    let timed_out = AtomicBool::new(false);
+    fn num_tasks(&self) -> usize {
+        self.mrf.num_messages()
+    }
 
-    {
-        let mut rng = Xoshiro256::stream(cfg.seed, 0xBA7C);
-        for e in 0..mrf.num_messages() as u32 {
-            let r = la.residual(e);
-            if r >= eps {
-                term.before_insert();
-                sched.insert(Entry { prio: r, task: e, epoch: ts.epoch(e) }, &mut rng);
-            }
+    fn make_scratch(&self) -> Self::Scratch {
+        BatchScratch { affected: Vec::new(), out: Vec::new(), res: Vec::new() }
+    }
+
+    fn seed(&self, ctx: &mut ExecCtx<'_>) {
+        for e in 0..self.mrf.num_messages() as u32 {
+            ctx.requeue(e, self.la.residual(e));
         }
     }
 
-    let per_thread = run_workers(cfg.threads, |tid| {
-        let mut rng = Xoshiro256::stream(cfg.seed, 5000 + tid as u64);
-        let mut c = Counters::default();
-        let mut claimed: Vec<u32> = Vec::with_capacity(batch);
-        let mut affected: Vec<u32> = Vec::new();
-        let mut out = vec![0.0f64; 0];
-        let mut res = vec![0.0f64; 0];
-        let mut since_flush: u64 = 0;
-
-        while !term.is_done() {
-            // ---- Drain up to `batch` valid tasks ----
-            claimed.clear();
-            term.enter();
-            while claimed.len() < batch {
-                match sched.pop(&mut rng) {
-                    Some(ent) => {
-                        term.after_pop();
-                        c.pops += 1;
-                        if ent.epoch != ts.epoch(ent.task) {
-                            c.stale_pops += 1;
-                            continue;
-                        }
-                        if !ts.try_claim(ent.task, ent.epoch) {
-                            c.claim_failures += 1;
-                            continue;
-                        }
-                        claimed.push(ent.task);
-                    }
-                    None => break,
-                }
-            }
-            if claimed.is_empty() {
-                term.exit();
-                if term.quiescent() {
-                    term.try_verify(|| {
-                        let mut found = false;
-                        for e in 0..mrf.num_messages() as u32 {
-                            let r = la.refresh(mrf, msgs, e);
-                            if r >= eps {
-                                let epoch = ts.bump(e);
-                                term.before_insert();
-                                sched.insert(Entry { prio: r, task: e, epoch }, &mut rng);
-                                found = true;
-                            }
-                        }
-                        !found
-                    });
-                } else {
-                    std::thread::yield_now();
-                    if budget.expired(term.global_updates.load(Ordering::Relaxed)) {
-                        timed_out.store(true, Ordering::Release);
-                        term.set_done();
-                    }
-                }
-                continue;
-            }
-
-            // ---- Commit all claimed updates ----
-            for &e in &claimed {
-                let r = la.commit(mrf, msgs, e);
-                c.updates += 1;
-                since_flush += 1;
-                if r >= eps {
-                    c.useful_updates += 1;
-                } else {
-                    c.wasted_pops += 1;
-                }
-            }
-
-            // ---- Batched refresh of the combined affected set ----
-            affected.clear();
-            for &e in &claimed {
-                let j = mrf.graph.edge_dst[e as usize] as usize;
-                let rev = mrf.graph.reverse(e);
-                for s in mrf.graph.slots(j) {
-                    let k = mrf.graph.adj_out[s];
-                    if k != rev {
-                        affected.push(k);
-                    }
-                }
-            }
-            affected.sort_unstable();
-            affected.dedup();
-
-            out.resize(affected.len() * stride, 0.0);
-            res.resize(affected.len(), 0.0);
-            backend.compute_batch(mrf, msgs, &affected, &mut out, &mut res);
-            for (k, &e) in affected.iter().enumerate() {
-                let len = mrf.msg_len(e);
-                la.store_pending(mrf, e, &out[k * stride..k * stride + len], res[k]);
-                let epoch = ts.bump(e);
-                if res[k] >= eps {
-                    term.before_insert();
-                    sched.insert(Entry { prio: res[k], task: e, epoch }, &mut rng);
-                    c.inserts += 1;
-                }
-            }
-            for &e in &claimed {
-                ts.release(e);
-            }
-            term.exit();
-
-            if since_flush >= 256 {
-                let g = term.global_updates.fetch_add(since_flush, Ordering::Relaxed)
-                    + since_flush;
-                since_flush = 0;
-                if budget.expired(g) {
-                    timed_out.store(true, Ordering::Release);
-                    term.set_done();
-                }
+    fn process(&self, tasks: &[u32], ctx: &mut ExecCtx<'_>, sc: &mut BatchScratch) -> u64 {
+        // ---- Commit all claimed updates ----
+        for &e in tasks {
+            let r = self.la.commit(self.mrf, self.msgs, e);
+            ctx.counters.updates += 1;
+            if r >= self.eps {
+                ctx.counters.useful_updates += 1;
+            } else {
+                ctx.counters.wasted_pops += 1;
             }
         }
-        c
-    });
 
-    let final_max = la.max_residual();
-    Ok(EngineStats {
-        converged: !timed_out.load(Ordering::Acquire),
-        wall_secs: timer.elapsed_secs(),
-        metrics: MetricsReport::aggregate(&per_thread),
-        final_max_priority: final_max,
-    })
+        // ---- Batched refresh of the combined affected set ----
+        sc.affected.clear();
+        for &e in tasks {
+            sc.affected.extend(self.la.affected_edges(self.mrf, e));
+        }
+        sc.affected.sort_unstable();
+        sc.affected.dedup();
+
+        let stride = self.stride;
+        sc.out.resize(sc.affected.len() * stride, 0.0);
+        sc.res.resize(sc.affected.len(), 0.0);
+        self.backend.compute_batch(self.mrf, self.msgs, &sc.affected, &mut sc.out, &mut sc.res);
+        for (k, &e) in sc.affected.iter().enumerate() {
+            let len = self.mrf.msg_len(e);
+            self.la.store_pending(self.mrf, e, &sc.out[k * stride..k * stride + len], sc.res[k]);
+            ctx.requeue(e, sc.res[k]);
+        }
+        tasks.len() as u64
+    }
+
+    fn verify_sweep(&self, ctx: &mut ExecCtx<'_>) -> bool {
+        let mut found = false;
+        for e in 0..self.mrf.num_messages() as u32 {
+            let r = self.la.refresh(self.mrf, self.msgs, e);
+            if ctx.requeue(e, r) {
+                found = true;
+            }
+        }
+        !found
+    }
+
+    fn final_priority(&self) -> f64 {
+        self.la.max_residual()
+    }
 }
 
 #[cfg(test)]

@@ -2,19 +2,25 @@
 //! plus the Appendix-A optimal tree schedule and the PJRT-batched
 //! extension.
 //!
-//! | Engine | Scheduler | Task | Paper label |
-//! |---|---|---|---|
-//! | [`sequential::SequentialResidual`] | seq. heap | message | Residual (baseline) |
-//! | [`synchronous::Synchronous`] | none (rounds) | all messages | Synch |
-//! | [`residual_family::ResidualEngine`] + [`sched::ExactQueue`] | exact PQ | message | Coarse-Grained |
-//! | [`residual_family::ResidualEngine`] + [`sched::Multiqueue`] | Multiqueue | message | Relaxed Residual |
-//! | [`residual_family::ResidualEngine`] (weight-decay) | Multiqueue | message | Weight-Decay |
-//! | [`no_lookahead::NoLookahead`] | Multiqueue | message | Priority |
-//! | [`splash::SplashEngine`] | exact / MQ / random | node splash | S / RSS / RS |
-//! | [`bucket::Bucket`] | rounds | top-0.1·V nodes | Bucket |
-//! | [`random_synch::RandomSynch`] | rounds | random subset | Random Synch |
-//! | [`optimal_tree::OptimalTree`] | exact / MQ | message | Appendix A |
-//! | [`batched::RelaxedResidualBatched`] | Multiqueue | message batch | (extension) |
+//! Every queue-driven engine is a thin [`crate::exec::TaskPolicy`] run on
+//! the shared [`crate::exec::WorkerPool`] runtime; the scheduler is a
+//! [`crate::sched::SchedChoice`] parameter of the pool. Round-based
+//! engines (synchronous, bucket, random synch) and the sequential
+//! baseline have no queue-driven worker loop and stay standalone.
+//!
+//! | Engine | `TaskPolicy` | Scheduler | Task | Paper label |
+//! |---|---|---|---|---|
+//! | [`sequential::SequentialResidual`] | — (sequential) | seq. heap | message | Residual (baseline) |
+//! | [`synchronous::Synchronous`] | — (rounds) | none | all messages | Synch |
+//! | [`residual_family::ResidualEngine`] | `ResidualPolicy` | `Exact` | message | Coarse-Grained |
+//! | [`residual_family::ResidualEngine`] | `ResidualPolicy` | `Relaxed` | message | Relaxed Residual |
+//! | [`residual_family::ResidualEngine`] | `ResidualPolicy` (decay) | `Relaxed` | message | Weight-Decay |
+//! | [`no_lookahead::NoLookahead`] | `ScorePolicy` | `Relaxed` | message | Priority |
+//! | [`splash::SplashEngine`] | `SplashPolicy` | `Exact`/`Relaxed`/`Random` | node splash | S / RSS / RS |
+//! | [`bucket::Bucket`] | — (rounds) | rounds | top-0.1·V nodes | Bucket |
+//! | [`random_synch::RandomSynch`] | — (rounds) | rounds | random subset | Random Synch |
+//! | [`optimal_tree::OptimalTree`] | `OptimalTreePolicy` | `Exact`/`Relaxed` | message | Appendix A |
+//! | [`batched::RelaxedResidualBatched`] | `BatchedPolicy` | `Relaxed` (batch drain) | message batch | (extension) |
 
 pub mod batched;
 pub mod bucket;
@@ -42,8 +48,9 @@ pub struct EngineStats {
     pub wall_secs: f64,
     /// Aggregated counters.
     pub metrics: MetricsReport,
-    /// Max task priority at exit (≈ max residual; 0 for converged runs on
-    /// engines that verify).
+    /// Max task priority at exit (for residual-family engines ≈ max
+    /// residual). Engines that verify convergence guarantee this is below
+    /// `RunConfig::epsilon` on converged runs.
     pub final_max_priority: f64,
 }
 

@@ -9,17 +9,18 @@
 //! the score.
 //!
 //! Priority maintenance is O(1) additions instead of O(deg) message
-//! recomputations, trading scheduling precision for cheaper updates.
+//! recomputations, trading scheduling precision for cheaper updates. The
+//! worker loop itself is the shared [`WorkerPool`] runtime; this file only
+//! supplies the [`ScorePolicy`].
 
 use super::{Engine, EngineStats};
-use crate::bp::{compute_message, msg_buf, residual_l2, Messages, MsgSource};
+use crate::bp::{compute_message, msg_buf, residual_l2, Messages, MsgBuf, MsgSource};
 use crate::configio::RunConfig;
-use crate::coordinator::{run_workers, Budget, Counters, MetricsReport, Termination};
+use crate::exec::{ExecCtx, TaskPolicy, WorkerPool};
 use crate::model::Mrf;
-use crate::sched::{Entry, Multiqueue, Scheduler, TaskStates};
-use crate::util::{AtomicF64, Timer, Xoshiro256};
+use crate::sched::SchedChoice;
+use crate::util::AtomicF64;
 use anyhow::Result;
-use std::sync::atomic::{AtomicBool, Ordering};
 
 pub struct NoLookahead;
 
@@ -29,155 +30,118 @@ impl Engine for NoLookahead {
     }
 
     fn run(&self, mrf: &Mrf, msgs: &Messages, cfg: &RunConfig) -> Result<EngineStats> {
-        let timer = Timer::start();
-        let budget = Budget::new(cfg.time_limit_secs, cfg.max_updates);
-        let eps = cfg.epsilon;
+        let policy = ScorePolicy::new(mrf, msgs, cfg);
+        Ok(WorkerPool::from_config(cfg, SchedChoice::Relaxed).run(&policy))
+    }
+}
 
-        let sched = Multiqueue::for_threads(cfg.threads, cfg.queues_per_thread);
-        let ts = TaskStates::new(mrf.num_messages());
-        let term = Termination::new();
-        let timed_out = AtomicBool::new(false);
+/// Message buffers reused across updates by one worker.
+pub(crate) struct ScoreScratch {
+    new: MsgBuf,
+    cur: MsgBuf,
+}
 
-        // Per-edge accumulated-change scores.
+/// Message-task policy with accumulated-change scores instead of true
+/// residuals.
+pub(crate) struct ScorePolicy<'a> {
+    mrf: &'a Mrf,
+    msgs: &'a Messages,
+    /// Per-edge accumulated-change scores.
+    scores: Vec<AtomicF64>,
+    eps: f64,
+}
+
+impl<'a> ScorePolicy<'a> {
+    pub(crate) fn new(mrf: &'a Mrf, msgs: &'a Messages, cfg: &RunConfig) -> Self {
         let mut scores = Vec::with_capacity(mrf.num_messages());
         scores.resize_with(mrf.num_messages(), AtomicF64::default);
+        ScorePolicy { mrf, msgs, scores, eps: cfg.epsilon }
+    }
+}
 
-        // Seed: initial scores are the true residuals (one-time lookahead
-        // pass; Sutton–McCallum likewise bootstrap with a sweep).
-        {
-            let mut rng = Xoshiro256::stream(cfg.seed, 0xACE);
-            let mut buf = msg_buf();
-            let mut cur = msg_buf();
-            for e in 0..mrf.num_messages() as u32 {
-                let len = compute_message(mrf, msgs, e, &mut buf);
-                msgs.read_msg(mrf, e, &mut cur);
-                let r = residual_l2(&buf[..len], &cur[..len]);
-                scores[e as usize].store(r);
-                if r >= eps {
-                    term.before_insert();
-                    sched.insert(Entry { prio: r, task: e, epoch: ts.epoch(e) }, &mut rng);
+impl TaskPolicy for ScorePolicy<'_> {
+    type Scratch = ScoreScratch;
+
+    fn num_tasks(&self) -> usize {
+        self.mrf.num_messages()
+    }
+
+    fn make_scratch(&self) -> Self::Scratch {
+        ScoreScratch { new: msg_buf(), cur: msg_buf() }
+    }
+
+    fn seed(&self, ctx: &mut ExecCtx<'_>) {
+        // Initial scores are the true residuals (one-time lookahead pass;
+        // Sutton–McCallum likewise bootstrap with a sweep).
+        let mut buf = msg_buf();
+        let mut cur = msg_buf();
+        for e in 0..self.mrf.num_messages() as u32 {
+            let len = compute_message(self.mrf, self.msgs, e, &mut buf);
+            self.msgs.read_msg(self.mrf, e, &mut cur);
+            let r = residual_l2(&buf[..len], &cur[..len]);
+            self.scores[e as usize].store(r);
+            ctx.activate(e, r);
+        }
+    }
+
+    fn process(&self, tasks: &[u32], ctx: &mut ExecCtx<'_>, scratch: &mut ScoreScratch) -> u64 {
+        for &e in tasks {
+            // Compute the update now (no lookahead cache).
+            let len = compute_message(self.mrf, self.msgs, e, &mut scratch.new);
+            self.msgs.read_msg(self.mrf, e, &mut scratch.cur);
+            let r = residual_l2(&scratch.new[..len], &scratch.cur[..len]);
+            self.msgs.write_msg(self.mrf, e, &scratch.new[..len]);
+            self.scores[e as usize].store(0.0);
+            ctx.counters.updates += 1;
+            if r >= self.eps {
+                ctx.counters.useful_updates += 1;
+            } else {
+                ctx.counters.wasted_pops += 1;
+            }
+            // Bump scores of the affected out-edges of dst.
+            if r > 0.0 {
+                let j = self.mrf.graph.edge_dst[e as usize] as usize;
+                let rev = self.mrf.graph.reverse(e);
+                for s in self.mrf.graph.slots(j) {
+                    let k = self.mrf.graph.adj_out[s];
+                    if k == rev {
+                        continue;
+                    }
+                    // `activate`, not `requeue`: scores only grow until the
+                    // next execution, so an existing entry stays a valid
+                    // claim ticket — invalidating it on a sub-threshold
+                    // change would strand the task until the verify sweep.
+                    let prev = self.scores[k as usize].fetch_add(r);
+                    ctx.activate(k, prev + r);
                 }
             }
         }
+        tasks.len() as u64
+    }
 
-        let per_thread = run_workers(cfg.threads, |tid| {
-            let mut rng = Xoshiro256::stream(cfg.seed, 2000 + tid as u64);
-            let mut c = Counters::default();
-            let mut new = msg_buf();
-            let mut cur = msg_buf();
-            let mut since_flush: u64 = 0;
-
-            while !term.is_done() {
-                term.enter();
-                match sched.pop(&mut rng) {
-                    Some(ent) => {
-                        term.after_pop();
-                        c.pops += 1;
-                        if ent.epoch != ts.epoch(ent.task) {
-                            c.stale_pops += 1;
-                            term.exit();
-                            continue;
-                        }
-                        if !ts.try_claim(ent.task, ent.epoch) {
-                            c.claim_failures += 1;
-                            term.exit();
-                            continue;
-                        }
-                        let e = ent.task;
-                        // Compute the update now (no lookahead cache).
-                        let len = compute_message(mrf, msgs, e, &mut new);
-                        msgs.read_msg(mrf, e, &mut cur);
-                        let r = residual_l2(&new[..len], &cur[..len]);
-                        msgs.write_msg(mrf, e, &new[..len]);
-                        scores[e as usize].store(0.0);
-                        c.updates += 1;
-                        since_flush += 1;
-                        if r >= eps {
-                            c.useful_updates += 1;
-                        } else {
-                            c.wasted_pops += 1;
-                        }
-                        // Bump scores of the affected out-edges of dst.
-                        if r > 0.0 {
-                            let j = mrf.graph.edge_dst[e as usize] as usize;
-                            let rev = mrf.graph.reverse(e);
-                            for s in mrf.graph.slots(j) {
-                                let k = mrf.graph.adj_out[s];
-                                if k == rev {
-                                    continue;
-                                }
-                                let prev = scores[k as usize].fetch_add(r);
-                                let p = prev + r;
-                                if p >= eps {
-                                    let epoch = ts.bump(k);
-                                    term.before_insert();
-                                    sched.insert(Entry { prio: p, task: k, epoch }, &mut rng);
-                                    c.inserts += 1;
-                                }
-                            }
-                        }
-                        ts.release(e);
-                        term.exit();
-
-                        if since_flush >= 256 {
-                            let g = term
-                                .global_updates
-                                .fetch_add(since_flush, Ordering::Relaxed)
-                                + since_flush;
-                            since_flush = 0;
-                            if budget.expired(g) {
-                                timed_out.store(true, Ordering::Release);
-                                term.set_done();
-                            }
-                        }
-                    }
-                    None => {
-                        term.exit();
-                        if term.quiescent() {
-                            term.try_verify(|| {
-                                // Verify against TRUE residuals: the score
-                                // is only an approximation and can reach 0
-                                // while the actual residual is not.
-                                let mut found = false;
-                                let mut nb = msg_buf();
-                                let mut cb = msg_buf();
-                                for e in 0..mrf.num_messages() as u32 {
-                                    let len = compute_message(mrf, msgs, e, &mut nb);
-                                    msgs.read_msg(mrf, e, &mut cb);
-                                    let r = residual_l2(&nb[..len], &cb[..len]);
-                                    if r >= eps {
-                                        scores[e as usize].store(r);
-                                        let epoch = ts.bump(e);
-                                        term.before_insert();
-                                        sched.insert(
-                                            Entry { prio: r, task: e, epoch },
-                                            &mut rng,
-                                        );
-                                        found = true;
-                                    }
-                                }
-                                !found
-                            });
-                        } else {
-                            std::thread::yield_now();
-                            if budget.expired(term.global_updates.load(Ordering::Relaxed)) {
-                                timed_out.store(true, Ordering::Release);
-                                term.set_done();
-                            }
-                        }
-                    }
-                }
+    fn verify_sweep(&self, ctx: &mut ExecCtx<'_>) -> bool {
+        // Verify against TRUE residuals: the score is only an approximation
+        // and can reach 0 while the actual residual is not.
+        let mut found = false;
+        let mut nb = msg_buf();
+        let mut cb = msg_buf();
+        for e in 0..self.mrf.num_messages() as u32 {
+            let len = compute_message(self.mrf, self.msgs, e, &mut nb);
+            self.msgs.read_msg(self.mrf, e, &mut cb);
+            let r = residual_l2(&nb[..len], &cb[..len]);
+            // Overwrite unconditionally: a lost insert race can leave a
+            // stale accumulated score above ε whose true residual is below;
+            // syncing to ground truth keeps `final_priority` honest.
+            self.scores[e as usize].store(r);
+            if ctx.activate(e, r) {
+                found = true;
             }
-            c
-        });
+        }
+        !found
+    }
 
-        let final_max = scores.iter().map(|s| s.load()).fold(0.0, f64::max);
-        Ok(EngineStats {
-            converged: !timed_out.load(Ordering::Acquire),
-            wall_secs: timer.elapsed_secs(),
-            metrics: MetricsReport::aggregate(&per_thread),
-            final_max_priority: final_max,
-        })
+    fn final_priority(&self) -> f64 {
+        self.scores.iter().map(|s| s.load()).fold(0.0, f64::max)
     }
 }
 

@@ -12,18 +12,19 @@
 //! Claim 4: the relaxed version performs `O(n + q²·H)` updates. To exercise
 //! exactly the analytical model, *all* messages live in the scheduler for
 //! the whole run (zero-priority pops are the *wasted updates* the claim
-//! counts), and the run ends when all `2(n−1)` messages have had their
-//! useful (non-zero-priority) update.
+//! counts — the pool runs with an insert threshold of `−∞`), and the run
+//! ends when all `2(n−1)` messages have had their useful
+//! (non-zero-priority) update.
 
 use super::{Engine, EngineStats};
-use crate::bp::{compute_message, msg_buf, Messages};
+use crate::bp::{compute_message, msg_buf, Messages, MsgBuf};
 use crate::configio::RunConfig;
-use crate::coordinator::{run_workers, Budget, Counters, MetricsReport, Termination};
+use crate::exec::{ExecCtx, TaskPolicy, WorkerPool};
 use crate::model::Mrf;
-use crate::sched::{Entry, ExactQueue, Multiqueue, Scheduler, TaskStates};
-use crate::util::{AtomicF64, Timer, Xoshiro256};
+use crate::sched::SchedChoice;
+use crate::util::AtomicF64;
 use anyhow::{bail, Result};
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
 pub struct OptimalTree {
     pub relaxed: bool,
@@ -40,159 +41,130 @@ impl Engine for OptimalTree {
 
     fn run(&self, mrf: &Mrf, msgs: &Messages, cfg: &RunConfig) -> Result<EngineStats> {
         // Must be a tree: |E| = |V| − 1 and connected.
-        let me = mrf.num_messages();
-        if me != 2 * (mrf.num_nodes() - 1) {
+        if mrf.num_messages() != 2 * (mrf.num_nodes() - 1) {
             bail!("optimal_tree engine requires a tree model");
         }
-        let timer = Timer::start();
-        let budget = Budget::new(cfg.time_limit_secs, cfg.max_updates);
-        let n = mrf.num_nodes();
+        let choice = if self.relaxed { SchedChoice::Relaxed } else { SchedChoice::Exact };
+        let policy = OptimalTreePolicy::new(mrf, msgs);
+        Ok(WorkerPool::from_config(cfg, choice)
+            .insert_threshold(f64::NEG_INFINITY)
+            .run(&policy))
+    }
+}
 
-        let sched: Box<dyn Scheduler> = if self.relaxed {
-            Box::new(Multiqueue::for_threads(cfg.threads, cfg.queues_per_thread))
-        } else {
-            Box::new(ExactQueue::with_capacity(me))
-        };
-        let sched = sched.as_ref();
+/// Message-task policy implementing the Appendix-A priority function. The
+/// pool keeps every message resident (threshold `−∞`); completion is the
+/// useful-update target, not quiescence.
+pub(crate) struct OptimalTreePolicy<'a> {
+    mrf: &'a Mrf,
+    msgs: &'a Messages,
+    /// Current Appendix-A priority of each message.
+    prio: Vec<AtomicF64>,
+    /// Messages `μ_{k→i}` (k ≠ j) still to fire before (i→j) activates.
+    remaining: Vec<AtomicU32>,
+    /// Min priority among the fired in-messages (rule 3).
+    min_in_prio: Vec<AtomicF64>,
+    useful: AtomicU64,
+    target: u64,
+}
 
-        // Per-message metadata.
-        let prio: Vec<AtomicF64> = (0..me).map(|_| AtomicF64::new(0.0)).collect();
-        // Messages μ_{k→i} (k ≠ j) still to fire before (i→j) activates.
-        let remaining: Vec<AtomicU32> = (0..me)
-            .map(|e| {
-                let i = mrf.graph.edge_src[e] as usize;
-                AtomicU32::new((mrf.graph.degree(i) - 1) as u32)
-            })
-            .collect();
-        let min_in_prio: Vec<AtomicF64> = (0..me).map(|_| AtomicF64::new(f64::MAX)).collect();
-
-        let ts = TaskStates::new(me);
-        let term = Termination::new();
-        let timed_out = AtomicBool::new(false);
-        let useful_count = AtomicU64::new(0);
-        let target_useful = me as u64;
-
-        // Seed: ALL messages enter the scheduler; leaf out-edges at n.
-        {
-            let mut rng = Xoshiro256::stream(cfg.seed, 0x0CEA);
-            for e in 0..me as u32 {
-                let i = mrf.graph.edge_src[e as usize] as usize;
-                let p = if mrf.graph.degree(i) == 1 { n as f64 } else { 0.0 };
-                prio[e as usize].store(p);
-                term.before_insert();
-                sched.insert(Entry { prio: p, task: e, epoch: ts.epoch(e) }, &mut rng);
-            }
+impl<'a> OptimalTreePolicy<'a> {
+    pub(crate) fn new(mrf: &'a Mrf, msgs: &'a Messages) -> Self {
+        let me = mrf.num_messages();
+        OptimalTreePolicy {
+            mrf,
+            msgs,
+            prio: (0..me).map(|_| AtomicF64::new(0.0)).collect(),
+            remaining: (0..me)
+                .map(|e| {
+                    let i = mrf.graph.edge_src[e] as usize;
+                    AtomicU32::new((mrf.graph.degree(i) - 1) as u32)
+                })
+                .collect(),
+            min_in_prio: (0..me).map(|_| AtomicF64::new(f64::MAX)).collect(),
+            useful: AtomicU64::new(0),
+            target: me as u64,
         }
+    }
+}
 
-        let per_thread = run_workers(cfg.threads, |tid| {
-            let mut rng = Xoshiro256::stream(cfg.seed, 4000 + tid as u64);
-            let mut c = Counters::default();
-            let mut buf = msg_buf();
-            let mut since_flush: u64 = 0;
+impl TaskPolicy for OptimalTreePolicy<'_> {
+    type Scratch = MsgBuf;
 
-            while !term.is_done() {
-                term.enter();
-                match sched.pop(&mut rng) {
-                    Some(ent) => {
-                        term.after_pop();
-                        c.pops += 1;
-                        if ent.epoch != ts.epoch(ent.task) {
-                            c.stale_pops += 1;
-                            term.exit();
-                            continue;
-                        }
-                        if !ts.try_claim(ent.task, ent.epoch) {
-                            c.claim_failures += 1;
-                            term.exit();
-                            continue;
-                        }
-                        let e = ent.task;
-                        let p = prio[e as usize].load();
-                        // Execute the update (even with priority 0 — those
-                        // are the wasted updates of Claim 4).
-                        let len = compute_message(mrf, msgs, e, &mut buf);
-                        msgs.write_msg(mrf, e, &buf[..len]);
-                        c.updates += 1;
-                        since_flush += 1;
+    fn num_tasks(&self) -> usize {
+        self.mrf.num_messages()
+    }
 
-                        if p > 0.0 {
-                            c.useful_updates += 1;
-                            prio[e as usize].store(0.0);
-                            // Propagate rule (3) to out-edges of dst.
-                            let j = mrf.graph.edge_dst[e as usize] as usize;
-                            let rev = mrf.graph.reverse(e);
-                            for s in mrf.graph.slots(j) {
-                                let k = mrf.graph.adj_out[s];
-                                if k == rev {
-                                    continue;
-                                }
-                                min_in_prio[k as usize].fetch_min(p);
-                                if remaining[k as usize].fetch_sub(1, Ordering::AcqRel) == 1 {
-                                    let newp = min_in_prio[k as usize].load() - 1.0;
-                                    prio[k as usize].store(newp);
-                                    let epoch = ts.bump(k);
-                                    term.before_insert();
-                                    sched.insert(
-                                        Entry { prio: newp, task: k, epoch },
-                                        &mut rng,
-                                    );
-                                    c.inserts += 1;
-                                }
-                            }
-                            let done =
-                                useful_count.fetch_add(1, Ordering::AcqRel) + 1 == target_useful;
-                            if done {
-                                term.set_done();
-                            }
-                            // Re-insert with priority 0: the task stays in
-                            // the scheduler pool per the analytical model.
-                            let epoch = ts.bump(e);
-                            term.before_insert();
-                            sched.insert(Entry { prio: 0.0, task: e, epoch }, &mut rng);
-                        } else {
-                            c.wasted_pops += 1;
-                            // Wasted update: put it straight back.
-                            let epoch = ts.bump(e);
-                            term.before_insert();
-                            sched.insert(Entry { prio: 0.0, task: e, epoch }, &mut rng);
-                        }
-                        ts.release(e);
-                        term.exit();
+    fn make_scratch(&self) -> Self::Scratch {
+        msg_buf()
+    }
 
-                        if since_flush >= 256 {
-                            let g = term
-                                .global_updates
-                                .fetch_add(since_flush, Ordering::Relaxed)
-                                + since_flush;
-                            since_flush = 0;
-                            if budget.expired(g) {
-                                timed_out.store(true, Ordering::Release);
-                                term.set_done();
-                            }
-                        }
+    fn seed(&self, ctx: &mut ExecCtx<'_>) {
+        // ALL messages enter the scheduler; leaf out-edges at n.
+        let n = self.mrf.num_nodes();
+        for e in 0..self.mrf.num_messages() as u32 {
+            let i = self.mrf.graph.edge_src[e as usize] as usize;
+            let p = if self.mrf.graph.degree(i) == 1 { n as f64 } else { 0.0 };
+            self.prio[e as usize].store(p);
+            ctx.requeue(e, p);
+        }
+    }
+
+    fn process(&self, tasks: &[u32], ctx: &mut ExecCtx<'_>, buf: &mut MsgBuf) -> u64 {
+        for &e in tasks {
+            let p = self.prio[e as usize].load();
+            // Execute the update (even with priority 0 — those are the
+            // wasted updates of Claim 4).
+            let len = compute_message(self.mrf, self.msgs, e, buf);
+            self.msgs.write_msg(self.mrf, e, &buf[..len]);
+            ctx.counters.updates += 1;
+
+            if p > 0.0 {
+                ctx.counters.useful_updates += 1;
+                self.prio[e as usize].store(0.0);
+                // Propagate rule (3) to out-edges of dst.
+                let j = self.mrf.graph.edge_dst[e as usize] as usize;
+                let rev = self.mrf.graph.reverse(e);
+                for s in self.mrf.graph.slots(j) {
+                    let k = self.mrf.graph.adj_out[s];
+                    if k == rev {
+                        continue;
                     }
-                    None => {
-                        term.exit();
-                        // The pool always holds every task; an empty pop can
-                        // only race with other pops. Spin.
-                        std::thread::yield_now();
-                        if budget.expired(term.global_updates.load(Ordering::Relaxed)) {
-                            timed_out.store(true, Ordering::Release);
-                            term.set_done();
-                        }
+                    self.min_in_prio[k as usize].fetch_min(p);
+                    if self.remaining[k as usize].fetch_sub(1, Ordering::AcqRel) == 1 {
+                        let newp = self.min_in_prio[k as usize].load() - 1.0;
+                        self.prio[k as usize].store(newp);
+                        ctx.requeue(k, newp);
                     }
                 }
+                if self.useful.fetch_add(1, Ordering::AcqRel) + 1 == self.target {
+                    ctx.finish();
+                }
+            } else {
+                ctx.counters.wasted_pops += 1;
             }
-            c
-        });
+            // Re-insert with priority 0: the task stays in the scheduler
+            // pool per the analytical model (threshold is −∞).
+            ctx.requeue(e, 0.0);
+        }
+        tasks.len() as u64
+    }
 
-        let useful = useful_count.load(Ordering::Acquire);
-        Ok(EngineStats {
-            converged: useful == target_useful,
-            wall_secs: timer.elapsed_secs(),
-            metrics: MetricsReport::aggregate(&per_thread),
-            final_max_priority: 0.0,
-        })
+    fn verify_sweep(&self, _: &mut ExecCtx<'_>) -> bool {
+        // Every task is always resident, so the pool cannot quiesce while
+        // useful updates remain; this is only reachable on the degenerate
+        // zero-message tree.
+        self.useful.load(Ordering::Acquire) == self.target
+    }
+
+    fn converged(&self, _timed_out: bool) -> bool {
+        // Completion is the analytical model's criterion: every message
+        // got its one useful update.
+        self.useful.load(Ordering::Acquire) == self.target
+    }
+
+    fn final_priority(&self) -> f64 {
+        0.0
     }
 }
 

@@ -2,28 +2,26 @@
 //! Residual (Multiqueue), and Weight-Decay (Multiqueue with `res/m`
 //! priorities) — §3.2/§3.3 of the paper.
 //!
-//! All three share one worker loop; they differ only in the scheduler
-//! behind the [`Scheduler`] trait and in the priority function:
+//! All three are one [`ResidualPolicy`] on the [`WorkerPool`]; they differ
+//! only in the [`SchedChoice`] and in the priority function:
 //!
 //! - residual: `prio(e) = res(e) = ‖μ'_e − μ_e‖₂`;
 //! - weight-decay (Knoll et al. 2015): `prio(e) = res(e) / m(e)` where
 //!   `m(e)` counts how many times `e` has been committed — de-prioritizing
 //!   messages stuck in large-residual cycles.
 //!
-//! The loop follows §3.3: pop → validate epoch → claim ("mark in-process")
-//! → commit the precomputed update → refresh + requeue affected messages →
-//! release. Termination uses the coordinator's quiescence + verify
-//! protocol, which re-scans true residuals before declaring convergence.
+//! Processing follows §3.3: commit the precomputed update, then refresh +
+//! requeue the affected out-edges. The pop → validate epoch → claim
+//! protocol and the quiescence + verify termination live in the runtime.
 
 use super::{Engine, EngineStats};
 use crate::bp::{Lookahead, Messages};
 use crate::configio::RunConfig;
-use crate::coordinator::{run_workers, Budget, Counters, MetricsReport, Termination};
+use crate::exec::{ExecCtx, TaskPolicy, WorkerPool};
 use crate::model::Mrf;
-use crate::sched::{Entry, ExactQueue, Multiqueue, Scheduler, TaskStates};
-use crate::util::{Timer, Xoshiro256};
+use crate::sched::SchedChoice;
 use anyhow::Result;
-use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::atomic::{AtomicU32, Ordering};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Kind {
@@ -63,176 +61,116 @@ impl Engine for ResidualEngine {
     }
 
     fn run(&self, mrf: &Mrf, msgs: &Messages, cfg: &RunConfig) -> Result<EngineStats> {
-        let sched: Box<dyn Scheduler> = match self.kind {
-            Kind::CoarseGrained => Box::new(ExactQueue::with_capacity(mrf.num_messages())),
-            _ => Box::new(Multiqueue::for_threads(cfg.threads, cfg.queues_per_thread)),
+        let choice = match self.kind {
+            Kind::CoarseGrained => SchedChoice::Exact,
+            _ => SchedChoice::Relaxed,
         };
-        let update_counts = match self.kind {
-            Kind::WeightDecay => {
-                let mut v = Vec::with_capacity(mrf.num_messages());
-                v.resize_with(mrf.num_messages(), || AtomicU32::new(0));
-                Some(v)
-            }
-            _ => None,
-        };
-        run_residual_loop(mrf, msgs, cfg, sched.as_ref(), update_counts.as_deref())
+        let policy = ResidualPolicy::new(mrf, msgs, cfg, self.kind == Kind::WeightDecay);
+        Ok(WorkerPool::from_config(cfg, choice).run(&policy))
     }
 }
 
-/// Priority of edge `e` given its residual (weight-decay divides by the
-/// execution count).
-#[inline]
-fn priority(res: f64, e: u32, counts: Option<&[AtomicU32]>) -> f64 {
-    match counts {
-        None => res,
-        Some(c) => res / (c[e as usize].load(Ordering::Relaxed).max(1) as f64),
+/// Message-task policy with residual (or weight-decayed residual)
+/// priorities and one-step lookahead. Shared by Coarse-Grained, Relaxed
+/// Residual, and Weight-Decay.
+pub(crate) struct ResidualPolicy<'a> {
+    mrf: &'a Mrf,
+    msgs: &'a Messages,
+    la: Lookahead,
+    /// Per-message commit counts (weight-decay only).
+    counts: Option<Vec<AtomicU32>>,
+    eps: f64,
+}
+
+impl<'a> ResidualPolicy<'a> {
+    pub(crate) fn new(
+        mrf: &'a Mrf,
+        msgs: &'a Messages,
+        cfg: &RunConfig,
+        weight_decay: bool,
+    ) -> Self {
+        let counts = weight_decay.then(|| {
+            let mut v = Vec::with_capacity(mrf.num_messages());
+            v.resize_with(mrf.num_messages(), || AtomicU32::new(0));
+            v
+        });
+        ResidualPolicy {
+            mrf,
+            msgs,
+            la: Lookahead::init(mrf, msgs),
+            counts,
+            eps: cfg.epsilon,
+        }
+    }
+
+    /// Priority of edge `e` given its residual (weight-decay divides by the
+    /// execution count).
+    #[inline]
+    fn priority(&self, res: f64, e: u32) -> f64 {
+        match &self.counts {
+            None => res,
+            Some(c) => res / (c[e as usize].load(Ordering::Relaxed).max(1) as f64),
+        }
     }
 }
 
-/// The shared worker loop. Exposed to the batched engine as well.
-pub(crate) fn run_residual_loop(
-    mrf: &Mrf,
-    msgs: &Messages,
-    cfg: &RunConfig,
-    sched: &dyn Scheduler,
-    counts: Option<&[AtomicU32]>,
-) -> Result<EngineStats> {
-    let timer = Timer::start();
-    let budget = Budget::new(cfg.time_limit_secs, cfg.max_updates);
-    let eps = cfg.epsilon;
+impl TaskPolicy for ResidualPolicy<'_> {
+    type Scratch = ();
 
-    let la = Lookahead::init(mrf, msgs);
-    let ts = TaskStates::new(mrf.num_messages());
-    let term = Termination::new();
-    let timed_out = AtomicBool::new(false);
+    fn num_tasks(&self) -> usize {
+        self.mrf.num_messages()
+    }
 
-    // Seed the scheduler.
-    {
-        let mut rng = Xoshiro256::stream(cfg.seed, 0xFEED);
-        for e in 0..mrf.num_messages() as u32 {
-            let p = priority(la.residual(e), e, counts);
-            if p >= eps {
-                term.before_insert();
-                sched.insert(Entry { prio: p, task: e, epoch: ts.epoch(e) }, &mut rng);
-            }
+    fn make_scratch(&self) -> Self::Scratch {}
+
+    fn seed(&self, ctx: &mut ExecCtx<'_>) {
+        for e in 0..self.mrf.num_messages() as u32 {
+            ctx.requeue(e, self.priority(self.la.residual(e), e));
         }
     }
 
-    let per_thread = run_workers(cfg.threads, |tid| {
-        let mut rng = Xoshiro256::stream(cfg.seed, 1000 + tid as u64);
-        let mut c = Counters::default();
-        let mut since_flush: u64 = 0;
-        let mut idle_spins: u32 = 0;
-
-        while !term.is_done() {
-            term.enter();
-            let popped = sched.pop(&mut rng);
-            match popped {
-                Some(ent) => {
-                    term.after_pop();
-                    c.pops += 1;
-                    idle_spins = 0;
-                    if ent.epoch != ts.epoch(ent.task) {
-                        c.stale_pops += 1;
-                        term.exit();
-                        continue;
-                    }
-                    if !ts.try_claim(ent.task, ent.epoch) {
-                        c.claim_failures += 1;
-                        term.exit();
-                        continue;
-                    }
-                    // Commit the precomputed update.
-                    let res = la.commit(mrf, msgs, ent.task);
-                    c.updates += 1;
-                    since_flush += 1;
-                    if res >= eps {
-                        c.useful_updates += 1;
-                    } else {
-                        c.wasted_pops += 1;
-                    }
-                    if let Some(counts) = counts {
-                        counts[ent.task as usize].fetch_add(1, Ordering::Relaxed);
-                    }
-                    // Refresh + requeue the affected out-edges of dst.
-                    let j = mrf.graph.edge_dst[ent.task as usize] as usize;
-                    let rev = mrf.graph.reverse(ent.task);
-                    for s in mrf.graph.slots(j) {
-                        let k = mrf.graph.adj_out[s];
-                        if k == rev {
-                            continue;
-                        }
-                        let r = la.refresh(mrf, msgs, k);
-                        let p = priority(r, k, counts);
-                        let epoch = ts.bump(k);
-                        if p >= eps {
-                            term.before_insert();
-                            sched.insert(Entry { prio: p, task: k, epoch }, &mut rng);
-                            c.inserts += 1;
-                        }
-                    }
-                    ts.release(ent.task);
-                    term.exit();
-
-                    // Periodic budget check (updates flushed in batches).
-                    if since_flush >= 256 {
-                        let g = term
-                            .global_updates
-                            .fetch_add(since_flush, Ordering::Relaxed)
-                            + since_flush;
-                        since_flush = 0;
-                        if budget.expired(g) {
-                            timed_out.store(true, Ordering::Release);
-                            term.set_done();
-                        }
-                    }
-                }
-                None => {
-                    term.exit();
-                    if term.quiescent() {
-                        term.try_verify(|| {
-                            // Full refresh of every edge repairs any
-                            // residual lost to benign write races.
-                            let mut found = false;
-                            for e in 0..mrf.num_messages() as u32 {
-                                let r = la.refresh(mrf, msgs, e);
-                                let p = priority(r, e, counts);
-                                if p >= eps {
-                                    let epoch = ts.bump(e);
-                                    term.before_insert();
-                                    sched.insert(Entry { prio: p, task: e, epoch }, &mut rng);
-                                    found = true;
-                                }
-                            }
-                            !found
-                        });
-                    } else {
-                        idle_spins += 1;
-                        if idle_spins > 64 {
-                            std::thread::yield_now();
-                        } else {
-                            std::hint::spin_loop();
-                        }
-                        // An idle thread must also enforce the wall clock,
-                        // otherwise a deadlocked run would never stop.
-                        if budget.expired(term.global_updates.load(Ordering::Relaxed)) {
-                            timed_out.store(true, Ordering::Release);
-                            term.set_done();
-                        }
-                    }
-                }
+    fn process(&self, tasks: &[u32], ctx: &mut ExecCtx<'_>, _: &mut ()) -> u64 {
+        for &e in tasks {
+            // Commit the precomputed update.
+            let res = self.la.commit(self.mrf, self.msgs, e);
+            ctx.counters.updates += 1;
+            if res >= self.eps {
+                ctx.counters.useful_updates += 1;
+            } else {
+                ctx.counters.wasted_pops += 1;
+            }
+            if let Some(counts) = &self.counts {
+                counts[e as usize].fetch_add(1, Ordering::Relaxed);
+            }
+            // Refresh + requeue the affected out-edges of dst.
+            for k in self.la.affected_edges(self.mrf, e) {
+                let r = self.la.refresh(self.mrf, self.msgs, k);
+                ctx.requeue(k, self.priority(r, k));
             }
         }
-        c
-    });
+        tasks.len() as u64
+    }
 
-    let final_max = la.max_residual();
-    Ok(EngineStats {
-        converged: !timed_out.load(Ordering::Acquire),
-        wall_secs: timer.elapsed_secs(),
-        metrics: MetricsReport::aggregate(&per_thread),
-        final_max_priority: final_max,
-    })
+    fn verify_sweep(&self, ctx: &mut ExecCtx<'_>) -> bool {
+        // Full refresh of every edge repairs any residual lost to benign
+        // write races.
+        let mut found = false;
+        for e in 0..self.mrf.num_messages() as u32 {
+            let r = self.la.refresh(self.mrf, self.msgs, e);
+            if ctx.requeue(e, self.priority(r, e)) {
+                found = true;
+            }
+        }
+        !found
+    }
+
+    fn final_priority(&self) -> f64 {
+        // Max *priority*, not raw residual: under weight decay a converged
+        // run can retain residuals above ε whose decayed priority is below.
+        (0..self.mrf.num_messages() as u32)
+            .map(|e| self.priority(self.la.residual(e), e))
+            .fold(0.0, f64::max)
+    }
 }
 
 #[cfg(test)]

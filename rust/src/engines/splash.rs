@@ -6,7 +6,7 @@
 //! (gathering information toward `v`), then in BFS order (spreading it
 //! back out).
 //!
-//! Variants (all sharing one worker loop):
+//! Variants (all one [`SplashPolicy`] on the shared [`WorkerPool`]):
 //! - **Splash** (paper "S H"): exact PQ, full splash (every processed node
 //!   updates *all* outgoing messages);
 //! - **Smart splash** ("SS"/"RSS"): only BFS-tree edges are updated —
@@ -19,281 +19,233 @@
 use super::{Engine, EngineStats};
 use crate::bp::{Lookahead, Messages};
 use crate::configio::RunConfig;
-use crate::coordinator::{run_workers, Budget, Counters, MetricsReport, Termination};
+use crate::coordinator::Counters;
+use crate::exec::{ExecCtx, TaskPolicy, WorkerPool};
 use crate::model::Mrf;
-use crate::sched::{Entry, ExactQueue, Multiqueue, RandomQueues, Scheduler, TaskStates};
-use crate::util::{Timer, Xoshiro256};
+use crate::sched::SchedChoice;
 use anyhow::Result;
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
-
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum SchedKind {
-    Exact,
-    Multi,
-    Random,
-}
+use std::collections::HashSet;
 
 pub struct SplashEngine {
     h: usize,
     smart: bool,
-    kind: SchedKind,
+    choice: SchedChoice,
 }
 
 impl SplashEngine {
     pub fn exact(h: usize, smart: bool) -> Self {
-        Self { h, smart, kind: SchedKind::Exact }
+        Self { h, smart, choice: SchedChoice::Exact }
     }
 
     pub fn relaxed(h: usize, smart: bool) -> Self {
-        Self { h, smart, kind: SchedKind::Multi }
+        Self { h, smart, choice: SchedChoice::Relaxed }
     }
 
     pub fn random(h: usize, smart: bool) -> Self {
-        Self { h, smart, kind: SchedKind::Random }
+        Self { h, smart, choice: SchedChoice::Random }
     }
-}
-
-/// Node residual: max residual over incoming messages.
-#[inline]
-fn node_priority(mrf: &Mrf, la: &Lookahead, v: u32) -> f64 {
-    let mut p = 0.0f64;
-    for s in mrf.graph.slots(v as usize) {
-        p = p.max(la.residual(mrf.graph.adj_in[s]));
-    }
-    p
 }
 
 impl Engine for SplashEngine {
     fn name(&self) -> String {
-        let base = match (self.kind, self.smart) {
-            (SchedKind::Exact, false) => "splash",
-            (SchedKind::Exact, true) => "smart_splash",
-            (SchedKind::Multi, true) => "relaxed_smart_splash",
-            (SchedKind::Multi, false) => "relaxed_splash",
-            (SchedKind::Random, false) => "random_splash",
-            (SchedKind::Random, true) => "random_smart_splash",
+        let base = match (self.choice, self.smart) {
+            (SchedChoice::Exact, false) => "splash",
+            (SchedChoice::Exact, true) => "smart_splash",
+            (SchedChoice::Relaxed, true) => "relaxed_smart_splash",
+            (SchedChoice::Relaxed, false) => "relaxed_splash",
+            (SchedChoice::Random, false) => "random_splash",
+            (SchedChoice::Random, true) => "random_smart_splash",
         };
         format!("{base}_{}", self.h)
     }
 
     fn run(&self, mrf: &Mrf, msgs: &Messages, cfg: &RunConfig) -> Result<EngineStats> {
-        let timer = Timer::start();
-        let budget = Budget::new(cfg.time_limit_secs, cfg.max_updates);
-        let eps = cfg.epsilon;
-        let n = mrf.num_nodes();
+        let policy = SplashPolicy::new(mrf, msgs, cfg, self.h, self.smart);
+        // Budget units are splash-tree nodes, several message updates
+        // each, so flush at finer granularity than message engines.
+        Ok(WorkerPool::from_config(cfg, self.choice).flush_every(128).run(&policy))
+    }
+}
 
-        let sched: Box<dyn Scheduler> = match self.kind {
-            SchedKind::Exact => Box::new(ExactQueue::with_capacity(n)),
-            SchedKind::Multi => {
-                Box::new(Multiqueue::for_threads(cfg.threads, cfg.queues_per_thread))
+/// Per-worker BFS and refresh buffers, reused across splashes.
+pub(crate) struct SplashScratch {
+    /// `(node, parent_edge or u32::MAX)` in BFS order.
+    order: Vec<(u32, u32)>,
+    visited: HashSet<u32>,
+    /// Nodes that received a new message during the splash.
+    touched: Vec<u32>,
+    /// Nodes whose priority may have changed.
+    affected: Vec<u32>,
+}
+
+/// Node-task policy: node-residual priorities, splash processing.
+pub(crate) struct SplashPolicy<'a> {
+    mrf: &'a Mrf,
+    msgs: &'a Messages,
+    la: Lookahead,
+    h: usize,
+    smart: bool,
+    eps: f64,
+}
+
+impl<'a> SplashPolicy<'a> {
+    pub(crate) fn new(
+        mrf: &'a Mrf,
+        msgs: &'a Messages,
+        cfg: &RunConfig,
+        h: usize,
+        smart: bool,
+    ) -> Self {
+        SplashPolicy { mrf, msgs, la: Lookahead::init(mrf, msgs), h, smart, eps: cfg.epsilon }
+    }
+
+    /// Node residual: max residual over incoming messages.
+    #[inline]
+    fn node_priority(&self, v: u32) -> f64 {
+        let mut p = 0.0f64;
+        for s in self.mrf.graph.slots(v as usize) {
+            p = p.max(self.la.residual(self.mrf.graph.adj_in[s]));
+        }
+        p
+    }
+
+    /// Commit edge `e`'s pending update and record its destination.
+    fn commit(&self, e: u32, c: &mut Counters, touched: &mut Vec<u32>) {
+        let r = self.la.refresh(self.mrf, self.msgs, e);
+        self.la.commit(self.mrf, self.msgs, e);
+        c.updates += 1;
+        if r >= self.eps {
+            c.useful_updates += 1;
+        }
+        touched.push(self.mrf.graph.edge_dst[e as usize]);
+    }
+
+    /// The splash operation rooted at `v`; returns the BFS tree size.
+    fn splash(&self, v: u32, ctx: &mut ExecCtx<'_>, sc: &mut SplashScratch) -> u64 {
+        ctx.counters.splashes += 1;
+        sc.order.clear();
+        sc.visited.clear();
+        sc.touched.clear();
+        sc.affected.clear();
+
+        // BFS to depth h.
+        sc.visited.insert(v);
+        sc.order.push((v, u32::MAX));
+        let mut frontier_start = 0usize;
+        for _depth in 0..self.h {
+            let frontier_end = sc.order.len();
+            for idx in frontier_start..frontier_end {
+                let (u, _) = sc.order[idx];
+                for s in self.mrf.graph.slots(u as usize) {
+                    let w = self.mrf.graph.adj_node[s];
+                    if sc.visited.insert(w) {
+                        // parent edge: u→w
+                        sc.order.push((w, self.mrf.graph.adj_out[s]));
+                    }
+                }
             }
-            // The journal version: p exact queues, random insert/delete.
-            SchedKind::Random => Box::new(RandomQueues::new(cfg.threads.max(2))),
-        };
-        let sched = sched.as_ref();
+            frontier_start = frontier_end;
+        }
 
-        let la = Lookahead::init(mrf, msgs);
-        let ts = TaskStates::new(n);
-        let term = Termination::new();
-        let timed_out = AtomicBool::new(false);
-
-        // Seed with all nodes above threshold.
-        {
-            let mut rng = Xoshiro256::stream(cfg.seed, 0x5A5A);
-            for v in 0..n as u32 {
-                let p = node_priority(mrf, &la, v);
-                if p >= eps {
-                    term.before_insert();
-                    sched.insert(Entry { prio: p, task: v, epoch: ts.epoch(v) }, &mut rng);
+        // Gather: reverse BFS order.
+        for &(u, pe) in sc.order.iter().rev() {
+            if self.smart {
+                if pe != u32::MAX {
+                    // child→parent is the reverse of the parent→child tree
+                    // edge.
+                    self.commit(self.mrf.graph.reverse(pe), ctx.counters, &mut sc.touched);
+                }
+            } else {
+                for s in self.mrf.graph.slots(u as usize) {
+                    self.commit(self.mrf.graph.adj_out[s], ctx.counters, &mut sc.touched);
+                }
+            }
+        }
+        // Scatter: BFS order.
+        for &(u, pe) in sc.order.iter() {
+            if self.smart {
+                if pe != u32::MAX {
+                    self.commit(pe, ctx.counters, &mut sc.touched);
+                }
+            } else {
+                for s in self.mrf.graph.slots(u as usize) {
+                    self.commit(self.mrf.graph.adj_out[s], ctx.counters, &mut sc.touched);
                 }
             }
         }
 
-        let h = self.h;
-        let smart = self.smart;
-
-        let per_thread = run_workers(cfg.threads, |tid| {
-            let mut rng = Xoshiro256::stream(cfg.seed, 3000 + tid as u64);
-            let mut c = Counters::default();
-            let mut since_flush: u64 = 0;
-            // Scratch reused across splashes.
-            let mut order: Vec<(u32, u32)> = Vec::new(); // (node, parent_edge or MAX)
-            let mut visited: HashMap<u32, ()> = HashMap::new();
-            let mut touched: Vec<u32> = Vec::new();
-
-            while !term.is_done() {
-                term.enter();
-                match sched.pop(&mut rng) {
-                    Some(ent) => {
-                        term.after_pop();
-                        c.pops += 1;
-                        if ent.epoch != ts.epoch(ent.task) {
-                            c.stale_pops += 1;
-                            term.exit();
-                            continue;
-                        }
-                        if !ts.try_claim(ent.task, ent.epoch) {
-                            c.claim_failures += 1;
-                            term.exit();
-                            continue;
-                        }
-                        let v = ent.task;
-                        if node_priority(mrf, &la, v) < eps {
-                            // Priority decayed since insertion — a wasted
-                            // scheduler access, no splash performed.
-                            c.wasted_pops += 1;
-                            ts.release(v);
-                            term.exit();
-                            continue;
-                        }
-
-                        // ---- Splash operation ----
-                        c.splashes += 1;
-                        order.clear();
-                        visited.clear();
-                        touched.clear();
-                        // BFS to depth h.
-                        visited.insert(v, ());
-                        order.push((v, u32::MAX));
-                        let mut frontier_start = 0usize;
-                        for _depth in 0..h {
-                            let frontier_end = order.len();
-                            for idx in frontier_start..frontier_end {
-                                let (u, _) = order[idx];
-                                for s in mrf.graph.slots(u as usize) {
-                                    let w = mrf.graph.adj_node[s];
-                                    if !visited.contains_key(&w) {
-                                        visited.insert(w, ());
-                                        // parent edge: u→w
-                                        order.push((w, mrf.graph.adj_out[s]));
-                                    }
-                                }
-                            }
-                            frontier_start = frontier_end;
-                        }
-
-                        let commit = |e: u32, c: &mut Counters, touched: &mut Vec<u32>| {
-                            let r = la.refresh(mrf, msgs, e);
-                            la.commit(mrf, msgs, e);
-                            c.updates += 1;
-                            if r >= eps {
-                                c.useful_updates += 1;
-                            }
-                            touched.push(mrf.graph.edge_dst[e as usize]);
-                        };
-
-                        // Gather: reverse BFS order.
-                        for &(u, pe) in order.iter().rev() {
-                            if smart {
-                                if pe != u32::MAX {
-                                    // child→parent is the reverse of the
-                                    // parent→child tree edge.
-                                    commit(mrf.graph.reverse(pe), &mut c, &mut touched);
-                                }
-                            } else {
-                                for s in mrf.graph.slots(u as usize) {
-                                    commit(mrf.graph.adj_out[s], &mut c, &mut touched);
-                                }
-                            }
-                        }
-                        // Scatter: BFS order.
-                        for &(u, pe) in order.iter() {
-                            if smart {
-                                if pe != u32::MAX {
-                                    commit(pe, &mut c, &mut touched);
-                                }
-                            } else {
-                                for s in mrf.graph.slots(u as usize) {
-                                    commit(mrf.graph.adj_out[s], &mut c, &mut touched);
-                                }
-                            }
-                        }
-
-                        // ---- Refresh residuals and requeue priorities ----
-                        touched.sort_unstable();
-                        touched.dedup();
-                        // Refresh out-edges of every node that received a
-                        // new message; collect the nodes whose priority may
-                        // have changed.
-                        let mut affected_nodes: Vec<u32> = Vec::new();
-                        for &j in touched.iter() {
-                            for s in mrf.graph.slots(j as usize) {
-                                la.refresh(mrf, msgs, mrf.graph.adj_out[s]);
-                                affected_nodes.push(mrf.graph.adj_node[s]);
-                            }
-                            affected_nodes.push(j);
-                        }
-                        affected_nodes.sort_unstable();
-                        affected_nodes.dedup();
-                        for &w in &affected_nodes {
-                            let p = node_priority(mrf, &la, w);
-                            let epoch = ts.bump(w);
-                            if p >= eps {
-                                term.before_insert();
-                                sched.insert(Entry { prio: p, task: w, epoch }, &mut rng);
-                                c.inserts += 1;
-                            }
-                        }
-
-                        ts.release(v);
-                        term.exit();
-
-                        since_flush += order.len() as u64;
-                        if since_flush >= 128 {
-                            let g = term
-                                .global_updates
-                                .fetch_add(since_flush, Ordering::Relaxed)
-                                + since_flush;
-                            since_flush = 0;
-                            if budget.expired(g) {
-                                timed_out.store(true, Ordering::Release);
-                                term.set_done();
-                            }
-                        }
-                    }
-                    None => {
-                        term.exit();
-                        if term.quiescent() {
-                            term.try_verify(|| {
-                                let mut found = false;
-                                for e in 0..mrf.num_messages() as u32 {
-                                    la.refresh(mrf, msgs, e);
-                                }
-                                for v in 0..n as u32 {
-                                    let p = node_priority(mrf, &la, v);
-                                    if p >= eps {
-                                        let epoch = ts.bump(v);
-                                        term.before_insert();
-                                        sched.insert(
-                                            Entry { prio: p, task: v, epoch },
-                                            &mut rng,
-                                        );
-                                        found = true;
-                                    }
-                                }
-                                !found
-                            });
-                        } else {
-                            std::thread::yield_now();
-                            if budget.expired(term.global_updates.load(Ordering::Relaxed)) {
-                                timed_out.store(true, Ordering::Release);
-                                term.set_done();
-                            }
-                        }
-                    }
-                }
+        // Refresh residuals of every node that received a new message and
+        // requeue the nodes whose priority may have changed.
+        sc.touched.sort_unstable();
+        sc.touched.dedup();
+        for &j in sc.touched.iter() {
+            for s in self.mrf.graph.slots(j as usize) {
+                self.la.refresh(self.mrf, self.msgs, self.mrf.graph.adj_out[s]);
+                sc.affected.push(self.mrf.graph.adj_node[s]);
             }
-            c
-        });
+            sc.affected.push(j);
+        }
+        sc.affected.sort_unstable();
+        sc.affected.dedup();
+        for &w in &sc.affected {
+            ctx.requeue(w, self.node_priority(w));
+        }
 
-        let final_max = la.max_residual();
-        Ok(EngineStats {
-            converged: !timed_out.load(Ordering::Acquire),
-            wall_secs: timer.elapsed_secs(),
-            metrics: MetricsReport::aggregate(&per_thread),
-            final_max_priority: final_max,
-        })
+        sc.order.len() as u64
+    }
+}
+
+impl TaskPolicy for SplashPolicy<'_> {
+    type Scratch = SplashScratch;
+
+    fn num_tasks(&self) -> usize {
+        self.mrf.num_nodes()
+    }
+
+    fn make_scratch(&self) -> Self::Scratch {
+        SplashScratch {
+            order: Vec::new(),
+            visited: HashSet::new(),
+            touched: Vec::new(),
+            affected: Vec::new(),
+        }
+    }
+
+    fn seed(&self, ctx: &mut ExecCtx<'_>) {
+        for v in 0..self.mrf.num_nodes() as u32 {
+            ctx.requeue(v, self.node_priority(v));
+        }
+    }
+
+    fn process(&self, tasks: &[u32], ctx: &mut ExecCtx<'_>, sc: &mut SplashScratch) -> u64 {
+        let mut work = 0;
+        for &v in tasks {
+            if self.node_priority(v) < self.eps {
+                // Priority decayed since insertion — a wasted scheduler
+                // access, no splash performed.
+                ctx.counters.wasted_pops += 1;
+                continue;
+            }
+            work += self.splash(v, ctx, sc);
+        }
+        work
+    }
+
+    fn verify_sweep(&self, ctx: &mut ExecCtx<'_>) -> bool {
+        let mut found = false;
+        for e in 0..self.mrf.num_messages() as u32 {
+            self.la.refresh(self.mrf, self.msgs, e);
+        }
+        for v in 0..self.mrf.num_nodes() as u32 {
+            if ctx.requeue(v, self.node_priority(v)) {
+                found = true;
+            }
+        }
+        !found
+    }
+
+    fn final_priority(&self) -> f64 {
+        self.la.max_residual()
     }
 }
 

@@ -1,0 +1,43 @@
+//! The unified relaxed-execution runtime.
+//!
+//! Every queue-driven BP engine in this crate runs the same concurrent
+//! skeleton: seed the scheduler, then have `p` workers pop → validate
+//! epoch → claim → process → requeue affected tasks → release, with the
+//! coordinator's quiescence + elected-verifier protocol deciding when the
+//! run is over and a batched counter flush enforcing the wall-clock /
+//! update budget. Historically each engine re-implemented that skeleton by
+//! hand, so fixes to backoff, termination, or metrics had to be ported
+//! five times (and drifted — e.g. the idle backoff differed between the
+//! residual and priority engines).
+//!
+//! This module factors the skeleton into two pieces:
+//!
+//! - [`TaskPolicy`] — what an engine actually contributes: the task
+//!   universe, how to seed it, how to process a claimed task (the update
+//!   kernel + activation rule), the verifier's repair sweep, and the final
+//!   convergence report;
+//! - [`WorkerPool`] — everything else: scheduler construction (via
+//!   [`crate::sched::SchedChoice`]), scoped thread spawn, the pop / epoch
+//!   / claim protocol on [`crate::sched::TaskStates`], multi-task batch
+//!   draining, the `entries` / `in_flight` quiescence protocol with the
+//!   elected-verifier sweep, batched budget flushes, spin-then-yield idle
+//!   backoff, timeout propagation, and per-thread [`Counters`] aggregation
+//!   into [`EngineStats`].
+//!
+//! Policies never touch the scheduler or the termination counters
+//! directly; they interact with the runtime only through [`ExecCtx`]
+//! (`requeue`, `finish`, counters). This is what keeps the quiescence
+//! accounting correct by construction — a policy cannot forget a
+//! `before_insert`.
+//!
+//! See DESIGN.md §Execution-Runtime for the inventory and the mapping
+//! from paper algorithms to policies.
+//!
+//! [`Counters`]: crate::coordinator::Counters
+//! [`EngineStats`]: crate::engines::EngineStats
+
+pub mod policy;
+pub mod pool;
+
+pub use policy::{ExecCtx, TaskPolicy};
+pub use pool::{PoolTuning, WorkerPool};

@@ -1,0 +1,144 @@
+//! The engine-side half of the execution runtime: [`TaskPolicy`] and the
+//! capability handle [`ExecCtx`] the pool passes into every policy hook.
+
+use crate::coordinator::{Counters, Termination};
+use crate::sched::{Entry, Scheduler, TaskStates};
+use crate::util::Xoshiro256;
+
+/// The per-engine half of a queue-driven BP run.
+///
+/// A policy owns the task universe (messages for the residual family,
+/// nodes for splash) and everything priority-related; the
+/// [`WorkerPool`](crate::exec::WorkerPool) owns the concurrency. All
+/// scheduler interaction goes through [`ExecCtx`].
+///
+/// Tasks handed to [`TaskPolicy::process`] are claimed: no other worker
+/// can process them until the pool releases them after `process` returns.
+pub trait TaskPolicy: Sync {
+    /// Per-worker scratch space (BFS buffers, message buffers, …),
+    /// created once per worker thread and reused across iterations.
+    type Scratch;
+
+    /// Number of schedulable tasks; sizes the epoch/claim table and the
+    /// exact queue.
+    fn num_tasks(&self) -> usize;
+
+    /// Fresh scratch for one worker thread.
+    fn make_scratch(&self) -> Self::Scratch;
+
+    /// Populate the scheduler before the workers start (runs once, on the
+    /// coordinating thread). Use [`ExecCtx::requeue`] for every task that
+    /// should be live initially.
+    fn seed(&self, ctx: &mut ExecCtx<'_>);
+
+    /// Process a non-empty batch of claimed tasks: commit updates, adjust
+    /// priorities, and requeue activated tasks. Returns the number of
+    /// budget work units consumed (committed message updates for message
+    /// engines, nodes visited for splash) — the pool flushes these into
+    /// the global budget counter.
+    fn process(&self, tasks: &[u32], ctx: &mut ExecCtx<'_>, scratch: &mut Self::Scratch) -> u64;
+
+    /// The elected verifier's repair sweep, run under quiescence: re-derive
+    /// every task's true priority from ground truth and requeue anything
+    /// still above threshold (repairing priority lost to the benign message
+    /// write races). Return `true` iff the system is converged (nothing was
+    /// requeued), which ends the run.
+    fn verify_sweep(&self, ctx: &mut ExecCtx<'_>) -> bool;
+
+    /// Final convergence verdict. The default equates convergence with
+    /// "the budget did not expire"; policies with their own completion
+    /// criterion (the optimal tree schedule) override it.
+    fn converged(&self, timed_out: bool) -> bool {
+        !timed_out
+    }
+
+    /// Max task priority at exit (≈ max residual), for [`EngineStats`].
+    ///
+    /// [`EngineStats`]: crate::engines::EngineStats
+    fn final_priority(&self) -> f64;
+}
+
+/// Capability handle through which a [`TaskPolicy`] talks to the runtime.
+///
+/// Wraps the scheduler, the epoch/claim table, the termination counters,
+/// the worker's RNG, and the worker's metrics, so the quiescence
+/// accounting (`before_insert`) and the lazy-entry protocol (epoch bump on
+/// every priority change) cannot be bypassed or forgotten by a policy.
+pub struct ExecCtx<'a> {
+    sched: &'a dyn Scheduler,
+    ts: &'a TaskStates,
+    term: &'a Termination,
+    rng: &'a mut Xoshiro256,
+    /// This worker's event counters; policies increment `updates`,
+    /// `useful_updates`, `wasted_pops`, `splashes`, … as they go.
+    pub counters: &'a mut Counters,
+    insert_threshold: f64,
+}
+
+impl<'a> ExecCtx<'a> {
+    pub(crate) fn new(
+        sched: &'a dyn Scheduler,
+        ts: &'a TaskStates,
+        term: &'a Termination,
+        rng: &'a mut Xoshiro256,
+        counters: &'a mut Counters,
+        insert_threshold: f64,
+    ) -> Self {
+        ExecCtx { sched, ts, term, rng, counters, insert_threshold }
+    }
+
+    /// Announce that `task`'s priority changed to `prio`: bump its epoch
+    /// (invalidating all outstanding entries) and, if `prio` reaches the
+    /// pool's insert threshold, insert a fresh entry. Returns whether an
+    /// entry was inserted.
+    ///
+    /// The unconditional bump is the lazy-entry protocol's invalidation
+    /// rule: a priority change makes every previously inserted entry for
+    /// the task stale, whether or not the new priority is schedulable.
+    pub fn requeue(&mut self, task: u32, prio: f64) -> bool {
+        let epoch = self.ts.bump(task);
+        if prio >= self.insert_threshold {
+            self.term.before_insert();
+            self.sched.insert(Entry { prio, task, epoch }, self.rng);
+            self.counters.inserts += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Insert a fresh entry for `task` if `prio` reaches the threshold
+    /// (bumping the epoch so older entries yield to it); a sub-threshold
+    /// priority is a no-op that leaves existing entries valid. Returns
+    /// whether an entry was inserted.
+    ///
+    /// Use this instead of [`ExecCtx::requeue`] when priorities only grow
+    /// between executions (accumulated scores): an already-queued entry is
+    /// still a valid claim ticket there, and invalidating it on a
+    /// sub-threshold change would strand the task until the verifier's
+    /// repair sweep.
+    pub fn activate(&mut self, task: u32, prio: f64) -> bool {
+        if prio >= self.insert_threshold {
+            let epoch = self.ts.bump(task);
+            self.term.before_insert();
+            self.sched.insert(Entry { prio, task, epoch }, self.rng);
+            self.counters.inserts += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// The pool's activation threshold (engines usually mirror
+    /// `RunConfig::epsilon` here).
+    pub fn threshold(&self) -> f64 {
+        self.insert_threshold
+    }
+
+    /// End the run from inside a policy (used by engines with their own
+    /// completion criterion, e.g. the optimal tree schedule's useful-update
+    /// target). Does not mark the run as timed out.
+    pub fn finish(&self) {
+        self.term.set_done();
+    }
+}

@@ -1,0 +1,497 @@
+//! The generic worker-pool runner: owns every piece of the concurrent
+//! skeleton the engines used to copy-paste.
+
+use super::policy::{ExecCtx, TaskPolicy};
+use crate::configio::RunConfig;
+use crate::coordinator::{run_workers, Budget, Counters, MetricsReport, Termination};
+use crate::engines::EngineStats;
+use crate::sched::{SchedChoice, Scheduler, TaskStates};
+use crate::util::{Timer, Xoshiro256};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// RNG stream for the single-threaded seed phase.
+const SEED_STREAM: u64 = 0x5EED;
+/// Worker `tid` draws from stream `WORKER_STREAM_BASE + tid`.
+const WORKER_STREAM_BASE: u64 = 0x1000;
+
+/// Runtime knobs, uniform across all engines (previously each engine
+/// hard-coded its own divergent copies).
+#[derive(Debug, Clone, Copy)]
+pub struct PoolTuning {
+    /// Claimed tasks drained per processing round (1 for classic
+    /// task-at-a-time engines; >1 for the batched engine).
+    pub batch: usize,
+    /// Flush locally counted work units into the global budget counter
+    /// once this many accumulate (budget checks are approximate by design;
+    /// the counter flush is the only cross-thread traffic on the hot path).
+    pub flush_every: u64,
+    /// Busy-spin this many consecutive idle rounds before yielding the OS
+    /// slice (spinning rides out momentary queue emptiness; yielding keeps
+    /// oversubscribed runs live).
+    pub spin_limit: u32,
+    /// Minimum priority for [`ExecCtx::requeue`] to insert an entry.
+    /// Engines mirror `RunConfig::epsilon`; `f64::NEG_INFINITY` keeps every
+    /// task resident (the optimal tree schedule's analytical model).
+    pub insert_threshold: f64,
+}
+
+impl Default for PoolTuning {
+    fn default() -> Self {
+        PoolTuning { batch: 1, flush_every: 256, spin_limit: 64, insert_threshold: 0.0 }
+    }
+}
+
+/// The generic relaxed-execution runner.
+///
+/// Owns scheduler construction, worker spawn, the pop/claim/epoch
+/// protocol, quiescence + elected-verifier termination, budget
+/// enforcement, idle backoff, and metrics aggregation. Engines supply a
+/// [`TaskPolicy`] and run with [`WorkerPool::run`].
+pub struct WorkerPool {
+    threads: usize,
+    seed: u64,
+    queues_per_thread: usize,
+    time_limit_secs: f64,
+    max_updates: u64,
+    choice: SchedChoice,
+    tuning: PoolTuning,
+}
+
+impl WorkerPool {
+    /// Pool for a run described by `cfg`, scheduled by `choice`. The
+    /// insert threshold defaults to `cfg.epsilon`.
+    pub fn from_config(cfg: &RunConfig, choice: SchedChoice) -> Self {
+        WorkerPool {
+            threads: cfg.threads.max(1),
+            seed: cfg.seed,
+            queues_per_thread: cfg.queues_per_thread,
+            time_limit_secs: cfg.time_limit_secs,
+            max_updates: cfg.max_updates,
+            choice,
+            tuning: PoolTuning { insert_threshold: cfg.epsilon, ..PoolTuning::default() },
+        }
+    }
+
+    /// Drain up to `batch` claimed tasks per processing round.
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.tuning.batch = batch.max(1);
+        self
+    }
+
+    /// Override the budget flush granularity.
+    pub fn flush_every(mut self, units: u64) -> Self {
+        self.tuning.flush_every = units.max(1);
+        self
+    }
+
+    /// Override the idle spin limit.
+    pub fn spin_limit(mut self, spins: u32) -> Self {
+        self.tuning.spin_limit = spins;
+        self
+    }
+
+    /// Override the insert threshold (see [`PoolTuning::insert_threshold`]).
+    pub fn insert_threshold(mut self, threshold: f64) -> Self {
+        self.tuning.insert_threshold = threshold;
+        self
+    }
+
+    /// Run `policy` to convergence or budget exhaustion.
+    pub fn run<P: TaskPolicy>(&self, policy: &P) -> EngineStats {
+        let timer = Timer::start();
+        let budget = Budget::new(self.time_limit_secs, self.max_updates);
+        let num_tasks = policy.num_tasks();
+        let sched = self.choice.build(num_tasks, self.threads, self.queues_per_thread);
+        let sched: &dyn Scheduler = sched.as_ref();
+        let ts = TaskStates::new(num_tasks);
+        let term = Termination::new();
+        let timed_out = AtomicBool::new(false);
+        let tuning = self.tuning;
+
+        // Seed phase: single-threaded, before any worker exists. Seed
+        // counters are not attributed to a worker (they would skew
+        // per-thread imbalance numbers) and are discarded.
+        {
+            let mut rng = Xoshiro256::stream(self.seed, SEED_STREAM);
+            let mut seed_counters = Counters::default();
+            let mut ctx = ExecCtx::new(
+                sched,
+                &ts,
+                &term,
+                &mut rng,
+                &mut seed_counters,
+                tuning.insert_threshold,
+            );
+            policy.seed(&mut ctx);
+        }
+
+        let per_thread = run_workers(self.threads, |tid| {
+            let mut rng = Xoshiro256::stream(self.seed, WORKER_STREAM_BASE + tid as u64);
+            let mut c = Counters::default();
+            let mut scratch = policy.make_scratch();
+            let mut claimed: Vec<u32> = Vec::with_capacity(tuning.batch);
+            let mut since_flush: u64 = 0;
+            let mut idle_spins: u32 = 0;
+
+            while !term.is_done() {
+                // ---- Drain up to `batch` valid, claimable tasks ----
+                claimed.clear();
+                term.enter();
+                while claimed.len() < tuning.batch {
+                    match sched.pop(&mut rng) {
+                        Some(ent) => {
+                            term.after_pop();
+                            c.pops += 1;
+                            if ent.epoch != ts.epoch(ent.task) {
+                                c.stale_pops += 1;
+                                continue;
+                            }
+                            if !ts.try_claim(ent.task, ent.epoch) {
+                                c.claim_failures += 1;
+                                continue;
+                            }
+                            claimed.push(ent.task);
+                        }
+                        None => break,
+                    }
+                }
+
+                if claimed.is_empty() {
+                    term.exit();
+                    if term.quiescent() {
+                        term.try_verify(|| {
+                            let mut ctx = ExecCtx::new(
+                                sched,
+                                &ts,
+                                &term,
+                                &mut rng,
+                                &mut c,
+                                tuning.insert_threshold,
+                            );
+                            policy.verify_sweep(&mut ctx)
+                        });
+                    } else {
+                        idle_spins += 1;
+                        if idle_spins > tuning.spin_limit {
+                            std::thread::yield_now();
+                        } else {
+                            std::hint::spin_loop();
+                        }
+                        // Idle threads must also enforce the budget, or a
+                        // stalled run would never stop.
+                        if budget.expired(term.global_updates.load(Ordering::Relaxed)) {
+                            timed_out.store(true, Ordering::Release);
+                            term.set_done();
+                        }
+                    }
+                    continue;
+                }
+
+                idle_spins = 0;
+                let work = {
+                    let mut ctx = ExecCtx::new(
+                        sched,
+                        &ts,
+                        &term,
+                        &mut rng,
+                        &mut c,
+                        tuning.insert_threshold,
+                    );
+                    policy.process(&claimed, &mut ctx, &mut scratch)
+                };
+                for &task in &claimed {
+                    ts.release(task);
+                }
+                term.exit();
+
+                since_flush += work;
+                if since_flush >= tuning.flush_every {
+                    let global = term.global_updates.fetch_add(since_flush, Ordering::Relaxed)
+                        + since_flush;
+                    since_flush = 0;
+                    if budget.expired(global) {
+                        timed_out.store(true, Ordering::Release);
+                        term.set_done();
+                    }
+                }
+            }
+            c
+        });
+
+        EngineStats {
+            converged: policy.converged(timed_out.load(Ordering::Acquire)),
+            wall_secs: timer.elapsed_secs(),
+            metrics: MetricsReport::aggregate(&per_thread),
+            final_max_priority: policy.final_priority(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configio::{AlgorithmSpec, ModelSpec};
+    use std::sync::atomic::{AtomicU64, AtomicUsize};
+
+    fn test_cfg(threads: usize) -> RunConfig {
+        RunConfig::new(ModelSpec::Path { n: 2 }, AlgorithmSpec::RelaxedResidual)
+            .with_threads(threads)
+            .with_epsilon(0.5)
+    }
+
+    /// Each task is processed exactly once and never requeued.
+    struct OneShot {
+        n: usize,
+        processed: Vec<AtomicUsize>,
+    }
+
+    impl OneShot {
+        fn new(n: usize) -> Self {
+            let mut processed = Vec::with_capacity(n);
+            processed.resize_with(n, || AtomicUsize::new(0));
+            OneShot { n, processed }
+        }
+    }
+
+    impl TaskPolicy for OneShot {
+        type Scratch = ();
+
+        fn num_tasks(&self) -> usize {
+            self.n
+        }
+
+        fn make_scratch(&self) -> Self::Scratch {}
+
+        fn seed(&self, ctx: &mut ExecCtx<'_>) {
+            for t in 0..self.n as u32 {
+                assert!(ctx.requeue(t, 1.0));
+            }
+        }
+
+        fn process(&self, tasks: &[u32], ctx: &mut ExecCtx<'_>, _: &mut ()) -> u64 {
+            for &t in tasks {
+                self.processed[t as usize].fetch_add(1, Ordering::Relaxed);
+                ctx.counters.updates += 1;
+            }
+            tasks.len() as u64
+        }
+
+        fn verify_sweep(&self, _: &mut ExecCtx<'_>) -> bool {
+            true
+        }
+
+        fn final_priority(&self) -> f64 {
+            0.0
+        }
+    }
+
+    #[test]
+    fn one_shot_policy_processes_every_task_once() {
+        for threads in [1, 4] {
+            let policy = OneShot::new(100);
+            let stats = WorkerPool::from_config(&test_cfg(threads), SchedChoice::Relaxed)
+                .run(&policy);
+            assert!(stats.converged);
+            assert_eq!(stats.metrics.total.updates, 100, "threads={threads}");
+            for p in &policy.processed {
+                assert_eq!(p.load(Ordering::Relaxed), 1);
+            }
+            // Shared counter semantics: every successful pop is either
+            // stale, a lost claim race, or a processed task.
+            let m = &stats.metrics.total;
+            assert_eq!(m.pops, m.stale_pops + m.claim_failures + m.updates);
+        }
+    }
+
+    #[test]
+    fn exact_scheduler_processes_in_priority_order_single_thread() {
+        struct Ordered {
+            n: usize,
+            log: std::sync::Mutex<Vec<u32>>,
+        }
+        impl TaskPolicy for Ordered {
+            type Scratch = ();
+            fn num_tasks(&self) -> usize {
+                self.n
+            }
+            fn make_scratch(&self) -> Self::Scratch {}
+            fn seed(&self, ctx: &mut ExecCtx<'_>) {
+                for t in 0..self.n as u32 {
+                    ctx.requeue(t, t as f64 + 1.0);
+                }
+            }
+            fn process(&self, tasks: &[u32], ctx: &mut ExecCtx<'_>, _: &mut ()) -> u64 {
+                self.log.lock().unwrap().extend_from_slice(tasks);
+                ctx.counters.updates += tasks.len() as u64;
+                tasks.len() as u64
+            }
+            fn verify_sweep(&self, _: &mut ExecCtx<'_>) -> bool {
+                true
+            }
+            fn final_priority(&self) -> f64 {
+                0.0
+            }
+        }
+        let policy = Ordered { n: 20, log: std::sync::Mutex::new(Vec::new()) };
+        let stats =
+            WorkerPool::from_config(&test_cfg(1), SchedChoice::Exact).run(&policy);
+        assert!(stats.converged);
+        let log = policy.log.lock().unwrap();
+        let expect: Vec<u32> = (0..20u32).rev().collect();
+        assert_eq!(*log, expect, "exact queue pops in descending priority");
+    }
+
+    #[test]
+    fn budget_expiry_reports_timeout() {
+        /// Requeues itself forever; only the budget can stop it.
+        struct Endless;
+        impl TaskPolicy for Endless {
+            type Scratch = ();
+            fn num_tasks(&self) -> usize {
+                4
+            }
+            fn make_scratch(&self) -> Self::Scratch {}
+            fn seed(&self, ctx: &mut ExecCtx<'_>) {
+                for t in 0..4 {
+                    ctx.requeue(t, 1.0);
+                }
+            }
+            fn process(&self, tasks: &[u32], ctx: &mut ExecCtx<'_>, _: &mut ()) -> u64 {
+                for &t in tasks {
+                    ctx.counters.updates += 1;
+                    ctx.requeue(t, 1.0);
+                }
+                tasks.len() as u64
+            }
+            fn verify_sweep(&self, _: &mut ExecCtx<'_>) -> bool {
+                true
+            }
+            fn final_priority(&self) -> f64 {
+                1.0
+            }
+        }
+        let mut cfg = test_cfg(2);
+        cfg.max_updates = 500;
+        let stats = WorkerPool::from_config(&cfg, SchedChoice::Relaxed)
+            .flush_every(16)
+            .run(&Endless);
+        assert!(!stats.converged);
+        assert!(stats.metrics.total.updates >= 500);
+    }
+
+    #[test]
+    fn verifier_repair_requeues_lost_work() {
+        /// Task 0 "loses" its priority once: the first verify sweep must
+        /// find and requeue it, the second must end the run.
+        struct Lossy {
+            sweeps: AtomicU64,
+            extra_processed: AtomicU64,
+        }
+        impl TaskPolicy for Lossy {
+            type Scratch = ();
+            fn num_tasks(&self) -> usize {
+                1
+            }
+            fn make_scratch(&self) -> Self::Scratch {}
+            fn seed(&self, _: &mut ExecCtx<'_>) {
+                // Nothing seeded: the run starts quiescent and the verifier
+                // must discover the pending task.
+            }
+            fn process(&self, tasks: &[u32], ctx: &mut ExecCtx<'_>, _: &mut ()) -> u64 {
+                self.extra_processed.fetch_add(tasks.len() as u64, Ordering::Relaxed);
+                ctx.counters.updates += tasks.len() as u64;
+                tasks.len() as u64
+            }
+            fn verify_sweep(&self, ctx: &mut ExecCtx<'_>) -> bool {
+                if self.sweeps.fetch_add(1, Ordering::Relaxed) == 0 {
+                    ctx.requeue(0, 1.0);
+                    false
+                } else {
+                    true
+                }
+            }
+            fn final_priority(&self) -> f64 {
+                0.0
+            }
+        }
+        let policy = Lossy { sweeps: AtomicU64::new(0), extra_processed: AtomicU64::new(0) };
+        let stats =
+            WorkerPool::from_config(&test_cfg(1), SchedChoice::Relaxed).run(&policy);
+        assert!(stats.converged);
+        assert_eq!(policy.extra_processed.load(Ordering::Relaxed), 1);
+        assert!(policy.sweeps.load(Ordering::Relaxed) >= 2);
+    }
+
+    #[test]
+    fn batch_draining_hands_multiple_tasks_per_round() {
+        struct BatchSpy {
+            max_seen: AtomicU64,
+        }
+        impl TaskPolicy for BatchSpy {
+            type Scratch = ();
+            fn num_tasks(&self) -> usize {
+                64
+            }
+            fn make_scratch(&self) -> Self::Scratch {}
+            fn seed(&self, ctx: &mut ExecCtx<'_>) {
+                for t in 0..64 {
+                    ctx.requeue(t, 1.0);
+                }
+            }
+            fn process(&self, tasks: &[u32], ctx: &mut ExecCtx<'_>, _: &mut ()) -> u64 {
+                self.max_seen.fetch_max(tasks.len() as u64, Ordering::Relaxed);
+                ctx.counters.updates += tasks.len() as u64;
+                tasks.len() as u64
+            }
+            fn verify_sweep(&self, _: &mut ExecCtx<'_>) -> bool {
+                true
+            }
+            fn final_priority(&self) -> f64 {
+                0.0
+            }
+        }
+        let policy = BatchSpy { max_seen: AtomicU64::new(0) };
+        let stats = WorkerPool::from_config(&test_cfg(1), SchedChoice::Relaxed)
+            .batch(8)
+            .run(&policy);
+        assert!(stats.converged);
+        assert_eq!(stats.metrics.total.updates, 64);
+        assert!(policy.max_seen.load(Ordering::Relaxed) > 1, "batch draining engaged");
+    }
+
+    #[test]
+    fn sub_threshold_requeue_invalidates_without_inserting() {
+        /// Processing requeues below threshold: the run must terminate via
+        /// the verifier rather than loop.
+        struct Decaying;
+        impl TaskPolicy for Decaying {
+            type Scratch = ();
+            fn num_tasks(&self) -> usize {
+                8
+            }
+            fn make_scratch(&self) -> Self::Scratch {}
+            fn seed(&self, ctx: &mut ExecCtx<'_>) {
+                for t in 0..8 {
+                    ctx.requeue(t, 1.0);
+                }
+            }
+            fn process(&self, tasks: &[u32], ctx: &mut ExecCtx<'_>, _: &mut ()) -> u64 {
+                for &t in tasks {
+                    ctx.counters.updates += 1;
+                    assert!(!ctx.requeue(t, 0.0), "0.0 is below the 0.5 threshold");
+                }
+                tasks.len() as u64
+            }
+            fn verify_sweep(&self, _: &mut ExecCtx<'_>) -> bool {
+                true
+            }
+            fn final_priority(&self) -> f64 {
+                0.0
+            }
+        }
+        let stats =
+            WorkerPool::from_config(&test_cfg(2), SchedChoice::Relaxed).run(&Decaying);
+        assert!(stats.converged);
+        assert_eq!(stats.metrics.total.updates, 8);
+    }
+}

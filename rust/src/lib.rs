@@ -21,6 +21,7 @@ pub mod cli;
 pub mod configio;
 pub mod coordinator;
 pub mod engines;
+pub mod exec;
 pub mod harness;
 pub mod model;
 pub mod run;

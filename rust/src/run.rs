@@ -3,7 +3,7 @@
 
 use crate::bp::{all_marginals, Messages};
 use crate::configio::{Json, RunConfig};
-use crate::engines::{build_engine, EngineStats};
+use crate::engines::{build_engine, Engine, EngineStats};
 use crate::model::{builders, Mrf};
 use anyhow::Result;
 

@@ -74,6 +74,39 @@ pub trait Scheduler: Send + Sync {
     fn approx_len(&self) -> usize;
 }
 
+/// Which scheduler an [`exec::WorkerPool`](crate::exec::WorkerPool) run
+/// uses — the paper's three contenders as a value, so engines pass a
+/// choice instead of plumbing their own queue construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedChoice {
+    /// One lock-protected exact priority queue (the "Coarse-Grained"
+    /// baselines).
+    Exact,
+    /// The relaxed Multiqueue (`queues_per_thread` heaps per worker,
+    /// two-choice pops) — the paper's headline scheduler.
+    Relaxed,
+    /// The journal version's naive random queues: random insert, random
+    /// single-queue delete, no rank bound (Random Splash).
+    Random,
+}
+
+impl SchedChoice {
+    /// Build the scheduler for a pool of `threads` workers over
+    /// `num_tasks` tasks.
+    pub fn build(
+        self,
+        num_tasks: usize,
+        threads: usize,
+        queues_per_thread: usize,
+    ) -> Box<dyn Scheduler> {
+        match self {
+            SchedChoice::Exact => Box::new(ExactQueue::with_capacity(num_tasks)),
+            SchedChoice::Relaxed => Box::new(Multiqueue::for_threads(threads, queues_per_thread)),
+            SchedChoice::Random => Box::new(RandomQueues::new(threads.max(2))),
+        }
+    }
+}
+
 /// Per-task claim bit + epoch word.
 ///
 /// Layout: bit 63 = claimed; low 32 bits = epoch (wrapping; bits 32–62 may

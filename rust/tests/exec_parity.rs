@@ -1,0 +1,168 @@
+//! Cross-engine parity for the `exec::WorkerPool` runtime.
+//!
+//! Every queue-driven engine ported onto the shared runtime must (a)
+//! reach marginals within tolerance of `exact_marginals` on a small tree
+//! and a small grid, single- and multi-threaded, and (b) report the same
+//! `MetricsReport` field semantics: every successful pop is accounted for
+//! as exactly one of {stale entry, lost claim race, processed task}, and
+//! useful updates never exceed total updates.
+
+use relaxed_bp::bp::{all_marginals, exact_marginals, max_marginal_diff, Messages};
+use relaxed_bp::configio::{AlgorithmSpec, ModelSpec, RunConfig};
+use relaxed_bp::coordinator::MetricsReport;
+use relaxed_bp::engines::{build_engine, Engine, EngineStats};
+use relaxed_bp::model::builders;
+
+/// Queue-driven engines applicable to arbitrary (possibly loopy) models.
+fn pool_roster() -> Vec<AlgorithmSpec> {
+    vec![
+        AlgorithmSpec::CoarseGrained,
+        AlgorithmSpec::RelaxedResidual,
+        AlgorithmSpec::WeightDecay,
+        AlgorithmSpec::Priority,
+        AlgorithmSpec::Splash { h: 2 },
+        AlgorithmSpec::SmartSplash { h: 2 },
+        AlgorithmSpec::RelaxedSmartSplash { h: 2 },
+        AlgorithmSpec::RandomSplash { h: 2 },
+        AlgorithmSpec::RelaxedResidualBatched { batch: 8 },
+    ]
+}
+
+fn run(spec: &ModelSpec, alg: &AlgorithmSpec, threads: usize, seed: u64) -> (Vec<Vec<f64>>, EngineStats) {
+    let mrf = builders::build(spec, seed);
+    let msgs = Messages::uniform(&mrf);
+    let cfg = RunConfig::new(spec.clone(), alg.clone()).with_threads(threads).with_seed(seed);
+    let stats = build_engine(alg).run(&mrf, &msgs, &cfg).unwrap();
+    assert!(stats.converged, "{} (p={threads}) did not converge", alg.name());
+    (all_marginals(&mrf, &msgs), stats)
+}
+
+/// Processed-task count per engine family, for the pop-accounting
+/// identity. Message engines process one committed update per claimed
+/// task; splash engines process one splash — or one wasted pop when the
+/// node's priority decayed between insert and claim.
+fn processed_tasks(alg: &AlgorithmSpec, m: &MetricsReport) -> u64 {
+    match alg {
+        AlgorithmSpec::Splash { .. }
+        | AlgorithmSpec::SmartSplash { .. }
+        | AlgorithmSpec::RelaxedSmartSplash { .. }
+        | AlgorithmSpec::RandomSplash { .. } => m.total.splashes + m.total.wasted_pops,
+        _ => m.total.updates,
+    }
+}
+
+#[test]
+fn all_pool_engines_match_exact_marginals_on_tree() {
+    let spec = ModelSpec::Tree { n: 15 };
+    let mrf = builders::build(&spec, 2);
+    let exact = exact_marginals(&mrf, 1 << 20).unwrap();
+    for alg in pool_roster() {
+        for threads in [1, 4] {
+            let (bp, _) = run(&spec, &alg, threads, 2);
+            let diff = max_marginal_diff(&bp, &exact);
+            assert!(
+                diff < 1e-3,
+                "{} (p={threads}) tree marginal diff {diff}",
+                alg.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn all_pool_engines_match_exact_marginals_on_grid() {
+    // Loopy BP carries a schedule-independent bias on grids; the oracle
+    // tolerance is correspondingly loose (cf. the per-engine unit tests).
+    let spec = ModelSpec::Ising { n: 4 };
+    let mrf = builders::build(&spec, 3);
+    let exact = exact_marginals(&mrf, 1 << 20).unwrap();
+    for alg in pool_roster() {
+        for threads in [1, 4] {
+            let (bp, _) = run(&spec, &alg, threads, 3);
+            let diff = max_marginal_diff(&bp, &exact);
+            assert!(
+                diff < 0.08,
+                "{} (p={threads}) grid marginal diff {diff}",
+                alg.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn optimal_tree_engines_match_exact_marginals() {
+    // 15 nodes: 2^15 joint states, within the oracle's enumeration limit.
+    let spec = ModelSpec::Tree { n: 15 };
+    let mrf = builders::build(&spec, 1);
+    let exact = exact_marginals(&mrf, 1 << 20).unwrap();
+    for alg in [AlgorithmSpec::OptimalTree, AlgorithmSpec::RelaxedOptimalTree] {
+        for threads in [1, 4] {
+            let (bp, stats) = run(&spec, &alg, threads, 1);
+            let diff = max_marginal_diff(&bp, &exact);
+            assert!(diff < 1e-6, "{} (p={threads}) diff {diff}", alg.name());
+            // Each directed message fires its useful update exactly once.
+            assert_eq!(stats.metrics.total.useful_updates, mrf.num_messages() as u64);
+        }
+    }
+}
+
+#[test]
+fn pop_accounting_identity_holds_for_every_engine() {
+    // The runtime's shared counter semantics: pops = stale_pops +
+    // claim_failures + processed tasks, on every engine, at every thread
+    // count — the field meanings cannot drift per engine anymore.
+    for (spec, algs) in [
+        (ModelSpec::Ising { n: 5 }, pool_roster()),
+        (
+            ModelSpec::Tree { n: 63 },
+            vec![AlgorithmSpec::OptimalTree, AlgorithmSpec::RelaxedOptimalTree],
+        ),
+    ] {
+        for alg in algs {
+            for threads in [1, 4] {
+                let (_, stats) = run(&spec, &alg, threads, 7);
+                let m = &stats.metrics;
+                assert_eq!(
+                    m.total.pops,
+                    m.total.stale_pops + m.total.claim_failures + processed_tasks(&alg, m),
+                    "{} (p={threads}): pop accounting",
+                    alg.name()
+                );
+                assert!(
+                    m.total.useful_updates <= m.total.updates,
+                    "{} (p={threads}): useful ≤ total",
+                    alg.name()
+                );
+                assert_eq!(
+                    m.per_thread_updates.len(),
+                    threads,
+                    "{} (p={threads}): one per-thread row per worker",
+                    alg.name()
+                );
+                assert_eq!(
+                    m.per_thread_updates.iter().sum::<u64>(),
+                    m.total.updates,
+                    "{} (p={threads}): per-thread rows sum to total",
+                    alg.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn converged_runs_report_sub_epsilon_final_priority() {
+    // Engines that verify convergence must exit with every true priority
+    // below epsilon (the verifier's guarantee, uniform across policies).
+    let spec = ModelSpec::Ising { n: 5 };
+    for alg in pool_roster() {
+        let (_, stats) = run(&spec, &alg, 2, 5);
+        let cfg = RunConfig::new(spec.clone(), alg.clone());
+        assert!(
+            stats.final_max_priority < cfg.epsilon,
+            "{}: final max priority {}",
+            alg.name(),
+            stats.final_max_priority
+        );
+    }
+}

@@ -4,7 +4,7 @@
 
 use relaxed_bp::bp::{all_marginals, decode_bits, max_marginal_diff, Messages};
 use relaxed_bp::configio::{parse, AlgorithmSpec, ModelSpec, RunConfig};
-use relaxed_bp::engines::build_engine;
+use relaxed_bp::engines::{build_engine, Engine};
 use relaxed_bp::harness::Harness;
 use relaxed_bp::model::{builders, io as model_io};
 use relaxed_bp::run::{run_config, run_on_model};

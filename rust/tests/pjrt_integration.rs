@@ -14,6 +14,10 @@ use relaxed_bp::model::builders;
 use relaxed_bp::runtime::{artifacts_dir, batch::PjrtBatch, grid};
 
 fn have(name: &str) -> bool {
+    if !cfg!(pjrt) {
+        eprintln!("SKIP: built without `--cfg pjrt` (xla bindings absent)");
+        return false;
+    }
     let ok = artifacts_dir().join(format!("{name}.hlo.txt")).exists();
     if !ok {
         eprintln!("SKIP: artifact {name} missing (run `make artifacts`)");

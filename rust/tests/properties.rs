@@ -8,7 +8,7 @@ use relaxed_bp::bp::{
     Lookahead, Messages, MsgSource,
 };
 use relaxed_bp::configio::{parse, AlgorithmSpec, Json, ModelSpec, RunConfig};
-use relaxed_bp::engines::build_engine;
+use relaxed_bp::engines::{build_engine, Engine};
 use relaxed_bp::model::{builders, io as model_io, FactorPool, GraphBuilder, Mrf, NodeFactors};
 use relaxed_bp::sched::{Entry, Multiqueue, RandomQueues, Scheduler, TaskStates};
 use relaxed_bp::util::Xoshiro256;
