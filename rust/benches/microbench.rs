@@ -1,7 +1,9 @@
 //! `cargo bench --bench microbench` — component-level benchmarks feeding
 //! the §Perf analysis in EXPERIMENTS.md: scheduler op throughput, message
 //! update rate per model family, lookahead refresh cost, and PJRT call
-//! overhead (when artifacts exist).
+//! overhead (when artifacts exist). Each group reports markdown to stdout
+//! and CSV + JSON under `results/bench/`; full end-to-end sweeps with
+//! convergence traces are `relaxed-bp bench` (see the `telemetry` module).
 
 use relaxed_bp::benchlib::{BenchConfig, BenchGroup};
 use relaxed_bp::bp::{compute_message, msg_buf, Lookahead, Messages};

@@ -1,12 +1,20 @@
-//! Lightweight criterion-style benchmark harness.
+//! Lightweight benchmark driver for the `cargo bench` targets.
 //!
 //! criterion is unavailable in the offline build, so the `cargo bench`
 //! targets (`rust/benches/*.rs`, built with `harness = false`) use this
-//! module: warmup, repeated measurement, robust statistics, and markdown /
-//! CSV reporters. End-to-end BP convergence runs are seconds long, so the
-//! harness measures a configurable number of full runs rather than
+//! module: warmup, repeated measurement, robust statistics, and three
+//! reporters — markdown (human), CSV (spreadsheets), and JSON (the
+//! canonical machine-readable form, mirroring the `BENCH_*.json`
+//! philosophy of the `telemetry` module: diffable artifacts, not
+//! write-only tables). End-to-end BP convergence runs are seconds long, so
+//! the driver measures a configurable number of full runs rather than
 //! criterion's adaptive sampling.
+//!
+//! Full {engine × scheduler × threads} sweeps with convergence traces and
+//! regression comparison live in `telemetry::run_bench` (the `bench` CLI
+//! subcommand); this module stays the low-level component driver.
 
+use crate::configio::Json;
 use crate::util::stats::{fmt_duration, Summary};
 use std::io::Write;
 use std::time::Instant;
@@ -15,18 +23,35 @@ use std::time::Instant;
 /// optional scalar "metric" stream (e.g. message updates) recorded per run.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark label within its group.
     pub name: String,
+    /// Per-sample wall-clock seconds.
     pub times_secs: Vec<f64>,
+    /// Per-sample scalar metric (benchmark-defined; e.g. ops performed).
     pub metrics: Vec<f64>,
 }
 
 impl BenchResult {
+    /// Robust summary of the wall-clock samples.
     pub fn time_summary(&self) -> Option<Summary> {
         Summary::of(&self.times_secs)
     }
 
+    /// Robust summary of the metric samples.
     pub fn metric_summary(&self) -> Option<Summary> {
         Summary::of(&self.metrics)
+    }
+
+    /// Serialize samples + derived summaries as JSON.
+    pub fn to_json(&self) -> Json {
+        let summary = |s: Option<Summary>| s.map_or(Json::Null, |s| s.to_json());
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("times_secs", Json::Arr(self.times_secs.iter().map(|&t| Json::Num(t)).collect())),
+            ("metrics", Json::Arr(self.metrics.iter().map(|&m| Json::Num(m)).collect())),
+            ("time_summary", summary(self.time_summary())),
+            ("metric_summary", summary(self.metric_summary())),
+        ])
     }
 }
 
@@ -61,16 +86,21 @@ impl Default for BenchConfig {
 
 /// A group of related benchmarks rendered as one table (≈ criterion group).
 pub struct BenchGroup {
+    /// Group title (markdown heading / output file stem).
     pub title: String,
+    /// Runner configuration shared by the group's benchmarks.
     pub config: BenchConfig,
+    /// Completed measurements, in registration order.
     pub results: Vec<BenchResult>,
 }
 
 impl BenchGroup {
+    /// Empty group with the default [`BenchConfig`].
     pub fn new(title: &str) -> Self {
         Self { title: title.to_string(), config: BenchConfig::default(), results: Vec::new() }
     }
 
+    /// Replace the runner configuration.
     pub fn with_config(mut self, config: BenchConfig) -> Self {
         self.config = config;
         self
@@ -145,14 +175,37 @@ impl BenchGroup {
         s
     }
 
-    /// Print markdown to stdout and append CSV under `results/bench/`.
+    /// Render the group as a JSON document (the canonical machine-readable
+    /// reporter; keys are sorted, so outputs diff deterministically).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::Str(self.title.clone())),
+            (
+                "config",
+                Json::obj(vec![
+                    ("warmup", Json::Num(self.config.warmup as f64)),
+                    ("samples", Json::Num(self.config.samples as f64)),
+                    ("budget_secs", Json::Num(self.config.budget_secs)),
+                ]),
+            ),
+            ("results", Json::Arr(self.results.iter().map(BenchResult::to_json).collect())),
+        ])
+    }
+
+    /// Print markdown to stdout and write CSV + JSON under
+    /// `results/bench/`.
     pub fn report(&self) {
         println!("{}", self.to_markdown());
         let dir = std::path::Path::new("results/bench");
         if std::fs::create_dir_all(dir).is_ok() {
-            let path = dir.join(format!("{}.csv", sanitize(&self.title)));
+            let stem = sanitize(&self.title);
+            let path = dir.join(format!("{stem}.csv"));
             if let Ok(mut f) = std::fs::File::create(&path) {
                 let _ = f.write_all(self.to_csv().as_bytes());
+            }
+            let path = dir.join(format!("{stem}.json"));
+            if let Ok(mut f) = std::fs::File::create(&path) {
+                let _ = f.write_all(self.to_json().to_string_pretty().as_bytes());
             }
         }
     }
@@ -213,6 +266,19 @@ mod tests {
         let csv = g.to_csv();
         assert_eq!(csv.lines().count(), 3); // header + 2 samples
         assert!(csv.starts_with("group,name,sample"));
+    }
+
+    #[test]
+    fn json_reporter_roundtrips() {
+        let mut g = BenchGroup::new("grp").with_config(quiet(2));
+        g.bench("a", || 7.0);
+        let text = g.to_json().to_string_pretty();
+        let v = crate::configio::parse(&text).unwrap();
+        assert_eq!(v.get("title").unwrap().as_str(), Some("grp"));
+        let results = v.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("metrics").unwrap().as_arr().unwrap().len(), 2);
+        assert!(results[0].get("time_summary").unwrap().get("mean").is_some());
     }
 
     #[test]

@@ -80,10 +80,12 @@ impl Messages {
         &self.data[idx]
     }
 
+    /// Number of f64 cells.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when the state holds no cells.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }

@@ -10,9 +10,13 @@ use std::collections::BTreeMap;
 /// booleans, and positional arguments.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// First bare token (`run`, `bench`, …).
     pub subcommand: Option<String>,
+    /// `--key value` / `--key=value` options.
     pub options: BTreeMap<String, String>,
+    /// Value-less `--switch` flags (must be pre-declared).
     pub switches: Vec<String>,
+    /// Bare tokens after the subcommand.
     pub positional: Vec<String>,
 }
 
@@ -49,14 +53,17 @@ impl Args {
         Ok(out)
     }
 
+    /// Parse the process arguments (argv[0] excluded).
     pub fn from_env(known_switches: &[&str]) -> Result<Args> {
         Args::parse(std::env::args().skip(1), known_switches)
     }
 
+    /// Raw value of `--key`, if given.
     pub fn opt(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// Parsed value of `--key`; `None` when absent, `Err` on a bad value.
     pub fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
     where
         T::Err: std::fmt::Display,
@@ -70,6 +77,7 @@ impl Args {
         }
     }
 
+    /// Parsed value of `--key`, or `default` when absent.
     pub fn opt_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
     where
         T::Err: std::fmt::Display,
@@ -77,6 +85,27 @@ impl Args {
         Ok(self.opt_parse(key)?.unwrap_or(default))
     }
 
+    /// Parse a comma-separated option value (`--threads 1,2,4`); `None`
+    /// when the option is absent.
+    pub fn opt_csv<T: std::str::FromStr>(&self, key: &str) -> Result<Option<Vec<T>>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(s) => s
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<T>()
+                        .map_err(|e| anyhow!("bad value '{p}' for --{key}: {e}"))
+                })
+                .collect::<Result<Vec<T>>>()
+                .map(Some),
+        }
+    }
+
+    /// True when `--name` was given (must be listed in `known_switches`).
     pub fn has_switch(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name)
     }
@@ -137,5 +166,14 @@ mod tests {
         let a = Args::parse(sv(&["run"]), &[]).unwrap();
         assert_eq!(a.opt_or::<f64>("epsilon", 1e-5).unwrap(), 1e-5);
         assert_eq!(a.opt_parse::<usize>("threads").unwrap(), None);
+    }
+
+    #[test]
+    fn csv_lists() {
+        let a = Args::parse(sv(&["bench", "--threads", "1, 2,4"]), &[]).unwrap();
+        assert_eq!(a.opt_csv::<usize>("threads").unwrap(), Some(vec![1, 2, 4]));
+        assert_eq!(a.opt_csv::<usize>("families").unwrap(), None);
+        let bad = Args::parse(sv(&["bench", "--threads", "1,x"]), &[]).unwrap();
+        assert!(bad.opt_csv::<usize>("threads").is_err());
     }
 }

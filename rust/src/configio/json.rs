@@ -13,15 +13,22 @@ use std::fmt;
 /// deterministic — important for golden-file tests and diffable results.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number.
     Num(f64),
+    /// String.
     Str(String),
+    /// Array.
     Arr(Vec<Json>),
+    /// Object with sorted keys.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Boolean value, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -29,6 +36,7 @@ impl Json {
         }
     }
 
+    /// Numeric value, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -36,6 +44,7 @@ impl Json {
         }
     }
 
+    /// Non-negative integral value, if this is one.
     pub fn as_u64(&self) -> Option<u64> {
         match self {
             Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
@@ -43,10 +52,12 @@ impl Json {
         }
     }
 
+    /// Like [`Json::as_u64`], as `usize`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_u64().map(|v| v as usize)
     }
 
+    /// String slice, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -54,6 +65,7 @@ impl Json {
         }
     }
 
+    /// Element slice, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -61,6 +73,7 @@ impl Json {
         }
     }
 
+    /// Key/value map, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -174,7 +187,9 @@ fn write_escaped(out: &mut String, s: &str) {
 /// Parse error with byte offset context.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// Byte offset of the error in the input.
     pub offset: usize,
 }
 

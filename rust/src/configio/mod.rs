@@ -33,6 +33,7 @@ pub enum ModelSpec {
 }
 
 impl ModelSpec {
+    /// Family name (used in reports and baselines).
     pub fn name(&self) -> &'static str {
         match self {
             ModelSpec::Tree { .. } => "tree",
@@ -45,6 +46,7 @@ impl ModelSpec {
         }
     }
 
+    /// Serialize as a JSON object (`{"kind": …, …}`).
     pub fn to_json(&self) -> Json {
         match self {
             ModelSpec::Tree { n } => Json::obj(vec![
@@ -80,6 +82,7 @@ impl ModelSpec {
         }
     }
 
+    /// Parse the JSON form produced by [`ModelSpec::to_json`].
     pub fn from_json(v: &Json) -> Result<ModelSpec> {
         let kind = v
             .get("kind")
@@ -262,7 +265,9 @@ impl AlgorithmSpec {
 /// A complete, reproducible description of one BP run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunConfig {
+    /// Which MRF to build.
     pub model: ModelSpec,
+    /// Which scheduling algorithm to run.
     pub algorithm: AlgorithmSpec,
     /// Worker threads (1 for sequential algorithms).
     pub threads: usize,
@@ -281,6 +286,7 @@ pub struct RunConfig {
 }
 
 impl RunConfig {
+    /// Config with per-model default ε, seed 42, single thread.
     pub fn new(model: ModelSpec, algorithm: AlgorithmSpec) -> Self {
         // Paper: 1e-5 for grids/trees, 1e-2 for LDPC. We default LDPC to
         // 1e-3 instead: with this pairwise-MRF encoding the residual-family
@@ -304,26 +310,31 @@ impl RunConfig {
         }
     }
 
+    /// Set the worker thread count.
     pub fn with_threads(mut self, t: usize) -> Self {
         self.threads = t;
         self
     }
 
+    /// Set the RNG seed.
     pub fn with_seed(mut self, s: u64) -> Self {
         self.seed = s;
         self
     }
 
+    /// Set the convergence threshold.
     pub fn with_epsilon(mut self, e: f64) -> Self {
         self.epsilon = e;
         self
     }
 
+    /// Set the update-count budget (0 = unlimited).
     pub fn with_max_updates(mut self, m: u64) -> Self {
         self.max_updates = m;
         self
     }
 
+    /// Serialize as a JSON object.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("model", self.model.to_json()),
@@ -338,6 +349,7 @@ impl RunConfig {
         ])
     }
 
+    /// Parse the JSON form produced by [`RunConfig::to_json`].
     pub fn from_json(v: &Json) -> Result<RunConfig> {
         let model = ModelSpec::from_json(v.get("model").ok_or_else(|| anyhow!("model missing"))?)?;
         let alg = AlgorithmSpec::parse_cli(

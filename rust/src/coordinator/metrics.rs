@@ -1,9 +1,19 @@
-//! Per-thread counters and the aggregated run metrics.
+//! Per-thread counters, the aggregated run metrics, and the lock-free
+//! snapshot board the telemetry sampler reads while a run is live.
 //!
 //! Workers mutate a plain [`Counters`] (no atomics on the hot path); the
 //! coordinator sums them after join. `updates` counts *committed* message
 //! updates — the quantity the paper's Tables 2, 3 and 6 report — while
 //! `wasted_pops` / `stale_pops` expose the relaxation overhead directly.
+//!
+//! For live observation (convergence traces), each worker periodically
+//! *publishes* its plain counters into its [`CounterBoard`] slot — a
+//! relaxed-atomic mirror written only by the owning worker and read by the
+//! background sampler. Publication rides the existing budget-flush cadence,
+//! so the hot path gains no extra cross-thread traffic beyond what budget
+//! enforcement already paid.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Plain per-thread event counters.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
@@ -31,6 +41,7 @@ pub struct Counters {
 }
 
 impl Counters {
+    /// Field-wise accumulate `other` into `self`.
     pub fn add(&mut self, other: &Counters) {
         self.updates += other.updates;
         self.useful_updates += other.useful_updates;
@@ -44,14 +55,97 @@ impl Counters {
     }
 }
 
+/// Atomic mirror of one worker's [`Counters`], written only by the owning
+/// worker (relaxed stores) and read by the telemetry sampler thread.
+///
+/// Published values lag the worker's plain counters by at most one budget
+/// flush — traces are approximate by design, exactly like budget checks.
+#[derive(Debug, Default)]
+pub struct AtomicCounters {
+    updates: AtomicU64,
+    useful_updates: AtomicU64,
+    wasted_pops: AtomicU64,
+    stale_pops: AtomicU64,
+    claim_failures: AtomicU64,
+    pops: AtomicU64,
+    inserts: AtomicU64,
+    rounds: AtomicU64,
+    splashes: AtomicU64,
+}
+
+impl AtomicCounters {
+    /// Overwrite the published snapshot with the worker's current counters.
+    #[inline]
+    pub fn publish(&self, c: &Counters) {
+        self.updates.store(c.updates, Ordering::Relaxed);
+        self.useful_updates.store(c.useful_updates, Ordering::Relaxed);
+        self.wasted_pops.store(c.wasted_pops, Ordering::Relaxed);
+        self.stale_pops.store(c.stale_pops, Ordering::Relaxed);
+        self.claim_failures.store(c.claim_failures, Ordering::Relaxed);
+        self.pops.store(c.pops, Ordering::Relaxed);
+        self.inserts.store(c.inserts, Ordering::Relaxed);
+        self.rounds.store(c.rounds, Ordering::Relaxed);
+        self.splashes.store(c.splashes, Ordering::Relaxed);
+    }
+
+    /// Read the last published snapshot.
+    pub fn snapshot(&self) -> Counters {
+        Counters {
+            updates: self.updates.load(Ordering::Relaxed),
+            useful_updates: self.useful_updates.load(Ordering::Relaxed),
+            wasted_pops: self.wasted_pops.load(Ordering::Relaxed),
+            stale_pops: self.stale_pops.load(Ordering::Relaxed),
+            claim_failures: self.claim_failures.load(Ordering::Relaxed),
+            pops: self.pops.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            rounds: self.rounds.load(Ordering::Relaxed),
+            splashes: self.splashes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One [`AtomicCounters`] slot per worker: the lock-free bridge between
+/// the workers' plain counters and the telemetry sampler.
+#[derive(Debug)]
+pub struct CounterBoard {
+    slots: Vec<AtomicCounters>,
+}
+
+impl CounterBoard {
+    /// A board with one zeroed slot per worker thread.
+    pub fn new(threads: usize) -> Self {
+        let mut slots = Vec::with_capacity(threads);
+        slots.resize_with(threads, AtomicCounters::default);
+        CounterBoard { slots }
+    }
+
+    /// Worker `tid`'s publication slot.
+    #[inline]
+    pub fn slot(&self, tid: usize) -> &AtomicCounters {
+        &self.slots[tid]
+    }
+
+    /// Sum of the last published snapshots across all workers.
+    pub fn snapshot_total(&self) -> Counters {
+        let mut total = Counters::default();
+        for s in &self.slots {
+            total.add(&s.snapshot());
+        }
+        total
+    }
+}
+
 /// Aggregated metrics across all workers.
 #[derive(Debug, Clone, Default)]
 pub struct MetricsReport {
+    /// Sum of every worker's counters.
     pub total: Counters,
+    /// Per-worker committed-update counts (load-imbalance analysis).
     pub per_thread_updates: Vec<u64>,
 }
 
 impl MetricsReport {
+    /// Sum per-thread counters into one report.
     pub fn aggregate(per_thread: &[Counters]) -> Self {
         let mut total = Counters::default();
         for c in per_thread {
@@ -63,6 +157,7 @@ impl MetricsReport {
         }
     }
 
+    /// Total committed message updates across all workers.
     pub fn total_updates(&self) -> u64 {
         self.total.updates
     }
@@ -107,6 +202,23 @@ mod tests {
         assert_eq!(m.total_updates(), 400);
         assert_eq!(m.per_thread_updates, vec![100, 300]);
         assert!((m.load_imbalance() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn board_publish_snapshot_roundtrip() {
+        let board = CounterBoard::new(2);
+        let a = Counters { updates: 10, stale_pops: 3, ..Default::default() };
+        let b = Counters { updates: 7, inserts: 2, ..Default::default() };
+        board.slot(0).publish(&a);
+        board.slot(1).publish(&b);
+        assert_eq!(board.slot(0).snapshot(), a);
+        let total = board.snapshot_total();
+        assert_eq!(total.updates, 17);
+        assert_eq!(total.stale_pops, 3);
+        assert_eq!(total.inserts, 2);
+        // Re-publication overwrites (publish is a snapshot, not an add).
+        board.slot(0).publish(&b);
+        assert_eq!(board.snapshot_total().updates, 14);
     }
 
     #[test]

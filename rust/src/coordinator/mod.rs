@@ -25,7 +25,7 @@
 
 pub mod metrics;
 
-pub use metrics::{Counters, MetricsReport};
+pub use metrics::{AtomicCounters, CounterBoard, Counters, MetricsReport};
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::time::Instant;
@@ -41,6 +41,7 @@ pub struct Budget {
 }
 
 impl Budget {
+    /// Budget from a wall-clock limit (≤ 0 = unlimited) and an update cap (0 = unlimited).
     pub fn new(limit_secs: f64, max_updates: u64) -> Self {
         Budget {
             start: Instant::now(),
@@ -50,10 +51,12 @@ impl Budget {
     }
 
     #[inline]
+    /// True once either limit is exceeded.
     pub fn expired(&self, updates_so_far: u64) -> bool {
         updates_so_far >= self.max_updates || self.elapsed() > self.limit_secs
     }
 
+    /// Seconds since the budget started.
     pub fn elapsed(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }
@@ -61,8 +64,11 @@ impl Budget {
 
 /// Shared state for the quiescence protocol.
 pub struct Termination {
+    /// Entries logically in the scheduler (insert-before / pop-after accounting).
     pub entries: AtomicUsize,
+    /// Workers currently popping or holding a popped task.
     pub in_flight: AtomicUsize,
+    /// Set once: the run is over.
     pub done: AtomicBool,
     verifier: AtomicBool,
     /// Global (approximate) update counter used for budget checks; workers
@@ -71,6 +77,7 @@ pub struct Termination {
 }
 
 impl Termination {
+    /// Fresh protocol state (no entries, nothing in flight).
     pub fn new() -> Self {
         Termination {
             entries: AtomicUsize::new(0),
@@ -94,20 +101,24 @@ impl Termination {
     }
 
     #[inline]
+    /// A worker is about to pop (or starts holding tasks).
     pub fn enter(&self) {
         self.in_flight.fetch_add(1, Ordering::AcqRel);
     }
 
     #[inline]
+    /// The worker finished processing its held tasks.
     pub fn exit(&self) {
         self.in_flight.fetch_sub(1, Ordering::AcqRel);
     }
 
     #[inline]
+    /// True once the run is over.
     pub fn is_done(&self) -> bool {
         self.done.load(Ordering::Acquire)
     }
 
+    /// End the run (idempotent).
     pub fn set_done(&self) {
         self.done.store(true, Ordering::Release);
     }

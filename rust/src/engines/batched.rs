@@ -28,6 +28,7 @@ use anyhow::Result;
 /// `[k*max_len .. k*max_len + len(e_k)]` with `max_len = mrf.max_domain()`),
 /// `residuals[k]` the L2 residual vs. the live message.
 pub trait BatchCompute: Sync {
+    /// Compute updates for `edges`, writing messages to `out` (stride-packed) and residuals to `residuals`.
     fn compute_batch(
         &self,
         mrf: &Mrf,
@@ -36,6 +37,7 @@ pub trait BatchCompute: Sync {
         out: &mut [f64],
         residuals: &mut [f64],
     );
+    /// Backend label for reports.
     fn name(&self) -> &'static str;
 }
 
@@ -66,7 +68,9 @@ impl BatchCompute for NativeBatch {
     }
 }
 
+/// Relaxed residual BP that drains and refreshes tasks in dense batches.
 pub struct RelaxedResidualBatched {
+    /// Tasks drained per processing round (and the PJRT artifact width).
     pub batch: usize,
 }
 
@@ -76,6 +80,16 @@ impl Engine for RelaxedResidualBatched {
     }
 
     fn run(&self, mrf: &Mrf, msgs: &Messages, cfg: &RunConfig) -> Result<EngineStats> {
+        self.run_observed(mrf, msgs, cfg, None)
+    }
+
+    fn run_observed(
+        &self,
+        mrf: &Mrf,
+        msgs: &Messages,
+        cfg: &RunConfig,
+        observer: Option<&dyn crate::exec::RunObserver>,
+    ) -> Result<EngineStats> {
         // Resolve the batch backend: PJRT when requested and supported.
         let pjrt = if cfg.use_pjrt && mrf.all_binary() {
             crate::runtime::batch::PjrtBatch::load_default(self.batch).ok()
@@ -89,7 +103,7 @@ impl Engine for RelaxedResidualBatched {
         let policy = BatchedPolicy::new(mrf, msgs, cfg, backend);
         Ok(WorkerPool::from_config(cfg, SchedChoice::Relaxed)
             .batch(self.batch.max(1))
-            .run(&policy))
+            .run_observed(&policy, observer))
     }
 }
 

@@ -16,6 +16,7 @@ use crate::util::Timer;
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
 
+/// The Yin–Gao bucket algorithm: rounds over the top 0.1·|V| nodes.
 pub struct Bucket {
     /// Fraction of vertices updated per round (paper: 0.1).
     pub fraction: f64,

@@ -35,6 +35,7 @@ pub mod synchronous;
 use crate::bp::Messages;
 use crate::configio::{AlgorithmSpec, RunConfig};
 use crate::coordinator::MetricsReport;
+use crate::exec::RunObserver;
 use crate::model::Mrf;
 use anyhow::Result;
 
@@ -57,7 +58,26 @@ pub struct EngineStats {
 /// A BP scheduling engine: runs to convergence (or budget) on shared
 /// message state.
 pub trait Engine: Sync {
+    /// Run to convergence or budget exhaustion, mutating `msgs` in place.
     fn run(&self, mrf: &Mrf, msgs: &Messages, cfg: &RunConfig) -> Result<EngineStats>;
+
+    /// Like [`Engine::run`], additionally feeding `observer` periodic
+    /// convergence samples (see [`RunObserver`]). Engines built on the
+    /// [`crate::exec::WorkerPool`] runtime support this natively; the
+    /// default implementation ignores the observer, so round-based engines
+    /// still run — their traces just collapse to whatever the caller
+    /// records from the final stats.
+    fn run_observed(
+        &self,
+        mrf: &Mrf,
+        msgs: &Messages,
+        cfg: &RunConfig,
+        observer: Option<&dyn RunObserver>,
+    ) -> Result<EngineStats> {
+        let _ = observer;
+        self.run(mrf, msgs, cfg)
+    }
+
     /// Display name for reports.
     fn name(&self) -> String;
 }

@@ -22,6 +22,7 @@ use crate::sched::SchedChoice;
 use crate::util::AtomicF64;
 use anyhow::Result;
 
+/// The paper's "Priority" algorithm: residual BP without lookahead.
 pub struct NoLookahead;
 
 impl Engine for NoLookahead {
@@ -30,8 +31,18 @@ impl Engine for NoLookahead {
     }
 
     fn run(&self, mrf: &Mrf, msgs: &Messages, cfg: &RunConfig) -> Result<EngineStats> {
+        self.run_observed(mrf, msgs, cfg, None)
+    }
+
+    fn run_observed(
+        &self,
+        mrf: &Mrf,
+        msgs: &Messages,
+        cfg: &RunConfig,
+        observer: Option<&dyn crate::exec::RunObserver>,
+    ) -> Result<EngineStats> {
         let policy = ScorePolicy::new(mrf, msgs, cfg);
-        Ok(WorkerPool::from_config(cfg, SchedChoice::Relaxed).run(&policy))
+        Ok(WorkerPool::from_config(cfg, SchedChoice::Relaxed).run_observed(&policy, observer))
     }
 }
 

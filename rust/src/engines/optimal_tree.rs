@@ -26,7 +26,9 @@ use crate::util::AtomicF64;
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
+/// The Appendix-A optimal tree schedule.
 pub struct OptimalTree {
+    /// Run on the Multiqueue instead of the exact queue.
     pub relaxed: bool,
 }
 
@@ -40,6 +42,16 @@ impl Engine for OptimalTree {
     }
 
     fn run(&self, mrf: &Mrf, msgs: &Messages, cfg: &RunConfig) -> Result<EngineStats> {
+        self.run_observed(mrf, msgs, cfg, None)
+    }
+
+    fn run_observed(
+        &self,
+        mrf: &Mrf,
+        msgs: &Messages,
+        cfg: &RunConfig,
+        observer: Option<&dyn crate::exec::RunObserver>,
+    ) -> Result<EngineStats> {
         // Must be a tree: |E| = |V| − 1 and connected.
         if mrf.num_messages() != 2 * (mrf.num_nodes() - 1) {
             bail!("optimal_tree engine requires a tree model");
@@ -48,7 +60,7 @@ impl Engine for OptimalTree {
         let policy = OptimalTreePolicy::new(mrf, msgs);
         Ok(WorkerPool::from_config(cfg, choice)
             .insert_threshold(f64::NEG_INFINITY)
-            .run(&policy))
+            .run_observed(&policy, observer))
     }
 }
 

@@ -17,6 +17,7 @@ use crate::model::Mrf;
 use crate::util::{Timer, Xoshiro256};
 use anyhow::Result;
 
+/// Van der Merwe randomized synchronous BP.
 pub struct RandomSynch {
     /// Fraction of unconverged messages updated in slow rounds.
     pub low_p: f64,

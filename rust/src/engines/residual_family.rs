@@ -30,6 +30,7 @@ enum Kind {
     WeightDecay,
 }
 
+/// Coarse-Grained / Relaxed Residual / Weight-Decay, selected by constructor.
 pub struct ResidualEngine {
     kind: Kind,
 }
@@ -61,12 +62,22 @@ impl Engine for ResidualEngine {
     }
 
     fn run(&self, mrf: &Mrf, msgs: &Messages, cfg: &RunConfig) -> Result<EngineStats> {
+        self.run_observed(mrf, msgs, cfg, None)
+    }
+
+    fn run_observed(
+        &self,
+        mrf: &Mrf,
+        msgs: &Messages,
+        cfg: &RunConfig,
+        observer: Option<&dyn crate::exec::RunObserver>,
+    ) -> Result<EngineStats> {
         let choice = match self.kind {
             Kind::CoarseGrained => SchedChoice::Exact,
             _ => SchedChoice::Relaxed,
         };
         let policy = ResidualPolicy::new(mrf, msgs, cfg, self.kind == Kind::WeightDecay);
-        Ok(WorkerPool::from_config(cfg, choice).run(&policy))
+        Ok(WorkerPool::from_config(cfg, choice).run_observed(&policy, observer))
     }
 }
 

@@ -11,11 +11,13 @@ use super::{Engine, EngineStats};
 use crate::bp::{Lookahead, Messages};
 use crate::configio::RunConfig;
 use crate::coordinator::{Budget, Counters, MetricsReport};
+use crate::exec::RunObserver;
 use crate::model::Mrf;
 use crate::sched::IndexedHeap;
 use crate::util::Timer;
 use anyhow::Result;
 
+/// The sequential exact-residual baseline.
 pub struct SequentialResidual;
 
 impl Engine for SequentialResidual {
@@ -24,6 +26,16 @@ impl Engine for SequentialResidual {
     }
 
     fn run(&self, mrf: &Mrf, msgs: &Messages, cfg: &RunConfig) -> Result<EngineStats> {
+        self.run_observed(mrf, msgs, cfg, None)
+    }
+
+    fn run_observed(
+        &self,
+        mrf: &Mrf,
+        msgs: &Messages,
+        cfg: &RunConfig,
+        observer: Option<&dyn RunObserver>,
+    ) -> Result<EngineStats> {
         let timer = Timer::start();
         let budget = Budget::new(cfg.time_limit_secs, cfg.max_updates);
         let eps = cfg.epsilon;
@@ -38,6 +50,19 @@ impl Engine for SequentialResidual {
                 heap.update(e, r);
                 c.inserts += 1;
             }
+        }
+
+        // Single-threaded engine: there is no pool to host a sampler
+        // thread, so convergence samples are taken inline at the observer's
+        // tick cadence (checked every `OBSERVE_EVERY` updates; the elapsed
+        // read is one clock call). Like the pool sampler, emit one sample
+        // at the start and one from the final state, so even sub-tick runs
+        // trace at least two points.
+        let tick = observer.map(|o| o.tick().as_secs_f64().max(1e-4));
+        let mut last_sample = 0.0f64;
+        const OBSERVE_EVERY: u64 = 256;
+        if let Some(obs) = observer {
+            obs.sample(timer.elapsed_secs(), &c, heap.peek().map_or(0.0, |(_, p)| p));
         }
 
         let mut converged = true;
@@ -67,6 +92,15 @@ impl Engine for SequentialResidual {
                     heap.remove(k);
                 }
             }
+            if c.updates % OBSERVE_EVERY == 0 {
+                if let (Some(obs), Some(t)) = (observer, tick) {
+                    let now = timer.elapsed_secs();
+                    if now - last_sample >= t {
+                        last_sample = now;
+                        obs.sample(now, &c, heap.peek().map_or(0.0, |(_, p)| p));
+                    }
+                }
+            }
             if c.updates % 1024 == 0 && budget.expired(c.updates) {
                 converged = false;
                 break;
@@ -74,6 +108,9 @@ impl Engine for SequentialResidual {
         }
 
         let final_max = la.max_residual();
+        if let Some(obs) = observer {
+            obs.sample(timer.elapsed_secs(), &c, final_max);
+        }
         Ok(EngineStats {
             converged: converged && final_max < eps,
             wall_secs: timer.elapsed_secs(),

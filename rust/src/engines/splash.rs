@@ -26,6 +26,7 @@ use crate::sched::SchedChoice;
 use anyhow::Result;
 use std::collections::HashSet;
 
+/// The splash family: exact, smart, relaxed, and random variants.
 pub struct SplashEngine {
     h: usize,
     smart: bool,
@@ -33,14 +34,17 @@ pub struct SplashEngine {
 }
 
 impl SplashEngine {
+    /// Exact PQ splash of depth `h` (smart = BFS-tree edges only).
     pub fn exact(h: usize, smart: bool) -> Self {
         Self { h, smart, choice: SchedChoice::Exact }
     }
 
+    /// Multiqueue splash of depth `h`.
     pub fn relaxed(h: usize, smart: bool) -> Self {
         Self { h, smart, choice: SchedChoice::Relaxed }
     }
 
+    /// Naive random-queues splash of depth `h` (journal version).
     pub fn random(h: usize, smart: bool) -> Self {
         Self { h, smart, choice: SchedChoice::Random }
     }
@@ -60,10 +64,22 @@ impl Engine for SplashEngine {
     }
 
     fn run(&self, mrf: &Mrf, msgs: &Messages, cfg: &RunConfig) -> Result<EngineStats> {
+        self.run_observed(mrf, msgs, cfg, None)
+    }
+
+    fn run_observed(
+        &self,
+        mrf: &Mrf,
+        msgs: &Messages,
+        cfg: &RunConfig,
+        observer: Option<&dyn crate::exec::RunObserver>,
+    ) -> Result<EngineStats> {
         let policy = SplashPolicy::new(mrf, msgs, cfg, self.h, self.smart);
         // Budget units are splash-tree nodes, several message updates
         // each, so flush at finer granularity than message engines.
-        Ok(WorkerPool::from_config(cfg, self.choice).flush_every(128).run(&policy))
+        Ok(WorkerPool::from_config(cfg, self.choice)
+            .flush_every(128)
+            .run_observed(&policy, observer))
     }
 }
 

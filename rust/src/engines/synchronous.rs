@@ -21,6 +21,7 @@ use anyhow::Result;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Barrier;
 
+/// Round-based synchronous BP (parallel over message chunks).
 pub struct Synchronous;
 
 /// Shared round-control block.

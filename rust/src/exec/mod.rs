@@ -30,6 +30,50 @@
 //! accounting correct by construction — a policy cannot forget a
 //! `before_insert`.
 //!
+//! ## The pop / epoch / claim protocol
+//!
+//! Concurrent heaps cannot support `increase_key`, so every priority
+//! change inserts a fresh *lazy entry* stamped with the task's bumped
+//! epoch; stale entries are discarded at pop time and a claim bit makes
+//! processing exclusive:
+//!
+//! ```text
+//!             ┌────────────────────────────────────────────────────┐
+//!             │                    worker loop                     │
+//!             ▼                                                    │
+//!   sched.pop(rng) ──none──▶ quiescent? ──yes──▶ elect verifier ───┤
+//!        │                       │no                │              │
+//!        │entry                  ▼                  ▼              │
+//!        │               spin/yield backoff   verify_sweep():      │
+//!        ▼                (budget checked)    re-derive true       │
+//!   epoch == TaskStates.epoch(task)?          priorities; requeue  │
+//!        │no → stale_pop, retry ──────────▶   lost work, or done   │
+//!        │yes                                                      │
+//!        ▼                                                         │
+//!   TaskStates.try_claim(task, epoch)  (CAS claim bit + epoch)     │
+//!        │no → claim_failure, retry ─────────────────────────────▶ │
+//!        │yes                                                      │
+//!        ▼                                                         │
+//!   policy.process(claimed tasks)                                  │
+//!     └─ ctx.requeue(k, prio): bump epoch (invalidate all          │
+//!        outstanding entries for k) + insert fresh entry if        │
+//!        prio ≥ threshold                                          │
+//!        ▼                                                         │
+//!   TaskStates.release(task) ──────────────────────────────────────┘
+//! ```
+//!
+//! Every successful pop is therefore exactly one of {stale entry, lost
+//! claim race, processed task} — the counter identity the parity tests
+//! assert on every engine.
+//!
+//! ## Live observation
+//!
+//! [`WorkerPool::run_observed`] attaches a [`RunObserver`] (e.g. the
+//! telemetry trace recorder): workers publish their counters to a
+//! lock-free [`CounterBoard`](crate::coordinator::CounterBoard) on each
+//! budget flush, and a dedicated sampler thread turns those snapshots
+//! plus the policy's current max priority into a convergence trace.
+//!
 //! See DESIGN.md §Execution-Runtime for the inventory and the mapping
 //! from paper algorithms to policies.
 //!
@@ -39,5 +83,5 @@
 pub mod policy;
 pub mod pool;
 
-pub use policy::{ExecCtx, TaskPolicy};
+pub use policy::{ExecCtx, RunObserver, TaskPolicy};
 pub use pool::{PoolTuning, WorkerPool};

@@ -1,9 +1,11 @@
-//! The engine-side half of the execution runtime: [`TaskPolicy`] and the
-//! capability handle [`ExecCtx`] the pool passes into every policy hook.
+//! The engine-side half of the execution runtime: [`TaskPolicy`], the
+//! capability handle [`ExecCtx`] the pool passes into every policy hook,
+//! and the [`RunObserver`] contract for live convergence sampling.
 
 use crate::coordinator::{Counters, Termination};
 use crate::sched::{Entry, Scheduler, TaskStates};
 use crate::util::Xoshiro256;
+use std::time::Duration;
 
 /// The per-engine half of a queue-driven BP run.
 ///
@@ -54,8 +56,33 @@ pub trait TaskPolicy: Sync {
 
     /// Max task priority at exit (≈ max residual), for [`EngineStats`].
     ///
+    /// The telemetry sampler also calls this *during* the run (from its own
+    /// thread, concurrently with `process`), so implementations must be
+    /// data-race-free — in practice they already are, because priorities
+    /// derive from the atomic message/residual cells.
+    ///
     /// [`EngineStats`]: crate::engines::EngineStats
     fn final_priority(&self) -> f64;
+}
+
+/// A live observer of one run, sampled from a dedicated background thread.
+///
+/// The pool (or a standalone engine loop) calls [`RunObserver::sample`]
+/// roughly every [`RunObserver::tick`]: once near the start, periodically
+/// during the run, and once more with the final aggregated counters after
+/// the workers join — so even sub-tick runs yield at least one sample.
+/// Counter snapshots come from the lock-free
+/// [`CounterBoard`](crate::coordinator::CounterBoard) and may lag the
+/// workers by up to one budget flush.
+pub trait RunObserver: Sync {
+    /// Target sampling interval. Implementations should expect jitter; the
+    /// sampler never fires faster than this but may fire slower.
+    fn tick(&self) -> Duration;
+
+    /// Record one observation: elapsed wall-clock seconds since the run
+    /// started, the summed counter snapshot, and the policy's current max
+    /// task priority (≈ max residual; the convergence signal).
+    fn sample(&self, elapsed_secs: f64, totals: &Counters, max_priority: f64);
 }
 
 /// Capability handle through which a [`TaskPolicy`] talks to the runtime.

@@ -1,18 +1,27 @@
 //! The generic worker-pool runner: owns every piece of the concurrent
 //! skeleton the engines used to copy-paste.
 
-use super::policy::{ExecCtx, TaskPolicy};
+use super::policy::{ExecCtx, RunObserver, TaskPolicy};
 use crate::configio::RunConfig;
-use crate::coordinator::{run_workers, Budget, Counters, MetricsReport, Termination};
+use crate::coordinator::{run_workers, Budget, CounterBoard, Counters, MetricsReport, Termination};
 use crate::engines::EngineStats;
 use crate::sched::{SchedChoice, Scheduler, TaskStates};
 use crate::util::{Timer, Xoshiro256};
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
 
 /// RNG stream for the single-threaded seed phase.
 const SEED_STREAM: u64 = 0x5EED;
 /// Worker `tid` draws from stream `WORKER_STREAM_BASE + tid`.
 const WORKER_STREAM_BASE: u64 = 0x1000;
+/// How often the sampler re-checks for termination between samples; keeps
+/// the sampler thread from outliving the run by more than ~1 ms even with
+/// coarse tick intervals.
+const SAMPLER_POLL: Duration = Duration::from_millis(1);
+/// Publish idle workers' counters to the board every this many idle
+/// rounds, so stale-pop/claim-failure streaks stay visible in traces even
+/// when no budget flush happens.
+const IDLE_PUBLISH_EVERY: u32 = 64;
 
 /// Runtime knobs, uniform across all engines (previously each engine
 /// hard-coded its own divergent copies).
@@ -98,6 +107,21 @@ impl WorkerPool {
 
     /// Run `policy` to convergence or budget exhaustion.
     pub fn run<P: TaskPolicy>(&self, policy: &P) -> EngineStats {
+        self.run_observed(policy, None)
+    }
+
+    /// Like [`WorkerPool::run`], additionally feeding `observer` periodic
+    /// samples (elapsed time, counter snapshot, current max priority) from
+    /// a dedicated background thread — the hook convergence traces
+    /// (`telemetry::TraceRecorder`) are recorded through. The sampler takes
+    /// one sample right after the workers start, one per
+    /// [`RunObserver::tick`] while the run is live, and a final one from
+    /// the exact aggregated counters after the workers join.
+    pub fn run_observed<P: TaskPolicy>(
+        &self,
+        policy: &P,
+        observer: Option<&dyn RunObserver>,
+    ) -> EngineStats {
         let timer = Timer::start();
         let budget = Budget::new(self.time_limit_secs, self.max_updates);
         let num_tasks = policy.num_tasks();
@@ -107,6 +131,7 @@ impl WorkerPool {
         let term = Termination::new();
         let timed_out = AtomicBool::new(false);
         let tuning = self.tuning;
+        let board = CounterBoard::new(self.threads);
 
         // Seed phase: single-threaded, before any worker exists. Seed
         // counters are not attributed to a worker (they would skew
@@ -125,103 +150,144 @@ impl WorkerPool {
             policy.seed(&mut ctx);
         }
 
-        let per_thread = run_workers(self.threads, |tid| {
-            let mut rng = Xoshiro256::stream(self.seed, WORKER_STREAM_BASE + tid as u64);
-            let mut c = Counters::default();
-            let mut scratch = policy.make_scratch();
-            let mut claimed: Vec<u32> = Vec::with_capacity(tuning.batch);
-            let mut since_flush: u64 = 0;
-            let mut idle_spins: u32 = 0;
-
-            while !term.is_done() {
-                // ---- Drain up to `batch` valid, claimable tasks ----
-                claimed.clear();
-                term.enter();
-                while claimed.len() < tuning.batch {
-                    match sched.pop(&mut rng) {
-                        Some(ent) => {
-                            term.after_pop();
-                            c.pops += 1;
-                            if ent.epoch != ts.epoch(ent.task) {
-                                c.stale_pops += 1;
-                                continue;
-                            }
-                            if !ts.try_claim(ent.task, ent.epoch) {
-                                c.claim_failures += 1;
-                                continue;
-                            }
-                            claimed.push(ent.task);
+        // The sampler (when an observer is attached) runs beside the
+        // workers in an enclosing scope: it wakes every SAMPLER_POLL, emits
+        // a sample once per observer tick, and exits as soon as the run is
+        // done (`term.is_done()` is exactly the workers' loop condition).
+        let per_thread = std::thread::scope(|outer| {
+            if let Some(obs) = observer {
+                let board = &board;
+                let term = &term;
+                let timer = &timer;
+                let _sampler = outer.spawn(move || {
+                    let tick = obs.tick().max(Duration::from_micros(100)).as_secs_f64();
+                    obs.sample(
+                        timer.elapsed_secs(),
+                        &board.snapshot_total(),
+                        policy.final_priority(),
+                    );
+                    let mut last = timer.elapsed_secs();
+                    while !term.is_done() {
+                        std::thread::sleep(SAMPLER_POLL);
+                        let now = timer.elapsed_secs();
+                        if now - last >= tick {
+                            last = now;
+                            obs.sample(now, &board.snapshot_total(), policy.final_priority());
                         }
-                        None => break,
                     }
-                }
+                });
+            }
+            run_workers(self.threads, |tid| {
+                let mut rng = Xoshiro256::stream(self.seed, WORKER_STREAM_BASE + tid as u64);
+                let mut c = Counters::default();
+                let mut scratch = policy.make_scratch();
+                let mut claimed: Vec<u32> = Vec::with_capacity(tuning.batch);
+                let mut since_flush: u64 = 0;
+                let mut idle_spins: u32 = 0;
 
-                if claimed.is_empty() {
-                    term.exit();
-                    if term.quiescent() {
-                        term.try_verify(|| {
-                            let mut ctx = ExecCtx::new(
-                                sched,
-                                &ts,
-                                &term,
-                                &mut rng,
-                                &mut c,
-                                tuning.insert_threshold,
-                            );
-                            policy.verify_sweep(&mut ctx)
-                        });
-                    } else {
-                        idle_spins += 1;
-                        if idle_spins > tuning.spin_limit {
-                            std::thread::yield_now();
-                        } else {
-                            std::hint::spin_loop();
+                while !term.is_done() {
+                    // ---- Drain up to `batch` valid, claimable tasks ----
+                    claimed.clear();
+                    term.enter();
+                    while claimed.len() < tuning.batch {
+                        match sched.pop(&mut rng) {
+                            Some(ent) => {
+                                term.after_pop();
+                                c.pops += 1;
+                                if ent.epoch != ts.epoch(ent.task) {
+                                    c.stale_pops += 1;
+                                    continue;
+                                }
+                                if !ts.try_claim(ent.task, ent.epoch) {
+                                    c.claim_failures += 1;
+                                    continue;
+                                }
+                                claimed.push(ent.task);
+                            }
+                            None => break,
                         }
-                        // Idle threads must also enforce the budget, or a
-                        // stalled run would never stop.
-                        if budget.expired(term.global_updates.load(Ordering::Relaxed)) {
+                    }
+
+                    if claimed.is_empty() {
+                        term.exit();
+                        if term.quiescent() {
+                            term.try_verify(|| {
+                                let mut ctx = ExecCtx::new(
+                                    sched,
+                                    &ts,
+                                    &term,
+                                    &mut rng,
+                                    &mut c,
+                                    tuning.insert_threshold,
+                                );
+                                policy.verify_sweep(&mut ctx)
+                            });
+                        } else {
+                            idle_spins += 1;
+                            if idle_spins > tuning.spin_limit {
+                                std::thread::yield_now();
+                            } else {
+                                std::hint::spin_loop();
+                            }
+                            // Keep stale-pop / claim-failure streaks visible in
+                            // traces even when no budget flush happens.
+                            if idle_spins % IDLE_PUBLISH_EVERY == 0 {
+                                board.slot(tid).publish(&c);
+                            }
+                            // Idle threads must also enforce the budget, or a
+                            // stalled run would never stop.
+                            if budget.expired(term.global_updates.load(Ordering::Relaxed)) {
+                                timed_out.store(true, Ordering::Release);
+                                term.set_done();
+                            }
+                        }
+                        continue;
+                    }
+
+                    idle_spins = 0;
+                    let work = {
+                        let mut ctx = ExecCtx::new(
+                            sched,
+                            &ts,
+                            &term,
+                            &mut rng,
+                            &mut c,
+                            tuning.insert_threshold,
+                        );
+                        policy.process(&claimed, &mut ctx, &mut scratch)
+                    };
+                    for &task in &claimed {
+                        ts.release(task);
+                    }
+                    term.exit();
+
+                    since_flush += work;
+                    if since_flush >= tuning.flush_every {
+                        let global = term.global_updates.fetch_add(since_flush, Ordering::Relaxed)
+                            + since_flush;
+                        since_flush = 0;
+                        board.slot(tid).publish(&c);
+                        if budget.expired(global) {
                             timed_out.store(true, Ordering::Release);
                             term.set_done();
                         }
                     }
-                    continue;
                 }
-
-                idle_spins = 0;
-                let work = {
-                    let mut ctx = ExecCtx::new(
-                        sched,
-                        &ts,
-                        &term,
-                        &mut rng,
-                        &mut c,
-                        tuning.insert_threshold,
-                    );
-                    policy.process(&claimed, &mut ctx, &mut scratch)
-                };
-                for &task in &claimed {
-                    ts.release(task);
-                }
-                term.exit();
-
-                since_flush += work;
-                if since_flush >= tuning.flush_every {
-                    let global = term.global_updates.fetch_add(since_flush, Ordering::Relaxed)
-                        + since_flush;
-                    since_flush = 0;
-                    if budget.expired(global) {
-                        timed_out.store(true, Ordering::Release);
-                        term.set_done();
-                    }
-                }
-            }
-            c
+                c
+            })
         });
 
+        let metrics = MetricsReport::aggregate(&per_thread);
+        // Final sample from the exact (post-join) totals: guarantees every
+        // observed run yields at least two points (start + end) and that
+        // the trace's last point matches the reported stats.
+        if let Some(obs) = observer {
+            obs.sample(timer.elapsed_secs(), &metrics.total, policy.final_priority());
+        }
         EngineStats {
             converged: policy.converged(timed_out.load(Ordering::Acquire)),
             wall_secs: timer.elapsed_secs(),
-            metrics: MetricsReport::aggregate(&per_thread),
+            metrics,
             final_max_priority: policy.final_priority(),
         }
     }
@@ -301,6 +367,37 @@ mod tests {
             let m = &stats.metrics.total;
             assert_eq!(m.pops, m.stale_pops + m.claim_failures + m.updates);
         }
+    }
+
+    #[test]
+    fn observer_receives_start_and_final_samples() {
+        use std::sync::Mutex;
+
+        struct Spy {
+            samples: Mutex<Vec<(f64, u64, f64)>>,
+        }
+        impl crate::exec::RunObserver for Spy {
+            fn tick(&self) -> std::time::Duration {
+                std::time::Duration::from_millis(1)
+            }
+            fn sample(&self, elapsed_secs: f64, totals: &Counters, max_priority: f64) {
+                self.samples.lock().unwrap().push((elapsed_secs, totals.updates, max_priority));
+            }
+        }
+
+        let spy = Spy { samples: Mutex::new(Vec::new()) };
+        let policy = OneShot::new(200);
+        let stats = WorkerPool::from_config(&test_cfg(2), SchedChoice::Relaxed)
+            .run_observed(&policy, Some(&spy));
+        assert!(stats.converged);
+        let samples = spy.samples.lock().unwrap();
+        assert!(samples.len() >= 2, "start + final sample at minimum");
+        let last = samples.last().unwrap();
+        assert_eq!(last.1, 200, "final sample carries the exact post-join totals");
+        assert!(
+            samples.windows(2).all(|w| w[0].0 <= w[1].0),
+            "sample timestamps are monotone"
+        );
     }
 
     #[test]

@@ -14,7 +14,9 @@
 //!
 //! Sizes scale with `--scale` (1.0 = the paper's "small" §5.5 sizes; the
 //! default is tuned so the full suite completes on this single-core
-//! container). Every report lands in `results/` as markdown + CSV.
+//! container). Every report lands in `results/` as markdown + CSV, plus a
+//! `<id>.traces.json` with each cell's convergence trace (sampled every
+//! [`TRACE_TICK_MS`] ms; see the `telemetry` module for the schema).
 
 pub mod report;
 
@@ -22,9 +24,17 @@ pub use report::{ratio_cell, Report, Row};
 
 use crate::configio::{AlgorithmSpec, ModelSpec, RunConfig};
 use crate::model::{builders, Mrf};
-use crate::run::run_on_model;
+use crate::run::run_on_model_observed;
+use crate::telemetry::{Trace, TraceRecorder};
 use anyhow::Result;
+use std::cell::RefCell;
 use std::path::PathBuf;
+use std::time::Duration;
+
+/// Convergence-trace sampling interval for harness cells. Coarser than the
+/// `bench` default because experiment cells run up to minutes and the
+/// traces of a full suite must stay reviewable.
+pub const TRACE_TICK_MS: u64 = 50;
 
 /// Harness configuration.
 #[derive(Debug, Clone)]
@@ -36,11 +46,17 @@ pub struct Harness {
     pub threads: Vec<usize>,
     /// The "many threads" point used by Tables 1/2/5/6 (paper: 70).
     pub max_threads: usize,
+    /// Directory reports are written to.
     pub out_dir: PathBuf,
+    /// RNG seed for model construction and scheduler randomness.
     pub seed: u64,
     /// Per-cell wall-clock limit in seconds (paper: 5 minutes).
     pub time_limit: f64,
+    /// Use the PJRT/AOT compute path where the engine supports it.
     pub use_pjrt: bool,
+    /// Traces recorded by [`Harness::run_cell`] since the last
+    /// [`Harness::drain_traces`], keyed by cell id.
+    pub trace_log: RefCell<Vec<(String, Trace)>>,
 }
 
 impl Default for Harness {
@@ -53,6 +69,7 @@ impl Default for Harness {
             seed: 42,
             time_limit: 120.0,
             use_pjrt: false,
+            trace_log: RefCell::new(Vec::new()),
         }
     }
 }
@@ -75,7 +92,9 @@ impl Harness {
         cfg
     }
 
-    /// Run one cell on a shared model instance.
+    /// Run one cell on a shared model instance, recording its convergence
+    /// trace into the harness trace log (drained into the report by
+    /// [`Harness::drain_traces`]).
     pub fn run_cell(
         &self,
         mrf: &Mrf,
@@ -90,7 +109,12 @@ impl Harness {
             alg.name(),
             threads
         );
-        let rep = run_on_model(&cfg, mrf.clone())?;
+        let recorder = TraceRecorder::new(Duration::from_millis(TRACE_TICK_MS));
+        let rep = run_on_model_observed(&cfg, mrf.clone(), Some(&recorder))?;
+        self.trace_log.borrow_mut().push((
+            format!("{}/{}/p{}", spec.name(), alg.name(), threads),
+            recorder.take(),
+        ));
         let m = &rep.stats.metrics.total;
         Ok(Row {
             model: spec.name().to_string(),
@@ -104,6 +128,14 @@ impl Harness {
             converged: rep.stats.converged,
             seed: self.seed,
         })
+    }
+
+    /// Move every trace recorded since the last drain into `rep` (called
+    /// right before each report's `emit`).
+    pub fn drain_traces(&self, rep: &mut Report) {
+        for (id, trace) in self.trace_log.borrow_mut().drain(..) {
+            rep.add_trace(id, trace);
+        }
     }
 
     /// The full §5.1 roster used by Tables 1/2 (main) and 5/6 (appendix).
@@ -176,6 +208,7 @@ impl Harness {
         rep.add_table(format!(
             "### Total updates relative to sequential residual (lower is better)\n\n{updates_md}"
         ));
+        self.drain_traces(&mut rep);
         rep.emit(&self.out_dir)?;
         Ok(rep)
     }
@@ -228,6 +261,7 @@ impl Harness {
             md.push('\n');
         }
         rep.add_table(format!("### Extra updates from relaxation\n\n{md}"));
+        self.drain_traces(&mut rep);
         rep.emit(&self.out_dir)?;
         Ok(rep)
     }
@@ -282,6 +316,7 @@ impl Harness {
         rep.add_table(format!(
             "### Speedup of relaxed residual over best non-relaxed (>1 = relaxed wins)\n\n{md}"
         ));
+        self.drain_traces(&mut rep);
         rep.emit(&self.out_dir)?;
         Ok(rep)
     }
@@ -351,6 +386,7 @@ impl Harness {
             );
         }
         rep.add_table(format!("### Running time (s)\n\n{md}"));
+        self.drain_traces(&mut rep);
         rep.emit(&self.out_dir)?;
         Ok(rep)
     }
@@ -386,6 +422,7 @@ impl Harness {
             }
         }
         rep.add_table(md);
+        self.drain_traces(&mut rep);
         rep.emit(&self.out_dir)?;
         Ok(rep)
     }
@@ -463,6 +500,7 @@ impl Harness {
         }
         rep.add_table(format!("### Execution time (s) vs threads\n\n{time_md}"));
         rep.add_table(format!("### Updates vs threads\n\n{upd_md}"));
+        self.drain_traces(&mut rep);
         rep.emit(&self.out_dir)?;
         Ok(rep)
     }
@@ -508,6 +546,7 @@ impl Harness {
         rep.add_table(format!(
             "### Useful vs wasted updates under relaxation (Lemma 2 / Claim 4)\n\n{md}"
         ));
+        self.drain_traces(&mut rep);
         rep.emit(&self.out_dir)?;
         Ok(rep)
     }
@@ -563,7 +602,7 @@ mod tests {
             out_dir: PathBuf::from("/tmp/rbp_harness_test"),
             seed: 7,
             time_limit: 60.0,
-            use_pjrt: false,
+            ..Harness::default()
         }
     }
 

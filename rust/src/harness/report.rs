@@ -1,6 +1,8 @@
-//! Result tables: collection, markdown/CSV rendering, and file output.
+//! Result tables: collection, markdown/CSV/trace-JSON rendering, and file
+//! output.
 
 use crate::configio::Json;
+use crate::telemetry::Trace;
 use crate::util::fmt_duration;
 use anyhow::{Context, Result};
 use std::path::Path;
@@ -8,19 +10,30 @@ use std::path::Path;
 /// One measured cell of an experiment.
 #[derive(Debug, Clone)]
 pub struct Row {
+    /// Model family name (`tree`, `ising`, …).
     pub model: String,
+    /// Algorithm display name.
     pub algorithm: String,
+    /// Worker thread count.
     pub threads: usize,
+    /// Wall-clock seconds inside the engine.
     pub wall_secs: f64,
+    /// Committed message updates.
     pub updates: u64,
+    /// Updates with residual ≥ ε.
     pub useful_updates: u64,
+    /// Pops whose priority had already dropped below ε.
     pub wasted_pops: u64,
+    /// Pops discarded for a stale epoch.
     pub stale_pops: u64,
+    /// Whether the run converged within budget.
     pub converged: bool,
+    /// RNG seed of the run.
     pub seed: u64,
 }
 
 impl Row {
+    /// Serialize as a JSON object (the `run --out` report shape).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("model", Json::Str(self.model.clone())),
@@ -39,15 +52,23 @@ impl Row {
 
 /// An experiment's collected rows plus free-form header notes.
 pub struct Report {
+    /// File-name stem (`table3`, `fig2`, …).
     pub id: String,
+    /// Human-readable title rendered as the markdown heading.
     pub title: String,
+    /// Free-form header notes (testbed, scale, seed).
     pub notes: Vec<String>,
+    /// Raw measured cells.
     pub rows: Vec<Row>,
     /// Pre-rendered markdown tables (experiment-specific pivots).
     pub tables: Vec<String>,
+    /// Per-cell convergence traces (`(cell id, trace)`), emitted as
+    /// `<id>.traces.json` alongside the markdown/CSV.
+    pub traces: Vec<(String, Trace)>,
 }
 
 impl Report {
+    /// Empty report with the given file stem and title.
     pub fn new(id: &str, title: &str) -> Self {
         Report {
             id: id.to_string(),
@@ -55,19 +76,44 @@ impl Report {
             notes: Vec::new(),
             rows: Vec::new(),
             tables: Vec::new(),
+            traces: Vec::new(),
         }
     }
 
+    /// Append a header note.
     pub fn note(&mut self, s: impl Into<String>) {
         self.notes.push(s.into());
     }
 
+    /// Append a measured row.
     pub fn push(&mut self, row: Row) {
         self.rows.push(row);
     }
 
+    /// Append a pre-rendered markdown table.
     pub fn add_table(&mut self, md: String) {
         self.tables.push(md);
+    }
+
+    /// Attach a cell's convergence trace (empty traces are dropped).
+    pub fn add_trace(&mut self, cell_id: impl Into<String>, trace: Trace) {
+        if !trace.is_empty() {
+            self.traces.push((cell_id.into(), trace));
+        }
+    }
+
+    /// JSON document of all attached traces: an array of
+    /// `{"cell": …, "trace": […]}` objects (an array, not an object keyed
+    /// by cell id, because sweeps can measure the same cell repeatedly).
+    pub fn traces_json(&self) -> Json {
+        Json::Arr(
+            self.traces
+                .iter()
+                .map(|(cell, t)| {
+                    Json::obj(vec![("cell", Json::Str(cell.clone())), ("trace", t.to_json())])
+                })
+                .collect(),
+        )
     }
 
     /// Raw per-row markdown (appendix of each report).
@@ -92,6 +138,7 @@ impl Report {
         s
     }
 
+    /// Render notes + pivot tables + raw rows as one markdown document.
     pub fn to_markdown(&self) -> String {
         let mut s = format!("## {} — {}\n\n", self.id, self.title);
         for n in &self.notes {
@@ -107,6 +154,7 @@ impl Report {
         s
     }
 
+    /// Render the raw rows as CSV.
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
             "model,algorithm,threads,wall_secs,updates,useful_updates,wasted_pops,stale_pops,converged,seed\n",
@@ -129,11 +177,18 @@ impl Report {
         s
     }
 
-    /// Write `<dir>/<id>.md` and `<dir>/<id>.csv`; print markdown.
+    /// Write `<dir>/<id>.md`, `<dir>/<id>.csv`, and (when traces were
+    /// attached) `<dir>/<id>.traces.json`; print the markdown.
     pub fn emit(&self, dir: &Path) -> Result<()> {
         std::fs::create_dir_all(dir).with_context(|| format!("mkdir {}", dir.display()))?;
         std::fs::write(dir.join(format!("{}.md", self.id)), self.to_markdown())?;
         std::fs::write(dir.join(format!("{}.csv", self.id)), self.to_csv())?;
+        if !self.traces.is_empty() {
+            std::fs::write(
+                dir.join(format!("{}.traces.json", self.id)),
+                self.traces_json().to_string_pretty(),
+            )?;
+        }
         println!("{}", self.to_markdown());
         Ok(())
     }

@@ -12,8 +12,15 @@
 //!   HLO text, which the [`runtime`] module loads and executes through the
 //!   PJRT CPU client — Python is never on the inference path.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured record.
+//! Performance is tracked as data: every run can record a convergence
+//! trace ([`telemetry`]), and `relaxed-bp bench` writes versioned
+//! `BENCH_<family>.json` baselines that future changes are diffed
+//! against.
+//!
+//! See README.md for the quickstart and repo map, DESIGN.md for the
+//! system inventory, and EXPERIMENTS.md for the paper-vs-measured record.
+
+#![warn(missing_docs)]
 
 pub mod benchlib;
 pub mod bp;
@@ -27,4 +34,5 @@ pub mod model;
 pub mod run;
 pub mod runtime;
 pub mod sched;
+pub mod telemetry;
 pub mod util;

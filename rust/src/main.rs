@@ -6,6 +6,9 @@
 //!                [--seed 42] [--config run.json] [--use-pjrt] [--out report.json]
 //! relaxed-bp experiment <table1|table3|table4|table7|fig2|fig4|fig5|fig6|fig7|lemma2|all>
 //!                [--scale 0.05] [--threads 1,2,4,8] [--max-threads 8] [--out-dir results]
+//! relaxed-bp bench [--quick] [--families tree,ising] [--threads 1,2] [--samples 3]
+//!                [--out-dir DIR] [--check] [--tolerance 1.5]
+//! relaxed-bp bench-compare BENCH_old.json BENCH_new.json [--tolerance 1.5]
 //! relaxed-bp generate --model ldpc:30000 --out model.rbpm [--seed 42]
 //! relaxed-bp list-algorithms
 //! ```
@@ -16,8 +19,9 @@ use relaxed_bp::configio::{AlgorithmSpec, ModelSpec, RunConfig};
 use relaxed_bp::harness::Harness;
 use relaxed_bp::model::{builders, io as model_io};
 use relaxed_bp::run::run_config;
+use relaxed_bp::telemetry;
 
-const SWITCHES: &[&str] = &["use-pjrt", "verbose", "marginals"];
+const SWITCHES: &[&str] = &["use-pjrt", "verbose", "marginals", "quick", "check"];
 
 fn main() {
     if let Err(e) = real_main() {
@@ -31,6 +35,8 @@ fn real_main() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("experiment") => cmd_experiment(&args),
+        Some("bench") => cmd_bench(&args),
+        Some("bench-compare") => cmd_bench_compare(&args),
         Some("generate") => cmd_generate(&args),
         Some("list-algorithms") => {
             for a in [
@@ -117,12 +123,8 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     if let Some(s) = args.opt_parse::<f64>("scale")? {
         h.scale = s;
     }
-    if let Some(list) = args.opt("threads") {
-        h.threads = list
-            .split(',')
-            .map(|p| p.parse::<usize>())
-            .collect::<std::result::Result<_, _>>()
-            .map_err(|e| anyhow!("bad --threads: {e}"))?;
+    if let Some(t) = args.opt_csv::<usize>("threads")? {
+        h.threads = t;
     }
     if let Some(m) = args.opt_parse::<usize>("max-threads")? {
         h.max_threads = m;
@@ -177,6 +179,84 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `bench`: sweep {engine × scheduler × threads} per model family, write
+/// `BENCH_<FAMILY>.json` baselines, and diff against the previous ones.
+fn cmd_bench(args: &Args) -> Result<()> {
+    let mut opts = if args.has_switch("quick") {
+        telemetry::BenchOpts::quick()
+    } else {
+        telemetry::BenchOpts::full()
+    };
+    if let Some(s) = args.opt_parse::<usize>("samples")? {
+        opts.samples = s.max(1);
+    }
+    if let Some(t) = args.opt_csv::<usize>("threads")? {
+        opts.threads = t;
+    }
+    if let Some(f) = args.opt_csv::<String>("families")? {
+        opts.families = f;
+    }
+    if let Some(d) = args.opt("out-dir") {
+        opts.out_dir = d.into();
+    }
+    if let Some(s) = args.opt_parse::<u64>("seed")? {
+        opts.seed = s;
+    }
+    if let Some(t) = args.opt_parse::<f64>("time-limit")? {
+        opts.time_limit = t;
+    }
+    if let Some(t) = args.opt_parse::<u64>("tick-ms")? {
+        opts.tick_ms = t;
+    }
+    if let Some(t) = args.opt_parse::<f64>("tolerance")? {
+        opts.tolerance = t;
+    }
+    opts.check = args.has_switch("check");
+
+    let outcomes = telemetry::run_bench(&opts)?;
+    let mut regressed = false;
+    for o in &outcomes {
+        println!("{}", telemetry::render_summary(&o.baseline));
+        match &o.diff {
+            Some(d) => {
+                println!("vs previous {}:\n{}", o.path.display(), d.render());
+                regressed |= d.has_regression();
+            }
+            None => println!("(no previous baseline at {})\n", o.path.display()),
+        }
+    }
+    if regressed {
+        if opts.check {
+            bail!(
+                "performance regression against stored baselines (see above); \
+                 the stored baselines were kept"
+            );
+        }
+        eprintln!(
+            "warning: regressions detected; the stored baselines were overwritten with \
+             the new numbers (use --check to fail and keep the old baselines instead)"
+        );
+    }
+    Ok(())
+}
+
+/// `bench-compare old new`: diff two baseline files; exits non-zero on
+/// regression (the CI / acceptance gate).
+fn cmd_bench_compare(args: &Args) -> Result<()> {
+    let [old_path, new_path] = args.positional.as_slice() else {
+        bail!("usage: bench-compare <old.json> <new.json> [--tolerance 1.5]");
+    };
+    let old = telemetry::Baseline::load(std::path::Path::new(old_path))?;
+    let new = telemetry::Baseline::load(std::path::Path::new(new_path))?;
+    let tolerance = args.opt_or("tolerance", telemetry::DEFAULT_TOLERANCE)?;
+    let diff = telemetry::compare(&old, &new, tolerance)?;
+    print!("{}", diff.render());
+    if diff.has_regression() {
+        bail!("{} regresses against {}", new_path, old_path);
+    }
+    Ok(())
+}
+
 fn cmd_generate(args: &Args) -> Result<()> {
     let model = ModelSpec::parse_cli(
         args.opt("model").ok_or_else(|| anyhow!("--model required"))?,
@@ -204,6 +284,14 @@ USAGE:
   relaxed-bp experiment <id> [--scale F] [--threads 1,2,4,8]
                  [--max-threads N] [--out-dir DIR] [--seed S] [--use-pjrt]
       ids: table1 table3 table4 table7 fig2 fig4 fig5 fig6 fig7 lemma2 all
+  relaxed-bp bench [--quick] [--families tree,ising,potts,ldpc] [--threads 1,2]
+                 [--samples N] [--out-dir DIR] [--seed S] [--time-limit SECS]
+                 [--tick-ms MS] [--tolerance X] [--check]
+      writes BENCH_<FAMILY>.json baselines (with convergence traces) to the
+      repo root and diffs them against the previous revision's baselines;
+      --check exits non-zero on regression
+  relaxed-bp bench-compare <old.json> <new.json> [--tolerance X]
+      diffs two baselines; exits non-zero when <new> regresses
   relaxed-bp generate --model <kind:size> --out model.rbpm [--seed S]
   relaxed-bp list-algorithms
 

@@ -19,17 +19,20 @@ pub struct FactorRef(pub u32);
 const TRANSPOSE_BIT: u32 = 1 << 31;
 
 impl FactorRef {
+    /// Reference to pool entry `pool_index`, optionally transposed.
     pub fn new(pool_index: u32, transposed: bool) -> Self {
         debug_assert!(pool_index < TRANSPOSE_BIT);
         FactorRef(pool_index | if transposed { TRANSPOSE_BIT } else { 0 })
     }
 
     #[inline]
+    /// Index into the factor pool.
     pub fn pool_index(self) -> usize {
         (self.0 & !TRANSPOSE_BIT) as usize
     }
 
     #[inline]
+    /// True when the factor matrix is applied transposed.
     pub fn transposed(self) -> bool {
         self.0 & TRANSPOSE_BIT != 0
     }
@@ -45,6 +48,7 @@ pub struct FactorPool {
 }
 
 impl FactorPool {
+    /// Empty pool.
     pub fn new() -> Self {
         Self::default()
     }
@@ -60,10 +64,12 @@ impl FactorPool {
         idx
     }
 
+    /// Number of distinct factor matrices.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// True when the pool holds no factors.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
@@ -135,6 +141,7 @@ impl NodeFactors {
         Self { offsets, data }
     }
 
+    /// Number of nodes with assigned potentials.
     pub fn num_nodes(&self) -> usize {
         self.offsets.len().saturating_sub(1)
     }
@@ -145,6 +152,7 @@ impl NodeFactors {
         &self.data[self.offsets[i] as usize..self.offsets[i + 1] as usize]
     }
 
+    /// Domain size of node `i`.
     pub fn domain(&self, i: usize) -> usize {
         (self.offsets[i + 1] - self.offsets[i]) as usize
     }

@@ -15,15 +15,18 @@ pub struct GraphBuilder {
 }
 
 impl GraphBuilder {
+    /// Empty edge list over `n` nodes.
     pub fn new(n: usize) -> Self {
         assert!(n <= u32::MAX as usize, "node count exceeds u32");
         Self { n, edges: Vec::new() }
     }
 
+    /// Number of nodes.
     pub fn num_nodes(&self) -> usize {
         self.n
     }
 
+    /// Number of undirected edges added so far.
     pub fn num_edges(&self) -> usize {
         self.edges.len()
     }
@@ -110,6 +113,7 @@ pub struct Csr {
 }
 
 impl Csr {
+    /// Number of nodes.
     pub fn num_nodes(&self) -> usize {
         self.offsets.len() - 1
     }
@@ -119,6 +123,7 @@ impl Csr {
         self.edge_src.len()
     }
 
+    /// Degree of node `i`.
     pub fn degree(&self, i: usize) -> usize {
         (self.offsets[i + 1] - self.offsets[i]) as usize
     }

@@ -105,6 +105,7 @@ impl Mrf {
         }
     }
 
+    /// Number of nodes (variables) in the MRF.
     pub fn num_nodes(&self) -> usize {
         self.graph.num_nodes()
     }

@@ -4,18 +4,24 @@
 use crate::bp::{all_marginals, Messages};
 use crate::configio::{Json, RunConfig};
 use crate::engines::{build_engine, Engine, EngineStats};
+use crate::exec::RunObserver;
 use crate::model::{builders, Mrf};
 use anyhow::Result;
 
 /// Everything a caller needs after one run.
 pub struct RunReport {
+    /// Engine outcome (convergence, timings, counters).
     pub stats: EngineStats,
+    /// The model the run executed on.
     pub mrf: Mrf,
+    /// Final message state (for marginal extraction).
     pub msgs: Messages,
+    /// The configuration that produced this run.
     pub config: RunConfig,
 }
 
 impl RunReport {
+    /// Node marginals from the final message state.
     pub fn marginals(&self) -> Vec<Vec<f64>> {
         all_marginals(&self.mrf, &self.msgs)
     }
@@ -61,9 +67,20 @@ pub fn run_config(cfg: &RunConfig) -> Result<RunReport> {
 /// Run on a pre-built model (lets sweeps reuse one instance across
 /// algorithms and thread counts, as the paper's tables require).
 pub fn run_on_model(cfg: &RunConfig, mrf: Mrf) -> Result<RunReport> {
+    run_on_model_observed(cfg, mrf, None)
+}
+
+/// Like [`run_on_model`], attaching an optional [`RunObserver`] (e.g. a
+/// `telemetry::TraceRecorder`) that samples the live run — the entry point
+/// the `bench` sweeps and the harness trace emission go through.
+pub fn run_on_model_observed(
+    cfg: &RunConfig,
+    mrf: Mrf,
+    observer: Option<&dyn RunObserver>,
+) -> Result<RunReport> {
     let msgs = Messages::uniform(&mrf);
     let engine = build_engine(&cfg.algorithm);
-    let stats = engine.run(&mrf, &msgs, cfg)?;
+    let stats = engine.run_observed(&mrf, &msgs, cfg, observer)?;
     Ok(RunReport { stats, mrf, msgs, config: cfg.clone() })
 }
 

@@ -22,6 +22,7 @@ use anyhow::{bail, Result};
 /// Batch sizes for which `make artifacts` emits kernels by default.
 pub const DEFAULT_BATCH_SIZES: &[usize] = &[64, 256, 1024];
 
+/// Batched message-update frontend over the PJRT executable.
 pub struct PjrtBatch {
     exe: Executable,
     /// Compiled batch width (inputs are padded to this).
@@ -41,6 +42,7 @@ impl PjrtBatch {
         Ok(PjrtBatch { exe, width })
     }
 
+    /// The fixed batch width the artifact was lowered for.
     pub fn width(&self) -> usize {
         self.width
     }

@@ -63,10 +63,15 @@ fn edge_indices(n: usize) -> (Vec<u32>, Vec<u32>) {
 
 /// Tensor-form state for the PJRT sweep.
 pub struct GridTensors {
+    /// Grid side length.
     pub n: usize,
+    /// Node potentials, row-major `n*n*2`.
     pub pot: Vec<f64>,
+    /// Horizontal pairwise factors.
     pub h: Vec<f64>,
+    /// Vertical pairwise factors.
     pub v: Vec<f64>,
+    /// Message state, packed per direction.
     pub msgs: Vec<f64>,
     right: Vec<u32>,
     down: Vec<u32>,
@@ -182,10 +187,12 @@ impl GridTensors {
 /// The compiled sweep for one grid size.
 pub struct PjrtGridSync {
     exe: Executable,
+    /// Grid side length the artifact was lowered for.
     pub n: usize,
 }
 
 impl PjrtGridSync {
+    /// Load the grid-sweep artifact for an `n`×`n` grid.
     pub fn load(n: usize) -> Result<PjrtGridSync> {
         let exe = Executable::load_named(&format!("grid_step_{n}"))?;
         Ok(PjrtGridSync { exe, n })

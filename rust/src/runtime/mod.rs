@@ -35,11 +35,14 @@ pub fn artifacts_dir() -> PathBuf {
 /// A dense input tensor (converted to f32 on the executor thread — the
 /// kernels are compiled for f32, ample for residual thresholds ≥ 1e-6).
 pub struct TensorIn {
+    /// Flat row-major element buffer.
     pub data: Vec<f64>,
+    /// Dimension sizes (XLA convention).
     pub dims: Vec<i64>,
 }
 
 impl TensorIn {
+    /// Tensor from a flat buffer and its dimensions.
     pub fn new(data: Vec<f64>, dims: &[i64]) -> Self {
         debug_assert_eq!(dims.iter().product::<i64>() as usize, data.len());
         TensorIn { data, dims: dims.to_vec() }
@@ -60,6 +63,7 @@ enum Job {
 /// A compiled artifact, ready to execute from any thread.
 pub struct Executable {
     tx: Mutex<mpsc::Sender<Job>>,
+    /// Path of the HLO text artifact this executable was loaded from.
     pub path: PathBuf,
 }
 

@@ -11,16 +11,19 @@ use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+/// The exact scheduler: one mutex-protected binary max-heap.
 pub struct ExactQueue {
     heap: Mutex<BinaryHeap<Entry>>,
     len: AtomicUsize,
 }
 
 impl ExactQueue {
+    /// Empty queue.
     pub fn new() -> Self {
         ExactQueue { heap: Mutex::new(BinaryHeap::new()), len: AtomicUsize::new(0) }
     }
 
+    /// Empty queue with pre-allocated capacity.
     pub fn with_capacity(cap: usize) -> Self {
         ExactQueue {
             heap: Mutex::new(BinaryHeap::with_capacity(cap)),

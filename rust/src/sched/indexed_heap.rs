@@ -26,22 +26,27 @@ const ABSENT: u32 = u32::MAX;
 const ARITY: usize = 4;
 
 impl IndexedHeap {
+    /// Heap over tasks `0..n`, initially empty.
     pub fn new(n: usize) -> Self {
         IndexedHeap { heap: Vec::with_capacity(n), pos: vec![ABSENT; n], prio: vec![0.0; n] }
     }
 
+    /// Number of queued tasks.
     pub fn len(&self) -> usize {
         self.heap.len()
     }
 
+    /// True when no task is queued.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
 
+    /// True when `task` is currently queued.
     pub fn contains(&self, task: u32) -> bool {
         self.pos[task as usize] != ABSENT
     }
 
+    /// Current priority of `task`, if queued.
     pub fn priority(&self, task: u32) -> Option<f64> {
         self.contains(task).then(|| self.prio[task as usize])
     }
@@ -100,6 +105,7 @@ impl IndexedHeap {
         Some((top, prio))
     }
 
+    /// Highest-priority entry without removing it.
     pub fn peek(&self) -> Option<(u32, f64)> {
         self.heap.first().map(|&t| (t, self.prio[t as usize]))
     }

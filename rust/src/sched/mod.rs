@@ -36,8 +36,11 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// that validates it.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Entry {
+    /// Priority at insertion time.
     pub prio: f64,
+    /// Task id.
     pub task: u32,
+    /// Epoch validating this entry against [`TaskStates`].
     pub epoch: u32,
 }
 
@@ -65,6 +68,7 @@ impl PartialOrd for Entry {
 /// `insert` and `pop` take the worker's thread-local RNG; the exact queue
 /// ignores it, the relaxed queues use it for queue choice.
 pub trait Scheduler: Send + Sync {
+    /// Insert an entry (relaxed schedulers pick a random queue).
     fn insert(&self, entry: Entry, rng: &mut Xoshiro256);
     /// Pop some entry (for relaxed schedulers: from the better of two random
     /// queues). `None` means "no entry found right now" — the queues looked
@@ -119,16 +123,19 @@ const CLAIM_BIT: u64 = 1 << 63;
 const EPOCH_MASK: u64 = 0xFFFF_FFFF;
 
 impl TaskStates {
+    /// States for tasks `0..n`, all unclaimed at epoch 0.
     pub fn new(n: usize) -> Self {
         let mut words = Vec::with_capacity(n);
         words.resize_with(n, || AtomicU64::new(0));
         TaskStates { words }
     }
 
+    /// Number of tasks tracked.
     pub fn len(&self) -> usize {
         self.words.len()
     }
 
+    /// True when no task is tracked.
     pub fn is_empty(&self) -> bool {
         self.words.is_empty()
     }
@@ -140,6 +147,7 @@ impl TaskStates {
     }
 
     #[inline]
+    /// True while some worker holds `task`'s claim bit.
     pub fn is_claimed(&self, task: u32) -> bool {
         self.words[task as usize].load(Ordering::Acquire) & CLAIM_BIT != 0
     }

@@ -36,6 +36,7 @@ impl SubQueue {
     }
 }
 
+/// The paper's relaxed Multiqueue: `c·p` sloppy heaps, two-choice pops.
 pub struct Multiqueue {
     queues: Vec<CachePadded<SubQueue>>,
     len: AtomicUsize,
@@ -58,6 +59,7 @@ impl Multiqueue {
         Self::new((p * c).max(2))
     }
 
+    /// Number of internal heaps.
     pub fn num_queues(&self) -> usize {
         self.queues.len()
     }

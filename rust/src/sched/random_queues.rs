@@ -20,12 +20,14 @@ struct SubQueue {
     top: AtomicF64,
 }
 
+/// The journal version's naive random queues (no rank bound).
 pub struct RandomQueues {
     queues: Vec<CachePadded<SubQueue>>,
     len: AtomicUsize,
 }
 
 impl RandomQueues {
+    /// `m` internal queues (at least 2, for distinct two-choice indices).
     pub fn new(m: usize) -> Self {
         assert!(m >= 1);
         let mut queues = Vec::with_capacity(m);
@@ -38,6 +40,7 @@ impl RandomQueues {
         RandomQueues { queues, len: AtomicUsize::new(0) }
     }
 
+    /// Number of internal queues.
     pub fn num_queues(&self) -> usize {
         self.queues.len()
     }

@@ -1,0 +1,492 @@
+//! Machine-readable performance baselines (`BENCH_<family>.json`) and the
+//! regression comparator.
+//!
+//! A [`Baseline`] is the versioned record of one `bench` sweep over a
+//! model family: per-cell wall-clock/update samples, robust summary
+//! statistics, a convergence [`Trace`], and enough provenance (git rev,
+//! seed, schema version) to interpret it later. Serialization is the
+//! crate's deterministic [`Json`] (sorted keys), so baselines diff cleanly
+//! under `git diff`.
+//!
+//! See the `telemetry` module docs for the full schema; EXPERIMENTS.md
+//! documents how to read the numbers on this single-core container.
+
+use super::trace::Trace;
+use crate::configio::{parse, Json};
+use crate::util::stats::Summary;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// Version of the `BENCH_*.json` schema; bump on incompatible change.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Default regression tolerance: a cell is flagged when its median
+/// wall-clock grows by more than this factor over the stored baseline.
+/// Generous because the reference container is small and shared; perf PRs
+/// that need tighter gates can pass their own tolerance.
+pub const DEFAULT_TOLERANCE: f64 = 1.5;
+
+/// One benchmark cell: an (algorithm, scheduler, threads) point measured
+/// `samples` times on one model family.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellResult {
+    /// Stable identifier, `"<algorithm>/p<threads>"` — the comparator's
+    /// join key across baselines.
+    pub id: String,
+    /// Algorithm display name (`AlgorithmSpec::name`).
+    pub algorithm: String,
+    /// Scheduler kind behind the algorithm (`exact`, `multiqueue`,
+    /// `random`, `sequential`, `rounds`).
+    pub scheduler: String,
+    /// Worker thread count.
+    pub threads: usize,
+    /// Per-sample wall-clock seconds.
+    pub wall_secs: Vec<f64>,
+    /// Per-sample committed update counts.
+    pub updates: Vec<f64>,
+    /// Whether every sample converged within budget.
+    pub converged: bool,
+    /// Convergence trace of the last sample.
+    pub trace: Trace,
+}
+
+impl CellResult {
+    /// Robust summary of the wall-clock samples (`None` when empty).
+    pub fn time_summary(&self) -> Option<Summary> {
+        Summary::of(&self.wall_secs)
+    }
+
+    /// Median wall-clock seconds — the comparator's primary statistic
+    /// (robust to one slow outlier sample).
+    pub fn median_secs(&self) -> Option<f64> {
+        self.time_summary().map(|s| s.median)
+    }
+
+    /// Serialize to the BENCH schema. Summaries are derived from the
+    /// samples and included for human diffing; they are recomputed (not
+    /// trusted) on load.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("id", Json::Str(self.id.clone())),
+            ("algorithm", Json::Str(self.algorithm.clone())),
+            ("scheduler", Json::Str(self.scheduler.clone())),
+            ("threads", Json::Num(self.threads as f64)),
+            ("wall_secs", Json::Arr(self.wall_secs.iter().map(|&t| Json::Num(t)).collect())),
+            ("updates", Json::Arr(self.updates.iter().map(|&u| Json::Num(u)).collect())),
+            ("converged", Json::Bool(self.converged)),
+            ("trace", self.trace.to_json()),
+        ];
+        if let Some(s) = self.time_summary() {
+            fields.push(("time_summary", s.to_json()));
+        }
+        if let Some(s) = Summary::of(&self.updates) {
+            fields.push(("updates_summary", s.to_json()));
+        }
+        Json::obj(fields)
+    }
+
+    /// Parse one cell (summaries ignored; recomputed from samples).
+    pub fn from_json(v: &Json) -> Result<CellResult> {
+        let s = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("cell.{k} missing"))
+        };
+        let arr = |k: &str| -> Result<Vec<f64>> {
+            v.get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("cell.{k} missing"))?
+                .iter()
+                .map(|x| x.as_f64().ok_or_else(|| anyhow!("cell.{k}: non-numeric sample")))
+                .collect()
+        };
+        Ok(CellResult {
+            id: s("id")?,
+            algorithm: s("algorithm")?,
+            scheduler: s("scheduler")?,
+            threads: v
+                .get("threads")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("cell.threads missing"))?,
+            wall_secs: arr("wall_secs")?,
+            updates: arr("updates")?,
+            converged: v
+                .get("converged")
+                .and_then(Json::as_bool)
+                .ok_or_else(|| anyhow!("cell.converged missing"))?,
+            trace: Trace::from_json(
+                v.get("trace").ok_or_else(|| anyhow!("cell.trace missing"))?,
+            )?,
+        })
+    }
+}
+
+/// A versioned per-family benchmark baseline — the content of one
+/// `BENCH_<family>.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Baseline {
+    /// Schema version ([`SCHEMA_VERSION`] at write time).
+    pub schema_version: u64,
+    /// Model family (`tree`, `ising`, `potts`, `ldpc`).
+    pub family: String,
+    /// Model spec the family was instantiated as (JSON form of
+    /// `ModelSpec`), so a future run can rebuild the identical instance.
+    pub model: Json,
+    /// `git rev-parse --short HEAD` at measurement time (`unknown` outside
+    /// a work tree).
+    pub git_rev: String,
+    /// Unix timestamp (seconds) of the sweep.
+    pub created_unix: u64,
+    /// Whether this was a `--quick` smoke sweep (quick baselines are not
+    /// comparable to full ones; the comparator refuses to mix them).
+    pub quick: bool,
+    /// Measured samples per cell.
+    pub samples_per_cell: usize,
+    /// RNG seed shared by model construction and schedulers.
+    pub seed: u64,
+    /// The measured cells.
+    pub cells: Vec<CellResult>,
+}
+
+impl Baseline {
+    /// Serialize to the BENCH schema.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema_version", Json::Num(self.schema_version as f64)),
+            ("family", Json::Str(self.family.clone())),
+            ("model", self.model.clone()),
+            ("git_rev", Json::Str(self.git_rev.clone())),
+            ("created_unix", Json::Num(self.created_unix as f64)),
+            ("quick", Json::Bool(self.quick)),
+            ("samples_per_cell", Json::Num(self.samples_per_cell as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("cells", Json::Arr(self.cells.iter().map(CellResult::to_json).collect())),
+        ])
+    }
+
+    /// Parse a baseline; rejects unknown schema versions.
+    pub fn from_json(v: &Json) -> Result<Baseline> {
+        let version = v
+            .get("schema_version")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("baseline.schema_version missing"))?;
+        if version > SCHEMA_VERSION {
+            anyhow::bail!(
+                "baseline schema v{version} is newer than this binary understands (v{SCHEMA_VERSION})"
+            );
+        }
+        Ok(Baseline {
+            schema_version: version,
+            family: v
+                .get("family")
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("baseline.family missing"))?,
+            model: v.get("model").cloned().unwrap_or(Json::Null),
+            git_rev: v
+                .get("git_rev")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            created_unix: v.get("created_unix").and_then(Json::as_u64).unwrap_or(0),
+            quick: v.get("quick").and_then(Json::as_bool).unwrap_or(false),
+            samples_per_cell: v
+                .get("samples_per_cell")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+            seed: v.get("seed").and_then(Json::as_u64).unwrap_or(0),
+            cells: v
+                .get("cells")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("baseline.cells missing"))?
+                .iter()
+                .map(CellResult::from_json)
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    /// Load a baseline file.
+    pub fn load(path: &Path) -> Result<Baseline> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Baseline::from_json(&v).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Write the baseline (pretty-printed, trailing newline).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+/// One cell's old-vs-new comparison.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellDiff {
+    /// Cell id (`"<algorithm>/p<threads>"`).
+    pub id: String,
+    /// Baseline median wall-clock seconds.
+    pub old_secs: f64,
+    /// New median wall-clock seconds.
+    pub new_secs: f64,
+    /// `new_secs / old_secs` (> 1 means slower).
+    pub ratio: f64,
+}
+
+/// Result of diffing two baselines of the same family.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BaselineDiff {
+    /// Cells slower than `tolerance ×` the baseline median.
+    pub regressions: Vec<CellDiff>,
+    /// Cells faster than `1/tolerance ×` the baseline median.
+    pub improvements: Vec<CellDiff>,
+    /// Cell ids present in the baseline but not the new run.
+    pub missing: Vec<String>,
+    /// Cell ids present in the new run but not the baseline.
+    pub added: Vec<String>,
+    /// Cells that converged in the baseline but not the new run — always a
+    /// regression regardless of timing.
+    pub lost_convergence: Vec<String>,
+}
+
+impl BaselineDiff {
+    /// True when the new run regressed (slower cells or lost convergence).
+    pub fn has_regression(&self) -> bool {
+        !self.regressions.is_empty() || !self.lost_convergence.is_empty()
+    }
+
+    /// Human-readable multi-line summary.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for d in &self.regressions {
+            s.push_str(&format!(
+                "REGRESSION  {}: {:.4}s -> {:.4}s ({:.2}x)\n",
+                d.id, d.old_secs, d.new_secs, d.ratio
+            ));
+        }
+        for id in &self.lost_convergence {
+            s.push_str(&format!("REGRESSION  {id}: no longer converges\n"));
+        }
+        for d in &self.improvements {
+            s.push_str(&format!(
+                "improvement {}: {:.4}s -> {:.4}s ({:.2}x)\n",
+                d.id, d.old_secs, d.new_secs, d.ratio
+            ));
+        }
+        for id in &self.missing {
+            s.push_str(&format!("missing     {id}: in baseline, not in new run\n"));
+        }
+        for id in &self.added {
+            s.push_str(&format!("added       {id}: new cell, no baseline\n"));
+        }
+        if s.is_empty() {
+            s.push_str("no differences beyond tolerance\n");
+        }
+        s
+    }
+}
+
+/// Diff `new` against the stored `old` baseline.
+///
+/// Cells are joined by id; a cell regresses when its median wall-clock
+/// exceeds `tolerance ×` the old median (`tolerance` must be > 1.0), or
+/// when it stops converging. Comparing a quick sweep against a full one
+/// (or different families) is an error — the samples measure different
+/// instances.
+pub fn compare(old: &Baseline, new: &Baseline, tolerance: f64) -> Result<BaselineDiff> {
+    if tolerance.is_nan() || tolerance <= 1.0 {
+        anyhow::bail!("tolerance must be > 1.0 (got {tolerance}); e.g. 1.5 flags a 1.5x slowdown");
+    }
+    if old.family != new.family {
+        anyhow::bail!("family mismatch: baseline {}, new {}", old.family, new.family);
+    }
+    if old.quick != new.quick {
+        anyhow::bail!(
+            "cannot compare a quick sweep against a full one (baseline quick={}, new quick={})",
+            old.quick,
+            new.quick
+        );
+    }
+    let mut diff = BaselineDiff::default();
+    for oc in &old.cells {
+        let Some(nc) = new.cells.iter().find(|c| c.id == oc.id) else {
+            diff.missing.push(oc.id.clone());
+            continue;
+        };
+        if oc.converged && !nc.converged {
+            diff.lost_convergence.push(oc.id.clone());
+            continue;
+        }
+        let (Some(old_secs), Some(new_secs)) = (oc.median_secs(), nc.median_secs()) else {
+            continue;
+        };
+        if old_secs <= 0.0 {
+            continue;
+        }
+        let ratio = new_secs / old_secs;
+        let d = CellDiff { id: oc.id.clone(), old_secs, new_secs, ratio };
+        if ratio > tolerance {
+            diff.regressions.push(d);
+        } else if ratio < 1.0 / tolerance {
+            diff.improvements.push(d);
+        }
+    }
+    for nc in &new.cells {
+        if !old.cells.iter().any(|c| c.id == nc.id) {
+            diff.added.push(nc.id.clone());
+        }
+    }
+    Ok(diff)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::trace::TracePoint;
+
+    fn cell(id: &str, secs: f64) -> CellResult {
+        CellResult {
+            id: id.to_string(),
+            algorithm: id.split('/').next().unwrap().to_string(),
+            scheduler: "multiqueue".into(),
+            threads: 2,
+            wall_secs: vec![secs, secs * 1.05, secs * 0.95],
+            updates: vec![1000.0, 1010.0, 990.0],
+            converged: true,
+            trace: Trace {
+                points: vec![TracePoint {
+                    t_secs: secs,
+                    updates: 1000,
+                    useful_updates: 900,
+                    wasted_pops: 50,
+                    stale_pops: 40,
+                    claim_failures: 10,
+                    pops: 1100,
+                    inserts: 1100,
+                    max_priority: 1e-6,
+                }],
+            },
+        }
+    }
+
+    fn baseline(cells: Vec<CellResult>) -> Baseline {
+        Baseline {
+            schema_version: SCHEMA_VERSION,
+            family: "ising".into(),
+            model: Json::obj(vec![("kind", Json::Str("ising".into())), ("n", Json::Num(8.0))]),
+            git_rev: "abc1234".into(),
+            created_unix: 1_700_000_000,
+            quick: true,
+            samples_per_cell: 3,
+            seed: 42,
+            cells,
+        }
+    }
+
+    #[test]
+    fn baseline_json_roundtrip() {
+        let b = baseline(vec![cell("relaxed_residual/p2", 0.5), cell("residual/p1", 1.0)]);
+        let text = b.to_json().to_string_pretty();
+        let back = Baseline::from_json(&parse(&text).unwrap()).unwrap();
+        assert_eq!(back, b);
+    }
+
+    #[test]
+    fn identical_baselines_diff_clean() {
+        let b = baseline(vec![cell("relaxed_residual/p2", 0.5)]);
+        let d = compare(&b, &b.clone(), DEFAULT_TOLERANCE).unwrap();
+        assert!(!d.has_regression());
+        assert!(d.improvements.is_empty());
+        assert!(d.missing.is_empty() && d.added.is_empty());
+        assert!(d.render().contains("no differences"));
+    }
+
+    #[test]
+    fn two_x_slowdown_is_flagged() {
+        let old = baseline(vec![cell("relaxed_residual/p2", 0.5)]);
+        let mut new = old.clone();
+        for c in &mut new.cells {
+            for t in &mut c.wall_secs {
+                *t *= 2.0;
+            }
+        }
+        let d = compare(&old, &new, DEFAULT_TOLERANCE).unwrap();
+        assert!(d.has_regression());
+        assert_eq!(d.regressions.len(), 1);
+        assert!((d.regressions[0].ratio - 2.0).abs() < 1e-9);
+        assert!(d.render().contains("REGRESSION"));
+    }
+
+    #[test]
+    fn speedup_is_an_improvement_not_a_regression() {
+        let old = baseline(vec![cell("relaxed_residual/p2", 1.0)]);
+        let mut new = old.clone();
+        for c in &mut new.cells {
+            for t in &mut c.wall_secs {
+                *t *= 0.4;
+            }
+        }
+        let d = compare(&old, &new, DEFAULT_TOLERANCE).unwrap();
+        assert!(!d.has_regression());
+        assert_eq!(d.improvements.len(), 1);
+    }
+
+    #[test]
+    fn lost_convergence_is_a_regression() {
+        let old = baseline(vec![cell("relaxed_residual/p2", 0.5)]);
+        let mut new = old.clone();
+        new.cells[0].converged = false;
+        let d = compare(&old, &new, DEFAULT_TOLERANCE).unwrap();
+        assert!(d.has_regression());
+        assert_eq!(d.lost_convergence, vec!["relaxed_residual/p2".to_string()]);
+    }
+
+    #[test]
+    fn missing_and_added_cells_reported() {
+        let old = baseline(vec![cell("a/p1", 0.5), cell("b/p1", 0.5)]);
+        let new = baseline(vec![cell("a/p1", 0.5), cell("c/p1", 0.5)]);
+        let d = compare(&old, &new, DEFAULT_TOLERANCE).unwrap();
+        assert_eq!(d.missing, vec!["b/p1".to_string()]);
+        assert_eq!(d.added, vec!["c/p1".to_string()]);
+        assert!(!d.has_regression(), "roster drift alone is not a perf regression");
+    }
+
+    #[test]
+    fn quick_vs_full_refused() {
+        let old = baseline(vec![cell("a/p1", 0.5)]);
+        let mut new = old.clone();
+        new.quick = false;
+        assert!(compare(&old, &new, DEFAULT_TOLERANCE).is_err());
+    }
+
+    #[test]
+    fn tolerance_must_exceed_one() {
+        let b = baseline(vec![cell("a/p1", 0.5)]);
+        assert!(compare(&b, &b.clone(), 1.0).is_err());
+        assert!(compare(&b, &b.clone(), 0.5).is_err());
+        assert!(compare(&b, &b.clone(), f64::NAN).is_err());
+        assert!(compare(&b, &b.clone(), 1.01).is_ok());
+    }
+
+    #[test]
+    fn newer_schema_rejected() {
+        let b = baseline(vec![]);
+        let mut j = b.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("schema_version".into(), Json::Num((SCHEMA_VERSION + 1) as f64));
+        }
+        assert!(Baseline::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let b = baseline(vec![cell("relaxed_residual/p2", 0.5)]);
+        let path = std::path::PathBuf::from("/tmp/rbp_baseline_test.json");
+        b.save(&path).unwrap();
+        let back = Baseline::load(&path).unwrap();
+        assert_eq!(back, b);
+        assert!(!compare(&b, &back, DEFAULT_TOLERANCE).unwrap().has_regression());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,435 @@
+//! Convergence-trace telemetry and machine-readable performance baselines.
+//!
+//! The paper's contribution is empirical — relaxed Multiqueue scheduling
+//! beats exact priority scheduling on wall-clock convergence — so this
+//! crate records first-class performance data instead of write-only
+//! markdown tables:
+//!
+//! - [`trace`] — [`TraceRecorder`] attaches to any engine run (through
+//!   [`Engine::run_observed`](crate::engines::Engine::run_observed) /
+//!   [`WorkerPool::run_observed`](crate::exec::WorkerPool::run_observed))
+//!   and samples a [`Trace`] of counter snapshots + max residual on a
+//!   background ticker;
+//! - [`baseline`] — the versioned [`Baseline`] schema written to
+//!   `BENCH_<family>.json` at the repo root, and [`compare`], the
+//!   regression comparator future perf PRs are judged against;
+//! - this module — the `bench` sweep driver ([`run_bench`]) behind the
+//!   `relaxed-bp bench` CLI subcommand.
+//!
+//! ## `BENCH_<family>.json` schema (v1)
+//!
+//! ```text
+//! {
+//!   "schema_version": 1,
+//!   "family": "ising",                  // tree | ising | potts | ldpc
+//!   "model": { "kind": "ising", "n": 8 }, // exact ModelSpec measured
+//!   "git_rev": "010aee9",               // provenance
+//!   "created_unix": 1753833600,
+//!   "quick": true,                      // --quick sweeps never compare
+//!                                       // against full ones
+//!   "samples_per_cell": 2,
+//!   "seed": 42,
+//!   "cells": [
+//!     {
+//!       "id": "relaxed_residual/p2",    // comparator join key
+//!       "algorithm": "relaxed_residual",
+//!       "scheduler": "multiqueue",      // sequential | rounds | exact |
+//!                                       // multiqueue | random
+//!       "threads": 2,
+//!       "wall_secs": [0.012, 0.011],    // one entry per sample
+//!       "updates": [4100, 4080],
+//!       "converged": true,
+//!       "time_summary": { "n": 2, "mean": …, "stddev": …, "min": …,
+//!                          "max": …, "median": …, "p05": …, "p95": … },
+//!       "updates_summary": { … },       // derived; recomputed on load
+//!       "trace": [                      // last sample's convergence trace
+//!         { "t_secs": 0.004, "updates": 1500, "useful_updates": 1400,
+//!           "wasted_pops": 60, "stale_pops": 35, "claim_failures": 5,
+//!           "pops": 1600, "inserts": 1650, "max_priority": 0.8 },
+//!         …
+//!       ]
+//!     }, …
+//!   ]
+//! }
+//! ```
+//!
+//! Keys are sorted (the crate's deterministic
+//! [`Json`](crate::configio::Json)) so baselines diff cleanly under
+//! `git diff`. Traces sample the lock-free
+//! [`CounterBoard`](crate::coordinator::CounterBoard) every
+//! [`BenchOpts::tick_ms`] milliseconds plus one exact start/end point, so
+//! every cell's trace is non-empty regardless of run length. See
+//! EXPERIMENTS.md §BENCH baselines for how to interpret the numbers on the
+//! single-core reference container.
+
+pub mod baseline;
+pub mod trace;
+
+pub use baseline::{
+    compare, Baseline, BaselineDiff, CellDiff, CellResult, DEFAULT_TOLERANCE, SCHEMA_VERSION,
+};
+pub use trace::{Trace, TracePoint, TraceRecorder};
+
+use crate::configio::{AlgorithmSpec, ModelSpec, RunConfig};
+use crate::model::builders;
+use crate::run::run_on_model_observed;
+use anyhow::{bail, Result};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+/// The model families swept by default — the paper's §5.2 roster.
+pub const FAMILIES: &[&str] = &["tree", "ising", "potts", "ldpc"];
+
+/// Configuration of one `bench` sweep.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    /// Smoke-test mode: tiny instances, fewer samples. Quick baselines are
+    /// marked in the JSON and never compared against full ones.
+    pub quick: bool,
+    /// Measured runs per cell.
+    pub samples: usize,
+    /// Thread counts swept for the concurrent engines.
+    pub threads: Vec<usize>,
+    /// Families to sweep (subset of [`FAMILIES`]).
+    pub families: Vec<String>,
+    /// Directory `BENCH_<family>.json` files land in (default: the repo
+    /// root, found by walking up to `.git`).
+    pub out_dir: PathBuf,
+    /// RNG seed for model construction and scheduler randomness.
+    pub seed: u64,
+    /// Per-sample wall-clock limit in seconds.
+    pub time_limit: f64,
+    /// Trace sampling interval in milliseconds.
+    pub tick_ms: u64,
+    /// Regression tolerance passed to [`compare`].
+    pub tolerance: f64,
+    /// Gate mode (`bench --check`): when a family regresses against its
+    /// stored baseline, keep the stored file instead of overwriting it, so
+    /// the gate stays red on re-runs until the regression is fixed (or the
+    /// baseline is regenerated without `--check`).
+    pub check: bool,
+}
+
+impl BenchOpts {
+    /// Full-sweep defaults (minutes on the reference container).
+    pub fn full() -> Self {
+        BenchOpts {
+            quick: false,
+            samples: 3,
+            threads: vec![1, 2],
+            families: FAMILIES.iter().map(|s| s.to_string()).collect(),
+            out_dir: repo_root(),
+            seed: 42,
+            time_limit: 120.0,
+            tick_ms: 25,
+            tolerance: DEFAULT_TOLERANCE,
+            check: false,
+        }
+    }
+
+    /// Smoke-test defaults (seconds end to end; used by CI and the
+    /// acceptance gate).
+    pub fn quick() -> Self {
+        BenchOpts {
+            quick: true,
+            samples: 2,
+            threads: vec![1, 2],
+            time_limit: 30.0,
+            tick_ms: 2,
+            ..Self::full()
+        }
+    }
+}
+
+/// Walk up from the current directory to the first ancestor containing
+/// `.git` (the repo root); fall back to `.` when not inside a work tree.
+/// `bench` writes its baselines there so the artifact location does not
+/// depend on whether cargo was invoked from the repo root or `rust/`.
+pub fn repo_root() -> PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        if dir.join(".git").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            return PathBuf::from(".");
+        }
+    }
+}
+
+/// `git rev-parse --short HEAD`, or `"unknown"` outside a work tree.
+pub fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// The scheduler kind behind an algorithm, for the baseline's
+/// `scheduler` field.
+pub fn scheduler_kind(alg: &AlgorithmSpec) -> &'static str {
+    use AlgorithmSpec::*;
+    match alg {
+        SequentialResidual => "sequential",
+        Synchronous | Bucket | RandomSynchronous { .. } => "rounds",
+        CoarseGrained | Splash { .. } | SmartSplash { .. } | OptimalTree => "exact",
+        RandomSplash { .. } => "random",
+        RelaxedResidual
+        | WeightDecay
+        | Priority
+        | RelaxedSmartSplash { .. }
+        | RelaxedResidualBatched { .. }
+        | RelaxedOptimalTree => "multiqueue",
+    }
+}
+
+/// The model instance measured for `family` (tiny for `--quick`, moderate
+/// for full sweeps — both far below the paper's sizes; the baselines track
+/// *this repo against itself*, not against the paper).
+pub fn family_spec(family: &str, quick: bool) -> Result<ModelSpec> {
+    Ok(match (family, quick) {
+        ("tree", true) => ModelSpec::Tree { n: 127 },
+        ("tree", false) => ModelSpec::Tree { n: 20_000 },
+        ("ising", true) => ModelSpec::Ising { n: 8 },
+        ("ising", false) => ModelSpec::Ising { n: 40 },
+        ("potts", true) => ModelSpec::Potts { n: 8 },
+        ("potts", false) => ModelSpec::Potts { n: 40 },
+        ("ldpc", true) => ModelSpec::Ldpc { n: 48, flip_prob: 0.05 },
+        ("ldpc", false) => ModelSpec::Ldpc { n: 1_000, flip_prob: 0.07 },
+        (other, _) => bail!("unknown bench family '{other}' (expected one of {FAMILIES:?})"),
+    })
+}
+
+/// The {engine × scheduler × threads} cells swept per family: the
+/// sequential exact baseline, the exact concurrent PQ, the relaxed
+/// Multiqueue, and relaxed smart splash at the highest thread count.
+fn roster(opts: &BenchOpts) -> Vec<(AlgorithmSpec, usize)> {
+    let mut cells = vec![(AlgorithmSpec::SequentialResidual, 1)];
+    for &p in &opts.threads {
+        cells.push((AlgorithmSpec::CoarseGrained, p));
+        cells.push((AlgorithmSpec::RelaxedResidual, p));
+    }
+    if let Some(&max_p) = opts.threads.iter().max() {
+        cells.push((AlgorithmSpec::RelaxedSmartSplash { h: 2 }, max_p));
+    }
+    cells
+}
+
+/// Sweep one family and assemble its [`Baseline`] (nothing is written).
+pub fn bench_family(family: &str, opts: &BenchOpts) -> Result<Baseline> {
+    let spec = family_spec(family, opts.quick)?;
+    let mrf = builders::build(&spec, opts.seed);
+    let recorder = TraceRecorder::new(Duration::from_millis(opts.tick_ms.max(1)));
+    let mut cells = Vec::new();
+    for (alg, threads) in roster(opts) {
+        let id = format!("{}/p{threads}", alg.name());
+        eprintln!("[bench] {family} / {id} …");
+        let mut wall_secs = Vec::with_capacity(opts.samples);
+        let mut updates = Vec::with_capacity(opts.samples);
+        let mut converged = true;
+        let mut last_trace = Trace::default();
+        for _ in 0..opts.samples.max(1) {
+            let mut cfg = RunConfig::new(spec.clone(), alg.clone())
+                .with_threads(threads)
+                .with_seed(opts.seed);
+            cfg.time_limit_secs = opts.time_limit;
+            let rep = run_on_model_observed(&cfg, mrf.clone(), Some(&recorder))?;
+            wall_secs.push(rep.stats.wall_secs);
+            updates.push(rep.stats.metrics.total.updates as f64);
+            converged &= rep.stats.converged;
+            last_trace = recorder.take();
+        }
+        cells.push(CellResult {
+            id,
+            algorithm: alg.name(),
+            scheduler: scheduler_kind(&alg).to_string(),
+            threads,
+            wall_secs,
+            updates,
+            converged,
+            trace: last_trace,
+        });
+    }
+    Ok(Baseline {
+        schema_version: SCHEMA_VERSION,
+        family: family.to_string(),
+        model: spec.to_json(),
+        git_rev: git_rev(),
+        created_unix: std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0),
+        quick: opts.quick,
+        samples_per_cell: opts.samples.max(1),
+        seed: opts.seed,
+        cells,
+    })
+}
+
+/// One family's sweep outcome: where the baseline landed and, when a
+/// previous baseline existed, the diff against it.
+#[derive(Debug)]
+pub struct BenchOutcome {
+    /// `BENCH_<family>.json` path.
+    pub path: PathBuf,
+    /// The freshly measured baseline. Written to `path`, except in
+    /// [`BenchOpts::check`] mode when a regression was detected — then the
+    /// file still holds the previous (stored) baseline.
+    pub baseline: Baseline,
+    /// Diff against the previous baseline at `path`, when one existed and
+    /// was comparable (same quick/full mode).
+    pub diff: Option<BaselineDiff>,
+}
+
+/// Run the full sweep: measure every requested family, diff against any
+/// existing `BENCH_<family>.json`, then overwrite it with the new
+/// baseline. Regressions are reported in the returned outcomes (and
+/// rendered by the CLI). In gate mode ([`BenchOpts::check`]) a regressed
+/// family keeps its stored baseline — otherwise overwriting would make
+/// the very next `--check` run compare regressed-vs-regressed and pass —
+/// and a stored baseline that cannot be compared at all (e.g. quick vs
+/// full) is a fatal gate error rather than a silent overwrite.
+pub fn run_bench(opts: &BenchOpts) -> Result<Vec<BenchOutcome>> {
+    if opts.tolerance.is_nan() || opts.tolerance <= 1.0 {
+        bail!("tolerance must be > 1.0 (got {}); e.g. 1.5 flags a 1.5x slowdown", opts.tolerance);
+    }
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let mut outcomes = Vec::new();
+    for family in &opts.families {
+        let baseline = bench_family(family, opts)?;
+        let path = baseline_path(&opts.out_dir, family);
+        let diff = match Baseline::load(&path) {
+            Ok(old) => match compare(&old, &baseline, opts.tolerance) {
+                Ok(d) => Some(d),
+                Err(e) if opts.check => {
+                    return Err(e.context(format!(
+                        "{}: stored baseline is not comparable; refusing to overwrite it in \
+                         --check mode (regenerate without --check first)",
+                        path.display()
+                    )));
+                }
+                Err(e) => {
+                    eprintln!("[bench] {}: not comparable ({e}); overwriting", path.display());
+                    None
+                }
+            },
+            Err(_) if !path.exists() => None,
+            Err(e) => {
+                eprintln!(
+                    "[bench] {}: unreadable previous baseline ({e}); overwriting",
+                    path.display()
+                );
+                None
+            }
+        };
+        let regressed = diff.as_ref().is_some_and(BaselineDiff::has_regression);
+        if opts.check && regressed {
+            eprintln!(
+                "[bench] {}: regression detected; keeping stored baseline (--check)",
+                path.display()
+            );
+        } else {
+            baseline.save(&path)?;
+            eprintln!("[bench] wrote {}", path.display());
+        }
+        outcomes.push(BenchOutcome { path, baseline, diff });
+    }
+    Ok(outcomes)
+}
+
+/// `<dir>/BENCH_<FAMILY>.json`.
+pub fn baseline_path(dir: &Path, family: &str) -> PathBuf {
+    dir.join(format!("BENCH_{}.json", family.to_ascii_uppercase()))
+}
+
+/// Render a compact per-family summary table (markdown) of a baseline —
+/// the human-facing view printed after a sweep.
+pub fn render_summary(b: &Baseline) -> String {
+    let mut s = format!(
+        "### BENCH {} (rev {}, {} samples/cell{})\n\n",
+        b.family,
+        b.git_rev,
+        b.samples_per_cell,
+        if b.quick { ", quick" } else { "" }
+    );
+    s.push_str("| cell | scheduler | median time | updates (median) | trace pts | converged |\n");
+    s.push_str("|---|---|---|---|---|---|\n");
+    for c in &b.cells {
+        let med = c.median_secs().unwrap_or(f64::NAN);
+        let upd = crate::util::stats::Summary::of(&c.updates).map_or(0.0, |u| u.median);
+        s.push_str(&format!(
+            "| {} | {} | {} | {:.0} | {} | {} |\n",
+            c.id,
+            c.scheduler,
+            crate::util::fmt_duration(med),
+            upd,
+            c.trace.len(),
+            if c.converged { "yes" } else { "NO" },
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_specs_resolve() {
+        for f in FAMILIES {
+            assert!(family_spec(f, true).is_ok());
+            assert!(family_spec(f, false).is_ok());
+        }
+        assert!(family_spec("nope", true).is_err());
+    }
+
+    #[test]
+    fn roster_covers_contenders() {
+        let opts = BenchOpts::quick();
+        let cells = roster(&opts);
+        assert!(cells.iter().any(|(a, _)| *a == AlgorithmSpec::SequentialResidual));
+        assert!(cells.iter().any(|(a, p)| *a == AlgorithmSpec::RelaxedResidual && *p == 2));
+        assert!(cells.iter().any(|(a, _)| *a == AlgorithmSpec::CoarseGrained));
+    }
+
+    #[test]
+    fn scheduler_kinds() {
+        assert_eq!(scheduler_kind(&AlgorithmSpec::SequentialResidual), "sequential");
+        assert_eq!(scheduler_kind(&AlgorithmSpec::CoarseGrained), "exact");
+        assert_eq!(scheduler_kind(&AlgorithmSpec::RelaxedResidual), "multiqueue");
+        assert_eq!(scheduler_kind(&AlgorithmSpec::RandomSplash { h: 2 }), "random");
+        assert_eq!(scheduler_kind(&AlgorithmSpec::Synchronous), "rounds");
+    }
+
+    #[test]
+    fn baseline_paths_uppercase_family() {
+        assert_eq!(
+            baseline_path(Path::new("/x"), "ising"),
+            PathBuf::from("/x/BENCH_ISING.json")
+        );
+    }
+
+    #[test]
+    fn bench_family_quick_tree_end_to_end() {
+        let mut opts = BenchOpts::quick();
+        opts.samples = 1;
+        opts.threads = vec![2];
+        let b = bench_family("tree", &opts).unwrap();
+        assert_eq!(b.family, "tree");
+        assert!(b.cells.len() >= 3);
+        for c in &b.cells {
+            assert!(c.converged, "{} did not converge", c.id);
+            assert!(!c.trace.is_empty(), "{} trace is empty", c.id);
+            assert_eq!(c.wall_secs.len(), 1);
+            let last = c.trace.points.last().unwrap();
+            assert!(last.max_priority < 1e-4, "{}: final priority {}", c.id, last.max_priority);
+        }
+        let summary = render_summary(&b);
+        assert!(summary.contains("relaxed_residual/p2"));
+    }
+}

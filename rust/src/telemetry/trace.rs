@@ -1,0 +1,211 @@
+//! Convergence traces: time-series of counter snapshots + max priority,
+//! recorded by a [`TraceRecorder`] attached to a run as a
+//! [`RunObserver`](crate::exec::RunObserver).
+//!
+//! A trace answers the question the paper's evaluation revolves around —
+//! *how fast does each scheduler drive the residuals down, and how much
+//! work does it waste doing so* — with one point per sampler tick:
+//! elapsed wall-clock, cumulative updates (total/useful), relaxation
+//! overhead (stale pops, wasted pops, claim failures), and the current
+//! max task priority.
+
+use crate::configio::Json;
+use crate::coordinator::Counters;
+use crate::exec::RunObserver;
+use anyhow::{anyhow, Result};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// One sampled observation of a live run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TracePoint {
+    /// Elapsed wall-clock seconds since the run started.
+    pub t_secs: f64,
+    /// Cumulative committed message updates.
+    pub updates: u64,
+    /// Cumulative updates with residual ≥ ε.
+    pub useful_updates: u64,
+    /// Cumulative pops whose priority had already dropped below ε.
+    pub wasted_pops: u64,
+    /// Cumulative pops discarded for a stale epoch.
+    pub stale_pops: u64,
+    /// Cumulative claim races lost to another worker.
+    pub claim_failures: u64,
+    /// Cumulative successful scheduler pops.
+    pub pops: u64,
+    /// Cumulative scheduler inserts.
+    pub inserts: u64,
+    /// Max task priority at sample time (≈ max residual; the convergence
+    /// signal — a converged run ends below ε).
+    pub max_priority: f64,
+}
+
+impl TracePoint {
+    /// Build a point from a counter snapshot.
+    pub fn from_counters(t_secs: f64, c: &Counters, max_priority: f64) -> Self {
+        TracePoint {
+            t_secs,
+            updates: c.updates,
+            useful_updates: c.useful_updates,
+            wasted_pops: c.wasted_pops,
+            stale_pops: c.stale_pops,
+            claim_failures: c.claim_failures,
+            pops: c.pops,
+            inserts: c.inserts,
+            max_priority,
+        }
+    }
+
+    /// Serialize to the BENCH JSON schema (`trace[]` element).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("t_secs", Json::Num(self.t_secs)),
+            ("updates", Json::Num(self.updates as f64)),
+            ("useful_updates", Json::Num(self.useful_updates as f64)),
+            ("wasted_pops", Json::Num(self.wasted_pops as f64)),
+            ("stale_pops", Json::Num(self.stale_pops as f64)),
+            ("claim_failures", Json::Num(self.claim_failures as f64)),
+            ("pops", Json::Num(self.pops as f64)),
+            ("inserts", Json::Num(self.inserts as f64)),
+            ("max_priority", Json::Num(self.max_priority)),
+        ])
+    }
+
+    /// Parse one `trace[]` element.
+    pub fn from_json(v: &Json) -> Result<TracePoint> {
+        let num =
+            |k: &str| v.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("trace.{k} missing"));
+        let int =
+            |k: &str| v.get(k).and_then(Json::as_u64).ok_or_else(|| anyhow!("trace.{k} missing"));
+        Ok(TracePoint {
+            t_secs: num("t_secs")?,
+            updates: int("updates")?,
+            useful_updates: int("useful_updates")?,
+            wasted_pops: int("wasted_pops")?,
+            stale_pops: int("stale_pops")?,
+            claim_failures: int("claim_failures")?,
+            pops: int("pops")?,
+            inserts: int("inserts")?,
+            max_priority: num("max_priority")?,
+        })
+    }
+}
+
+/// A recorded convergence trace: sample points in chronological order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    /// Sample points, chronological.
+    pub points: Vec<TracePoint>,
+}
+
+impl Trace {
+    /// Number of sample points.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// True when no point was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Serialize as a JSON array of points.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.points.iter().map(TracePoint::to_json).collect())
+    }
+
+    /// Parse a JSON array of points.
+    pub fn from_json(v: &Json) -> Result<Trace> {
+        let arr = v.as_arr().ok_or_else(|| anyhow!("trace must be an array"))?;
+        Ok(Trace { points: arr.iter().map(TracePoint::from_json).collect::<Result<_>>()? })
+    }
+}
+
+/// Records a [`Trace`] from a live run.
+///
+/// Implements [`RunObserver`]; attach via
+/// [`Engine::run_observed`](crate::engines::Engine::run_observed) or
+/// [`WorkerPool::run_observed`](crate::exec::WorkerPool::run_observed),
+/// then collect with [`TraceRecorder::take`]. Sampling cadence is the
+/// `tick` passed at construction; the runtime adds one sample at start and
+/// one from the exact final counters, so every observed run produces a
+/// non-empty trace no matter how short.
+#[derive(Debug)]
+pub struct TraceRecorder {
+    tick: Duration,
+    points: Mutex<Vec<TracePoint>>,
+}
+
+impl TraceRecorder {
+    /// Recorder sampling every `tick`.
+    pub fn new(tick: Duration) -> Self {
+        TraceRecorder { tick, points: Mutex::new(Vec::new()) }
+    }
+
+    /// Take the recorded trace, leaving the recorder empty (reusable for
+    /// the next run).
+    pub fn take(&self) -> Trace {
+        Trace { points: std::mem::take(&mut *self.points.lock().unwrap()) }
+    }
+}
+
+impl RunObserver for TraceRecorder {
+    fn tick(&self) -> Duration {
+        self.tick
+    }
+
+    fn sample(&self, elapsed_secs: f64, totals: &Counters, max_priority: f64) {
+        self.points
+            .lock()
+            .unwrap()
+            .push(TracePoint::from_counters(elapsed_secs, totals, max_priority));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configio::parse;
+
+    fn point(t: f64, updates: u64) -> TracePoint {
+        TracePoint {
+            t_secs: t,
+            updates,
+            useful_updates: updates / 2,
+            wasted_pops: 1,
+            stale_pops: 2,
+            claim_failures: 3,
+            pops: updates + 6,
+            inserts: updates + 1,
+            max_priority: 0.5,
+        }
+    }
+
+    #[test]
+    fn trace_json_roundtrip() {
+        let trace = Trace { points: vec![point(0.0, 0), point(0.5, 100)] };
+        let j = trace.to_json().to_string_pretty();
+        let back = Trace::from_json(&parse(&j).unwrap()).unwrap();
+        assert_eq!(back, trace);
+    }
+
+    #[test]
+    fn from_json_rejects_missing_fields() {
+        let v = parse(r#"[{"t_secs": 0.1}]"#).unwrap();
+        assert!(Trace::from_json(&v).is_err());
+        assert!(Trace::from_json(&parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn recorder_collects_and_resets() {
+        let rec = TraceRecorder::new(Duration::from_millis(1));
+        let c = Counters { updates: 5, ..Default::default() };
+        rec.sample(0.1, &c, 2.0);
+        rec.sample(0.2, &c, 1.0);
+        let t = rec.take();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.points[0].updates, 5);
+        assert_eq!(t.points[1].max_priority, 1.0);
+        assert!(rec.take().is_empty(), "take drains");
+    }
+}

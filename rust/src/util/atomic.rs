@@ -21,16 +21,19 @@ pub struct AtomicF64 {
 
 impl AtomicF64 {
     #[inline]
+    /// Cell holding `v`.
     pub fn new(v: f64) -> Self {
         Self { bits: AtomicU64::new(v.to_bits()) }
     }
 
     #[inline]
+    /// Relaxed load.
     pub fn load(&self) -> f64 {
         f64::from_bits(self.bits.load(Ordering::Relaxed))
     }
 
     #[inline]
+    /// Relaxed store.
     pub fn store(&self, v: f64) {
         self.bits.store(v.to_bits(), Ordering::Relaxed);
     }

@@ -3,16 +3,26 @@
 //! heuristics, in the spirit of criterion's reporting (criterion itself is
 //! not available in the offline build).
 
+use crate::configio::Json;
+
 /// Summary statistics over a sample of observations.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Sample standard deviation (n−1 denominator).
     pub stddev: f64,
+    /// Smallest observation.
     pub min: f64,
+    /// Largest observation.
     pub max: f64,
+    /// Interpolated median.
     pub median: f64,
+    /// 5th percentile (interpolated).
     pub p05: f64,
+    /// 95th percentile (interpolated).
     pub p95: f64,
 }
 
@@ -50,6 +60,21 @@ impl Summary {
         } else {
             self.stddev / self.mean.abs()
         }
+    }
+
+    /// Serialize as a JSON object — the one summary shape shared by every
+    /// reporter (`results/bench/*.json` and the `BENCH_*.json` baselines).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("mean", Json::Num(self.mean)),
+            ("stddev", Json::Num(self.stddev)),
+            ("min", Json::Num(self.min)),
+            ("max", Json::Num(self.max)),
+            ("median", Json::Num(self.median)),
+            ("p05", Json::Num(self.p05)),
+            ("p95", Json::Num(self.p95)),
+        ])
     }
 }
 
@@ -134,6 +159,15 @@ mod tests {
     fn rsd_zero_mean() {
         let s = Summary::of(&[0.0, 0.0]).unwrap();
         assert_eq!(s.rsd(), 0.0);
+    }
+
+    #[test]
+    fn summary_json_shape() {
+        let s = Summary::of(&[1.0, 2.0, 3.0]).unwrap();
+        let j = s.to_json();
+        assert_eq!(j.get("n").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("median").unwrap().as_f64(), Some(2.0));
+        assert!(j.get("p05").is_some() && j.get("p95").is_some());
     }
 
     #[test]

@@ -136,7 +136,7 @@ fn harness_tiny_full_suite_produces_reports() {
         out_dir: out.clone(),
         seed: 3,
         time_limit: 60.0,
-        use_pjrt: false,
+        ..Harness::default()
     };
     h.table3().unwrap();
     h.table7().unwrap();
@@ -144,6 +144,7 @@ fn harness_tiny_full_suite_produces_reports() {
     for f in ["table3", "table7", "fig2"] {
         assert!(out.join(format!("{f}.md")).exists(), "{f}.md");
         assert!(out.join(format!("{f}.csv")).exists(), "{f}.csv");
+        assert!(out.join(format!("{f}.traces.json")).exists(), "{f}.traces.json");
     }
     std::fs::remove_dir_all(&out).ok();
 }

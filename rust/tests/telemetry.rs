@@ -1,0 +1,186 @@
+//! Integration tests for the telemetry subsystem: trace recording on real
+//! engine runs, baseline round-trips, the regression comparator, and the
+//! `bench-compare` CLI exit code (the acceptance gate).
+
+use relaxed_bp::configio::{parse, AlgorithmSpec, ModelSpec, RunConfig};
+use relaxed_bp::engines::{build_engine, Engine};
+use relaxed_bp::model::builders;
+use relaxed_bp::telemetry::{
+    bench_family, compare, run_bench, Baseline, BenchOpts, TraceRecorder, DEFAULT_TOLERANCE,
+};
+use relaxed_bp::bp::Messages;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn tiny_opts(out_dir: &str) -> BenchOpts {
+    let mut opts = BenchOpts::quick();
+    opts.samples = 1;
+    opts.threads = vec![2];
+    opts.families = vec!["tree".into(), "ising".into(), "ldpc".into()];
+    opts.out_dir = PathBuf::from(out_dir);
+    opts
+}
+
+#[test]
+fn trace_recorder_on_relaxed_engine_run() {
+    let spec = ModelSpec::Ising { n: 8 };
+    let mrf = builders::build(&spec, 3);
+    let msgs = Messages::uniform(&mrf);
+    let cfg = RunConfig::new(spec, AlgorithmSpec::RelaxedResidual).with_threads(2).with_seed(3);
+    let recorder = TraceRecorder::new(Duration::from_millis(1));
+    let engine = build_engine(&cfg.algorithm);
+    let stats = engine.run_observed(&mrf, &msgs, &cfg, Some(&recorder)).unwrap();
+    assert!(stats.converged);
+    let trace = recorder.take();
+    assert!(!trace.is_empty());
+    let last = trace.points.last().unwrap();
+    assert_eq!(last.updates, stats.metrics.total.updates, "final point = exact totals");
+    assert!(last.max_priority < 1e-5, "converged below epsilon");
+    assert!(
+        trace.points.windows(2).all(|w| w[0].t_secs <= w[1].t_secs && w[0].updates <= w[1].updates),
+        "trace is monotone in time and updates"
+    );
+}
+
+#[test]
+fn trace_recorder_on_sequential_baseline() {
+    let spec = ModelSpec::Tree { n: 511 };
+    let mrf = builders::build(&spec, 1);
+    let msgs = Messages::uniform(&mrf);
+    let cfg = RunConfig::new(spec, AlgorithmSpec::SequentialResidual);
+    let recorder = TraceRecorder::new(Duration::from_micros(100));
+    let engine = build_engine(&cfg.algorithm);
+    let stats = engine.run_observed(&mrf, &msgs, &cfg, Some(&recorder)).unwrap();
+    assert!(stats.converged);
+    let trace = recorder.take();
+    assert!(trace.len() >= 2, "start + final samples at minimum, got {}", trace.len());
+    assert_eq!(trace.points[0].updates, 0, "start sample precedes the first commit");
+    assert_eq!(trace.points.last().unwrap().updates, stats.metrics.total.updates);
+}
+
+#[test]
+fn baseline_roundtrip_and_self_compare_is_clean() {
+    let mut opts = tiny_opts("/tmp/rbp_telemetry_rt");
+    opts.families = vec!["tree".into()];
+    let b = bench_family("tree", &opts).unwrap();
+    // serialize → deserialize → compare returns no diff on identical runs
+    let text = b.to_json().to_string_pretty();
+    let back = Baseline::from_json(&parse(&text).unwrap()).unwrap();
+    assert_eq!(back, b);
+    let d = compare(&b, &back, DEFAULT_TOLERANCE).unwrap();
+    assert!(!d.has_regression());
+    assert!(d.improvements.is_empty() && d.missing.is_empty() && d.added.is_empty());
+}
+
+#[test]
+fn comparator_flags_injected_slowdown() {
+    let mut opts = tiny_opts("/tmp/rbp_telemetry_slow");
+    opts.families = vec!["ising".into()];
+    let old = bench_family("ising", &opts).unwrap();
+    let mut slow = old.clone();
+    for c in &mut slow.cells {
+        for t in &mut c.wall_secs {
+            *t *= 2.0;
+        }
+    }
+    let d = compare(&old, &slow, DEFAULT_TOLERANCE).unwrap();
+    assert!(d.has_regression(), "2x slowdown must be flagged");
+    assert_eq!(d.regressions.len(), old.cells.len());
+}
+
+#[test]
+fn run_bench_writes_baseline_files_with_traces() {
+    let dir = "/tmp/rbp_telemetry_bench";
+    std::fs::remove_dir_all(dir).ok();
+    let opts = tiny_opts(dir);
+    let outcomes = run_bench(&opts).unwrap();
+    assert_eq!(outcomes.len(), 3);
+    for o in &outcomes {
+        assert!(o.path.exists(), "{} missing", o.path.display());
+        assert!(o.diff.is_none(), "first sweep has no previous baseline");
+        let loaded = Baseline::load(&o.path).unwrap();
+        assert_eq!(loaded, o.baseline);
+        assert!(!loaded.cells.is_empty());
+        for c in &loaded.cells {
+            assert!(!c.trace.is_empty(), "{}: empty trace", c.id);
+        }
+    }
+    // Second sweep finds the stored baselines and diffs against them.
+    let outcomes = run_bench(&opts).unwrap();
+    for o in &outcomes {
+        let d = o.diff.as_ref().expect("second sweep compares");
+        assert!(d.missing.is_empty() && d.added.is_empty(), "same roster");
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn run_bench_rejects_bad_tolerance() {
+    let mut opts = tiny_opts("/tmp/rbp_telemetry_tol");
+    opts.tolerance = 1.0;
+    assert!(run_bench(&opts).is_err(), "tolerance <= 1.0 must fail before sweeping");
+}
+
+#[test]
+fn check_mode_keeps_stored_baseline_on_regression() {
+    let dir = "/tmp/rbp_telemetry_check";
+    std::fs::remove_dir_all(dir).ok();
+    let mut opts = tiny_opts(dir);
+    opts.families = vec!["tree".into()];
+    let outcomes = run_bench(&opts).unwrap();
+    let path = outcomes[0].path.clone();
+
+    // Rewrite the stored baseline with implausibly fast times so the next
+    // live sweep is a guaranteed regression.
+    let mut fast = Baseline::load(&path).unwrap();
+    for c in &mut fast.cells {
+        for t in &mut c.wall_secs {
+            *t /= 1000.0;
+        }
+    }
+    fast.save(&path).unwrap();
+
+    opts.check = true;
+    let outcomes = run_bench(&opts).unwrap();
+    assert!(outcomes[0].diff.as_ref().unwrap().has_regression());
+    let kept = Baseline::load(&path).unwrap();
+    assert_eq!(kept, fast, "--check must not overwrite the stored baseline on regression");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn bench_compare_cli_exits_nonzero_on_regression() {
+    let dir = PathBuf::from("/tmp/rbp_telemetry_cli");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut opts = tiny_opts(dir.to_str().unwrap());
+    opts.families = vec!["tree".into()];
+    let old = bench_family("tree", &opts).unwrap();
+    let mut slow = old.clone();
+    for c in &mut slow.cells {
+        for t in &mut c.wall_secs {
+            *t *= 2.0;
+        }
+    }
+    let old_path = dir.join("old.json");
+    let new_path = dir.join("new.json");
+    old.save(&old_path).unwrap();
+    slow.save(&new_path).unwrap();
+
+    let bin = env!("CARGO_BIN_EXE_relaxed-bp");
+    let ok = std::process::Command::new(bin)
+        .args(["bench-compare", old_path.to_str().unwrap(), old_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(ok.status.success(), "identical baselines compare clean");
+
+    let bad = std::process::Command::new(bin)
+        .args(["bench-compare", old_path.to_str().unwrap(), new_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!bad.status.success(), "synthetic 2x regression must exit non-zero");
+    let stdout = String::from_utf8_lossy(&bad.stdout);
+    assert!(stdout.contains("REGRESSION"), "stdout: {stdout}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
