@@ -6,8 +6,10 @@
 //! commits the precomputed `μ'` and refreshes the pending values of the
 //! affected messages (the out-edges of the destination node).
 //!
-//! The cache shares the flat atomic layout of [`Messages`], so concurrent
-//! refreshes are benign races exactly like message writes.
+//! The cache mirrors the arena layout of the live [`Messages`] it shadows
+//! (flat or sharded — see `bp::state`), so concurrent refreshes are benign
+//! races exactly like message writes, and a shard-local worker keeps its
+//! pending values as cache-hot as its live ones.
 
 use super::state::{msg_buf, Messages, MsgSource};
 use super::update::{compute_message, residual_l2};
@@ -24,9 +26,10 @@ pub struct Lookahead {
 
 impl Lookahead {
     /// Build the cache: compute `μ'` and the residual for every edge from
-    /// the current live state.
+    /// the current live state. The pending store adopts `live`'s arena
+    /// sharding.
     pub fn init(mrf: &Mrf, live: &Messages) -> Self {
-        let pending = Messages::uniform(mrf);
+        let pending = Messages::uniform_like(mrf, live);
         let mut residual = Vec::with_capacity(mrf.num_messages());
         residual.resize_with(mrf.num_messages(), AtomicF64::default);
         let la = Lookahead { pending, residual };

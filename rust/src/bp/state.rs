@@ -1,14 +1,28 @@
 //! Shared message state.
 //!
-//! One flat array of [`AtomicF64`] cells holds every message vector
-//! (layout from [`Mrf::msg_offset`]). Worker threads read and write cells
-//! with relaxed atomics — the same benign-race discipline as the paper's
-//! Java implementation. A message read can observe a concurrent writer's
-//! partial update; BP tolerates such races (they act as slightly stale
-//! inputs) and the engines' claim flags prevent two threads from *writing*
-//! one message concurrently.
+//! Message vectors live in per-shard, cache-line-aligned **arenas** of
+//! [`AtomicF64`] cells. The default ([`Messages::uniform`]) is one arena
+//! whose cell order is exactly the flat layout from [`Mrf::msg_offset`] —
+//! bit-for-bit the historical flat-array behavior. A locality-aware run
+//! ([`Messages::uniform_partitioned`]) lays each
+//! [`Partition`](crate::model::Partition) shard's messages out
+//! contiguously in that shard's own arena, so a worker that stays on its
+//! shard walks hot, contiguous cache lines instead of striding a single
+//! model-sized array.
+//!
+//! Either way, worker threads read and write cells with relaxed atomics —
+//! the same benign-race discipline as the paper's Java implementation. A
+//! message read can observe a concurrent writer's partial update; BP
+//! tolerates such races (they act as slightly stale inputs) and the
+//! engines' claim flags prevent two threads from *writing* one message
+//! concurrently.
+//!
+//! Snapshots ([`Messages::snapshot`] / [`Messages::restore`] and the
+//! `MsgSource for [f64]` impl) always use the *flat* `msg_offset` layout
+//! regardless of the arena sharding, so frozen state is interchangeable
+//! across layouts.
 
-use crate::model::{Mrf, MAX_DOMAIN};
+use crate::model::{Mrf, Partition, MAX_DOMAIN};
 use crate::util::AtomicF64;
 
 /// Fixed-size stack buffer for one message / one domain's worth of values.
@@ -28,82 +42,213 @@ pub trait MsgSource {
     fn read_msg(&self, mrf: &Mrf, e: u32, out: &mut [f64]) -> usize;
 }
 
+/// Cells per 64-byte cache line (an [`AtomicF64`] is 8 bytes).
+const CELLS_PER_LINE: usize = 8;
+
+/// One cache line of message cells. The alignment guarantee is what makes
+/// per-shard arenas genuinely private at the cache level: two shards never
+/// share a line, so cross-shard false sharing cannot occur.
+#[repr(align(64))]
+struct CacheLine([AtomicF64; CELLS_PER_LINE]);
+
+/// Build one arena from plain values — a single non-atomic initialization
+/// pass over a freshly owned allocation (the cells become shared only when
+/// the arena is published to worker threads).
+fn arena_from_values(vals: &[f64]) -> Box<[CacheLine]> {
+    (0..vals.len().div_ceil(CELLS_PER_LINE))
+        .map(|l| {
+            CacheLine(std::array::from_fn(|k| {
+                AtomicF64::new(vals.get(l * CELLS_PER_LINE + k).copied().unwrap_or(0.0))
+            }))
+        })
+        .collect()
+}
+
 /// The live, concurrently-updatable message state.
 pub struct Messages {
-    data: Vec<AtomicF64>,
+    /// One cache-line-aligned cell arena per shard.
+    arenas: Vec<Box<[CacheLine]>>,
+    /// Shard holding each message.
+    edge_shard: Box<[u32]>,
+    /// Cell offset of each message within its shard's arena.
+    edge_local: Box<[u32]>,
+    /// Flat-layout offsets (= `Mrf::msg_offset` plus a trailing total):
+    /// the snapshot/restore layout, shared across all arena shardings.
+    flat_offset: Box<[u32]>,
 }
 
 impl Messages {
-    /// All messages initialized uniform (1/|D|).
+    /// All messages initialized uniform (1/|D|), in one flat arena whose
+    /// cell order is the `Mrf::msg_offset` layout. Initialization is a
+    /// single bulk pass — no per-cell atomic stores on the freshly owned
+    /// allocation.
     pub fn uniform(mrf: &Mrf) -> Self {
-        let mut data = Vec::with_capacity(mrf.total_msg_len);
-        data.resize_with(mrf.total_msg_len, AtomicF64::default);
-        let m = Messages { data };
-        for e in 0..mrf.num_messages() as u32 {
+        let me = mrf.num_messages();
+        let mut vals = vec![0.0f64; mrf.total_msg_len];
+        for e in 0..me as u32 {
             let len = mrf.msg_len(e);
-            let v = 1.0 / len as f64;
             let off = mrf.msg_offset[e as usize] as usize;
-            for k in 0..len {
-                m.data[off + k].store(v);
-            }
+            vals[off..off + len].fill(1.0 / len as f64);
         }
-        m
+        Messages {
+            arenas: vec![arena_from_values(&vals)],
+            edge_shard: vec![0u32; me].into_boxed_slice(),
+            edge_local: mrf.msg_offset.clone().into_boxed_slice(),
+            flat_offset: Self::flat_offsets(mrf),
+        }
+    }
+
+    /// All messages initialized uniform, with each shard of `partition`
+    /// (over the message universe: `partition.num_tasks()` must equal
+    /// `mrf.num_messages()`) stored contiguously in its own cache-line-
+    /// aligned arena. Behaviorally identical to [`Messages::uniform`]
+    /// through [`MsgSource`] / [`Messages::write_msg`]; only the physical
+    /// layout differs.
+    pub fn uniform_partitioned(mrf: &Mrf, partition: &Partition) -> Self {
+        let me = mrf.num_messages();
+        assert_eq!(
+            partition.num_tasks(),
+            me,
+            "partition must cover the message universe"
+        );
+        let k = partition.num_shards();
+        let mut edge_shard = vec![0u32; me];
+        let mut edge_local = vec![0u32; me];
+        let mut arenas = Vec::with_capacity(k);
+        let mut vals: Vec<f64> = Vec::new();
+        for s in 0..k {
+            vals.clear();
+            for &e in partition.tasks_of(s) {
+                edge_shard[e as usize] = s as u32;
+                edge_local[e as usize] = vals.len() as u32;
+                let len = mrf.msg_len(e);
+                vals.resize(vals.len() + len, 1.0 / len as f64);
+            }
+            arenas.push(arena_from_values(&vals));
+        }
+        Messages {
+            arenas,
+            edge_shard: edge_shard.into_boxed_slice(),
+            edge_local: edge_local.into_boxed_slice(),
+            flat_offset: Self::flat_offsets(mrf),
+        }
+    }
+
+    /// Uniform state sharing `layout`'s arena sharding — used by caches
+    /// that shadow the live state (the residual lookahead) so their
+    /// locality matches the state they mirror.
+    pub fn uniform_like(mrf: &Mrf, layout: &Messages) -> Self {
+        let me = mrf.num_messages();
+        assert_eq!(layout.num_messages(), me, "layout built for a different model");
+        let mut vals: Vec<Vec<f64>> = layout
+            .arenas
+            .iter()
+            .map(|a| vec![0.0f64; a.len() * CELLS_PER_LINE])
+            .collect();
+        for e in 0..me as u32 {
+            let s = layout.edge_shard[e as usize] as usize;
+            let off = layout.edge_local[e as usize] as usize;
+            let len = mrf.msg_len(e);
+            vals[s][off..off + len].fill(1.0 / len as f64);
+        }
+        Messages {
+            arenas: vals.iter().map(|v| arena_from_values(v)).collect(),
+            edge_shard: layout.edge_shard.clone(),
+            edge_local: layout.edge_local.clone(),
+            flat_offset: layout.flat_offset.clone(),
+        }
+    }
+
+    fn flat_offsets(mrf: &Mrf) -> Box<[u32]> {
+        let mut flat = Vec::with_capacity(mrf.num_messages() + 1);
+        flat.extend_from_slice(&mrf.msg_offset);
+        flat.push(mrf.total_msg_len as u32);
+        flat.into_boxed_slice()
+    }
+
+    #[inline]
+    fn cell(&self, shard: usize, idx: usize) -> &AtomicF64 {
+        &self.arenas[shard][idx / CELLS_PER_LINE].0[idx % CELLS_PER_LINE]
+    }
+
+    /// Number of messages tracked.
+    pub fn num_messages(&self) -> usize {
+        self.edge_shard.len()
+    }
+
+    /// Number of arena shards (1 for the flat [`Messages::uniform`] layout).
+    pub fn num_shards(&self) -> usize {
+        self.arenas.len()
     }
 
     /// Write message `e` from `vals[..len]`.
     #[inline]
     pub fn write_msg(&self, mrf: &Mrf, e: u32, vals: &[f64]) {
-        let off = mrf.msg_offset[e as usize] as usize;
         let len = mrf.msg_len(e);
         debug_assert!(vals.len() >= len);
+        let shard = self.edge_shard[e as usize] as usize;
+        let off = self.edge_local[e as usize] as usize;
         for k in 0..len {
-            self.data[off + k].store(vals[k]);
+            self.cell(shard, off + k).store(vals[k]);
         }
     }
 
-    /// Copy the full state into a plain vector (for snapshots/tests).
+    /// Copy the full state into a plain vector in the flat `msg_offset`
+    /// layout (for snapshots/tests) — identical across arena shardings.
     pub fn snapshot(&self) -> Vec<f64> {
-        self.data.iter().map(|c| c.load()).collect()
+        let mut out = vec![0.0f64; self.len()];
+        for e in 0..self.num_messages() {
+            let flat = self.flat_offset[e] as usize;
+            let len = (self.flat_offset[e + 1] - self.flat_offset[e]) as usize;
+            let shard = self.edge_shard[e] as usize;
+            let off = self.edge_local[e] as usize;
+            for k in 0..len {
+                out[flat + k] = self.cell(shard, off + k).load();
+            }
+        }
+        out
     }
 
-    /// Overwrite the full state from a snapshot.
+    /// Overwrite the full state from a flat-layout snapshot.
     pub fn restore(&self, snap: &[f64]) {
-        assert_eq!(snap.len(), self.data.len());
-        for (c, &v) in self.data.iter().zip(snap) {
-            c.store(v);
+        assert_eq!(snap.len(), self.len());
+        for e in 0..self.num_messages() {
+            let flat = self.flat_offset[e] as usize;
+            let len = (self.flat_offset[e + 1] - self.flat_offset[e]) as usize;
+            let shard = self.edge_shard[e] as usize;
+            let off = self.edge_local[e] as usize;
+            for k in 0..len {
+                self.cell(shard, off + k).store(snap[flat + k]);
+            }
         }
     }
 
-    /// Raw cell access (used by the lookahead cache which shares layout).
-    #[inline]
-    pub fn cell(&self, idx: usize) -> &AtomicF64 {
-        &self.data[idx]
-    }
-
-    /// Number of f64 cells.
+    /// Number of f64 cells (logical — excludes arena padding).
     pub fn len(&self) -> usize {
-        self.data.len()
+        self.flat_offset.last().map_or(0, |&t| t as usize)
     }
 
     /// True when the state holds no cells.
     pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
+        self.len() == 0
     }
 }
 
 impl MsgSource for Messages {
     #[inline]
     fn read_msg(&self, mrf: &Mrf, e: u32, out: &mut [f64]) -> usize {
-        let off = mrf.msg_offset[e as usize] as usize;
         let len = mrf.msg_len(e);
+        let shard = self.edge_shard[e as usize] as usize;
+        let off = self.edge_local[e as usize] as usize;
         for k in 0..len {
-            out[k] = self.data[off + k].load();
+            out[k] = self.cell(shard, off + k).load();
         }
         len
     }
 }
 
-/// A frozen snapshot (flat `Vec<f64>` in the same layout) is also a source.
+/// A frozen snapshot (flat `Vec<f64>` in the `msg_offset` layout) is also
+/// a source.
 impl MsgSource for [f64] {
     #[inline]
     fn read_msg(&self, mrf: &Mrf, e: u32, out: &mut [f64]) -> usize {
@@ -117,8 +262,8 @@ impl MsgSource for [f64] {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::builders;
     use crate::configio::ModelSpec;
+    use crate::model::builders;
 
     #[test]
     fn uniform_init() {
@@ -183,5 +328,53 @@ mod tests {
             snap.as_slice().read_msg(&m, e, &mut b);
             assert_eq!(&a[..2], &b[..2]);
         }
+    }
+
+    #[test]
+    fn cache_line_is_aligned() {
+        assert_eq!(std::mem::align_of::<CacheLine>(), 64);
+        assert_eq!(std::mem::size_of::<CacheLine>(), 64);
+    }
+
+    #[test]
+    fn sharded_arenas_behave_like_flat() {
+        let m = builders::build(&ModelSpec::Ising { n: 4 }, 7);
+        for shards in [1, 2, 7] {
+            let p = Partition::contiguous(m.num_messages(), shards);
+            let sharded = Messages::uniform_partitioned(&m, &p);
+            assert_eq!(sharded.num_shards(), shards.min(m.num_messages()));
+            let flat = Messages::uniform(&m);
+            assert_eq!(sharded.snapshot(), flat.snapshot(), "shards={shards}");
+            // Writes through the shared API land identically.
+            sharded.write_msg(&m, 5, &[0.2, 0.8]);
+            flat.write_msg(&m, 5, &[0.2, 0.8]);
+            assert_eq!(sharded.snapshot(), flat.snapshot(), "shards={shards}");
+            let mut a = msg_buf();
+            sharded.read_msg(&m, 5, &mut a);
+            assert_eq!(&a[..2], &[0.2, 0.8]);
+        }
+    }
+
+    #[test]
+    fn sharded_snapshot_restores_into_flat() {
+        let m = builders::build(&ModelSpec::Potts { n: 3 }, 2);
+        let p = Partition::bfs_edges(&m.graph, 3);
+        let sharded = Messages::uniform_partitioned(&m, &p);
+        sharded.write_msg(&m, 3, &[0.1, 0.2, 0.7]);
+        let flat = Messages::uniform(&m);
+        flat.restore(&sharded.snapshot());
+        let mut buf = msg_buf();
+        flat.read_msg(&m, 3, &mut buf);
+        assert_eq!(&buf[..3], &[0.1, 0.2, 0.7]);
+    }
+
+    #[test]
+    fn uniform_like_mirrors_layout() {
+        let m = builders::build(&ModelSpec::Ising { n: 3 }, 1);
+        let p = Partition::contiguous(m.num_messages(), 2);
+        let live = Messages::uniform_partitioned(&m, &p);
+        let shadow = Messages::uniform_like(&m, &live);
+        assert_eq!(shadow.num_shards(), live.num_shards());
+        assert_eq!(shadow.snapshot(), Messages::uniform(&m).snapshot());
     }
 }

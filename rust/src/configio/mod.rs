@@ -30,6 +30,12 @@ pub enum ModelSpec {
     /// Uniform-expansion full `arity`-ary tree (Lemma 2 good case): identical
     /// non-deterministic edge factors, information flows from the root.
     UniformTree { n: usize, arity: usize },
+    /// Power-law (preferential-attachment) spin glass with `n` nodes and
+    /// `m` edges per arriving node, α,β ~ U[-1,1]. The large-scale
+    /// locality workload: size it to millions of nodes via config
+    /// (`powerlaw:1000000`) to make cache behavior, and therefore the
+    /// partition axis, dominate.
+    PowerLaw { n: usize, m: usize },
 }
 
 impl ModelSpec {
@@ -43,6 +49,7 @@ impl ModelSpec {
             ModelSpec::Path { .. } => "path",
             ModelSpec::AdversarialTree { .. } => "adversarial_tree",
             ModelSpec::UniformTree { .. } => "uniform_tree",
+            ModelSpec::PowerLaw { .. } => "powerlaw",
         }
     }
 
@@ -79,6 +86,11 @@ impl ModelSpec {
                 ("n", Json::Num(*n as f64)),
                 ("arity", Json::Num(*arity as f64)),
             ]),
+            ModelSpec::PowerLaw { n, m } => Json::obj(vec![
+                ("kind", Json::Str("powerlaw".into())),
+                ("n", Json::Num(*n as f64)),
+                ("m", Json::Num(*m as f64)),
+            ]),
         }
     }
 
@@ -105,6 +117,10 @@ impl ModelSpec {
             "uniform_tree" => ModelSpec::UniformTree {
                 n,
                 arity: v.get("arity").and_then(Json::as_usize).unwrap_or(2),
+            },
+            "powerlaw" => ModelSpec::PowerLaw {
+                n,
+                m: v.get("m").and_then(Json::as_usize).unwrap_or(2),
             },
             other => bail!("unknown model kind '{other}'"),
         })
@@ -133,7 +149,141 @@ impl ModelSpec {
                 n,
                 arity: parts.get(2).map(|p| p.parse()).transpose()?.unwrap_or(2),
             },
+            "powerlaw" => ModelSpec::PowerLaw {
+                n,
+                m: parts.get(2).map(|p| p.parse()).transpose()?.unwrap_or(2),
+            },
             other => bail!("unknown model kind '{other}'"),
+        })
+    }
+}
+
+/// The locality (partitioning) axis of a run: how tasks and message
+/// storage are grouped into shards, and how strongly the relaxed
+/// scheduler prefers shard-local queues.
+///
+/// `Off` reproduces the seed behavior bit for bit: one flat message
+/// arena, locality-blind Multiqueue. `Affine` groups tasks into shards
+/// (contiguous blocks, or BFS clusters when `bfs` is set), stores each
+/// shard's messages in its own cache-line-aligned arena, and makes the
+/// Multiqueue prefer shard-local queues with spill probability `spill`
+/// (see `sched::Multiqueue::shard_affine`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PartitionSpec {
+    /// No partitioning — flat message array, locality-blind scheduling.
+    Off,
+    /// Shard-affine execution.
+    Affine {
+        /// Number of shards; 0 = one shard per worker thread.
+        shards: usize,
+        /// Probability that an insert/pop ignores shard affinity and uses
+        /// the global (locality-blind) path. Keeps cross-shard priority
+        /// information flowing; the CLI/JSON parsers reject values
+        /// outside [0, 1].
+        spill: f64,
+        /// Cluster tasks by BFS order over the model graph instead of
+        /// contiguous id blocks.
+        bfs: bool,
+    },
+}
+
+/// Default spill probability for the shard-affine Multiqueue.
+pub const DEFAULT_SPILL: f64 = 0.1;
+
+/// Reject spill probabilities outside [0, 1] (and NaN) at the config
+/// boundary, so recorded configs always describe the executed behavior.
+fn valid_spill(spill: f64) -> Result<f64> {
+    if (0.0..=1.0).contains(&spill) {
+        Ok(spill)
+    } else {
+        bail!("spill probability must be in [0, 1], got {spill}")
+    }
+}
+
+impl PartitionSpec {
+    /// Shard-affine with auto shard count (= threads) and default spill.
+    pub fn affine() -> Self {
+        PartitionSpec::Affine { shards: 0, spill: DEFAULT_SPILL, bfs: false }
+    }
+
+    /// True when partitioning is enabled.
+    pub fn is_on(&self) -> bool {
+        !matches!(self, PartitionSpec::Off)
+    }
+
+    /// Short label for reports and bench cell ids (`off`, `affine`,
+    /// `affine_bfs`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            PartitionSpec::Off => "off",
+            PartitionSpec::Affine { bfs: false, .. } => "affine",
+            PartitionSpec::Affine { bfs: true, .. } => "affine_bfs",
+        }
+    }
+
+    /// Concrete shard count for a run with `threads` workers (resolves the
+    /// `shards = 0` auto setting; at least 1).
+    pub fn resolved_shards(&self, threads: usize) -> usize {
+        match *self {
+            PartitionSpec::Off => 1,
+            PartitionSpec::Affine { shards: 0, .. } => threads.max(1),
+            PartitionSpec::Affine { shards, .. } => shards,
+        }
+    }
+
+    /// Serialize as JSON (`"off"` or an object).
+    pub fn to_json(&self) -> Json {
+        match *self {
+            PartitionSpec::Off => Json::Str("off".into()),
+            PartitionSpec::Affine { shards, spill, bfs } => Json::obj(vec![
+                ("kind", Json::Str("affine".into())),
+                ("shards", Json::Num(shards as f64)),
+                ("spill", Json::Num(spill)),
+                ("bfs", Json::Bool(bfs)),
+            ]),
+        }
+    }
+
+    /// Parse the JSON form produced by [`PartitionSpec::to_json`].
+    pub fn from_json(v: &Json) -> Result<PartitionSpec> {
+        if let Some(s) = v.as_str() {
+            return PartitionSpec::parse_cli(s);
+        }
+        match v.get("kind").and_then(Json::as_str) {
+            Some("affine") => Ok(PartitionSpec::Affine {
+                shards: v.get("shards").and_then(Json::as_usize).unwrap_or(0),
+                spill: valid_spill(
+                    v.get("spill").and_then(Json::as_f64).unwrap_or(DEFAULT_SPILL),
+                )?,
+                bfs: v.get("bfs").and_then(Json::as_bool).unwrap_or(false),
+            }),
+            Some("off") | None => Ok(PartitionSpec::Off),
+            Some(other) => bail!("unknown partition kind '{other}'"),
+        }
+    }
+
+    /// Parse CLI-style `off`, `affine[:shards[:spill]]`, or
+    /// `bfs[:shards[:spill]]` (BFS-clustered affine).
+    pub fn parse_cli(s: &str) -> Result<PartitionSpec> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let shards = || -> Result<usize> {
+            parts.get(1).map(|p| p.parse().context("bad shard count")).transpose().map(|o| o.unwrap_or(0))
+        };
+        let spill = || -> Result<f64> {
+            parts
+                .get(2)
+                .map(|p| p.parse().context("bad spill probability"))
+                .transpose()
+                .map(|o| o.unwrap_or(DEFAULT_SPILL))
+                .and_then(valid_spill)
+        };
+        Ok(match parts[0] {
+            "off" | "none" => PartitionSpec::Off,
+            "affine" => PartitionSpec::Affine { shards: shards()?, spill: spill()?, bfs: false },
+            "bfs" | "affine_bfs" => {
+                PartitionSpec::Affine { shards: shards()?, spill: spill()?, bfs: true }
+            }
+            other => bail!("unknown partition mode '{other}' (expected off | affine | bfs)"),
         })
     }
 }
@@ -283,6 +433,8 @@ pub struct RunConfig {
     pub max_updates: u64,
     /// Use the PJRT/AOT compute path where the engine supports it.
     pub use_pjrt: bool,
+    /// Locality axis: graph partitioning + shard-affine scheduling.
+    pub partition: PartitionSpec,
 }
 
 impl RunConfig {
@@ -307,6 +459,7 @@ impl RunConfig {
             time_limit_secs: 300.0,
             max_updates: 0,
             use_pjrt: false,
+            partition: PartitionSpec::Off,
         }
     }
 
@@ -334,6 +487,12 @@ impl RunConfig {
         self
     }
 
+    /// Set the locality (partitioning) axis.
+    pub fn with_partition(mut self, p: PartitionSpec) -> Self {
+        self.partition = p;
+        self
+    }
+
     /// Serialize as a JSON object.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -346,6 +505,7 @@ impl RunConfig {
             ("time_limit_secs", Json::Num(self.time_limit_secs)),
             ("max_updates", Json::Num(self.max_updates as f64)),
             ("use_pjrt", Json::Bool(self.use_pjrt)),
+            ("partition", self.partition.to_json()),
         ])
     }
 
@@ -378,6 +538,9 @@ impl RunConfig {
         }
         if let Some(b) = v.get("use_pjrt").and_then(Json::as_bool) {
             cfg.use_pjrt = b;
+        }
+        if let Some(p) = v.get("partition") {
+            cfg.partition = PartitionSpec::from_json(p)?;
         }
         Ok(cfg)
     }
@@ -457,6 +620,72 @@ mod tests {
             AlgorithmSpec::RelaxedResidual,
         );
         assert_eq!(c.epsilon, 1e-3);
+    }
+
+    #[test]
+    fn partition_cli_parse() {
+        assert_eq!(PartitionSpec::parse_cli("off").unwrap(), PartitionSpec::Off);
+        assert_eq!(
+            PartitionSpec::parse_cli("affine").unwrap(),
+            PartitionSpec::Affine { shards: 0, spill: DEFAULT_SPILL, bfs: false }
+        );
+        assert_eq!(
+            PartitionSpec::parse_cli("affine:8:0.25").unwrap(),
+            PartitionSpec::Affine { shards: 8, spill: 0.25, bfs: false }
+        );
+        assert_eq!(
+            PartitionSpec::parse_cli("bfs:4").unwrap(),
+            PartitionSpec::Affine { shards: 4, spill: DEFAULT_SPILL, bfs: true }
+        );
+        assert!(PartitionSpec::parse_cli("wat").is_err());
+        // Out-of-range spill is rejected at the config boundary.
+        assert!(PartitionSpec::parse_cli("affine:4:2.0").is_err());
+        assert!(PartitionSpec::parse_cli("affine:4:-0.1").is_err());
+        assert!(PartitionSpec::parse_cli("affine:4:NaN").is_err());
+    }
+
+    #[test]
+    fn partition_json_roundtrip() {
+        for p in [
+            PartitionSpec::Off,
+            PartitionSpec::affine(),
+            PartitionSpec::Affine { shards: 7, spill: 0.2, bfs: true },
+        ] {
+            let back = PartitionSpec::from_json(&p.to_json()).unwrap();
+            assert_eq!(back, p);
+        }
+    }
+
+    #[test]
+    fn partition_resolved_shards() {
+        assert_eq!(PartitionSpec::Off.resolved_shards(4), 1);
+        assert_eq!(PartitionSpec::affine().resolved_shards(4), 4);
+        assert_eq!(
+            PartitionSpec::Affine { shards: 7, spill: 0.1, bfs: false }.resolved_shards(2),
+            7
+        );
+    }
+
+    #[test]
+    fn config_partition_roundtrip_and_back_compat() {
+        let cfg = RunConfig::new(ModelSpec::Ising { n: 6 }, AlgorithmSpec::RelaxedResidual)
+            .with_partition(PartitionSpec::affine());
+        let j = cfg.to_json().to_string_pretty();
+        let back = RunConfig::from_json(&parse(&j).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+        // Configs written before the partition axis still parse (axis off).
+        let legacy = r#"{"model": {"kind": "ising", "n": 5}, "algorithm": "rr"}"#;
+        let cfg = RunConfig::from_json(&parse(legacy).unwrap()).unwrap();
+        assert_eq!(cfg.partition, PartitionSpec::Off);
+    }
+
+    #[test]
+    fn powerlaw_cli_and_json() {
+        let m = ModelSpec::parse_cli("powerlaw:1000:3").unwrap();
+        assert_eq!(m, ModelSpec::PowerLaw { n: 1000, m: 3 });
+        assert_eq!(m.name(), "powerlaw");
+        let back = ModelSpec::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
     }
 
     #[test]

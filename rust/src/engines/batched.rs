@@ -103,6 +103,7 @@ impl Engine for RelaxedResidualBatched {
         let policy = BatchedPolicy::new(mrf, msgs, cfg, backend);
         Ok(WorkerPool::from_config(cfg, SchedChoice::Relaxed)
             .batch(self.batch.max(1))
+            .with_partition(crate::model::partition::for_messages(mrf, cfg))
             .run_observed(&policy, observer))
     }
 }

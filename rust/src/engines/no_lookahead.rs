@@ -42,7 +42,9 @@ impl Engine for NoLookahead {
         observer: Option<&dyn crate::exec::RunObserver>,
     ) -> Result<EngineStats> {
         let policy = ScorePolicy::new(mrf, msgs, cfg);
-        Ok(WorkerPool::from_config(cfg, SchedChoice::Relaxed).run_observed(&policy, observer))
+        Ok(WorkerPool::from_config(cfg, SchedChoice::Relaxed)
+            .with_partition(crate::model::partition::for_messages(mrf, cfg))
+            .run_observed(&policy, observer))
     }
 }
 

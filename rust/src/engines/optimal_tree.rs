@@ -60,6 +60,7 @@ impl Engine for OptimalTree {
         let policy = OptimalTreePolicy::new(mrf, msgs);
         Ok(WorkerPool::from_config(cfg, choice)
             .insert_threshold(f64::NEG_INFINITY)
+            .with_partition(crate::model::partition::for_messages(mrf, cfg))
             .run_observed(&policy, observer))
     }
 }

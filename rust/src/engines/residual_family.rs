@@ -77,7 +77,9 @@ impl Engine for ResidualEngine {
             _ => SchedChoice::Relaxed,
         };
         let policy = ResidualPolicy::new(mrf, msgs, cfg, self.kind == Kind::WeightDecay);
-        Ok(WorkerPool::from_config(cfg, choice).run_observed(&policy, observer))
+        Ok(WorkerPool::from_config(cfg, choice)
+            .with_partition(crate::model::partition::for_messages(mrf, cfg))
+            .run_observed(&policy, observer))
     }
 }
 

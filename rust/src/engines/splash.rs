@@ -77,8 +77,11 @@ impl Engine for SplashEngine {
         let policy = SplashPolicy::new(mrf, msgs, cfg, self.h, self.smart);
         // Budget units are splash-tree nodes, several message updates
         // each, so flush at finer granularity than message engines.
+        // Splash tasks are nodes, so the partition covers the node
+        // universe.
         Ok(WorkerPool::from_config(cfg, self.choice)
             .flush_every(128)
+            .with_partition(crate::model::partition::for_nodes(mrf, cfg))
             .run_observed(&policy, observer))
     }
 }

@@ -66,6 +66,18 @@
 //! claim race, processed task} — the counter identity the parity tests
 //! assert on every engine.
 //!
+//! ## Locality
+//!
+//! When the run's partition axis ([`crate::configio::PartitionSpec`]) is
+//! on, the pool resolves a [`Partition`](crate::model::Partition) over the
+//! policy's task universe (engine-supplied — e.g. BFS-clustered over the
+//! model graph — or contiguous id blocks as the fallback), builds the
+//! relaxed scheduler shard-affine, assigns each worker a home shard for
+//! pops, and routes every `requeue`/`activate` insert to the task's shard
+//! through [`ExecCtx`]. All of it is advisory: the pop/epoch/claim
+//! protocol and the quiescence accounting are identical with the axis on
+//! or off.
+//!
 //! ## Live observation
 //!
 //! [`WorkerPool::run_observed`] attaches a [`RunObserver`] (e.g. the

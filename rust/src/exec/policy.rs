@@ -3,6 +3,7 @@
 //! and the [`RunObserver`] contract for live convergence sampling.
 
 use crate::coordinator::{Counters, Termination};
+use crate::model::Partition;
 use crate::sched::{Entry, Scheduler, TaskStates};
 use crate::util::Xoshiro256;
 use std::time::Duration;
@@ -100,6 +101,9 @@ pub struct ExecCtx<'a> {
     /// `useful_updates`, `wasted_pops`, `splashes`, … as they go.
     pub counters: &'a mut Counters,
     insert_threshold: f64,
+    /// The run's locality partition; inserts are routed to the task's
+    /// shard (see [`crate::sched::Scheduler::insert_hint`]).
+    partition: Option<&'a Partition>,
 }
 
 impl<'a> ExecCtx<'a> {
@@ -110,8 +114,16 @@ impl<'a> ExecCtx<'a> {
         rng: &'a mut Xoshiro256,
         counters: &'a mut Counters,
         insert_threshold: f64,
+        partition: Option<&'a Partition>,
     ) -> Self {
-        ExecCtx { sched, ts, term, rng, counters, insert_threshold }
+        ExecCtx { sched, ts, term, rng, counters, insert_threshold, partition }
+    }
+
+    /// The task's shard hint under the run's partition (`None` when the
+    /// locality axis is off).
+    #[inline]
+    fn shard_hint(&self, task: u32) -> Option<u32> {
+        self.partition.map(|p| p.shard_of(task))
     }
 
     /// Announce that `task`'s priority changed to `prio`: bump its epoch
@@ -126,7 +138,8 @@ impl<'a> ExecCtx<'a> {
         let epoch = self.ts.bump(task);
         if prio >= self.insert_threshold {
             self.term.before_insert();
-            self.sched.insert(Entry { prio, task, epoch }, self.rng);
+            let hint = self.shard_hint(task);
+            self.sched.insert_hint(Entry { prio, task, epoch }, self.rng, hint);
             self.counters.inserts += 1;
             true
         } else {
@@ -148,7 +161,8 @@ impl<'a> ExecCtx<'a> {
         if prio >= self.insert_threshold {
             let epoch = self.ts.bump(task);
             self.term.before_insert();
-            self.sched.insert(Entry { prio, task, epoch }, self.rng);
+            let hint = self.shard_hint(task);
+            self.sched.insert_hint(Entry { prio, task, epoch }, self.rng, hint);
             self.counters.inserts += 1;
             true
         } else {

@@ -2,10 +2,11 @@
 //! skeleton the engines used to copy-paste.
 
 use super::policy::{ExecCtx, RunObserver, TaskPolicy};
-use crate::configio::RunConfig;
+use crate::configio::{PartitionSpec, RunConfig};
 use crate::coordinator::{run_workers, Budget, CounterBoard, Counters, MetricsReport, Termination};
 use crate::engines::EngineStats;
-use crate::sched::{SchedChoice, Scheduler, TaskStates};
+use crate::model::Partition;
+use crate::sched::{SchedChoice, Scheduler, ShardAffinity, TaskStates};
 use crate::util::{Timer, Xoshiro256};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Duration;
@@ -64,11 +65,18 @@ pub struct WorkerPool {
     max_updates: u64,
     choice: SchedChoice,
     tuning: PoolTuning,
+    /// The run's locality axis (from `RunConfig::partition`).
+    partition_spec: PartitionSpec,
+    /// Explicit task partition from the engine (e.g. BFS-clustered over
+    /// the model graph). When absent and the axis is on, the pool falls
+    /// back to a contiguous partition over the policy's task universe.
+    partition: Option<Partition>,
 }
 
 impl WorkerPool {
     /// Pool for a run described by `cfg`, scheduled by `choice`. The
-    /// insert threshold defaults to `cfg.epsilon`.
+    /// insert threshold defaults to `cfg.epsilon`; the locality axis
+    /// follows `cfg.partition`.
     pub fn from_config(cfg: &RunConfig, choice: SchedChoice) -> Self {
         WorkerPool {
             threads: cfg.threads.max(1),
@@ -78,7 +86,17 @@ impl WorkerPool {
             max_updates: cfg.max_updates,
             choice,
             tuning: PoolTuning { insert_threshold: cfg.epsilon, ..PoolTuning::default() },
+            partition_spec: cfg.partition,
+            partition: None,
         }
+    }
+
+    /// Attach an explicit task partition (built by the engine against its
+    /// task universe — directed edges for message engines, nodes for
+    /// splash). Its task count must match the policy's `num_tasks`.
+    pub fn with_partition(mut self, partition: Option<Partition>) -> Self {
+        self.partition = partition;
+        self
     }
 
     /// Drain up to `batch` claimed tasks per processing round.
@@ -125,7 +143,35 @@ impl WorkerPool {
         let timer = Timer::start();
         let budget = Budget::new(self.time_limit_secs, self.max_updates);
         let num_tasks = policy.num_tasks();
-        let sched = self.choice.build(num_tasks, self.threads, self.queues_per_thread);
+
+        // Resolve the locality axis: an engine-supplied partition wins;
+        // otherwise, with the axis on, fall back to contiguous task-id
+        // blocks over the policy's universe.
+        let fallback_partition = match (&self.partition, self.partition_spec) {
+            (None, spec @ PartitionSpec::Affine { .. }) => {
+                Some(Partition::contiguous(num_tasks, spec.resolved_shards(self.threads)))
+            }
+            _ => None,
+        };
+        let partition: Option<&Partition> =
+            self.partition.as_ref().or(fallback_partition.as_ref());
+        if let Some(p) = partition {
+            assert_eq!(
+                p.num_tasks(),
+                num_tasks,
+                "partition universe must match the policy's task universe"
+            );
+        }
+        let spill = match self.partition_spec {
+            PartitionSpec::Affine { spill, .. } => spill,
+            PartitionSpec::Off => 0.0,
+        };
+        let affinity = partition
+            .map(|p| ShardAffinity { shards: p.num_shards(), spill });
+
+        let sched = self
+            .choice
+            .build(num_tasks, self.threads, self.queues_per_thread, affinity);
         let sched: &dyn Scheduler = sched.as_ref();
         let ts = TaskStates::new(num_tasks);
         let term = Termination::new();
@@ -135,7 +181,9 @@ impl WorkerPool {
 
         // Seed phase: single-threaded, before any worker exists. Seed
         // counters are not attributed to a worker (they would skew
-        // per-thread imbalance numbers) and are discarded.
+        // per-thread imbalance numbers) and are discarded. With the
+        // locality axis on, the ExecCtx routes every seeded entry to its
+        // shard's queue group.
         {
             let mut rng = Xoshiro256::stream(self.seed, SEED_STREAM);
             let mut seed_counters = Counters::default();
@@ -146,6 +194,7 @@ impl WorkerPool {
                 &mut rng,
                 &mut seed_counters,
                 tuning.insert_threshold,
+                partition,
             );
             policy.seed(&mut ctx);
         }
@@ -184,13 +233,43 @@ impl WorkerPool {
                 let mut claimed: Vec<u32> = Vec::with_capacity(tuning.batch);
                 let mut since_flush: u64 = 0;
                 let mut idle_spins: u32 = 0;
+                // Home shards: shard s belongs to worker s mod threads, so
+                // every shard has an owner even when shards > threads. A
+                // worker owning several shards services them round-robin,
+                // one processing round each — without that rotation,
+                // low-spill runs would starve the extra shards behind the
+                // first one's work (pops reach other groups only through
+                // the fallback sweep, which fires when the whole structure
+                // looks empty).
+                let owned: Vec<u32> = match partition {
+                    Some(p) => {
+                        let k = p.num_shards().max(1);
+                        let mut v: Vec<u32> =
+                            (tid..k).step_by(self.threads.max(1)).map(|s| s as u32).collect();
+                        if v.is_empty() {
+                            // More workers than shards: share a home.
+                            v.push((tid % k) as u32);
+                        }
+                        v
+                    }
+                    None => Vec::new(),
+                };
+                let mut home_pos = 0usize;
 
                 while !term.is_done() {
+                    let home: Option<u32> = if owned.is_empty() {
+                        None
+                    } else {
+                        Some(owned[home_pos % owned.len()])
+                    };
+                    if owned.len() > 1 {
+                        home_pos = home_pos.wrapping_add(1);
+                    }
                     // ---- Drain up to `batch` valid, claimable tasks ----
                     claimed.clear();
                     term.enter();
                     while claimed.len() < tuning.batch {
-                        match sched.pop(&mut rng) {
+                        match sched.pop_hint(&mut rng, home) {
                             Some(ent) => {
                                 term.after_pop();
                                 c.pops += 1;
@@ -219,6 +298,7 @@ impl WorkerPool {
                                     &mut rng,
                                     &mut c,
                                     tuning.insert_threshold,
+                                    partition,
                                 );
                                 policy.verify_sweep(&mut ctx)
                             });
@@ -253,6 +333,7 @@ impl WorkerPool {
                             &mut rng,
                             &mut c,
                             tuning.insert_threshold,
+                            partition,
                         );
                         policy.process(&claimed, &mut ctx, &mut scratch)
                     };
@@ -364,6 +445,34 @@ mod tests {
             }
             // Shared counter semantics: every successful pop is either
             // stale, a lost claim race, or a processed task.
+            let m = &stats.metrics.total;
+            assert_eq!(m.pops, m.stale_pops + m.claim_failures + m.updates);
+        }
+    }
+
+    #[test]
+    fn one_shot_policy_with_partition_axis() {
+        use crate::configio::PartitionSpec;
+        // Shard-affine scheduling (auto shards, contiguous fallback
+        // partition, and an explicit partition) must preserve the
+        // exactly-once processing guarantee and the pop accounting.
+        for shards in [0usize, 1, 2, 7] {
+            let mut cfg = test_cfg(4);
+            cfg.partition = PartitionSpec::Affine { shards, spill: 0.1, bfs: false };
+            let policy = OneShot::new(100);
+            let pool = WorkerPool::from_config(&cfg, SchedChoice::Relaxed);
+            let pool = if shards == 7 {
+                // Exercise the explicit-partition path too.
+                pool.with_partition(Some(crate::model::Partition::contiguous(100, 7)))
+            } else {
+                pool
+            };
+            let stats = pool.run(&policy);
+            assert!(stats.converged, "shards={shards}");
+            assert_eq!(stats.metrics.total.updates, 100, "shards={shards}");
+            for p in &policy.processed {
+                assert_eq!(p.load(Ordering::Relaxed), 1);
+            }
             let m = &stats.metrics.total;
             assert_eq!(m.pops, m.stale_pops + m.claim_failures + m.updates);
         }

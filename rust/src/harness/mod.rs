@@ -22,7 +22,7 @@ pub mod report;
 
 pub use report::{ratio_cell, Report, Row};
 
-use crate::configio::{AlgorithmSpec, ModelSpec, RunConfig};
+use crate::configio::{AlgorithmSpec, ModelSpec, PartitionSpec, RunConfig};
 use crate::model::{builders, Mrf};
 use crate::run::run_on_model_observed;
 use crate::telemetry::{Trace, TraceRecorder};
@@ -54,6 +54,9 @@ pub struct Harness {
     pub time_limit: f64,
     /// Use the PJRT/AOT compute path where the engine supports it.
     pub use_pjrt: bool,
+    /// Locality axis applied to every cell (the `locality` experiment
+    /// additionally sweeps it per cell).
+    pub partition: PartitionSpec,
     /// Traces recorded by [`Harness::run_cell`] since the last
     /// [`Harness::drain_traces`], keyed by cell id.
     pub trace_log: RefCell<Vec<(String, Trace)>>,
@@ -69,6 +72,7 @@ impl Default for Harness {
             seed: 42,
             time_limit: 120.0,
             use_pjrt: false,
+            partition: PartitionSpec::Off,
             trace_log: RefCell::new(Vec::new()),
         }
     }
@@ -89,6 +93,7 @@ impl Harness {
         let mut cfg = RunConfig::new(spec.clone(), alg).with_threads(threads).with_seed(self.seed);
         cfg.time_limit_secs = self.time_limit;
         cfg.use_pjrt = self.use_pjrt;
+        cfg.partition = self.partition;
         cfg
     }
 
@@ -102,19 +107,38 @@ impl Harness {
         alg: AlgorithmSpec,
         threads: usize,
     ) -> Result<Row> {
-        let cfg = self.cfg(spec, alg.clone(), threads);
+        self.run_cell_partitioned(mrf, spec, alg, threads, self.partition)
+    }
+
+    /// [`Harness::run_cell`] with an explicit locality axis (used by the
+    /// `locality` experiment's off-vs-affine sweep).
+    pub fn run_cell_partitioned(
+        &self,
+        mrf: &Mrf,
+        spec: &ModelSpec,
+        alg: AlgorithmSpec,
+        threads: usize,
+        partition: PartitionSpec,
+    ) -> Result<Row> {
+        let mut cfg = self.cfg(spec, alg.clone(), threads);
+        cfg.partition = partition;
         eprintln!(
-            "[harness] {} / {} / p={} …",
+            "[harness] {} / {} / p={} / partition={} …",
             spec.name(),
             alg.name(),
-            threads
+            threads,
+            partition.label()
         );
         let recorder = TraceRecorder::new(Duration::from_millis(TRACE_TICK_MS));
         let rep = run_on_model_observed(&cfg, mrf.clone(), Some(&recorder))?;
-        self.trace_log.borrow_mut().push((
-            format!("{}/{}/p{}", spec.name(), alg.name(), threads),
-            recorder.take(),
-        ));
+        // Same id policy as the bench cells: off-axis ids keep their
+        // historical form so trace keys stay joinable across revisions.
+        let id = if partition.is_on() {
+            format!("{}/{}/p{}/{}", spec.name(), alg.name(), threads, partition.label())
+        } else {
+            format!("{}/{}/p{}", spec.name(), alg.name(), threads)
+        };
+        self.trace_log.borrow_mut().push((id, recorder.take()));
         let m = &rep.stats.metrics.total;
         Ok(Row {
             model: spec.name().to_string(),
@@ -551,6 +575,74 @@ impl Harness {
         Ok(rep)
     }
 
+    /// Locality study: relaxed residual with the partition axis off vs
+    /// shard-affine, on the grid and power-law workloads — the partition
+    /// speedup measured, not asserted. On a single-core CI runner the
+    /// wall-clock ratios hover near 1 (see EXPERIMENTS.md §Locality);
+    /// update counts confirm the schedule itself stays equivalent.
+    pub fn locality(&self) -> Result<Report> {
+        let mut rep = Report::new(
+            "locality",
+            "Shard-affine scheduling + sharded arenas vs locality-blind (partition axis)",
+        );
+        self.standard_notes(&mut rep);
+        let grid = side(300, self.scale).max(6);
+        let pl = scaled(90_000, self.scale).max(200);
+        let specs = vec![
+            ModelSpec::Ising { n: grid },
+            ModelSpec::PowerLaw { n: pl, m: 2 },
+        ];
+        let axes = [PartitionSpec::Off, PartitionSpec::affine()];
+        let mut md = String::from(
+            "| input | p | partition | time (s) | updates | speedup vs off |\n|---|---|---|---|---|---|\n",
+        );
+        for spec in &specs {
+            let mrf = builders::build(spec, self.seed);
+            for &p in &self.threads {
+                // Baseline timing is only meaningful from a converged run;
+                // a timed-out baseline would fabricate a speedup (see
+                // EXPERIMENTS.md §Locality).
+                let mut off_secs = None;
+                for axis in axes {
+                    let row = self.run_cell_partitioned(
+                        &mrf,
+                        spec,
+                        AlgorithmSpec::RelaxedResidual,
+                        p,
+                        axis,
+                    )?;
+                    let speedup = match (axis, off_secs) {
+                        (PartitionSpec::Off, _) => {
+                            if row.converged {
+                                off_secs = Some(row.wall_secs);
+                                "1.00×".to_string()
+                            } else {
+                                "—".into()
+                            }
+                        }
+                        (_, Some(base)) if row.converged => {
+                            format!("{:.2}×", base / row.wall_secs.max(1e-9))
+                        }
+                        _ => "—".into(),
+                    };
+                    md.push_str(&format!(
+                        "| {} | {p} | {} | {} | {} | {} |\n",
+                        spec.name(),
+                        axis.label(),
+                        if row.converged { format!("{:.3}", row.wall_secs) } else { "—".into() },
+                        row.updates,
+                        speedup,
+                    ));
+                    rep.push(row);
+                }
+            }
+        }
+        rep.add_table(format!("### Locality axis: off vs shard-affine\n\n{md}"));
+        self.drain_traces(&mut rep);
+        rep.emit(&self.out_dir)?;
+        Ok(rep)
+    }
+
     /// Run everything.
     pub fn all(&self) -> Result<()> {
         self.tables_moderate()?;
@@ -562,6 +654,7 @@ impl Harness {
             self.fig_scaling(which)?;
         }
         self.lemma2()?;
+        self.locality()?;
         Ok(())
     }
 

@@ -15,7 +15,7 @@
 
 use anyhow::{anyhow, bail, Result};
 use relaxed_bp::cli::Args;
-use relaxed_bp::configio::{AlgorithmSpec, ModelSpec, RunConfig};
+use relaxed_bp::configio::{AlgorithmSpec, ModelSpec, PartitionSpec, RunConfig};
 use relaxed_bp::harness::Harness;
 use relaxed_bp::model::{builders, io as model_io};
 use relaxed_bp::run::run_config;
@@ -94,6 +94,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     if args.has_switch("use-pjrt") {
         cfg.use_pjrt = true;
     }
+    if let Some(p) = args.opt("partition") {
+        cfg.partition = PartitionSpec::parse_cli(p)?;
+    }
 
     let report = run_config(&cfg)?;
     let json = report.to_json();
@@ -141,6 +144,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     if args.has_switch("use-pjrt") {
         h.use_pjrt = true;
     }
+    if let Some(p) = args.opt("partition") {
+        h.partition = PartitionSpec::parse_cli(p)?;
+    }
 
     match which {
         "table1" | "table2" | "table5" | "table6" | "moderate" => {
@@ -172,6 +178,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         }
         "lemma2" => {
             h.lemma2()?;
+        }
+        "locality" => {
+            h.locality()?;
         }
         "all" => h.all()?,
         other => bail!("unknown experiment '{other}'"),
@@ -210,6 +219,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
     }
     if let Some(t) = args.opt_parse::<f64>("tolerance")? {
         opts.tolerance = t;
+    }
+    if let Some(p) = args.opt_csv::<String>("partitions")? {
+        opts.partitions = p
+            .iter()
+            .map(|s| PartitionSpec::parse_cli(s))
+            .collect::<Result<Vec<_>>>()?;
     }
     opts.check = args.has_switch("check");
 
@@ -280,13 +295,17 @@ relaxed-bp — Relaxed Scheduling for Scalable Belief Propagation (reproduction)
 USAGE:
   relaxed-bp run --model <kind:size> --algorithm <alg> [--threads N]
                  [--epsilon E] [--seed S] [--time-limit SECS] [--use-pjrt]
+                 [--partition off|affine[:shards[:spill]]|bfs[:shards[:spill]]]
                  [--config cfg.json] [--out report.json] [--marginals]
   relaxed-bp experiment <id> [--scale F] [--threads 1,2,4,8]
                  [--max-threads N] [--out-dir DIR] [--seed S] [--use-pjrt]
-      ids: table1 table3 table4 table7 fig2 fig4 fig5 fig6 fig7 lemma2 all
-  relaxed-bp bench [--quick] [--families tree,ising,potts,ldpc] [--threads 1,2]
-                 [--samples N] [--out-dir DIR] [--seed S] [--time-limit SECS]
-                 [--tick-ms MS] [--tolerance X] [--check]
+                 [--partition MODE]
+      ids: table1 table3 table4 table7 fig2 fig4 fig5 fig6 fig7 lemma2
+           locality all
+  relaxed-bp bench [--quick] [--families tree,ising,potts,ldpc,powerlaw]
+                 [--threads 1,2] [--samples N] [--out-dir DIR] [--seed S]
+                 [--time-limit SECS] [--tick-ms MS] [--tolerance X]
+                 [--partitions off,affine] [--check]
       writes BENCH_<FAMILY>.json baselines (with convergence traces) to the
       repo root and diffs them against the previous revision's baselines;
       --check exits non-zero on regression
@@ -296,4 +315,9 @@ USAGE:
   relaxed-bp list-algorithms
 
 MODELS: tree:N ising:N potts:N ldpc:N[:flip] path:N adversarial_tree:N
-        uniform_tree:N[:arity]";
+        uniform_tree:N[:arity] powerlaw:N[:m]
+
+PARTITION MODES (the locality axis): off = flat arena + locality-blind
+        Multiqueue (seed behavior); affine = contiguous task shards, sharded
+        message arenas, shard-affine Multiqueue; bfs = shards clustered by
+        graph BFS order. shards defaults to the thread count, spill to 0.1.";

@@ -1,0 +1,522 @@
+//! Model generators for the paper's benchmark families (§5.2) plus the
+//! Lemma-2 analytical instances and the large-scale locality workloads.
+//!
+//! Every generator is deterministic in `(spec, seed)` — all randomness
+//! flows through [`Xoshiro256`] — so sweeps can rebuild the identical
+//! instance per algorithm and thread count:
+//!
+//! - **tree / path / adversarial_tree**: binary trees with root prior
+//!   `(0.1, 0.9)`, uniform priors elsewhere, and *equality* edge factors —
+//!   information flows only away from the root, making useful-update
+//!   counts analytically checkable (§4);
+//! - **uniform_tree**: the Lemma-2 good case — full `arity`-ary tree with
+//!   one shared non-deterministic mixing factor;
+//! - **ising / potts**: `n×n` grids with random fields and couplings
+//!   (α,β ~ U[-1,1] for Ising, U[-2.5,2.5] for the 3-state Potts model);
+//! - **ldpc**: the flagship application — a (3,6)-regular LDPC decoding
+//!   MRF (see [`ldpc`]);
+//! - **powerlaw**: preferential-attachment spin glass — the large-scale
+//!   locality workload (size it to millions of nodes via config, e.g.
+//!   `powerlaw:1000000`; an `ising:1000` grid is the matching million-node
+//!   grid workload). Hub-dominated topology breaks the grid's id-order
+//!   locality, which is exactly what the partition axis
+//!   ([`crate::model::partition`]) is measured against.
+
+use super::{FactorPool, GraphBuilder, Mrf, NodeFactors};
+use crate::configio::ModelSpec;
+use crate::util::Xoshiro256;
+
+/// Build the MRF described by `spec`, deterministically in `(spec, seed)`.
+pub fn build(spec: &ModelSpec, seed: u64) -> Mrf {
+    match *spec {
+        ModelSpec::Tree { n } => binary_tree(n),
+        ModelSpec::Path { n } => path(n),
+        ModelSpec::AdversarialTree { n } => adversarial_tree(n),
+        ModelSpec::UniformTree { n, arity } => uniform_tree(n, arity),
+        ModelSpec::Ising { n } => ising(n, seed),
+        ModelSpec::Potts { n } => potts(n, seed),
+        ModelSpec::Ldpc { n, flip_prob } => ldpc::build(n, flip_prob, seed).mrf,
+        ModelSpec::PowerLaw { n, m } => powerlaw(n, m, seed),
+    }
+}
+
+/// Assemble a binary-domain tree MRF from an edge list oriented away from
+/// the root: node 0 carries the `(0.1, 0.9)` root prior, every other node
+/// is uniform, and all edges share one factor matrix.
+fn evidence_tree(name: &str, n: usize, edges: Vec<(usize, usize)>, factor: [f64; 4]) -> Mrf {
+    let mut gb = GraphBuilder::new(n);
+    let mut pool = FactorPool::new();
+    let f = pool.add(2, 2, &factor);
+    let mut edge_idx = Vec::with_capacity(edges.len());
+    for (a, b) in edges {
+        gb.add_edge(a, b);
+        edge_idx.push(f);
+    }
+    let mut priors = vec![vec![0.5, 0.5]; n];
+    if n > 0 {
+        priors[0] = vec![0.1, 0.9];
+    }
+    Mrf::assemble(
+        name,
+        gb.build(),
+        vec![2; n],
+        NodeFactors::from_vecs(&priors),
+        edge_idx,
+        pool,
+    )
+}
+
+/// Deterministic equality factor (the §4/§5.2 tree instances).
+const EQUALITY: [f64; 4] = [1.0, 0.0, 0.0, 1.0];
+
+/// Full binary tree with `n` vertices: node `i`'s children are `2i+1` and
+/// `2i+2`; edges oriented parent→child.
+fn binary_tree(n: usize) -> Mrf {
+    let mut edges = Vec::with_capacity(n.saturating_sub(1));
+    for i in 0..n {
+        for c in [2 * i + 1, 2 * i + 2] {
+            if c < n {
+                edges.push((i, c));
+            }
+        }
+    }
+    evidence_tree("tree", n, edges, EQUALITY)
+}
+
+/// Path graph rooted at node 0 (the Lemma-2 bad case).
+fn path(n: usize) -> Mrf {
+    let edges = (0..n.saturating_sub(1)).map(|i| (i, i + 1)).collect();
+    evidence_tree("path", n, edges, EQUALITY)
+}
+
+/// Lemma-2 adversarial tree (paper Figure 3): a main path of `⌈√n⌉` nodes
+/// with side paths hanging off every main-path node, consuming the
+/// remaining vertices as evenly as possible.
+fn adversarial_tree(n: usize) -> Mrf {
+    let mut edges = Vec::with_capacity(n.saturating_sub(1));
+    if n > 1 {
+        let m = (n as f64).sqrt().ceil() as usize;
+        let m = m.clamp(2, n);
+        for i in 0..m - 1 {
+            edges.push((i, i + 1));
+        }
+        // Side paths off main nodes 1..m, round-robin lengths.
+        let rest = n - m;
+        let anchors = m - 1;
+        let mut next = m;
+        for j in 0..anchors {
+            let len = rest / anchors + usize::from(j < rest % anchors);
+            let mut prev = j + 1;
+            for _ in 0..len {
+                edges.push((prev, next));
+                prev = next;
+                next += 1;
+            }
+        }
+        debug_assert_eq!(next, n);
+    }
+    evidence_tree("adversarial_tree", n, edges, EQUALITY)
+}
+
+/// Lemma-2 good case: full `arity`-ary tree with one shared
+/// non-deterministic mixing factor, so information flows from the root
+/// with uniform geometric expansion.
+fn uniform_tree(n: usize, arity: usize) -> Mrf {
+    let arity = arity.max(1);
+    let mut edges = Vec::with_capacity(n.saturating_sub(1));
+    for i in 0..n {
+        for k in 1..=arity {
+            let c = arity * i + k;
+            if c < n {
+                edges.push((i, c));
+            }
+        }
+    }
+    evidence_tree("uniform_tree", n, edges, [0.9, 0.1, 0.1, 0.9])
+}
+
+/// Binary spin-glass factors for one node/edge sample:
+/// `ψ_i = (e^{-α}, e^{α})`, `ψ_ij = [[e^β, e^{-β}], [e^{-β}, e^β]]`.
+fn spin_prior(alpha: f64) -> Vec<f64> {
+    vec![(-alpha).exp(), alpha.exp()]
+}
+
+fn spin_coupling(beta: f64) -> [f64; 4] {
+    let (p, m) = (beta.exp(), (-beta).exp());
+    [p, m, m, p]
+}
+
+/// Ising model on an `n×n` grid, α,β ~ U[-1,1] (paper §5.2). Node
+/// `(r, c)` has id `r·n + c`; edges run right and down, so contiguous id
+/// blocks are row blocks — the layout the contiguous partitioner exploits.
+fn ising(n: usize, seed: u64) -> Mrf {
+    grid_spin_glass("ising", n, seed, 1.0)
+}
+
+fn grid_spin_glass(name: &str, n: usize, seed: u64, amp: f64) -> Mrf {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let nodes = n * n;
+    let priors: Vec<Vec<f64>> =
+        (0..nodes).map(|_| spin_prior(rng.uniform(-amp, amp))).collect();
+    let mut gb = GraphBuilder::new(nodes);
+    let mut pool = FactorPool::new();
+    let mut edge_idx = Vec::new();
+    for r in 0..n {
+        for c in 0..n {
+            let i = r * n + c;
+            if c + 1 < n {
+                gb.add_edge(i, i + 1);
+                edge_idx.push(pool.add(2, 2, &spin_coupling(rng.uniform(-amp, amp))));
+            }
+            if r + 1 < n {
+                gb.add_edge(i, i + n);
+                edge_idx.push(pool.add(2, 2, &spin_coupling(rng.uniform(-amp, amp))));
+            }
+        }
+    }
+    Mrf::assemble(
+        name,
+        gb.build(),
+        vec![2; nodes],
+        NodeFactors::from_vecs(&priors),
+        edge_idx,
+        pool,
+    )
+}
+
+/// 3-state Potts-style model on an `n×n` grid, α,β ~ U[-2.5,2.5] (paper
+/// §5.2): per-state random fields, diagonal (same-state) couplings `e^β`.
+fn potts(n: usize, seed: u64) -> Mrf {
+    const Q: usize = 3;
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let nodes = n * n;
+    let priors: Vec<Vec<f64>> = (0..nodes)
+        .map(|_| (0..Q).map(|_| rng.uniform(-2.5, 2.5).exp()).collect())
+        .collect();
+    let mut gb = GraphBuilder::new(nodes);
+    let mut pool = FactorPool::new();
+    let mut edge_idx = Vec::new();
+    let coupling = |rng: &mut Xoshiro256, pool: &mut FactorPool| {
+        let b = rng.uniform(-2.5f64, 2.5).exp();
+        let mut m = [1.0f64; Q * Q];
+        for x in 0..Q {
+            m[x * Q + x] = b;
+        }
+        pool.add(Q, Q, &m)
+    };
+    for r in 0..n {
+        for c in 0..n {
+            let i = r * n + c;
+            if c + 1 < n {
+                gb.add_edge(i, i + 1);
+                edge_idx.push(coupling(&mut rng, &mut pool));
+            }
+            if r + 1 < n {
+                gb.add_edge(i, i + n);
+                edge_idx.push(coupling(&mut rng, &mut pool));
+            }
+        }
+    }
+    Mrf::assemble(
+        "potts",
+        gb.build(),
+        vec![Q as u32; nodes],
+        NodeFactors::from_vecs(&priors),
+        edge_idx,
+        pool,
+    )
+}
+
+/// Preferential-attachment (power-law) spin glass: node `t` attaches
+/// `min(m, t)` edges to distinct earlier nodes, chosen by degree-biased
+/// sampling (an endpoint of a random existing edge) mixed 50/50 with
+/// uniform sampling so early graphs stay connected. α,β ~ U[-1,1].
+fn powerlaw(n: usize, m: usize, seed: u64) -> Mrf {
+    let m = m.max(1);
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut gb = GraphBuilder::new(n);
+    // One endpoint entry per edge side: sampling uniformly from this list
+    // is degree-proportional sampling.
+    let mut endpoints: Vec<u32> = Vec::with_capacity(2 * n * m);
+    let mut chosen: Vec<usize> = Vec::with_capacity(m);
+    for t in 1..n {
+        chosen.clear();
+        let want = m.min(t);
+        let mut attempts = 0;
+        while chosen.len() < want && attempts < 64 * want {
+            attempts += 1;
+            let cand = if endpoints.is_empty() || rng.bernoulli(0.5) {
+                rng.index(t)
+            } else {
+                endpoints[rng.index(endpoints.len())] as usize
+            };
+            if !chosen.contains(&cand) {
+                chosen.push(cand);
+            }
+        }
+        for &c in &chosen {
+            gb.add_edge(c, t);
+            endpoints.push(c as u32);
+            endpoints.push(t as u32);
+        }
+    }
+    let num_edges = gb.num_edges();
+    let priors: Vec<Vec<f64>> = (0..n).map(|_| spin_prior(rng.uniform(-1.0, 1.0))).collect();
+    let mut pool = FactorPool::new();
+    let mut edge_idx = Vec::with_capacity(num_edges);
+    for _ in 0..num_edges {
+        edge_idx.push(pool.add(2, 2, &spin_coupling(rng.uniform(-1.0, 1.0))));
+    }
+    Mrf::assemble(
+        "powerlaw",
+        gb.build(),
+        vec![2; n],
+        NodeFactors::from_vecs(&priors),
+        edge_idx,
+        pool,
+    )
+}
+
+/// (3,6)-regular LDPC decoding instances (paper §5.2).
+///
+/// The pairwise-MRF encoding: each of the `n` variable nodes is binary;
+/// each of the `n/2` constraint nodes has domain `2^6 = 64`, one state per
+/// joint assignment of its six incident bits. The edge factor at bit
+/// position `k` is the 2×64 indicator `bit_k(s) = x`, and the constraint's
+/// node potential is the even-parity indicator — so the joint puts mass
+/// exactly on codewords, weighted by the BSC channel evidence.
+pub mod ldpc {
+    use super::*;
+
+    /// Bits per (3,6) constraint — fixed by the constraint domain `2^6`.
+    const CHECK_DEG: usize = 6;
+    /// Edges per variable node.
+    const VAR_DEG: usize = 3;
+
+    /// One decoding instance: the MRF plus the channel ground truth.
+    pub struct Instance {
+        /// The decoding MRF (variables first, then constraint nodes).
+        pub mrf: Mrf,
+        /// Number of variable nodes (`decode_bits(.., num_vars)` recovers
+        /// the codeword estimate).
+        pub num_vars: usize,
+        /// The transmitted codeword (all zeros — always valid).
+        pub sent: Vec<u8>,
+        /// The received word after the binary symmetric channel.
+        pub received: Vec<u8>,
+    }
+
+    /// Build a (3,6)-LDPC decoding instance with `n` variable nodes
+    /// (`n` must be even and ≥ 6, so each variable can reach three
+    /// distinct constraints), BSC flip probability `flip_prob`.
+    ///
+    /// The bipartite graph is a random socket matching, re-drawn until it
+    /// is simple (no variable touches a constraint twice) — a couple of
+    /// attempts suffice even for tiny instances.
+    pub fn build(n: usize, flip_prob: f64, seed: u64) -> Instance {
+        assert!(n >= 6 && n % 2 == 0, "(3,6)-LDPC needs an even n >= 6, got {n}");
+        let checks = n / 2;
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+
+        // Socket matching: each constraint owns CHECK_DEG sockets; shuffle
+        // and deal VAR_DEG to each variable, retrying until simple.
+        let mut sockets: Vec<u32> = Vec::with_capacity(checks * CHECK_DEG);
+        for c in 0..checks as u32 {
+            for _ in 0..CHECK_DEG {
+                sockets.push(c);
+            }
+        }
+        let assignment = loop {
+            rng.shuffle(&mut sockets);
+            let simple = sockets.chunks(VAR_DEG).all(|chunk| {
+                chunk[0] != chunk[1] && chunk[0] != chunk[2] && chunk[1] != chunk[2]
+            });
+            if simple {
+                break sockets.clone();
+            }
+        };
+
+        // Channel: all-zeros codeword through BSC(flip_prob).
+        let sent = vec![0u8; n];
+        let received: Vec<u8> = (0..n).map(|_| u8::from(rng.bernoulli(flip_prob))).collect();
+
+        // Graph + factors. Edge insertion order fixes each edge's bit
+        // position within its constraint.
+        let nodes = n + checks;
+        let mut gb = GraphBuilder::new(nodes);
+        let mut pool = FactorPool::new();
+        // Six shared bit-position indicator matrices ψ_k(x, s) = [bit_k(s) = x].
+        let bit_factor: Vec<u32> = (0..CHECK_DEG)
+            .map(|k| {
+                let mut m = vec![0.0f64; 2 * 64];
+                for s in 0..64usize {
+                    let bit = (s >> k) & 1;
+                    m[bit * 64 + s] = 1.0;
+                }
+                pool.add(2, 64, &m)
+            })
+            .collect();
+        let mut edge_idx = Vec::with_capacity(n * VAR_DEG);
+        let mut check_fill = vec![0usize; checks];
+        for v in 0..n {
+            for &c in &assignment[v * VAR_DEG..(v + 1) * VAR_DEG] {
+                let c = c as usize;
+                let k = check_fill[c];
+                check_fill[c] += 1;
+                debug_assert!(k < CHECK_DEG);
+                gb.add_edge(v, n + c);
+                edge_idx.push(bit_factor[k]);
+            }
+        }
+        debug_assert!(check_fill.iter().all(|&f| f == CHECK_DEG));
+
+        // Node potentials: channel evidence for variables, even-parity
+        // indicator for constraints.
+        let parity: Vec<f64> = (0..64u32)
+            .map(|s| if s.count_ones() % 2 == 0 { 1.0 } else { 0.0 })
+            .collect();
+        let mut priors: Vec<Vec<f64>> = Vec::with_capacity(nodes);
+        for &y in &received {
+            priors.push(if y == 0 {
+                vec![1.0 - flip_prob, flip_prob]
+            } else {
+                vec![flip_prob, 1.0 - flip_prob]
+            });
+        }
+        for _ in 0..checks {
+            priors.push(parity.clone());
+        }
+
+        let mut domain = vec![2u32; n];
+        domain.resize(n + checks, 64u32);
+
+        let mrf = Mrf::assemble(
+            "ldpc",
+            gb.build(),
+            domain,
+            NodeFactors::from_vecs(&priors),
+            edge_idx,
+            pool,
+        );
+        Instance { mrf, num_vars: n, sent, received }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tree_shapes() {
+        let m = build(&ModelSpec::Tree { n: 7 }, 1);
+        assert_eq!(m.num_nodes(), 7);
+        assert_eq!(m.num_messages(), 12);
+        assert!(m.all_binary());
+        assert_eq!(m.node_factors.of(0), &[0.1, 0.9]);
+        assert_eq!(m.node_factors.of(3), &[0.5, 0.5]);
+        // Even directed edges point away from the root.
+        for k in 0..m.num_messages() / 2 {
+            let e = 2 * k;
+            assert!(m.graph.edge_src[e] < m.graph.edge_dst[e]);
+        }
+        m.graph.validate();
+    }
+
+    #[test]
+    fn path_is_a_chain() {
+        let m = build(&ModelSpec::Path { n: 5 }, 1);
+        assert_eq!(m.num_messages(), 8);
+        assert_eq!(m.graph.degree(0), 1);
+        assert_eq!(m.graph.degree(2), 2);
+    }
+
+    #[test]
+    fn adversarial_tree_is_a_tree_of_n_nodes() {
+        for n in [4, 9, 16, 100, 101] {
+            let m = build(&ModelSpec::AdversarialTree { n }, 1);
+            assert_eq!(m.num_nodes(), n);
+            assert_eq!(m.num_messages(), 2 * (n - 1), "n={n}: must be a tree");
+            m.graph.validate();
+            // Connected: BFS from the root reaches everything.
+            let d = m.graph.bfs_distances(0);
+            assert!(d.iter().all(|&x| x != u32::MAX), "n={n}: connected");
+        }
+    }
+
+    #[test]
+    fn uniform_tree_arity() {
+        let m = build(&ModelSpec::UniformTree { n: 13, arity: 3 }, 1);
+        assert_eq!(m.num_messages(), 24);
+        assert_eq!(m.graph.degree(0), 3);
+    }
+
+    #[test]
+    fn ising_grid_shape_and_determinism() {
+        let a = build(&ModelSpec::Ising { n: 4 }, 7);
+        assert_eq!(a.num_nodes(), 16);
+        assert_eq!(a.num_messages(), 2 * 2 * 4 * 3); // 2·|E|, |E| = 2·4·3
+        assert!(a.all_binary());
+        let b = build(&ModelSpec::Ising { n: 4 }, 7);
+        assert_eq!(a.node_factors.of(5), b.node_factors.of(5));
+        let c = build(&ModelSpec::Ising { n: 4 }, 8);
+        assert_ne!(a.node_factors.of(5), c.node_factors.of(5));
+    }
+
+    #[test]
+    fn potts_is_three_state() {
+        let m = build(&ModelSpec::Potts { n: 3 }, 2);
+        assert_eq!(m.max_domain(), 3);
+        assert!(!m.all_binary());
+        assert_eq!(m.num_messages(), 2 * 12);
+    }
+
+    #[test]
+    fn powerlaw_shape_and_determinism() {
+        let m = build(&ModelSpec::PowerLaw { n: 200, m: 2 }, 3);
+        assert_eq!(m.num_nodes(), 200);
+        // Every node past the first attaches at least one edge.
+        assert!(m.num_messages() / 2 >= 199);
+        m.graph.validate();
+        // Hubs exist: max degree well above the attachment constant.
+        let max_deg = (0..200).map(|i| m.graph.degree(i)).max().unwrap();
+        assert!(max_deg >= 6, "max degree {max_deg}");
+        let m2 = build(&ModelSpec::PowerLaw { n: 200, m: 2 }, 3);
+        assert_eq!(m.num_messages(), m2.num_messages());
+    }
+
+    #[test]
+    fn ldpc_instance_is_36_regular() {
+        let inst = ldpc::build(24, 0.07, 1);
+        let m = &inst.mrf;
+        assert_eq!(inst.num_vars, 24);
+        assert_eq!(m.num_nodes(), 24 + 12);
+        for v in 0..24 {
+            assert_eq!(m.graph.degree(v), 3, "variable degree");
+            assert_eq!(m.domain[v], 2);
+        }
+        for c in 24..36 {
+            assert_eq!(m.graph.degree(c), 6, "constraint degree");
+            assert_eq!(m.domain[c], 64);
+        }
+        assert_eq!(inst.sent, vec![0u8; 24]);
+        assert_eq!(inst.received.len(), 24);
+    }
+
+    #[test]
+    fn ldpc_tiny_instances_build() {
+        // The socket-matching retry loop must terminate even at the
+        // smallest size (every variable must hit all 3 constraints).
+        for seed in 0..5 {
+            let inst = ldpc::build(6, 0.07, seed);
+            inst.mrf.graph.validate();
+        }
+    }
+
+    #[test]
+    fn ldpc_flip_rate_tracks_channel() {
+        let inst = ldpc::build(10_000, 0.07, 42);
+        let flips: usize = inst.received.iter().map(|&b| b as usize).sum();
+        let rate = flips as f64 / 10_000.0;
+        assert!((rate - 0.07).abs() < 0.02, "rate={rate}");
+    }
+}

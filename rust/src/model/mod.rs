@@ -5,15 +5,19 @@
 //! message layout (offset + length) that the BP engines index into.
 //!
 //! Model generators for all of the paper's benchmark families live in
-//! [`builders`]; binary serialization in [`io`].
+//! [`builders`]; the locality layer (task → shard partitioning consumed by
+//! the sharded message arenas and the shard-affine scheduler) in
+//! [`partition`]; binary serialization in [`io`].
 
 pub mod builders;
 pub mod factors;
 pub mod graph;
 pub mod io;
+pub mod partition;
 
 pub use factors::{FactorPool, FactorRef, NodeFactors};
 pub use graph::{Csr, GraphBuilder};
+pub use partition::Partition;
 
 /// Largest variable domain supported by the stack-buffer update kernels
 /// (LDPC constraint nodes need 2^6 = 64).

@@ -1,0 +1,317 @@
+//! Deterministic task partitioning — the locality layer.
+//!
+//! A [`Partition`] groups a task universe (`0..num_tasks`: directed-edge
+//! ids for the message engines, node ids for splash) into `k` shards. It
+//! is consumed in three places:
+//!
+//! - [`crate::bp::Messages::uniform_partitioned`] lays each shard's
+//!   message vectors out in its own cache-line-aligned arena, so a worker
+//!   that stays on its shard walks hot, contiguous memory;
+//! - the shard-affine [`crate::sched::Multiqueue`] routes inserts and pops
+//!   to the queues owned by the task's shard (with a configurable spill
+//!   probability);
+//! - [`crate::exec::WorkerPool`] assigns each worker a home shard and
+//!   threads the partition through [`crate::exec::ExecCtx`] so policy
+//!   seeding and requeues land shard-local.
+//!
+//! Two deterministic modes (no RNG — the same model always partitions the
+//! same way):
+//!
+//! - **contiguous**: shard `s` owns the id block `[s·n/k, (s+1)·n/k)`.
+//!   Matches the flat layouts the builders already emit (grids are
+//!   row-major, trees level-ish), and costs O(n).
+//! - **BFS-clustered**: order nodes by multi-source BFS from node 0
+//!   (restarting on each unvisited component), order edge tasks by the
+//!   BFS rank of their *source* node, then cut the order into `k` equal
+//!   blocks. Neighboring tasks land in the same shard even when the
+//!   builder's id order is not locality-friendly.
+//!
+//! Every constructor validates the result against the graph it was built
+//! from: shard ranges tile `0..num_tasks` and each task belongs to exactly
+//! one shard (see [`Partition::validate`]).
+
+use super::graph::Csr;
+use super::Mrf;
+use crate::configio::{PartitionSpec, RunConfig};
+
+/// A frozen assignment of tasks to shards.
+///
+/// Stores both directions of the mapping: `task → shard` for O(1) routing
+/// on the hot path, and `shard → tasks` (a permutation of `0..num_tasks`
+/// grouped by shard, plus offsets) for arena layout and sweeps.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    /// Shard of each task.
+    task_shard: Vec<u32>,
+    /// Shard `s` owns `tasks_in_order[shard_offsets[s]..shard_offsets[s+1]]`.
+    shard_offsets: Vec<u32>,
+    /// Permutation of `0..num_tasks`, grouped by shard (contiguous mode:
+    /// the identity).
+    tasks_in_order: Vec<u32>,
+}
+
+impl Partition {
+    /// Build from an explicit task order: the first `n/k` ordered tasks go
+    /// to shard 0, and so on. `order` must be a permutation of
+    /// `0..num_tasks`.
+    fn from_order(order: Vec<u32>, shards: usize) -> Partition {
+        let n = order.len();
+        let k = shards.max(1).min(n.max(1));
+        let mut shard_offsets = Vec::with_capacity(k + 1);
+        for s in 0..=k {
+            shard_offsets.push((s * n / k) as u32);
+        }
+        let mut task_shard = vec![0u32; n];
+        for s in 0..k {
+            for i in shard_offsets[s] as usize..shard_offsets[s + 1] as usize {
+                task_shard[order[i] as usize] = s as u32;
+            }
+        }
+        let p = Partition { task_shard, shard_offsets, tasks_in_order: order };
+        p.validate();
+        p
+    }
+
+    /// Contiguous id blocks: shard `s` owns `[s·n/k, (s+1)·n/k)`. The
+    /// shard count is clamped to `max(1, min(shards, num_tasks))` so every
+    /// shard is nonempty.
+    pub fn contiguous(num_tasks: usize, shards: usize) -> Partition {
+        Self::from_order((0..num_tasks as u32).collect(), shards)
+    }
+
+    /// BFS-clustered partition of the **directed-edge** task universe of
+    /// `graph` (`num_tasks = graph.num_directed_edges()`): edges sorted by
+    /// the BFS rank of their source node (stable on edge id), then cut
+    /// into `shards` blocks.
+    pub fn bfs_edges(graph: &Csr, shards: usize) -> Partition {
+        let rank = bfs_rank(graph);
+        let mut order: Vec<u32> = (0..graph.num_directed_edges() as u32).collect();
+        order.sort_by_key(|&e| (rank[graph.edge_src[e as usize] as usize], e));
+        Self::from_order(order, shards)
+    }
+
+    /// BFS-clustered partition of the **node** task universe of `graph`
+    /// (`num_tasks = graph.num_nodes()`).
+    pub fn bfs_nodes(graph: &Csr, shards: usize) -> Partition {
+        let rank = bfs_rank(graph);
+        let mut order: Vec<u32> = (0..graph.num_nodes() as u32).collect();
+        order.sort_by_key(|&v| rank[v as usize]);
+        Self::from_order(order, shards)
+    }
+
+    /// Number of tasks partitioned.
+    pub fn num_tasks(&self) -> usize {
+        self.task_shard.len()
+    }
+
+    /// Number of shards (each nonempty, except for the empty universe).
+    pub fn num_shards(&self) -> usize {
+        self.shard_offsets.len() - 1
+    }
+
+    /// Shard owning `task`.
+    #[inline]
+    pub fn shard_of(&self, task: u32) -> u32 {
+        self.task_shard[task as usize]
+    }
+
+    /// The tasks owned by `shard`, in layout order.
+    pub fn tasks_of(&self, shard: usize) -> &[u32] {
+        let lo = self.shard_offsets[shard] as usize;
+        let hi = self.shard_offsets[shard + 1] as usize;
+        &self.tasks_in_order[lo..hi]
+    }
+
+    /// Check the structural invariants: shard ranges tile `0..num_tasks`,
+    /// the grouped order is a permutation, and the two mapping directions
+    /// agree. Panics on violation (constructors call this; tests call it
+    /// on every generated instance).
+    pub fn validate(&self) {
+        let n = self.num_tasks();
+        let k = self.num_shards();
+        assert_eq!(self.tasks_in_order.len(), n, "order must cover every task");
+        assert_eq!(self.shard_offsets[0], 0);
+        assert_eq!(self.shard_offsets[k] as usize, n, "shard ranges must tile 0..num_tasks");
+        let mut seen = vec![false; n];
+        for s in 0..k {
+            assert!(
+                self.shard_offsets[s] <= self.shard_offsets[s + 1],
+                "shard offsets must be monotone"
+            );
+            for &t in self.tasks_of(s) {
+                assert!(!seen[t as usize], "task {t} appears in more than one shard");
+                seen[t as usize] = true;
+                assert_eq!(self.task_shard[t as usize], s as u32, "task {t} mapping mismatch");
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every task must land in exactly one shard");
+    }
+
+    /// Validate this partition against the graph universe it should cover:
+    /// `num_tasks` must equal the directed-edge count (message engines) or
+    /// the node count (splash engines) of `graph`.
+    pub fn validate_against(&self, graph: &Csr) {
+        let n = self.num_tasks();
+        assert!(
+            n == graph.num_directed_edges() || n == graph.num_nodes(),
+            "partition over {n} tasks matches neither the {} directed edges nor the {} nodes",
+            graph.num_directed_edges(),
+            graph.num_nodes()
+        );
+    }
+}
+
+/// BFS visit rank of every node, multi-source from node 0 with restarts on
+/// unvisited components — total over all nodes, deterministic.
+fn bfs_rank(graph: &Csr) -> Vec<u32> {
+    let n = graph.num_nodes();
+    let mut rank = vec![u32::MAX; n];
+    let mut next = 0u32;
+    let mut queue = std::collections::VecDeque::new();
+    for root in 0..n {
+        if rank[root] != u32::MAX {
+            continue;
+        }
+        rank[root] = next;
+        next += 1;
+        queue.push_back(root as u32);
+        while let Some(u) = queue.pop_front() {
+            for &v in graph.neighbors(u as usize) {
+                if rank[v as usize] == u32::MAX {
+                    rank[v as usize] = next;
+                    next += 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+    }
+    rank
+}
+
+/// The partition of `mrf`'s **message** task universe described by
+/// `cfg.partition` (`None` when the axis is off). This is what the
+/// message-task engines (residual family, priority, batched, optimal
+/// tree) attach to the pool, and what sharded [`crate::bp::Messages`]
+/// arenas are laid out by.
+///
+/// Construction is deterministic in `(mrf, cfg)`, so the arena layout
+/// (resolved by `run::run_on_model_observed`) and the scheduler routing
+/// (resolved again inside the engine) always agree. The duplicate
+/// resolution is a deliberate tradeoff: it keeps `Engine::run`'s
+/// signature partition-free, at the cost of one extra O(E log E) pass at
+/// startup for the BFS mode.
+pub fn for_messages(mrf: &Mrf, cfg: &RunConfig) -> Option<Partition> {
+    match cfg.partition {
+        PartitionSpec::Off => None,
+        PartitionSpec::Affine { bfs, .. } => {
+            let shards = cfg.partition.resolved_shards(cfg.threads);
+            let p = if bfs {
+                Partition::bfs_edges(&mrf.graph, shards)
+            } else {
+                Partition::contiguous(mrf.num_messages(), shards)
+            };
+            p.validate_against(&mrf.graph);
+            Some(p)
+        }
+    }
+}
+
+/// The partition of `mrf`'s **node** task universe described by
+/// `cfg.partition` (`None` when the axis is off) — the splash engines'
+/// counterpart of [`for_messages`].
+pub fn for_nodes(mrf: &Mrf, cfg: &RunConfig) -> Option<Partition> {
+    match cfg.partition {
+        PartitionSpec::Off => None,
+        PartitionSpec::Affine { bfs, .. } => {
+            let shards = cfg.partition.resolved_shards(cfg.threads);
+            let p = if bfs {
+                Partition::bfs_nodes(&mrf.graph, shards)
+            } else {
+                Partition::contiguous(mrf.num_nodes(), shards)
+            };
+            p.validate_against(&mrf.graph);
+            Some(p)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::GraphBuilder;
+
+    fn path(n: usize) -> Csr {
+        let mut b = GraphBuilder::new(n);
+        for i in 0..n - 1 {
+            b.add_edge(i, i + 1);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn contiguous_tiles_and_balances() {
+        for (n, k) in [(10, 3), (7, 7), (100, 1), (5, 9)] {
+            let p = Partition::contiguous(n, k);
+            p.validate();
+            assert_eq!(p.num_tasks(), n);
+            assert!(p.num_shards() <= n.max(1));
+            let sizes: Vec<usize> = (0..p.num_shards()).map(|s| p.tasks_of(s).len()).collect();
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "contiguous shards balanced: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn contiguous_is_identity_order() {
+        let p = Partition::contiguous(8, 2);
+        assert_eq!(p.tasks_of(0), &[0, 1, 2, 3]);
+        assert_eq!(p.tasks_of(1), &[4, 5, 6, 7]);
+        assert_eq!(p.shard_of(3), 0);
+        assert_eq!(p.shard_of(4), 1);
+    }
+
+    #[test]
+    fn bfs_edges_keeps_neighboring_edges_together() {
+        // On a path, the BFS edge order is the id order, so the two halves
+        // of the path land in the two shards.
+        let g = path(9); // 8 undirected edges → 16 tasks
+        let p = Partition::bfs_edges(&g, 2);
+        p.validate();
+        p.validate_against(&g);
+        assert_eq!(p.num_tasks(), 16);
+        // Both directed edges of one undirected edge share a rank-adjacent
+        // source, so at most one undirected edge straddles the cut.
+        let straddling = (0..8)
+            .filter(|&k| p.shard_of(2 * k) != p.shard_of(2 * k + 1))
+            .count();
+        assert!(straddling <= 1, "straddling undirected edges: {straddling}");
+    }
+
+    #[test]
+    fn bfs_nodes_covers_disconnected_components() {
+        let mut b = GraphBuilder::new(6);
+        b.add_edge(0, 1);
+        // nodes 2..6 isolated
+        b.add_edge(4, 5);
+        let g = b.build();
+        let p = Partition::bfs_nodes(&g, 3);
+        p.validate();
+        assert_eq!(p.num_tasks(), 6);
+    }
+
+    #[test]
+    fn shard_count_clamped_to_tasks() {
+        let p = Partition::contiguous(3, 10);
+        assert_eq!(p.num_shards(), 3);
+        for s in 0..3 {
+            assert_eq!(p.tasks_of(s).len(), 1);
+        }
+    }
+
+    #[test]
+    fn empty_universe() {
+        let p = Partition::contiguous(0, 4);
+        assert_eq!(p.num_tasks(), 0);
+        p.validate();
+    }
+}

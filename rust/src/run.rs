@@ -73,15 +73,33 @@ pub fn run_on_model(cfg: &RunConfig, mrf: Mrf) -> Result<RunReport> {
 /// Like [`run_on_model`], attaching an optional [`RunObserver`] (e.g. a
 /// `telemetry::TraceRecorder`) that samples the live run — the entry point
 /// the `bench` sweeps and the harness trace emission go through.
+///
+/// With the locality axis on (`cfg.partition`), the message state is laid
+/// out in per-shard arenas matching the run's message partition, so the
+/// shard-affine scheduler's locality actually translates into cache
+/// locality.
 pub fn run_on_model_observed(
     cfg: &RunConfig,
     mrf: Mrf,
     observer: Option<&dyn RunObserver>,
 ) -> Result<RunReport> {
-    let msgs = Messages::uniform(&mrf);
+    let msgs = build_messages(cfg, &mrf);
     let engine = build_engine(&cfg.algorithm);
     let stats = engine.run_observed(&mrf, &msgs, cfg, observer)?;
     Ok(RunReport { stats, mrf, msgs, config: cfg.clone() })
+}
+
+/// Uniform message state laid out for the run described by `cfg`:
+/// per-shard arenas matching the run's message partition when the
+/// locality axis is on, the flat arena otherwise. The single resolution
+/// point shared by production runs and the parity/property test suites —
+/// keep them on this helper so the arena layout can never drift from the
+/// scheduler's partition.
+pub fn build_messages(cfg: &RunConfig, mrf: &Mrf) -> Messages {
+    match crate::model::partition::for_messages(mrf, cfg) {
+        Some(p) => Messages::uniform_partitioned(mrf, &p),
+        None => Messages::uniform(mrf),
+    }
 }
 
 #[cfg(test)]

@@ -18,6 +18,16 @@
 //! Every inserted entry is popped exactly once, so a global counter of
 //! in-queue entries (maintained by the coordinator) gives quiescence
 //! detection for termination.
+//!
+//! ## Locality (shard affinity)
+//!
+//! The hint variants [`Scheduler::insert_hint`] / [`Scheduler::pop_hint`]
+//! carry the locality layer's shard assignment (see
+//! [`crate::model::partition`]). The shard-affine [`Multiqueue`] uses them
+//! to keep a task's entries on queues owned by its shard; all other
+//! schedulers ignore them. Hints never affect the entry/epoch/claim
+//! protocol or the quiescence accounting — they only bias *which* queue an
+//! operation touches.
 
 pub mod exact;
 pub mod indexed_heap;
@@ -67,6 +77,15 @@ impl PartialOrd for Entry {
 ///
 /// `insert` and `pop` take the worker's thread-local RNG; the exact queue
 /// ignores it, the relaxed queues use it for queue choice.
+///
+/// The `*_hint` variants additionally carry a **shard hint** from the
+/// locality layer (the task's shard on insert, the worker's home shard on
+/// pop). Schedulers without a locality notion ignore the hint — the
+/// default implementations delegate to the blind operations — while the
+/// shard-affine [`Multiqueue`] routes the operation to the hinted shard's
+/// queue group (subject to its spill probability). The hint is advisory:
+/// correctness (no lost entries, `pop → None` ⟺ momentarily empty) never
+/// depends on it.
 pub trait Scheduler: Send + Sync {
     /// Insert an entry (relaxed schedulers pick a random queue).
     fn insert(&self, entry: Entry, rng: &mut Xoshiro256);
@@ -76,6 +95,30 @@ pub trait Scheduler: Send + Sync {
     fn pop(&self, rng: &mut Xoshiro256) -> Option<Entry>;
     /// Estimated number of entries across all internal queues.
     fn approx_len(&self) -> usize;
+
+    /// [`Scheduler::insert`] with the task's shard as a locality hint.
+    fn insert_hint(&self, entry: Entry, rng: &mut Xoshiro256, shard: Option<u32>) {
+        let _ = shard;
+        self.insert(entry, rng);
+    }
+
+    /// [`Scheduler::pop`] with the worker's home shard as a locality hint.
+    fn pop_hint(&self, rng: &mut Xoshiro256, shard: Option<u32>) -> Option<Entry> {
+        let _ = shard;
+        self.pop(rng)
+    }
+}
+
+/// Shard-affinity configuration handed to [`SchedChoice::build`] when the
+/// run's partition axis is on: how many shards the task universe has, and
+/// the probability that an operation ignores affinity (see
+/// [`Multiqueue::shard_affine`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShardAffinity {
+    /// Number of task shards (queue groups).
+    pub shards: usize,
+    /// Spill probability in [0, 1].
+    pub spill: f64,
 }
 
 /// Which scheduler an [`exec::WorkerPool`](crate::exec::WorkerPool) run
@@ -96,16 +139,27 @@ pub enum SchedChoice {
 
 impl SchedChoice {
     /// Build the scheduler for a pool of `threads` workers over
-    /// `num_tasks` tasks.
+    /// `num_tasks` tasks. `affinity` is the run's partition axis: when set,
+    /// the relaxed Multiqueue is built shard-affine (the exact and random
+    /// schedulers have no locality notion and ignore it).
     pub fn build(
         self,
         num_tasks: usize,
         threads: usize,
         queues_per_thread: usize,
+        affinity: Option<ShardAffinity>,
     ) -> Box<dyn Scheduler> {
         match self {
             SchedChoice::Exact => Box::new(ExactQueue::with_capacity(num_tasks)),
-            SchedChoice::Relaxed => Box::new(Multiqueue::for_threads(threads, queues_per_thread)),
+            SchedChoice::Relaxed => match affinity {
+                Some(a) => Box::new(Multiqueue::shard_affine(
+                    threads,
+                    queues_per_thread,
+                    a.shards,
+                    a.spill,
+                )),
+                None => Box::new(Multiqueue::for_threads(threads, queues_per_thread)),
+            },
             SchedChoice::Random => Box::new(RandomQueues::new(threads.max(2))),
         }
     }

@@ -13,6 +13,20 @@
 //! fairness guarantees `q = O(p log p)` w.h.p. [Alistarh et al., PODC'17].
 //! The cached tops (one relaxed atomic per heap, updated under that heap's
 //! lock) keep the common path to two atomic loads + one lock.
+//!
+//! ## Shard-affine mode
+//!
+//! [`Multiqueue::shard_affine`] splits the heaps into one **queue group
+//! per shard** of the run's [`Partition`](crate::model::Partition)
+//! (contiguous, ≥ 2 heaps each so two-choice stays meaningful). Operations
+//! carrying a shard hint ([`Scheduler::insert_hint`] /
+//! [`Scheduler::pop_hint`]) stay inside the hinted group with probability
+//! `1 − spill` and take the classic global path with probability `spill` —
+//! the knob that trades cache locality against cross-shard priority
+//! mixing. The entry/epoch/claim protocol is untouched: a pop that finds
+//! the local group empty still falls back to the global blocking sweep, so
+//! `pop → None` means the *whole* structure was momentarily empty exactly
+//! as in the blind mode (which the quiescence accounting relies on).
 
 use super::{Entry, Scheduler};
 use crate::util::{AtomicF64, CachePadded, Xoshiro256};
@@ -36,12 +50,33 @@ impl SubQueue {
     }
 }
 
-/// The paper's relaxed Multiqueue: `c·p` sloppy heaps, two-choice pops.
+/// Queue-group ownership for the shard-affine mode.
+struct Affinity {
+    /// Group `g` owns queues `bounds[g]..bounds[g+1]` (each nonempty).
+    bounds: Vec<u32>,
+    /// Probability that a hinted operation takes the global path.
+    spill: f64,
+}
+
+impl Affinity {
+    /// Queue range owned by `shard` (shards beyond the group count wrap —
+    /// defensive; the pool builds both from the same partition).
+    #[inline]
+    fn range(&self, shard: u32) -> (usize, usize) {
+        let g = shard as usize % (self.bounds.len() - 1);
+        (self.bounds[g] as usize, self.bounds[g + 1] as usize)
+    }
+}
+
+/// The paper's relaxed Multiqueue: `c·p` sloppy heaps, two-choice pops;
+/// optionally shard-affine (see the module docs).
 pub struct Multiqueue {
     queues: Vec<CachePadded<SubQueue>>,
     len: AtomicUsize,
     /// Insert try-lock attempts before falling back to a blocking lock.
     insert_tries: usize,
+    /// Shard-affine queue grouping; `None` = the classic blind Multiqueue.
+    affinity: Option<Affinity>,
 }
 
 impl Multiqueue {
@@ -50,7 +85,7 @@ impl Multiqueue {
         assert!(m >= 1);
         let mut queues = Vec::with_capacity(m);
         queues.resize_with(m, || CachePadded(SubQueue::new()));
-        Multiqueue { queues, len: AtomicUsize::new(0), insert_tries: 4 }
+        Multiqueue { queues, len: AtomicUsize::new(0), insert_tries: 4, affinity: None }
     }
 
     /// Convenience: `c` queues per thread for `p` threads (min 2 total so
@@ -59,9 +94,29 @@ impl Multiqueue {
         Self::new((p * c).max(2))
     }
 
+    /// Shard-affine Multiqueue for `p` threads × `c` queues each over
+    /// `shards` task shards: at least two heaps per shard group, hinted
+    /// operations spill to the global path with probability `spill`.
+    pub fn shard_affine(p: usize, c: usize, shards: usize, spill: f64) -> Self {
+        let shards = shards.max(1);
+        let m = (p * c).max(2).max(2 * shards);
+        let mut q = Multiqueue::new(m);
+        let mut bounds = Vec::with_capacity(shards + 1);
+        for g in 0..=shards {
+            bounds.push((g * m / shards) as u32);
+        }
+        q.affinity = Some(Affinity { bounds, spill: spill.clamp(0.0, 1.0) });
+        q
+    }
+
     /// Number of internal heaps.
     pub fn num_queues(&self) -> usize {
         self.queues.len()
+    }
+
+    /// Number of shard groups (1 when not shard-affine).
+    pub fn num_shard_groups(&self) -> usize {
+        self.affinity.as_ref().map_or(1, |a| a.bounds.len() - 1)
     }
 
     #[inline]
@@ -76,15 +131,15 @@ impl Multiqueue {
         q.top.store(heap.peek().map_or(f64::NEG_INFINITY, |e| e.prio));
         e
     }
-}
 
-impl Scheduler for Multiqueue {
-    fn insert(&self, entry: Entry, rng: &mut Xoshiro256) {
-        let m = self.queues.len();
+    /// Insert into a random queue of `[lo, hi)` (try-lock with random
+    /// retry, then one blocking lock — no livelock).
+    fn insert_in(&self, entry: Entry, rng: &mut Xoshiro256, lo: usize, hi: usize) {
+        let w = hi - lo;
         // Try-lock a few random queues; a busy queue means another thread is
         // mutating it, so go elsewhere instead of waiting.
         for _ in 0..self.insert_tries {
-            let i = rng.index(m);
+            let i = lo + rng.index(w);
             if let Ok(mut heap) = self.queues[i].heap.try_lock() {
                 Self::push_locked(&self.queues[i], &mut heap, entry);
                 self.len.fetch_add(1, Ordering::Relaxed);
@@ -92,40 +147,43 @@ impl Scheduler for Multiqueue {
             }
         }
         // Fall back to blocking on one random queue (no livelock).
-        let i = rng.index(m);
+        let i = lo + rng.index(w);
         let mut heap = self.queues[i].heap.lock().unwrap();
         Self::push_locked(&self.queues[i], &mut heap, entry);
         self.len.fetch_add(1, Ordering::Relaxed);
     }
 
-    fn pop(&self, rng: &mut Xoshiro256) -> Option<Entry> {
-        let m = self.queues.len();
-        // A few two-choice attempts; on repeated failure do one full scan so
-        // that "None" reliably means the queues were (momentarily) empty.
-        for _ in 0..4 {
-            let i = rng.index(m);
-            let mut j = rng.index(m);
-            if m > 1 {
-                while j == i {
-                    j = rng.index(m);
-                }
-            }
-            let ti = self.queues[i].top.load();
-            let tj = self.queues[j].top.load();
-            let best = if ti >= tj { i } else { j };
-            if self.queues[best].top.load() == f64::NEG_INFINITY {
-                continue;
-            }
-            if let Ok(mut heap) = self.queues[best].heap.try_lock() {
-                if let Some(e) = Self::pop_locked(&self.queues[best], &mut heap) {
-                    self.len.fetch_sub(1, Ordering::Relaxed);
-                    return Some(e);
-                }
+    /// One two-choice pop attempt over `[lo, hi)`: compare the cached tops
+    /// of two random queues, try-lock the better one.
+    fn try_pop_two_choice(&self, rng: &mut Xoshiro256, lo: usize, hi: usize) -> Option<Entry> {
+        let w = hi - lo;
+        let i = lo + rng.index(w);
+        let mut j = lo + rng.index(w);
+        if w > 1 {
+            while j == i {
+                j = lo + rng.index(w);
             }
         }
-        // Full sweep (blocking locks) — guarantees progress when few
-        // entries remain.
-        for i in 0..m {
+        let ti = self.queues[i].top.load();
+        let tj = self.queues[j].top.load();
+        let best = if ti >= tj { i } else { j };
+        if self.queues[best].top.load() == f64::NEG_INFINITY {
+            return None;
+        }
+        if let Ok(mut heap) = self.queues[best].heap.try_lock() {
+            if let Some(e) = Self::pop_locked(&self.queues[best], &mut heap) {
+                self.len.fetch_sub(1, Ordering::Relaxed);
+                return Some(e);
+            }
+        }
+        None
+    }
+
+    /// Full sweep with blocking locks — guarantees progress when few
+    /// entries remain, and makes `None` reliably mean "(momentarily)
+    /// empty" across every queue, local or not.
+    fn sweep_pop(&self) -> Option<Entry> {
+        for i in 0..self.queues.len() {
             let mut heap = self.queues[i].heap.lock().unwrap();
             if let Some(e) = Self::pop_locked(&self.queues[i], &mut heap) {
                 self.len.fetch_sub(1, Ordering::Relaxed);
@@ -133,6 +191,50 @@ impl Scheduler for Multiqueue {
             }
         }
         None
+    }
+}
+
+impl Scheduler for Multiqueue {
+    fn insert(&self, entry: Entry, rng: &mut Xoshiro256) {
+        self.insert_in(entry, rng, 0, self.queues.len());
+    }
+
+    fn pop(&self, rng: &mut Xoshiro256) -> Option<Entry> {
+        // A few two-choice attempts; on repeated failure do one full scan so
+        // that "None" reliably means the queues were (momentarily) empty.
+        for _ in 0..4 {
+            if let Some(e) = self.try_pop_two_choice(rng, 0, self.queues.len()) {
+                return Some(e);
+            }
+        }
+        self.sweep_pop()
+    }
+
+    fn insert_hint(&self, entry: Entry, rng: &mut Xoshiro256, shard: Option<u32>) {
+        match (&self.affinity, shard) {
+            (Some(a), Some(s)) if !rng.bernoulli(a.spill) => {
+                let (lo, hi) = a.range(s);
+                self.insert_in(entry, rng, lo, hi);
+            }
+            _ => self.insert(entry, rng),
+        }
+    }
+
+    fn pop_hint(&self, rng: &mut Xoshiro256, shard: Option<u32>) -> Option<Entry> {
+        let (Some(a), Some(s)) = (&self.affinity, shard) else {
+            return self.pop(rng);
+        };
+        let (lo, hi) = a.range(s);
+        for _ in 0..4 {
+            let (lo, hi) =
+                if rng.bernoulli(a.spill) { (0, self.queues.len()) } else { (lo, hi) };
+            if let Some(e) = self.try_pop_two_choice(rng, lo, hi) {
+                return Some(e);
+            }
+        }
+        // Local group (momentarily) empty: steal globally so liveness and
+        // the "None ⟺ all queues empty" contract match the blind mode.
+        self.sweep_pop()
     }
 
     fn approx_len(&self) -> usize {
@@ -261,5 +363,131 @@ mod tests {
     fn for_threads_minimum_two() {
         let q = Multiqueue::for_threads(1, 1);
         assert_eq!(q.num_queues(), 2);
+    }
+
+    #[test]
+    fn shard_affine_geometry() {
+        // Each shard group gets at least two heaps even when p·c is small.
+        let q = Multiqueue::shard_affine(1, 1, 7, 0.1);
+        assert_eq!(q.num_shard_groups(), 7);
+        assert!(q.num_queues() >= 14);
+        let q = Multiqueue::shard_affine(4, 4, 2, 0.1);
+        assert_eq!(q.num_queues(), 16);
+        assert_eq!(q.num_shard_groups(), 2);
+    }
+
+    #[test]
+    fn shard_affine_preserves_multiset() {
+        // No entry is lost or duplicated under hinted inserts and pops,
+        // regardless of shard routing or spill.
+        for spill in [0.0, 0.25, 1.0] {
+            let q = Multiqueue::shard_affine(2, 4, 4, spill);
+            let mut r = rng();
+            for t in 0..1000u32 {
+                q.insert_hint(Entry { prio: r.next_f64(), task: t, epoch: 0 }, &mut r, Some(t % 4));
+            }
+            assert_eq!(q.approx_len(), 1000);
+            let mut seen = std::collections::HashSet::new();
+            let mut home = 0u32;
+            while let Some(e) = q.pop_hint(&mut r, Some(home)) {
+                assert!(seen.insert(e.task));
+                home = (home + 1) % 4;
+            }
+            assert_eq!(seen.len(), 1000, "spill={spill}");
+            assert_eq!(q.approx_len(), 0);
+        }
+    }
+
+    #[test]
+    fn zero_spill_keeps_entries_shard_local() {
+        // With spill = 0, an entry inserted for shard s is always popped by
+        // a worker hinting s before workers of other shards can see it via
+        // two-choice (they can only reach it through the fallback sweep,
+        // which this test never triggers because shard 0 stays nonempty).
+        let q = Multiqueue::shard_affine(2, 4, 2, 0.0);
+        let mut r = rng();
+        for t in 0..100u32 {
+            q.insert_hint(Entry { prio: t as f64, task: t, epoch: 0 }, &mut r, Some(0));
+        }
+        // Popping with the shard-0 hint drains everything without the
+        // global sweep; the shard-1 group never held an entry.
+        let mut popped = 0;
+        while let Some(_e) = q.pop_hint(&mut r, Some(0)) {
+            popped += 1;
+        }
+        assert_eq!(popped, 100);
+    }
+
+    #[test]
+    fn hint_on_blind_queue_is_ignored() {
+        let q = Multiqueue::new(4);
+        let mut r = rng();
+        q.insert_hint(Entry { prio: 1.0, task: 0, epoch: 0 }, &mut r, Some(3));
+        assert_eq!(q.pop_hint(&mut r, Some(1)).unwrap().task, 0);
+    }
+
+    #[test]
+    fn cross_shard_steal_via_sweep() {
+        // A worker whose home shard is empty must still drain other
+        // shards' entries (the liveness half of the affinity contract).
+        let q = Multiqueue::shard_affine(2, 4, 2, 0.0);
+        let mut r = rng();
+        q.insert_hint(Entry { prio: 1.0, task: 7, epoch: 0 }, &mut r, Some(1));
+        let e = q.pop_hint(&mut r, Some(0)).expect("steals from shard 1");
+        assert_eq!(e.task, 7);
+        assert!(q.pop_hint(&mut r, Some(0)).is_none());
+    }
+
+    #[test]
+    fn shard_affine_concurrent_producers_consumers() {
+        let q = std::sync::Arc::new(Multiqueue::shard_affine(4, 4, 4, 0.1));
+        let per = 1000u32;
+        let popped = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let q = std::sync::Arc::clone(&q);
+                s.spawn(move || {
+                    let mut r = Xoshiro256::stream(21, t);
+                    for i in 0..per {
+                        let task = t as u32 * per + i;
+                        q.insert_hint(
+                            Entry { prio: r.next_f64(), task, epoch: 0 },
+                            &mut r,
+                            Some(task % 4),
+                        );
+                    }
+                });
+            }
+            for t in 0..2u64 {
+                let q = std::sync::Arc::clone(&q);
+                let popped = std::sync::Arc::clone(&popped);
+                s.spawn(move || {
+                    let mut r = Xoshiro256::stream(31, t);
+                    let mut local = Vec::new();
+                    let mut misses = 0;
+                    while misses < 100 {
+                        match q.pop_hint(&mut r, Some(t as u32)) {
+                            Some(e) => {
+                                local.push(e.task);
+                                misses = 0;
+                            }
+                            None => {
+                                misses += 1;
+                                std::thread::yield_now();
+                            }
+                        }
+                    }
+                    popped.lock().unwrap().extend(local);
+                });
+            }
+        });
+        let mut all = popped.lock().unwrap().clone();
+        let mut r = rng();
+        while let Some(e) = q.pop_hint(&mut r, Some(0)) {
+            all.push(e.task);
+        }
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 4 * per as usize, "no lost or duplicated entries");
     }
 }

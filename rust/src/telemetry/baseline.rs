@@ -40,6 +40,9 @@ pub struct CellResult {
     pub scheduler: String,
     /// Worker thread count.
     pub threads: usize,
+    /// Locality axis of the cell (`off`, `affine`, `affine_bfs`); cells
+    /// from pre-partition baselines parse as `off`.
+    pub partition: String,
     /// Per-sample wall-clock seconds.
     pub wall_secs: Vec<f64>,
     /// Per-sample committed update counts.
@@ -71,6 +74,7 @@ impl CellResult {
             ("algorithm", Json::Str(self.algorithm.clone())),
             ("scheduler", Json::Str(self.scheduler.clone())),
             ("threads", Json::Num(self.threads as f64)),
+            ("partition", Json::Str(self.partition.clone())),
             ("wall_secs", Json::Arr(self.wall_secs.iter().map(|&t| Json::Num(t)).collect())),
             ("updates", Json::Arr(self.updates.iter().map(|&u| Json::Num(u)).collect())),
             ("converged", Json::Bool(self.converged)),
@@ -109,6 +113,11 @@ impl CellResult {
                 .get("threads")
                 .and_then(Json::as_usize)
                 .ok_or_else(|| anyhow!("cell.threads missing"))?,
+            partition: v
+                .get("partition")
+                .and_then(Json::as_str)
+                .unwrap_or("off")
+                .to_string(),
             wall_secs: arr("wall_secs")?,
             updates: arr("updates")?,
             converged: v
@@ -351,6 +360,7 @@ mod tests {
             algorithm: id.split('/').next().unwrap().to_string(),
             scheduler: "multiqueue".into(),
             threads: 2,
+            partition: "off".into(),
             wall_secs: vec![secs, secs * 1.05, secs * 0.95],
             updates: vec![1000.0, 1010.0, 990.0],
             converged: true,
@@ -390,6 +400,23 @@ mod tests {
         let text = b.to_json().to_string_pretty();
         let back = Baseline::from_json(&parse(&text).unwrap()).unwrap();
         assert_eq!(back, b);
+    }
+
+    #[test]
+    fn pre_partition_cells_parse_as_off() {
+        let b = baseline(vec![cell("relaxed_residual/p2", 0.5)]);
+        let mut j = b.to_json();
+        // Simulate a baseline written before the partition axis existed.
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Arr(cells)) = o.get_mut("cells") {
+                if let Json::Obj(c) = &mut cells[0] {
+                    c.remove("partition");
+                }
+            }
+        }
+        let back = Baseline::from_json(&j).unwrap();
+        assert_eq!(back.cells[0].partition, "off");
+        assert!(!compare(&b, &back, DEFAULT_TOLERANCE).unwrap().has_regression());
     }
 
     #[test]

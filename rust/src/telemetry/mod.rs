@@ -21,7 +21,7 @@
 //! ```text
 //! {
 //!   "schema_version": 1,
-//!   "family": "ising",                  // tree | ising | potts | ldpc
+//!   "family": "ising",                  // tree | ising | potts | ldpc | powerlaw
 //!   "model": { "kind": "ising", "n": 8 }, // exact ModelSpec measured
 //!   "git_rev": "010aee9",               // provenance
 //!   "created_unix": 1753833600,
@@ -31,11 +31,15 @@
 //!   "seed": 42,
 //!   "cells": [
 //!     {
-//!       "id": "relaxed_residual/p2",    // comparator join key
+//!       "id": "relaxed_residual/p2",    // comparator join key; affine
+//!                                       // cells append "/<partition>"
 //!       "algorithm": "relaxed_residual",
 //!       "scheduler": "multiqueue",      // sequential | rounds | exact |
 //!                                       // multiqueue | random
 //!       "threads": 2,
+//!       "partition": "off",             // off | affine | affine_bfs —
+//!                                       // the locality axis (absent in
+//!                                       // pre-partition baselines ⇒ off)
 //!       "wall_secs": [0.012, 0.011],    // one entry per sample
 //!       "updates": [4100, 4080],
 //!       "converged": true,
@@ -70,15 +74,16 @@ pub use baseline::{
 };
 pub use trace::{Trace, TracePoint, TraceRecorder};
 
-use crate::configio::{AlgorithmSpec, ModelSpec, RunConfig};
+use crate::configio::{AlgorithmSpec, ModelSpec, PartitionSpec, RunConfig};
 use crate::model::builders;
 use crate::run::run_on_model_observed;
 use anyhow::{bail, Result};
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
-/// The model families swept by default — the paper's §5.2 roster.
-pub const FAMILIES: &[&str] = &["tree", "ising", "potts", "ldpc"];
+/// The model families swept by default — the paper's §5.2 roster plus the
+/// power-law locality workload.
+pub const FAMILIES: &[&str] = &["tree", "ising", "potts", "ldpc", "powerlaw"];
 
 /// Configuration of one `bench` sweep.
 #[derive(Debug, Clone)]
@@ -103,6 +108,10 @@ pub struct BenchOpts {
     pub tick_ms: u64,
     /// Regression tolerance passed to [`compare`].
     pub tolerance: f64,
+    /// Locality axes swept for the relaxed contenders (the partition
+    /// cells; default `{off, affine}` so the locality axis is captured
+    /// in every baseline from day one).
+    pub partitions: Vec<PartitionSpec>,
     /// Gate mode (`bench --check`): when a family regresses against its
     /// stored baseline, keep the stored file instead of overwriting it, so
     /// the gate stays red on re-runs until the regression is fixed (or the
@@ -123,6 +132,7 @@ impl BenchOpts {
             time_limit: 120.0,
             tick_ms: 25,
             tolerance: DEFAULT_TOLERANCE,
+            partitions: vec![PartitionSpec::Off, PartitionSpec::affine()],
             check: false,
         }
     }
@@ -201,21 +211,28 @@ pub fn family_spec(family: &str, quick: bool) -> Result<ModelSpec> {
         ("potts", false) => ModelSpec::Potts { n: 40 },
         ("ldpc", true) => ModelSpec::Ldpc { n: 48, flip_prob: 0.05 },
         ("ldpc", false) => ModelSpec::Ldpc { n: 1_000, flip_prob: 0.07 },
+        ("powerlaw", true) => ModelSpec::PowerLaw { n: 256, m: 2 },
+        ("powerlaw", false) => ModelSpec::PowerLaw { n: 50_000, m: 2 },
         (other, _) => bail!("unknown bench family '{other}' (expected one of {FAMILIES:?})"),
     })
 }
 
-/// The {engine × scheduler × threads} cells swept per family: the
-/// sequential exact baseline, the exact concurrent PQ, the relaxed
-/// Multiqueue, and relaxed smart splash at the highest thread count.
-fn roster(opts: &BenchOpts) -> Vec<(AlgorithmSpec, usize)> {
-    let mut cells = vec![(AlgorithmSpec::SequentialResidual, 1)];
+/// The {engine × scheduler × threads × partition} cells swept per family:
+/// the sequential exact baseline, the exact concurrent PQ, the relaxed
+/// Multiqueue (once per locality axis in [`BenchOpts::partitions`]), and
+/// relaxed smart splash at the highest thread count.
+fn roster(opts: &BenchOpts) -> Vec<(AlgorithmSpec, usize, PartitionSpec)> {
+    let mut cells = vec![(AlgorithmSpec::SequentialResidual, 1, PartitionSpec::Off)];
     for &p in &opts.threads {
-        cells.push((AlgorithmSpec::CoarseGrained, p));
-        cells.push((AlgorithmSpec::RelaxedResidual, p));
+        cells.push((AlgorithmSpec::CoarseGrained, p, PartitionSpec::Off));
+        for &part in &opts.partitions {
+            cells.push((AlgorithmSpec::RelaxedResidual, p, part));
+        }
     }
     if let Some(&max_p) = opts.threads.iter().max() {
-        cells.push((AlgorithmSpec::RelaxedSmartSplash { h: 2 }, max_p));
+        for &part in &opts.partitions {
+            cells.push((AlgorithmSpec::RelaxedSmartSplash { h: 2 }, max_p, part));
+        }
     }
     cells
 }
@@ -226,8 +243,13 @@ pub fn bench_family(family: &str, opts: &BenchOpts) -> Result<Baseline> {
     let mrf = builders::build(&spec, opts.seed);
     let recorder = TraceRecorder::new(Duration::from_millis(opts.tick_ms.max(1)));
     let mut cells = Vec::new();
-    for (alg, threads) in roster(opts) {
-        let id = format!("{}/p{threads}", alg.name());
+    for (alg, threads, partition) in roster(opts) {
+        // Cells with the axis off keep the historical id (comparable to
+        // pre-partition baselines); affine cells append the axis label.
+        let id = match partition {
+            PartitionSpec::Off => format!("{}/p{threads}", alg.name()),
+            _ => format!("{}/p{threads}/{}", alg.name(), partition.label()),
+        };
         eprintln!("[bench] {family} / {id} …");
         let mut wall_secs = Vec::with_capacity(opts.samples);
         let mut updates = Vec::with_capacity(opts.samples);
@@ -236,7 +258,8 @@ pub fn bench_family(family: &str, opts: &BenchOpts) -> Result<Baseline> {
         for _ in 0..opts.samples.max(1) {
             let mut cfg = RunConfig::new(spec.clone(), alg.clone())
                 .with_threads(threads)
-                .with_seed(opts.seed);
+                .with_seed(opts.seed)
+                .with_partition(partition);
             cfg.time_limit_secs = opts.time_limit;
             let rep = run_on_model_observed(&cfg, mrf.clone(), Some(&recorder))?;
             wall_secs.push(rep.stats.wall_secs);
@@ -249,6 +272,7 @@ pub fn bench_family(family: &str, opts: &BenchOpts) -> Result<Baseline> {
             algorithm: alg.name(),
             scheduler: scheduler_kind(&alg).to_string(),
             threads,
+            partition: partition.label().to_string(),
             wall_secs,
             updates,
             converged,
@@ -357,15 +381,18 @@ pub fn render_summary(b: &Baseline) -> String {
         b.samples_per_cell,
         if b.quick { ", quick" } else { "" }
     );
-    s.push_str("| cell | scheduler | median time | updates (median) | trace pts | converged |\n");
-    s.push_str("|---|---|---|---|---|---|\n");
+    s.push_str(
+        "| cell | scheduler | partition | median time | updates (median) | trace pts | converged |\n",
+    );
+    s.push_str("|---|---|---|---|---|---|---|\n");
     for c in &b.cells {
         let med = c.median_secs().unwrap_or(f64::NAN);
         let upd = crate::util::stats::Summary::of(&c.updates).map_or(0.0, |u| u.median);
         s.push_str(&format!(
-            "| {} | {} | {} | {:.0} | {} | {} |\n",
+            "| {} | {} | {} | {} | {:.0} | {} | {} |\n",
             c.id,
             c.scheduler,
+            c.partition,
             crate::util::fmt_duration(med),
             upd,
             c.trace.len(),
@@ -392,9 +419,26 @@ mod tests {
     fn roster_covers_contenders() {
         let opts = BenchOpts::quick();
         let cells = roster(&opts);
-        assert!(cells.iter().any(|(a, _)| *a == AlgorithmSpec::SequentialResidual));
-        assert!(cells.iter().any(|(a, p)| *a == AlgorithmSpec::RelaxedResidual && *p == 2));
-        assert!(cells.iter().any(|(a, _)| *a == AlgorithmSpec::CoarseGrained));
+        assert!(cells.iter().any(|(a, _, _)| *a == AlgorithmSpec::SequentialResidual));
+        assert!(cells
+            .iter()
+            .any(|(a, p, _)| *a == AlgorithmSpec::RelaxedResidual && *p == 2));
+        assert!(cells.iter().any(|(a, _, _)| *a == AlgorithmSpec::CoarseGrained));
+        // The locality axis is part of the default sweep.
+        assert!(cells
+            .iter()
+            .any(|(a, _, part)| *a == AlgorithmSpec::RelaxedResidual && part.is_on()));
+    }
+
+    #[test]
+    fn roster_partition_cells_have_distinct_ids() {
+        let opts = BenchOpts::quick();
+        let cells = roster(&opts);
+        let ids: std::collections::HashSet<String> = cells
+            .iter()
+            .map(|(a, p, part)| format!("{}/p{p}/{}", a.name(), part.label()))
+            .collect();
+        assert_eq!(ids.len(), cells.len(), "no duplicate cells");
     }
 
     #[test]

@@ -7,8 +7,8 @@
 //! as exactly one of {stale entry, lost claim race, processed task}, and
 //! useful updates never exceed total updates.
 
-use relaxed_bp::bp::{all_marginals, exact_marginals, max_marginal_diff, Messages};
-use relaxed_bp::configio::{AlgorithmSpec, ModelSpec, RunConfig};
+use relaxed_bp::bp::{all_marginals, exact_marginals, max_marginal_diff};
+use relaxed_bp::configio::{AlgorithmSpec, ModelSpec, PartitionSpec, RunConfig};
 use relaxed_bp::coordinator::MetricsReport;
 use relaxed_bp::engines::{build_engine, Engine, EngineStats};
 use relaxed_bp::model::builders;
@@ -29,11 +29,29 @@ fn pool_roster() -> Vec<AlgorithmSpec> {
 }
 
 fn run(spec: &ModelSpec, alg: &AlgorithmSpec, threads: usize, seed: u64) -> (Vec<Vec<f64>>, EngineStats) {
+    run_partitioned(spec, alg, threads, seed, PartitionSpec::Off)
+}
+
+fn run_partitioned(
+    spec: &ModelSpec,
+    alg: &AlgorithmSpec,
+    threads: usize,
+    seed: u64,
+    partition: PartitionSpec,
+) -> (Vec<Vec<f64>>, EngineStats) {
     let mrf = builders::build(spec, seed);
-    let msgs = Messages::uniform(&mrf);
-    let cfg = RunConfig::new(spec.clone(), alg.clone()).with_threads(threads).with_seed(seed);
+    let cfg = RunConfig::new(spec.clone(), alg.clone())
+        .with_threads(threads)
+        .with_seed(seed)
+        .with_partition(partition);
+    let msgs = relaxed_bp::run::build_messages(&cfg, &mrf);
     let stats = build_engine(alg).run(&mrf, &msgs, &cfg).unwrap();
-    assert!(stats.converged, "{} (p={threads}) did not converge", alg.name());
+    assert!(
+        stats.converged,
+        "{} (p={threads}, partition={}) did not converge",
+        alg.name(),
+        partition.label()
+    );
     (all_marginals(&mrf, &msgs), stats)
 }
 
@@ -146,6 +164,37 @@ fn pop_accounting_identity_holds_for_every_engine() {
                     alg.name()
                 );
             }
+        }
+    }
+}
+
+#[test]
+fn parity_holds_under_shard_affine_partitioning() {
+    // The acceptance shard counts {1, 2, 7, num_threads} (0 = auto =
+    // num_threads): sharded arenas + the shard-affine Multiqueue leave
+    // every pool engine on the oracle fixed point, and the pop-accounting
+    // identity survives the hinted insert/pop paths.
+    let threads = 4;
+    let spec = ModelSpec::Ising { n: 4 };
+    let mrf = builders::build(&spec, 3);
+    let exact = exact_marginals(&mrf, 1 << 20).unwrap();
+    for shards in [1usize, 2, 7, 0] {
+        let axis = PartitionSpec::Affine { shards, spill: 0.1, bfs: false };
+        for alg in pool_roster() {
+            let (bp, stats) = run_partitioned(&spec, &alg, threads, 3, axis);
+            let diff = max_marginal_diff(&bp, &exact);
+            assert!(
+                diff < 0.08,
+                "{} (shards={shards}) grid marginal diff {diff}",
+                alg.name()
+            );
+            let m = &stats.metrics;
+            assert_eq!(
+                m.total.pops,
+                m.total.stale_pops + m.total.claim_failures + processed_tasks(&alg, m),
+                "{} (shards={shards}): pop accounting",
+                alg.name()
+            );
         }
     }
 }

@@ -1,0 +1,243 @@
+//! Property tests for the locality layer: the partitioner's structural
+//! invariants, sharded message arenas vs the flat layout, and the
+//! shard-affine execution path end to end.
+//!
+//! `proptest` is unavailable offline, so these follow the repo's
+//! seed-sweep idiom: each property runs against many deterministic random
+//! cases and failure messages carry the seed for replay.
+
+use relaxed_bp::bp::{all_marginals, max_marginal_diff, msg_buf, Messages, MsgSource};
+use relaxed_bp::configio::{AlgorithmSpec, ModelSpec, PartitionSpec, RunConfig};
+use relaxed_bp::engines::{build_engine, Engine};
+use relaxed_bp::model::{builders, Partition};
+use relaxed_bp::run::run_config;
+use relaxed_bp::util::Xoshiro256;
+
+const CASES: u64 = 30;
+
+/// Shard counts the acceptance criteria call out explicitly.
+const SHARD_COUNTS: &[usize] = &[1, 2, 7];
+
+#[test]
+fn prop_every_task_in_exactly_one_shard() {
+    // validate() itself asserts the exactly-once property; this sweep
+    // exercises it over random universe sizes and shard counts for both
+    // construction modes.
+    for seed in 0..CASES {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let n = 1 + rng.index(500);
+        let k = 1 + rng.index(16);
+        let p = Partition::contiguous(n, k);
+        p.validate();
+        assert_eq!(p.num_tasks(), n, "seed {seed}");
+        let total: usize = (0..p.num_shards()).map(|s| p.tasks_of(s).len()).sum();
+        assert_eq!(total, n, "seed {seed}: shard ranges tile 0..num_tasks");
+        for s in 0..p.num_shards() {
+            for &t in p.tasks_of(s) {
+                assert_eq!(p.shard_of(t) as usize, s, "seed {seed} task {t}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_bfs_partitions_tile_on_random_models() {
+    for seed in 0..CASES {
+        let mut rng = Xoshiro256::seed_from_u64(1000 + seed);
+        let side = 2 + rng.index(5);
+        let mrf = builders::build(&ModelSpec::Ising { n: side }, seed);
+        for &k in SHARD_COUNTS {
+            let pe = Partition::bfs_edges(&mrf.graph, k);
+            pe.validate();
+            pe.validate_against(&mrf.graph);
+            assert_eq!(pe.num_tasks(), mrf.num_messages(), "seed {seed}");
+            let pn = Partition::bfs_nodes(&mrf.graph, k);
+            pn.validate();
+            pn.validate_against(&mrf.graph);
+            assert_eq!(pn.num_tasks(), mrf.num_nodes(), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_partitioner_is_deterministic() {
+    let mrf = builders::build(&ModelSpec::Ising { n: 5 }, 3);
+    for &k in SHARD_COUNTS {
+        let a = Partition::bfs_edges(&mrf.graph, k);
+        let b = Partition::bfs_edges(&mrf.graph, k);
+        for t in 0..mrf.num_messages() as u32 {
+            assert_eq!(a.shard_of(t), b.shard_of(t), "k={k} task {t}");
+        }
+    }
+}
+
+#[test]
+fn prop_sharded_messages_equal_flat_under_random_writes() {
+    // Any write/read sequence through the public API produces identical
+    // state in flat and sharded arenas.
+    for seed in 0..CASES {
+        let mut rng = Xoshiro256::seed_from_u64(2000 + seed);
+        let mrf = builders::build(&ModelSpec::Ising { n: 4 }, seed);
+        let k = 1 + rng.index(7);
+        let part = if rng.bernoulli(0.5) {
+            Partition::bfs_edges(&mrf.graph, k)
+        } else {
+            Partition::contiguous(mrf.num_messages(), k)
+        };
+        let flat = Messages::uniform(&mrf);
+        let sharded = Messages::uniform_partitioned(&mrf, &part);
+        for _ in 0..200 {
+            let e = rng.index(mrf.num_messages()) as u32;
+            let a = rng.uniform(0.01, 0.99);
+            flat.write_msg(&mrf, e, &[a, 1.0 - a]);
+            sharded.write_msg(&mrf, e, &[a, 1.0 - a]);
+        }
+        assert_eq!(flat.snapshot(), sharded.snapshot(), "seed {seed}");
+        let mut a = msg_buf();
+        let mut b = msg_buf();
+        for e in 0..mrf.num_messages() as u32 {
+            flat.read_msg(&mrf, e, &mut a);
+            sharded.read_msg(&mrf, e, &mut b);
+            assert_eq!(&a[..2], &b[..2], "seed {seed} edge {e}");
+        }
+    }
+}
+
+/// Queue-driven engines applicable to arbitrary (possibly loopy) models —
+/// the parity roster, re-run here under the locality axis.
+fn pool_roster() -> Vec<AlgorithmSpec> {
+    vec![
+        AlgorithmSpec::CoarseGrained,
+        AlgorithmSpec::RelaxedResidual,
+        AlgorithmSpec::WeightDecay,
+        AlgorithmSpec::Priority,
+        AlgorithmSpec::Splash { h: 2 },
+        AlgorithmSpec::RelaxedSmartSplash { h: 2 },
+        AlgorithmSpec::RandomSplash { h: 2 },
+        AlgorithmSpec::RelaxedResidualBatched { batch: 8 },
+    ]
+}
+
+#[test]
+fn engines_reach_the_reference_fixed_point_with_partitioning_on() {
+    // With partitioning off, the parity suite (tests/exec_parity.rs)
+    // anchors every engine to the oracle. Here: the same fixed point must
+    // be reached with the axis on, for contiguous and BFS shards across
+    // the called-out shard counts (including num_threads via shards: 0).
+    let spec = ModelSpec::Ising { n: 5 };
+    let mrf = builders::build(&spec, 11);
+    let msgs_ref = Messages::uniform(&mrf);
+    let cfg_ref = RunConfig::new(spec.clone(), AlgorithmSpec::SequentialResidual).with_seed(11);
+    let s = build_engine(&cfg_ref.algorithm).run(&mrf, &msgs_ref, &cfg_ref).unwrap();
+    assert!(s.converged);
+    let reference = all_marginals(&mrf, &msgs_ref);
+
+    for shards in [1usize, 2, 7, 0] {
+        for bfs in [false, true] {
+            let axis = PartitionSpec::Affine { shards, spill: 0.1, bfs };
+            for alg in pool_roster() {
+                let cfg = RunConfig::new(spec.clone(), alg.clone())
+                    .with_threads(4)
+                    .with_seed(11)
+                    .with_partition(axis);
+                let msgs = relaxed_bp::run::build_messages(&cfg, &mrf);
+                let stats = build_engine(&alg).run(&mrf, &msgs, &cfg).unwrap();
+                assert!(
+                    stats.converged,
+                    "{} shards={shards} bfs={bfs} did not converge",
+                    alg.name()
+                );
+                let diff = max_marginal_diff(&all_marginals(&mrf, &msgs), &reference);
+                assert!(
+                    diff < 2e-2,
+                    "{} shards={shards} bfs={bfs}: marginal diff {diff}",
+                    alg.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pop_accounting_identity_holds_with_partitioning() {
+    // The shard-affine Multiqueue must not bend the epoch/claim/quiescence
+    // protocol: every successful pop is still exactly one of {stale, lost
+    // claim race, processed task}.
+    let spec = ModelSpec::Ising { n: 5 };
+    for shards in [1usize, 2, 7, 0] {
+        for alg in [
+            AlgorithmSpec::RelaxedResidual,
+            AlgorithmSpec::Priority,
+            AlgorithmSpec::RelaxedSmartSplash { h: 2 },
+            AlgorithmSpec::RelaxedResidualBatched { batch: 8 },
+        ] {
+            let cfg = RunConfig::new(spec.clone(), alg.clone())
+                .with_threads(4)
+                .with_seed(7)
+                .with_partition(PartitionSpec::Affine { shards, spill: 0.1, bfs: false });
+            let rep = run_config(&cfg).unwrap();
+            assert!(rep.stats.converged, "{} shards={shards}", alg.name());
+            let m = &rep.stats.metrics.total;
+            let processed = match alg {
+                AlgorithmSpec::RelaxedSmartSplash { .. } => m.splashes + m.wasted_pops,
+                _ => m.updates,
+            };
+            assert_eq!(
+                m.pops,
+                m.stale_pops + m.claim_failures + processed,
+                "{} shards={shards}: pop accounting",
+                alg.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn converged_partitioned_runs_end_below_epsilon() {
+    let spec = ModelSpec::Ising { n: 5 };
+    for spill in [0.0, 0.1, 1.0] {
+        let cfg = RunConfig::new(spec.clone(), AlgorithmSpec::RelaxedResidual)
+            .with_threads(2)
+            .with_seed(5)
+            .with_partition(PartitionSpec::Affine { shards: 2, spill, bfs: false });
+        let rep = run_config(&cfg).unwrap();
+        assert!(rep.stats.converged, "spill={spill}");
+        assert!(
+            rep.stats.final_max_priority < cfg.epsilon,
+            "spill={spill}: final priority {}",
+            rep.stats.final_max_priority
+        );
+    }
+}
+
+#[test]
+fn partitioned_tree_run_is_exact() {
+    let cfg = RunConfig::new(ModelSpec::Tree { n: 63 }, AlgorithmSpec::RelaxedResidual)
+        .with_threads(2)
+        .with_partition(PartitionSpec::Affine { shards: 0, spill: 0.1, bfs: true });
+    let rep = run_config(&cfg).unwrap();
+    assert!(rep.stats.converged);
+    for (i, m) in rep.marginals().iter().enumerate() {
+        assert!((m[0] - 0.1).abs() < 1e-3, "node {i}: {m:?}");
+    }
+}
+
+#[test]
+fn powerlaw_workload_converges_with_and_without_partitioning() {
+    // The locality workload itself: both axes must reach the same fixed
+    // point (this is the bench sweep's powerlaw/affine cell in miniature).
+    let spec = ModelSpec::PowerLaw { n: 300, m: 2 };
+    let run = |axis: PartitionSpec| {
+        let cfg = RunConfig::new(spec.clone(), AlgorithmSpec::RelaxedResidual)
+            .with_threads(2)
+            .with_seed(5)
+            .with_partition(axis);
+        let rep = run_config(&cfg).unwrap();
+        assert!(rep.stats.converged, "axis {:?}", axis.label());
+        rep.marginals()
+    };
+    let off = run(PartitionSpec::Off);
+    let affine = run(PartitionSpec::affine());
+    let diff = max_marginal_diff(&off, &affine);
+    assert!(diff < 2e-2, "off vs affine marginal diff {diff}");
+}
