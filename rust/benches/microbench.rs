@@ -6,20 +6,30 @@
 //! convergence traces are `relaxed-bp bench` (see the `telemetry` module).
 
 use relaxed_bp::benchlib::{BenchConfig, BenchGroup};
-use relaxed_bp::bp::{compute_message, msg_buf, Lookahead, Messages};
+use relaxed_bp::bp::{compute_message, fused_node_refresh, msg_buf, Lookahead, Messages, NodeScratch};
 use relaxed_bp::configio::ModelSpec;
 use relaxed_bp::engines::batched::{BatchCompute, NativeBatch};
-use relaxed_bp::model::builders;
+use relaxed_bp::model::{builders, FactorPool, GraphBuilder, Mrf, NodeFactors};
 use relaxed_bp::runtime::{artifacts_dir, batch::PjrtBatch};
 use relaxed_bp::sched::{Entry, ExactQueue, Multiqueue, RandomQueues, Scheduler};
 use relaxed_bp::util::Xoshiro256;
 
+/// `--quick` = the CI smoke configuration: fewer samples / ops, tight
+/// budget, same coverage.
+fn quick() -> bool {
+    std::env::args().any(|a| a == "--quick")
+}
+
 fn cfg() -> BenchConfig {
-    BenchConfig { warmup: 1, samples: 5, budget_secs: 30.0, verbose: true }
+    if quick() {
+        BenchConfig { warmup: 1, samples: 2, budget_secs: 5.0, verbose: true }
+    } else {
+        BenchConfig { warmup: 1, samples: 5, budget_secs: 30.0, verbose: true }
+    }
 }
 
 fn bench_scheduler(g: &mut BenchGroup, name: &str, q: &dyn Scheduler) {
-    let ops = 200_000u32;
+    let ops: u32 = if quick() { 20_000 } else { 200_000 };
     g.bench(&format!("{name}/insert_pop_{ops}"), || {
         let mut rng = Xoshiro256::seed_from_u64(1);
         for t in 0..ops {
@@ -34,7 +44,80 @@ fn bench_scheduler(g: &mut BenchGroup, name: &str, q: &dyn Scheduler) {
     });
 }
 
+/// Star MRF: one center of degree `deg`, every node with domain `dom`,
+/// pseudo-random positive factors — the isolated unit of the fused-kernel
+/// comparison (a node touch refreshes the center's whole out-set).
+fn star_mrf(deg: usize, dom: usize, seed: u64) -> Mrf {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut gb = GraphBuilder::new(deg + 1);
+    for leaf in 1..=deg {
+        gb.add_edge(0, leaf);
+    }
+    let g = gb.build();
+    let mut pool = FactorPool::new();
+    let mut factors = Vec::with_capacity(deg);
+    for _ in 0..deg {
+        let vals: Vec<f64> = (0..dom * dom).map(|_| rng.uniform(0.1, 1.0)).collect();
+        factors.push(pool.add(dom, dom, &vals));
+    }
+    let node_factors: Vec<Vec<f64>> = (0..=deg)
+        .map(|_| (0..dom).map(|_| rng.uniform(0.1, 1.0)).collect())
+        .collect();
+    Mrf::assemble(
+        "star",
+        g,
+        vec![dom as u32; deg + 1],
+        NodeFactors::from_vecs(&node_factors),
+        factors,
+        pool,
+    )
+}
+
 fn main() {
+    // ---- Update kernel: edge-wise fan-out vs fused node refresh ----
+    // One "node touch" = recompute every out-message of the center node.
+    // Edge-wise pays one full gather per out-edge (O(deg²) message
+    // reads); fused pays one prefix/suffix pass (O(deg)).
+    let mut g = BenchGroup::new("update_kernel").with_config(cfg());
+    let reps: usize = if quick() { 50 } else { 500 };
+    for &deg in &[2usize, 8, 64] {
+        for &dom in &[2usize, 8] {
+            let mrf = star_mrf(deg, dom, 42);
+            let msgs = Messages::uniform(&mrf);
+            let la = Lookahead::init(&mrf, &msgs);
+            g.bench(&format!("edgewise/deg{deg}_dom{dom}"), || {
+                for _ in 0..reps {
+                    for s in mrf.graph.slots(0) {
+                        la.refresh(&mrf, &msgs, mrf.graph.adj_out[s]);
+                    }
+                }
+                (reps * deg) as f64
+            });
+            let mut sc = NodeScratch::new();
+            let mut batch: Vec<(u32, f64)> = Vec::with_capacity(deg);
+            g.bench(&format!("fused/deg{deg}_dom{dom}"), || {
+                for _ in 0..reps {
+                    batch.clear();
+                    la.refresh_node(&mrf, &msgs, 0, None, &mut sc, &mut batch);
+                }
+                (reps * deg) as f64
+            });
+            // Raw kernel (no lookahead store): isolates the compute.
+            let mut sc2 = NodeScratch::new();
+            g.bench(&format!("fused_kernel_only/deg{deg}_dom{dom}"), || {
+                let mut sink = 0.0f64;
+                for _ in 0..reps {
+                    fused_node_refresh(&mrf, &msgs, 0, None, &mut sc2, |_, vals, _| {
+                        sink += vals[0];
+                    });
+                }
+                assert!(sink.is_finite());
+                (reps * deg) as f64
+            });
+        }
+    }
+    g.report();
+
     // ---- Scheduler ops ----
     let mut g = BenchGroup::new("schedulers").with_config(cfg());
     bench_scheduler(&mut g, "exact", &ExactQueue::new());

@@ -12,7 +12,7 @@
 //! pending values as cache-hot as its live ones.
 
 use super::state::{msg_buf, Messages, MsgSource};
-use super::update::{compute_message, residual_l2};
+use super::update::{compute_message, fused_node_refresh, residual_l2, NodeScratch};
 use crate::model::Mrf;
 use crate::util::AtomicF64;
 
@@ -29,14 +29,35 @@ impl Lookahead {
     /// the current live state. The pending store adopts `live`'s arena
     /// sharding.
     pub fn init(mrf: &Mrf, live: &Messages) -> Self {
-        let pending = Messages::uniform_like(mrf, live);
-        let mut residual = Vec::with_capacity(mrf.num_messages());
-        residual.resize_with(mrf.num_messages(), AtomicF64::default);
-        let la = Lookahead { pending, residual };
+        let la = Self::empty(mrf, live);
         for e in 0..mrf.num_messages() as u32 {
             la.refresh(mrf, live, e);
         }
         la
+    }
+
+    /// [`Lookahead::init`] through the node-centric fused kernel: one
+    /// [`Lookahead::refresh_node`] per node covers every directed edge
+    /// exactly once (each edge has one source) in O(Σ deg·|D|) total work
+    /// instead of O(Σ deg²·|D|). Values agree with [`Lookahead::init`] to
+    /// ≤ 1e-12 (product-order rounding only).
+    pub fn init_fused(mrf: &Mrf, live: &Messages) -> Self {
+        let la = Self::empty(mrf, live);
+        let mut scratch = NodeScratch::new();
+        let mut batch = Vec::new();
+        for j in 0..mrf.num_nodes() as u32 {
+            la.refresh_node(mrf, live, j, None, &mut scratch, &mut batch);
+            batch.clear();
+        }
+        la
+    }
+
+    /// Allocate the pending store + residual table (all zero residuals).
+    fn empty(mrf: &Mrf, live: &Messages) -> Self {
+        let pending = Messages::uniform_like(mrf, live);
+        let mut residual = Vec::with_capacity(mrf.num_messages());
+        residual.resize_with(mrf.num_messages(), AtomicF64::default);
+        Lookahead { pending, residual }
     }
 
     /// Current residual (priority) of edge `e`.
@@ -70,6 +91,31 @@ impl Lookahead {
         self.pending.write_msg(mrf, e, &new);
         self.residual[e as usize].store(res);
         res
+    }
+
+    /// Node-centric fused refresh: recompute the pending value and
+    /// residual of every out-edge of `j` except `skip` (typically the
+    /// reverse of a just-committed edge `(i→j)`, whose pending value
+    /// excludes the changed input and therefore cannot have moved) in one
+    /// O(deg·|D|) pass via [`fused_node_refresh`] — the O(deg) replacement
+    /// for calling [`Lookahead::refresh`] per affected edge, which costs
+    /// O(deg²) per node touch. Appends one `(edge, residual)` pair per
+    /// refreshed edge to `out` for the caller to requeue.
+    pub fn refresh_node(
+        &self,
+        mrf: &Mrf,
+        live: &Messages,
+        j: u32,
+        skip: Option<u32>,
+        scratch: &mut NodeScratch,
+        out: &mut Vec<(u32, f64)>,
+    ) {
+        fused_node_refresh(mrf, live, j, skip, scratch, |e, vals, cur| {
+            let res = residual_l2(vals, cur);
+            self.pending.write_msg(mrf, e, vals);
+            self.residual[e as usize].store(res);
+            out.push((e, res));
+        });
     }
 
     /// Commit `μ'_e` into the live state and zero `res(e)`. Returns the
@@ -219,6 +265,61 @@ mod tests {
         }
         // Tree with root evidence: exactly the 6 away-from-root edges fire.
         assert_eq!(steps, 6);
+    }
+
+    #[test]
+    fn init_fused_matches_edgewise_init() {
+        for spec in [
+            ModelSpec::Tree { n: 31 },
+            ModelSpec::Ising { n: 4 },
+            ModelSpec::Ldpc { n: 24, flip_prob: 0.07 },
+            ModelSpec::PowerLaw { n: 60, m: 3 },
+        ] {
+            let m = builders::build(&spec, 9);
+            let live = Messages::uniform(&m);
+            let a = Lookahead::init(&m, &live);
+            let b = Lookahead::init_fused(&m, &live);
+            let mut pa = msg_buf();
+            let mut pb = msg_buf();
+            for e in 0..m.num_messages() as u32 {
+                assert!(
+                    (a.residual(e) - b.residual(e)).abs() <= 1e-12,
+                    "{spec:?} edge {e} residual"
+                );
+                let la = a.read_pending(&m, e, &mut pa);
+                let lb = b.read_pending(&m, e, &mut pb);
+                assert_eq!(la, lb);
+                for x in 0..la {
+                    assert!((pa[x] - pb[x]).abs() <= 1e-12, "{spec:?} edge {e} x={x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn refresh_node_matches_per_edge_refresh() {
+        let m = builders::build(&ModelSpec::Ising { n: 4 }, 7);
+        let live = Messages::uniform(&m);
+        let a = Lookahead::init(&m, &live);
+        let b = Lookahead::init(&m, &live);
+        // Commit one edge on both, then refresh its destination's out-set
+        // per-edge on `a` and fused on `b`.
+        let e = 0u32;
+        a.commit(&m, &live, e);
+        // b shares `live`, so committing again writes the same value.
+        b.commit(&m, &live, e);
+        for k in a.affected_edges(&m, e) {
+            a.refresh(&m, &live, k);
+        }
+        let j = m.graph.edge_dst[e as usize];
+        let mut sc = NodeScratch::new();
+        let mut batch = Vec::new();
+        b.refresh_node(&m, &live, j, Some(m.graph.reverse(e)), &mut sc, &mut batch);
+        assert_eq!(batch.len(), m.graph.degree(j as usize) - 1);
+        for &(k, r) in &batch {
+            assert!((a.residual(k) - r).abs() <= 1e-12, "edge {k}");
+            assert!((b.residual(k) - r).abs() <= 1e-12, "edge {k} stored");
+        }
     }
 
     #[test]

@@ -29,6 +29,13 @@ use crate::util::AtomicF64;
 pub type MsgBuf = [f64; MAX_DOMAIN];
 
 /// Allocate a zeroed message buffer.
+///
+/// This zero-initializes all `MAX_DOMAIN` (64) entries — a 512-byte
+/// memset — regardless of the live domain, so hot loops must not call it
+/// per update: hold one buffer (or a
+/// [`MsgScratch`](crate::bp::MsgScratch) /
+/// [`NodeScratch`](crate::bp::NodeScratch)) per worker and reuse it. The
+/// kernels themselves only read/write the live `|D|`-prefix.
 #[inline]
 pub fn msg_buf() -> MsgBuf {
     [0.0; MAX_DOMAIN]

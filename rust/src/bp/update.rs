@@ -6,77 +6,158 @@
 //! μ'_{i→j}(x_j) ∝ Σ_{x_i} ψ_i(x_i) · ψ_ij(x_i, x_j) · Π_{k ∈ N(i)\{j}} μ_{k→i}(x_i)
 //! ```
 //!
-//! The implementation first accumulates the product vector
-//! `prod[x_i] = ψ_i(x_i) · Π μ_{k→i}(x_i)` over the incoming messages, then
-//! applies the edge-factor matrix and normalizes to sum 1. A zero
-//! normalizer (possible with deterministic factors, e.g. LDPC parity
-//! indicators under conflicting evidence) falls back to the uniform
+//! Two kernels implement it:
+//!
+//! - [`compute_message`] — the **edge-wise** kernel: accumulate the product
+//!   vector `prod[x_i] = ψ_i(x_i) · Π μ_{k→i}(x_i)` over the incoming
+//!   messages, apply the edge-factor matrix, normalize to sum 1.
+//! - [`fused_node_refresh`] — the **node-centric fused** kernel: compute
+//!   the *full* node product `ψ_j · Π_{l∈N(j)} μ_{l→j}` once, derive every
+//!   out-edge's excluded product via prefix/suffix products (no division,
+//!   so exact zeros in messages stay numerically exact), and emit all
+//!   `μ'_{j→·}` in one O(deg·|D|) pass. Refreshing a node's whole out-set
+//!   edge-by-edge is O(deg²·|D|) — the dominant cost of residual-style BP
+//!   on high-degree models (power-law hubs, LDPC constraints); see
+//!   DESIGN.md §Update kernels.
+//!
+//! A zero normalizer (possible with deterministic factors, e.g. LDPC
+//! parity indicators under conflicting evidence) falls back to the uniform
 //! distribution, matching libDAI's convention.
 //!
 //! The residual (paper Eq. 3) is the L2 distance between the current and
 //! recomputed message — the priority used by residual BP.
 
-use super::state::{msg_buf, MsgSource};
+use super::state::{msg_buf, MsgBuf, MsgSource};
 use crate::model::Mrf;
+
+/// Reusable gather buffers for [`compute_message_with`] /
+/// [`incoming_product`]. Hot loops hold one per worker and reuse it, so
+/// the two MAX_DOMAIN-wide buffers are zero-initialized once per worker
+/// instead of once per update (the per-call memset was ~12% of baseline
+/// cycles on wide-domain models; EXPERIMENTS.md §Perf).
+pub struct MsgScratch {
+    /// Source-product accumulator (`prod[x_i]`).
+    pub prod: MsgBuf,
+    /// Per-neighbor incoming-message read buffer.
+    pub tmp: MsgBuf,
+}
+
+impl MsgScratch {
+    /// Fresh zeroed buffers.
+    pub fn new() -> Self {
+        MsgScratch { prod: msg_buf(), tmp: msg_buf() }
+    }
+}
+
+impl Default for MsgScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
 
 /// Compute `μ'_e` into `out[..len]`; returns `len`. Reads the incoming
 /// messages through `src` (live atomics or a snapshot).
+///
+/// Convenience wrapper that allocates fresh scratch for the generic path;
+/// the binary fast path (checked first) never touches scratch, so binary
+/// models pay no per-call buffer zeroing here. Wide-domain hot loops
+/// should use [`compute_message_with`] with a per-worker [`MsgScratch`].
 pub fn compute_message<S: MsgSource + ?Sized>(
     mrf: &Mrf,
     src: &S,
     e: u32,
     out: &mut [f64],
 ) -> usize {
+    let i = mrf.graph.edge_src[e as usize] as usize;
+    if mrf.msg_len(e) == 2 && mrf.domain[i] == 2 {
+        return binary_update(mrf, src, e, i, out);
+    }
+    let mut scratch = MsgScratch::new();
+    compute_message_with(mrf, src, e, out, &mut scratch)
+}
+
+/// [`compute_message`] with caller-provided gather buffers (no per-call
+/// MAX_DOMAIN-wide zeroing on the generic path).
+pub fn compute_message_with<S: MsgSource + ?Sized>(
+    mrf: &Mrf,
+    src: &S,
+    e: u32,
+    out: &mut [f64],
+    scratch: &mut MsgScratch,
+) -> usize {
     let out_len = mrf.msg_len(e);
     let i = mrf.graph.edge_src[e as usize] as usize;
-
-    // Fast path for binary↔binary messages (every edge in the tree / Ising /
-    // Potts / denoising models): fully unrolled gather + 2×2 matvec with no
-    // 64-wide scratch buffers. ~1.8× the generic path (EXPERIMENTS.md §Perf).
     if out_len == 2 && mrf.domain[i] == 2 {
-        let nf = mrf.node_factors.of(i);
-        let (mut p0, mut p1) = (nf[0], nf[1]);
-        let rev = mrf.graph.reverse(e);
-        let mut b = [0.0f64; 2];
-        for s in mrf.graph.slots(i) {
-            let e_in = mrf.graph.adj_in[s];
-            if e_in == rev {
-                continue;
-            }
-            src.read_msg(mrf, e_in, &mut b);
-            p0 *= b[0];
-            p1 *= b[1];
-        }
-        let fr = mrf.edge_factor[e as usize];
-        let m = mrf.pool.matrix(fr.pool_index());
-        let (u0, u1) = if fr.transposed() {
-            // ψ(a, b) stored as m[b*2 + a]
-            (p0 * m[0] + p1 * m[1], p0 * m[2] + p1 * m[3])
-        } else {
-            (p0 * m[0] + p1 * m[2], p0 * m[1] + p1 * m[3])
-        };
-        let z = u0 + u1;
-        if z > 0.0 && z.is_finite() {
-            out[0] = u0 / z;
-            out[1] = u1 / z;
-        } else {
-            out[0] = 0.5;
-            out[1] = 0.5;
-        }
-        return 2;
+        return binary_update(mrf, src, e, i, out);
     }
+    let d_i = incoming_product(mrf, src, e, &mut scratch.prod, &mut scratch.tmp);
+    apply_factor(mrf, e, &scratch.prod[..d_i], out)
+}
 
-    let mut prod = msg_buf();
-    let d_i = incoming_product(mrf, src, e, &mut prod);
+/// Fast path for binary↔binary messages (every edge in the tree / Ising /
+/// Potts / denoising models): fully unrolled gather + 2×2 matvec with no
+/// 64-wide scratch buffers. ~1.8× the generic path (EXPERIMENTS.md §Perf).
+#[inline]
+fn binary_update<S: MsgSource + ?Sized>(
+    mrf: &Mrf,
+    src: &S,
+    e: u32,
+    i: usize,
+    out: &mut [f64],
+) -> usize {
+    let nf = mrf.node_factors.of(i);
+    let (mut p0, mut p1) = (nf[0], nf[1]);
+    let rev = mrf.graph.reverse(e);
+    let mut b = [0.0f64; 2];
+    for s in mrf.graph.slots(i) {
+        let e_in = mrf.graph.adj_in[s];
+        if e_in == rev {
+            continue;
+        }
+        src.read_msg(mrf, e_in, &mut b);
+        p0 *= b[0];
+        p1 *= b[1];
+    }
+    binary_matvec(mrf, e, p0, p1, out);
+    2
+}
 
-    // out[x_j] = Σ_{x_i} prod[x_i] · ψ(x_i, x_j)
+/// The 2×2 matvec + normalize of the binary fast path: `out[..2]` from the
+/// excluded source product `(p0, p1)` through edge `e`'s factor.
+#[inline]
+fn binary_matvec(mrf: &Mrf, e: u32, p0: f64, p1: f64, out: &mut [f64]) {
     let fr = mrf.edge_factor[e as usize];
+    let m = mrf.pool.matrix(fr.pool_index());
+    let (u0, u1) = if fr.transposed() {
+        // ψ(a, b) stored as m[b*2 + a]
+        (p0 * m[0] + p1 * m[1], p0 * m[2] + p1 * m[3])
+    } else {
+        (p0 * m[0] + p1 * m[2], p0 * m[1] + p1 * m[3])
+    };
+    let z = u0 + u1;
+    if z > 0.0 && z.is_finite() {
+        out[0] = u0 / z;
+        out[1] = u1 / z;
+    } else {
+        out[0] = 0.5;
+        out[1] = 0.5;
+    }
+}
+
+/// Apply edge `e`'s factor matrix to the gathered (excluded) source
+/// product `prod[..d_i]` and normalize:
+/// `out[x_j] ∝ Σ_{x_i} prod[x_i] · ψ(x_i, x_j)`. Returns `|D_dst(e)|`.
+/// Shared by the edge-wise and fused kernels.
+#[inline]
+fn apply_factor(mrf: &Mrf, e: u32, prod: &[f64], out: &mut [f64]) -> usize {
+    let out_len = mrf.msg_len(e);
+    let d_i = prod.len();
+    let fr = mrf.edge_factor[e as usize];
+    let mat = mrf.pool.matrix(fr.pool_index());
     if !fr.transposed() {
         // Row-major (d_i × d_j): accumulate row by row — sequential reads.
-        let mat = mrf.pool.matrix(fr.pool_index());
         out[..out_len].fill(0.0);
-        for xi in 0..d_i {
-            let p = prod[xi];
+        for (xi, &p) in prod.iter().enumerate() {
             if p == 0.0 {
                 continue;
             }
@@ -87,7 +168,6 @@ pub fn compute_message<S: MsgSource + ?Sized>(
         }
     } else {
         // Stored as (d_j × d_i): out[xj] is a dot product with row xj.
-        let mat = mrf.pool.matrix(fr.pool_index());
         for xj in 0..out_len {
             let row = &mat[xj * d_i..(xj + 1) * d_i];
             let mut acc = 0.0;
@@ -97,7 +177,6 @@ pub fn compute_message<S: MsgSource + ?Sized>(
             out[xj] = acc;
         }
     }
-
     normalize(&mut out[..out_len]);
     out_len
 }
@@ -106,31 +185,192 @@ pub fn compute_message<S: MsgSource + ?Sized>(
 /// `prod[x_i] = ψ_i(x_i) · Π_{k ∈ N(i)\{j}} μ_{k→i}(x_i)` for `e = (i→j)`.
 /// Returns `|D_i|`. Exposed separately so the PJRT batched backend can do
 /// the gather natively and ship only the dense matvec+normalize to the
-/// AOT kernel.
+/// AOT kernel. `tmp` is the per-neighbor read buffer (caller-provided so
+/// hot loops reuse one allocation; see [`MsgScratch`]).
 #[inline]
 pub fn incoming_product<S: MsgSource + ?Sized>(
     mrf: &Mrf,
     src: &S,
     e: u32,
     prod: &mut [f64],
+    tmp: &mut MsgBuf,
 ) -> usize {
     let i = mrf.graph.edge_src[e as usize] as usize;
     let d_i = mrf.domain[i] as usize;
     prod[..d_i].copy_from_slice(mrf.node_factors.of(i));
     let rev = mrf.graph.reverse(e); // the (j→i) message to exclude
-    let mut incoming = msg_buf();
     for s in mrf.graph.slots(i) {
         let e_in = mrf.graph.adj_in[s];
         if e_in == rev {
             continue;
         }
-        let len = src.read_msg(mrf, e_in, &mut incoming);
+        let len = src.read_msg(mrf, e_in, tmp);
         debug_assert_eq!(len, d_i);
         for x in 0..d_i {
-            prod[x] *= incoming[x];
+            prod[x] *= tmp[x];
         }
     }
     d_i
+}
+
+/// Reusable buffers for [`fused_node_refresh`]: grown on demand to the hot
+/// node's `degree × |D|` and reused across calls, so steady-state
+/// refreshes allocate nothing and only ever touch live prefixes.
+#[derive(Default)]
+pub struct NodeScratch {
+    /// Incoming messages of the node, stride `|D_j|` (slot-ordered).
+    inc: Vec<f64>,
+    /// Per-slot excluded products, stride `|D_j|`.
+    excl: Vec<f64>,
+    /// Running suffix product (`|D_j|` entries).
+    suf: Vec<f64>,
+    /// Output staging for one emitted message (`MAX_DOMAIN` entries).
+    out: Vec<f64>,
+    /// Staging for the emitted edge's current live value (`MAX_DOMAIN`).
+    cur: Vec<f64>,
+}
+
+impl NodeScratch {
+    /// Empty scratch (buffers grow on first use).
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// The node-centric fused refresh kernel.
+///
+/// For node `j`, computes every outgoing update `μ'_{j→·}` in one pass:
+/// gather each incoming message once, build per-slot *excluded* products
+/// `ψ_j · Π_{t≠s} μ_{in(t)}` with a prefix/suffix sweep (no division —
+/// exact zeros from deterministic factors stay exact), then apply each
+/// out-edge's factor matrix and normalize. Total work is O(deg·|D|) plus
+/// the matvecs, versus O(deg²·|D|) for per-edge [`compute_message`] over
+/// the same out-set, and each incoming message is read from the shared
+/// state exactly once.
+///
+/// `emit(e, new, cur)` is called once per out-edge of `j` (slot order)
+/// with the normalized new message and the edge's *current* value read
+/// from `src` (residual computation needs both; reading it here lets the
+/// whole pass run on reusable scratch with zero per-call buffer zeroing)
+/// — except `skip`, typically the reverse of a just-committed edge
+/// `(i→j)`, whose recomputed value cannot have changed (it excludes the
+/// `i→j` input by definition).
+///
+/// The binary fast path (|D_j| = 2) runs the prefix/suffix sweep on
+/// scalars and keeps the unrolled 2×2 matvec of the edge-wise kernel.
+pub fn fused_node_refresh<S, F>(
+    mrf: &Mrf,
+    src: &S,
+    j: u32,
+    skip: Option<u32>,
+    scratch: &mut NodeScratch,
+    mut emit: F,
+) where
+    S: MsgSource + ?Sized,
+    F: FnMut(u32, &[f64], &[f64]),
+{
+    let ju = j as usize;
+    let d_j = mrf.domain[ju] as usize;
+    let slots = mrf.graph.slots(ju);
+    let deg = slots.len();
+    if deg == 0 {
+        return;
+    }
+    let nf = mrf.node_factors.of(ju);
+    let inc = &mut scratch.inc;
+    if inc.len() < deg * d_j {
+        inc.resize(deg * d_j, 0.0);
+    }
+    let excl = &mut scratch.excl;
+    if excl.len() < deg * d_j {
+        excl.resize(deg * d_j, 0.0);
+    }
+    let out = &mut scratch.out;
+    if out.len() < crate::model::MAX_DOMAIN {
+        out.resize(crate::model::MAX_DOMAIN, 0.0);
+    }
+    let cur = &mut scratch.cur;
+    if cur.len() < crate::model::MAX_DOMAIN {
+        cur.resize(crate::model::MAX_DOMAIN, 0.0);
+    }
+
+    // Binary fast path: scalar prefix/suffix, unrolled 2×2 matvec.
+    if d_j == 2 {
+        let mut b = [0.0f64; 2];
+        for (k, s) in slots.clone().enumerate() {
+            src.read_msg(mrf, mrf.graph.adj_in[s], &mut b);
+            inc[2 * k] = b[0];
+            inc[2 * k + 1] = b[1];
+        }
+        let (mut p0, mut p1) = (nf[0], nf[1]);
+        for k in 0..deg {
+            excl[2 * k] = p0;
+            excl[2 * k + 1] = p1;
+            p0 *= inc[2 * k];
+            p1 *= inc[2 * k + 1];
+        }
+        let (mut s0, mut s1) = (1.0f64, 1.0f64);
+        for k in (0..deg).rev() {
+            excl[2 * k] *= s0;
+            excl[2 * k + 1] *= s1;
+            s0 *= inc[2 * k];
+            s1 *= inc[2 * k + 1];
+        }
+        for (k, s) in slots.clone().enumerate() {
+            let e_out = mrf.graph.adj_out[s];
+            if skip == Some(e_out) {
+                continue;
+            }
+            let (q0, q1) = (excl[2 * k], excl[2 * k + 1]);
+            let len = if mrf.msg_len(e_out) == 2 {
+                binary_matvec(mrf, e_out, q0, q1, out);
+                2
+            } else {
+                // Binary source, wide destination (e.g. LDPC var→check).
+                apply_factor(mrf, e_out, &[q0, q1], out)
+            };
+            let cl = src.read_msg(mrf, e_out, cur);
+            debug_assert_eq!(cl, len);
+            emit(e_out, &out[..len], &cur[..len]);
+        }
+        return;
+    }
+
+    // Generic path: vector prefix/suffix over the slot-ordered incoming
+    // messages.
+    let suf = &mut scratch.suf;
+    suf.clear();
+    suf.resize(d_j, 1.0);
+    for (k, s) in slots.clone().enumerate() {
+        let len = src.read_msg(mrf, mrf.graph.adj_in[s], &mut inc[k * d_j..(k + 1) * d_j]);
+        debug_assert_eq!(len, d_j);
+    }
+    excl[..d_j].copy_from_slice(nf);
+    for k in 1..deg {
+        for x in 0..d_j {
+            excl[k * d_j + x] = excl[(k - 1) * d_j + x] * inc[(k - 1) * d_j + x];
+        }
+    }
+    for k in (0..deg).rev() {
+        for x in 0..d_j {
+            excl[k * d_j + x] *= suf[x];
+        }
+        if k > 0 {
+            for x in 0..d_j {
+                suf[x] *= inc[k * d_j + x];
+            }
+        }
+    }
+    for (k, s) in slots.clone().enumerate() {
+        let e_out = mrf.graph.adj_out[s];
+        if skip == Some(e_out) {
+            continue;
+        }
+        let len = apply_factor(mrf, e_out, &excl[k * d_j..(k + 1) * d_j], out);
+        let cl = src.read_msg(mrf, e_out, cur);
+        debug_assert_eq!(cl, len);
+        emit(e_out, &out[..len], &cur[..len]);
+    }
 }
 
 /// Normalize `v` to sum 1; uniform fallback when the sum is 0 or non-finite.
@@ -298,6 +538,106 @@ mod tests {
         let mut v = [f64::NAN, 1.0];
         normalize(&mut v);
         assert_eq!(v, [0.5, 0.5]);
+    }
+
+    /// Fused refresh of a node must reproduce the edge-wise kernel on
+    /// every out-edge (≤ 1e-12; the product grouping differs by design).
+    fn assert_fused_matches_edgewise(m: &crate::model::Mrf, msgs: &Messages) {
+        let mut sc = NodeScratch::new();
+        let mut expect = msg_buf();
+        let mut live_val = msg_buf();
+        for j in 0..m.num_nodes() as u32 {
+            let mut seen = 0usize;
+            fused_node_refresh(m, msgs, j, None, &mut sc, |e, vals, cur| {
+                seen += 1;
+                let len = compute_message(m, msgs, e, &mut expect);
+                assert_eq!(len, vals.len(), "edge {e}");
+                for x in 0..len {
+                    assert!(
+                        (vals[x] - expect[x]).abs() <= 1e-12,
+                        "node {j} edge {e} x={x}: fused {} vs edgewise {}",
+                        vals[x],
+                        expect[x]
+                    );
+                }
+                // The emitted cur is the edge's live value, bit for bit.
+                let ll = msgs.read_msg(m, e, &mut live_val);
+                assert_eq!(ll, cur.len());
+                assert_eq!(&live_val[..ll], cur, "edge {e} live value");
+            });
+            assert_eq!(seen, m.graph.degree(j as usize));
+        }
+    }
+
+    #[test]
+    fn fused_matches_edgewise_binary_grid() {
+        let m = builders::build(&ModelSpec::Ising { n: 4 }, 11);
+        let msgs = Messages::uniform(&m);
+        // Perturb the state so products are non-trivial.
+        let mut out = msg_buf();
+        for e in 0..m.num_messages() as u32 {
+            compute_message(&m, &msgs, e, &mut out);
+            msgs.write_msg(&m, e, &out);
+        }
+        assert_fused_matches_edgewise(&m, &msgs);
+    }
+
+    #[test]
+    fn fused_matches_edgewise_wide_domains() {
+        // LDPC: binary variables ↔ 64-state constraints, transposed
+        // factors on every odd edge, zero entries from parity indicators.
+        let inst = builders::ldpc::build(24, 0.07, 5);
+        let m = &inst.mrf;
+        let msgs = Messages::uniform(m);
+        let mut out = msg_buf();
+        for e in 0..m.num_messages() as u32 {
+            compute_message(m, &msgs, e, &mut out);
+            msgs.write_msg(m, e, &out);
+        }
+        assert_fused_matches_edgewise(m, &msgs);
+    }
+
+    #[test]
+    fn fused_skip_edge_is_not_emitted() {
+        let m = builders::build(&ModelSpec::Tree { n: 7 }, 1);
+        let msgs = Messages::uniform(&m);
+        let mut sc = NodeScratch::new();
+        let j = 1u32; // interior node
+        let skip = m.graph.adj_out[m.graph.slots(1).next().unwrap()];
+        let mut emitted = Vec::new();
+        fused_node_refresh(&m, &msgs, j, Some(skip), &mut sc, |e, _, _| emitted.push(e));
+        assert_eq!(emitted.len(), m.graph.degree(1) - 1);
+        assert!(!emitted.contains(&skip));
+    }
+
+    #[test]
+    fn fused_exact_zero_excluded_products() {
+        // Node with one zero incoming message: the out-edge excluding it
+        // must see a nonzero product, all others exact zero — without any
+        // division the fused path preserves this exactly.
+        let m = builders::build(&ModelSpec::Ising { n: 3 }, 3);
+        let msgs = Messages::uniform(&m);
+        // Center node of the 3×3 grid has degree 4.
+        let j = (0..m.num_nodes()).max_by_key(|&v| m.graph.degree(v)).unwrap();
+        let first_in = m.graph.adj_in[m.graph.slots(j).next().unwrap()];
+        msgs.write_msg(&m, first_in, &[0.0, 0.0]);
+        assert_fused_matches_edgewise(&m, &msgs);
+    }
+
+    #[test]
+    fn compute_message_with_reuses_scratch() {
+        let inst = builders::ldpc::build(12, 0.07, 3);
+        let m = &inst.mrf;
+        let msgs = Messages::uniform(m);
+        let mut scratch = MsgScratch::new();
+        let mut a = msg_buf();
+        let mut b = msg_buf();
+        for e in 0..m.num_messages() as u32 {
+            let la = compute_message_with(m, &msgs, e, &mut a, &mut scratch);
+            let lb = compute_message(m, &msgs, e, &mut b);
+            assert_eq!(la, lb);
+            assert_eq!(&a[..la], &b[..lb], "edge {e}");
+        }
     }
 
     #[test]

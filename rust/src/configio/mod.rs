@@ -190,6 +190,16 @@ pub enum PartitionSpec {
 /// Default spill probability for the shard-affine Multiqueue.
 pub const DEFAULT_SPILL: f64 = 0.1;
 
+/// Parse a CLI `on|off` switch value (also accepts `true|false|1|0`) —
+/// used by the `--fused` axis.
+pub fn parse_on_off(s: &str) -> Result<bool> {
+    match s {
+        "on" | "true" | "1" => Ok(true),
+        "off" | "false" | "0" => Ok(false),
+        other => bail!("expected on|off, got '{other}'"),
+    }
+}
+
 /// Reject spill probabilities outside [0, 1] (and NaN) at the config
 /// boundary, so recorded configs always describe the executed behavior.
 fn valid_spill(spill: f64) -> Result<f64> {
@@ -435,6 +445,13 @@ pub struct RunConfig {
     pub use_pjrt: bool,
     /// Locality axis: graph partitioning + shard-affine scheduling.
     pub partition: PartitionSpec,
+    /// Update-kernel axis: `true` (default) uses the node-centric fused
+    /// refresh kernel (O(deg) per node touch, prefix/suffix excluded
+    /// products) plus batched scheduler inserts; `false` forces the
+    /// historical edge-wise refresh fan-out (O(deg²) per node touch) for
+    /// A/B measurement. Both compute the same update rule; values agree
+    /// to ≤ 1e-12 (product-order rounding only).
+    pub fused: bool,
 }
 
 impl RunConfig {
@@ -460,6 +477,7 @@ impl RunConfig {
             max_updates: 0,
             use_pjrt: false,
             partition: PartitionSpec::Off,
+            fused: true,
         }
     }
 
@@ -493,6 +511,12 @@ impl RunConfig {
         self
     }
 
+    /// Set the update-kernel axis (fused node refresh vs edge-wise).
+    pub fn with_fused(mut self, fused: bool) -> Self {
+        self.fused = fused;
+        self
+    }
+
     /// Serialize as a JSON object.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -506,6 +530,7 @@ impl RunConfig {
             ("max_updates", Json::Num(self.max_updates as f64)),
             ("use_pjrt", Json::Bool(self.use_pjrt)),
             ("partition", self.partition.to_json()),
+            ("fused", Json::Bool(self.fused)),
         ])
     }
 
@@ -541,6 +566,11 @@ impl RunConfig {
         }
         if let Some(p) = v.get("partition") {
             cfg.partition = PartitionSpec::from_json(p)?;
+        }
+        if let Some(f) = v.get("fused") {
+            cfg.fused = f
+                .as_bool()
+                .ok_or_else(|| anyhow!("fused must be a boolean (true|false)"))?;
         }
         Ok(cfg)
     }
@@ -686,6 +716,27 @@ mod tests {
         assert_eq!(m.name(), "powerlaw");
         let back = ModelSpec::from_json(&m.to_json()).unwrap();
         assert_eq!(back, m);
+    }
+
+    #[test]
+    fn fused_axis_roundtrip_and_back_compat() {
+        let cfg = RunConfig::new(ModelSpec::Ising { n: 6 }, AlgorithmSpec::RelaxedResidual)
+            .with_fused(false);
+        let j = cfg.to_json().to_string_pretty();
+        let back = RunConfig::from_json(&parse(&j).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+        assert!(!back.fused);
+        // Configs written before the fused axis parse with the default on.
+        let legacy = r#"{"model": {"kind": "ising", "n": 5}, "algorithm": "rr"}"#;
+        let cfg = RunConfig::from_json(&parse(legacy).unwrap()).unwrap();
+        assert!(cfg.fused);
+        // CLI switch values.
+        assert!(parse_on_off("on").unwrap());
+        assert!(!parse_on_off("off").unwrap());
+        assert!(parse_on_off("wat").is_err());
+        // A malformed fused value is an error, not a silent default.
+        let bad = r#"{"model": {"kind": "ising", "n": 5}, "algorithm": "rr", "fused": "off"}"#;
+        assert!(RunConfig::from_json(&parse(bad).unwrap()).is_err());
     }
 
     #[test]

@@ -38,6 +38,15 @@ pub struct Counters {
     pub rounds: u64,
     /// Splash operations (splash engines only).
     pub splashes: u64,
+    /// Lookahead refreshes performed while processing — the commit fan-out
+    /// the fused node kernel amortizes (`refreshes / pops` ≈ the mean
+    /// refresh fan-out per scheduler access). Verifier sweeps are
+    /// excluded so the ratio reflects the hot path.
+    pub refreshes: u64,
+    /// Batched scheduler insert calls (`ExecCtx::requeue_batch`); the mean
+    /// insertion batch size on a fused run is ≈ `inserts / insert_batches`
+    /// (exact when every insert goes through the batched path).
+    pub insert_batches: u64,
 }
 
 impl Counters {
@@ -52,6 +61,8 @@ impl Counters {
         self.inserts += other.inserts;
         self.rounds += other.rounds;
         self.splashes += other.splashes;
+        self.refreshes += other.refreshes;
+        self.insert_batches += other.insert_batches;
     }
 }
 
@@ -71,6 +82,8 @@ pub struct AtomicCounters {
     inserts: AtomicU64,
     rounds: AtomicU64,
     splashes: AtomicU64,
+    refreshes: AtomicU64,
+    insert_batches: AtomicU64,
 }
 
 impl AtomicCounters {
@@ -86,6 +99,8 @@ impl AtomicCounters {
         self.inserts.store(c.inserts, Ordering::Relaxed);
         self.rounds.store(c.rounds, Ordering::Relaxed);
         self.splashes.store(c.splashes, Ordering::Relaxed);
+        self.refreshes.store(c.refreshes, Ordering::Relaxed);
+        self.insert_batches.store(c.insert_batches, Ordering::Relaxed);
     }
 
     /// Read the last published snapshot.
@@ -100,6 +115,8 @@ impl AtomicCounters {
             inserts: self.inserts.load(Ordering::Relaxed),
             rounds: self.rounds.load(Ordering::Relaxed),
             splashes: self.splashes.load(Ordering::Relaxed),
+            refreshes: self.refreshes.load(Ordering::Relaxed),
+            insert_batches: self.insert_batches.load(Ordering::Relaxed),
         }
     }
 }

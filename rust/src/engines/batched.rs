@@ -13,9 +13,19 @@
 //!
 //! Batching amortizes scheduler traffic (one pop ≈ splash's motivation)
 //! and exposes SIMD/MXU-shaped work to the kernel layer.
+//!
+//! With the update-kernel axis on (`RunConfig::fused`, the default) and
+//! the native backend, the affected-set refresh instead runs through the
+//! node-centric fused kernel (`Lookahead::refresh_node` per touched dst
+//! node — O(deg) instead of O(deg²) gathers) and requeues through one
+//! batched scheduler insert; an explicitly requested PJRT backend keeps
+//! the dense edge-list path, which is that configuration's point.
 
 use super::{Engine, EngineStats};
-use crate::bp::{compute_message, msg_buf, residual_l2, Lookahead, Messages, MsgSource};
+use crate::bp::{
+    compute_message_with, msg_buf, residual_l2, Lookahead, Messages, MsgScratch, MsgSource,
+    NodeScratch,
+};
 use crate::configio::RunConfig;
 use crate::exec::{ExecCtx, TaskPolicy, WorkerPool};
 use crate::model::Mrf;
@@ -55,9 +65,12 @@ impl BatchCompute for NativeBatch {
     ) {
         let stride = mrf.max_domain();
         let mut cur = msg_buf();
+        // One gather scratch for the whole batch (no per-edge 64-wide
+        // zeroing on the generic path).
+        let mut scratch = MsgScratch::new();
         for (k, &e) in edges.iter().enumerate() {
             let slot = &mut out[k * stride..(k + 1) * stride];
-            let len = compute_message(mrf, msgs, e, slot);
+            let len = compute_message_with(mrf, msgs, e, slot, &mut scratch);
             msgs.read_msg(mrf, e, &mut cur);
             residuals[k] = residual_l2(&slot[..len], &cur[..len]);
         }
@@ -100,7 +113,11 @@ impl Engine for RelaxedResidualBatched {
             Some(b) => b,
             None => &NativeBatch,
         };
-        let policy = BatchedPolicy::new(mrf, msgs, cfg, backend);
+        // The fused node-centric refresh bypasses the batch backend; keep
+        // the backend path whenever PJRT was explicitly requested and
+        // resolved (its dense kernel is the point of that configuration).
+        let fused = cfg.fused && pjrt.is_none();
+        let policy = BatchedPolicy::new(mrf, msgs, cfg, backend, fused);
         Ok(WorkerPool::from_config(cfg, SchedChoice::Relaxed)
             .batch(self.batch.max(1))
             .with_partition(crate::model::partition::for_messages(mrf, cfg))
@@ -116,6 +133,12 @@ pub(crate) struct BatchScratch {
     out: Vec<f64>,
     /// Per-affected-edge residuals.
     res: Vec<f64>,
+    /// Deduplicated destination nodes of the batch (fused path).
+    nodes: Vec<u32>,
+    /// Fused-kernel prefix/suffix buffers.
+    node: NodeScratch,
+    /// `(edge, residual)` requeue batch (fused path).
+    batch: Vec<(u32, f64)>,
 }
 
 /// Relaxed-residual policy whose affected-set refresh runs as one dense
@@ -128,6 +151,9 @@ pub(crate) struct BatchedPolicy<'a> {
     /// `mrf.max_domain()`, hoisted: it is an O(V) scan per call.
     stride: usize,
     eps: f64,
+    /// Node-centric fused refresh instead of the dense edge-list backend
+    /// (`RunConfig::fused`, forced off when the PJRT backend is live).
+    fused: bool,
 }
 
 impl<'a> BatchedPolicy<'a> {
@@ -136,15 +162,10 @@ impl<'a> BatchedPolicy<'a> {
         msgs: &'a Messages,
         cfg: &RunConfig,
         backend: &'a dyn BatchCompute,
+        fused: bool,
     ) -> Self {
-        BatchedPolicy {
-            mrf,
-            msgs,
-            la: Lookahead::init(mrf, msgs),
-            backend,
-            stride: mrf.max_domain(),
-            eps: cfg.epsilon,
-        }
+        let la = if fused { Lookahead::init_fused(mrf, msgs) } else { Lookahead::init(mrf, msgs) };
+        BatchedPolicy { mrf, msgs, la, backend, stride: mrf.max_domain(), eps: cfg.epsilon, fused }
     }
 }
 
@@ -156,7 +177,14 @@ impl TaskPolicy for BatchedPolicy<'_> {
     }
 
     fn make_scratch(&self) -> Self::Scratch {
-        BatchScratch { affected: Vec::new(), out: Vec::new(), res: Vec::new() }
+        BatchScratch {
+            affected: Vec::new(),
+            out: Vec::new(),
+            res: Vec::new(),
+            nodes: Vec::new(),
+            node: NodeScratch::new(),
+            batch: Vec::new(),
+        }
     }
 
     fn seed(&self, ctx: &mut ExecCtx<'_>) {
@@ -177,6 +205,30 @@ impl TaskPolicy for BatchedPolicy<'_> {
             }
         }
 
+        if self.fused {
+            // ---- Node-centric fused refresh of the touched dst nodes ----
+            // Each touched node's *whole* out-set is refreshed in one
+            // O(deg) pass (the reverse edges beyond the per-task affected
+            // union recompute to their current values — their residual is
+            // re-derived from ground truth, a strict repair), then the
+            // combined (edge, residual) set requeues through one batched
+            // insert.
+            sc.nodes.clear();
+            for &e in tasks {
+                sc.nodes.push(self.mrf.graph.edge_dst[e as usize]);
+            }
+            sc.nodes.sort_unstable();
+            sc.nodes.dedup();
+            sc.batch.clear();
+            for &j in sc.nodes.iter() {
+                self.la
+                    .refresh_node(self.mrf, self.msgs, j, None, &mut sc.node, &mut sc.batch);
+            }
+            ctx.counters.refreshes += sc.batch.len() as u64;
+            ctx.requeue_batch(&sc.batch);
+            return tasks.len() as u64;
+        }
+
         // ---- Batched refresh of the combined affected set ----
         sc.affected.clear();
         for &e in tasks {
@@ -188,6 +240,7 @@ impl TaskPolicy for BatchedPolicy<'_> {
         let stride = self.stride;
         sc.out.resize(sc.affected.len() * stride, 0.0);
         sc.res.resize(sc.affected.len(), 0.0);
+        ctx.counters.refreshes += sc.affected.len() as u64;
         self.backend.compute_batch(self.mrf, self.msgs, &sc.affected, &mut sc.out, &mut sc.res);
         for (k, &e) in sc.affected.iter().enumerate() {
             let len = self.mrf.msg_len(e);
@@ -199,10 +252,24 @@ impl TaskPolicy for BatchedPolicy<'_> {
 
     fn verify_sweep(&self, ctx: &mut ExecCtx<'_>) -> bool {
         let mut found = false;
-        for e in 0..self.mrf.num_messages() as u32 {
-            let r = self.la.refresh(self.mrf, self.msgs, e);
-            if ctx.requeue(e, r) {
-                found = true;
+        if self.fused {
+            let mut sc = NodeScratch::new();
+            let mut batch = Vec::new();
+            for j in 0..self.mrf.num_nodes() as u32 {
+                batch.clear();
+                self.la.refresh_node(self.mrf, self.msgs, j, None, &mut sc, &mut batch);
+                for &(e, r) in &batch {
+                    if ctx.requeue(e, r) {
+                        found = true;
+                    }
+                }
+            }
+        } else {
+            for e in 0..self.mrf.num_messages() as u32 {
+                let r = self.la.refresh(self.mrf, self.msgs, e);
+                if ctx.requeue(e, r) {
+                    found = true;
+                }
             }
         }
         !found

@@ -14,7 +14,10 @@
 //! supplies the [`ScorePolicy`].
 
 use super::{Engine, EngineStats};
-use crate::bp::{compute_message, msg_buf, residual_l2, Messages, MsgBuf, MsgSource};
+use crate::bp::{
+    compute_message, compute_message_with, msg_buf, residual_l2, Messages, MsgBuf, MsgScratch,
+    MsgSource,
+};
 use crate::configio::RunConfig;
 use crate::exec::{ExecCtx, TaskPolicy, WorkerPool};
 use crate::model::Mrf;
@@ -52,6 +55,9 @@ impl Engine for NoLookahead {
 pub(crate) struct ScoreScratch {
     new: MsgBuf,
     cur: MsgBuf,
+    /// Gather buffers for [`compute_message_with`] (no per-update
+    /// MAX_DOMAIN-wide zeroing on wide-domain models).
+    gather: MsgScratch,
 }
 
 /// Message-task policy with accumulated-change scores instead of true
@@ -80,7 +86,7 @@ impl TaskPolicy for ScorePolicy<'_> {
     }
 
     fn make_scratch(&self) -> Self::Scratch {
-        ScoreScratch { new: msg_buf(), cur: msg_buf() }
+        ScoreScratch { new: msg_buf(), cur: msg_buf(), gather: MsgScratch::new() }
     }
 
     fn seed(&self, ctx: &mut ExecCtx<'_>) {
@@ -100,7 +106,13 @@ impl TaskPolicy for ScorePolicy<'_> {
     fn process(&self, tasks: &[u32], ctx: &mut ExecCtx<'_>, scratch: &mut ScoreScratch) -> u64 {
         for &e in tasks {
             // Compute the update now (no lookahead cache).
-            let len = compute_message(self.mrf, self.msgs, e, &mut scratch.new);
+            let len = compute_message_with(
+                self.mrf,
+                self.msgs,
+                e,
+                &mut scratch.new,
+                &mut scratch.gather,
+            );
             self.msgs.read_msg(self.mrf, e, &mut scratch.cur);
             let r = residual_l2(&scratch.new[..len], &scratch.cur[..len]);
             self.msgs.write_msg(self.mrf, e, &scratch.new[..len]);

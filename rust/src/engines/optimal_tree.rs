@@ -17,7 +17,7 @@
 //! (non-zero-priority) update.
 
 use super::{Engine, EngineStats};
-use crate::bp::{compute_message, msg_buf, Messages, MsgBuf};
+use crate::bp::{compute_message_with, msg_buf, Messages, MsgBuf, MsgScratch};
 use crate::configio::RunConfig;
 use crate::exec::{ExecCtx, TaskPolicy, WorkerPool};
 use crate::model::Mrf;
@@ -102,14 +102,14 @@ impl<'a> OptimalTreePolicy<'a> {
 }
 
 impl TaskPolicy for OptimalTreePolicy<'_> {
-    type Scratch = MsgBuf;
+    type Scratch = (MsgBuf, MsgScratch);
 
     fn num_tasks(&self) -> usize {
         self.mrf.num_messages()
     }
 
     fn make_scratch(&self) -> Self::Scratch {
-        msg_buf()
+        (msg_buf(), MsgScratch::new())
     }
 
     fn seed(&self, ctx: &mut ExecCtx<'_>) {
@@ -123,12 +123,18 @@ impl TaskPolicy for OptimalTreePolicy<'_> {
         }
     }
 
-    fn process(&self, tasks: &[u32], ctx: &mut ExecCtx<'_>, buf: &mut MsgBuf) -> u64 {
+    fn process(
+        &self,
+        tasks: &[u32],
+        ctx: &mut ExecCtx<'_>,
+        scratch: &mut (MsgBuf, MsgScratch),
+    ) -> u64 {
+        let (buf, gather) = scratch;
         for &e in tasks {
             let p = self.prio[e as usize].load();
             // Execute the update (even with priority 0 — those are the
             // wasted updates of Claim 4).
-            let len = compute_message(self.mrf, self.msgs, e, buf);
+            let len = compute_message_with(self.mrf, self.msgs, e, buf, gather);
             self.msgs.write_msg(self.mrf, e, &buf[..len]);
             ctx.counters.updates += 1;
 

@@ -11,11 +11,14 @@
 //!   messages stuck in large-residual cycles.
 //!
 //! Processing follows §3.3: commit the precomputed update, then refresh +
-//! requeue the affected out-edges. The pop → validate epoch → claim
-//! protocol and the quiescence + verify termination live in the runtime.
+//! requeue the affected out-edges — through the node-centric fused kernel
+//! (`Lookahead::refresh_node`, one O(deg) pass + one batched insert) when
+//! `RunConfig::fused` is on (the default), or edge-by-edge when off. The
+//! pop → validate epoch → claim protocol and the quiescence + verify
+//! termination live in the runtime.
 
 use super::{Engine, EngineStats};
-use crate::bp::{Lookahead, Messages};
+use crate::bp::{Lookahead, Messages, NodeScratch};
 use crate::configio::RunConfig;
 use crate::exec::{ExecCtx, TaskPolicy, WorkerPool};
 use crate::model::Mrf;
@@ -93,6 +96,16 @@ pub(crate) struct ResidualPolicy<'a> {
     /// Per-message commit counts (weight-decay only).
     counts: Option<Vec<AtomicU32>>,
     eps: f64,
+    /// Use the node-centric fused refresh + batched requeue
+    /// (`RunConfig::fused`); off forces the per-edge fan-out for A/B.
+    fused: bool,
+}
+
+/// Per-worker buffers for the fused refresh path: the kernel's
+/// prefix/suffix scratch and the `(edge, residual)` requeue batch.
+pub(crate) struct RefreshScratch {
+    node: NodeScratch,
+    batch: Vec<(u32, f64)>,
 }
 
 impl<'a> ResidualPolicy<'a> {
@@ -107,13 +120,12 @@ impl<'a> ResidualPolicy<'a> {
             v.resize_with(mrf.num_messages(), || AtomicU32::new(0));
             v
         });
-        ResidualPolicy {
-            mrf,
-            msgs,
-            la: Lookahead::init(mrf, msgs),
-            counts,
-            eps: cfg.epsilon,
-        }
+        let la = if cfg.fused {
+            Lookahead::init_fused(mrf, msgs)
+        } else {
+            Lookahead::init(mrf, msgs)
+        };
+        ResidualPolicy { mrf, msgs, la, counts, eps: cfg.epsilon, fused: cfg.fused }
     }
 
     /// Priority of edge `e` given its residual (weight-decay divides by the
@@ -128,13 +140,15 @@ impl<'a> ResidualPolicy<'a> {
 }
 
 impl TaskPolicy for ResidualPolicy<'_> {
-    type Scratch = ();
+    type Scratch = RefreshScratch;
 
     fn num_tasks(&self) -> usize {
         self.mrf.num_messages()
     }
 
-    fn make_scratch(&self) -> Self::Scratch {}
+    fn make_scratch(&self) -> Self::Scratch {
+        RefreshScratch { node: NodeScratch::new(), batch: Vec::new() }
+    }
 
     fn seed(&self, ctx: &mut ExecCtx<'_>) {
         for e in 0..self.mrf.num_messages() as u32 {
@@ -142,7 +156,7 @@ impl TaskPolicy for ResidualPolicy<'_> {
         }
     }
 
-    fn process(&self, tasks: &[u32], ctx: &mut ExecCtx<'_>, _: &mut ()) -> u64 {
+    fn process(&self, tasks: &[u32], ctx: &mut ExecCtx<'_>, sc: &mut RefreshScratch) -> u64 {
         for &e in tasks {
             // Commit the precomputed update.
             let res = self.la.commit(self.mrf, self.msgs, e);
@@ -155,10 +169,34 @@ impl TaskPolicy for ResidualPolicy<'_> {
             if let Some(counts) = &self.counts {
                 counts[e as usize].fetch_add(1, Ordering::Relaxed);
             }
-            // Refresh + requeue the affected out-edges of dst.
-            for k in self.la.affected_edges(self.mrf, e) {
-                let r = self.la.refresh(self.mrf, self.msgs, k);
-                ctx.requeue(k, self.priority(r, k));
+            if self.fused {
+                // Fused refresh of dst's out-set (minus the unaffected
+                // reverse edge): one O(deg) node pass, then one batched
+                // scheduler insert for the whole affected set.
+                let j = self.mrf.graph.edge_dst[e as usize];
+                sc.batch.clear();
+                self.la.refresh_node(
+                    self.mrf,
+                    self.msgs,
+                    j,
+                    Some(self.mrf.graph.reverse(e)),
+                    &mut sc.node,
+                    &mut sc.batch,
+                );
+                ctx.counters.refreshes += sc.batch.len() as u64;
+                if self.counts.is_some() {
+                    for item in sc.batch.iter_mut() {
+                        item.1 = self.priority(item.1, item.0);
+                    }
+                }
+                ctx.requeue_batch(&sc.batch);
+            } else {
+                // Edge-wise fan-out: O(deg) full gathers = O(deg²) reads.
+                for k in self.la.affected_edges(self.mrf, e) {
+                    let r = self.la.refresh(self.mrf, self.msgs, k);
+                    ctx.counters.refreshes += 1;
+                    ctx.requeue(k, self.priority(r, k));
+                }
             }
         }
         tasks.len() as u64
@@ -166,12 +204,27 @@ impl TaskPolicy for ResidualPolicy<'_> {
 
     fn verify_sweep(&self, ctx: &mut ExecCtx<'_>) -> bool {
         // Full refresh of every edge repairs any residual lost to benign
-        // write races.
+        // write races. One refresh_node per node covers every directed
+        // edge exactly once (each edge has one source node).
         let mut found = false;
-        for e in 0..self.mrf.num_messages() as u32 {
-            let r = self.la.refresh(self.mrf, self.msgs, e);
-            if ctx.requeue(e, self.priority(r, e)) {
-                found = true;
+        if self.fused {
+            let mut sc = NodeScratch::new();
+            let mut batch = Vec::new();
+            for j in 0..self.mrf.num_nodes() as u32 {
+                batch.clear();
+                self.la.refresh_node(self.mrf, self.msgs, j, None, &mut sc, &mut batch);
+                for &(e, r) in &batch {
+                    if ctx.requeue(e, self.priority(r, e)) {
+                        found = true;
+                    }
+                }
+            }
+        } else {
+            for e in 0..self.mrf.num_messages() as u32 {
+                let r = self.la.refresh(self.mrf, self.msgs, e);
+                if ctx.requeue(e, self.priority(r, e)) {
+                    found = true;
+                }
             }
         }
         !found
@@ -284,6 +337,40 @@ mod tests {
         assert!(stats.converged);
         let bits = crate::bp::decode_bits(&inst.mrf, &msgs, inst.num_vars);
         assert_eq!(bits, inst.sent);
+    }
+
+    #[test]
+    fn edgewise_and_fused_share_the_fixed_point() {
+        let spec = ModelSpec::Ising { n: 5 };
+        let mrf = builders::build(&spec, 13);
+        let msgs = Messages::uniform(&mrf);
+        let cfg = RunConfig::new(spec.clone(), AlgorithmSpec::RelaxedResidual)
+            .with_threads(2)
+            .with_seed(13)
+            .with_fused(false);
+        let s = ResidualEngine::relaxed().run(&mrf, &msgs, &cfg).unwrap();
+        assert!(s.converged, "edgewise run converges");
+        let edgewise = all_marginals(&mrf, &msgs);
+
+        let mrf2 = builders::build(&spec, 13);
+        let msgs2 = Messages::uniform(&mrf2);
+        let cfg2 = RunConfig::new(spec, AlgorithmSpec::RelaxedResidual)
+            .with_threads(2)
+            .with_seed(13)
+            .with_fused(true);
+        let s2 = ResidualEngine::relaxed().run(&mrf2, &msgs2, &cfg2).unwrap();
+        assert!(s2.converged, "fused run converges");
+        let fused = all_marginals(&mrf2, &msgs2);
+        assert!(
+            max_marginal_diff(&edgewise, &fused) < 1e-2,
+            "diff = {}",
+            max_marginal_diff(&edgewise, &fused)
+        );
+        // The fused run's telemetry records its refresh fan-out and
+        // batched inserts.
+        assert!(s2.metrics.total.refreshes > 0);
+        assert!(s2.metrics.total.insert_batches > 0);
+        assert!(s.metrics.total.insert_batches == 0, "edgewise path never batches");
     }
 
     #[test]

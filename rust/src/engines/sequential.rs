@@ -8,7 +8,7 @@
 //! deterministic given the model.
 
 use super::{Engine, EngineStats};
-use crate::bp::{Lookahead, Messages};
+use crate::bp::{Lookahead, Messages, NodeScratch};
 use crate::configio::RunConfig;
 use crate::coordinator::{Budget, Counters, MetricsReport};
 use crate::exec::RunObserver;
@@ -40,9 +40,17 @@ impl Engine for SequentialResidual {
         let budget = Budget::new(cfg.time_limit_secs, cfg.max_updates);
         let eps = cfg.epsilon;
 
-        let la = Lookahead::init(mrf, msgs);
+        // The kernel axis applies to the baseline too, so fused-vs-edgewise
+        // comparisons against it measure scheduling, not kernel, effects.
+        let la = if cfg.fused {
+            Lookahead::init_fused(mrf, msgs)
+        } else {
+            Lookahead::init(mrf, msgs)
+        };
         let mut heap = IndexedHeap::new(mrf.num_messages());
         let mut c = Counters::default();
+        let mut node_scratch = NodeScratch::new();
+        let mut refreshed: Vec<(u32, f64)> = Vec::new();
 
         for e in 0..mrf.num_messages() as u32 {
             let r = la.residual(e);
@@ -77,19 +85,34 @@ impl Engine for SequentialResidual {
                 c.wasted_pops += 1;
             }
             // Refresh affected messages and update their heap slots.
-            let j = mrf.graph.edge_dst[task as usize] as usize;
+            let j = mrf.graph.edge_dst[task as usize];
             let rev = mrf.graph.reverse(task);
-            for s in mrf.graph.slots(j) {
-                let k = mrf.graph.adj_out[s];
-                if k == rev {
-                    continue;
+            if cfg.fused {
+                refreshed.clear();
+                la.refresh_node(mrf, msgs, j, Some(rev), &mut node_scratch, &mut refreshed);
+                c.refreshes += refreshed.len() as u64;
+                for &(k, r) in &refreshed {
+                    if r >= eps {
+                        heap.update(k, r);
+                        c.inserts += 1;
+                    } else {
+                        heap.remove(k);
+                    }
                 }
-                let r = la.refresh(mrf, msgs, k);
-                if r >= eps {
-                    heap.update(k, r);
-                    c.inserts += 1;
-                } else {
-                    heap.remove(k);
+            } else {
+                for s in mrf.graph.slots(j as usize) {
+                    let k = mrf.graph.adj_out[s];
+                    if k == rev {
+                        continue;
+                    }
+                    let r = la.refresh(mrf, msgs, k);
+                    c.refreshes += 1;
+                    if r >= eps {
+                        heap.update(k, r);
+                        c.inserts += 1;
+                    } else {
+                        heap.remove(k);
+                    }
                 }
             }
             if c.updates % OBSERVE_EVERY == 0 {

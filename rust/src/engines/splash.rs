@@ -17,7 +17,7 @@
 //!   paper's best performer on grids.
 
 use super::{Engine, EngineStats};
-use crate::bp::{Lookahead, Messages};
+use crate::bp::{Lookahead, Messages, NodeScratch};
 use crate::configio::RunConfig;
 use crate::coordinator::Counters;
 use crate::exec::{ExecCtx, TaskPolicy, WorkerPool};
@@ -95,6 +95,10 @@ pub(crate) struct SplashScratch {
     touched: Vec<u32>,
     /// Nodes whose priority may have changed.
     affected: Vec<u32>,
+    /// Fused-kernel prefix/suffix buffers (post-splash refresh).
+    node: NodeScratch,
+    /// Scratch for fused refresh results / batched node requeues.
+    batch: Vec<(u32, f64)>,
 }
 
 /// Node-task policy: node-residual priorities, splash processing.
@@ -105,6 +109,9 @@ pub(crate) struct SplashPolicy<'a> {
     h: usize,
     smart: bool,
     eps: f64,
+    /// Fused post-splash refresh + batched node requeues
+    /// (`RunConfig::fused`).
+    fused: bool,
 }
 
 impl<'a> SplashPolicy<'a> {
@@ -115,7 +122,12 @@ impl<'a> SplashPolicy<'a> {
         h: usize,
         smart: bool,
     ) -> Self {
-        SplashPolicy { mrf, msgs, la: Lookahead::init(mrf, msgs), h, smart, eps: cfg.epsilon }
+        let la = if cfg.fused {
+            Lookahead::init_fused(mrf, msgs)
+        } else {
+            Lookahead::init(mrf, msgs)
+        };
+        SplashPolicy { mrf, msgs, la, h, smart, eps: cfg.epsilon, fused: cfg.fused }
     }
 
     /// Node residual: max residual over incoming messages.
@@ -197,17 +209,44 @@ impl<'a> SplashPolicy<'a> {
         // requeue the nodes whose priority may have changed.
         sc.touched.sort_unstable();
         sc.touched.dedup();
-        for &j in sc.touched.iter() {
-            for s in self.mrf.graph.slots(j as usize) {
-                self.la.refresh(self.mrf, self.msgs, self.mrf.graph.adj_out[s]);
-                sc.affected.push(self.mrf.graph.adj_node[s]);
+        if self.fused {
+            // One fused O(deg) pass per touched node instead of one full
+            // gather per out-edge (the splash fan-out is exactly a node's
+            // whole out-set, the fused kernel's natural unit).
+            for &j in sc.touched.iter() {
+                sc.batch.clear();
+                self.la
+                    .refresh_node(self.mrf, self.msgs, j, None, &mut sc.node, &mut sc.batch);
+                ctx.counters.refreshes += sc.batch.len() as u64;
+                for s in self.mrf.graph.slots(j as usize) {
+                    sc.affected.push(self.mrf.graph.adj_node[s]);
+                }
+                sc.affected.push(j);
             }
-            sc.affected.push(j);
+        } else {
+            for &j in sc.touched.iter() {
+                for s in self.mrf.graph.slots(j as usize) {
+                    self.la.refresh(self.mrf, self.msgs, self.mrf.graph.adj_out[s]);
+                    ctx.counters.refreshes += 1;
+                    sc.affected.push(self.mrf.graph.adj_node[s]);
+                }
+                sc.affected.push(j);
+            }
         }
         sc.affected.sort_unstable();
         sc.affected.dedup();
-        for &w in &sc.affected {
-            ctx.requeue(w, self.node_priority(w));
+        if self.fused {
+            // Batched node requeues: one scheduler visit for the splash's
+            // whole activation set.
+            sc.batch.clear();
+            for &w in &sc.affected {
+                sc.batch.push((w, self.node_priority(w)));
+            }
+            ctx.requeue_batch(&sc.batch);
+        } else {
+            for &w in &sc.affected {
+                ctx.requeue(w, self.node_priority(w));
+            }
         }
 
         sc.order.len() as u64
@@ -227,6 +266,8 @@ impl TaskPolicy for SplashPolicy<'_> {
             visited: HashSet::new(),
             touched: Vec::new(),
             affected: Vec::new(),
+            node: NodeScratch::new(),
+            batch: Vec::new(),
         }
     }
 
@@ -252,8 +293,17 @@ impl TaskPolicy for SplashPolicy<'_> {
 
     fn verify_sweep(&self, ctx: &mut ExecCtx<'_>) -> bool {
         let mut found = false;
-        for e in 0..self.mrf.num_messages() as u32 {
-            self.la.refresh(self.mrf, self.msgs, e);
+        if self.fused {
+            let mut sc = NodeScratch::new();
+            let mut batch = Vec::new();
+            for j in 0..self.mrf.num_nodes() as u32 {
+                self.la.refresh_node(self.mrf, self.msgs, j, None, &mut sc, &mut batch);
+                batch.clear();
+            }
+        } else {
+            for e in 0..self.mrf.num_messages() as u32 {
+                self.la.refresh(self.mrf, self.msgs, e);
+            }
         }
         for v in 0..self.mrf.num_nodes() as u32 {
             if ctx.requeue(v, self.node_priority(v)) {

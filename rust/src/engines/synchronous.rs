@@ -12,7 +12,7 @@
 //! arbitrary topologies.
 
 use super::{Engine, EngineStats};
-use crate::bp::{compute_message, msg_buf, residual_l2, Messages, MsgSource};
+use crate::bp::{compute_message_with, msg_buf, residual_l2, Messages, MsgScratch, MsgSource};
 use crate::configio::RunConfig;
 use crate::coordinator::{run_workers, Budget, Counters, MetricsReport};
 use crate::model::Mrf;
@@ -75,6 +75,7 @@ impl Engine for Synchronous {
             let hi = ((tid + 1) * chunk).min(me);
             let mut new = msg_buf();
             let mut cur = msg_buf();
+            let mut gather = MsgScratch::new();
 
             loop {
                 barrier.wait();
@@ -86,7 +87,7 @@ impl Engine for Synchronous {
                 let dst = &bufs[((r + 1) % 2) as usize];
                 let mut local_max = 0.0f64;
                 for e in lo as u32..hi as u32 {
-                    let len = compute_message(mrf, src, e, &mut new);
+                    let len = compute_message_with(mrf, src, e, &mut new, &mut gather);
                     src.read_msg(mrf, e, &mut cur);
                     local_max = local_max.max(residual_l2(&new[..len], &cur[..len]));
                     dst.write_msg(mrf, e, &new[..len]);

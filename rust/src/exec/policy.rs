@@ -104,6 +104,10 @@ pub struct ExecCtx<'a> {
     /// The run's locality partition; inserts are routed to the task's
     /// shard (see [`crate::sched::Scheduler::insert_hint`]).
     partition: Option<&'a Partition>,
+    /// The per-worker insertion buffer behind [`ExecCtx::requeue_batch`]
+    /// — owned by the worker loop (like its claim buffer) and lent to
+    /// each context, so steady state allocates nothing.
+    entry_buf: &'a mut Vec<Entry>,
 }
 
 impl<'a> ExecCtx<'a> {
@@ -115,8 +119,9 @@ impl<'a> ExecCtx<'a> {
         counters: &'a mut Counters,
         insert_threshold: f64,
         partition: Option<&'a Partition>,
+        entry_buf: &'a mut Vec<Entry>,
     ) -> Self {
-        ExecCtx { sched, ts, term, rng, counters, insert_threshold, partition }
+        ExecCtx { sched, ts, term, rng, counters, insert_threshold, partition, entry_buf }
     }
 
     /// The task's shard hint under the run's partition (`None` when the
@@ -145,6 +150,60 @@ impl<'a> ExecCtx<'a> {
         } else {
             false
         }
+    }
+
+    /// Batched [`ExecCtx::requeue`]: announce a priority change for every
+    /// `(task, prio)` pair — one unconditional epoch bump each, exactly
+    /// like the unbatched protocol — then hand the above-threshold entries
+    /// to [`Scheduler::insert_batch`], which the Multiqueue serves with a
+    /// single RNG draw + lock acquisition per call. Returns the number of
+    /// entries inserted.
+    ///
+    /// With the locality axis on, the batch is grouped by shard and
+    /// inserted one `insert_batch` call per shard group, so every entry
+    /// carries its own correct hint (splash and batch-drain callers
+    /// routinely mix shards in one batch). Hints stay advisory; quiescence
+    /// accounting (`before_insert`) stays per entry.
+    pub fn requeue_batch(&mut self, batch: &[(u32, f64)]) -> usize {
+        self.entry_buf.clear();
+        for &(task, prio) in batch {
+            let epoch = self.ts.bump(task);
+            if prio >= self.insert_threshold {
+                self.entry_buf.push(Entry { prio, task, epoch });
+            }
+        }
+        let n = self.entry_buf.len();
+        if n == 0 {
+            return 0;
+        }
+        for _ in 0..n {
+            self.term.before_insert();
+        }
+        self.counters.inserts += n as u64;
+        match self.partition {
+            None => {
+                self.sched.insert_batch(self.entry_buf.as_slice(), self.rng, None);
+                self.counters.insert_batches += 1;
+            }
+            Some(p) => {
+                // Group by shard (cheap O(1) table lookups as sort key;
+                // batches are out-set sized) and insert each group with
+                // its own hint.
+                self.entry_buf.sort_unstable_by_key(|en| p.shard_of(en.task));
+                let mut start = 0usize;
+                while start < n {
+                    let s = p.shard_of(self.entry_buf[start].task);
+                    let mut end = start + 1;
+                    while end < n && p.shard_of(self.entry_buf[end].task) == s {
+                        end += 1;
+                    }
+                    self.sched.insert_batch(&self.entry_buf[start..end], self.rng, Some(s));
+                    self.counters.insert_batches += 1;
+                    start = end;
+                }
+            }
+        }
+        n
     }
 
     /// Insert a fresh entry for `task` if `prio` reaches the threshold

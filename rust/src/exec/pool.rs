@@ -187,6 +187,7 @@ impl WorkerPool {
         {
             let mut rng = Xoshiro256::stream(self.seed, SEED_STREAM);
             let mut seed_counters = Counters::default();
+            let mut entry_buf = Vec::new();
             let mut ctx = ExecCtx::new(
                 sched,
                 &ts,
@@ -195,6 +196,7 @@ impl WorkerPool {
                 &mut seed_counters,
                 tuning.insert_threshold,
                 partition,
+                &mut entry_buf,
             );
             policy.seed(&mut ctx);
         }
@@ -231,6 +233,10 @@ impl WorkerPool {
                 let mut c = Counters::default();
                 let mut scratch = policy.make_scratch();
                 let mut claimed: Vec<u32> = Vec::with_capacity(tuning.batch);
+                let mut popped: Vec<crate::sched::Entry> = Vec::with_capacity(tuning.batch);
+                // Per-worker insertion buffer lent to each ExecCtx
+                // (requeue_batch): allocated once, reused every round.
+                let mut entry_buf: Vec<crate::sched::Entry> = Vec::new();
                 let mut since_flush: u64 = 0;
                 let mut idle_spins: u32 = 0;
                 // Home shards: shard s belongs to worker s mod threads, so
@@ -266,24 +272,30 @@ impl WorkerPool {
                         home_pos = home_pos.wrapping_add(1);
                     }
                     // ---- Drain up to `batch` valid, claimable tasks ----
+                    // Batched pops: one two-choice queue visit yields up to
+                    // `batch` entries (Multiqueue: one lock per visit); the
+                    // epoch-validate + claim protocol is per entry, exactly
+                    // as with single pops.
                     claimed.clear();
                     term.enter();
                     while claimed.len() < tuning.batch {
-                        match sched.pop_hint(&mut rng, home) {
-                            Some(ent) => {
-                                term.after_pop();
-                                c.pops += 1;
-                                if ent.epoch != ts.epoch(ent.task) {
-                                    c.stale_pops += 1;
-                                    continue;
-                                }
-                                if !ts.try_claim(ent.task, ent.epoch) {
-                                    c.claim_failures += 1;
-                                    continue;
-                                }
-                                claimed.push(ent.task);
+                        popped.clear();
+                        let want = tuning.batch - claimed.len();
+                        if sched.pop_batch(&mut rng, home, want, &mut popped) == 0 {
+                            break;
+                        }
+                        for ent in popped.drain(..) {
+                            term.after_pop();
+                            c.pops += 1;
+                            if ent.epoch != ts.epoch(ent.task) {
+                                c.stale_pops += 1;
+                                continue;
                             }
-                            None => break,
+                            if !ts.try_claim(ent.task, ent.epoch) {
+                                c.claim_failures += 1;
+                                continue;
+                            }
+                            claimed.push(ent.task);
                         }
                     }
 
@@ -299,6 +311,7 @@ impl WorkerPool {
                                     &mut c,
                                     tuning.insert_threshold,
                                     partition,
+                                    &mut entry_buf,
                                 );
                                 policy.verify_sweep(&mut ctx)
                             });
@@ -334,6 +347,7 @@ impl WorkerPool {
                             &mut c,
                             tuning.insert_threshold,
                             partition,
+                            &mut entry_buf,
                         );
                         policy.process(&claimed, &mut ctx, &mut scratch)
                     };

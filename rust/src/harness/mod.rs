@@ -57,6 +57,9 @@ pub struct Harness {
     /// Locality axis applied to every cell (the `locality` experiment
     /// additionally sweeps it per cell).
     pub partition: PartitionSpec,
+    /// Update-kernel axis applied to every cell (the `fused` experiment
+    /// additionally sweeps it per cell).
+    pub fused: bool,
     /// Traces recorded by [`Harness::run_cell`] since the last
     /// [`Harness::drain_traces`], keyed by cell id.
     pub trace_log: RefCell<Vec<(String, Trace)>>,
@@ -73,6 +76,7 @@ impl Default for Harness {
             time_limit: 120.0,
             use_pjrt: false,
             partition: PartitionSpec::Off,
+            fused: true,
             trace_log: RefCell::new(Vec::new()),
         }
     }
@@ -94,6 +98,7 @@ impl Harness {
         cfg.time_limit_secs = self.time_limit;
         cfg.use_pjrt = self.use_pjrt;
         cfg.partition = self.partition;
+        cfg.fused = self.fused;
         cfg
     }
 
@@ -129,21 +134,39 @@ impl Harness {
             threads,
             partition.label()
         );
-        let recorder = TraceRecorder::new(Duration::from_millis(TRACE_TICK_MS));
-        let rep = run_on_model_observed(&cfg, mrf.clone(), Some(&recorder))?;
         // Same id policy as the bench cells: off-axis ids keep their
-        // historical form so trace keys stay joinable across revisions.
-        let id = if partition.is_on() {
+        // historical form so trace keys stay joinable across revisions;
+        // a harness-wide fused-off axis marks its cells like bench does.
+        let mut id = if partition.is_on() {
             format!("{}/{}/p{}/{}", spec.name(), alg.name(), threads, partition.label())
         } else {
             format!("{}/{}/p{}", spec.name(), alg.name(), threads)
         };
+        if !self.fused {
+            id.push_str("/edgewise");
+        }
+        self.run_cell_with(mrf, spec, alg, cfg, id)
+    }
+
+    /// Shared cell runner: execute `cfg` on `mrf`, record the trace under
+    /// `id`, and package the [`Row`] — the single body behind every
+    /// `run_cell*` variant.
+    fn run_cell_with(
+        &self,
+        mrf: &Mrf,
+        spec: &ModelSpec,
+        alg: AlgorithmSpec,
+        cfg: RunConfig,
+        id: String,
+    ) -> Result<Row> {
+        let recorder = TraceRecorder::new(Duration::from_millis(TRACE_TICK_MS));
+        let rep = run_on_model_observed(&cfg, mrf.clone(), Some(&recorder))?;
         self.trace_log.borrow_mut().push((id, recorder.take()));
         let m = &rep.stats.metrics.total;
         Ok(Row {
             model: spec.name().to_string(),
             algorithm: alg.name(),
-            threads,
+            threads: cfg.threads,
             wall_secs: rep.stats.wall_secs,
             updates: m.updates,
             useful_updates: m.useful_updates,
@@ -643,6 +666,104 @@ impl Harness {
         Ok(rep)
     }
 
+    /// [`Harness::run_cell`] with an explicit update-kernel axis (used by
+    /// the `fused` experiment's on-vs-off sweep).
+    pub fn run_cell_fused(
+        &self,
+        mrf: &Mrf,
+        spec: &ModelSpec,
+        alg: AlgorithmSpec,
+        threads: usize,
+        fused: bool,
+    ) -> Result<Row> {
+        let mut cfg = self.cfg(spec, alg.clone(), threads);
+        cfg.fused = fused;
+        eprintln!(
+            "[harness] {} / {} / p={} / fused={} …",
+            spec.name(),
+            alg.name(),
+            threads,
+            if fused { "on" } else { "off" }
+        );
+        // Fused-on ids keep the historical form (joinable across
+        // revisions); edgewise cells carry the suffix, mirroring bench.
+        // The partition axis (inherited from the harness) keeps its own
+        // label so these ids never collide with partition-off cells.
+        let mut id = if self.partition.is_on() {
+            format!("{}/{}/p{}/{}", spec.name(), alg.name(), threads, self.partition.label())
+        } else {
+            format!("{}/{}/p{}", spec.name(), alg.name(), threads)
+        };
+        if !fused {
+            id.push_str("/edgewise");
+        }
+        self.run_cell_with(mrf, spec, alg, cfg, id)
+    }
+
+    /// Update-kernel A/B: relaxed residual with the node-centric fused
+    /// refresh on vs the edge-wise fan-out, on the high-degree workloads
+    /// (power-law hubs, LDPC constraints) where the per-node-touch cost is
+    /// O(deg²) without fusion. The speedup is measured, not asserted;
+    /// update counts confirm the schedule itself stays equivalent.
+    pub fn fused_ab(&self) -> Result<Report> {
+        let mut rep = Report::new(
+            "fused",
+            "Node-centric fused update kernel vs edge-wise refresh (kernel axis)",
+        );
+        self.standard_notes(&mut rep);
+        let pl = scaled(90_000, self.scale).max(200);
+        let ldpc = scaled(30_000, self.scale).max(24);
+        let specs = vec![
+            ModelSpec::PowerLaw { n: pl, m: 3 },
+            ModelSpec::Ldpc { n: ldpc, flip_prob: 0.07 },
+        ];
+        let mut md = String::from(
+            "| input | p | kernel | time (s) | updates | speedup vs edgewise |\n|---|---|---|---|---|---|\n",
+        );
+        for spec in &specs {
+            let mrf = builders::build(spec, self.seed);
+            for &p in &self.threads {
+                let mut edgewise_secs = None;
+                for fused in [false, true] {
+                    let row = self.run_cell_fused(
+                        &mrf,
+                        spec,
+                        AlgorithmSpec::RelaxedResidual,
+                        p,
+                        fused,
+                    )?;
+                    let speedup = match (fused, edgewise_secs) {
+                        (false, _) => {
+                            if row.converged {
+                                edgewise_secs = Some(row.wall_secs);
+                                "1.00×".to_string()
+                            } else {
+                                "—".into()
+                            }
+                        }
+                        (true, Some(base)) if row.converged => {
+                            format!("{:.2}×", base / row.wall_secs.max(1e-9))
+                        }
+                        _ => "—".into(),
+                    };
+                    md.push_str(&format!(
+                        "| {} | {p} | {} | {} | {} | {} |\n",
+                        spec.name(),
+                        if fused { "fused" } else { "edgewise" },
+                        if row.converged { format!("{:.3}", row.wall_secs) } else { "—".into() },
+                        row.updates,
+                        speedup,
+                    ));
+                    rep.push(row);
+                }
+            }
+        }
+        rep.add_table(format!("### Update-kernel axis: fused vs edgewise\n\n{md}"));
+        self.drain_traces(&mut rep);
+        rep.emit(&self.out_dir)?;
+        Ok(rep)
+    }
+
     /// Run everything.
     pub fn all(&self) -> Result<()> {
         self.tables_moderate()?;
@@ -655,6 +776,7 @@ impl Harness {
         }
         self.lemma2()?;
         self.locality()?;
+        self.fused_ab()?;
         Ok(())
     }
 

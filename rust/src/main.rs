@@ -15,7 +15,7 @@
 
 use anyhow::{anyhow, bail, Result};
 use relaxed_bp::cli::Args;
-use relaxed_bp::configio::{AlgorithmSpec, ModelSpec, PartitionSpec, RunConfig};
+use relaxed_bp::configio::{parse_on_off, AlgorithmSpec, ModelSpec, PartitionSpec, RunConfig};
 use relaxed_bp::harness::Harness;
 use relaxed_bp::model::{builders, io as model_io};
 use relaxed_bp::run::run_config;
@@ -97,6 +97,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(p) = args.opt("partition") {
         cfg.partition = PartitionSpec::parse_cli(p)?;
     }
+    if let Some(f) = args.opt("fused") {
+        cfg.fused = parse_on_off(f)?;
+    }
 
     let report = run_config(&cfg)?;
     let json = report.to_json();
@@ -147,6 +150,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     if let Some(p) = args.opt("partition") {
         h.partition = PartitionSpec::parse_cli(p)?;
     }
+    if let Some(f) = args.opt("fused") {
+        h.fused = parse_on_off(f)?;
+    }
 
     match which {
         "table1" | "table2" | "table5" | "table6" | "moderate" => {
@@ -181,6 +187,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         }
         "locality" => {
             h.locality()?;
+        }
+        "fused" => {
+            h.fused_ab()?;
         }
         "all" => h.all()?,
         other => bail!("unknown experiment '{other}'"),
@@ -296,12 +305,13 @@ USAGE:
   relaxed-bp run --model <kind:size> --algorithm <alg> [--threads N]
                  [--epsilon E] [--seed S] [--time-limit SECS] [--use-pjrt]
                  [--partition off|affine[:shards[:spill]]|bfs[:shards[:spill]]]
+                 [--fused on|off]
                  [--config cfg.json] [--out report.json] [--marginals]
   relaxed-bp experiment <id> [--scale F] [--threads 1,2,4,8]
                  [--max-threads N] [--out-dir DIR] [--seed S] [--use-pjrt]
-                 [--partition MODE]
+                 [--partition MODE] [--fused on|off]
       ids: table1 table3 table4 table7 fig2 fig4 fig5 fig6 fig7 lemma2
-           locality all
+           locality fused all
   relaxed-bp bench [--quick] [--families tree,ising,potts,ldpc,powerlaw]
                  [--threads 1,2] [--samples N] [--out-dir DIR] [--seed S]
                  [--time-limit SECS] [--tick-ms MS] [--tolerance X]
@@ -320,4 +330,9 @@ MODELS: tree:N ising:N potts:N ldpc:N[:flip] path:N adversarial_tree:N
 PARTITION MODES (the locality axis): off = flat arena + locality-blind
         Multiqueue (seed behavior); affine = contiguous task shards, sharded
         message arenas, shard-affine Multiqueue; bfs = shards clustered by
-        graph BFS order. shards defaults to the thread count, spill to 0.1.";
+        graph BFS order. shards defaults to the thread count, spill to 0.1.
+
+FUSED (the update-kernel axis): on (default) = node-centric fused refresh
+        (one O(deg) prefix/suffix pass per node touch) + batched scheduler
+        inserts; off = the historical edge-wise O(deg²) refresh fan-out,
+        kept for A/B measurement. bench records both axes per baseline.";

@@ -40,6 +40,8 @@ impl RunReport {
             ("claim_failures", Json::Num(m.claim_failures as f64)),
             ("rounds", Json::Num(m.rounds as f64)),
             ("splashes", Json::Num(m.splashes as f64)),
+            ("refreshes", Json::Num(m.refreshes as f64)),
+            ("insert_batches", Json::Num(m.insert_batches as f64)),
             (
                 "updates_per_sec",
                 Json::Num(if self.stats.wall_secs > 0.0 {

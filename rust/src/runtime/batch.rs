@@ -68,8 +68,9 @@ impl PjrtBatch {
         let mut psi = vec![0.0f64; w * 4];
         let mut cur = vec![0.5f64; w * 2];
         let mut buf = msg_buf();
+        let mut tmp = msg_buf();
         for (k, &e) in edges.iter().enumerate() {
-            let d = incoming_product(mrf, msgs, e, &mut buf);
+            let d = incoming_product(mrf, msgs, e, &mut buf, &mut tmp);
             debug_assert_eq!(d, 2);
             prod[2 * k] = buf[0];
             prod[2 * k + 1] = buf[1];

@@ -107,6 +107,44 @@ pub trait Scheduler: Send + Sync {
         let _ = shard;
         self.pop(rng)
     }
+
+    /// Insert a batch of entries that became schedulable together (e.g.
+    /// one node's refreshed out-edges). Semantically identical to calling
+    /// [`Scheduler::insert_hint`] once per entry — which is exactly what
+    /// the default does — but relaxed schedulers may amortize queue choice
+    /// and locking over the whole batch (the [`Multiqueue`] pays one RNG
+    /// draw + one lock acquisition per batch instead of per entry).
+    fn insert_batch(&self, entries: &[Entry], rng: &mut Xoshiro256, shard: Option<u32>) {
+        for &e in entries {
+            self.insert_hint(e, rng, shard);
+        }
+    }
+
+    /// Pop up to `max` entries into `out`; returns how many were popped.
+    /// Returning 0 carries the same meaning as [`Scheduler::pop`] →
+    /// `None`: every queue looked (momentarily) empty — the signal the
+    /// quiescence accounting relies on. The default delegates to
+    /// [`Scheduler::pop_hint`] per entry; the [`Multiqueue`] overrides it
+    /// to drain several entries per locked sub-queue visit.
+    fn pop_batch(
+        &self,
+        rng: &mut Xoshiro256,
+        shard: Option<u32>,
+        max: usize,
+        out: &mut Vec<Entry>,
+    ) -> usize {
+        let mut n = 0;
+        while n < max {
+            match self.pop_hint(rng, shard) {
+                Some(e) => {
+                    out.push(e);
+                    n += 1;
+                }
+                None => break,
+            }
+        }
+        n
+    }
 }
 
 /// Shard-affinity configuration handed to [`SchedChoice::build`] when the

@@ -27,6 +27,19 @@
 //! the local group empty still falls back to the global blocking sweep, so
 //! `pop → None` means the *whole* structure was momentarily empty exactly
 //! as in the blind mode (which the quiescence accounting relies on).
+//!
+//! ## Batched operations
+//!
+//! [`Scheduler::insert_batch`] places a whole batch (one node's refreshed
+//! out-edges, from the fused update kernel) on a single randomly chosen
+//! sub-queue — one RNG draw and one lock acquisition per batch instead of
+//! per entry. [`Scheduler::pop_batch`] performs the two-choice selection
+//! once and drains up to `max` entries under that one lock, falling back
+//! to the global blocking sweep on repeated failure so that a return of 0
+//! keeps meaning "momentarily empty". Both are pure amortizations: entry
+//! multisets, the epoch/claim protocol, and quiescence accounting are
+//! untouched; only the rank relaxation is slightly coarser (a batch
+//! shares one heap), the classic batched-MultiQueue trade.
 
 use super::{Entry, Scheduler};
 use crate::util::{AtomicF64, CachePadded, Xoshiro256};
@@ -120,12 +133,6 @@ impl Multiqueue {
     }
 
     #[inline]
-    fn push_locked(q: &SubQueue, heap: &mut BinaryHeap<Entry>, entry: Entry) {
-        heap.push(entry);
-        q.top.store(heap.peek().map_or(f64::NEG_INFINITY, |e| e.prio));
-    }
-
-    #[inline]
     fn pop_locked(q: &SubQueue, heap: &mut BinaryHeap<Entry>) -> Option<Entry> {
         let e = heap.pop();
         q.top.store(heap.peek().map_or(f64::NEG_INFINITY, |e| e.prio));
@@ -135,22 +142,37 @@ impl Multiqueue {
     /// Insert into a random queue of `[lo, hi)` (try-lock with random
     /// retry, then one blocking lock — no livelock).
     fn insert_in(&self, entry: Entry, rng: &mut Xoshiro256, lo: usize, hi: usize) {
+        self.insert_all_in(std::slice::from_ref(&entry), rng, lo, hi);
+    }
+
+    /// Insert a whole batch into ONE random queue of `[lo, hi)` — a single
+    /// RNG draw and a single lock acquisition amortized over the batch
+    /// (try-lock with random retry, then one blocking lock — no livelock).
+    fn insert_all_in(&self, entries: &[Entry], rng: &mut Xoshiro256, lo: usize, hi: usize) {
         let w = hi - lo;
         // Try-lock a few random queues; a busy queue means another thread is
         // mutating it, so go elsewhere instead of waiting.
         for _ in 0..self.insert_tries {
             let i = lo + rng.index(w);
             if let Ok(mut heap) = self.queues[i].heap.try_lock() {
-                Self::push_locked(&self.queues[i], &mut heap, entry);
-                self.len.fetch_add(1, Ordering::Relaxed);
+                Self::push_all_locked(&self.queues[i], &mut heap, entries);
+                self.len.fetch_add(entries.len(), Ordering::Relaxed);
                 return;
             }
         }
         // Fall back to blocking on one random queue (no livelock).
         let i = lo + rng.index(w);
         let mut heap = self.queues[i].heap.lock().unwrap();
-        Self::push_locked(&self.queues[i], &mut heap, entry);
-        self.len.fetch_add(1, Ordering::Relaxed);
+        Self::push_all_locked(&self.queues[i], &mut heap, entries);
+        self.len.fetch_add(entries.len(), Ordering::Relaxed);
+    }
+
+    #[inline]
+    fn push_all_locked(q: &SubQueue, heap: &mut BinaryHeap<Entry>, entries: &[Entry]) {
+        for &e in entries {
+            heap.push(e);
+        }
+        q.top.store(heap.peek().map_or(f64::NEG_INFINITY, |e| e.prio));
     }
 
     /// One two-choice pop attempt over `[lo, hi)`: compare the cached tops
@@ -235,6 +257,87 @@ impl Scheduler for Multiqueue {
         // Local group (momentarily) empty: steal globally so liveness and
         // the "None ⟺ all queues empty" contract match the blind mode.
         self.sweep_pop()
+    }
+
+    /// One RNG draw + one lock acquisition for the whole batch: every
+    /// entry lands on the same (randomly chosen, shard-hinted) sub-queue.
+    /// Concentrating one node's refreshed out-edges on one heap is the
+    /// batched-MultiQueue trade — slightly coarser rank guarantees for a
+    /// per-entry scheduler cost that no longer scales with node degree.
+    fn insert_batch(&self, entries: &[Entry], rng: &mut Xoshiro256, shard: Option<u32>) {
+        if entries.is_empty() {
+            return;
+        }
+        match (&self.affinity, shard) {
+            (Some(a), Some(s)) if !rng.bernoulli(a.spill) => {
+                let (lo, hi) = a.range(s);
+                self.insert_all_in(entries, rng, lo, hi);
+            }
+            _ => self.insert_all_in(entries, rng, 0, self.queues.len()),
+        }
+    }
+
+    /// Two-choice queue selection once per sub-queue visit, then drain up
+    /// to `max` entries under that single lock. Falls back to the global
+    /// blocking sweep exactly like [`Multiqueue::pop`], so a return of 0
+    /// still means the whole structure was momentarily empty.
+    fn pop_batch(
+        &self,
+        rng: &mut Xoshiro256,
+        shard: Option<u32>,
+        max: usize,
+        out: &mut Vec<Entry>,
+    ) -> usize {
+        if max == 0 {
+            return 0;
+        }
+        for _ in 0..4 {
+            let (lo, hi) = match (&self.affinity, shard) {
+                (Some(a), Some(s)) if !rng.bernoulli(a.spill) => a.range(s),
+                _ => (0, self.queues.len()),
+            };
+            let w = hi - lo;
+            let i = lo + rng.index(w);
+            let mut j = lo + rng.index(w);
+            if w > 1 {
+                while j == i {
+                    j = lo + rng.index(w);
+                }
+            }
+            let best = if self.queues[i].top.load() >= self.queues[j].top.load() { i } else { j };
+            if self.queues[best].top.load() == f64::NEG_INFINITY {
+                continue;
+            }
+            if let Ok(mut heap) = self.queues[best].heap.try_lock() {
+                let mut popped = 0;
+                while popped < max {
+                    match heap.pop() {
+                        Some(e) => {
+                            out.push(e);
+                            popped += 1;
+                        }
+                        None => break,
+                    }
+                }
+                self.queues[best]
+                    .top
+                    .store(heap.peek().map_or(f64::NEG_INFINITY, |e| e.prio));
+                if popped > 0 {
+                    self.len.fetch_sub(popped, Ordering::Relaxed);
+                    return popped;
+                }
+            }
+        }
+        // Repeated two-choice failure: one blocking sweep so that 0
+        // reliably means "(momentarily) empty", as the quiescence
+        // accounting requires.
+        match self.sweep_pop() {
+            Some(e) => {
+                out.push(e);
+                1
+            }
+            None => 0,
+        }
     }
 
     fn approx_len(&self) -> usize {
@@ -416,6 +519,112 @@ mod tests {
             popped += 1;
         }
         assert_eq!(popped, 100);
+    }
+
+    #[test]
+    fn batch_ops_preserve_multiset_blind() {
+        let q = Multiqueue::new(8);
+        let mut r = rng();
+        // Insert 300 entries in batches of 7.
+        let mut next = 0u32;
+        while next < 300 {
+            let batch: Vec<Entry> = (0..7.min(300 - next))
+                .map(|k| Entry { prio: r.next_f64(), task: next + k, epoch: 0 })
+                .collect();
+            next += batch.len() as u32;
+            q.insert_batch(&batch, &mut r, None);
+        }
+        assert_eq!(q.approx_len(), 300);
+        let mut seen = std::collections::HashSet::new();
+        let mut buf = Vec::new();
+        loop {
+            buf.clear();
+            let n = q.pop_batch(&mut r, None, 5, &mut buf);
+            assert_eq!(n, buf.len());
+            assert!(n <= 5, "pop_batch respects max");
+            if n == 0 {
+                break;
+            }
+            for e in &buf {
+                assert!(seen.insert(e.task), "duplicate {}", e.task);
+            }
+        }
+        assert_eq!(seen.len(), 300);
+        assert_eq!(q.approx_len(), 0);
+    }
+
+    #[test]
+    fn batch_ops_preserve_multiset_shard_affine() {
+        for spill in [0.0, 0.25, 1.0] {
+            let q = Multiqueue::shard_affine(2, 4, 4, spill);
+            let mut r = rng();
+            for b in 0..100u32 {
+                let batch: Vec<Entry> = (0..10)
+                    .map(|k| Entry { prio: r.next_f64(), task: b * 10 + k, epoch: 0 })
+                    .collect();
+                q.insert_batch(&batch, &mut r, Some(b % 4));
+            }
+            assert_eq!(q.approx_len(), 1000);
+            let mut seen = std::collections::HashSet::new();
+            let mut buf = Vec::new();
+            let mut home = 0u32;
+            loop {
+                buf.clear();
+                if q.pop_batch(&mut r, Some(home), 8, &mut buf) == 0 {
+                    break;
+                }
+                for e in &buf {
+                    assert!(seen.insert(e.task));
+                }
+                home = (home + 1) % 4;
+            }
+            assert_eq!(seen.len(), 1000, "spill={spill}");
+            assert_eq!(q.approx_len(), 0);
+        }
+    }
+
+    #[test]
+    fn pop_batch_single_queue_is_priority_ordered() {
+        // m=1: batched pops drain the lone heap in exact priority order.
+        let q = Multiqueue::new(1);
+        let mut r = rng();
+        let batch: Vec<Entry> = [0.2, 0.9, 0.5]
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| Entry { prio: p, task: i as u32, epoch: 0 })
+            .collect();
+        q.insert_batch(&batch, &mut r, None);
+        let mut buf = Vec::new();
+        assert_eq!(q.pop_batch(&mut r, None, 8, &mut buf), 3);
+        let prios: Vec<f64> = buf.iter().map(|e| e.prio).collect();
+        assert_eq!(prios, vec![0.9, 0.5, 0.2]);
+        assert_eq!(q.pop_batch(&mut r, None, 8, &mut buf), 0, "empty → 0");
+    }
+
+    #[test]
+    fn empty_insert_batch_is_noop() {
+        let q = Multiqueue::new(4);
+        let mut r = rng();
+        q.insert_batch(&[], &mut r, None);
+        assert_eq!(q.approx_len(), 0);
+        assert!(q.pop(&mut r).is_none());
+    }
+
+    #[test]
+    fn default_batch_impls_on_exact_queue() {
+        // ExactQueue uses the trait's default per-entry delegation.
+        use crate::sched::ExactQueue;
+        let q = ExactQueue::new();
+        let mut r = rng();
+        let batch: Vec<Entry> = (0..10)
+            .map(|t| Entry { prio: t as f64, task: t, epoch: 0 })
+            .collect();
+        q.insert_batch(&batch, &mut r, None);
+        let mut buf = Vec::new();
+        assert_eq!(q.pop_batch(&mut r, None, 4, &mut buf), 4);
+        let tasks: Vec<u32> = buf.iter().map(|e| e.task).collect();
+        assert_eq!(tasks, vec![9, 8, 7, 6], "exact queue pops best-first");
+        assert_eq!(q.pop_batch(&mut r, None, 100, &mut buf), 6);
     }
 
     #[test]

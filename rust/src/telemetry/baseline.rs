@@ -43,6 +43,11 @@ pub struct CellResult {
     /// Locality axis of the cell (`off`, `affine`, `affine_bfs`); cells
     /// from pre-partition baselines parse as `off`.
     pub partition: String,
+    /// Whether the node-centric fused update kernel was on for this cell
+    /// (`RunConfig::fused`); edgewise A/B cells carry the `/edgewise` id
+    /// suffix. Absent in pre-fused baselines ⇒ `true` is *not* assumed —
+    /// those cells predate the kernel, so they parse as `false`.
+    pub fused: bool,
     /// Per-sample wall-clock seconds.
     pub wall_secs: Vec<f64>,
     /// Per-sample committed update counts.
@@ -75,6 +80,7 @@ impl CellResult {
             ("scheduler", Json::Str(self.scheduler.clone())),
             ("threads", Json::Num(self.threads as f64)),
             ("partition", Json::Str(self.partition.clone())),
+            ("fused", Json::Bool(self.fused)),
             ("wall_secs", Json::Arr(self.wall_secs.iter().map(|&t| Json::Num(t)).collect())),
             ("updates", Json::Arr(self.updates.iter().map(|&u| Json::Num(u)).collect())),
             ("converged", Json::Bool(self.converged)),
@@ -118,6 +124,7 @@ impl CellResult {
                 .and_then(Json::as_str)
                 .unwrap_or("off")
                 .to_string(),
+            fused: v.get("fused").and_then(Json::as_bool).unwrap_or(false),
             wall_secs: arr("wall_secs")?,
             updates: arr("updates")?,
             converged: v
@@ -361,6 +368,7 @@ mod tests {
             scheduler: "multiqueue".into(),
             threads: 2,
             partition: "off".into(),
+            fused: true,
             wall_secs: vec![secs, secs * 1.05, secs * 0.95],
             updates: vec![1000.0, 1010.0, 990.0],
             converged: true,
@@ -374,6 +382,8 @@ mod tests {
                     claim_failures: 10,
                     pops: 1100,
                     inserts: 1100,
+                    refreshes: 3300,
+                    insert_batches: 1000,
                     max_priority: 1e-6,
                 }],
             },
@@ -416,6 +426,23 @@ mod tests {
         }
         let back = Baseline::from_json(&j).unwrap();
         assert_eq!(back.cells[0].partition, "off");
+        assert!(!compare(&b, &back, DEFAULT_TOLERANCE).unwrap().has_regression());
+    }
+
+    #[test]
+    fn pre_fused_cells_parse_as_edgewise() {
+        let b = baseline(vec![cell("relaxed_residual/p2", 0.5)]);
+        let mut j = b.to_json();
+        // Simulate a baseline written before the fused axis existed.
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Arr(cells)) = o.get_mut("cells") {
+                if let Json::Obj(c) = &mut cells[0] {
+                    c.remove("fused");
+                }
+            }
+        }
+        let back = Baseline::from_json(&j).unwrap();
+        assert!(!back.cells[0].fused, "pre-fused cells measured the edgewise kernel");
         assert!(!compare(&b, &back, DEFAULT_TOLERANCE).unwrap().has_regression());
     }
 

@@ -32,7 +32,8 @@
 //!   "cells": [
 //!     {
 //!       "id": "relaxed_residual/p2",    // comparator join key; affine
-//!                                       // cells append "/<partition>"
+//!                                       // cells append "/<partition>",
+//!                                       // fused-off cells "/edgewise"
 //!       "algorithm": "relaxed_residual",
 //!       "scheduler": "multiqueue",      // sequential | rounds | exact |
 //!                                       // multiqueue | random
@@ -40,6 +41,9 @@
 //!       "partition": "off",             // off | affine | affine_bfs —
 //!                                       // the locality axis (absent in
 //!                                       // pre-partition baselines ⇒ off)
+//!       "fused": true,                  // the update-kernel axis (absent
+//!                                       // in pre-fused baselines ⇒ false:
+//!                                       // those measured edge-wise)
 //!       "wall_secs": [0.012, 0.011],    // one entry per sample
 //!       "updates": [4100, 4080],
 //!       "converged": true,
@@ -49,8 +53,10 @@
 //!       "trace": [                      // last sample's convergence trace
 //!         { "t_secs": 0.004, "updates": 1500, "useful_updates": 1400,
 //!           "wasted_pops": 60, "stale_pops": 35, "claim_failures": 5,
-//!           "pops": 1600, "inserts": 1650, "max_priority": 0.8 },
-//!         …
+//!           "pops": 1600, "inserts": 1650, "refreshes": 4800,
+//!           "insert_batches": 1500, "max_priority": 0.8 },
+//!         …                             // refreshes / insert_batches
+//!                                       // absent in pre-fused files ⇒ 0
 //!       ]
 //!     }, …
 //!   ]
@@ -217,22 +223,27 @@ pub fn family_spec(family: &str, quick: bool) -> Result<ModelSpec> {
     })
 }
 
-/// The {engine × scheduler × threads × partition} cells swept per family:
-/// the sequential exact baseline, the exact concurrent PQ, the relaxed
-/// Multiqueue (once per locality axis in [`BenchOpts::partitions`]), and
-/// relaxed smart splash at the highest thread count.
-fn roster(opts: &BenchOpts) -> Vec<(AlgorithmSpec, usize, PartitionSpec)> {
-    let mut cells = vec![(AlgorithmSpec::SequentialResidual, 1, PartitionSpec::Off)];
+/// The {engine × scheduler × threads × partition × kernel} cells swept per
+/// family: the sequential exact baseline, the exact concurrent PQ, the
+/// relaxed Multiqueue (once per locality axis in [`BenchOpts::partitions`]),
+/// and relaxed smart splash at the highest thread count. The relaxed
+/// contenders are additionally measured once with the fused kernel off
+/// (`…/edgewise` cells) so every baseline records the fused-vs-edgewise
+/// A/B the kernel axis is judged by.
+fn roster(opts: &BenchOpts) -> Vec<(AlgorithmSpec, usize, PartitionSpec, bool)> {
+    let mut cells = vec![(AlgorithmSpec::SequentialResidual, 1, PartitionSpec::Off, true)];
     for &p in &opts.threads {
-        cells.push((AlgorithmSpec::CoarseGrained, p, PartitionSpec::Off));
+        cells.push((AlgorithmSpec::CoarseGrained, p, PartitionSpec::Off, true));
         for &part in &opts.partitions {
-            cells.push((AlgorithmSpec::RelaxedResidual, p, part));
+            cells.push((AlgorithmSpec::RelaxedResidual, p, part, true));
         }
+        cells.push((AlgorithmSpec::RelaxedResidual, p, PartitionSpec::Off, false));
     }
     if let Some(&max_p) = opts.threads.iter().max() {
         for &part in &opts.partitions {
-            cells.push((AlgorithmSpec::RelaxedSmartSplash { h: 2 }, max_p, part));
+            cells.push((AlgorithmSpec::RelaxedSmartSplash { h: 2 }, max_p, part, true));
         }
+        cells.push((AlgorithmSpec::RelaxedSmartSplash { h: 2 }, max_p, PartitionSpec::Off, false));
     }
     cells
 }
@@ -243,13 +254,17 @@ pub fn bench_family(family: &str, opts: &BenchOpts) -> Result<Baseline> {
     let mrf = builders::build(&spec, opts.seed);
     let recorder = TraceRecorder::new(Duration::from_millis(opts.tick_ms.max(1)));
     let mut cells = Vec::new();
-    for (alg, threads, partition) in roster(opts) {
-        // Cells with the axis off keep the historical id (comparable to
-        // pre-partition baselines); affine cells append the axis label.
-        let id = match partition {
+    for (alg, threads, partition, fused) in roster(opts) {
+        // Cells with both axes off keep the historical id (comparable to
+        // pre-partition baselines); affine cells append the partition
+        // label, edgewise (fused-off) cells the `/edgewise` suffix.
+        let mut id = match partition {
             PartitionSpec::Off => format!("{}/p{threads}", alg.name()),
             _ => format!("{}/p{threads}/{}", alg.name(), partition.label()),
         };
+        if !fused {
+            id.push_str("/edgewise");
+        }
         eprintln!("[bench] {family} / {id} …");
         let mut wall_secs = Vec::with_capacity(opts.samples);
         let mut updates = Vec::with_capacity(opts.samples);
@@ -259,7 +274,8 @@ pub fn bench_family(family: &str, opts: &BenchOpts) -> Result<Baseline> {
             let mut cfg = RunConfig::new(spec.clone(), alg.clone())
                 .with_threads(threads)
                 .with_seed(opts.seed)
-                .with_partition(partition);
+                .with_partition(partition)
+                .with_fused(fused);
             cfg.time_limit_secs = opts.time_limit;
             let rep = run_on_model_observed(&cfg, mrf.clone(), Some(&recorder))?;
             wall_secs.push(rep.stats.wall_secs);
@@ -273,6 +289,7 @@ pub fn bench_family(family: &str, opts: &BenchOpts) -> Result<Baseline> {
             scheduler: scheduler_kind(&alg).to_string(),
             threads,
             partition: partition.label().to_string(),
+            fused,
             wall_secs,
             updates,
             converged,
@@ -382,17 +399,18 @@ pub fn render_summary(b: &Baseline) -> String {
         if b.quick { ", quick" } else { "" }
     );
     s.push_str(
-        "| cell | scheduler | partition | median time | updates (median) | trace pts | converged |\n",
+        "| cell | scheduler | partition | kernel | median time | updates (median) | trace pts | converged |\n",
     );
-    s.push_str("|---|---|---|---|---|---|---|\n");
+    s.push_str("|---|---|---|---|---|---|---|---|\n");
     for c in &b.cells {
         let med = c.median_secs().unwrap_or(f64::NAN);
         let upd = crate::util::stats::Summary::of(&c.updates).map_or(0.0, |u| u.median);
         s.push_str(&format!(
-            "| {} | {} | {} | {} | {:.0} | {} | {} |\n",
+            "| {} | {} | {} | {} | {} | {:.0} | {} | {} |\n",
             c.id,
             c.scheduler,
             c.partition,
+            if c.fused { "fused" } else { "edgewise" },
             crate::util::fmt_duration(med),
             upd,
             c.trace.len(),
@@ -419,15 +437,23 @@ mod tests {
     fn roster_covers_contenders() {
         let opts = BenchOpts::quick();
         let cells = roster(&opts);
-        assert!(cells.iter().any(|(a, _, _)| *a == AlgorithmSpec::SequentialResidual));
+        assert!(cells.iter().any(|(a, _, _, _)| *a == AlgorithmSpec::SequentialResidual));
         assert!(cells
             .iter()
-            .any(|(a, p, _)| *a == AlgorithmSpec::RelaxedResidual && *p == 2));
-        assert!(cells.iter().any(|(a, _, _)| *a == AlgorithmSpec::CoarseGrained));
+            .any(|(a, p, _, _)| *a == AlgorithmSpec::RelaxedResidual && *p == 2));
+        assert!(cells.iter().any(|(a, _, _, _)| *a == AlgorithmSpec::CoarseGrained));
         // The locality axis is part of the default sweep.
         assert!(cells
             .iter()
-            .any(|(a, _, part)| *a == AlgorithmSpec::RelaxedResidual && part.is_on()));
+            .any(|(a, _, part, _)| *a == AlgorithmSpec::RelaxedResidual && part.is_on()));
+        // The kernel axis is part of the default sweep: every relaxed
+        // contender gets a fused-off (edgewise) A/B cell.
+        assert!(cells
+            .iter()
+            .any(|(a, _, _, fused)| *a == AlgorithmSpec::RelaxedResidual && !*fused));
+        assert!(cells
+            .iter()
+            .any(|(a, _, _, fused)| *a == AlgorithmSpec::RelaxedSmartSplash { h: 2 } && !*fused));
     }
 
     #[test]
@@ -436,7 +462,9 @@ mod tests {
         let cells = roster(&opts);
         let ids: std::collections::HashSet<String> = cells
             .iter()
-            .map(|(a, p, part)| format!("{}/p{p}/{}", a.name(), part.label()))
+            .map(|(a, p, part, fused)| {
+                format!("{}/p{p}/{}/{}", a.name(), part.label(), fused)
+            })
             .collect();
         assert_eq!(ids.len(), cells.len(), "no duplicate cells");
     }

@@ -35,6 +35,13 @@ pub struct TracePoint {
     pub pops: u64,
     /// Cumulative scheduler inserts.
     pub inserts: u64,
+    /// Cumulative lookahead refreshes on the processing path
+    /// (`refreshes / pops` ≈ the refresh fan-out per scheduler access —
+    /// the quantity the fused node kernel amortizes).
+    pub refreshes: u64,
+    /// Cumulative batched scheduler insert calls (mean insertion batch
+    /// size ≈ `inserts / insert_batches` on fused runs).
+    pub insert_batches: u64,
     /// Max task priority at sample time (≈ max residual; the convergence
     /// signal — a converged run ends below ε).
     pub max_priority: f64,
@@ -52,6 +59,8 @@ impl TracePoint {
             claim_failures: c.claim_failures,
             pops: c.pops,
             inserts: c.inserts,
+            refreshes: c.refreshes,
+            insert_batches: c.insert_batches,
             max_priority,
         }
     }
@@ -67,16 +76,21 @@ impl TracePoint {
             ("claim_failures", Json::Num(self.claim_failures as f64)),
             ("pops", Json::Num(self.pops as f64)),
             ("inserts", Json::Num(self.inserts as f64)),
+            ("refreshes", Json::Num(self.refreshes as f64)),
+            ("insert_batches", Json::Num(self.insert_batches as f64)),
             ("max_priority", Json::Num(self.max_priority)),
         ])
     }
 
-    /// Parse one `trace[]` element.
+    /// Parse one `trace[]` element. `refreshes` / `insert_batches` were
+    /// added by the fused-kernel schema extension and default to 0 when
+    /// absent (pre-fused baselines).
     pub fn from_json(v: &Json) -> Result<TracePoint> {
         let num =
             |k: &str| v.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("trace.{k} missing"));
         let int =
             |k: &str| v.get(k).and_then(Json::as_u64).ok_or_else(|| anyhow!("trace.{k} missing"));
+        let opt = |k: &str| v.get(k).and_then(Json::as_u64).unwrap_or(0);
         Ok(TracePoint {
             t_secs: num("t_secs")?,
             updates: int("updates")?,
@@ -86,6 +100,8 @@ impl TracePoint {
             claim_failures: int("claim_failures")?,
             pops: int("pops")?,
             inserts: int("inserts")?,
+            refreshes: opt("refreshes"),
+            insert_batches: opt("insert_batches"),
             max_priority: num("max_priority")?,
         })
     }
@@ -177,8 +193,24 @@ mod tests {
             claim_failures: 3,
             pops: updates + 6,
             inserts: updates + 1,
+            refreshes: updates * 3,
+            insert_batches: updates,
             max_priority: 0.5,
         }
+    }
+
+    #[test]
+    fn pre_fused_points_parse_with_zero_refresh_counters() {
+        // Baselines recorded before the fused-kernel counters existed.
+        let v = parse(
+            r#"[{"t_secs": 0.1, "updates": 10, "useful_updates": 9,
+                 "wasted_pops": 0, "stale_pops": 1, "claim_failures": 0,
+                 "pops": 11, "inserts": 12, "max_priority": 0.2}]"#,
+        )
+        .unwrap();
+        let t = Trace::from_json(&v).unwrap();
+        assert_eq!(t.points[0].refreshes, 0);
+        assert_eq!(t.points[0].insert_batches, 0);
     }
 
     #[test]

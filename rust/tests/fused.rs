@@ -1,0 +1,243 @@
+//! Property tests for the node-centric fused update kernel and the
+//! batched scheduler operations (PR 4):
+//!
+//! - the fused refresh path matches the edge-wise path to ≤ 1e-12 on
+//!   every model family (including transposed edge factors and the LDPC
+//!   zero-normalizer fallback);
+//! - fused engine runs share the edgewise fixed point and keep the
+//!   entry/epoch/claim pop-accounting identity across shard counts
+//!   {1, 2, 7, num_threads};
+//! - `insert_batch` / `pop_batch` preserve pop-accounting parity (every
+//!   successful pop is exactly one of stale / lost claim / processed).
+
+use relaxed_bp::bp::{
+    compute_message, fused_node_refresh, max_marginal_diff, msg_buf, Lookahead, Messages,
+    NodeScratch,
+};
+use relaxed_bp::configio::{AlgorithmSpec, ModelSpec, PartitionSpec, RunConfig};
+use relaxed_bp::engines::Engine;
+use relaxed_bp::model::builders;
+use relaxed_bp::run::{build_messages, run_config};
+use relaxed_bp::util::Xoshiro256;
+
+/// Every family in the roster, at property-test sizes. Covers binary
+/// grids (plain + transposed factor orientations), non-binary Potts,
+/// wide-domain LDPC (deterministic parity factors → exact zeros and the
+/// zero-normalizer fallback), trees, and power-law hubs.
+fn family_specs() -> Vec<ModelSpec> {
+    vec![
+        ModelSpec::Tree { n: 31 },
+        ModelSpec::Path { n: 8 },
+        ModelSpec::AdversarialTree { n: 36 },
+        ModelSpec::UniformTree { n: 40, arity: 3 },
+        ModelSpec::Ising { n: 5 },
+        ModelSpec::Potts { n: 4 },
+        ModelSpec::Ldpc { n: 24, flip_prob: 0.07 },
+        ModelSpec::PowerLaw { n: 80, m: 3 },
+    ]
+}
+
+/// Drive the message state away from uniform so excluded products are
+/// non-trivial: a few deterministic rounds of committed updates.
+fn churn(mrf: &relaxed_bp::model::Mrf, msgs: &Messages, rounds: usize) {
+    let mut out = msg_buf();
+    for _ in 0..rounds {
+        for e in 0..mrf.num_messages() as u32 {
+            let len = compute_message(mrf, msgs, e, &mut out);
+            msgs.write_msg(mrf, e, &out[..len]);
+        }
+    }
+}
+
+#[test]
+fn fused_kernel_matches_edgewise_on_every_family() {
+    for spec in family_specs() {
+        let mrf = builders::build(&spec, 17);
+        let msgs = Messages::uniform(&mrf);
+        churn(&mrf, &msgs, 2);
+        let mut sc = NodeScratch::new();
+        let mut expect = msg_buf();
+        for j in 0..mrf.num_nodes() as u32 {
+            let mut emitted = 0usize;
+            fused_node_refresh(&mrf, &msgs, j, None, &mut sc, |e, vals, _cur| {
+                emitted += 1;
+                let len = compute_message(&mrf, &msgs, e, &mut expect);
+                assert_eq!(len, vals.len(), "{spec:?} edge {e}");
+                for x in 0..len {
+                    assert!(
+                        (vals[x] - expect[x]).abs() <= 1e-12,
+                        "{spec:?} node {j} edge {e} x={x}: {} vs {}",
+                        vals[x],
+                        expect[x]
+                    );
+                }
+            });
+            assert_eq!(emitted, mrf.graph.degree(j as usize), "{spec:?} node {j}");
+        }
+    }
+}
+
+#[test]
+fn fused_lookahead_init_matches_edgewise_on_every_family() {
+    for spec in family_specs() {
+        let mrf = builders::build(&spec, 23);
+        let msgs = Messages::uniform(&mrf);
+        churn(&mrf, &msgs, 1);
+        let edgewise = Lookahead::init(&mrf, &msgs);
+        let fused = Lookahead::init_fused(&mrf, &msgs);
+        let mut pa = msg_buf();
+        let mut pb = msg_buf();
+        for e in 0..mrf.num_messages() as u32 {
+            assert!(
+                (edgewise.residual(e) - fused.residual(e)).abs() <= 1e-12,
+                "{spec:?} edge {e}: {} vs {}",
+                edgewise.residual(e),
+                fused.residual(e)
+            );
+            let la = edgewise.read_pending(&mrf, e, &mut pa);
+            let lb = fused.read_pending(&mrf, e, &mut pb);
+            assert_eq!(la, lb);
+            for x in 0..la {
+                assert!((pa[x] - pb[x]).abs() <= 1e-12, "{spec:?} edge {e} x={x}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_refresh_node_skip_preserves_untouched_pending() {
+    let mrf = builders::build(&ModelSpec::Ising { n: 4 }, 5);
+    let msgs = Messages::uniform(&mrf);
+    let la = Lookahead::init(&mrf, &msgs);
+    let e = 2u32;
+    let rev = mrf.graph.reverse(e);
+    let j = mrf.graph.edge_dst[e as usize];
+    let mut before = msg_buf();
+    la.read_pending(&mrf, rev, &mut before);
+    let res_before = la.residual(rev);
+    let mut sc = NodeScratch::new();
+    let mut batch = Vec::new();
+    la.refresh_node(&mrf, &msgs, j, Some(rev), &mut sc, &mut batch);
+    assert!(batch.iter().all(|&(k, _)| k != rev), "skipped edge not refreshed");
+    let mut after = msg_buf();
+    la.read_pending(&mrf, rev, &mut after);
+    assert_eq!(&before[..], &after[..], "skipped edge pending untouched");
+    assert_eq!(res_before, la.residual(rev));
+}
+
+/// Fused and edgewise runs of the same config land on the same fixed
+/// point, converge below ε, and both satisfy the pop-accounting identity
+/// `pops = stale_pops + claim_failures + updates` (every successful pop
+/// is exactly one of the three), across shard counts {1, 2, 7, threads}.
+#[test]
+fn fused_engine_parity_and_pop_accounting_across_shard_counts() {
+    let threads = 4usize;
+    for shards in [1usize, 2, 7, 0] {
+        // shards = 0 resolves to one shard per worker thread.
+        let partition = PartitionSpec::Affine { shards, spill: 0.1, bfs: false };
+        let mut marginals = Vec::new();
+        for fused in [false, true] {
+            let mut cfg = RunConfig::new(
+                ModelSpec::Ising { n: 5 },
+                AlgorithmSpec::RelaxedResidual,
+            )
+            .with_threads(threads)
+            .with_seed(31)
+            .with_partition(partition)
+            .with_fused(fused);
+            cfg.time_limit_secs = 60.0;
+            let rep = run_config(&cfg).unwrap();
+            assert!(rep.stats.converged, "shards={shards} fused={fused}");
+            assert!(
+                rep.stats.final_max_priority < cfg.epsilon,
+                "shards={shards} fused={fused}"
+            );
+            let m = &rep.stats.metrics.total;
+            assert_eq!(
+                m.pops,
+                m.stale_pops + m.claim_failures + m.updates,
+                "pop accounting, shards={shards} fused={fused}"
+            );
+            marginals.push(rep.marginals());
+        }
+        let diff = max_marginal_diff(&marginals[0], &marginals[1]);
+        assert!(diff < 1e-2, "shards={shards}: fused vs edgewise diff {diff}");
+    }
+}
+
+/// The batched engine (batch draining + fused node refresh) keeps the
+/// accounting identity and decodes LDPC.
+#[test]
+fn fused_batched_engine_pop_accounting_and_ldpc_decode() {
+    let inst = builders::ldpc::build(48, 0.05, 19);
+    let spec = ModelSpec::Ldpc { n: 48, flip_prob: 0.05 };
+    for fused in [false, true] {
+        let cfg = RunConfig::new(spec.clone(), AlgorithmSpec::RelaxedResidualBatched { batch: 8 })
+            .with_threads(2)
+            .with_seed(19)
+            .with_fused(fused);
+        let msgs = build_messages(&cfg, &inst.mrf);
+        let engine = relaxed_bp::engines::build_engine(&cfg.algorithm);
+        let stats = engine.run(&inst.mrf, &msgs, &cfg).unwrap();
+        assert!(stats.converged, "fused={fused}");
+        let m = &stats.metrics.total;
+        assert_eq!(m.pops, m.stale_pops + m.claim_failures + m.updates, "fused={fused}");
+        let bits = relaxed_bp::bp::decode_bits(&inst.mrf, &msgs, inst.num_vars);
+        assert_eq!(bits, inst.sent, "fused={fused}");
+    }
+}
+
+/// Splash's fused post-splash refresh preserves convergence and the
+/// node-residual fixed point.
+#[test]
+fn fused_splash_matches_edgewise_splash() {
+    let spec = ModelSpec::Ising { n: 4 };
+    let mut marginals = Vec::new();
+    for fused in [false, true] {
+        let cfg = RunConfig::new(spec.clone(), AlgorithmSpec::RelaxedSmartSplash { h: 2 })
+            .with_threads(2)
+            .with_seed(29)
+            .with_fused(fused);
+        let rep = run_config(&cfg).unwrap();
+        assert!(rep.stats.converged, "fused={fused}");
+        marginals.push(rep.marginals());
+    }
+    let diff = max_marginal_diff(&marginals[0], &marginals[1]);
+    assert!(diff < 1e-2, "fused vs edgewise splash diff {diff}");
+}
+
+/// Multiset preservation of the raw batched scheduler ops under hinted
+/// shard routing — the scheduler-level half of the accounting story.
+#[test]
+fn scheduler_batch_ops_parity_across_shard_counts() {
+    use relaxed_bp::sched::{Entry, Multiqueue, Scheduler};
+    for shards in [1usize, 2, 7, 4] {
+        let q = Multiqueue::shard_affine(4, 4, shards, 0.1);
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let n = 500u32;
+        let mut batch = Vec::new();
+        for t in 0..n {
+            batch.push(Entry { prio: rng.next_f64(), task: t, epoch: 0 });
+            if batch.len() == 6 || t + 1 == n {
+                q.insert_batch(&batch, &mut rng, Some(t % shards as u32));
+                batch.clear();
+            }
+        }
+        assert_eq!(q.approx_len(), n as usize);
+        let mut seen = std::collections::HashSet::new();
+        let mut buf = Vec::new();
+        let mut home = 0u32;
+        loop {
+            buf.clear();
+            if q.pop_batch(&mut rng, Some(home), 9, &mut buf) == 0 {
+                break;
+            }
+            for e in &buf {
+                assert!(seen.insert(e.task), "shards={shards} dup {}", e.task);
+            }
+            home = (home + 1) % shards as u32;
+        }
+        assert_eq!(seen.len(), n as usize, "shards={shards}");
+        assert_eq!(q.approx_len(), 0, "shards={shards}");
+    }
+}
