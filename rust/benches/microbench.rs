@@ -1,12 +1,17 @@
 //! `cargo bench --bench microbench` — component-level benchmarks feeding
 //! the §Perf analysis in EXPERIMENTS.md: scheduler op throughput, message
-//! update rate per model family, lookahead refresh cost, and PJRT call
-//! overhead (when artifacts exist). Each group reports markdown to stdout
-//! and CSV + JSON under `results/bench/`; full end-to-end sweeps with
-//! convergence traces are `relaxed-bp bench` (see the `telemetry` module).
+//! update rate per model family, the update-kernel axes (edgewise vs fused
+//! refresh shape, scalar vs SIMD data path), lookahead refresh cost, and
+//! PJRT call overhead (when artifacts exist). Each group reports markdown
+//! to stdout and CSV + JSON under `results/bench/`; full end-to-end sweeps
+//! with convergence traces are `relaxed-bp bench` (see the `telemetry`
+//! module).
 
 use relaxed_bp::benchlib::{BenchConfig, BenchGroup};
-use relaxed_bp::bp::{compute_message, fused_node_refresh, msg_buf, Lookahead, Messages, NodeScratch};
+use relaxed_bp::bp::{
+    compute_message_with, fused_node_refresh, msg_buf, Kernel, Lookahead, Messages, MsgScratch,
+    NodeScratch,
+};
 use relaxed_bp::configio::ModelSpec;
 use relaxed_bp::engines::batched::{BatchCompute, NativeBatch};
 use relaxed_bp::model::{builders, FactorPool, GraphBuilder, Mrf, NodeFactors};
@@ -74,45 +79,74 @@ fn star_mrf(deg: usize, dom: usize, seed: u64) -> Mrf {
 }
 
 fn main() {
-    // ---- Update kernel: edge-wise fan-out vs fused node refresh ----
+    // ---- Update kernel: edge-wise fan-out vs fused node refresh, with
+    // the scalar-vs-SIMD data path on the fused shape ----
     // One "node touch" = recompute every out-message of the center node.
     // Edge-wise pays one full gather per out-edge (O(deg²) message
     // reads); fused pays one prefix/suffix pass (O(deg)).
     let mut g = BenchGroup::new("update_kernel").with_config(cfg());
     let reps: usize = if quick() { 50 } else { 500 };
     for &deg in &[2usize, 8, 64] {
-        for &dom in &[2usize, 8] {
+        for &dom in &[2usize, 8, 32] {
             let mrf = star_mrf(deg, dom, 42);
             let msgs = Messages::uniform(&mrf);
-            let la = Lookahead::init(&mrf, &msgs);
+            let la = Lookahead::init(&mrf, &msgs, Kernel::Scalar);
+            let mut gather = MsgScratch::new();
             g.bench(&format!("edgewise/deg{deg}_dom{dom}"), || {
                 for _ in 0..reps {
                     for s in mrf.graph.slots(0) {
-                        la.refresh(&mrf, &msgs, mrf.graph.adj_out[s]);
+                        la.refresh(&mrf, &msgs, mrf.graph.adj_out[s], &mut gather);
                     }
                 }
                 (reps * deg) as f64
             });
-            let mut sc = NodeScratch::new();
-            let mut batch: Vec<(u32, f64)> = Vec::with_capacity(deg);
-            g.bench(&format!("fused/deg{deg}_dom{dom}"), || {
-                for _ in 0..reps {
-                    batch.clear();
-                    la.refresh_node(&mrf, &msgs, 0, None, &mut sc, &mut batch);
-                }
-                (reps * deg) as f64
-            });
+            for kernel in [Kernel::Scalar, Kernel::Simd] {
+                let la = Lookahead::init(&mrf, &msgs, kernel);
+                let mut sc = NodeScratch::new();
+                let mut batch: Vec<(u32, f64)> = Vec::with_capacity(deg);
+                g.bench(&format!("fused_{}/deg{deg}_dom{dom}", kernel.label()), || {
+                    for _ in 0..reps {
+                        batch.clear();
+                        la.refresh_node(&mrf, &msgs, 0, None, &mut sc, &mut batch);
+                    }
+                    (reps * deg) as f64
+                });
+            }
             // Raw kernel (no lookahead store): isolates the compute.
             let mut sc2 = NodeScratch::new();
             g.bench(&format!("fused_kernel_only/deg{deg}_dom{dom}"), || {
                 let mut sink = 0.0f64;
                 for _ in 0..reps {
-                    fused_node_refresh(&mrf, &msgs, 0, None, &mut sc2, |_, vals, _| {
+                    fused_node_refresh(&mrf, &msgs, 0, None, &mut sc2, Kernel::Simd, |_, vals, _| {
                         sink += vals[0];
                     });
                 }
                 assert!(sink.is_finite());
                 (reps * deg) as f64
+            });
+        }
+    }
+    g.report();
+
+    // ---- SIMD kernel group: scalar vs simd full sweeps on the
+    // wide-domain families (the data-path axis in isolation) ----
+    let mut g = BenchGroup::new("simd_kernel").with_config(cfg());
+    for spec in [
+        ModelSpec::Ldpc { n: if quick() { 120 } else { 3_000 }, flip_prob: 0.07 },
+        ModelSpec::Potts { n: if quick() { 8 } else { 40 }, q: 32 },
+        ModelSpec::Ising { n: if quick() { 16 } else { 100 } },
+    ] {
+        let mrf = builders::build(&spec, 1);
+        let msgs = Messages::uniform(&mrf);
+        let me = mrf.num_messages() as u32;
+        for kernel in [Kernel::Scalar, Kernel::Simd] {
+            let mut out = msg_buf();
+            let mut gather = MsgScratch::new();
+            g.bench(&format!("{}/{}_sweep_{me}", spec.name(), kernel.label()), || {
+                for e in 0..me {
+                    compute_message_with(&mrf, &msgs, e, &mut out, &mut gather, kernel);
+                }
+                me as f64
             });
         }
     }
@@ -138,8 +172,9 @@ fn main() {
         let me = mrf.num_messages() as u32;
         g.bench(&format!("{}/full_sweep_{me}", spec.name()), || {
             let mut out = msg_buf();
+            let mut gather = MsgScratch::new();
             for e in 0..me {
-                compute_message(&mrf, &msgs, e, &mut out);
+                compute_message_with(&mrf, &msgs, e, &mut out, &mut gather, Kernel::Simd);
             }
             me as f64
         });
@@ -150,17 +185,18 @@ fn main() {
     let mut g = BenchGroup::new("lookahead").with_config(cfg());
     let mrf = builders::build(&ModelSpec::Ising { n: 100 }, 1);
     let msgs = Messages::uniform(&mrf);
-    let la = Lookahead::init(&mrf, &msgs);
+    let la = Lookahead::init(&mrf, &msgs, Kernel::Simd);
     let me = mrf.num_messages() as u32;
+    let mut gather = MsgScratch::new();
     g.bench("ising100/refresh_sweep", || {
         for e in 0..me {
-            la.refresh(&mrf, &msgs, e);
+            la.refresh(&mrf, &msgs, e, &mut gather);
         }
         me as f64
     });
     g.report();
 
-    // ---- Batched backends: native vs PJRT ----
+    // ---- Batched backends: native (scalar + simd) vs PJRT ----
     let mut g = BenchGroup::new("batched_backends").with_config(cfg());
     let mrf = builders::build(&ModelSpec::Ising { n: 64 }, 1);
     let msgs = Messages::uniform(&mrf);
@@ -168,10 +204,13 @@ fn main() {
     let stride = mrf.max_domain();
     let mut out = vec![0.0; edges.len() * stride];
     let mut res = vec![0.0; edges.len()];
-    g.bench("native/1024", || {
-        NativeBatch.compute_batch(&mrf, &msgs, &edges, &mut out, &mut res);
-        edges.len() as f64
-    });
+    for kernel in [Kernel::Scalar, Kernel::Simd] {
+        let native = NativeBatch { kernel };
+        g.bench(&format!("native_{}/1024", kernel.label()), || {
+            native.compute_batch(&mrf, &msgs, &edges, &mut out, &mut res);
+            edges.len() as f64
+        });
+    }
     if artifacts_dir().join("batched_update_1024.hlo.txt").exists() {
         let pjrt = PjrtBatch::load_default(1024).expect("artifact");
         g.bench("pjrt/1024", || {

@@ -10,9 +10,18 @@
 //! (flat or sharded — see `bp::state`), so concurrent refreshes are benign
 //! races exactly like message writes, and a shard-local worker keeps its
 //! pending values as cache-hot as its live ones.
+//!
+//! The cache is bound to an update [`Kernel`] at construction
+//! (`RunConfig::kernel`): with [`Kernel::Scalar`] every refresh runs the
+//! historical per-element path bit-for-bit; with [`Kernel::Simd`] the
+//! refreshes run the lane-tiled data path with bulk message I/O, and the
+//! residual comes out of the kernel itself
+//! ([`MsgSource::residual_l2_against`]) instead of a separate
+//! read-current-then-`residual_l2` pass.
 
+use super::simd::Kernel;
 use super::state::{msg_buf, Messages, MsgSource};
-use super::update::{compute_message, fused_node_refresh, residual_l2, NodeScratch};
+use super::update::{compute_message_with, fused_node_refresh, MsgScratch, NodeScratch};
 use crate::model::Mrf;
 use crate::util::AtomicF64;
 
@@ -22,16 +31,19 @@ pub struct Lookahead {
     pending: Messages,
     /// `res(e) = ‖pending[e] − live[e]‖₂`, maintained on refresh/commit.
     residual: Vec<AtomicF64>,
+    /// The update kernel every refresh/commit of this cache runs.
+    kernel: Kernel,
 }
 
 impl Lookahead {
     /// Build the cache: compute `μ'` and the residual for every edge from
-    /// the current live state. The pending store adopts `live`'s arena
-    /// sharding.
-    pub fn init(mrf: &Mrf, live: &Messages) -> Self {
-        let la = Self::empty(mrf, live);
+    /// the current live state, through the edge-wise kernel. The pending
+    /// store adopts `live`'s arena sharding.
+    pub fn init(mrf: &Mrf, live: &Messages, kernel: Kernel) -> Self {
+        let la = Self::empty(mrf, live, kernel);
+        let mut scratch = MsgScratch::new();
         for e in 0..mrf.num_messages() as u32 {
-            la.refresh(mrf, live, e);
+            la.refresh(mrf, live, e, &mut scratch);
         }
         la
     }
@@ -41,8 +53,8 @@ impl Lookahead {
     /// exactly once (each edge has one source) in O(Σ deg·|D|) total work
     /// instead of O(Σ deg²·|D|). Values agree with [`Lookahead::init`] to
     /// ≤ 1e-12 (product-order rounding only).
-    pub fn init_fused(mrf: &Mrf, live: &Messages) -> Self {
-        let la = Self::empty(mrf, live);
+    pub fn init_fused(mrf: &Mrf, live: &Messages, kernel: Kernel) -> Self {
+        let la = Self::empty(mrf, live, kernel);
         let mut scratch = NodeScratch::new();
         let mut batch = Vec::new();
         for j in 0..mrf.num_nodes() as u32 {
@@ -53,11 +65,17 @@ impl Lookahead {
     }
 
     /// Allocate the pending store + residual table (all zero residuals).
-    fn empty(mrf: &Mrf, live: &Messages) -> Self {
+    fn empty(mrf: &Mrf, live: &Messages, kernel: Kernel) -> Self {
         let pending = Messages::uniform_like(mrf, live);
         let mut residual = Vec::with_capacity(mrf.num_messages());
         residual.resize_with(mrf.num_messages(), AtomicF64::default);
-        Lookahead { pending, residual }
+        Lookahead { pending, residual, kernel }
+    }
+
+    /// The update kernel this cache was bound to.
+    #[inline]
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
     }
 
     /// Current residual (priority) of edge `e`.
@@ -66,29 +84,28 @@ impl Lookahead {
         self.residual[e as usize].load()
     }
 
-    /// Recompute `μ'_e` from the live state; store it and its residual.
-    /// Returns the new residual.
-    pub fn refresh(&self, mrf: &Mrf, live: &Messages, e: u32) -> f64 {
+    /// Recompute `μ'_e` from the live state through the edge-wise kernel;
+    /// store it and its residual. `scratch` is the caller's per-worker
+    /// gather buffers (hot loops reuse one; see [`MsgScratch`]). Returns
+    /// the new residual.
+    pub fn refresh(&self, mrf: &Mrf, live: &Messages, e: u32, scratch: &mut MsgScratch) -> f64 {
         // Binary fast path: 2-wide stack buffers, no 64-wide zeroing
         // (memset was ~12% of baseline cycles; EXPERIMENTS.md §Perf).
         if mrf.msg_len(e) == 2 {
             let mut new = [0.0f64; 2];
-            compute_message(mrf, live, e, &mut new);
-            let mut cur = [0.0f64; 2];
-            live.read_msg(mrf, e, &mut cur);
-            let d0 = new[0] - cur[0];
-            let d1 = new[1] - cur[1];
-            let res = (d0 * d0 + d1 * d1).sqrt();
+            compute_message_with(mrf, live, e, &mut new, scratch, self.kernel);
+            let res = live.residual_l2_against(mrf, e, &new, self.kernel);
             self.pending.write_msg(mrf, e, &new);
             self.residual[e as usize].store(res);
             return res;
         }
         let mut new = msg_buf();
-        let len = compute_message(mrf, live, e, &mut new);
-        let mut cur = msg_buf();
-        live.read_msg(mrf, e, &mut cur);
-        let res = residual_l2(&new[..len], &cur[..len]);
-        self.pending.write_msg(mrf, e, &new);
+        let len = compute_message_with(mrf, live, e, &mut new, scratch, self.kernel);
+        let res = live.residual_l2_against(mrf, e, &new[..len], self.kernel);
+        match self.kernel {
+            Kernel::Scalar => self.pending.write_msg(mrf, e, &new[..len]),
+            Kernel::Simd => self.pending.write_msg_bulk(mrf, e, &new[..len]),
+        }
         self.residual[e as usize].store(res);
         res
     }
@@ -99,8 +116,10 @@ impl Lookahead {
     /// excludes the changed input and therefore cannot have moved) in one
     /// O(deg·|D|) pass via [`fused_node_refresh`] — the O(deg) replacement
     /// for calling [`Lookahead::refresh`] per affected edge, which costs
-    /// O(deg²) per node touch. Appends one `(edge, residual)` pair per
-    /// refreshed edge to `out` for the caller to requeue.
+    /// O(deg²) per node touch. The residual of each refreshed edge comes
+    /// out of the kernel itself (no second pass over the live value).
+    /// Appends one `(edge, residual)` pair per refreshed edge to `out` for
+    /// the caller to requeue.
     pub fn refresh_node(
         &self,
         mrf: &Mrf,
@@ -110,9 +129,12 @@ impl Lookahead {
         scratch: &mut NodeScratch,
         out: &mut Vec<(u32, f64)>,
     ) {
-        fused_node_refresh(mrf, live, j, skip, scratch, |e, vals, cur| {
-            let res = residual_l2(vals, cur);
-            self.pending.write_msg(mrf, e, vals);
+        let kernel = self.kernel;
+        fused_node_refresh(mrf, live, j, skip, scratch, kernel, |e, vals, res| {
+            match kernel {
+                Kernel::Scalar => self.pending.write_msg(mrf, e, vals),
+                Kernel::Simd => self.pending.write_msg_bulk(mrf, e, vals),
+            }
             self.residual[e as usize].store(res);
             out.push((e, res));
         });
@@ -132,8 +154,16 @@ impl Lookahead {
             live.write_msg(mrf, e, &val);
         } else {
             let mut val = msg_buf();
-            let len = self.pending.read_msg(mrf, e, &mut val);
-            live.write_msg(mrf, e, &val[..len]);
+            match self.kernel {
+                Kernel::Scalar => {
+                    let len = self.pending.read_msg(mrf, e, &mut val);
+                    live.write_msg(mrf, e, &val[..len]);
+                }
+                Kernel::Simd => {
+                    let len = self.pending.read_msg_bulk(mrf, e, &mut val);
+                    live.write_msg_bulk(mrf, e, &val[..len]);
+                }
+            }
         }
         self.residual[e as usize].store(0.0);
         res
@@ -181,7 +211,7 @@ mod tests {
         // push (priors elsewhere are uniform and factors are equality).
         let m = builders::build(&ModelSpec::Tree { n: 15 }, 1);
         let live = Messages::uniform(&m);
-        let la = Lookahead::init(&m, &live);
+        let la = Lookahead::init(&m, &live, Kernel::Scalar);
         for e in 0..m.num_messages() as u32 {
             let src = m.graph.edge_src[e as usize];
             let res = la.residual(e);
@@ -197,7 +227,7 @@ mod tests {
     fn commit_zeroes_residual_and_updates_live() {
         let m = builders::build(&ModelSpec::Path { n: 3 }, 1);
         let live = Messages::uniform(&m);
-        let la = Lookahead::init(&m, &live);
+        let la = Lookahead::init(&m, &live, Kernel::Scalar);
         assert!(la.residual(0) > 0.0);
         let res = la.commit(&m, &live, 0);
         assert!(res > 0.0);
@@ -211,7 +241,7 @@ mod tests {
     fn affected_edges_excludes_reverse() {
         let m = builders::build(&ModelSpec::Tree { n: 7 }, 1);
         let live = Messages::uniform(&m);
-        let la = Lookahead::init(&m, &live);
+        let la = Lookahead::init(&m, &live, Kernel::Simd);
         // Edge 0 is root→1. Affected edges are 1's out-edges except 1→root.
         let e = 0u32;
         let j = m.graph.edge_dst[0] as usize;
@@ -228,7 +258,8 @@ mod tests {
         // Commit root's edge, refresh affected, check the frontier advanced.
         let m = builders::build(&ModelSpec::Path { n: 4 }, 1);
         let live = Messages::uniform(&m);
-        let la = Lookahead::init(&m, &live);
+        let la = Lookahead::init(&m, &live, Kernel::Scalar);
+        let mut scratch = MsgScratch::new();
         let frontier: Vec<u32> = (0..m.num_messages() as u32)
             .filter(|&e| la.residual(e) > 1e-9)
             .collect();
@@ -236,7 +267,7 @@ mod tests {
         la.commit(&m, &live, 0);
         let affected: Vec<u32> = la.affected_edges(&m, 0).collect();
         for &k in &affected {
-            la.refresh(&m, &live, k);
+            la.refresh(&m, &live, k, &mut scratch);
         }
         let frontier2: Vec<u32> = (0..m.num_messages() as u32)
             .filter(|&e| la.residual(e) > 1e-9)
@@ -248,7 +279,8 @@ mod tests {
     fn max_residual_decreases_on_tree() {
         let m = builders::build(&ModelSpec::Tree { n: 7 }, 1);
         let live = Messages::uniform(&m);
-        let la = Lookahead::init(&m, &live);
+        let la = Lookahead::init(&m, &live, Kernel::Scalar);
+        let mut scratch = MsgScratch::new();
         // Run sequential residual to convergence by always committing max.
         let mut steps = 0;
         while la.max_residual() > 1e-9 {
@@ -258,7 +290,7 @@ mod tests {
             la.commit(&m, &live, e);
             let affected: Vec<u32> = la.affected_edges(&m, e).collect();
             for &k in &affected {
-                la.refresh(&m, &live, k);
+                la.refresh(&m, &live, k, &mut scratch);
             }
             steps += 1;
             assert!(steps < 100, "should converge quickly");
@@ -275,22 +307,27 @@ mod tests {
             ModelSpec::Ldpc { n: 24, flip_prob: 0.07 },
             ModelSpec::PowerLaw { n: 60, m: 3 },
         ] {
-            let m = builders::build(&spec, 9);
-            let live = Messages::uniform(&m);
-            let a = Lookahead::init(&m, &live);
-            let b = Lookahead::init_fused(&m, &live);
-            let mut pa = msg_buf();
-            let mut pb = msg_buf();
-            for e in 0..m.num_messages() as u32 {
-                assert!(
-                    (a.residual(e) - b.residual(e)).abs() <= 1e-12,
-                    "{spec:?} edge {e} residual"
-                );
-                let la = a.read_pending(&m, e, &mut pa);
-                let lb = b.read_pending(&m, e, &mut pb);
-                assert_eq!(la, lb);
-                for x in 0..la {
-                    assert!((pa[x] - pb[x]).abs() <= 1e-12, "{spec:?} edge {e} x={x}");
+            for kernel in [Kernel::Scalar, Kernel::Simd] {
+                let m = builders::build(&spec, 9);
+                let live = Messages::uniform(&m);
+                let a = Lookahead::init(&m, &live, kernel);
+                let b = Lookahead::init_fused(&m, &live, kernel);
+                let mut pa = msg_buf();
+                let mut pb = msg_buf();
+                for e in 0..m.num_messages() as u32 {
+                    assert!(
+                        (a.residual(e) - b.residual(e)).abs() <= 1e-12,
+                        "{spec:?} {kernel:?} edge {e} residual"
+                    );
+                    let la = a.read_pending(&m, e, &mut pa);
+                    let lb = b.read_pending(&m, e, &mut pb);
+                    assert_eq!(la, lb);
+                    for x in 0..la {
+                        assert!(
+                            (pa[x] - pb[x]).abs() <= 1e-12,
+                            "{spec:?} {kernel:?} edge {e} x={x}"
+                        );
+                    }
                 }
             }
         }
@@ -300,8 +337,9 @@ mod tests {
     fn refresh_node_matches_per_edge_refresh() {
         let m = builders::build(&ModelSpec::Ising { n: 4 }, 7);
         let live = Messages::uniform(&m);
-        let a = Lookahead::init(&m, &live);
-        let b = Lookahead::init(&m, &live);
+        let a = Lookahead::init(&m, &live, Kernel::Scalar);
+        let b = Lookahead::init(&m, &live, Kernel::Scalar);
+        let mut scratch = MsgScratch::new();
         // Commit one edge on both, then refresh its destination's out-set
         // per-edge on `a` and fused on `b`.
         let e = 0u32;
@@ -309,7 +347,7 @@ mod tests {
         // b shares `live`, so committing again writes the same value.
         b.commit(&m, &live, e);
         for k in a.affected_edges(&m, e) {
-            a.refresh(&m, &live, k);
+            a.refresh(&m, &live, k, &mut scratch);
         }
         let j = m.graph.edge_dst[e as usize];
         let mut sc = NodeScratch::new();
@@ -326,11 +364,31 @@ mod tests {
     fn store_pending_roundtrip() {
         let m = builders::build(&ModelSpec::Path { n: 3 }, 1);
         let live = Messages::uniform(&m);
-        let la = Lookahead::init(&m, &live);
+        let la = Lookahead::init(&m, &live, Kernel::Simd);
         la.store_pending(&m, 1, &[0.4, 0.6], 0.123);
         assert_eq!(la.residual(1), 0.123);
         let mut buf = msg_buf();
         la.read_pending(&m, 1, &mut buf);
         assert_eq!(&buf[..2], &[0.4, 0.6]);
+    }
+
+    #[test]
+    fn scalar_and_simd_caches_agree() {
+        let inst = builders::ldpc::build(24, 0.07, 4);
+        let m = &inst.mrf;
+        let live = Messages::uniform(m);
+        let a = Lookahead::init_fused(m, &live, Kernel::Scalar);
+        let b = Lookahead::init_fused(m, &live, Kernel::Simd);
+        let mut pa = msg_buf();
+        let mut pb = msg_buf();
+        for e in 0..m.num_messages() as u32 {
+            assert!((a.residual(e) - b.residual(e)).abs() <= 1e-12, "edge {e}");
+            let la = a.read_pending(m, e, &mut pa);
+            let lb = b.read_pending(m, e, &mut pb);
+            assert_eq!(la, lb);
+            for x in 0..la {
+                assert!((pa[x] - pb[x]).abs() <= 1e-12, "edge {e} x={x}");
+            }
+        }
     }
 }

@@ -1,0 +1,449 @@
+//! Lane-tiled f64 primitives behind the update-kernel axis
+//! (`RunConfig::kernel`).
+//!
+//! Every inner `|D|`-wide loop of the message data path (source-product
+//! accumulation, the edge-factor matrix apply, normalization, and the L2
+//! residual) is available in two implementations selected by [`Kernel`]:
+//!
+//! - [`Kernel::Scalar`] — the historical per-element loops, kept
+//!   bit-for-bit identical to the pre-SIMD code path. This is the A/B
+//!   reference: a `--kernel scalar` run reproduces the exact message
+//!   trajectory of the code before the vectorized data path landed.
+//! - [`Kernel::Simd`] — the functions in this module: fixed-width 4-lane
+//!   tiles written so LLVM reliably auto-vectorizes them (independent lane
+//!   accumulators, `chunks_exact`, no cross-lane dependencies), plus a
+//!   runtime-detected AVX2 path (`is_x86_feature_detected!`) using
+//!   `std::arch` intrinsics.
+//!
+//! The AVX2 variants use separate multiply and add (no FMA) and the same
+//! lane grouping as the portable tiles, so the two SIMD implementations
+//! produce **bit-identical** results — which machine ran the kernel never
+//! changes the numbers, only how fast they arrive. Versus the scalar
+//! kernel the tiled reductions reassociate the sums (4 independent lane
+//! accumulators combined pairwise at the end), so simd-vs-scalar values
+//! agree to ≤ 1e-12 relative on normalized messages, not bit-for-bit;
+//! `rust/tests/simd.rs` pins that bound across every model family.
+
+/// Number of f64 lanes per tile (one AVX2 vector). Exposed so the fused
+/// atomic-cell loops in `bp::state` tile with the same width.
+pub const LANES: usize = 4;
+
+/// Which inner-loop implementation the message kernels use — the
+/// update-kernel axis (`--kernel scalar|simd`, default `simd`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Kernel {
+    /// The historical per-element loops and per-cell message I/O —
+    /// bit-for-bit the pre-SIMD code path, kept as the A/B reference.
+    Scalar,
+    /// Lane-tiled arithmetic (portable tiles + runtime-detected AVX2),
+    /// bulk message I/O, and in-kernel residuals. The default.
+    #[default]
+    Simd,
+}
+
+impl Kernel {
+    /// Short label for reports, bench cell ids, and JSON (`scalar`/`simd`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Simd => "simd",
+        }
+    }
+
+    /// True for the vectorized kernel.
+    pub fn is_simd(&self) -> bool {
+        matches!(self, Kernel::Simd)
+    }
+}
+
+/// Runtime AVX2 detection. `is_x86_feature_detected!` caches the CPUID
+/// result in an atomic, so this is a relaxed load + test on the hot path.
+/// On non-x86 targets every call site is compiled out and the portable
+/// tiles run unconditionally.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn avx2() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+/// `acc[i] *= x[i]` — the source-product accumulation step.
+#[inline]
+pub fn mul_assign(acc: &mut [f64], x: &[f64]) {
+    // Hard slice (not just a debug assert): the AVX2 path reads through
+    // raw pointers, so a short `x` must panic here, never read past the
+    // end in release builds.
+    let x = &x[..acc.len()];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: avx2() verified the CPU supports the target
+            // feature, and both slices are exactly acc.len() long.
+            unsafe { mul_assign_avx2(acc, x) };
+            return;
+        }
+    }
+    mul_assign_tiled(acc, x);
+}
+
+#[inline]
+fn mul_assign_tiled(acc: &mut [f64], x: &[f64]) {
+    let n = acc.len();
+    let mut chunks = acc.chunks_exact_mut(LANES);
+    let mut xs = x[..n].chunks_exact(LANES);
+    for (a, b) in chunks.by_ref().zip(xs.by_ref()) {
+        for l in 0..LANES {
+            a[l] *= b[l];
+        }
+    }
+    for (a, b) in chunks.into_remainder().iter_mut().zip(xs.remainder()) {
+        *a *= b;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn mul_assign_avx2(acc: &mut [f64], x: &[f64]) {
+    use std::arch::x86_64::*;
+    let n = acc.len();
+    let mut k = 0;
+    while k + LANES <= n {
+        let a = _mm256_loadu_pd(acc.as_ptr().add(k));
+        let b = _mm256_loadu_pd(x.as_ptr().add(k));
+        _mm256_storeu_pd(acc.as_mut_ptr().add(k), _mm256_mul_pd(a, b));
+        k += LANES;
+    }
+    while k < n {
+        acc[k] *= x[k];
+        k += 1;
+    }
+}
+
+/// `out[i] = a[i] * b[i]` — the prefix-product step of the fused kernel.
+#[inline]
+pub fn mul_into(out: &mut [f64], a: &[f64], b: &[f64]) {
+    let n = out.len();
+    debug_assert!(a.len() >= n && b.len() >= n);
+    for ((o, x), y) in out.iter_mut().zip(&a[..n]).zip(&b[..n]) {
+        *o = x * y;
+    }
+}
+
+/// `out[i] += s * x[i]` — one row of the non-transposed factor apply.
+#[inline]
+pub fn axpy(out: &mut [f64], s: f64, x: &[f64]) {
+    // Hard slice: the AVX2 path must never read past a short `x`.
+    let x = &x[..out.len()];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: avx2() verified the CPU supports the target
+            // feature, and both slices are exactly out.len() long.
+            unsafe { axpy_avx2(out, s, x) };
+            return;
+        }
+    }
+    axpy_tiled(out, s, x);
+}
+
+#[inline]
+fn axpy_tiled(out: &mut [f64], s: f64, x: &[f64]) {
+    let n = out.len();
+    let mut chunks = out.chunks_exact_mut(LANES);
+    let mut xs = x[..n].chunks_exact(LANES);
+    for (o, b) in chunks.by_ref().zip(xs.by_ref()) {
+        for l in 0..LANES {
+            o[l] += s * b[l];
+        }
+    }
+    for (o, b) in chunks.into_remainder().iter_mut().zip(xs.remainder()) {
+        *o += s * b;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(out: &mut [f64], s: f64, x: &[f64]) {
+    use std::arch::x86_64::*;
+    let n = out.len();
+    let vs = _mm256_set1_pd(s);
+    let mut k = 0;
+    while k + LANES <= n {
+        let o = _mm256_loadu_pd(out.as_ptr().add(k));
+        let b = _mm256_loadu_pd(x.as_ptr().add(k));
+        // mul + add (no FMA) keeps results bit-identical to the tiles.
+        _mm256_storeu_pd(out.as_mut_ptr().add(k), _mm256_add_pd(o, _mm256_mul_pd(vs, b)));
+        k += LANES;
+    }
+    while k < n {
+        out[k] += s * x[k];
+        k += 1;
+    }
+}
+
+/// Combine one tile of lane accumulators + the scalar tail the way every
+/// reduction here does: pairwise over lanes, then the tail. Keeping this
+/// in one place — it is also what the fused atomic-cell reductions in
+/// `bp::state` use — guarantees every SIMD-kernel reduction in the crate
+/// shares one grouping, so the portable tiles, the AVX2 paths, and the
+/// in-kernel residuals agree bit-for-bit.
+#[inline]
+pub fn reduce(acc: [f64; LANES], tail: f64) -> f64 {
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
+}
+
+/// Dot product `Σ a[i]·b[i]` — one output row of the transposed factor
+/// apply.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    // Hard slice: the AVX2 path must never read past a short `b`.
+    let b = &b[..a.len()];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: avx2() verified the CPU supports the target
+            // feature, and both slices are exactly a.len() long.
+            return unsafe { dot_avx2(a, b) };
+        }
+    }
+    dot_tiled(a, b)
+}
+
+#[inline]
+fn dot_tiled(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len();
+    let mut acc = [0.0f64; LANES];
+    let mut chunks = a.chunks_exact(LANES);
+    let mut bs = b[..n].chunks_exact(LANES);
+    for (x, y) in chunks.by_ref().zip(bs.by_ref()) {
+        for l in 0..LANES {
+            acc[l] += x[l] * y[l];
+        }
+    }
+    let mut tail = 0.0;
+    for (x, y) in chunks.remainder().iter().zip(bs.remainder()) {
+        tail += x * y;
+    }
+    reduce(acc, tail)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_avx2(a: &[f64], b: &[f64]) -> f64 {
+    use std::arch::x86_64::*;
+    let n = a.len();
+    let mut vacc = _mm256_setzero_pd();
+    let mut k = 0;
+    while k + LANES <= n {
+        let x = _mm256_loadu_pd(a.as_ptr().add(k));
+        let y = _mm256_loadu_pd(b.as_ptr().add(k));
+        vacc = _mm256_add_pd(vacc, _mm256_mul_pd(x, y));
+        k += LANES;
+    }
+    let mut acc = [0.0f64; LANES];
+    _mm256_storeu_pd(acc.as_mut_ptr(), vacc);
+    let mut tail = 0.0;
+    while k < n {
+        tail += a[k] * b[k];
+        k += 1;
+    }
+    reduce(acc, tail)
+}
+
+/// Lane-tiled sum (the normalizer).
+#[inline]
+pub fn sum(v: &[f64]) -> f64 {
+    let mut acc = [0.0f64; LANES];
+    let mut chunks = v.chunks_exact(LANES);
+    for x in chunks.by_ref() {
+        for l in 0..LANES {
+            acc[l] += x[l];
+        }
+    }
+    let mut tail = 0.0;
+    for x in chunks.remainder() {
+        tail += x;
+    }
+    reduce(acc, tail)
+}
+
+/// `v[i] *= s` (the normalization scale).
+#[inline]
+pub fn scale(v: &mut [f64], s: f64) {
+    for x in v.iter_mut() {
+        *x *= s;
+    }
+}
+
+/// Sum of squared differences `Σ (a[i] − b[i])²` — the L2 residual before
+/// the square root.
+#[inline]
+pub fn sq_diff_sum(a: &[f64], b: &[f64]) -> f64 {
+    // Hard slice: the AVX2 path must never read past a short `b`.
+    let b = &b[..a.len()];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: avx2() verified the CPU supports the target
+            // feature, and both slices are exactly a.len() long.
+            return unsafe { sq_diff_sum_avx2(a, b) };
+        }
+    }
+    sq_diff_sum_tiled(a, b)
+}
+
+#[inline]
+fn sq_diff_sum_tiled(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len();
+    let mut acc = [0.0f64; LANES];
+    let mut chunks = a.chunks_exact(LANES);
+    let mut bs = b[..n].chunks_exact(LANES);
+    for (x, y) in chunks.by_ref().zip(bs.by_ref()) {
+        for l in 0..LANES {
+            let d = x[l] - y[l];
+            acc[l] += d * d;
+        }
+    }
+    let mut tail = 0.0;
+    for (x, y) in chunks.remainder().iter().zip(bs.remainder()) {
+        let d = x - y;
+        tail += d * d;
+    }
+    reduce(acc, tail)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn sq_diff_sum_avx2(a: &[f64], b: &[f64]) -> f64 {
+    use std::arch::x86_64::*;
+    let n = a.len();
+    let mut vacc = _mm256_setzero_pd();
+    let mut k = 0;
+    while k + LANES <= n {
+        let x = _mm256_loadu_pd(a.as_ptr().add(k));
+        let y = _mm256_loadu_pd(b.as_ptr().add(k));
+        let d = _mm256_sub_pd(x, y);
+        vacc = _mm256_add_pd(vacc, _mm256_mul_pd(d, d));
+        k += LANES;
+    }
+    let mut acc = [0.0f64; LANES];
+    _mm256_storeu_pd(acc.as_mut_ptr(), vacc);
+    let mut tail = 0.0;
+    while k < n {
+        let d = a[k] - b[k];
+        tail += d * d;
+        k += 1;
+    }
+    reduce(acc, tail)
+}
+
+/// Tiled normalize-to-sum-1 with the same uniform fallback convention as
+/// the scalar [`normalize`](crate::bp::update::normalize): a zero or
+/// non-finite normalizer (possible with deterministic factors) yields the
+/// uniform distribution.
+#[inline]
+pub fn normalize_simd(v: &mut [f64]) {
+    let s = sum(v);
+    if s > 0.0 && s.is_finite() {
+        scale(v, 1.0 / s);
+    } else {
+        let u = 1.0 / v.len() as f64;
+        v.fill(u);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(n: usize, salt: f64) -> Vec<f64> {
+        (0..n).map(|i| ((i as f64) * 0.37 + salt).sin().abs() + 0.01).collect()
+    }
+
+    #[test]
+    fn kernel_labels() {
+        assert_eq!(Kernel::Scalar.label(), "scalar");
+        assert_eq!(Kernel::Simd.label(), "simd");
+        assert_eq!(Kernel::default(), Kernel::Simd);
+        assert!(Kernel::Simd.is_simd() && !Kernel::Scalar.is_simd());
+    }
+
+    #[test]
+    fn mul_assign_matches_scalar() {
+        for n in [0, 1, 2, 3, 4, 5, 7, 8, 31, 32, 64] {
+            let mut a = seq(n, 0.1);
+            let b = seq(n, 0.9);
+            let expect: Vec<f64> = a.iter().zip(&b).map(|(x, y)| x * y).collect();
+            mul_assign(&mut a, &b);
+            assert_eq!(a, expect, "n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_matches_scalar_closely() {
+        for n in [1, 3, 4, 9, 32, 64] {
+            let a = seq(n, 0.2);
+            let b = seq(n, 0.8);
+            let expect: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let got = dot(&a, &b);
+            assert!((got - expect).abs() <= 1e-12 * expect.abs().max(1.0), "n={n}");
+        }
+    }
+
+    #[test]
+    fn tiled_and_dispatch_agree_bitwise() {
+        // Whatever backend dispatch picks (AVX2 when present), the result
+        // must be bit-identical to the portable tiles.
+        for n in [1, 4, 6, 32, 63] {
+            let a = seq(n, 0.3);
+            let b = seq(n, 0.7);
+            assert_eq!(dot(&a, &b).to_bits(), dot_tiled(&a, &b).to_bits(), "dot n={n}");
+            assert_eq!(
+                sq_diff_sum(&a, &b).to_bits(),
+                sq_diff_sum_tiled(&a, &b).to_bits(),
+                "sq_diff n={n}"
+            );
+            let mut x = a.clone();
+            let mut y = a.clone();
+            mul_assign(&mut x, &b);
+            mul_assign_tiled(&mut y, &b);
+            assert_eq!(x, y, "mul n={n}");
+            let mut x = a.clone();
+            let mut y = a.clone();
+            axpy(&mut x, 1.25, &b);
+            axpy_tiled(&mut y, 1.25, &b);
+            assert_eq!(x, y, "axpy n={n}");
+        }
+    }
+
+    #[test]
+    fn sq_diff_sum_basic() {
+        assert_eq!(sq_diff_sum(&[1.0, 0.0], &[0.0, 1.0]), 2.0);
+        assert_eq!(sq_diff_sum(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn normalize_simd_sums_to_one_and_falls_back() {
+        let mut v = seq(37, 0.4);
+        normalize_simd(&mut v);
+        assert!((sum(&v) - 1.0).abs() < 1e-12);
+        let mut z = vec![0.0; 5];
+        normalize_simd(&mut z);
+        assert_eq!(z, vec![0.2; 5]);
+        let mut nan = vec![f64::NAN, 1.0];
+        normalize_simd(&mut nan);
+        assert_eq!(nan, vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn exact_zeros_stay_exact() {
+        // Deterministic-factor zeros must survive the tiled products.
+        let mut a = vec![0.0, 2.0, 0.0, 3.0, 0.0, 4.0, 0.0, 5.0, 0.0];
+        let b = vec![7.0; 9];
+        mul_assign(&mut a, &b);
+        for (i, v) in a.iter().enumerate() {
+            if i % 2 == 0 {
+                assert_eq!(*v, 0.0, "lane {i}");
+            }
+        }
+    }
+}

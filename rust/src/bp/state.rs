@@ -22,6 +22,7 @@
 //! regardless of the arena sharding, so frozen state is interchangeable
 //! across layouts.
 
+use super::simd::{self, Kernel};
 use crate::model::{Mrf, Partition, MAX_DOMAIN};
 use crate::util::AtomicF64;
 
@@ -47,6 +48,43 @@ pub fn msg_buf() -> MsgBuf {
 pub trait MsgSource {
     /// Copy message `e` into `out[..len]`; returns `len`.
     fn read_msg(&self, mrf: &Mrf, e: u32, out: &mut [f64]) -> usize;
+
+    /// Bulk variant of [`MsgSource::read_msg`] used by the SIMD kernel:
+    /// implementations stream whole cache-line tiles instead of one
+    /// cell-index computation per element. Always returns the same values
+    /// as `read_msg` — only the access pattern differs — so the scalar
+    /// kernel keeps calling `read_msg` and stays bit-for-bit the pre-SIMD
+    /// path while the SIMD kernel reads through this.
+    #[inline]
+    fn read_msg_bulk(&self, mrf: &Mrf, e: u32, out: &mut [f64]) -> usize {
+        self.read_msg(mrf, e, out)
+    }
+
+    /// Zero-copy borrowed view of message `e`, when the source can hand
+    /// one out (plain snapshot slices can; the live atomic state cannot).
+    /// Lets the SIMD kernel's gather loops consume snapshot messages in
+    /// place instead of round-tripping through `MsgScratch::tmp`.
+    #[inline]
+    fn borrow_msg(&self, _mrf: &Mrf, _e: u32) -> Option<&[f64]> {
+        None
+    }
+
+    /// In-kernel L2 residual: `‖new − μ_e‖₂` computed in one pass over the
+    /// source's cells, without materializing the current value in a
+    /// caller buffer. The scalar kernel accumulates in exactly the order
+    /// of [`residual_l2`](crate::bp::update::residual_l2) over a fresh
+    /// read, so it is bit-for-bit the historical
+    /// read-then-`residual_l2` composition; the SIMD kernel uses the
+    /// lane-tiled reduction.
+    fn residual_l2_against(&self, mrf: &Mrf, e: u32, new: &[f64], kernel: Kernel) -> f64 {
+        let mut cur = msg_buf();
+        let len = self.read_msg(mrf, e, &mut cur);
+        debug_assert_eq!(len, new.len());
+        match kernel {
+            Kernel::Scalar => crate::bp::update::residual_l2(new, &cur[..len]),
+            Kernel::Simd => simd::sq_diff_sum(new, &cur[..len]).sqrt(),
+        }
+    }
 }
 
 /// Cells per 64-byte cache line (an [`AtomicF64`] is 8 bytes).
@@ -200,6 +238,87 @@ impl Messages {
         }
     }
 
+    /// Bulk [`Messages::write_msg`]: stores stream whole cache-line tiles
+    /// (one line lookup per 8 cells instead of one index computation per
+    /// cell). Identical stored values and relaxed ordering; used by the
+    /// SIMD kernel's write pass.
+    #[inline]
+    pub fn write_msg_bulk(&self, mrf: &Mrf, e: u32, vals: &[f64]) {
+        let len = mrf.msg_len(e);
+        debug_assert!(vals.len() >= len);
+        let shard = self.edge_shard[e as usize] as usize;
+        let off = self.edge_local[e as usize] as usize;
+        let arena = &self.arenas[shard];
+        let mut k = 0;
+        while k < len && (off + k) % CELLS_PER_LINE != 0 {
+            self.cell(shard, off + k).store(vals[k]);
+            k += 1;
+        }
+        while k + CELLS_PER_LINE <= len {
+            let line = &arena[(off + k) / CELLS_PER_LINE].0;
+            for (c, v) in line.iter().zip(&vals[k..k + CELLS_PER_LINE]) {
+                c.store(*v);
+            }
+            k += CELLS_PER_LINE;
+        }
+        while k < len {
+            self.cell(shard, off + k).store(vals[k]);
+            k += 1;
+        }
+    }
+
+    /// Fused write + residual: store `vals` into message `e` while
+    /// accumulating `‖vals − μ_e^{old}‖₂` against the value each cell held
+    /// just before its store — one pass over the cells instead of the
+    /// historical read-current / `residual_l2` / write triple. With
+    /// [`Kernel::Scalar`] the squared differences accumulate in the exact
+    /// sequential order of `residual_l2`, so the returned residual is
+    /// bit-for-bit the value the unfused triple computes; [`Kernel::Simd`]
+    /// uses the lane-tiled reduction. Returns the residual.
+    pub fn write_msg_residual(&self, mrf: &Mrf, e: u32, vals: &[f64], kernel: Kernel) -> f64 {
+        let len = mrf.msg_len(e);
+        debug_assert!(vals.len() >= len);
+        let shard = self.edge_shard[e as usize] as usize;
+        let off = self.edge_local[e as usize] as usize;
+        match kernel {
+            Kernel::Scalar => {
+                let mut acc = 0.0f64;
+                for k in 0..len {
+                    let cell = self.cell(shard, off + k);
+                    let d = vals[k] - cell.load();
+                    acc += d * d;
+                    cell.store(vals[k]);
+                }
+                acc.sqrt()
+            }
+            Kernel::Simd => {
+                // Same lane tiling + reduction grouping as
+                // `simd::sq_diff_sum`, so the fused form prices exactly
+                // like the unfused simd reference.
+                let mut acc = [0.0f64; simd::LANES];
+                let mut k = 0;
+                while k + simd::LANES <= len {
+                    for l in 0..simd::LANES {
+                        let cell = self.cell(shard, off + k + l);
+                        let d = vals[k + l] - cell.load();
+                        acc[l] += d * d;
+                        cell.store(vals[k + l]);
+                    }
+                    k += simd::LANES;
+                }
+                let mut tail = 0.0f64;
+                while k < len {
+                    let cell = self.cell(shard, off + k);
+                    let d = vals[k] - cell.load();
+                    tail += d * d;
+                    cell.store(vals[k]);
+                    k += 1;
+                }
+                simd::reduce(acc, tail).sqrt()
+            }
+        }
+    }
+
     /// Copy the full state into a plain vector in the flat `msg_offset`
     /// layout (for snapshots/tests) — identical across arena shardings.
     pub fn snapshot(&self) -> Vec<f64> {
@@ -252,6 +371,75 @@ impl MsgSource for Messages {
         }
         len
     }
+
+    /// Line-tiled bulk read: one arena-line lookup per 8 cells, with the
+    /// 8 relaxed loads of a full line unrolled (atomic loads never
+    /// auto-vectorize, so removing the per-cell index arithmetic and
+    /// bounds checks is where the win is). Same values as `read_msg`.
+    #[inline]
+    fn read_msg_bulk(&self, mrf: &Mrf, e: u32, out: &mut [f64]) -> usize {
+        let len = mrf.msg_len(e);
+        let shard = self.edge_shard[e as usize] as usize;
+        let off = self.edge_local[e as usize] as usize;
+        let arena = &self.arenas[shard];
+        let mut k = 0;
+        while k < len && (off + k) % CELLS_PER_LINE != 0 {
+            out[k] = self.cell(shard, off + k).load();
+            k += 1;
+        }
+        while k + CELLS_PER_LINE <= len {
+            let line = &arena[(off + k) / CELLS_PER_LINE].0;
+            for (o, c) in out[k..k + CELLS_PER_LINE].iter_mut().zip(line) {
+                *o = c.load();
+            }
+            k += CELLS_PER_LINE;
+        }
+        while k < len {
+            out[k] = self.cell(shard, off + k).load();
+            k += 1;
+        }
+        len
+    }
+
+    /// Single-pass residual against the live cells: no `cur` buffer, one
+    /// load per cell. Scalar accumulation order matches `residual_l2`
+    /// exactly (bit-for-bit); SIMD uses the 4-lane grouping.
+    fn residual_l2_against(&self, mrf: &Mrf, e: u32, new: &[f64], kernel: Kernel) -> f64 {
+        let len = mrf.msg_len(e);
+        debug_assert_eq!(len, new.len());
+        let shard = self.edge_shard[e as usize] as usize;
+        let off = self.edge_local[e as usize] as usize;
+        match kernel {
+            Kernel::Scalar => {
+                let mut acc = 0.0f64;
+                for k in 0..len {
+                    let d = new[k] - self.cell(shard, off + k).load();
+                    acc += d * d;
+                }
+                acc.sqrt()
+            }
+            Kernel::Simd => {
+                // Same lane tiling + reduction grouping as
+                // `simd::sq_diff_sum` (see `simd::reduce`).
+                let mut acc = [0.0f64; simd::LANES];
+                let mut k = 0;
+                while k + simd::LANES <= len {
+                    for l in 0..simd::LANES {
+                        let d = new[k + l] - self.cell(shard, off + k + l).load();
+                        acc[l] += d * d;
+                    }
+                    k += simd::LANES;
+                }
+                let mut tail = 0.0f64;
+                while k < len {
+                    let d = new[k] - self.cell(shard, off + k).load();
+                    tail += d * d;
+                    k += 1;
+                }
+                simd::reduce(acc, tail).sqrt()
+            }
+        }
+    }
 }
 
 /// A frozen snapshot (flat `Vec<f64>` in the `msg_offset` layout) is also
@@ -263,6 +451,26 @@ impl MsgSource for [f64] {
         let len = mrf.msg_len(e);
         out[..len].copy_from_slice(&self[off..off + len]);
         len
+    }
+
+    /// Snapshots hand out zero-copy views — the SIMD gather loops consume
+    /// them in place instead of copying through `MsgScratch::tmp`.
+    #[inline]
+    fn borrow_msg(&self, mrf: &Mrf, e: u32) -> Option<&[f64]> {
+        let off = mrf.msg_offset[e as usize] as usize;
+        let len = mrf.msg_len(e);
+        Some(&self[off..off + len])
+    }
+
+    fn residual_l2_against(&self, mrf: &Mrf, e: u32, new: &[f64], kernel: Kernel) -> f64 {
+        let off = mrf.msg_offset[e as usize] as usize;
+        let len = mrf.msg_len(e);
+        debug_assert_eq!(len, new.len());
+        let cur = &self[off..off + len];
+        match kernel {
+            Kernel::Scalar => crate::bp::update::residual_l2(new, cur),
+            Kernel::Simd => simd::sq_diff_sum(new, cur).sqrt(),
+        }
     }
 }
 
@@ -364,7 +572,7 @@ mod tests {
 
     #[test]
     fn sharded_snapshot_restores_into_flat() {
-        let m = builders::build(&ModelSpec::Potts { n: 3 }, 2);
+        let m = builders::build(&ModelSpec::Potts { n: 3, q: 3 }, 2);
         let p = Partition::bfs_edges(&m.graph, 3);
         let sharded = Messages::uniform_partitioned(&m, &p);
         sharded.write_msg(&m, 3, &[0.1, 0.2, 0.7]);

@@ -8,9 +8,9 @@
 //!
 //! Two kernels implement it:
 //!
-//! - [`compute_message`] — the **edge-wise** kernel: accumulate the product
-//!   vector `prod[x_i] = ψ_i(x_i) · Π μ_{k→i}(x_i)` over the incoming
-//!   messages, apply the edge-factor matrix, normalize to sum 1.
+//! - [`compute_message_with`] — the **edge-wise** kernel: accumulate the
+//!   product vector `prod[x_i] = ψ_i(x_i) · Π μ_{k→i}(x_i)` over the
+//!   incoming messages, apply the edge-factor matrix, normalize to sum 1.
 //! - [`fused_node_refresh`] — the **node-centric fused** kernel: compute
 //!   the *full* node product `ψ_j · Π_{l∈N(j)} μ_{l→j}` once, derive every
 //!   out-edge's excluded product via prefix/suffix products (no division,
@@ -20,6 +20,13 @@
 //!   on high-degree models (power-law hubs, LDPC constraints); see
 //!   DESIGN.md §Update kernels.
 //!
+//! Orthogonally to the edge-wise/fused choice, every inner `|D|`-wide loop
+//! runs under a [`Kernel`]: `Scalar` is the historical per-element path
+//! (bit-for-bit the pre-SIMD behavior, kept for A/B), `Simd` the
+//! lane-tiled data path (`bp::simd`) with bulk message I/O
+//! ([`MsgSource::read_msg_bulk`] / zero-copy [`MsgSource::borrow_msg`])
+//! and in-kernel residuals ([`MsgSource::residual_l2_against`]).
+//!
 //! A zero normalizer (possible with deterministic factors, e.g. LDPC
 //! parity indicators under conflicting evidence) falls back to the uniform
 //! distribution, matching libDAI's convention.
@@ -27,6 +34,7 @@
 //! The residual (paper Eq. 3) is the L2 distance between the current and
 //! recomputed message — the priority used by residual BP.
 
+use super::simd::{self, Kernel};
 use super::state::{msg_buf, MsgBuf, MsgSource};
 use crate::model::Mrf;
 
@@ -58,10 +66,11 @@ impl Default for MsgScratch {
 /// Compute `μ'_e` into `out[..len]`; returns `len`. Reads the incoming
 /// messages through `src` (live atomics or a snapshot).
 ///
-/// Convenience wrapper that allocates fresh scratch for the generic path;
-/// the binary fast path (checked first) never touches scratch, so binary
-/// models pay no per-call buffer zeroing here. Wide-domain hot loops
-/// should use [`compute_message_with`] with a per-worker [`MsgScratch`].
+/// **Test-only convenience wrapper**: allocates a fresh [`MsgScratch`] per
+/// call on the generic path and always runs the scalar kernel, so it is a
+/// convenient bit-stable reference in unit tests and nothing more. Every
+/// production caller goes through [`compute_message_with`] with a
+/// per-worker scratch and the run's configured [`Kernel`].
 pub fn compute_message<S: MsgSource + ?Sized>(
     mrf: &Mrf,
     src: &S,
@@ -70,33 +79,37 @@ pub fn compute_message<S: MsgSource + ?Sized>(
 ) -> usize {
     let i = mrf.graph.edge_src[e as usize] as usize;
     if mrf.msg_len(e) == 2 && mrf.domain[i] == 2 {
-        return binary_update(mrf, src, e, i, out);
+        return binary_update(mrf, src, e, i, out, Kernel::Scalar);
     }
     let mut scratch = MsgScratch::new();
-    compute_message_with(mrf, src, e, out, &mut scratch)
+    compute_message_with(mrf, src, e, out, &mut scratch, Kernel::Scalar)
 }
 
-/// [`compute_message`] with caller-provided gather buffers (no per-call
-/// MAX_DOMAIN-wide zeroing on the generic path).
+/// The edge-wise update kernel with caller-provided gather buffers (no
+/// per-call MAX_DOMAIN-wide zeroing on the generic path) and an explicit
+/// update [`Kernel`].
 pub fn compute_message_with<S: MsgSource + ?Sized>(
     mrf: &Mrf,
     src: &S,
     e: u32,
     out: &mut [f64],
     scratch: &mut MsgScratch,
+    kernel: Kernel,
 ) -> usize {
     let out_len = mrf.msg_len(e);
     let i = mrf.graph.edge_src[e as usize] as usize;
     if out_len == 2 && mrf.domain[i] == 2 {
-        return binary_update(mrf, src, e, i, out);
+        return binary_update(mrf, src, e, i, out, kernel);
     }
-    let d_i = incoming_product(mrf, src, e, &mut scratch.prod, &mut scratch.tmp);
-    apply_factor(mrf, e, &scratch.prod[..d_i], out)
+    let d_i = incoming_product(mrf, src, e, &mut scratch.prod, &mut scratch.tmp, kernel);
+    apply_factor(mrf, e, &scratch.prod[..d_i], out, kernel)
 }
 
 /// Fast path for binary↔binary messages (every edge in the tree / Ising /
 /// Potts / denoising models): fully unrolled gather + 2×2 matvec with no
 /// 64-wide scratch buffers. ~1.8× the generic path (EXPERIMENTS.md §Perf).
+/// Shared by both kernels — 2-wide vectors have no lanes to tile; the SIMD
+/// kernel only adds the zero-copy borrow path for snapshot sources.
 #[inline]
 fn binary_update<S: MsgSource + ?Sized>(
     mrf: &Mrf,
@@ -104,6 +117,7 @@ fn binary_update<S: MsgSource + ?Sized>(
     e: u32,
     i: usize,
     out: &mut [f64],
+    kernel: Kernel,
 ) -> usize {
     let nf = mrf.node_factors.of(i);
     let (mut p0, mut p1) = (nf[0], nf[1]);
@@ -113,6 +127,13 @@ fn binary_update<S: MsgSource + ?Sized>(
         let e_in = mrf.graph.adj_in[s];
         if e_in == rev {
             continue;
+        }
+        if kernel.is_simd() {
+            if let Some(v) = src.borrow_msg(mrf, e_in) {
+                p0 *= v[0];
+                p1 *= v[1];
+                continue;
+            }
         }
         src.read_msg(mrf, e_in, &mut b);
         p0 *= b[0];
@@ -147,9 +168,10 @@ fn binary_matvec(mrf: &Mrf, e: u32, p0: f64, p1: f64, out: &mut [f64]) {
 /// Apply edge `e`'s factor matrix to the gathered (excluded) source
 /// product `prod[..d_i]` and normalize:
 /// `out[x_j] ∝ Σ_{x_i} prod[x_i] · ψ(x_i, x_j)`. Returns `|D_dst(e)|`.
-/// Shared by the edge-wise and fused kernels.
+/// Shared by the edge-wise and fused kernels. The SIMD kernel runs the
+/// row accumulation / row dots / normalization as lane tiles.
 #[inline]
-fn apply_factor(mrf: &Mrf, e: u32, prod: &[f64], out: &mut [f64]) -> usize {
+fn apply_factor(mrf: &Mrf, e: u32, prod: &[f64], out: &mut [f64], kernel: Kernel) -> usize {
     let out_len = mrf.msg_len(e);
     let d_i = prod.len();
     let fr = mrf.edge_factor[e as usize];
@@ -162,22 +184,35 @@ fn apply_factor(mrf: &Mrf, e: u32, prod: &[f64], out: &mut [f64]) -> usize {
                 continue;
             }
             let row = &mat[xi * out_len..(xi + 1) * out_len];
-            for xj in 0..out_len {
-                out[xj] += p * row[xj];
+            match kernel {
+                Kernel::Scalar => {
+                    for xj in 0..out_len {
+                        out[xj] += p * row[xj];
+                    }
+                }
+                Kernel::Simd => simd::axpy(&mut out[..out_len], p, row),
             }
         }
     } else {
         // Stored as (d_j × d_i): out[xj] is a dot product with row xj.
         for xj in 0..out_len {
             let row = &mat[xj * d_i..(xj + 1) * d_i];
-            let mut acc = 0.0;
-            for xi in 0..d_i {
-                acc += prod[xi] * row[xi];
-            }
-            out[xj] = acc;
+            out[xj] = match kernel {
+                Kernel::Scalar => {
+                    let mut acc = 0.0;
+                    for xi in 0..d_i {
+                        acc += prod[xi] * row[xi];
+                    }
+                    acc
+                }
+                Kernel::Simd => simd::dot(prod, row),
+            };
         }
     }
-    normalize(&mut out[..out_len]);
+    match kernel {
+        Kernel::Scalar => normalize(&mut out[..out_len]),
+        Kernel::Simd => simd::normalize_simd(&mut out[..out_len]),
+    }
     out_len
 }
 
@@ -186,7 +221,9 @@ fn apply_factor(mrf: &Mrf, e: u32, prod: &[f64], out: &mut [f64]) -> usize {
 /// Returns `|D_i|`. Exposed separately so the PJRT batched backend can do
 /// the gather natively and ship only the dense matvec+normalize to the
 /// AOT kernel. `tmp` is the per-neighbor read buffer (caller-provided so
-/// hot loops reuse one allocation; see [`MsgScratch`]).
+/// hot loops reuse one allocation; see [`MsgScratch`]). The SIMD kernel
+/// reads each neighbor through [`MsgSource::read_msg_bulk`] — or borrows
+/// it zero-copy from snapshot sources — and multiplies in lane tiles.
 #[inline]
 pub fn incoming_product<S: MsgSource + ?Sized>(
     mrf: &Mrf,
@@ -194,6 +231,7 @@ pub fn incoming_product<S: MsgSource + ?Sized>(
     e: u32,
     prod: &mut [f64],
     tmp: &mut MsgBuf,
+    kernel: Kernel,
 ) -> usize {
     let i = mrf.graph.edge_src[e as usize] as usize;
     let d_i = mrf.domain[i] as usize;
@@ -204,10 +242,23 @@ pub fn incoming_product<S: MsgSource + ?Sized>(
         if e_in == rev {
             continue;
         }
-        let len = src.read_msg(mrf, e_in, tmp);
-        debug_assert_eq!(len, d_i);
-        for x in 0..d_i {
-            prod[x] *= tmp[x];
+        match kernel {
+            Kernel::Scalar => {
+                let len = src.read_msg(mrf, e_in, tmp);
+                debug_assert_eq!(len, d_i);
+                for x in 0..d_i {
+                    prod[x] *= tmp[x];
+                }
+            }
+            Kernel::Simd => {
+                if let Some(v) = src.borrow_msg(mrf, e_in) {
+                    simd::mul_assign(&mut prod[..d_i], v);
+                } else {
+                    let len = src.read_msg_bulk(mrf, e_in, tmp);
+                    debug_assert_eq!(len, d_i);
+                    simd::mul_assign(&mut prod[..d_i], &tmp[..d_i]);
+                }
+            }
         }
     }
     d_i
@@ -226,8 +277,6 @@ pub struct NodeScratch {
     suf: Vec<f64>,
     /// Output staging for one emitted message (`MAX_DOMAIN` entries).
     out: Vec<f64>,
-    /// Staging for the emitted edge's current live value (`MAX_DOMAIN`).
-    cur: Vec<f64>,
 }
 
 impl NodeScratch {
@@ -244,30 +293,34 @@ impl NodeScratch {
 /// `ψ_j · Π_{t≠s} μ_{in(t)}` with a prefix/suffix sweep (no division —
 /// exact zeros from deterministic factors stay exact), then apply each
 /// out-edge's factor matrix and normalize. Total work is O(deg·|D|) plus
-/// the matvecs, versus O(deg²·|D|) for per-edge [`compute_message`] over
-/// the same out-set, and each incoming message is read from the shared
-/// state exactly once.
+/// the matvecs, versus O(deg²·|D|) for per-edge [`compute_message_with`]
+/// over the same out-set, and each incoming message is read from the
+/// shared state exactly once.
 ///
-/// `emit(e, new, cur)` is called once per out-edge of `j` (slot order)
-/// with the normalized new message and the edge's *current* value read
-/// from `src` (residual computation needs both; reading it here lets the
-/// whole pass run on reusable scratch with zero per-call buffer zeroing)
-/// — except `skip`, typically the reverse of a just-committed edge
-/// `(i→j)`, whose recomputed value cannot have changed (it excludes the
-/// `i→j` input by definition).
+/// `emit(e, new, res)` is called once per out-edge of `j` (slot order)
+/// with the normalized new message and the **in-kernel residual**
+/// `res = ‖new − μ_e‖₂` against the edge's current value in `src`
+/// (computed via [`MsgSource::residual_l2_against`] in one pass over the
+/// source cells, so residual-priced engines never recompute or rebuffer a
+/// message purely to price it) — except `skip`, typically the reverse of
+/// a just-committed edge `(i→j)`, whose recomputed value cannot have
+/// changed (it excludes the `i→j` input by definition).
 ///
 /// The binary fast path (|D_j| = 2) runs the prefix/suffix sweep on
 /// scalars and keeps the unrolled 2×2 matvec of the edge-wise kernel.
+/// Under [`Kernel::Simd`] the gathers use bulk reads and the generic
+/// prefix/suffix/matvec loops run as lane tiles.
 pub fn fused_node_refresh<S, F>(
     mrf: &Mrf,
     src: &S,
     j: u32,
     skip: Option<u32>,
     scratch: &mut NodeScratch,
+    kernel: Kernel,
     mut emit: F,
 ) where
     S: MsgSource + ?Sized,
-    F: FnMut(u32, &[f64], &[f64]),
+    F: FnMut(u32, &[f64], f64),
 {
     let ju = j as usize;
     let d_j = mrf.domain[ju] as usize;
@@ -289,16 +342,20 @@ pub fn fused_node_refresh<S, F>(
     if out.len() < crate::model::MAX_DOMAIN {
         out.resize(crate::model::MAX_DOMAIN, 0.0);
     }
-    let cur = &mut scratch.cur;
-    if cur.len() < crate::model::MAX_DOMAIN {
-        cur.resize(crate::model::MAX_DOMAIN, 0.0);
-    }
 
     // Binary fast path: scalar prefix/suffix, unrolled 2×2 matvec.
     if d_j == 2 {
         let mut b = [0.0f64; 2];
         for (k, s) in slots.clone().enumerate() {
-            src.read_msg(mrf, mrf.graph.adj_in[s], &mut b);
+            let e_in = mrf.graph.adj_in[s];
+            if kernel.is_simd() {
+                if let Some(v) = src.borrow_msg(mrf, e_in) {
+                    inc[2 * k] = v[0];
+                    inc[2 * k + 1] = v[1];
+                    continue;
+                }
+            }
+            src.read_msg(mrf, e_in, &mut b);
             inc[2 * k] = b[0];
             inc[2 * k + 1] = b[1];
         }
@@ -327,11 +384,10 @@ pub fn fused_node_refresh<S, F>(
                 2
             } else {
                 // Binary source, wide destination (e.g. LDPC var→check).
-                apply_factor(mrf, e_out, &[q0, q1], out)
+                apply_factor(mrf, e_out, &[q0, q1], out, kernel)
             };
-            let cl = src.read_msg(mrf, e_out, cur);
-            debug_assert_eq!(cl, len);
-            emit(e_out, &out[..len], &cur[..len]);
+            let res = src.residual_l2_against(mrf, e_out, &out[..len], kernel);
+            emit(e_out, &out[..len], res);
         }
         return;
     }
@@ -342,22 +398,52 @@ pub fn fused_node_refresh<S, F>(
     suf.clear();
     suf.resize(d_j, 1.0);
     for (k, s) in slots.clone().enumerate() {
-        let len = src.read_msg(mrf, mrf.graph.adj_in[s], &mut inc[k * d_j..(k + 1) * d_j]);
+        let e_in = mrf.graph.adj_in[s];
+        let dst = &mut inc[k * d_j..(k + 1) * d_j];
+        let len = match kernel {
+            Kernel::Scalar => src.read_msg(mrf, e_in, dst),
+            Kernel::Simd => match src.borrow_msg(mrf, e_in) {
+                Some(v) => {
+                    dst.copy_from_slice(v);
+                    v.len()
+                }
+                None => src.read_msg_bulk(mrf, e_in, dst),
+            },
+        };
         debug_assert_eq!(len, d_j);
     }
     excl[..d_j].copy_from_slice(nf);
     for k in 1..deg {
-        for x in 0..d_j {
-            excl[k * d_j + x] = excl[(k - 1) * d_j + x] * inc[(k - 1) * d_j + x];
+        let (head, tail) = excl.split_at_mut(k * d_j);
+        let prev = &head[(k - 1) * d_j..];
+        let inc_prev = &inc[(k - 1) * d_j..k * d_j];
+        match kernel {
+            Kernel::Scalar => {
+                for x in 0..d_j {
+                    tail[x] = prev[x] * inc_prev[x];
+                }
+            }
+            Kernel::Simd => simd::mul_into(&mut tail[..d_j], prev, inc_prev),
         }
     }
     for k in (0..deg).rev() {
-        for x in 0..d_j {
-            excl[k * d_j + x] *= suf[x];
-        }
-        if k > 0 {
-            for x in 0..d_j {
-                suf[x] *= inc[k * d_j + x];
+        let ex = &mut excl[k * d_j..(k + 1) * d_j];
+        match kernel {
+            Kernel::Scalar => {
+                for x in 0..d_j {
+                    ex[x] *= suf[x];
+                }
+                if k > 0 {
+                    for x in 0..d_j {
+                        suf[x] *= inc[k * d_j + x];
+                    }
+                }
+            }
+            Kernel::Simd => {
+                simd::mul_assign(ex, suf);
+                if k > 0 {
+                    simd::mul_assign(suf, &inc[k * d_j..(k + 1) * d_j]);
+                }
             }
         }
     }
@@ -366,10 +452,9 @@ pub fn fused_node_refresh<S, F>(
         if skip == Some(e_out) {
             continue;
         }
-        let len = apply_factor(mrf, e_out, &excl[k * d_j..(k + 1) * d_j], out);
-        let cl = src.read_msg(mrf, e_out, cur);
-        debug_assert_eq!(cl, len);
-        emit(e_out, &out[..len], &cur[..len]);
+        let len = apply_factor(mrf, e_out, &excl[k * d_j..(k + 1) * d_j], out, kernel);
+        let res = src.residual_l2_against(mrf, e_out, &out[..len], kernel);
+        emit(e_out, &out[..len], res);
     }
 }
 
@@ -541,31 +626,40 @@ mod tests {
     }
 
     /// Fused refresh of a node must reproduce the edge-wise kernel on
-    /// every out-edge (≤ 1e-12; the product grouping differs by design).
+    /// every out-edge (≤ 1e-12; the product grouping differs by design),
+    /// and the emitted in-kernel residual must match the recomputed
+    /// residual against the live value. Checked for both update kernels.
     fn assert_fused_matches_edgewise(m: &crate::model::Mrf, msgs: &Messages) {
-        let mut sc = NodeScratch::new();
-        let mut expect = msg_buf();
-        let mut live_val = msg_buf();
-        for j in 0..m.num_nodes() as u32 {
-            let mut seen = 0usize;
-            fused_node_refresh(m, msgs, j, None, &mut sc, |e, vals, cur| {
-                seen += 1;
-                let len = compute_message(m, msgs, e, &mut expect);
-                assert_eq!(len, vals.len(), "edge {e}");
-                for x in 0..len {
+        for kernel in [Kernel::Scalar, Kernel::Simd] {
+            let mut sc = NodeScratch::new();
+            let mut expect = msg_buf();
+            let mut live_val = msg_buf();
+            for j in 0..m.num_nodes() as u32 {
+                let mut seen = 0usize;
+                fused_node_refresh(m, msgs, j, None, &mut sc, kernel, |e, vals, res| {
+                    seen += 1;
+                    let len = compute_message(m, msgs, e, &mut expect);
+                    assert_eq!(len, vals.len(), "edge {e}");
+                    for x in 0..len {
+                        assert!(
+                            (vals[x] - expect[x]).abs() <= 1e-12,
+                            "node {j} edge {e} x={x} ({kernel:?}): fused {} vs edgewise {}",
+                            vals[x],
+                            expect[x]
+                        );
+                    }
+                    // The emitted residual prices vals against the live
+                    // value, matching the recomputed reference.
+                    let ll = msgs.read_msg(m, e, &mut live_val);
+                    assert_eq!(ll, len);
+                    let want = residual_l2(vals, &live_val[..ll]);
                     assert!(
-                        (vals[x] - expect[x]).abs() <= 1e-12,
-                        "node {j} edge {e} x={x}: fused {} vs edgewise {}",
-                        vals[x],
-                        expect[x]
+                        (res - want).abs() <= 1e-12,
+                        "edge {e} ({kernel:?}) residual {res} vs {want}"
                     );
-                }
-                // The emitted cur is the edge's live value, bit for bit.
-                let ll = msgs.read_msg(m, e, &mut live_val);
-                assert_eq!(ll, cur.len());
-                assert_eq!(&live_val[..ll], cur, "edge {e} live value");
-            });
-            assert_eq!(seen, m.graph.degree(j as usize));
+                });
+                assert_eq!(seen, m.graph.degree(j as usize));
+            }
         }
     }
 
@@ -605,7 +699,9 @@ mod tests {
         let j = 1u32; // interior node
         let skip = m.graph.adj_out[m.graph.slots(1).next().unwrap()];
         let mut emitted = Vec::new();
-        fused_node_refresh(&m, &msgs, j, Some(skip), &mut sc, |e, _, _| emitted.push(e));
+        fused_node_refresh(&m, &msgs, j, Some(skip), &mut sc, Kernel::Scalar, |e, _, _| {
+            emitted.push(e)
+        });
         assert_eq!(emitted.len(), m.graph.degree(1) - 1);
         assert!(!emitted.contains(&skip));
     }
@@ -633,8 +729,33 @@ mod tests {
         let mut a = msg_buf();
         let mut b = msg_buf();
         for e in 0..m.num_messages() as u32 {
-            let la = compute_message_with(m, &msgs, e, &mut a, &mut scratch);
+            let la = compute_message_with(m, &msgs, e, &mut a, &mut scratch, Kernel::Scalar);
             let lb = compute_message(m, &msgs, e, &mut b);
+            assert_eq!(la, lb);
+            assert_eq!(&a[..la], &b[..lb], "edge {e}");
+        }
+    }
+
+    #[test]
+    fn scalar_kernel_is_bit_identical_to_wrapper() {
+        // The scalar kernel IS the historical code path: exact equality,
+        // not an epsilon, including through snapshot sources.
+        let inst = builders::ldpc::build(24, 0.07, 9);
+        let m = &inst.mrf;
+        let msgs = Messages::uniform(m);
+        let mut out = msg_buf();
+        for e in 0..m.num_messages() as u32 {
+            compute_message(m, &msgs, e, &mut out);
+            msgs.write_msg(m, e, &out);
+        }
+        let snap = msgs.snapshot();
+        let mut scratch = MsgScratch::new();
+        let mut a = msg_buf();
+        let mut b = msg_buf();
+        for e in 0..m.num_messages() as u32 {
+            let la =
+                compute_message_with(m, snap.as_slice(), e, &mut a, &mut scratch, Kernel::Scalar);
+            let lb = compute_message(m, snap.as_slice(), e, &mut b);
             assert_eq!(la, lb);
             assert_eq!(&a[..la], &b[..lb], "edge {e}");
         }

@@ -7,6 +7,8 @@ pub mod json;
 
 pub use json::{parse, Json, JsonError};
 
+pub use crate::bp::Kernel;
+
 use anyhow::{anyhow, bail, Context, Result};
 
 /// Which Markov random field to build.
@@ -17,8 +19,11 @@ pub enum ModelSpec {
     Tree { n: usize },
     /// Ising model on an `n×n` grid, α,β ~ U[-1,1] (paper §5.2).
     Ising { n: usize },
-    /// Potts-style model on an `n×n` grid, α,β ~ U[-2.5,2.5] (paper §5.2).
-    Potts { n: usize },
+    /// Potts-style model on an `n×n` grid with `q` states per node
+    /// (paper §5.2 uses q = 3), α,β ~ U[-2.5,2.5]. `q` ranges 2..=64
+    /// (`MAX_DOMAIN`); the wide-domain settings (e.g. `potts:40:32`) are
+    /// the SIMD kernel axis's natural workload besides LDPC.
+    Potts { n: usize, q: usize },
     /// (3,6)-LDPC decoding MRF with `n` variable nodes (n/2 constraints),
     /// BSC error probability `eps` (paper §5.2 uses 0.07).
     Ldpc { n: usize, flip_prob: f64 },
@@ -64,9 +69,10 @@ impl ModelSpec {
                 ("kind", Json::Str("ising".into())),
                 ("n", Json::Num(*n as f64)),
             ]),
-            ModelSpec::Potts { n } => Json::obj(vec![
+            ModelSpec::Potts { n, q } => Json::obj(vec![
                 ("kind", Json::Str("potts".into())),
                 ("n", Json::Num(*n as f64)),
+                ("q", Json::Num(*q as f64)),
             ]),
             ModelSpec::Ldpc { n, flip_prob } => Json::obj(vec![
                 ("kind", Json::Str("ldpc".into())),
@@ -107,7 +113,12 @@ impl ModelSpec {
         Ok(match kind {
             "tree" => ModelSpec::Tree { n },
             "ising" => ModelSpec::Ising { n },
-            "potts" => ModelSpec::Potts { n },
+            // Pre-q configs carry no "q" field: they described the fixed
+            // 3-state builder.
+            "potts" => ModelSpec::Potts {
+                n,
+                q: valid_potts_q(v.get("q").and_then(Json::as_usize).unwrap_or(3))?,
+            },
             "ldpc" => ModelSpec::Ldpc {
                 n,
                 flip_prob: v.get("flip_prob").and_then(Json::as_f64).unwrap_or(0.07),
@@ -138,7 +149,15 @@ impl ModelSpec {
         Ok(match kind {
             "tree" => ModelSpec::Tree { n },
             "ising" => ModelSpec::Ising { n },
-            "potts" => ModelSpec::Potts { n },
+            "potts" => {
+                let q = parts
+                    .get(2)
+                    .map(|p| p.parse())
+                    .transpose()
+                    .context("bad state count")?
+                    .unwrap_or(3);
+                ModelSpec::Potts { n, q: valid_potts_q(q)? }
+            }
             "ldpc" => ModelSpec::Ldpc {
                 n,
                 flip_prob: parts.get(2).map(|p| p.parse()).transpose()?.unwrap_or(0.07),
@@ -197,6 +216,29 @@ pub fn parse_on_off(s: &str) -> Result<bool> {
         "on" | "true" | "1" => Ok(true),
         "off" | "false" | "0" => Ok(false),
         other => bail!("expected on|off, got '{other}'"),
+    }
+}
+
+/// Parse the update-kernel axis value (`--kernel scalar|simd`).
+pub fn parse_kernel(s: &str) -> Result<Kernel> {
+    match s {
+        "scalar" => Ok(Kernel::Scalar),
+        "simd" => Ok(Kernel::Simd),
+        other => bail!("expected scalar|simd, got '{other}'"),
+    }
+}
+
+/// Reject Potts state counts outside 2..=MAX_DOMAIN at the config
+/// boundary (the builder also asserts, but a config error beats a panic
+/// mid-run, and recorded configs then always describe buildable models).
+fn valid_potts_q(q: usize) -> Result<usize> {
+    if (2..=crate::model::MAX_DOMAIN).contains(&q) {
+        Ok(q)
+    } else {
+        bail!(
+            "potts state count must be in 2..={}, got {q}",
+            crate::model::MAX_DOMAIN
+        )
     }
 }
 
@@ -445,13 +487,19 @@ pub struct RunConfig {
     pub use_pjrt: bool,
     /// Locality axis: graph partitioning + shard-affine scheduling.
     pub partition: PartitionSpec,
-    /// Update-kernel axis: `true` (default) uses the node-centric fused
-    /// refresh kernel (O(deg) per node touch, prefix/suffix excluded
+    /// Update-kernel *shape* axis: `true` (default) uses the node-centric
+    /// fused refresh kernel (O(deg) per node touch, prefix/suffix excluded
     /// products) plus batched scheduler inserts; `false` forces the
     /// historical edge-wise refresh fan-out (O(deg²) per node touch) for
     /// A/B measurement. Both compute the same update rule; values agree
     /// to ≤ 1e-12 (product-order rounding only).
     pub fused: bool,
+    /// Update-kernel *data-path* axis (`--kernel scalar|simd`): `Simd`
+    /// (default) runs the lane-tiled inner loops with bulk message I/O and
+    /// in-kernel residuals; `Scalar` runs the historical per-element path,
+    /// whose message trajectory is bit-for-bit the pre-SIMD code. Values
+    /// agree to ≤ 1e-12 (reduction-order rounding only).
+    pub kernel: Kernel,
 }
 
 impl RunConfig {
@@ -478,6 +526,7 @@ impl RunConfig {
             use_pjrt: false,
             partition: PartitionSpec::Off,
             fused: true,
+            kernel: Kernel::Simd,
         }
     }
 
@@ -517,6 +566,12 @@ impl RunConfig {
         self
     }
 
+    /// Set the data-path kernel axis (lane-tiled SIMD vs scalar).
+    pub fn with_kernel(mut self, kernel: Kernel) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
     /// Serialize as a JSON object.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -531,6 +586,7 @@ impl RunConfig {
             ("use_pjrt", Json::Bool(self.use_pjrt)),
             ("partition", self.partition.to_json()),
             ("fused", Json::Bool(self.fused)),
+            ("kernel", Json::Str(self.kernel.label().into())),
         ])
     }
 
@@ -571,6 +627,14 @@ impl RunConfig {
             cfg.fused = f
                 .as_bool()
                 .ok_or_else(|| anyhow!("fused must be a boolean (true|false)"))?;
+        }
+        if let Some(k) = v.get("kernel") {
+            // Configs written before the kernel axis parse with the simd
+            // default; a present-but-malformed value is an error.
+            cfg.kernel = parse_kernel(
+                k.as_str()
+                    .ok_or_else(|| anyhow!("kernel must be a string (scalar|simd)"))?,
+            )?;
         }
         Ok(cfg)
     }
@@ -716,6 +780,49 @@ mod tests {
         assert_eq!(m.name(), "powerlaw");
         let back = ModelSpec::from_json(&m.to_json()).unwrap();
         assert_eq!(back, m);
+    }
+
+    #[test]
+    fn potts_q_cli_and_json() {
+        // Plain potts:n keeps the paper's 3-state builder.
+        let m = ModelSpec::parse_cli("potts:40").unwrap();
+        assert_eq!(m, ModelSpec::Potts { n: 40, q: 3 });
+        let m = ModelSpec::parse_cli("potts:40:32").unwrap();
+        assert_eq!(m, ModelSpec::Potts { n: 40, q: 32 });
+        let back = ModelSpec::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+        // Pre-q JSON (no "q" field) parses as the 3-state model.
+        let legacy = r#"{"kind": "potts", "n": 7}"#;
+        let m = ModelSpec::from_json(&parse(legacy).unwrap()).unwrap();
+        assert_eq!(m, ModelSpec::Potts { n: 7, q: 3 });
+        // Out-of-range q is a config error, not a mid-run builder panic.
+        assert!(ModelSpec::parse_cli("potts:40:1").is_err());
+        assert!(ModelSpec::parse_cli("potts:40:65").is_err());
+        let bad = r#"{"kind": "potts", "n": 7, "q": 65}"#;
+        assert!(ModelSpec::from_json(&parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn kernel_axis_roundtrip_and_back_compat() {
+        let cfg = RunConfig::new(ModelSpec::Ising { n: 6 }, AlgorithmSpec::RelaxedResidual)
+            .with_kernel(Kernel::Scalar);
+        let j = cfg.to_json().to_string_pretty();
+        let back = RunConfig::from_json(&parse(&j).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+        assert_eq!(back.kernel, Kernel::Scalar);
+        // Configs written before the kernel axis parse with the default.
+        let legacy = r#"{"model": {"kind": "ising", "n": 5}, "algorithm": "rr"}"#;
+        let cfg = RunConfig::from_json(&parse(legacy).unwrap()).unwrap();
+        assert_eq!(cfg.kernel, Kernel::Simd);
+        // CLI values.
+        assert_eq!(parse_kernel("simd").unwrap(), Kernel::Simd);
+        assert_eq!(parse_kernel("scalar").unwrap(), Kernel::Scalar);
+        assert!(parse_kernel("avx9000").is_err());
+        // A malformed kernel value is an error, not a silent default.
+        let bad = r#"{"model": {"kind": "ising", "n": 5}, "algorithm": "rr", "kernel": true}"#;
+        assert!(RunConfig::from_json(&parse(bad).unwrap()).is_err());
+        let bad = r#"{"model": {"kind": "ising", "n": 5}, "algorithm": "rr", "kernel": "wat"}"#;
+        assert!(RunConfig::from_json(&parse(bad).unwrap()).is_err());
     }
 
     #[test]

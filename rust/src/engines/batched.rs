@@ -23,8 +23,7 @@
 
 use super::{Engine, EngineStats};
 use crate::bp::{
-    compute_message_with, msg_buf, residual_l2, Lookahead, Messages, MsgScratch, MsgSource,
-    NodeScratch,
+    compute_message_with, Kernel, Lookahead, Messages, MsgScratch, MsgSource, NodeScratch,
 };
 use crate::configio::RunConfig;
 use crate::exec::{ExecCtx, TaskPolicy, WorkerPool};
@@ -51,8 +50,11 @@ pub trait BatchCompute: Sync {
     fn name(&self) -> &'static str;
 }
 
-/// Scalar reference backend.
-pub struct NativeBatch;
+/// Native reference backend, running the configured data-path kernel.
+pub struct NativeBatch {
+    /// Data-path kernel for the dense recompute (`RunConfig::kernel`).
+    pub kernel: Kernel,
+}
 
 impl BatchCompute for NativeBatch {
     fn compute_batch(
@@ -64,15 +66,14 @@ impl BatchCompute for NativeBatch {
         residuals: &mut [f64],
     ) {
         let stride = mrf.max_domain();
-        let mut cur = msg_buf();
         // One gather scratch for the whole batch (no per-edge 64-wide
-        // zeroing on the generic path).
+        // zeroing on the generic path). The residual comes out of the
+        // kernel (`residual_l2_against`) — no current-value rebuffering.
         let mut scratch = MsgScratch::new();
         for (k, &e) in edges.iter().enumerate() {
             let slot = &mut out[k * stride..(k + 1) * stride];
-            let len = compute_message_with(mrf, msgs, e, slot, &mut scratch);
-            msgs.read_msg(mrf, e, &mut cur);
-            residuals[k] = residual_l2(&slot[..len], &cur[..len]);
+            let len = compute_message_with(mrf, msgs, e, slot, &mut scratch, self.kernel);
+            residuals[k] = msgs.residual_l2_against(mrf, e, &slot[..len], self.kernel);
         }
     }
 
@@ -109,9 +110,10 @@ impl Engine for RelaxedResidualBatched {
         } else {
             None
         };
+        let native = NativeBatch { kernel: cfg.kernel };
         let backend: &dyn BatchCompute = match &pjrt {
             Some(b) => b,
-            None => &NativeBatch,
+            None => &native,
         };
         // The fused node-centric refresh bypasses the batch backend; keep
         // the backend path whenever PJRT was explicitly requested and
@@ -164,7 +166,11 @@ impl<'a> BatchedPolicy<'a> {
         backend: &'a dyn BatchCompute,
         fused: bool,
     ) -> Self {
-        let la = if fused { Lookahead::init_fused(mrf, msgs) } else { Lookahead::init(mrf, msgs) };
+        let la = if fused {
+            Lookahead::init_fused(mrf, msgs, cfg.kernel)
+        } else {
+            Lookahead::init(mrf, msgs, cfg.kernel)
+        };
         BatchedPolicy { mrf, msgs, la, backend, stride: mrf.max_domain(), eps: cfg.epsilon, fused }
     }
 }
@@ -265,8 +271,9 @@ impl TaskPolicy for BatchedPolicy<'_> {
                 }
             }
         } else {
+            let mut gather = MsgScratch::new();
             for e in 0..self.mrf.num_messages() as u32 {
-                let r = self.la.refresh(self.mrf, self.msgs, e);
+                let r = self.la.refresh(self.mrf, self.msgs, e, &mut gather);
                 if ctx.requeue(e, r) {
                     found = true;
                 }

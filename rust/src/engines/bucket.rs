@@ -8,7 +8,7 @@
 //! scheduling on shared-memory CPUs.
 
 use super::{Engine, EngineStats};
-use crate::bp::{Lookahead, Messages};
+use crate::bp::{Lookahead, Messages, MsgScratch};
 use crate::configio::RunConfig;
 use crate::coordinator::{run_workers, Budget, Counters, MetricsReport};
 use crate::model::Mrf;
@@ -41,7 +41,7 @@ impl Engine for Bucket {
         let threads = cfg.threads.max(1);
         let block = ((n as f64 * self.fraction).ceil() as usize).max(1);
 
-        let la = Lookahead::init(mrf, msgs);
+        let la = Lookahead::init(mrf, msgs, cfg.kernel);
         let mut total = Counters::default();
         let global_updates = AtomicU64::new(0);
         let mut converged = true;
@@ -77,6 +77,7 @@ impl Engine for Bucket {
             let chunk = selected.len().div_ceil(threads);
             let per_thread = run_workers(threads, |tid| {
                 let mut c = Counters::default();
+                let mut gather = MsgScratch::new();
                 let lo = (tid * chunk).min(selected.len());
                 let hi = ((tid + 1) * chunk).min(selected.len());
                 for &v in &selected[lo..hi] {
@@ -91,7 +92,7 @@ impl Engine for Bucket {
                     }
                     for s in mrf.graph.slots(v as usize) {
                         let e = mrf.graph.adj_out[s];
-                        let r = la.refresh(mrf, msgs, e);
+                        let r = la.refresh(mrf, msgs, e, &mut gather);
                         la.commit(mrf, msgs, e);
                         c.updates += 1;
                         if r >= eps {
@@ -118,11 +119,12 @@ impl Engine for Bucket {
             dsts.dedup();
             let chunk2 = dsts.len().div_ceil(threads);
             run_workers(threads, |tid| {
+                let mut gather = MsgScratch::new();
                 let lo = (tid * chunk2).min(dsts.len());
                 let hi = ((tid + 1) * chunk2).min(dsts.len());
                 for &j in &dsts[lo..hi] {
                     for s in mrf.graph.slots(j as usize) {
-                        la.refresh(mrf, msgs, mrf.graph.adj_out[s]);
+                        la.refresh(mrf, msgs, mrf.graph.adj_out[s], &mut gather);
                     }
                 }
             });

@@ -14,10 +14,7 @@
 //! supplies the [`ScorePolicy`].
 
 use super::{Engine, EngineStats};
-use crate::bp::{
-    compute_message, compute_message_with, msg_buf, residual_l2, Messages, MsgBuf, MsgScratch,
-    MsgSource,
-};
+use crate::bp::{compute_message_with, msg_buf, Kernel, Messages, MsgBuf, MsgScratch, MsgSource};
 use crate::configio::RunConfig;
 use crate::exec::{ExecCtx, TaskPolicy, WorkerPool};
 use crate::model::Mrf;
@@ -54,7 +51,6 @@ impl Engine for NoLookahead {
 /// Message buffers reused across updates by one worker.
 pub(crate) struct ScoreScratch {
     new: MsgBuf,
-    cur: MsgBuf,
     /// Gather buffers for [`compute_message_with`] (no per-update
     /// MAX_DOMAIN-wide zeroing on wide-domain models).
     gather: MsgScratch,
@@ -68,13 +64,15 @@ pub(crate) struct ScorePolicy<'a> {
     /// Per-edge accumulated-change scores.
     scores: Vec<AtomicF64>,
     eps: f64,
+    /// Data-path kernel (`RunConfig::kernel`).
+    kernel: Kernel,
 }
 
 impl<'a> ScorePolicy<'a> {
     pub(crate) fn new(mrf: &'a Mrf, msgs: &'a Messages, cfg: &RunConfig) -> Self {
         let mut scores = Vec::with_capacity(mrf.num_messages());
         scores.resize_with(mrf.num_messages(), AtomicF64::default);
-        ScorePolicy { mrf, msgs, scores, eps: cfg.epsilon }
+        ScorePolicy { mrf, msgs, scores, eps: cfg.epsilon, kernel: cfg.kernel }
     }
 }
 
@@ -86,18 +84,20 @@ impl TaskPolicy for ScorePolicy<'_> {
     }
 
     fn make_scratch(&self) -> Self::Scratch {
-        ScoreScratch { new: msg_buf(), cur: msg_buf(), gather: MsgScratch::new() }
+        ScoreScratch { new: msg_buf(), gather: MsgScratch::new() }
     }
 
     fn seed(&self, ctx: &mut ExecCtx<'_>) {
         // Initial scores are the true residuals (one-time lookahead pass;
-        // Sutton–McCallum likewise bootstrap with a sweep).
+        // Sutton–McCallum likewise bootstrap with a sweep). The residual
+        // comes out of the kernel (`residual_l2_against`) — no second
+        // message read just to price the edge.
         let mut buf = msg_buf();
-        let mut cur = msg_buf();
+        let mut gather = MsgScratch::new();
         for e in 0..self.mrf.num_messages() as u32 {
-            let len = compute_message(self.mrf, self.msgs, e, &mut buf);
-            self.msgs.read_msg(self.mrf, e, &mut cur);
-            let r = residual_l2(&buf[..len], &cur[..len]);
+            let len =
+                compute_message_with(self.mrf, self.msgs, e, &mut buf, &mut gather, self.kernel);
+            let r = self.msgs.residual_l2_against(self.mrf, e, &buf[..len], self.kernel);
             self.scores[e as usize].store(r);
             ctx.activate(e, r);
         }
@@ -112,10 +112,15 @@ impl TaskPolicy for ScorePolicy<'_> {
                 e,
                 &mut scratch.new,
                 &mut scratch.gather,
+                self.kernel,
             );
-            self.msgs.read_msg(self.mrf, e, &mut scratch.cur);
-            let r = residual_l2(&scratch.new[..len], &scratch.cur[..len]);
-            self.msgs.write_msg(self.mrf, e, &scratch.new[..len]);
+            // Fused store + in-kernel residual: one pass over the live
+            // cells prices the update while committing it. (The scalar
+            // kernel's value is bit-for-bit the historical read-current /
+            // residual_l2 / write triple.)
+            let r = self
+                .msgs
+                .write_msg_residual(self.mrf, e, &scratch.new[..len], self.kernel);
             self.scores[e as usize].store(0.0);
             ctx.counters.updates += 1;
             if r >= self.eps {
@@ -149,11 +154,11 @@ impl TaskPolicy for ScorePolicy<'_> {
         // and can reach 0 while the actual residual is not.
         let mut found = false;
         let mut nb = msg_buf();
-        let mut cb = msg_buf();
+        let mut gather = MsgScratch::new();
         for e in 0..self.mrf.num_messages() as u32 {
-            let len = compute_message(self.mrf, self.msgs, e, &mut nb);
-            self.msgs.read_msg(self.mrf, e, &mut cb);
-            let r = residual_l2(&nb[..len], &cb[..len]);
+            let len =
+                compute_message_with(self.mrf, self.msgs, e, &mut nb, &mut gather, self.kernel);
+            let r = self.msgs.residual_l2_against(self.mrf, e, &nb[..len], self.kernel);
             // Overwrite unconditionally: a lost insert race can leave a
             // stale accumulated score above ε whose true residual is below;
             // syncing to ground truth keeps `final_priority` honest.

@@ -17,7 +17,7 @@
 //! (non-zero-priority) update.
 
 use super::{Engine, EngineStats};
-use crate::bp::{compute_message_with, msg_buf, Messages, MsgBuf, MsgScratch};
+use crate::bp::{compute_message_with, msg_buf, Kernel, Messages, MsgBuf, MsgScratch};
 use crate::configio::RunConfig;
 use crate::exec::{ExecCtx, TaskPolicy, WorkerPool};
 use crate::model::Mrf;
@@ -57,7 +57,7 @@ impl Engine for OptimalTree {
             bail!("optimal_tree engine requires a tree model");
         }
         let choice = if self.relaxed { SchedChoice::Relaxed } else { SchedChoice::Exact };
-        let policy = OptimalTreePolicy::new(mrf, msgs);
+        let policy = OptimalTreePolicy::new(mrf, msgs, cfg.kernel);
         Ok(WorkerPool::from_config(cfg, choice)
             .insert_threshold(f64::NEG_INFINITY)
             .with_partition(crate::model::partition::for_messages(mrf, cfg))
@@ -79,10 +79,12 @@ pub(crate) struct OptimalTreePolicy<'a> {
     min_in_prio: Vec<AtomicF64>,
     useful: AtomicU64,
     target: u64,
+    /// Data-path kernel (`RunConfig::kernel`).
+    kernel: Kernel,
 }
 
 impl<'a> OptimalTreePolicy<'a> {
-    pub(crate) fn new(mrf: &'a Mrf, msgs: &'a Messages) -> Self {
+    pub(crate) fn new(mrf: &'a Mrf, msgs: &'a Messages, kernel: Kernel) -> Self {
         let me = mrf.num_messages();
         OptimalTreePolicy {
             mrf,
@@ -97,6 +99,7 @@ impl<'a> OptimalTreePolicy<'a> {
             min_in_prio: (0..me).map(|_| AtomicF64::new(f64::MAX)).collect(),
             useful: AtomicU64::new(0),
             target: me as u64,
+            kernel,
         }
     }
 }
@@ -134,7 +137,7 @@ impl TaskPolicy for OptimalTreePolicy<'_> {
             let p = self.prio[e as usize].load();
             // Execute the update (even with priority 0 — those are the
             // wasted updates of Claim 4).
-            let len = compute_message_with(self.mrf, self.msgs, e, buf, gather);
+            let len = compute_message_with(self.mrf, self.msgs, e, buf, gather, self.kernel);
             self.msgs.write_msg(self.mrf, e, &buf[..len]);
             ctx.counters.updates += 1;
 

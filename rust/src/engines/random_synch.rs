@@ -10,7 +10,7 @@
 //! make this uncompetitive, which is the paper's point in Table 7.)
 
 use super::{Engine, EngineStats};
-use crate::bp::{Lookahead, Messages};
+use crate::bp::{Lookahead, Messages, MsgScratch};
 use crate::configio::RunConfig;
 use crate::coordinator::{run_workers, Budget, Counters, MetricsReport};
 use crate::model::Mrf;
@@ -35,7 +35,7 @@ impl Engine for RandomSynch {
         let threads = cfg.threads.max(1);
         let me = mrf.num_messages();
 
-        let la = Lookahead::init(mrf, msgs);
+        let la = Lookahead::init(mrf, msgs, cfg.kernel);
         let mut rng = Xoshiro256::stream(cfg.seed, 0xBEEF);
         let mut total = Counters::default();
         let mut prev_unconverged = usize::MAX;
@@ -91,11 +91,12 @@ impl Engine for RandomSynch {
             dsts.dedup();
             let chunk2 = dsts.len().div_ceil(threads);
             run_workers(threads, |tid| {
+                let mut gather = MsgScratch::new();
                 let lo = (tid * chunk2).min(dsts.len());
                 let hi = ((tid + 1) * chunk2).min(dsts.len());
                 for &j in &dsts[lo..hi] {
                     for s in mrf.graph.slots(j as usize) {
-                        la.refresh(mrf, msgs, mrf.graph.adj_out[s]);
+                        la.refresh(mrf, msgs, mrf.graph.adj_out[s], &mut gather);
                     }
                 }
             });
@@ -171,7 +172,7 @@ mod tests {
     fn low_p_bounds_selection() {
         // With low_p = 0.1 updates per round in slow phases are ≤ ~10% of
         // unconverged messages; just verify the run completes and counts.
-        let spec = ModelSpec::Potts { n: 4 };
+        let spec = ModelSpec::Potts { n: 4, q: 3 };
         let mrf = builders::build(&spec, 8);
         let msgs = Messages::uniform(&mrf);
         let cfg = RunConfig::new(spec, AlgorithmSpec::RandomSynchronous { low_p: 0.1 });

@@ -18,7 +18,7 @@
 //! termination live in the runtime.
 
 use super::{Engine, EngineStats};
-use crate::bp::{Lookahead, Messages, NodeScratch};
+use crate::bp::{Lookahead, Messages, MsgScratch, NodeScratch};
 use crate::configio::RunConfig;
 use crate::exec::{ExecCtx, TaskPolicy, WorkerPool};
 use crate::model::Mrf;
@@ -101,10 +101,12 @@ pub(crate) struct ResidualPolicy<'a> {
     fused: bool,
 }
 
-/// Per-worker buffers for the fused refresh path: the kernel's
-/// prefix/suffix scratch and the `(edge, residual)` requeue batch.
+/// Per-worker buffers for the refresh paths: the fused kernel's
+/// prefix/suffix scratch, the edge-wise gather buffers, and the
+/// `(edge, residual)` requeue batch.
 pub(crate) struct RefreshScratch {
     node: NodeScratch,
+    gather: MsgScratch,
     batch: Vec<(u32, f64)>,
 }
 
@@ -121,9 +123,9 @@ impl<'a> ResidualPolicy<'a> {
             v
         });
         let la = if cfg.fused {
-            Lookahead::init_fused(mrf, msgs)
+            Lookahead::init_fused(mrf, msgs, cfg.kernel)
         } else {
-            Lookahead::init(mrf, msgs)
+            Lookahead::init(mrf, msgs, cfg.kernel)
         };
         ResidualPolicy { mrf, msgs, la, counts, eps: cfg.epsilon, fused: cfg.fused }
     }
@@ -147,7 +149,7 @@ impl TaskPolicy for ResidualPolicy<'_> {
     }
 
     fn make_scratch(&self) -> Self::Scratch {
-        RefreshScratch { node: NodeScratch::new(), batch: Vec::new() }
+        RefreshScratch { node: NodeScratch::new(), gather: MsgScratch::new(), batch: Vec::new() }
     }
 
     fn seed(&self, ctx: &mut ExecCtx<'_>) {
@@ -193,7 +195,7 @@ impl TaskPolicy for ResidualPolicy<'_> {
             } else {
                 // Edge-wise fan-out: O(deg) full gathers = O(deg²) reads.
                 for k in self.la.affected_edges(self.mrf, e) {
-                    let r = self.la.refresh(self.mrf, self.msgs, k);
+                    let r = self.la.refresh(self.mrf, self.msgs, k, &mut sc.gather);
                     ctx.counters.refreshes += 1;
                     ctx.requeue(k, self.priority(r, k));
                 }
@@ -220,8 +222,9 @@ impl TaskPolicy for ResidualPolicy<'_> {
                 }
             }
         } else {
+            let mut gather = MsgScratch::new();
             for e in 0..self.mrf.num_messages() as u32 {
-                let r = self.la.refresh(self.mrf, self.msgs, e);
+                let r = self.la.refresh(self.mrf, self.msgs, e, &mut gather);
                 if ctx.requeue(e, self.priority(r, e)) {
                     found = true;
                 }
@@ -318,7 +321,7 @@ mod tests {
     #[test]
     fn weight_decay_converges() {
         let (_, _, stats) =
-            run_with(&ResidualEngine::weight_decay(), ModelSpec::Potts { n: 6 }, 2, 9);
+            run_with(&ResidualEngine::weight_decay(), ModelSpec::Potts { n: 6, q: 3 }, 2, 9);
         assert!(stats.converged);
         assert!(stats.metrics.total.updates > 0);
     }

@@ -8,7 +8,7 @@
 //! deterministic given the model.
 
 use super::{Engine, EngineStats};
-use crate::bp::{Lookahead, Messages, NodeScratch};
+use crate::bp::{Lookahead, Messages, MsgScratch, NodeScratch};
 use crate::configio::RunConfig;
 use crate::coordinator::{Budget, Counters, MetricsReport};
 use crate::exec::RunObserver;
@@ -40,16 +40,18 @@ impl Engine for SequentialResidual {
         let budget = Budget::new(cfg.time_limit_secs, cfg.max_updates);
         let eps = cfg.epsilon;
 
-        // The kernel axis applies to the baseline too, so fused-vs-edgewise
-        // comparisons against it measure scheduling, not kernel, effects.
+        // Both kernel axes apply to the baseline too, so fused-vs-edgewise
+        // and simd-vs-scalar comparisons against it measure scheduling,
+        // not kernel, effects.
         let la = if cfg.fused {
-            Lookahead::init_fused(mrf, msgs)
+            Lookahead::init_fused(mrf, msgs, cfg.kernel)
         } else {
-            Lookahead::init(mrf, msgs)
+            Lookahead::init(mrf, msgs, cfg.kernel)
         };
         let mut heap = IndexedHeap::new(mrf.num_messages());
         let mut c = Counters::default();
         let mut node_scratch = NodeScratch::new();
+        let mut gather = MsgScratch::new();
         let mut refreshed: Vec<(u32, f64)> = Vec::new();
 
         for e in 0..mrf.num_messages() as u32 {
@@ -105,7 +107,7 @@ impl Engine for SequentialResidual {
                     if k == rev {
                         continue;
                     }
-                    let r = la.refresh(mrf, msgs, k);
+                    let r = la.refresh(mrf, msgs, k, &mut gather);
                     c.refreshes += 1;
                     if r >= eps {
                         heap.update(k, r);

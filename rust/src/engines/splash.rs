@@ -17,7 +17,7 @@
 //!   paper's best performer on grids.
 
 use super::{Engine, EngineStats};
-use crate::bp::{Lookahead, Messages, NodeScratch};
+use crate::bp::{Lookahead, Messages, MsgScratch, NodeScratch};
 use crate::configio::RunConfig;
 use crate::coordinator::Counters;
 use crate::exec::{ExecCtx, TaskPolicy, WorkerPool};
@@ -97,6 +97,8 @@ pub(crate) struct SplashScratch {
     affected: Vec<u32>,
     /// Fused-kernel prefix/suffix buffers (post-splash refresh).
     node: NodeScratch,
+    /// Edge-wise gather buffers (splash commits + edgewise refresh).
+    gather: MsgScratch,
     /// Scratch for fused refresh results / batched node requeues.
     batch: Vec<(u32, f64)>,
 }
@@ -123,9 +125,9 @@ impl<'a> SplashPolicy<'a> {
         smart: bool,
     ) -> Self {
         let la = if cfg.fused {
-            Lookahead::init_fused(mrf, msgs)
+            Lookahead::init_fused(mrf, msgs, cfg.kernel)
         } else {
-            Lookahead::init(mrf, msgs)
+            Lookahead::init(mrf, msgs, cfg.kernel)
         };
         SplashPolicy { mrf, msgs, la, h, smart, eps: cfg.epsilon, fused: cfg.fused }
     }
@@ -141,8 +143,8 @@ impl<'a> SplashPolicy<'a> {
     }
 
     /// Commit edge `e`'s pending update and record its destination.
-    fn commit(&self, e: u32, c: &mut Counters, touched: &mut Vec<u32>) {
-        let r = self.la.refresh(self.mrf, self.msgs, e);
+    fn commit(&self, e: u32, c: &mut Counters, gather: &mut MsgScratch, touched: &mut Vec<u32>) {
+        let r = self.la.refresh(self.mrf, self.msgs, e, gather);
         self.la.commit(self.mrf, self.msgs, e);
         c.updates += 1;
         if r >= self.eps {
@@ -184,11 +186,13 @@ impl<'a> SplashPolicy<'a> {
                 if pe != u32::MAX {
                     // child→parent is the reverse of the parent→child tree
                     // edge.
-                    self.commit(self.mrf.graph.reverse(pe), ctx.counters, &mut sc.touched);
+                    let rev = self.mrf.graph.reverse(pe);
+                    self.commit(rev, ctx.counters, &mut sc.gather, &mut sc.touched);
                 }
             } else {
                 for s in self.mrf.graph.slots(u as usize) {
-                    self.commit(self.mrf.graph.adj_out[s], ctx.counters, &mut sc.touched);
+                    let e_out = self.mrf.graph.adj_out[s];
+                    self.commit(e_out, ctx.counters, &mut sc.gather, &mut sc.touched);
                 }
             }
         }
@@ -196,11 +200,12 @@ impl<'a> SplashPolicy<'a> {
         for &(u, pe) in sc.order.iter() {
             if self.smart {
                 if pe != u32::MAX {
-                    self.commit(pe, ctx.counters, &mut sc.touched);
+                    self.commit(pe, ctx.counters, &mut sc.gather, &mut sc.touched);
                 }
             } else {
                 for s in self.mrf.graph.slots(u as usize) {
-                    self.commit(self.mrf.graph.adj_out[s], ctx.counters, &mut sc.touched);
+                    let e_out = self.mrf.graph.adj_out[s];
+                    self.commit(e_out, ctx.counters, &mut sc.gather, &mut sc.touched);
                 }
             }
         }
@@ -226,7 +231,7 @@ impl<'a> SplashPolicy<'a> {
         } else {
             for &j in sc.touched.iter() {
                 for s in self.mrf.graph.slots(j as usize) {
-                    self.la.refresh(self.mrf, self.msgs, self.mrf.graph.adj_out[s]);
+                    self.la.refresh(self.mrf, self.msgs, self.mrf.graph.adj_out[s], &mut sc.gather);
                     ctx.counters.refreshes += 1;
                     sc.affected.push(self.mrf.graph.adj_node[s]);
                 }
@@ -301,8 +306,9 @@ impl TaskPolicy for SplashPolicy<'_> {
                 batch.clear();
             }
         } else {
+            let mut gather = MsgScratch::new();
             for e in 0..self.mrf.num_messages() as u32 {
-                self.la.refresh(self.mrf, self.msgs, e);
+                self.la.refresh(self.mrf, self.msgs, e, &mut gather);
             }
         }
         for v in 0..self.mrf.num_nodes() as u32 {

@@ -12,7 +12,7 @@
 //! arbitrary topologies.
 
 use super::{Engine, EngineStats};
-use crate::bp::{compute_message_with, msg_buf, residual_l2, Messages, MsgScratch, MsgSource};
+use crate::bp::{compute_message_with, msg_buf, Messages, MsgScratch, MsgSource};
 use crate::configio::RunConfig;
 use crate::coordinator::{run_workers, Budget, Counters, MetricsReport};
 use crate::model::Mrf;
@@ -74,8 +74,8 @@ impl Engine for Synchronous {
             let lo = (tid * chunk).min(me);
             let hi = ((tid + 1) * chunk).min(me);
             let mut new = msg_buf();
-            let mut cur = msg_buf();
             let mut gather = MsgScratch::new();
+            let kernel = cfg.kernel;
 
             loop {
                 barrier.wait();
@@ -87,10 +87,16 @@ impl Engine for Synchronous {
                 let dst = &bufs[((r + 1) % 2) as usize];
                 let mut local_max = 0.0f64;
                 for e in lo as u32..hi as u32 {
-                    let len = compute_message_with(mrf, src, e, &mut new, &mut gather);
-                    src.read_msg(mrf, e, &mut cur);
-                    local_max = local_max.max(residual_l2(&new[..len], &cur[..len]));
-                    dst.write_msg(mrf, e, &new[..len]);
+                    let len = compute_message_with(mrf, src, e, &mut new, &mut gather, kernel);
+                    // In-kernel residual against the read buffer — no
+                    // per-edge current-value rebuffering.
+                    let res = src.residual_l2_against(mrf, e, &new[..len], kernel);
+                    local_max = local_max.max(res);
+                    if kernel.is_simd() {
+                        dst.write_msg_bulk(mrf, e, &new[..len]);
+                    } else {
+                        dst.write_msg(mrf, e, &new[..len]);
+                    }
                     c.updates += 1;
                 }
                 ctrl.max_diff.fetch_max(local_max);

@@ -22,7 +22,7 @@ pub mod report;
 
 pub use report::{ratio_cell, Report, Row};
 
-use crate::configio::{AlgorithmSpec, ModelSpec, PartitionSpec, RunConfig};
+use crate::configio::{AlgorithmSpec, Kernel, ModelSpec, PartitionSpec, RunConfig};
 use crate::model::{builders, Mrf};
 use crate::run::run_on_model_observed;
 use crate::telemetry::{Trace, TraceRecorder};
@@ -57,9 +57,12 @@ pub struct Harness {
     /// Locality axis applied to every cell (the `locality` experiment
     /// additionally sweeps it per cell).
     pub partition: PartitionSpec,
-    /// Update-kernel axis applied to every cell (the `fused` experiment
-    /// additionally sweeps it per cell).
+    /// Update-kernel shape axis applied to every cell (the `fused`
+    /// experiment additionally sweeps it per cell).
     pub fused: bool,
+    /// Data-path kernel axis applied to every cell (the `simd` experiment
+    /// additionally sweeps it per cell).
+    pub kernel: Kernel,
     /// Traces recorded by [`Harness::run_cell`] since the last
     /// [`Harness::drain_traces`], keyed by cell id.
     pub trace_log: RefCell<Vec<(String, Trace)>>,
@@ -77,6 +80,7 @@ impl Default for Harness {
             use_pjrt: false,
             partition: PartitionSpec::Off,
             fused: true,
+            kernel: Kernel::Simd,
             trace_log: RefCell::new(Vec::new()),
         }
     }
@@ -88,7 +92,7 @@ impl Harness {
         vec![
             ModelSpec::Tree { n: scaled(1_000_000, self.scale).max(15) },
             ModelSpec::Ising { n: side(300, self.scale).max(4) },
-            ModelSpec::Potts { n: side(300, self.scale).max(4) },
+            ModelSpec::Potts { n: side(300, self.scale).max(4), q: 3 },
             ModelSpec::Ldpc { n: scaled(30_000, self.scale).max(24), flip_prob: 0.07 },
         ]
     }
@@ -99,6 +103,7 @@ impl Harness {
         cfg.use_pjrt = self.use_pjrt;
         cfg.partition = self.partition;
         cfg.fused = self.fused;
+        cfg.kernel = self.kernel;
         cfg
     }
 
@@ -144,6 +149,9 @@ impl Harness {
         };
         if !self.fused {
             id.push_str("/edgewise");
+        }
+        if self.kernel == Kernel::Scalar {
+            id.push_str("/scalar");
         }
         self.run_cell_with(mrf, spec, alg, cfg, id)
     }
@@ -697,7 +705,112 @@ impl Harness {
         if !fused {
             id.push_str("/edgewise");
         }
+        if self.kernel == Kernel::Scalar {
+            id.push_str("/scalar");
+        }
         self.run_cell_with(mrf, spec, alg, cfg, id)
+    }
+
+    /// [`Harness::run_cell`] with an explicit data-path kernel (used by
+    /// the `simd` experiment's scalar-vs-simd sweep).
+    pub fn run_cell_kernel(
+        &self,
+        mrf: &Mrf,
+        spec: &ModelSpec,
+        alg: AlgorithmSpec,
+        threads: usize,
+        kernel: Kernel,
+    ) -> Result<Row> {
+        let mut cfg = self.cfg(spec, alg.clone(), threads);
+        cfg.kernel = kernel;
+        eprintln!(
+            "[harness] {} / {} / p={} / kernel={} …",
+            spec.name(),
+            alg.name(),
+            threads,
+            kernel.label()
+        );
+        // Simd ids keep the historical form (joinable across revisions);
+        // scalar cells carry the suffix, mirroring bench. The inherited
+        // axes keep their own labels (partition, and `/edgewise` when the
+        // harness-wide fused axis is off) so these ids never collide with
+        // differently-configured cells.
+        let mut id = if self.partition.is_on() {
+            format!("{}/{}/p{}/{}", spec.name(), alg.name(), threads, self.partition.label())
+        } else {
+            format!("{}/{}/p{}", spec.name(), alg.name(), threads)
+        };
+        if !self.fused {
+            id.push_str("/edgewise");
+        }
+        if kernel == Kernel::Scalar {
+            id.push_str("/scalar");
+        }
+        self.run_cell_with(mrf, spec, alg, cfg, id)
+    }
+
+    /// Data-path kernel A/B: relaxed residual with the lane-tiled SIMD
+    /// kernel vs the scalar reference, on the wide-domain workloads (LDPC
+    /// 64-state constraints, q = 32 Potts) where the inner `|D|`-wide
+    /// loops dominate. The speedup is measured, not asserted; update
+    /// counts confirm the schedule itself stays equivalent.
+    pub fn simd_ab(&self) -> Result<Report> {
+        let mut rep = Report::new(
+            "simd",
+            "Lane-tiled SIMD message data path vs scalar reference (kernel axis)",
+        );
+        self.standard_notes(&mut rep);
+        let ldpc = scaled(30_000, self.scale).max(24);
+        let grid = side(120, self.scale).max(4);
+        let specs = vec![
+            ModelSpec::Ldpc { n: ldpc, flip_prob: 0.07 },
+            ModelSpec::Potts { n: grid, q: 32 },
+        ];
+        let mut md = String::from(
+            "| input | p | kernel | time (s) | updates | speedup vs scalar |\n|---|---|---|---|---|---|\n",
+        );
+        for spec in &specs {
+            let mrf = builders::build(spec, self.seed);
+            for &p in &self.threads {
+                let mut scalar_secs = None;
+                for kernel in [Kernel::Scalar, Kernel::Simd] {
+                    let row = self.run_cell_kernel(
+                        &mrf,
+                        spec,
+                        AlgorithmSpec::RelaxedResidual,
+                        p,
+                        kernel,
+                    )?;
+                    let speedup = match (kernel, scalar_secs) {
+                        (Kernel::Scalar, _) => {
+                            if row.converged {
+                                scalar_secs = Some(row.wall_secs);
+                                "1.00×".to_string()
+                            } else {
+                                "—".into()
+                            }
+                        }
+                        (Kernel::Simd, Some(base)) if row.converged => {
+                            format!("{:.2}×", base / row.wall_secs.max(1e-9))
+                        }
+                        _ => "—".into(),
+                    };
+                    md.push_str(&format!(
+                        "| {} | {p} | {} | {} | {} | {} |\n",
+                        spec.name(),
+                        kernel.label(),
+                        if row.converged { format!("{:.3}", row.wall_secs) } else { "—".into() },
+                        row.updates,
+                        speedup,
+                    ));
+                    rep.push(row);
+                }
+            }
+        }
+        rep.add_table(format!("### Data-path kernel axis: simd vs scalar\n\n{md}"));
+        self.drain_traces(&mut rep);
+        rep.emit(&self.out_dir)?;
+        Ok(rep)
     }
 
     /// Update-kernel A/B: relaxed residual with the node-centric fused
@@ -777,6 +890,7 @@ impl Harness {
         self.lemma2()?;
         self.locality()?;
         self.fused_ab()?;
+        self.simd_ab()?;
         Ok(())
     }
 

@@ -15,7 +15,9 @@
 
 use anyhow::{anyhow, bail, Result};
 use relaxed_bp::cli::Args;
-use relaxed_bp::configio::{parse_on_off, AlgorithmSpec, ModelSpec, PartitionSpec, RunConfig};
+use relaxed_bp::configio::{
+    parse_kernel, parse_on_off, AlgorithmSpec, ModelSpec, PartitionSpec, RunConfig,
+};
 use relaxed_bp::harness::Harness;
 use relaxed_bp::model::{builders, io as model_io};
 use relaxed_bp::run::run_config;
@@ -100,6 +102,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(f) = args.opt("fused") {
         cfg.fused = parse_on_off(f)?;
     }
+    if let Some(k) = args.opt("kernel") {
+        cfg.kernel = parse_kernel(k)?;
+    }
 
     let report = run_config(&cfg)?;
     let json = report.to_json();
@@ -153,6 +158,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     if let Some(f) = args.opt("fused") {
         h.fused = parse_on_off(f)?;
     }
+    if let Some(k) = args.opt("kernel") {
+        h.kernel = parse_kernel(k)?;
+    }
 
     match which {
         "table1" | "table2" | "table5" | "table6" | "moderate" => {
@@ -190,6 +198,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         }
         "fused" => {
             h.fused_ab()?;
+        }
+        "simd" => {
+            h.simd_ab()?;
         }
         "all" => h.all()?,
         other => bail!("unknown experiment '{other}'"),
@@ -305,14 +316,14 @@ USAGE:
   relaxed-bp run --model <kind:size> --algorithm <alg> [--threads N]
                  [--epsilon E] [--seed S] [--time-limit SECS] [--use-pjrt]
                  [--partition off|affine[:shards[:spill]]|bfs[:shards[:spill]]]
-                 [--fused on|off]
+                 [--fused on|off] [--kernel scalar|simd]
                  [--config cfg.json] [--out report.json] [--marginals]
   relaxed-bp experiment <id> [--scale F] [--threads 1,2,4,8]
                  [--max-threads N] [--out-dir DIR] [--seed S] [--use-pjrt]
-                 [--partition MODE] [--fused on|off]
+                 [--partition MODE] [--fused on|off] [--kernel scalar|simd]
       ids: table1 table3 table4 table7 fig2 fig4 fig5 fig6 fig7 lemma2
-           locality fused all
-  relaxed-bp bench [--quick] [--families tree,ising,potts,ldpc,powerlaw]
+           locality fused simd all
+  relaxed-bp bench [--quick] [--families tree,ising,potts,potts32,ldpc,powerlaw]
                  [--threads 1,2] [--samples N] [--out-dir DIR] [--seed S]
                  [--time-limit SECS] [--tick-ms MS] [--tolerance X]
                  [--partitions off,affine] [--check]
@@ -324,7 +335,7 @@ USAGE:
   relaxed-bp generate --model <kind:size> --out model.rbpm [--seed S]
   relaxed-bp list-algorithms
 
-MODELS: tree:N ising:N potts:N ldpc:N[:flip] path:N adversarial_tree:N
+MODELS: tree:N ising:N potts:N[:q] ldpc:N[:flip] path:N adversarial_tree:N
         uniform_tree:N[:arity] powerlaw:N[:m]
 
 PARTITION MODES (the locality axis): off = flat arena + locality-blind
@@ -332,7 +343,13 @@ PARTITION MODES (the locality axis): off = flat arena + locality-blind
         message arenas, shard-affine Multiqueue; bfs = shards clustered by
         graph BFS order. shards defaults to the thread count, spill to 0.1.
 
-FUSED (the update-kernel axis): on (default) = node-centric fused refresh
+FUSED (the refresh-shape axis): on (default) = node-centric fused refresh
         (one O(deg) prefix/suffix pass per node touch) + batched scheduler
         inserts; off = the historical edge-wise O(deg²) refresh fan-out,
-        kept for A/B measurement. bench records both axes per baseline.";
+        kept for A/B measurement.
+
+KERNEL (the data-path axis): simd (default) = lane-tiled inner loops
+        (portable 4-lane tiles + runtime-detected AVX2), bulk cache-line
+        message I/O, and in-kernel residuals; scalar = the historical
+        per-element path, bit-for-bit the pre-SIMD trajectory, kept for
+        A/B measurement. bench records all three axes per baseline.";

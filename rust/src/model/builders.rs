@@ -34,7 +34,7 @@ pub fn build(spec: &ModelSpec, seed: u64) -> Mrf {
         ModelSpec::AdversarialTree { n } => adversarial_tree(n),
         ModelSpec::UniformTree { n, arity } => uniform_tree(n, arity),
         ModelSpec::Ising { n } => ising(n, seed),
-        ModelSpec::Potts { n } => potts(n, seed),
+        ModelSpec::Potts { n, q } => potts(n, q, seed),
         ModelSpec::Ldpc { n, flip_prob } => ldpc::build(n, flip_prob, seed).mrf,
         ModelSpec::PowerLaw { n, m } => powerlaw(n, m, seed),
     }
@@ -184,25 +184,33 @@ fn grid_spin_glass(name: &str, n: usize, seed: u64, amp: f64) -> Mrf {
     )
 }
 
-/// 3-state Potts-style model on an `n×n` grid, α,β ~ U[-2.5,2.5] (paper
-/// §5.2): per-state random fields, diagonal (same-state) couplings `e^β`.
-fn potts(n: usize, seed: u64) -> Mrf {
-    const Q: usize = 3;
+/// `q`-state Potts-style model on an `n×n` grid, α,β ~ U[-2.5,2.5] (paper
+/// §5.2 uses q = 3): per-state random fields, diagonal (same-state)
+/// couplings `e^β`. `q` up to [`MAX_DOMAIN`](crate::model::MAX_DOMAIN) —
+/// the wide settings (`potts:n:32`) exercise the SIMD update kernels on
+/// dense q×q matvecs, a workload shape LDPC's sparse indicator factors
+/// don't cover.
+fn potts(n: usize, q: usize, seed: u64) -> Mrf {
+    assert!(
+        (2..=crate::model::MAX_DOMAIN).contains(&q),
+        "potts state count q={q} out of range 2..={}",
+        crate::model::MAX_DOMAIN
+    );
     let mut rng = Xoshiro256::seed_from_u64(seed);
     let nodes = n * n;
     let priors: Vec<Vec<f64>> = (0..nodes)
-        .map(|_| (0..Q).map(|_| rng.uniform(-2.5, 2.5).exp()).collect())
+        .map(|_| (0..q).map(|_| rng.uniform(-2.5, 2.5).exp()).collect())
         .collect();
     let mut gb = GraphBuilder::new(nodes);
     let mut pool = FactorPool::new();
     let mut edge_idx = Vec::new();
     let coupling = |rng: &mut Xoshiro256, pool: &mut FactorPool| {
         let b = rng.uniform(-2.5f64, 2.5).exp();
-        let mut m = [1.0f64; Q * Q];
-        for x in 0..Q {
-            m[x * Q + x] = b;
+        let mut m = vec![1.0f64; q * q];
+        for x in 0..q {
+            m[x * q + x] = b;
         }
-        pool.add(Q, Q, &m)
+        pool.add(q, q, &m)
     };
     for r in 0..n {
         for c in 0..n {
@@ -220,7 +228,7 @@ fn potts(n: usize, seed: u64) -> Mrf {
     Mrf::assemble(
         "potts",
         gb.build(),
-        vec![Q as u32; nodes],
+        vec![q as u32; nodes],
         NodeFactors::from_vecs(&priors),
         edge_idx,
         pool,
@@ -464,10 +472,32 @@ mod tests {
 
     #[test]
     fn potts_is_three_state() {
-        let m = build(&ModelSpec::Potts { n: 3 }, 2);
+        let m = build(&ModelSpec::Potts { n: 3, q: 3 }, 2);
         assert_eq!(m.max_domain(), 3);
         assert!(!m.all_binary());
         assert_eq!(m.num_messages(), 2 * 12);
+    }
+
+    #[test]
+    fn potts_wide_domain() {
+        let m = build(&ModelSpec::Potts { n: 3, q: 32 }, 2);
+        assert_eq!(m.max_domain(), 32);
+        assert_eq!(m.num_messages(), 2 * 12);
+        // Diagonal coupling structure survives the generalization.
+        let f = m.edge_factor[0];
+        let mat = m.pool.matrix(f.pool_index());
+        assert_eq!(mat.len(), 32 * 32);
+        assert_eq!(mat[1], 1.0, "off-diagonal is 1");
+        assert_ne!(mat[0], 1.0, "diagonal carries e^beta");
+        // Deterministic in (spec, seed).
+        let m2 = build(&ModelSpec::Potts { n: 3, q: 32 }, 2);
+        assert_eq!(m.node_factors.of(4), m2.node_factors.of(4));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn potts_q_above_max_domain_panics() {
+        build(&ModelSpec::Potts { n: 3, q: 65 }, 1);
     }
 
     #[test]

@@ -266,7 +266,7 @@ mod tests {
 
     #[test]
     fn file_roundtrip() {
-        let m = builders::build(&ModelSpec::Potts { n: 3 }, 2);
+        let m = builders::build(&ModelSpec::Potts { n: 3, q: 3 }, 2);
         let path = "/tmp/rbp_io_test.rbpm";
         save(&m, path).unwrap();
         let back = load(path).unwrap();

@@ -14,7 +14,7 @@
 //! with identity work.
 
 use super::{Executable, TensorIn};
-use crate::bp::{incoming_product, msg_buf, Messages, MsgSource};
+use crate::bp::{incoming_product, msg_buf, Kernel, Messages, MsgSource};
 use crate::engines::batched::BatchCompute;
 use crate::model::Mrf;
 use anyhow::{bail, Result};
@@ -70,7 +70,7 @@ impl PjrtBatch {
         let mut buf = msg_buf();
         let mut tmp = msg_buf();
         for (k, &e) in edges.iter().enumerate() {
-            let d = incoming_product(mrf, msgs, e, &mut buf, &mut tmp);
+            let d = incoming_product(mrf, msgs, e, &mut buf, &mut tmp, Kernel::Scalar);
             debug_assert_eq!(d, 2);
             prod[2 * k] = buf[0];
             prod[2 * k + 1] = buf[1];
@@ -132,7 +132,7 @@ impl BatchCompute for PjrtBatch {
                 // PJRT failure mid-run is unrecoverable for this batch;
                 // fall back to the native path so the engine stays correct.
                 eprintln!("[runtime] PJRT batch failed ({e}); native fallback");
-                crate::engines::batched::NativeBatch.compute_batch(
+                crate::engines::batched::NativeBatch { kernel: Kernel::Scalar }.compute_batch(
                     mrf,
                     msgs,
                     chunk,

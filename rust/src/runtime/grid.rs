@@ -278,7 +278,7 @@ mod tests {
 
     #[test]
     fn tensor_roundtrip_preserves_messages() {
-        let m = builders::build(&ModelSpec::Potts { n: 4 }, 3);
+        let m = builders::build(&ModelSpec::Potts { n: 4, q: 3 }, 3);
         let msgs = Messages::uniform(&m);
         // Perturb some messages.
         msgs.write_msg(&m, 0, &[0.3, 0.7]);

@@ -48,6 +48,11 @@ pub struct CellResult {
     /// suffix. Absent in pre-fused baselines ⇒ `true` is *not* assumed —
     /// those cells predate the kernel, so they parse as `false`.
     pub fused: bool,
+    /// Data-path kernel of the cell (`RunConfig::kernel`: `simd` or
+    /// `scalar`); scalar A/B cells carry the `/scalar` id suffix. Absent
+    /// in pre-SIMD baselines ⇒ `scalar` — those cells measured the
+    /// historical per-element path.
+    pub kernel: String,
     /// Per-sample wall-clock seconds.
     pub wall_secs: Vec<f64>,
     /// Per-sample committed update counts.
@@ -81,6 +86,7 @@ impl CellResult {
             ("threads", Json::Num(self.threads as f64)),
             ("partition", Json::Str(self.partition.clone())),
             ("fused", Json::Bool(self.fused)),
+            ("kernel", Json::Str(self.kernel.clone())),
             ("wall_secs", Json::Arr(self.wall_secs.iter().map(|&t| Json::Num(t)).collect())),
             ("updates", Json::Arr(self.updates.iter().map(|&u| Json::Num(u)).collect())),
             ("converged", Json::Bool(self.converged)),
@@ -125,6 +131,11 @@ impl CellResult {
                 .unwrap_or("off")
                 .to_string(),
             fused: v.get("fused").and_then(Json::as_bool).unwrap_or(false),
+            kernel: v
+                .get("kernel")
+                .and_then(Json::as_str)
+                .unwrap_or("scalar")
+                .to_string(),
             wall_secs: arr("wall_secs")?,
             updates: arr("updates")?,
             converged: v
@@ -369,6 +380,7 @@ mod tests {
             threads: 2,
             partition: "off".into(),
             fused: true,
+            kernel: "simd".into(),
             wall_secs: vec![secs, secs * 1.05, secs * 0.95],
             updates: vec![1000.0, 1010.0, 990.0],
             converged: true,
@@ -443,6 +455,23 @@ mod tests {
         }
         let back = Baseline::from_json(&j).unwrap();
         assert!(!back.cells[0].fused, "pre-fused cells measured the edgewise kernel");
+        assert!(!compare(&b, &back, DEFAULT_TOLERANCE).unwrap().has_regression());
+    }
+
+    #[test]
+    fn pre_simd_cells_parse_as_scalar() {
+        let b = baseline(vec![cell("relaxed_residual/p2", 0.5)]);
+        let mut j = b.to_json();
+        // Simulate a baseline written before the data-path kernel axis.
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Arr(cells)) = o.get_mut("cells") {
+                if let Json::Obj(c) = &mut cells[0] {
+                    c.remove("kernel");
+                }
+            }
+        }
+        let back = Baseline::from_json(&j).unwrap();
+        assert_eq!(back.cells[0].kernel, "scalar", "pre-SIMD cells measured the scalar path");
         assert!(!compare(&b, &back, DEFAULT_TOLERANCE).unwrap().has_regression());
     }
 

@@ -21,7 +21,8 @@
 //! ```text
 //! {
 //!   "schema_version": 1,
-//!   "family": "ising",                  // tree | ising | potts | ldpc | powerlaw
+//!   "family": "ising",                  // tree | ising | potts | potts32
+//!                                       // | ldpc | powerlaw
 //!   "model": { "kind": "ising", "n": 8 }, // exact ModelSpec measured
 //!   "git_rev": "010aee9",               // provenance
 //!   "created_unix": 1753833600,
@@ -33,7 +34,8 @@
 //!     {
 //!       "id": "relaxed_residual/p2",    // comparator join key; affine
 //!                                       // cells append "/<partition>",
-//!                                       // fused-off cells "/edgewise"
+//!                                       // fused-off cells "/edgewise",
+//!                                       // scalar-kernel cells "/scalar"
 //!       "algorithm": "relaxed_residual",
 //!       "scheduler": "multiqueue",      // sequential | rounds | exact |
 //!                                       // multiqueue | random
@@ -41,9 +43,11 @@
 //!       "partition": "off",             // off | affine | affine_bfs —
 //!                                       // the locality axis (absent in
 //!                                       // pre-partition baselines ⇒ off)
-//!       "fused": true,                  // the update-kernel axis (absent
+//!       "fused": true,                  // the refresh-shape axis (absent
 //!                                       // in pre-fused baselines ⇒ false:
 //!                                       // those measured edge-wise)
+//!       "kernel": "simd",               // the data-path axis (absent in
+//!                                       // pre-SIMD baselines ⇒ "scalar")
 //!       "wall_secs": [0.012, 0.011],    // one entry per sample
 //!       "updates": [4100, 4080],
 //!       "converged": true,
@@ -80,7 +84,7 @@ pub use baseline::{
 };
 pub use trace::{Trace, TracePoint, TraceRecorder};
 
-use crate::configio::{AlgorithmSpec, ModelSpec, PartitionSpec, RunConfig};
+use crate::configio::{AlgorithmSpec, Kernel, ModelSpec, PartitionSpec, RunConfig};
 use crate::model::builders;
 use crate::run::run_on_model_observed;
 use anyhow::{bail, Result};
@@ -88,8 +92,10 @@ use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 /// The model families swept by default — the paper's §5.2 roster plus the
-/// power-law locality workload.
-pub const FAMILIES: &[&str] = &["tree", "ising", "potts", "ldpc", "powerlaw"];
+/// power-law locality workload and the wide-domain (q = 32) Potts grid
+/// that exercises the SIMD kernel axis on dense matvecs (LDPC's indicator
+/// factors are the only other wide-domain family).
+pub const FAMILIES: &[&str] = &["tree", "ising", "potts", "potts32", "ldpc", "powerlaw"];
 
 /// Configuration of one `bench` sweep.
 #[derive(Debug, Clone)]
@@ -213,8 +219,10 @@ pub fn family_spec(family: &str, quick: bool) -> Result<ModelSpec> {
         ("tree", false) => ModelSpec::Tree { n: 20_000 },
         ("ising", true) => ModelSpec::Ising { n: 8 },
         ("ising", false) => ModelSpec::Ising { n: 40 },
-        ("potts", true) => ModelSpec::Potts { n: 8 },
-        ("potts", false) => ModelSpec::Potts { n: 40 },
+        ("potts", true) => ModelSpec::Potts { n: 8, q: 3 },
+        ("potts", false) => ModelSpec::Potts { n: 40, q: 3 },
+        ("potts32", true) => ModelSpec::Potts { n: 6, q: 32 },
+        ("potts32", false) => ModelSpec::Potts { n: 16, q: 32 },
         ("ldpc", true) => ModelSpec::Ldpc { n: 48, flip_prob: 0.05 },
         ("ldpc", false) => ModelSpec::Ldpc { n: 1_000, flip_prob: 0.07 },
         ("powerlaw", true) => ModelSpec::PowerLaw { n: 256, m: 2 },
@@ -223,27 +231,79 @@ pub fn family_spec(family: &str, quick: bool) -> Result<ModelSpec> {
     })
 }
 
+/// One swept bench cell: algorithm, thread count, and the three axes
+/// (locality partition, fused/edgewise refresh shape, simd/scalar data
+/// path).
+#[derive(Debug, Clone)]
+struct RosterCell {
+    alg: AlgorithmSpec,
+    threads: usize,
+    partition: PartitionSpec,
+    fused: bool,
+    kernel: Kernel,
+}
+
+impl RosterCell {
+    fn new(alg: AlgorithmSpec, threads: usize, partition: PartitionSpec) -> Self {
+        RosterCell { alg, threads, partition, fused: true, kernel: Kernel::Simd }
+    }
+
+    fn edgewise(mut self) -> Self {
+        self.fused = false;
+        self
+    }
+
+    fn scalar(mut self) -> Self {
+        self.kernel = Kernel::Scalar;
+        self
+    }
+
+    /// Cell id: both-axes-default cells keep the historical
+    /// `<alg>/p<threads>` form; affine cells append the partition label,
+    /// edgewise (fused-off) cells `/edgewise`, scalar-kernel cells
+    /// `/scalar`.
+    fn id(&self) -> String {
+        let mut id = match self.partition {
+            PartitionSpec::Off => format!("{}/p{}", self.alg.name(), self.threads),
+            _ => format!("{}/p{}/{}", self.alg.name(), self.threads, self.partition.label()),
+        };
+        if !self.fused {
+            id.push_str("/edgewise");
+        }
+        if self.kernel == Kernel::Scalar {
+            id.push_str("/scalar");
+        }
+        id
+    }
+}
+
 /// The {engine × scheduler × threads × partition × kernel} cells swept per
 /// family: the sequential exact baseline, the exact concurrent PQ, the
 /// relaxed Multiqueue (once per locality axis in [`BenchOpts::partitions`]),
 /// and relaxed smart splash at the highest thread count. The relaxed
-/// contenders are additionally measured once with the fused kernel off
-/// (`…/edgewise` cells) so every baseline records the fused-vs-edgewise
-/// A/B the kernel axis is judged by.
-fn roster(opts: &BenchOpts) -> Vec<(AlgorithmSpec, usize, PartitionSpec, bool)> {
-    let mut cells = vec![(AlgorithmSpec::SequentialResidual, 1, PartitionSpec::Off, true)];
+/// contenders are additionally measured once with the fused refresh off
+/// (`…/edgewise` cells) and once with the scalar data-path kernel
+/// (`…/scalar` cells), so every baseline records both same-run kernel
+/// A/Bs — fused-vs-edgewise and simd-vs-scalar — the kernel axes are
+/// judged by.
+fn roster(opts: &BenchOpts) -> Vec<RosterCell> {
+    use AlgorithmSpec::{CoarseGrained, RelaxedResidual, RelaxedSmartSplash, SequentialResidual};
+    let mut cells = vec![RosterCell::new(SequentialResidual, 1, PartitionSpec::Off)];
     for &p in &opts.threads {
-        cells.push((AlgorithmSpec::CoarseGrained, p, PartitionSpec::Off, true));
+        cells.push(RosterCell::new(CoarseGrained, p, PartitionSpec::Off));
         for &part in &opts.partitions {
-            cells.push((AlgorithmSpec::RelaxedResidual, p, part, true));
+            cells.push(RosterCell::new(RelaxedResidual, p, part));
         }
-        cells.push((AlgorithmSpec::RelaxedResidual, p, PartitionSpec::Off, false));
+        cells.push(RosterCell::new(RelaxedResidual, p, PartitionSpec::Off).edgewise());
+        cells.push(RosterCell::new(RelaxedResidual, p, PartitionSpec::Off).scalar());
     }
     if let Some(&max_p) = opts.threads.iter().max() {
         for &part in &opts.partitions {
-            cells.push((AlgorithmSpec::RelaxedSmartSplash { h: 2 }, max_p, part, true));
+            cells.push(RosterCell::new(RelaxedSmartSplash { h: 2 }, max_p, part));
         }
-        cells.push((AlgorithmSpec::RelaxedSmartSplash { h: 2 }, max_p, PartitionSpec::Off, false));
+        let base = RosterCell::new(RelaxedSmartSplash { h: 2 }, max_p, PartitionSpec::Off);
+        cells.push(base.clone().edgewise());
+        cells.push(base.scalar());
     }
     cells
 }
@@ -254,28 +314,20 @@ pub fn bench_family(family: &str, opts: &BenchOpts) -> Result<Baseline> {
     let mrf = builders::build(&spec, opts.seed);
     let recorder = TraceRecorder::new(Duration::from_millis(opts.tick_ms.max(1)));
     let mut cells = Vec::new();
-    for (alg, threads, partition, fused) in roster(opts) {
-        // Cells with both axes off keep the historical id (comparable to
-        // pre-partition baselines); affine cells append the partition
-        // label, edgewise (fused-off) cells the `/edgewise` suffix.
-        let mut id = match partition {
-            PartitionSpec::Off => format!("{}/p{threads}", alg.name()),
-            _ => format!("{}/p{threads}/{}", alg.name(), partition.label()),
-        };
-        if !fused {
-            id.push_str("/edgewise");
-        }
+    for rc in roster(opts) {
+        let id = rc.id();
         eprintln!("[bench] {family} / {id} …");
         let mut wall_secs = Vec::with_capacity(opts.samples);
         let mut updates = Vec::with_capacity(opts.samples);
         let mut converged = true;
         let mut last_trace = Trace::default();
         for _ in 0..opts.samples.max(1) {
-            let mut cfg = RunConfig::new(spec.clone(), alg.clone())
-                .with_threads(threads)
+            let mut cfg = RunConfig::new(spec.clone(), rc.alg.clone())
+                .with_threads(rc.threads)
                 .with_seed(opts.seed)
-                .with_partition(partition)
-                .with_fused(fused);
+                .with_partition(rc.partition)
+                .with_fused(rc.fused)
+                .with_kernel(rc.kernel);
             cfg.time_limit_secs = opts.time_limit;
             let rep = run_on_model_observed(&cfg, mrf.clone(), Some(&recorder))?;
             wall_secs.push(rep.stats.wall_secs);
@@ -285,11 +337,12 @@ pub fn bench_family(family: &str, opts: &BenchOpts) -> Result<Baseline> {
         }
         cells.push(CellResult {
             id,
-            algorithm: alg.name(),
-            scheduler: scheduler_kind(&alg).to_string(),
-            threads,
-            partition: partition.label().to_string(),
-            fused,
+            algorithm: rc.alg.name(),
+            scheduler: scheduler_kind(&rc.alg).to_string(),
+            threads: rc.threads,
+            partition: rc.partition.label().to_string(),
+            fused: rc.fused,
+            kernel: rc.kernel.label().to_string(),
             wall_secs,
             updates,
             converged,
@@ -399,18 +452,19 @@ pub fn render_summary(b: &Baseline) -> String {
         if b.quick { ", quick" } else { "" }
     );
     s.push_str(
-        "| cell | scheduler | partition | kernel | median time | updates (median) | trace pts | converged |\n",
+        "| cell | scheduler | partition | refresh | kernel | median time | updates (median) | trace pts | converged |\n",
     );
-    s.push_str("|---|---|---|---|---|---|---|---|\n");
+    s.push_str("|---|---|---|---|---|---|---|---|---|\n");
     for c in &b.cells {
         let med = c.median_secs().unwrap_or(f64::NAN);
         let upd = crate::util::stats::Summary::of(&c.updates).map_or(0.0, |u| u.median);
         s.push_str(&format!(
-            "| {} | {} | {} | {} | {} | {:.0} | {} | {} |\n",
+            "| {} | {} | {} | {} | {} | {} | {:.0} | {} | {} |\n",
             c.id,
             c.scheduler,
             c.partition,
             if c.fused { "fused" } else { "edgewise" },
+            c.kernel,
             crate::util::fmt_duration(med),
             upd,
             c.trace.len(),
@@ -437,36 +491,47 @@ mod tests {
     fn roster_covers_contenders() {
         let opts = BenchOpts::quick();
         let cells = roster(&opts);
-        assert!(cells.iter().any(|(a, _, _, _)| *a == AlgorithmSpec::SequentialResidual));
+        assert!(cells.iter().any(|c| c.alg == AlgorithmSpec::SequentialResidual));
         assert!(cells
             .iter()
-            .any(|(a, p, _, _)| *a == AlgorithmSpec::RelaxedResidual && *p == 2));
-        assert!(cells.iter().any(|(a, _, _, _)| *a == AlgorithmSpec::CoarseGrained));
+            .any(|c| c.alg == AlgorithmSpec::RelaxedResidual && c.threads == 2));
+        assert!(cells.iter().any(|c| c.alg == AlgorithmSpec::CoarseGrained));
         // The locality axis is part of the default sweep.
         assert!(cells
             .iter()
-            .any(|(a, _, part, _)| *a == AlgorithmSpec::RelaxedResidual && part.is_on()));
-        // The kernel axis is part of the default sweep: every relaxed
-        // contender gets a fused-off (edgewise) A/B cell.
+            .any(|c| c.alg == AlgorithmSpec::RelaxedResidual && c.partition.is_on()));
+        // The refresh-shape axis: every relaxed contender gets a
+        // fused-off (edgewise) A/B cell.
         assert!(cells
             .iter()
-            .any(|(a, _, _, fused)| *a == AlgorithmSpec::RelaxedResidual && !*fused));
+            .any(|c| c.alg == AlgorithmSpec::RelaxedResidual && !c.fused));
         assert!(cells
             .iter()
-            .any(|(a, _, _, fused)| *a == AlgorithmSpec::RelaxedSmartSplash { h: 2 } && !*fused));
+            .any(|c| c.alg == AlgorithmSpec::RelaxedSmartSplash { h: 2 } && !c.fused));
+        // The data-path axis: every relaxed contender gets a scalar A/B
+        // cell, and the default cells run the simd kernel.
+        assert!(cells
+            .iter()
+            .any(|c| c.alg == AlgorithmSpec::RelaxedResidual && c.kernel == Kernel::Scalar));
+        assert!(cells.iter().any(|c| {
+            c.alg == AlgorithmSpec::RelaxedSmartSplash { h: 2 } && c.kernel == Kernel::Scalar
+        }));
+        assert!(cells
+            .iter()
+            .filter(|c| c.kernel == Kernel::Simd)
+            .count() > cells.len() / 2);
     }
 
     #[test]
-    fn roster_partition_cells_have_distinct_ids() {
+    fn roster_cells_have_distinct_ids() {
         let opts = BenchOpts::quick();
         let cells = roster(&opts);
-        let ids: std::collections::HashSet<String> = cells
-            .iter()
-            .map(|(a, p, part, fused)| {
-                format!("{}/p{p}/{}/{}", a.name(), part.label(), fused)
-            })
-            .collect();
+        let ids: std::collections::HashSet<String> = cells.iter().map(RosterCell::id).collect();
         assert_eq!(ids.len(), cells.len(), "no duplicate cells");
+        // Suffix policy: axis-default ids keep the historical form.
+        assert!(ids.contains("relaxed_residual/p2"));
+        assert!(ids.contains("relaxed_residual/p2/edgewise"));
+        assert!(ids.contains("relaxed_residual/p2/scalar"));
     }
 
     #[test]

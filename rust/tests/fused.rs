@@ -11,7 +11,7 @@
 //!   successful pop is exactly one of stale / lost claim / processed).
 
 use relaxed_bp::bp::{
-    compute_message, fused_node_refresh, max_marginal_diff, msg_buf, Lookahead, Messages,
+    compute_message, fused_node_refresh, max_marginal_diff, msg_buf, Kernel, Lookahead, Messages,
     NodeScratch,
 };
 use relaxed_bp::configio::{AlgorithmSpec, ModelSpec, PartitionSpec, RunConfig};
@@ -31,7 +31,7 @@ fn family_specs() -> Vec<ModelSpec> {
         ModelSpec::AdversarialTree { n: 36 },
         ModelSpec::UniformTree { n: 40, arity: 3 },
         ModelSpec::Ising { n: 5 },
-        ModelSpec::Potts { n: 4 },
+        ModelSpec::Potts { n: 4, q: 3 },
         ModelSpec::Ldpc { n: 24, flip_prob: 0.07 },
         ModelSpec::PowerLaw { n: 80, m: 3 },
     ]
@@ -59,7 +59,7 @@ fn fused_kernel_matches_edgewise_on_every_family() {
         let mut expect = msg_buf();
         for j in 0..mrf.num_nodes() as u32 {
             let mut emitted = 0usize;
-            fused_node_refresh(&mrf, &msgs, j, None, &mut sc, |e, vals, _cur| {
+            fused_node_refresh(&mrf, &msgs, j, None, &mut sc, Kernel::Scalar, |e, vals, _res| {
                 emitted += 1;
                 let len = compute_message(&mrf, &msgs, e, &mut expect);
                 assert_eq!(len, vals.len(), "{spec:?} edge {e}");
@@ -83,8 +83,8 @@ fn fused_lookahead_init_matches_edgewise_on_every_family() {
         let mrf = builders::build(&spec, 23);
         let msgs = Messages::uniform(&mrf);
         churn(&mrf, &msgs, 1);
-        let edgewise = Lookahead::init(&mrf, &msgs);
-        let fused = Lookahead::init_fused(&mrf, &msgs);
+        let edgewise = Lookahead::init(&mrf, &msgs, Kernel::Scalar);
+        let fused = Lookahead::init_fused(&mrf, &msgs, Kernel::Scalar);
         let mut pa = msg_buf();
         let mut pb = msg_buf();
         for e in 0..mrf.num_messages() as u32 {
@@ -108,7 +108,7 @@ fn fused_lookahead_init_matches_edgewise_on_every_family() {
 fn fused_refresh_node_skip_preserves_untouched_pending() {
     let mrf = builders::build(&ModelSpec::Ising { n: 4 }, 5);
     let msgs = Messages::uniform(&mrf);
-    let la = Lookahead::init(&mrf, &msgs);
+    let la = Lookahead::init(&mrf, &msgs, Kernel::Simd);
     let e = 2u32;
     let rev = mrf.graph.reverse(e);
     let j = mrf.graph.edge_dst[e as usize];

@@ -93,7 +93,7 @@ fn ldpc_decode_agreement_across_main_engines() {
 
 #[test]
 fn model_io_roundtrip_preserves_inference_results() {
-    let spec = ModelSpec::Potts { n: 5 };
+    let spec = ModelSpec::Potts { n: 5, q: 3 };
     let mrf = builders::build(&spec, 9);
     let path = "/tmp/rbp_integration_model.rbpm";
     model_io::save(&mrf, path).unwrap();

@@ -48,7 +48,8 @@ fn pjrt_batched_matches_native_batch() {
 
     let mut out_n = vec![0.0; edges.len() * stride];
     let mut res_n = vec![0.0; edges.len()];
-    NativeBatch.compute_batch(&mrf, &msgs, &edges, &mut out_n, &mut res_n);
+    NativeBatch { kernel: relaxed_bp::bp::Kernel::Scalar }
+        .compute_batch(&mrf, &msgs, &edges, &mut out_n, &mut res_n);
 
     for k in 0..edges.len() {
         for x in 0..2 {

@@ -122,7 +122,7 @@ fn prop_lookahead_residual_consistency() {
         let mut rng = Xoshiro256::seed_from_u64(3000 + seed);
         let mrf = random_tree_mrf(&mut rng);
         let msgs = Messages::uniform(&mrf);
-        let la = Lookahead::init(&mrf, &msgs);
+        let la = Lookahead::init(&mrf, &msgs, relaxed_bp::bp::Kernel::Simd);
         for e in 0..mrf.num_messages() as u32 {
             let mut pend = msg_buf();
             let mut live = msg_buf();

@@ -1,0 +1,307 @@
+//! Property tests for the vectorized message data path (the
+//! `RunConfig::kernel` axis):
+//!
+//! - simd-vs-scalar agreement ≤ 1e-12 for the edge-wise and fused kernels
+//!   on every model family — including transposed edge factors, the exact
+//!   zeros produced by deterministic LDPC parity factors, the
+//!   zero-normalizer uniform fallback, and wide (q = 32) Potts domains;
+//! - the scalar kernel is *bit-for-bit* the historical path (exact
+//!   equality against the reference wrapper composition, not an epsilon);
+//! - fused-residual (in-kernel / fused-write) parity against the
+//!   recomputed read-then-`residual_l2` reference;
+//! - bulk and borrowed-slice message I/O return exactly what per-cell
+//!   reads return;
+//! - end-to-end: scalar and simd engine runs share the fixed point, and
+//!   the simd run still decodes LDPC.
+
+use relaxed_bp::bp::{
+    compute_message, compute_message_with, fused_node_refresh, max_marginal_diff, msg_buf,
+    residual_l2, Kernel, Lookahead, Messages, MsgScratch, MsgSource, NodeScratch,
+};
+use relaxed_bp::configio::{AlgorithmSpec, ModelSpec, RunConfig};
+use relaxed_bp::model::builders;
+use relaxed_bp::run::run_config;
+
+/// Every family in the roster at property-test sizes, including the
+/// wide-domain Potts grid the SIMD axis is aimed at.
+fn family_specs() -> Vec<ModelSpec> {
+    vec![
+        ModelSpec::Tree { n: 31 },
+        ModelSpec::Path { n: 8 },
+        ModelSpec::AdversarialTree { n: 36 },
+        ModelSpec::UniformTree { n: 40, arity: 3 },
+        ModelSpec::Ising { n: 5 },
+        ModelSpec::Potts { n: 4, q: 3 },
+        ModelSpec::Potts { n: 4, q: 32 },
+        ModelSpec::Ldpc { n: 24, flip_prob: 0.07 },
+        ModelSpec::PowerLaw { n: 80, m: 3 },
+    ]
+}
+
+/// Drive the message state away from uniform so products are non-trivial.
+fn churn(mrf: &relaxed_bp::model::Mrf, msgs: &Messages, rounds: usize) {
+    let mut out = msg_buf();
+    for _ in 0..rounds {
+        for e in 0..mrf.num_messages() as u32 {
+            let len = compute_message(mrf, msgs, e, &mut out);
+            msgs.write_msg(mrf, e, &out[..len]);
+        }
+    }
+}
+
+#[test]
+fn simd_matches_scalar_edgewise_on_every_family() {
+    for spec in family_specs() {
+        let mrf = builders::build(&spec, 17);
+        let msgs = Messages::uniform(&mrf);
+        churn(&mrf, &msgs, 2);
+        let mut sc_s = MsgScratch::new();
+        let mut sc_v = MsgScratch::new();
+        let mut a = msg_buf();
+        let mut b = msg_buf();
+        for e in 0..mrf.num_messages() as u32 {
+            let la = compute_message_with(&mrf, &msgs, e, &mut a, &mut sc_s, Kernel::Scalar);
+            let lb = compute_message_with(&mrf, &msgs, e, &mut b, &mut sc_v, Kernel::Simd);
+            assert_eq!(la, lb, "{spec:?} edge {e}");
+            for x in 0..la {
+                assert!(
+                    (a[x] - b[x]).abs() <= 1e-12,
+                    "{spec:?} edge {e} x={x}: scalar {} vs simd {}",
+                    a[x],
+                    b[x]
+                );
+                // Exact zeros (deterministic factors) must survive the
+                // tiled products exactly.
+                if a[x] == 0.0 {
+                    assert_eq!(b[x], 0.0, "{spec:?} edge {e} x={x}: zero not exact");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_matches_scalar_fused_on_every_family() {
+    for spec in family_specs() {
+        let mrf = builders::build(&spec, 29);
+        let msgs = Messages::uniform(&mrf);
+        churn(&mrf, &msgs, 1);
+        let mut sc_s = NodeScratch::new();
+        let mut sc_v = NodeScratch::new();
+        for j in 0..mrf.num_nodes() as u32 {
+            let mut scalar_out: Vec<(u32, Vec<f64>, f64)> = Vec::new();
+            fused_node_refresh(&mrf, &msgs, j, None, &mut sc_s, Kernel::Scalar, |e, vals, res| {
+                scalar_out.push((e, vals.to_vec(), res));
+            });
+            let mut k = 0usize;
+            fused_node_refresh(&mrf, &msgs, j, None, &mut sc_v, Kernel::Simd, |e, vals, res| {
+                let (se, svals, sres) = &scalar_out[k];
+                assert_eq!(*se, e, "{spec:?} node {j} emit order");
+                assert_eq!(svals.len(), vals.len());
+                for x in 0..vals.len() {
+                    assert!(
+                        (svals[x] - vals[x]).abs() <= 1e-12,
+                        "{spec:?} node {j} edge {e} x={x}"
+                    );
+                }
+                assert!(
+                    (sres - res).abs() <= 1e-12,
+                    "{spec:?} node {j} edge {e} residual {sres} vs {res}"
+                );
+                k += 1;
+            });
+            assert_eq!(k, scalar_out.len(), "{spec:?} node {j} emit count");
+        }
+    }
+}
+
+#[test]
+fn scalar_kernel_is_bitwise_the_reference_path() {
+    // The scalar kernel must reproduce the pre-SIMD code path bit for
+    // bit: exact equality against the reference wrapper (which is that
+    // path frozen), for both message values and residual pricing.
+    for spec in family_specs() {
+        let mrf = builders::build(&spec, 41);
+        let msgs = Messages::uniform(&mrf);
+        churn(&mrf, &msgs, 1);
+        let mut gather = MsgScratch::new();
+        let mut a = msg_buf();
+        let mut b = msg_buf();
+        let mut cur = msg_buf();
+        for e in 0..mrf.num_messages() as u32 {
+            let la = compute_message_with(&mrf, &msgs, e, &mut a, &mut gather, Kernel::Scalar);
+            let lb = compute_message(&mrf, &msgs, e, &mut b);
+            assert_eq!(la, lb);
+            assert_eq!(&a[..la], &b[..lb], "{spec:?} edge {e}: scalar not bitwise");
+            // In-kernel residual == read-then-residual_l2, bitwise.
+            let cl = msgs.read_msg(&mrf, e, &mut cur);
+            let want = residual_l2(&a[..la], &cur[..cl]);
+            let got = msgs.residual_l2_against(&mrf, e, &a[..la], Kernel::Scalar);
+            assert_eq!(got.to_bits(), want.to_bits(), "{spec:?} edge {e} residual");
+        }
+    }
+}
+
+#[test]
+fn fused_write_residual_matches_recomputed_residual() {
+    for spec in [ModelSpec::Ldpc { n: 24, flip_prob: 0.07 }, ModelSpec::Potts { n: 4, q: 32 }] {
+        let mrf = builders::build(&spec, 7);
+        let msgs = Messages::uniform(&mrf);
+        churn(&mrf, &msgs, 1);
+        let mut out = msg_buf();
+        let mut cur = msg_buf();
+        for kernel in [Kernel::Scalar, Kernel::Simd] {
+            for e in 0..mrf.num_messages() as u32 {
+                let len = compute_message(&mrf, &msgs, e, &mut out);
+                // Reference: residual against the value before the write.
+                let cl = msgs.read_msg(&mrf, e, &mut cur);
+                let want = residual_l2(&out[..len], &cur[..cl]);
+                let got = msgs.write_msg_residual(&mrf, e, &out[..len], kernel);
+                match kernel {
+                    Kernel::Scalar => {
+                        assert_eq!(got.to_bits(), want.to_bits(), "{spec:?} edge {e}")
+                    }
+                    Kernel::Simd => assert!(
+                        (got - want).abs() <= 1e-12,
+                        "{spec:?} edge {e}: fused {got} vs recomputed {want}"
+                    ),
+                }
+                // The write landed: a second fused write of the same
+                // value reports zero residual.
+                assert_eq!(msgs.write_msg_residual(&mrf, e, &out[..len], kernel), 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn bulk_and_borrowed_reads_match_per_cell_reads() {
+    let inst = builders::ldpc::build(24, 0.07, 11);
+    let mrf = &inst.mrf;
+    let msgs = Messages::uniform(mrf);
+    churn(mrf, &msgs, 1);
+    let snap = msgs.snapshot();
+    let mut a = msg_buf();
+    let mut b = msg_buf();
+    for e in 0..mrf.num_messages() as u32 {
+        let la = msgs.read_msg(mrf, e, &mut a);
+        let lb = msgs.read_msg_bulk(mrf, e, &mut b);
+        assert_eq!(la, lb);
+        assert_eq!(&a[..la], &b[..lb], "edge {e}: bulk read differs");
+        // The live atomic state cannot hand out borrows; snapshots must.
+        assert!(msgs.borrow_msg(mrf, e).is_none());
+        let v = snap.as_slice().borrow_msg(mrf, e).expect("snapshot borrows");
+        assert_eq!(v, &a[..la], "edge {e}: borrowed slice differs");
+        // Bulk writes land the same values as per-cell writes.
+        msgs.write_msg_bulk(mrf, e, &a[..la]);
+        let lc = msgs.read_msg(mrf, e, &mut b);
+        assert_eq!(&a[..la], &b[..lc], "edge {e}: bulk write differs");
+    }
+}
+
+#[test]
+fn zero_normalizer_fallback_identical_across_kernels() {
+    use relaxed_bp::model::{FactorPool, GraphBuilder, Mrf, NodeFactors};
+    let mut gb = GraphBuilder::new(2);
+    gb.add_edge(0, 1);
+    let g = gb.build();
+    let mut pool = FactorPool::new();
+    let f = pool.add(2, 2, &[0.0, 0.0, 0.0, 0.0]);
+    let m = Mrf::assemble(
+        "zero",
+        g,
+        vec![2, 2],
+        NodeFactors::from_vecs(&[vec![1.0, 1.0], vec![1.0, 1.0]]),
+        vec![f],
+        pool,
+    );
+    let msgs = Messages::uniform(&m);
+    let mut out = msg_buf();
+    let mut gather = MsgScratch::new();
+    for kernel in [Kernel::Scalar, Kernel::Simd] {
+        compute_message_with(&m, &msgs, 0, &mut out, &mut gather, kernel);
+        assert_eq!(&out[..2], &[0.5, 0.5], "{kernel:?}");
+    }
+}
+
+#[test]
+fn lookahead_kernels_agree_and_price_identically() {
+    for spec in [ModelSpec::Ldpc { n: 24, flip_prob: 0.07 }, ModelSpec::PowerLaw { n: 60, m: 3 }] {
+        let mrf = builders::build(&spec, 13);
+        let live = Messages::uniform(&mrf);
+        let a = Lookahead::init_fused(&mrf, &live, Kernel::Scalar);
+        let b = Lookahead::init_fused(&mrf, &live, Kernel::Simd);
+        let mut pa = msg_buf();
+        let mut pb = msg_buf();
+        for e in 0..mrf.num_messages() as u32 {
+            assert!((a.residual(e) - b.residual(e)).abs() <= 1e-12, "{spec:?} edge {e}");
+            let la = a.read_pending(&mrf, e, &mut pa);
+            let lb = b.read_pending(&mrf, e, &mut pb);
+            assert_eq!(la, lb);
+            for x in 0..la {
+                assert!((pa[x] - pb[x]).abs() <= 1e-12, "{spec:?} edge {e} x={x}");
+            }
+        }
+        assert_eq!(a.kernel(), Kernel::Scalar);
+        assert_eq!(b.kernel(), Kernel::Simd);
+    }
+}
+
+/// Scalar and simd engine runs of the same config land on the same fixed
+/// point. Repeated scalar runs are bit-stable (deterministic update
+/// count) — pinning the pre-SIMD trajectory as reproducible.
+#[test]
+fn engine_runs_share_fixed_point_across_kernels() {
+    for alg in [
+        AlgorithmSpec::SequentialResidual,
+        AlgorithmSpec::RelaxedResidual,
+        AlgorithmSpec::Priority,
+    ] {
+        let mut marginals = Vec::new();
+        for kernel in [Kernel::Scalar, Kernel::Simd] {
+            let mut cfg = RunConfig::new(ModelSpec::Potts { n: 4, q: 32 }, alg.clone())
+                .with_threads(2)
+                .with_seed(37)
+                .with_kernel(kernel);
+            cfg.time_limit_secs = 60.0;
+            let rep = run_config(&cfg).unwrap();
+            assert!(rep.stats.converged, "{alg:?} {kernel:?}");
+            marginals.push(rep.marginals());
+        }
+        let diff = max_marginal_diff(&marginals[0], &marginals[1]);
+        assert!(diff < 1e-2, "{alg:?}: scalar vs simd diff {diff}");
+    }
+    // The scalar trajectory is reproducible run to run (bit-stable
+    // sequential engine: identical update counts).
+    let mut counts = Vec::new();
+    for _ in 0..2 {
+        let cfg = RunConfig::new(
+            ModelSpec::Potts { n: 4, q: 32 },
+            AlgorithmSpec::SequentialResidual,
+        )
+        .with_seed(37)
+        .with_kernel(Kernel::Scalar);
+        let rep = run_config(&cfg).unwrap();
+        assert!(rep.stats.converged);
+        counts.push(rep.stats.metrics.total.updates);
+    }
+    assert_eq!(counts[0], counts[1], "scalar sequential trajectory is deterministic");
+}
+
+#[test]
+fn ldpc_decodes_under_both_kernels() {
+    let inst = builders::ldpc::build(48, 0.05, 19);
+    let spec = ModelSpec::Ldpc { n: 48, flip_prob: 0.05 };
+    for kernel in [Kernel::Scalar, Kernel::Simd] {
+        let cfg = RunConfig::new(spec.clone(), AlgorithmSpec::RelaxedResidual)
+            .with_threads(2)
+            .with_seed(19)
+            .with_kernel(kernel);
+        let msgs = relaxed_bp::run::build_messages(&cfg, &inst.mrf);
+        let engine = relaxed_bp::engines::build_engine(&cfg.algorithm);
+        let stats = engine.run(&inst.mrf, &msgs, &cfg).unwrap();
+        assert!(stats.converged, "{kernel:?}");
+        let bits = relaxed_bp::bp::decode_bits(&inst.mrf, &msgs, inst.num_vars);
+        assert_eq!(bits, inst.sent, "{kernel:?}");
+    }
+}
