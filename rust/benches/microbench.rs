@@ -10,7 +10,7 @@
 use relaxed_bp::benchlib::{BenchConfig, BenchGroup};
 use relaxed_bp::bp::{
     compute_message_with, fused_node_refresh, msg_buf, Kernel, Lookahead, Messages, MsgScratch,
-    NodeScratch,
+    NodeScratch, Precision,
 };
 use relaxed_bp::configio::ModelSpec;
 use relaxed_bp::engines::batched::{BatchCompute, NativeBatch};
@@ -145,6 +145,34 @@ fn main() {
             g.bench(&format!("{}/{}_sweep_{me}", spec.name(), kernel.label()), || {
                 for e in 0..me {
                     compute_message_with(&mrf, &msgs, e, &mut out, &mut gather, kernel);
+                }
+                me as f64
+            });
+        }
+    }
+    g.report();
+
+    // ---- Storage precision: f64 vs f32 arenas under the full
+    // read→compute→write cycle (gathers widen, stores round; the compute
+    // in between is identical f64 either way, so the delta is pure
+    // memory-path) ----
+    let mut g = BenchGroup::new("precision").with_config(cfg());
+    for spec in [
+        ModelSpec::Ldpc { n: if quick() { 120 } else { 3_000 }, flip_prob: 0.07 },
+        ModelSpec::Potts { n: if quick() { 8 } else { 40 }, q: 32 },
+        ModelSpec::Ising { n: if quick() { 16 } else { 100 } },
+    ] {
+        let mrf = builders::build(&spec, 1);
+        let me = mrf.num_messages() as u32;
+        for precision in [Precision::F64, Precision::F32] {
+            let msgs = Messages::uniform_with(&mrf, precision);
+            let mut out = msg_buf();
+            let mut gather = MsgScratch::new();
+            g.bench(&format!("{}/{}_rw_sweep_{me}", spec.name(), precision.label()), || {
+                for e in 0..me {
+                    let len =
+                        compute_message_with(&mrf, &msgs, e, &mut out, &mut gather, Kernel::Simd);
+                    msgs.write_msg_bulk(&mrf, e, &out[..len]);
                 }
                 me as f64
             });

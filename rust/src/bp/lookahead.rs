@@ -78,6 +78,14 @@ impl Lookahead {
         self.kernel
     }
 
+    /// Footprint of the pending store as `(logical_bytes, padded_bytes)`
+    /// (see [`Messages::arena_bytes`]). The pending arenas mirror the live
+    /// state's precision, so a lookahead engine's message memory is the
+    /// live bytes plus exactly this.
+    pub fn arena_bytes(&self) -> (usize, usize) {
+        self.pending.arena_bytes()
+    }
+
     /// Current residual (priority) of edge `e`.
     #[inline]
     pub fn residual(&self, e: u32) -> f64 {

@@ -28,6 +28,12 @@
 /// atomic-cell loops in `bp::state` tile with the same width.
 pub const LANES: usize = 4;
 
+/// Number of f32 lanes per convert tile (one AVX2 `ps` vector — two `pd`
+/// vectors after widening). The precision axis's f32 bulk I/O paths
+/// (`bp::state`) tile with this width: one 32-byte load covers 8 stored
+/// cells, which then widen to two 4-lane f64 vectors in registers.
+pub const WIDE_LANES: usize = 8;
+
 /// Which inner-loop implementation the message kernels use — the
 /// update-kernel axis (`--kernel scalar|simd`, default `simd`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -336,6 +342,122 @@ unsafe fn sq_diff_sum_avx2(a: &[f64], b: &[f64]) -> f64 {
     reduce(acc, tail)
 }
 
+/// Convert-on-load widen tile: `out[i] = src[i] as f64`.
+///
+/// The gather half of the f32 message arena's bulk I/O (the precision
+/// axis): stored cells stream out as full cache lines of `f32` and widen
+/// to `f64` in 8-lane tiles, so compute stays double precision in
+/// registers while memory traffic is halved. `f32 → f64` is exact, so the
+/// portable and AVX2 paths are trivially bit-identical.
+#[inline]
+pub fn widen(out: &mut [f64], src: &[f32]) {
+    // Hard slice: the AVX2 path must never read past a short `src`.
+    let src = &src[..out.len()];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: avx2() verified the CPU supports the target
+            // feature, and both slices are exactly out.len() long.
+            unsafe { widen_avx2(out, src) };
+            return;
+        }
+    }
+    widen_tiled(out, src);
+}
+
+#[inline]
+fn widen_tiled(out: &mut [f64], src: &[f32]) {
+    let n = out.len();
+    let mut chunks = out.chunks_exact_mut(WIDE_LANES);
+    let mut xs = src[..n].chunks_exact(WIDE_LANES);
+    for (o, s) in chunks.by_ref().zip(xs.by_ref()) {
+        for l in 0..WIDE_LANES {
+            o[l] = s[l] as f64;
+        }
+    }
+    for (o, s) in chunks.into_remainder().iter_mut().zip(xs.remainder()) {
+        *o = *s as f64;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn widen_avx2(out: &mut [f64], src: &[f32]) {
+    use std::arch::x86_64::*;
+    let n = out.len();
+    let mut k = 0;
+    while k + WIDE_LANES <= n {
+        // One 8-wide f32 load, widened to two 4-wide f64 vectors.
+        let s = _mm256_loadu_ps(src.as_ptr().add(k));
+        let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(s));
+        let hi = _mm256_cvtps_pd(_mm256_extractf128_ps(s, 1));
+        _mm256_storeu_pd(out.as_mut_ptr().add(k), lo);
+        _mm256_storeu_pd(out.as_mut_ptr().add(k + LANES), hi);
+        k += WIDE_LANES;
+    }
+    while k < n {
+        out[k] = src[k] as f64;
+        k += 1;
+    }
+}
+
+/// Round-on-store narrow tile: `out[i] = src[i] as f32` (round to nearest
+/// even — the precision axis's single rounding point per stored cell).
+///
+/// The scatter half of the f32 arena's bulk I/O. `as f32` and
+/// `_mm256_cvtpd_ps` both round to nearest even, so the portable and AVX2
+/// paths are bit-identical.
+#[inline]
+pub fn narrow(out: &mut [f32], src: &[f64]) {
+    // Hard slice: the AVX2 path must never read past a short `src`.
+    let src = &src[..out.len()];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: avx2() verified the CPU supports the target
+            // feature, and both slices are exactly out.len() long.
+            unsafe { narrow_avx2(out, src) };
+            return;
+        }
+    }
+    narrow_tiled(out, src);
+}
+
+#[inline]
+fn narrow_tiled(out: &mut [f32], src: &[f64]) {
+    let n = out.len();
+    let mut chunks = out.chunks_exact_mut(WIDE_LANES);
+    let mut xs = src[..n].chunks_exact(WIDE_LANES);
+    for (o, s) in chunks.by_ref().zip(xs.by_ref()) {
+        for l in 0..WIDE_LANES {
+            o[l] = s[l] as f32;
+        }
+    }
+    for (o, s) in chunks.into_remainder().iter_mut().zip(xs.remainder()) {
+        *o = *s as f32;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn narrow_avx2(out: &mut [f32], src: &[f64]) {
+    use std::arch::x86_64::*;
+    let n = out.len();
+    let mut k = 0;
+    while k + WIDE_LANES <= n {
+        // Two 4-wide f64 loads, narrowed into one 8-wide f32 store.
+        let lo = _mm256_cvtpd_ps(_mm256_loadu_pd(src.as_ptr().add(k)));
+        let hi = _mm256_cvtpd_ps(_mm256_loadu_pd(src.as_ptr().add(k + LANES)));
+        let s = _mm256_set_m128(hi, lo);
+        _mm256_storeu_ps(out.as_mut_ptr().add(k), s);
+        k += WIDE_LANES;
+    }
+    while k < n {
+        out[k] = src[k] as f32;
+        k += 1;
+    }
+}
+
 /// Tiled normalize-to-sum-1 with the same uniform fallback convention as
 /// the scalar [`normalize`](crate::bp::update::normalize): a zero or
 /// non-finite normalizer (possible with deterministic factors) yields the
@@ -432,6 +554,48 @@ mod tests {
         let mut nan = vec![f64::NAN, 1.0];
         normalize_simd(&mut nan);
         assert_eq!(nan, vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn widen_is_exact_and_narrow_rounds_to_nearest() {
+        for n in [0, 1, 4, 7, 8, 9, 15, 16, 17, 63, 64] {
+            let src64 = seq(n, 0.5);
+            let src32: Vec<f32> = src64.iter().map(|&v| v as f32).collect();
+            // widen: f32 → f64 is exact.
+            let mut wide = vec![0.0f64; n];
+            widen(&mut wide, &src32);
+            let expect: Vec<f64> = src32.iter().map(|&v| v as f64).collect();
+            assert_eq!(wide, expect, "widen n={n}");
+            // narrow: same round-to-nearest-even as `as f32`.
+            let mut nar = vec![0.0f32; n];
+            narrow(&mut nar, &src64);
+            assert_eq!(nar, src32, "narrow n={n}");
+            // Dispatch (AVX2 when present) vs portable tiles: bitwise.
+            let mut wide_t = vec![0.0f64; n];
+            widen_tiled(&mut wide_t, &src32);
+            assert_eq!(wide, wide_t, "widen dispatch n={n}");
+            let mut nar_t = vec![0.0f32; n];
+            narrow_tiled(&mut nar_t, &src64);
+            assert_eq!(nar, nar_t, "narrow dispatch n={n}");
+        }
+    }
+
+    #[test]
+    fn widen_narrow_roundtrip_preserves_f32_values() {
+        let src32: Vec<f32> = seq(33, 0.6).iter().map(|&v| v as f32).collect();
+        let mut wide = vec![0.0f64; 33];
+        widen(&mut wide, &src32);
+        let mut back = vec![0.0f32; 33];
+        narrow(&mut back, &wide);
+        assert_eq!(back, src32);
+        // Special values survive the convert tiles.
+        let specials = [0.0f32, -0.0, f32::INFINITY, 1.0e-40 /* subnormal */];
+        let mut w = vec![0.0f64; 4];
+        widen(&mut w, &specials);
+        assert_eq!(w[1].to_bits(), (-0.0f64).to_bits());
+        let mut b = vec![0.0f32; 4];
+        narrow(&mut b, &w);
+        assert_eq!(b, specials);
     }
 
     #[test]

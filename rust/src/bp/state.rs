@@ -1,14 +1,26 @@
 //! Shared message state.
 //!
 //! Message vectors live in per-shard, cache-line-aligned **arenas** of
-//! [`AtomicF64`] cells. The default ([`Messages::uniform`]) is one arena
-//! whose cell order is exactly the flat layout from [`Mrf::msg_offset`] —
+//! atomic cells. The default ([`Messages::uniform`]) is one arena whose
+//! cell order is exactly the flat layout from [`Mrf::msg_offset`] —
 //! bit-for-bit the historical flat-array behavior. A locality-aware run
 //! ([`Messages::uniform_partitioned`]) lays each
 //! [`Partition`](crate::model::Partition) shard's messages out
 //! contiguously in that shard's own arena, so a worker that stays on its
 //! shard walks hot, contiguous cache lines instead of striding a single
 //! model-sized array.
+//!
+//! The **storage precision** of the cells is a run axis
+//! ([`Precision`], `RunConfig::precision`): an arena holds either
+//! [`AtomicF64`] cells (8 per 64-byte line — the default, bit-frozen arm)
+//! or [`AtomicF32`](crate::util::AtomicF32) cells (16 per line — half the
+//! message bytes, double the lanes per vector load). Compute always stays
+//! `f64` in registers: reads widen (`f32 → f64` is exact) and writes round
+//! once (`as f32`, round-to-nearest-even), so each stored cell has exactly
+//! one rounding point per message write and the scalar/SIMD kernels need
+//! no numeric forking. Residual pricing compares the *rounded* candidate
+//! against the stored cell, so an f32 fixed point prices to an exact zero
+//! residual in every engine.
 //!
 //! Either way, worker threads read and write cells with relaxed atomics —
 //! the same benign-race discipline as the paper's Java implementation. A
@@ -20,11 +32,13 @@
 //! Snapshots ([`Messages::snapshot`] / [`Messages::restore`] and the
 //! `MsgSource for [f64]` impl) always use the *flat* `msg_offset` layout
 //! regardless of the arena sharding, so frozen state is interchangeable
-//! across layouts.
+//! across layouts. A snapshot of an f32 run is f32-exact: every stored
+//! value is exactly representable in `f32`, so widening into the `f64`
+//! snapshot and restoring (which re-rounds) round-trips bit-for-bit.
 
 use super::simd::{self, Kernel};
 use crate::model::{Mrf, Partition, MAX_DOMAIN};
-use crate::util::AtomicF64;
+use crate::util::{AtomicF32, AtomicF64};
 
 /// Fixed-size stack buffer for one message / one domain's worth of values.
 pub type MsgBuf = [f64; MAX_DOMAIN];
@@ -42,9 +56,52 @@ pub fn msg_buf() -> MsgBuf {
     [0.0; MAX_DOMAIN]
 }
 
+/// Storage precision of the live message arenas (`--precision`).
+///
+/// [`Precision::F64`] is the bit-frozen reference arm: arenas hold
+/// [`AtomicF64`] cells and a run's trajectory is bit-identical to the
+/// pre-axis code. [`Precision::F32`] halves message bytes (16 cells per
+/// cache line instead of 8): compute stays `f64` in registers, values
+/// round to `f32` once per store and widen exactly on load.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// 8-byte cells, bit-frozen reference arm (default).
+    #[default]
+    F64,
+    /// 4-byte cells: half the arena bytes, one rounding per store.
+    F32,
+}
+
+impl Precision {
+    /// Stable label used by the CLI, JSON configs, and bench cell ids.
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
+    }
+
+    /// True for the reduced-precision arm.
+    pub fn is_f32(self) -> bool {
+        matches!(self, Precision::F32)
+    }
+
+    /// Bytes of one stored message cell (excludes arena line padding).
+    pub fn bytes_per_cell(self) -> usize {
+        match self {
+            Precision::F64 => 8,
+            Precision::F32 => 4,
+        }
+    }
+}
+
 /// Something messages can be read from: the live atomic state or a plain
 /// snapshot (used by the synchronous engine's double buffering and by
 /// marginal computation on frozen state).
+///
+/// Values always surface as `f64` regardless of the source's storage
+/// precision — an f32-backed source widens on load (exact), so kernels
+/// downstream never fork on precision.
 pub trait MsgSource {
     /// Copy message `e` into `out[..len]`; returns `len`.
     fn read_msg(&self, mrf: &Mrf, e: u32, out: &mut [f64]) -> usize;
@@ -69,13 +126,16 @@ pub trait MsgSource {
         None
     }
 
-    /// In-kernel L2 residual: `‖new − μ_e‖₂` computed in one pass over the
-    /// source's cells, without materializing the current value in a
-    /// caller buffer. The scalar kernel accumulates in exactly the order
-    /// of [`residual_l2`](crate::bp::update::residual_l2) over a fresh
-    /// read, so it is bit-for-bit the historical
-    /// read-then-`residual_l2` composition; the SIMD kernel uses the
-    /// lane-tiled reduction.
+    /// In-kernel L2 residual: `‖round(new) − μ_e‖₂` computed in one pass
+    /// over the source's cells, without materializing the current value in
+    /// a caller buffer. `new` is priced *through the source's storage
+    /// precision* (identity for f64 sources, so the scalar f64 path stays
+    /// bit-for-bit the historical read-then-`residual_l2` composition;
+    /// `as f32 as f64` for f32-backed state, so a value that would store
+    /// unchanged prices to exactly zero). The scalar kernel accumulates in
+    /// exactly the order of
+    /// [`residual_l2`](crate::bp::update::residual_l2); the SIMD kernel
+    /// uses the lane-tiled reduction.
     fn residual_l2_against(&self, mrf: &Mrf, e: u32, new: &[f64], kernel: Kernel) -> f64 {
         let mut cur = msg_buf();
         let len = self.read_msg(mrf, e, &mut cur);
@@ -87,32 +147,164 @@ pub trait MsgSource {
     }
 }
 
-/// Cells per 64-byte cache line (an [`AtomicF64`] is 8 bytes).
-const CELLS_PER_LINE: usize = 8;
+/// One storage cell type of the message arenas. Sealed by privacy: the
+/// only implementors are [`CellF64`] (the bit-frozen default) and
+/// [`CellF32`]; everything generic over this trait is module-internal and
+/// surfaces through the precision-dispatching [`Messages`] facade.
+trait MsgCell: 'static {
+    /// Cells per 64-byte cache line.
+    const PER_LINE: usize;
+    /// The [`Precision`] tag this cell type implements.
+    const PRECISION: Precision;
+    /// One cache-line-aligned array of atomic cells.
+    type Line: Sync + Send;
 
-/// One cache line of message cells. The alignment guarantee is what makes
-/// per-shard arenas genuinely private at the cache level: two shards never
-/// share a line, so cross-shard false sharing cannot occur.
+    /// Build one full line from `vals[base..]`, zero-padding past the end
+    /// (a single non-atomic initialization pass over freshly owned cells).
+    fn line_from(vals: &[f64], base: usize) -> Self::Line;
+    /// Relaxed load of cell `k`, widened to `f64` (exact).
+    fn load(line: &Self::Line, k: usize) -> f64;
+    /// Relaxed store of cell `k`, rounded to the storage precision.
+    fn store(line: &Self::Line, k: usize, v: f64);
+    /// The value `v` would hold after a store: identity for f64,
+    /// `v as f32 as f64` (round-to-nearest-even) for f32. Residual
+    /// pricing uses this so candidates compare against what storage
+    /// actually keeps.
+    fn round(v: f64) -> f64;
+    /// Bulk-read a full line into `out[..PER_LINE]` — the convert-on-load
+    /// gather tile of the SIMD bulk I/O path.
+    fn read_line(line: &Self::Line, out: &mut [f64]);
+    /// Bulk-write a full line from `vals[..PER_LINE]` — the round-on-store
+    /// scatter tile.
+    fn write_line(line: &Self::Line, vals: &[f64]);
+}
+
+/// One cache line of f64 message cells. The alignment guarantee is what
+/// makes per-shard arenas genuinely private at the cache level: two shards
+/// never share a line, so cross-shard false sharing cannot occur.
 #[repr(align(64))]
-struct CacheLine([AtomicF64; CELLS_PER_LINE]);
+struct LineF64([AtomicF64; 8]);
+
+/// One cache line of f32 message cells — 16 per line, half the bytes per
+/// message. Same alignment/no-false-sharing guarantee as [`LineF64`].
+#[repr(align(64))]
+struct LineF32([AtomicF32; 16]);
+
+/// The bit-frozen f64 storage arm.
+struct CellF64;
+
+impl MsgCell for CellF64 {
+    const PER_LINE: usize = 8;
+    const PRECISION: Precision = Precision::F64;
+    type Line = LineF64;
+
+    #[inline]
+    fn line_from(vals: &[f64], base: usize) -> LineF64 {
+        LineF64(std::array::from_fn(|k| {
+            AtomicF64::new(vals.get(base + k).copied().unwrap_or(0.0))
+        }))
+    }
+
+    #[inline]
+    fn load(line: &LineF64, k: usize) -> f64 {
+        line.0[k].load()
+    }
+
+    #[inline]
+    fn store(line: &LineF64, k: usize, v: f64) {
+        line.0[k].store(v);
+    }
+
+    #[inline]
+    fn round(v: f64) -> f64 {
+        v
+    }
+
+    #[inline]
+    fn read_line(line: &LineF64, out: &mut [f64]) {
+        // Unrolled relaxed loads of the whole line (atomic loads never
+        // auto-vectorize; removing per-cell index math is the win).
+        for (o, c) in out.iter_mut().zip(&line.0) {
+            *o = c.load();
+        }
+    }
+
+    #[inline]
+    fn write_line(line: &LineF64, vals: &[f64]) {
+        for (c, v) in line.0.iter().zip(vals) {
+            c.store(*v);
+        }
+    }
+}
+
+/// The reduced-precision f32 storage arm.
+struct CellF32;
+
+impl MsgCell for CellF32 {
+    const PER_LINE: usize = 16;
+    const PRECISION: Precision = Precision::F32;
+    type Line = LineF32;
+
+    #[inline]
+    fn line_from(vals: &[f64], base: usize) -> LineF32 {
+        LineF32(std::array::from_fn(|k| {
+            AtomicF32::new(vals.get(base + k).copied().unwrap_or(0.0) as f32)
+        }))
+    }
+
+    #[inline]
+    fn load(line: &LineF32, k: usize) -> f64 {
+        line.0[k].load() as f64
+    }
+
+    #[inline]
+    fn store(line: &LineF32, k: usize, v: f64) {
+        line.0[k].store(v as f32);
+    }
+
+    #[inline]
+    fn round(v: f64) -> f64 {
+        (v as f32) as f64
+    }
+
+    #[inline]
+    fn read_line(line: &LineF32, out: &mut [f64]) {
+        // Gather the 16 relaxed cells to a stack tile, then widen with the
+        // 8-lane convert tiles (AVX2: one 32-byte load → two f64 vectors).
+        let mut tmp = [0.0f32; 16];
+        for (t, c) in tmp.iter_mut().zip(&line.0) {
+            *t = c.load();
+        }
+        simd::widen(&mut out[..16], &tmp);
+    }
+
+    #[inline]
+    fn write_line(line: &LineF32, vals: &[f64]) {
+        let mut tmp = [0.0f32; 16];
+        simd::narrow(&mut tmp, &vals[..16]);
+        for (c, t) in line.0.iter().zip(&tmp) {
+            c.store(*t);
+        }
+    }
+}
 
 /// Build one arena from plain values — a single non-atomic initialization
 /// pass over a freshly owned allocation (the cells become shared only when
 /// the arena is published to worker threads).
-fn arena_from_values(vals: &[f64]) -> Box<[CacheLine]> {
-    (0..vals.len().div_ceil(CELLS_PER_LINE))
-        .map(|l| {
-            CacheLine(std::array::from_fn(|k| {
-                AtomicF64::new(vals.get(l * CELLS_PER_LINE + k).copied().unwrap_or(0.0))
-            }))
-        })
+fn arena_from_values<C: MsgCell>(vals: &[f64]) -> Box<[C::Line]> {
+    (0..vals.len().div_ceil(C::PER_LINE))
+        .map(|l| C::line_from(vals, l * C::PER_LINE))
         .collect()
 }
 
-/// The live, concurrently-updatable message state.
-pub struct Messages {
+/// The generic storage engine behind [`Messages`]: per-shard arenas of one
+/// concrete cell type. All indexing/tiling logic lives here once; the f64
+/// monomorphization is line-for-line the historical code (identity
+/// rounding, 8 cells per line), which is what keeps the f64 arm
+/// bit-frozen.
+struct ArenaSet<C: MsgCell> {
     /// One cache-line-aligned cell arena per shard.
-    arenas: Vec<Box<[CacheLine]>>,
+    arenas: Vec<Box<[C::Line]>>,
     /// Shard holding each message.
     edge_shard: Box<[u32]>,
     /// Cell offset of each message within its shard's arena.
@@ -122,12 +314,8 @@ pub struct Messages {
     flat_offset: Box<[u32]>,
 }
 
-impl Messages {
-    /// All messages initialized uniform (1/|D|), in one flat arena whose
-    /// cell order is the `Mrf::msg_offset` layout. Initialization is a
-    /// single bulk pass — no per-cell atomic stores on the freshly owned
-    /// allocation.
-    pub fn uniform(mrf: &Mrf) -> Self {
+impl<C: MsgCell> ArenaSet<C> {
+    fn uniform(mrf: &Mrf) -> Self {
         let me = mrf.num_messages();
         let mut vals = vec![0.0f64; mrf.total_msg_len];
         for e in 0..me as u32 {
@@ -135,21 +323,15 @@ impl Messages {
             let off = mrf.msg_offset[e as usize] as usize;
             vals[off..off + len].fill(1.0 / len as f64);
         }
-        Messages {
-            arenas: vec![arena_from_values(&vals)],
+        ArenaSet {
+            arenas: vec![arena_from_values::<C>(&vals)],
             edge_shard: vec![0u32; me].into_boxed_slice(),
             edge_local: mrf.msg_offset.clone().into_boxed_slice(),
-            flat_offset: Self::flat_offsets(mrf),
+            flat_offset: flat_offsets(mrf),
         }
     }
 
-    /// All messages initialized uniform, with each shard of `partition`
-    /// (over the message universe: `partition.num_tasks()` must equal
-    /// `mrf.num_messages()`) stored contiguously in its own cache-line-
-    /// aligned arena. Behaviorally identical to [`Messages::uniform`]
-    /// through [`MsgSource`] / [`Messages::write_msg`]; only the physical
-    /// layout differs.
-    pub fn uniform_partitioned(mrf: &Mrf, partition: &Partition) -> Self {
+    fn uniform_partitioned(mrf: &Mrf, partition: &Partition) -> Self {
         let me = mrf.num_messages();
         assert_eq!(
             partition.num_tasks(),
@@ -169,26 +351,23 @@ impl Messages {
                 let len = mrf.msg_len(e);
                 vals.resize(vals.len() + len, 1.0 / len as f64);
             }
-            arenas.push(arena_from_values(&vals));
+            arenas.push(arena_from_values::<C>(&vals));
         }
-        Messages {
+        ArenaSet {
             arenas,
             edge_shard: edge_shard.into_boxed_slice(),
             edge_local: edge_local.into_boxed_slice(),
-            flat_offset: Self::flat_offsets(mrf),
+            flat_offset: flat_offsets(mrf),
         }
     }
 
-    /// Uniform state sharing `layout`'s arena sharding — used by caches
-    /// that shadow the live state (the residual lookahead) so their
-    /// locality matches the state they mirror.
-    pub fn uniform_like(mrf: &Mrf, layout: &Messages) -> Self {
-        let me = mrf.num_messages();
-        assert_eq!(layout.num_messages(), me, "layout built for a different model");
+    fn uniform_like(mrf: &Mrf, layout: &ArenaSet<C>) -> Self {
+        let me = layout.edge_shard.len();
+        assert_eq!(mrf.num_messages(), me, "layout built for a different model");
         let mut vals: Vec<Vec<f64>> = layout
             .arenas
             .iter()
-            .map(|a| vec![0.0f64; a.len() * CELLS_PER_LINE])
+            .map(|a| vec![0.0f64; a.len() * C::PER_LINE])
             .collect();
         for e in 0..me as u32 {
             let s = layout.edge_shard[e as usize] as usize;
@@ -196,86 +375,77 @@ impl Messages {
             let len = mrf.msg_len(e);
             vals[s][off..off + len].fill(1.0 / len as f64);
         }
-        Messages {
-            arenas: vals.iter().map(|v| arena_from_values(v)).collect(),
+        ArenaSet {
+            arenas: vals.iter().map(|v| arena_from_values::<C>(v)).collect(),
             edge_shard: layout.edge_shard.clone(),
             edge_local: layout.edge_local.clone(),
             flat_offset: layout.flat_offset.clone(),
         }
     }
 
-    fn flat_offsets(mrf: &Mrf) -> Box<[u32]> {
-        let mut flat = Vec::with_capacity(mrf.num_messages() + 1);
-        flat.extend_from_slice(&mrf.msg_offset);
-        flat.push(mrf.total_msg_len as u32);
-        flat.into_boxed_slice()
+    #[inline]
+    fn line(&self, shard: usize, idx: usize) -> (&C::Line, usize) {
+        (&self.arenas[shard][idx / C::PER_LINE], idx % C::PER_LINE)
     }
 
     #[inline]
-    fn cell(&self, shard: usize, idx: usize) -> &AtomicF64 {
-        &self.arenas[shard][idx / CELLS_PER_LINE].0[idx % CELLS_PER_LINE]
+    fn cell_load(&self, shard: usize, idx: usize) -> f64 {
+        let (line, k) = self.line(shard, idx);
+        C::load(line, k)
     }
 
-    /// Number of messages tracked.
-    pub fn num_messages(&self) -> usize {
-        self.edge_shard.len()
-    }
-
-    /// Number of arena shards (1 for the flat [`Messages::uniform`] layout).
-    pub fn num_shards(&self) -> usize {
-        self.arenas.len()
-    }
-
-    /// Write message `e` from `vals[..len]`.
     #[inline]
-    pub fn write_msg(&self, mrf: &Mrf, e: u32, vals: &[f64]) {
+    fn cell_store(&self, shard: usize, idx: usize, v: f64) {
+        let (line, k) = self.line(shard, idx);
+        C::store(line, k, v);
+    }
+
+    fn len(&self) -> usize {
+        self.flat_offset.last().map_or(0, |&t| t as usize)
+    }
+
+    /// (logical bytes, padded bytes): logical counts the live cells at the
+    /// storage width; padded counts whole allocated 64-byte lines.
+    fn arena_bytes(&self) -> (usize, usize) {
+        let logical = self.len() * C::PRECISION.bytes_per_cell();
+        let padded = self.arenas.iter().map(|a| a.len()).sum::<usize>() * 64;
+        (logical, padded)
+    }
+
+    #[inline]
+    fn write_msg(&self, mrf: &Mrf, e: u32, vals: &[f64]) {
         let len = mrf.msg_len(e);
         debug_assert!(vals.len() >= len);
         let shard = self.edge_shard[e as usize] as usize;
         let off = self.edge_local[e as usize] as usize;
         for k in 0..len {
-            self.cell(shard, off + k).store(vals[k]);
+            self.cell_store(shard, off + k, vals[k]);
         }
     }
 
-    /// Bulk [`Messages::write_msg`]: stores stream whole cache-line tiles
-    /// (one line lookup per 8 cells instead of one index computation per
-    /// cell). Identical stored values and relaxed ordering; used by the
-    /// SIMD kernel's write pass.
     #[inline]
-    pub fn write_msg_bulk(&self, mrf: &Mrf, e: u32, vals: &[f64]) {
+    fn write_msg_bulk(&self, mrf: &Mrf, e: u32, vals: &[f64]) {
         let len = mrf.msg_len(e);
         debug_assert!(vals.len() >= len);
         let shard = self.edge_shard[e as usize] as usize;
         let off = self.edge_local[e as usize] as usize;
         let arena = &self.arenas[shard];
         let mut k = 0;
-        while k < len && (off + k) % CELLS_PER_LINE != 0 {
-            self.cell(shard, off + k).store(vals[k]);
+        while k < len && (off + k) % C::PER_LINE != 0 {
+            self.cell_store(shard, off + k, vals[k]);
             k += 1;
         }
-        while k + CELLS_PER_LINE <= len {
-            let line = &arena[(off + k) / CELLS_PER_LINE].0;
-            for (c, v) in line.iter().zip(&vals[k..k + CELLS_PER_LINE]) {
-                c.store(*v);
-            }
-            k += CELLS_PER_LINE;
+        while k + C::PER_LINE <= len {
+            C::write_line(&arena[(off + k) / C::PER_LINE], &vals[k..k + C::PER_LINE]);
+            k += C::PER_LINE;
         }
         while k < len {
-            self.cell(shard, off + k).store(vals[k]);
+            self.cell_store(shard, off + k, vals[k]);
             k += 1;
         }
     }
 
-    /// Fused write + residual: store `vals` into message `e` while
-    /// accumulating `‖vals − μ_e^{old}‖₂` against the value each cell held
-    /// just before its store — one pass over the cells instead of the
-    /// historical read-current / `residual_l2` / write triple. With
-    /// [`Kernel::Scalar`] the squared differences accumulate in the exact
-    /// sequential order of `residual_l2`, so the returned residual is
-    /// bit-for-bit the value the unfused triple computes; [`Kernel::Simd`]
-    /// uses the lane-tiled reduction. Returns the residual.
-    pub fn write_msg_residual(&self, mrf: &Mrf, e: u32, vals: &[f64], kernel: Kernel) -> f64 {
+    fn write_msg_residual(&self, mrf: &Mrf, e: u32, vals: &[f64], kernel: Kernel) -> f64 {
         let len = mrf.msg_len(e);
         debug_assert!(vals.len() >= len);
         let shard = self.edge_shard[e as usize] as usize;
@@ -284,10 +454,9 @@ impl Messages {
             Kernel::Scalar => {
                 let mut acc = 0.0f64;
                 for k in 0..len {
-                    let cell = self.cell(shard, off + k);
-                    let d = vals[k] - cell.load();
+                    let d = C::round(vals[k]) - self.cell_load(shard, off + k);
                     acc += d * d;
-                    cell.store(vals[k]);
+                    self.cell_store(shard, off + k, vals[k]);
                 }
                 acc.sqrt()
             }
@@ -299,19 +468,17 @@ impl Messages {
                 let mut k = 0;
                 while k + simd::LANES <= len {
                     for l in 0..simd::LANES {
-                        let cell = self.cell(shard, off + k + l);
-                        let d = vals[k + l] - cell.load();
+                        let d = C::round(vals[k + l]) - self.cell_load(shard, off + k + l);
                         acc[l] += d * d;
-                        cell.store(vals[k + l]);
+                        self.cell_store(shard, off + k + l, vals[k + l]);
                     }
                     k += simd::LANES;
                 }
                 let mut tail = 0.0f64;
                 while k < len {
-                    let cell = self.cell(shard, off + k);
-                    let d = vals[k] - cell.load();
+                    let d = C::round(vals[k]) - self.cell_load(shard, off + k);
                     tail += d * d;
-                    cell.store(vals[k]);
+                    self.cell_store(shard, off + k, vals[k]);
                     k += 1;
                 }
                 simd::reduce(acc, tail).sqrt()
@@ -319,63 +486,44 @@ impl Messages {
         }
     }
 
-    /// Copy the full state into a plain vector in the flat `msg_offset`
-    /// layout (for snapshots/tests) — identical across arena shardings.
-    pub fn snapshot(&self) -> Vec<f64> {
+    fn snapshot(&self) -> Vec<f64> {
         let mut out = vec![0.0f64; self.len()];
-        for e in 0..self.num_messages() {
+        for e in 0..self.edge_shard.len() {
             let flat = self.flat_offset[e] as usize;
             let len = (self.flat_offset[e + 1] - self.flat_offset[e]) as usize;
             let shard = self.edge_shard[e] as usize;
             let off = self.edge_local[e] as usize;
             for k in 0..len {
-                out[flat + k] = self.cell(shard, off + k).load();
+                out[flat + k] = self.cell_load(shard, off + k);
             }
         }
         out
     }
 
-    /// Overwrite the full state from a flat-layout snapshot.
-    pub fn restore(&self, snap: &[f64]) {
+    fn restore(&self, snap: &[f64]) {
         assert_eq!(snap.len(), self.len());
-        for e in 0..self.num_messages() {
+        for e in 0..self.edge_shard.len() {
             let flat = self.flat_offset[e] as usize;
             let len = (self.flat_offset[e + 1] - self.flat_offset[e]) as usize;
             let shard = self.edge_shard[e] as usize;
             let off = self.edge_local[e] as usize;
             for k in 0..len {
-                self.cell(shard, off + k).store(snap[flat + k]);
+                self.cell_store(shard, off + k, snap[flat + k]);
             }
         }
     }
 
-    /// Number of f64 cells (logical — excludes arena padding).
-    pub fn len(&self) -> usize {
-        self.flat_offset.last().map_or(0, |&t| t as usize)
-    }
-
-    /// True when the state holds no cells.
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-}
-
-impl MsgSource for Messages {
     #[inline]
     fn read_msg(&self, mrf: &Mrf, e: u32, out: &mut [f64]) -> usize {
         let len = mrf.msg_len(e);
         let shard = self.edge_shard[e as usize] as usize;
         let off = self.edge_local[e as usize] as usize;
         for k in 0..len {
-            out[k] = self.cell(shard, off + k).load();
+            out[k] = self.cell_load(shard, off + k);
         }
         len
     }
 
-    /// Line-tiled bulk read: one arena-line lookup per 8 cells, with the
-    /// 8 relaxed loads of a full line unrolled (atomic loads never
-    /// auto-vectorize, so removing the per-cell index arithmetic and
-    /// bounds checks is where the win is). Same values as `read_msg`.
     #[inline]
     fn read_msg_bulk(&self, mrf: &Mrf, e: u32, out: &mut [f64]) -> usize {
         let len = mrf.msg_len(e);
@@ -383,27 +531,21 @@ impl MsgSource for Messages {
         let off = self.edge_local[e as usize] as usize;
         let arena = &self.arenas[shard];
         let mut k = 0;
-        while k < len && (off + k) % CELLS_PER_LINE != 0 {
-            out[k] = self.cell(shard, off + k).load();
+        while k < len && (off + k) % C::PER_LINE != 0 {
+            out[k] = self.cell_load(shard, off + k);
             k += 1;
         }
-        while k + CELLS_PER_LINE <= len {
-            let line = &arena[(off + k) / CELLS_PER_LINE].0;
-            for (o, c) in out[k..k + CELLS_PER_LINE].iter_mut().zip(line) {
-                *o = c.load();
-            }
-            k += CELLS_PER_LINE;
+        while k + C::PER_LINE <= len {
+            C::read_line(&arena[(off + k) / C::PER_LINE], &mut out[k..k + C::PER_LINE]);
+            k += C::PER_LINE;
         }
         while k < len {
-            out[k] = self.cell(shard, off + k).load();
+            out[k] = self.cell_load(shard, off + k);
             k += 1;
         }
         len
     }
 
-    /// Single-pass residual against the live cells: no `cur` buffer, one
-    /// load per cell. Scalar accumulation order matches `residual_l2`
-    /// exactly (bit-for-bit); SIMD uses the 4-lane grouping.
     fn residual_l2_against(&self, mrf: &Mrf, e: u32, new: &[f64], kernel: Kernel) -> f64 {
         let len = mrf.msg_len(e);
         debug_assert_eq!(len, new.len());
@@ -413,7 +555,7 @@ impl MsgSource for Messages {
             Kernel::Scalar => {
                 let mut acc = 0.0f64;
                 for k in 0..len {
-                    let d = new[k] - self.cell(shard, off + k).load();
+                    let d = C::round(new[k]) - self.cell_load(shard, off + k);
                     acc += d * d;
                 }
                 acc.sqrt()
@@ -425,14 +567,14 @@ impl MsgSource for Messages {
                 let mut k = 0;
                 while k + simd::LANES <= len {
                     for l in 0..simd::LANES {
-                        let d = new[k + l] - self.cell(shard, off + k + l).load();
+                        let d = C::round(new[k + l]) - self.cell_load(shard, off + k + l);
                         acc[l] += d * d;
                     }
                     k += simd::LANES;
                 }
                 let mut tail = 0.0f64;
                 while k < len {
-                    let d = new[k] - self.cell(shard, off + k).load();
+                    let d = C::round(new[k]) - self.cell_load(shard, off + k);
                     tail += d * d;
                     k += 1;
                 }
@@ -442,8 +584,210 @@ impl MsgSource for Messages {
     }
 }
 
+fn flat_offsets(mrf: &Mrf) -> Box<[u32]> {
+    let mut flat = Vec::with_capacity(mrf.num_messages() + 1);
+    flat.extend_from_slice(&mrf.msg_offset);
+    flat.push(mrf.total_msg_len as u32);
+    flat.into_boxed_slice()
+}
+
+/// Precision-tagged storage behind [`Messages`].
+enum Store {
+    /// 8-byte cells, bit-frozen default arm.
+    F64(ArenaSet<CellF64>),
+    /// 4-byte cells, one rounding per store.
+    F32(ArenaSet<CellF32>),
+}
+
+/// Dispatch a method body over the two storage monomorphizations.
+macro_rules! dispatch {
+    ($self:expr, $a:ident => $body:expr) => {
+        match &$self.store {
+            Store::F64($a) => $body,
+            Store::F32($a) => $body,
+        }
+    };
+}
+
+/// The live, concurrently-updatable message state.
+///
+/// A thin precision-dispatching facade over the per-shard arena engine:
+/// the storage cell type ([`Precision`]) is chosen at construction and
+/// every access dispatches once per *message* (not per cell) to the
+/// matching monomorphization.
+pub struct Messages {
+    store: Store,
+}
+
+impl Messages {
+    /// All messages initialized uniform (1/|D|), in one flat arena whose
+    /// cell order is the `Mrf::msg_offset` layout, stored at the default
+    /// [`Precision::F64`]. Initialization is a single bulk pass — no
+    /// per-cell atomic stores on the freshly owned allocation.
+    pub fn uniform(mrf: &Mrf) -> Self {
+        Self::uniform_with(mrf, Precision::F64)
+    }
+
+    /// [`Messages::uniform`] at an explicit storage precision. Under
+    /// [`Precision::F32`] the uniform values round once at initialization
+    /// (e.g. `1/3` stores as the nearest `f32`), exactly as a store of the
+    /// same value would.
+    pub fn uniform_with(mrf: &Mrf, precision: Precision) -> Self {
+        let store = match precision {
+            Precision::F64 => Store::F64(ArenaSet::uniform(mrf)),
+            Precision::F32 => Store::F32(ArenaSet::uniform(mrf)),
+        };
+        Messages { store }
+    }
+
+    /// All messages initialized uniform, with each shard of `partition`
+    /// (over the message universe: `partition.num_tasks()` must equal
+    /// `mrf.num_messages()`) stored contiguously in its own cache-line-
+    /// aligned arena, at the default [`Precision::F64`]. Behaviorally
+    /// identical to [`Messages::uniform`] through [`MsgSource`] /
+    /// [`Messages::write_msg`]; only the physical layout differs.
+    pub fn uniform_partitioned(mrf: &Mrf, partition: &Partition) -> Self {
+        Self::uniform_partitioned_with(mrf, partition, Precision::F64)
+    }
+
+    /// [`Messages::uniform_partitioned`] at an explicit storage precision.
+    pub fn uniform_partitioned_with(
+        mrf: &Mrf,
+        partition: &Partition,
+        precision: Precision,
+    ) -> Self {
+        let store = match precision {
+            Precision::F64 => Store::F64(ArenaSet::uniform_partitioned(mrf, partition)),
+            Precision::F32 => Store::F32(ArenaSet::uniform_partitioned(mrf, partition)),
+        };
+        Messages { store }
+    }
+
+    /// Uniform state sharing `layout`'s arena sharding **and** storage
+    /// precision — used by caches that shadow the live state (the residual
+    /// lookahead) so their locality and rounding behavior match the state
+    /// they mirror.
+    pub fn uniform_like(mrf: &Mrf, layout: &Messages) -> Self {
+        let store = match &layout.store {
+            Store::F64(a) => Store::F64(ArenaSet::uniform_like(mrf, a)),
+            Store::F32(a) => Store::F32(ArenaSet::uniform_like(mrf, a)),
+        };
+        Messages { store }
+    }
+
+    /// Storage precision of the arenas.
+    pub fn precision(&self) -> Precision {
+        match &self.store {
+            Store::F64(_) => Precision::F64,
+            Store::F32(_) => Precision::F32,
+        }
+    }
+
+    /// Message-arena footprint as `(logical_bytes, padded_bytes)`:
+    /// logical counts live cells at the storage width (`len() ×`
+    /// [`Precision::bytes_per_cell`]); padded counts the allocated
+    /// 64-byte lines including per-shard tail padding — what the process
+    /// actually maps.
+    pub fn arena_bytes(&self) -> (usize, usize) {
+        dispatch!(self, a => a.arena_bytes())
+    }
+
+    /// Number of messages tracked.
+    pub fn num_messages(&self) -> usize {
+        dispatch!(self, a => a.edge_shard.len())
+    }
+
+    /// Number of arena shards (1 for the flat [`Messages::uniform`] layout).
+    pub fn num_shards(&self) -> usize {
+        dispatch!(self, a => a.arenas.len())
+    }
+
+    /// Write message `e` from `vals[..len]`, rounding each value once to
+    /// the storage precision.
+    #[inline]
+    pub fn write_msg(&self, mrf: &Mrf, e: u32, vals: &[f64]) {
+        dispatch!(self, a => a.write_msg(mrf, e, vals));
+    }
+
+    /// Bulk [`Messages::write_msg`]: stores stream whole cache-line tiles
+    /// (one line lookup per 8 f64 / 16 f32 cells instead of one index
+    /// computation per cell; the f32 tile narrows with the 8-lane convert
+    /// kernels before storing). Identical stored values and relaxed
+    /// ordering; used by the SIMD kernel's write pass.
+    #[inline]
+    pub fn write_msg_bulk(&self, mrf: &Mrf, e: u32, vals: &[f64]) {
+        dispatch!(self, a => a.write_msg_bulk(mrf, e, vals));
+    }
+
+    /// Fused write + residual: store `vals` into message `e` while
+    /// accumulating `‖round(vals) − μ_e^{old}‖₂` against the value each
+    /// cell held just before its store — one pass over the cells instead
+    /// of the historical read-current / `residual_l2` / write triple. The
+    /// candidate is priced through the storage rounding (identity on the
+    /// f64 arm, so with [`Kernel::Scalar`] the returned residual is
+    /// bit-for-bit the value the unfused triple computes; on f32 a store
+    /// that doesn't change the cell prices to exactly zero).
+    /// [`Kernel::Simd`] uses the lane-tiled reduction. Returns the
+    /// residual.
+    pub fn write_msg_residual(&self, mrf: &Mrf, e: u32, vals: &[f64], kernel: Kernel) -> f64 {
+        dispatch!(self, a => a.write_msg_residual(mrf, e, vals, kernel))
+    }
+
+    /// Copy the full state into a plain vector in the flat `msg_offset`
+    /// layout (for snapshots/tests) — identical across arena shardings.
+    /// Under f32 storage the snapshot is **f32-exact**: every stored value
+    /// widens exactly, so [`Messages::restore`] of the snapshot (which
+    /// re-rounds) reproduces the arenas bit-for-bit.
+    pub fn snapshot(&self) -> Vec<f64> {
+        dispatch!(self, a => a.snapshot())
+    }
+
+    /// Overwrite the full state from a flat-layout snapshot, rounding each
+    /// value once to the storage precision.
+    pub fn restore(&self, snap: &[f64]) {
+        dispatch!(self, a => a.restore(snap));
+    }
+
+    /// Number of message cells (logical — excludes arena padding).
+    pub fn len(&self) -> usize {
+        dispatch!(self, a => a.len())
+    }
+
+    /// True when the state holds no cells.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl MsgSource for Messages {
+    #[inline]
+    fn read_msg(&self, mrf: &Mrf, e: u32, out: &mut [f64]) -> usize {
+        dispatch!(self, a => a.read_msg(mrf, e, out))
+    }
+
+    /// Line-tiled bulk read: one arena-line lookup per 8 f64 / 16 f32
+    /// cells, with the relaxed loads of a full line unrolled (atomic loads
+    /// never auto-vectorize, so removing the per-cell index arithmetic and
+    /// bounds checks is where the win is; the f32 tile additionally widens
+    /// through the 8-lane convert kernels). Same values as `read_msg`.
+    #[inline]
+    fn read_msg_bulk(&self, mrf: &Mrf, e: u32, out: &mut [f64]) -> usize {
+        dispatch!(self, a => a.read_msg_bulk(mrf, e, out))
+    }
+
+    /// Single-pass residual against the live cells: no `cur` buffer, one
+    /// load per cell, candidate priced through the storage rounding.
+    /// Scalar accumulation order matches `residual_l2` exactly
+    /// (bit-for-bit on the f64 arm); SIMD uses the 4-lane grouping.
+    fn residual_l2_against(&self, mrf: &Mrf, e: u32, new: &[f64], kernel: Kernel) -> f64 {
+        dispatch!(self, a => a.residual_l2_against(mrf, e, new, kernel))
+    }
+}
+
 /// A frozen snapshot (flat `Vec<f64>` in the `msg_offset` layout) is also
-/// a source.
+/// a source. Snapshot slices are plain f64 storage: reads are exact and
+/// residuals price unrounded, regardless of the precision of the run the
+/// snapshot came from.
 impl MsgSource for [f64] {
     #[inline]
     fn read_msg(&self, mrf: &Mrf, e: u32, out: &mut [f64]) -> usize {
@@ -547,8 +891,10 @@ mod tests {
 
     #[test]
     fn cache_line_is_aligned() {
-        assert_eq!(std::mem::align_of::<CacheLine>(), 64);
-        assert_eq!(std::mem::size_of::<CacheLine>(), 64);
+        assert_eq!(std::mem::align_of::<LineF64>(), 64);
+        assert_eq!(std::mem::size_of::<LineF64>(), 64);
+        assert_eq!(std::mem::align_of::<LineF32>(), 64);
+        assert_eq!(std::mem::size_of::<LineF32>(), 64);
     }
 
     #[test]
@@ -591,5 +937,146 @@ mod tests {
         let shadow = Messages::uniform_like(&m, &live);
         assert_eq!(shadow.num_shards(), live.num_shards());
         assert_eq!(shadow.snapshot(), Messages::uniform(&m).snapshot());
+    }
+
+    #[test]
+    fn default_precision_is_f64() {
+        let m = builders::build(&ModelSpec::Path { n: 3 }, 1);
+        assert_eq!(Messages::uniform(&m).precision(), Precision::F64);
+        assert_eq!(Precision::default(), Precision::F64);
+        assert_eq!(Precision::F64.label(), "f64");
+        assert_eq!(Precision::F32.label(), "f32");
+        assert!(Precision::F32.is_f32());
+        assert!(!Precision::F64.is_f32());
+    }
+
+    #[test]
+    fn f32_write_read_rounds_once_to_storage() {
+        let m = builders::build(&ModelSpec::Path { n: 3 }, 1);
+        let msgs = Messages::uniform_with(&m, Precision::F32);
+        assert_eq!(msgs.precision(), Precision::F32);
+        let third = 1.0 / 3.0;
+        msgs.write_msg(&m, 1, &[third, 1.0 - third]);
+        let mut buf = msg_buf();
+        msgs.read_msg(&m, 1, &mut buf);
+        // Exactly one rounding point: read-back is `v as f32 as f64`.
+        assert_eq!(buf[0], (third as f32) as f64);
+        assert_eq!(buf[1], ((1.0 - third) as f32) as f64);
+        // Exact dyadic values survive untouched.
+        msgs.write_msg(&m, 0, &[0.25, 0.75]);
+        msgs.read_msg(&m, 0, &mut buf);
+        assert_eq!(&buf[..2], &[0.25, 0.75]);
+    }
+
+    #[test]
+    fn f32_uniform_rounds_like_a_store() {
+        let m = builders::build(&ModelSpec::Potts { n: 3, q: 3 }, 2);
+        let msgs = Messages::uniform_with(&m, Precision::F32);
+        let mut buf = msg_buf();
+        msgs.read_msg(&m, 0, &mut buf);
+        assert_eq!(buf[0], ((1.0f64 / 3.0) as f32) as f64);
+    }
+
+    #[test]
+    fn f32_bulk_io_matches_per_cell() {
+        let m = builders::build(&ModelSpec::Ldpc { n: 12, flip_prob: 0.07 }, 3);
+        let a = Messages::uniform_with(&m, Precision::F32);
+        let b = Messages::uniform_with(&m, Precision::F32);
+        let e = (0..m.num_messages() as u32).find(|&e| m.msg_len(e) == 64).unwrap();
+        let vals: Vec<f64> = (0..64).map(|k| 1.0 / (k as f64 + 3.0)).collect();
+        a.write_msg(&m, e, &vals);
+        b.write_msg_bulk(&m, e, &vals);
+        let mut x = msg_buf();
+        let mut y = msg_buf();
+        a.read_msg(&m, e, &mut x);
+        b.read_msg_bulk(&m, e, &mut y);
+        assert_eq!(&x[..64], &y[..64]);
+        b.read_msg(&m, e, &mut y);
+        assert_eq!(&x[..64], &y[..64]);
+    }
+
+    #[test]
+    fn f32_snapshot_restore_is_exact() {
+        let m = builders::build(&ModelSpec::Path { n: 4 }, 1);
+        let msgs = Messages::uniform_with(&m, Precision::F32);
+        msgs.write_msg(&m, 0, &[1.0 / 3.0, 2.0 / 3.0]);
+        let snap = msgs.snapshot();
+        msgs.write_msg(&m, 0, &[0.5, 0.5]);
+        msgs.restore(&snap);
+        // Snapshot values are f32-exact, so the round-trip is bitwise.
+        assert_eq!(msgs.snapshot(), snap);
+    }
+
+    #[test]
+    fn f32_residual_zero_at_stored_fixed_point() {
+        let m = builders::build(&ModelSpec::Path { n: 3 }, 1);
+        let msgs = Messages::uniform_with(&m, Precision::F32);
+        let vals = [1.0 / 3.0, 2.0 / 3.0];
+        msgs.write_msg(&m, 1, &vals);
+        // Re-pricing the same (unrounded) candidate must give exactly 0:
+        // the candidate rounds to what storage already holds.
+        for kernel in [Kernel::Scalar, Kernel::Simd] {
+            assert_eq!(msgs.residual_l2_against(&m, 1, &vals, kernel), 0.0);
+            assert_eq!(msgs.write_msg_residual(&m, 1, &vals, kernel), 0.0);
+        }
+    }
+
+    #[test]
+    fn fused_residual_prices_against_stored_cells() {
+        let m = builders::build(&ModelSpec::Path { n: 3 }, 1);
+        for precision in [Precision::F64, Precision::F32] {
+            let msgs = Messages::uniform_with(&m, precision);
+            let old = [0.3f64, 0.7];
+            let new = [1.0 / 3.0, 2.0 / 3.0];
+            msgs.write_msg(&m, 0, &old);
+            let round = |v: f64| match precision {
+                Precision::F64 => v,
+                Precision::F32 => (v as f32) as f64,
+            };
+            let d0 = round(new[0]) - round(old[0]);
+            let d1 = round(new[1]) - round(old[1]);
+            let expect = (d0 * d0 + d1 * d1).sqrt();
+            assert_eq!(
+                msgs.write_msg_residual(&m, 0, &new, Kernel::Scalar),
+                expect,
+                "{precision:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn arena_bytes_halved_under_f32() {
+        let m = builders::build(&ModelSpec::Ldpc { n: 24, flip_prob: 0.07 }, 1);
+        let f64m = Messages::uniform(&m);
+        let f32m = Messages::uniform_with(&m, Precision::F32);
+        let (log64, pad64) = f64m.arena_bytes();
+        let (log32, pad32) = f32m.arena_bytes();
+        assert_eq!(log64, f64m.len() * 8);
+        assert_eq!(log32, log64 / 2);
+        assert!(pad64 >= log64 && pad32 >= log32);
+        // Padded bytes halve up to one 64-byte line of tail padding/shard.
+        assert!(pad32 <= pad64 / 2 + 64 * f32m.num_shards());
+    }
+
+    #[test]
+    fn f32_partitioned_matches_flat() {
+        let m = builders::build(&ModelSpec::Ising { n: 4 }, 7);
+        let p = Partition::contiguous(m.num_messages(), 3);
+        let sharded = Messages::uniform_partitioned_with(&m, &p, Precision::F32);
+        assert_eq!(sharded.precision(), Precision::F32);
+        let flat = Messages::uniform_with(&m, Precision::F32);
+        sharded.write_msg(&m, 5, &[0.2, 0.8]);
+        flat.write_msg(&m, 5, &[0.2, 0.8]);
+        assert_eq!(sharded.snapshot(), flat.snapshot());
+    }
+
+    #[test]
+    fn uniform_like_mirrors_precision() {
+        let m = builders::build(&ModelSpec::Ising { n: 3 }, 1);
+        let p = Partition::contiguous(m.num_messages(), 2);
+        let live = Messages::uniform_partitioned_with(&m, &p, Precision::F32);
+        let shadow = Messages::uniform_like(&m, &live);
+        assert_eq!(shadow.precision(), Precision::F32);
+        assert_eq!(shadow.num_shards(), live.num_shards());
     }
 }

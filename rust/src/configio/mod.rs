@@ -7,7 +7,7 @@ pub mod json;
 
 pub use json::{parse, Json, JsonError};
 
-pub use crate::bp::Kernel;
+pub use crate::bp::{Kernel, Precision};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -225,6 +225,15 @@ pub fn parse_kernel(s: &str) -> Result<Kernel> {
         "scalar" => Ok(Kernel::Scalar),
         "simd" => Ok(Kernel::Simd),
         other => bail!("expected scalar|simd, got '{other}'"),
+    }
+}
+
+/// Parse the storage-precision axis value (`--precision f64|f32`).
+pub fn parse_precision(s: &str) -> Result<Precision> {
+    match s {
+        "f64" => Ok(Precision::F64),
+        "f32" => Ok(Precision::F32),
+        other => bail!("expected f64|f32, got '{other}'"),
     }
 }
 
@@ -500,6 +509,12 @@ pub struct RunConfig {
     /// whose message trajectory is bit-for-bit the pre-SIMD code. Values
     /// agree to ≤ 1e-12 (reduction-order rounding only).
     pub kernel: Kernel,
+    /// Storage-precision axis (`--precision f64|f32`): `F64` (default)
+    /// keeps 8-byte message cells and is bit-frozen to the pre-axis
+    /// trajectory; `F32` stores 4-byte cells (half the arena bytes, 16
+    /// cells per cache line). Compute stays f64 in registers either way —
+    /// reads widen exactly, writes round once per stored cell.
+    pub precision: Precision,
 }
 
 impl RunConfig {
@@ -527,6 +542,7 @@ impl RunConfig {
             partition: PartitionSpec::Off,
             fused: true,
             kernel: Kernel::Simd,
+            precision: Precision::F64,
         }
     }
 
@@ -572,6 +588,12 @@ impl RunConfig {
         self
     }
 
+    /// Set the storage-precision axis (f64 arenas vs f32 arenas).
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+
     /// Serialize as a JSON object.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -587,6 +609,7 @@ impl RunConfig {
             ("partition", self.partition.to_json()),
             ("fused", Json::Bool(self.fused)),
             ("kernel", Json::Str(self.kernel.label().into())),
+            ("precision", Json::Str(self.precision.label().into())),
         ])
     }
 
@@ -634,6 +657,14 @@ impl RunConfig {
             cfg.kernel = parse_kernel(
                 k.as_str()
                     .ok_or_else(|| anyhow!("kernel must be a string (scalar|simd)"))?,
+            )?;
+        }
+        if let Some(p) = v.get("precision") {
+            // Configs written before the precision axis parse with the f64
+            // default; a present-but-malformed value is an error.
+            cfg.precision = parse_precision(
+                p.as_str()
+                    .ok_or_else(|| anyhow!("precision must be a string (f64|f32)"))?,
             )?;
         }
         Ok(cfg)
@@ -822,6 +853,30 @@ mod tests {
         let bad = r#"{"model": {"kind": "ising", "n": 5}, "algorithm": "rr", "kernel": true}"#;
         assert!(RunConfig::from_json(&parse(bad).unwrap()).is_err());
         let bad = r#"{"model": {"kind": "ising", "n": 5}, "algorithm": "rr", "kernel": "wat"}"#;
+        assert!(RunConfig::from_json(&parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn precision_axis_roundtrip_and_back_compat() {
+        let cfg = RunConfig::new(ModelSpec::Ising { n: 6 }, AlgorithmSpec::RelaxedResidual)
+            .with_precision(Precision::F32);
+        let j = cfg.to_json().to_string_pretty();
+        let back = RunConfig::from_json(&parse(&j).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+        assert_eq!(back.precision, Precision::F32);
+        // Configs written before the precision axis parse with the default.
+        let legacy = r#"{"model": {"kind": "ising", "n": 5}, "algorithm": "rr"}"#;
+        let cfg = RunConfig::from_json(&parse(legacy).unwrap()).unwrap();
+        assert_eq!(cfg.precision, Precision::F64);
+        // CLI values.
+        assert_eq!(parse_precision("f64").unwrap(), Precision::F64);
+        assert_eq!(parse_precision("f32").unwrap(), Precision::F32);
+        assert!(parse_precision("f16").is_err());
+        // A malformed precision value is an error, not a silent default.
+        let bad = r#"{"model": {"kind": "ising", "n": 5}, "algorithm": "rr", "precision": 32}"#;
+        assert!(RunConfig::from_json(&parse(bad).unwrap()).is_err());
+        let bad =
+            r#"{"model": {"kind": "ising", "n": 5}, "algorithm": "rr", "precision": "single"}"#;
         assert!(RunConfig::from_json(&parse(bad).unwrap()).is_err());
     }
 

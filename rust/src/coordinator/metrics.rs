@@ -47,10 +47,23 @@ pub struct Counters {
     /// insertion batch size on a fused run is ≈ `inserts / insert_batches`
     /// (exact when every insert goes through the batched path).
     pub insert_batches: u64,
+    /// **Gauge** (not an event count): logical bytes of the run's message
+    /// arenas — live state plus any lookahead cache — at the storage
+    /// precision (`len × bytes_per_cell`). Workers share one arena, so
+    /// [`Counters::add`] takes the max instead of summing.
+    pub msg_bytes_logical: u64,
+    /// **Gauge**: allocated bytes of the same arenas counting whole
+    /// 64-byte cache lines (per-shard tail padding included) — what the
+    /// process actually maps for message storage. Max-merged like
+    /// [`Counters::msg_bytes_logical`].
+    pub msg_bytes_padded: u64,
 }
 
 impl Counters {
-    /// Field-wise accumulate `other` into `self`.
+    /// Field-wise accumulate `other` into `self`. Event counts sum; the
+    /// `msg_bytes_*` gauges max-merge (every worker reports the same
+    /// shared arenas, so summing would multiply the footprint by the
+    /// thread count).
     pub fn add(&mut self, other: &Counters) {
         self.updates += other.updates;
         self.useful_updates += other.useful_updates;
@@ -63,6 +76,8 @@ impl Counters {
         self.splashes += other.splashes;
         self.refreshes += other.refreshes;
         self.insert_batches += other.insert_batches;
+        self.msg_bytes_logical = self.msg_bytes_logical.max(other.msg_bytes_logical);
+        self.msg_bytes_padded = self.msg_bytes_padded.max(other.msg_bytes_padded);
     }
 }
 
@@ -84,6 +99,8 @@ pub struct AtomicCounters {
     splashes: AtomicU64,
     refreshes: AtomicU64,
     insert_batches: AtomicU64,
+    msg_bytes_logical: AtomicU64,
+    msg_bytes_padded: AtomicU64,
 }
 
 impl AtomicCounters {
@@ -101,6 +118,8 @@ impl AtomicCounters {
         self.splashes.store(c.splashes, Ordering::Relaxed);
         self.refreshes.store(c.refreshes, Ordering::Relaxed);
         self.insert_batches.store(c.insert_batches, Ordering::Relaxed);
+        self.msg_bytes_logical.store(c.msg_bytes_logical, Ordering::Relaxed);
+        self.msg_bytes_padded.store(c.msg_bytes_padded, Ordering::Relaxed);
     }
 
     /// Read the last published snapshot.
@@ -117,6 +136,8 @@ impl AtomicCounters {
             splashes: self.splashes.load(Ordering::Relaxed),
             refreshes: self.refreshes.load(Ordering::Relaxed),
             insert_batches: self.insert_batches.load(Ordering::Relaxed),
+            msg_bytes_logical: self.msg_bytes_logical.load(Ordering::Relaxed),
+            msg_bytes_padded: self.msg_bytes_padded.load(Ordering::Relaxed),
         }
     }
 }
@@ -207,6 +228,20 @@ mod tests {
         assert_eq!(a.updates, 8);
         assert_eq!(a.wasted_pops, 1);
         assert_eq!(a.stale_pops, 2);
+    }
+
+    #[test]
+    fn msg_bytes_gauges_max_merge() {
+        // Every worker reports the same shared arenas: aggregation must
+        // not multiply the footprint by the thread count.
+        let per = vec![
+            Counters { updates: 1, msg_bytes_logical: 640, msg_bytes_padded: 704, ..Default::default() },
+            Counters { updates: 2, msg_bytes_logical: 640, msg_bytes_padded: 704, ..Default::default() },
+        ];
+        let m = MetricsReport::aggregate(&per);
+        assert_eq!(m.total.updates, 3);
+        assert_eq!(m.total.msg_bytes_logical, 640);
+        assert_eq!(m.total.msg_bytes_padded, 704);
     }
 
     #[test]

@@ -43,6 +43,10 @@ impl Engine for Bucket {
 
         let la = Lookahead::init(mrf, msgs, cfg.kernel);
         let mut total = Counters::default();
+        let (live_l, live_p) = msgs.arena_bytes();
+        let (la_l, la_p) = la.arena_bytes();
+        total.msg_bytes_logical = (live_l + la_l) as u64;
+        total.msg_bytes_padded = (live_p + la_p) as u64;
         let global_updates = AtomicU64::new(0);
         let mut converged = true;
 

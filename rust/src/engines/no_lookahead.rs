@@ -170,6 +170,12 @@ impl TaskPolicy for ScorePolicy<'_> {
         !found
     }
 
+    fn arena_bytes(&self) -> (u64, u64) {
+        // No lookahead cache: the live arenas are the whole footprint.
+        let (l, p) = self.msgs.arena_bytes();
+        (l as u64, p as u64)
+    }
+
     fn final_priority(&self) -> f64 {
         self.scores.iter().map(|s| s.load()).fold(0.0, f64::max)
     }

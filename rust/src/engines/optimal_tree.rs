@@ -185,6 +185,12 @@ impl TaskPolicy for OptimalTreePolicy<'_> {
         self.useful.load(Ordering::Acquire) == self.target
     }
 
+    fn arena_bytes(&self) -> (u64, u64) {
+        // No lookahead cache: the live arenas are the whole footprint.
+        let (l, p) = self.msgs.arena_bytes();
+        (l as u64, p as u64)
+    }
+
     fn final_priority(&self) -> f64 {
         0.0
     }

@@ -38,6 +38,10 @@ impl Engine for RandomSynch {
         let la = Lookahead::init(mrf, msgs, cfg.kernel);
         let mut rng = Xoshiro256::stream(cfg.seed, 0xBEEF);
         let mut total = Counters::default();
+        let (live_l, live_p) = msgs.arena_bytes();
+        let (la_l, la_p) = la.arena_bytes();
+        total.msg_bytes_logical = (live_l + la_l) as u64;
+        total.msg_bytes_padded = (live_p + la_p) as u64;
         let mut prev_unconverged = usize::MAX;
         let mut converged_flag = true;
         let mut global: u64 = 0;

@@ -233,6 +233,12 @@ impl TaskPolicy for ResidualPolicy<'_> {
         !found
     }
 
+    fn arena_bytes(&self) -> (u64, u64) {
+        let (live_l, live_p) = self.msgs.arena_bytes();
+        let (la_l, la_p) = self.la.arena_bytes();
+        ((live_l + la_l) as u64, (live_p + la_p) as u64)
+    }
+
     fn final_priority(&self) -> f64 {
         // Max *priority*, not raw residual: under weight decay a converged
         // run can retain residuals above ε whose decayed priority is below.

@@ -50,6 +50,10 @@ impl Engine for SequentialResidual {
         };
         let mut heap = IndexedHeap::new(mrf.num_messages());
         let mut c = Counters::default();
+        let (live_l, live_p) = msgs.arena_bytes();
+        let (la_l, la_p) = la.arena_bytes();
+        c.msg_bytes_logical = (live_l + la_l) as u64;
+        c.msg_bytes_padded = (live_p + la_p) as u64;
         let mut node_scratch = NodeScratch::new();
         let mut gather = MsgScratch::new();
         let mut refreshed: Vec<(u32, f64)> = Vec::new();

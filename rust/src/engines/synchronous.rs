@@ -53,9 +53,14 @@ impl Engine for Synchronous {
         let threads = cfg.threads.max(1);
         let me = mrf.num_messages();
 
-        // Double buffers; parity 0 holds the initial state.
-        let bufs = [Messages::uniform(mrf), Messages::uniform(mrf)];
+        // Double buffers; parity 0 holds the initial state. `uniform_like`
+        // mirrors the caller's storage precision, so an f32 run
+        // double-buffers in f32 too.
+        let bufs = [Messages::uniform_like(mrf, msgs), Messages::uniform_like(mrf, msgs)];
         bufs[0].restore(&msgs.snapshot());
+        let (l0, p0) = bufs[0].arena_bytes();
+        let (l1, p1) = bufs[1].arena_bytes();
+        let (arena_logical, arena_padded) = ((l0 + l1) as u64, (p0 + p1) as u64);
 
         let ctrl = Ctrl {
             done: AtomicBool::new(me == 0),
@@ -71,6 +76,8 @@ impl Engine for Synchronous {
 
         let per_thread = run_workers(threads, |tid| {
             let mut c = Counters::default();
+            c.msg_bytes_logical = arena_logical;
+            c.msg_bytes_padded = arena_padded;
             let lo = (tid * chunk).min(me);
             let hi = ((tid + 1) * chunk).min(me);
             let mut new = msg_buf();

@@ -55,6 +55,17 @@ pub trait TaskPolicy: Sync {
         !timed_out
     }
 
+    /// Message-arena footprint of the run's shared state as
+    /// `(logical_bytes, padded_bytes)` — the live arenas plus any
+    /// lookahead cache the policy holds (see
+    /// [`Messages::arena_bytes`](crate::bp::Messages::arena_bytes)). The
+    /// pool stamps these into every worker's counters at start; they are
+    /// gauges, max-merged on aggregation, so thread count never inflates
+    /// the reported footprint. Default: unknown `(0, 0)`.
+    fn arena_bytes(&self) -> (u64, u64) {
+        (0, 0)
+    }
+
     /// Max task priority at exit (≈ max residual), for [`EngineStats`].
     ///
     /// The telemetry sampler also calls this *during* the run (from its own

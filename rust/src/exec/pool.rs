@@ -228,9 +228,17 @@ impl WorkerPool {
                     }
                 });
             }
+            let arena_bytes = policy.arena_bytes();
             run_workers(self.threads, |tid| {
                 let mut rng = Xoshiro256::stream(self.seed, WORKER_STREAM_BASE + tid as u64);
                 let mut c = Counters::default();
+                // Memory-footprint gauges: stamped once per worker (the
+                // arenas are shared, so aggregation max-merges them) and
+                // published immediately so even the first trace sample
+                // carries the footprint.
+                c.msg_bytes_logical = arena_bytes.0;
+                c.msg_bytes_padded = arena_bytes.1;
+                board.slot(tid).publish(&c);
                 let mut scratch = policy.make_scratch();
                 let mut claimed: Vec<u32> = Vec::with_capacity(tuning.batch);
                 let mut popped: Vec<crate::sched::Entry> = Vec::with_capacity(tuning.batch);

@@ -22,7 +22,7 @@ pub mod report;
 
 pub use report::{ratio_cell, Report, Row};
 
-use crate::configio::{AlgorithmSpec, Kernel, ModelSpec, PartitionSpec, RunConfig};
+use crate::configio::{AlgorithmSpec, Kernel, ModelSpec, PartitionSpec, Precision, RunConfig};
 use crate::model::{builders, Mrf};
 use crate::run::run_on_model_observed;
 use crate::telemetry::{Trace, TraceRecorder};
@@ -63,6 +63,10 @@ pub struct Harness {
     /// Data-path kernel axis applied to every cell (the `simd` experiment
     /// additionally sweeps it per cell).
     pub kernel: Kernel,
+    /// Storage-precision axis applied to every cell (the `precision`
+    /// experiment additionally sweeps it per cell). Defaults to f64 so
+    /// every historical experiment trajectory stays bit-identical.
+    pub precision: Precision,
     /// Traces recorded by [`Harness::run_cell`] since the last
     /// [`Harness::drain_traces`], keyed by cell id.
     pub trace_log: RefCell<Vec<(String, Trace)>>,
@@ -81,6 +85,7 @@ impl Default for Harness {
             partition: PartitionSpec::Off,
             fused: true,
             kernel: Kernel::Simd,
+            precision: Precision::F64,
             trace_log: RefCell::new(Vec::new()),
         }
     }
@@ -104,6 +109,7 @@ impl Harness {
         cfg.partition = self.partition;
         cfg.fused = self.fused;
         cfg.kernel = self.kernel;
+        cfg.precision = self.precision;
         cfg
     }
 
@@ -153,6 +159,9 @@ impl Harness {
         if self.kernel == Kernel::Scalar {
             id.push_str("/scalar");
         }
+        if self.precision.is_f32() {
+            id.push_str("/f32");
+        }
         self.run_cell_with(mrf, spec, alg, cfg, id)
     }
 
@@ -180,6 +189,7 @@ impl Harness {
             useful_updates: m.useful_updates,
             wasted_pops: m.wasted_pops,
             stale_pops: m.stale_pops,
+            msg_bytes_padded: m.msg_bytes_padded,
             converged: rep.stats.converged,
             seed: self.seed,
         })
@@ -708,6 +718,9 @@ impl Harness {
         if self.kernel == Kernel::Scalar {
             id.push_str("/scalar");
         }
+        if self.precision.is_f32() {
+            id.push_str("/f32");
+        }
         self.run_cell_with(mrf, spec, alg, cfg, id)
     }
 
@@ -746,7 +759,116 @@ impl Harness {
         if kernel == Kernel::Scalar {
             id.push_str("/scalar");
         }
+        if self.precision.is_f32() {
+            id.push_str("/f32");
+        }
         self.run_cell_with(mrf, spec, alg, cfg, id)
+    }
+
+    /// [`Harness::run_cell`] with an explicit storage precision (used by
+    /// the `precision` experiment's f64-vs-f32 sweep).
+    pub fn run_cell_precision(
+        &self,
+        mrf: &Mrf,
+        spec: &ModelSpec,
+        alg: AlgorithmSpec,
+        threads: usize,
+        precision: Precision,
+    ) -> Result<Row> {
+        let mut cfg = self.cfg(spec, alg.clone(), threads);
+        cfg.precision = precision;
+        eprintln!(
+            "[harness] {} / {} / p={} / precision={} …",
+            spec.name(),
+            alg.name(),
+            threads,
+            precision.label()
+        );
+        // f64 ids keep the historical form (the harness default arm,
+        // joinable across revisions); f32 cells carry the suffix. The
+        // inherited axes keep their own labels so these ids never collide
+        // with differently-configured cells.
+        let mut id = if self.partition.is_on() {
+            format!("{}/{}/p{}/{}", spec.name(), alg.name(), threads, self.partition.label())
+        } else {
+            format!("{}/{}/p{}", spec.name(), alg.name(), threads)
+        };
+        if !self.fused {
+            id.push_str("/edgewise");
+        }
+        if self.kernel == Kernel::Scalar {
+            id.push_str("/scalar");
+        }
+        if precision.is_f32() {
+            id.push_str("/f32");
+        }
+        self.run_cell_with(mrf, spec, alg, cfg, id)
+    }
+
+    /// Storage-precision A/B: relaxed residual with f32 message arenas vs
+    /// the bit-frozen f64 arm, on the bandwidth-bound wide-domain
+    /// workloads (LDPC 64-state constraints, q = 32 Potts) where halving
+    /// the bytes per message shows up as cache reach. The speedup is
+    /// measured, not asserted; the bytes column records the halved arena
+    /// footprint, and update counts confirm the schedules stay comparable.
+    pub fn precision_ab(&self) -> Result<Report> {
+        let mut rep = Report::new(
+            "precision",
+            "f32 message arenas vs the bit-frozen f64 arm (storage-precision axis)",
+        );
+        self.standard_notes(&mut rep);
+        let ldpc = scaled(30_000, self.scale).max(24);
+        let grid = side(120, self.scale).max(4);
+        let specs = vec![
+            ModelSpec::Ldpc { n: ldpc, flip_prob: 0.07 },
+            ModelSpec::Potts { n: grid, q: 32 },
+        ];
+        let mut md = String::from(
+            "| input | p | precision | arena KiB | time (s) | updates | speedup vs f64 |\n|---|---|---|---|---|---|---|\n",
+        );
+        for spec in &specs {
+            let mrf = builders::build(spec, self.seed);
+            for &p in &self.threads {
+                let mut f64_secs = None;
+                for precision in [Precision::F64, Precision::F32] {
+                    let row = self.run_cell_precision(
+                        &mrf,
+                        spec,
+                        AlgorithmSpec::RelaxedResidual,
+                        p,
+                        precision,
+                    )?;
+                    let speedup = match (precision, f64_secs) {
+                        (Precision::F64, _) => {
+                            if row.converged {
+                                f64_secs = Some(row.wall_secs);
+                                "1.00×".to_string()
+                            } else {
+                                "—".into()
+                            }
+                        }
+                        (Precision::F32, Some(base)) if row.converged => {
+                            format!("{:.2}×", base / row.wall_secs.max(1e-9))
+                        }
+                        _ => "—".into(),
+                    };
+                    md.push_str(&format!(
+                        "| {} | {p} | {} | {:.1} | {} | {} | {} |\n",
+                        spec.name(),
+                        precision.label(),
+                        row.msg_bytes_padded as f64 / 1024.0,
+                        if row.converged { format!("{:.3}", row.wall_secs) } else { "—".into() },
+                        row.updates,
+                        speedup,
+                    ));
+                    rep.push(row);
+                }
+            }
+        }
+        rep.add_table(format!("### Storage-precision axis: f32 vs f64\n\n{md}"));
+        self.drain_traces(&mut rep);
+        rep.emit(&self.out_dir)?;
+        Ok(rep)
     }
 
     /// Data-path kernel A/B: relaxed residual with the lane-tiled SIMD
@@ -891,6 +1013,7 @@ impl Harness {
         self.locality()?;
         self.fused_ab()?;
         self.simd_ab()?;
+        self.precision_ab()?;
         Ok(())
     }
 

@@ -26,6 +26,9 @@ pub struct Row {
     pub wasted_pops: u64,
     /// Pops discarded for a stale epoch.
     pub stale_pops: u64,
+    /// Allocated (cache-line-padded) message-arena bytes of the run — a
+    /// gauge; halves under f32 storage.
+    pub msg_bytes_padded: u64,
     /// Whether the run converged within budget.
     pub converged: bool,
     /// RNG seed of the run.
@@ -44,6 +47,7 @@ impl Row {
             ("useful_updates", Json::Num(self.useful_updates as f64)),
             ("wasted_pops", Json::Num(self.wasted_pops as f64)),
             ("stale_pops", Json::Num(self.stale_pops as f64)),
+            ("msg_bytes_padded", Json::Num(self.msg_bytes_padded as f64)),
             ("converged", Json::Bool(self.converged)),
             ("seed", Json::Num(self.seed as f64)),
         ])
@@ -157,11 +161,11 @@ impl Report {
     /// Render the raw rows as CSV.
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "model,algorithm,threads,wall_secs,updates,useful_updates,wasted_pops,stale_pops,converged,seed\n",
+            "model,algorithm,threads,wall_secs,updates,useful_updates,wasted_pops,stale_pops,msg_bytes_padded,converged,seed\n",
         );
         for r in &self.rows {
             s.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.model,
                 r.algorithm,
                 r.threads,
@@ -170,6 +174,7 @@ impl Report {
                 r.useful_updates,
                 r.wasted_pops,
                 r.stale_pops,
+                r.msg_bytes_padded,
                 r.converged,
                 r.seed
             ));
@@ -217,6 +222,7 @@ mod tests {
             useful_updates: 900,
             wasted_pops: 100,
             stale_pops: 5,
+            msg_bytes_padded: 8192,
             converged: true,
             seed: 42,
         }

@@ -16,7 +16,8 @@
 use anyhow::{anyhow, bail, Result};
 use relaxed_bp::cli::Args;
 use relaxed_bp::configio::{
-    parse_kernel, parse_on_off, AlgorithmSpec, ModelSpec, PartitionSpec, RunConfig,
+    parse_kernel, parse_on_off, parse_precision, AlgorithmSpec, ModelSpec, PartitionSpec,
+    RunConfig,
 };
 use relaxed_bp::harness::Harness;
 use relaxed_bp::model::{builders, io as model_io};
@@ -105,6 +106,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(k) = args.opt("kernel") {
         cfg.kernel = parse_kernel(k)?;
     }
+    if let Some(p) = args.opt("precision") {
+        cfg.precision = parse_precision(p)?;
+    }
 
     let report = run_config(&cfg)?;
     let json = report.to_json();
@@ -161,6 +165,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     if let Some(k) = args.opt("kernel") {
         h.kernel = parse_kernel(k)?;
     }
+    if let Some(p) = args.opt("precision") {
+        h.precision = parse_precision(p)?;
+    }
 
     match which {
         "table1" | "table2" | "table5" | "table6" | "moderate" => {
@@ -201,6 +208,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         }
         "simd" => {
             h.simd_ab()?;
+        }
+        "precision" => {
+            h.precision_ab()?;
         }
         "all" => h.all()?,
         other => bail!("unknown experiment '{other}'"),
@@ -316,13 +326,14 @@ USAGE:
   relaxed-bp run --model <kind:size> --algorithm <alg> [--threads N]
                  [--epsilon E] [--seed S] [--time-limit SECS] [--use-pjrt]
                  [--partition off|affine[:shards[:spill]]|bfs[:shards[:spill]]]
-                 [--fused on|off] [--kernel scalar|simd]
+                 [--fused on|off] [--kernel scalar|simd] [--precision f64|f32]
                  [--config cfg.json] [--out report.json] [--marginals]
   relaxed-bp experiment <id> [--scale F] [--threads 1,2,4,8]
                  [--max-threads N] [--out-dir DIR] [--seed S] [--use-pjrt]
                  [--partition MODE] [--fused on|off] [--kernel scalar|simd]
+                 [--precision f64|f32]
       ids: table1 table3 table4 table7 fig2 fig4 fig5 fig6 fig7 lemma2
-           locality fused simd all
+           locality fused simd precision all
   relaxed-bp bench [--quick] [--families tree,ising,potts,potts32,ldpc,powerlaw]
                  [--threads 1,2] [--samples N] [--out-dir DIR] [--seed S]
                  [--time-limit SECS] [--tick-ms MS] [--tolerance X]
@@ -352,4 +363,10 @@ KERNEL (the data-path axis): simd (default) = lane-tiled inner loops
         (portable 4-lane tiles + runtime-detected AVX2), bulk cache-line
         message I/O, and in-kernel residuals; scalar = the historical
         per-element path, bit-for-bit the pre-SIMD trajectory, kept for
-        A/B measurement. bench records all three axes per baseline.";
+        A/B measurement.
+
+PRECISION (the storage axis): f64 (default) = 8 messages per cache line,
+        bit-for-bit the historical trajectory; f32 = 16 messages per line
+        at half the arena footprint, computed in f64 registers with one
+        rounding point per message store. bench records all four axes per
+        baseline (base cells run f32; /f64 cells are the frozen arm).";

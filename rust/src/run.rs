@@ -42,6 +42,8 @@ impl RunReport {
             ("splashes", Json::Num(m.splashes as f64)),
             ("refreshes", Json::Num(m.refreshes as f64)),
             ("insert_batches", Json::Num(m.insert_batches as f64)),
+            ("msg_bytes_logical", Json::Num(m.msg_bytes_logical as f64)),
+            ("msg_bytes_padded", Json::Num(m.msg_bytes_padded as f64)),
             (
                 "updates_per_sec",
                 Json::Num(if self.stats.wall_secs > 0.0 {
@@ -93,14 +95,14 @@ pub fn run_on_model_observed(
 
 /// Uniform message state laid out for the run described by `cfg`:
 /// per-shard arenas matching the run's message partition when the
-/// locality axis is on, the flat arena otherwise. The single resolution
-/// point shared by production runs and the parity/property test suites —
-/// keep them on this helper so the arena layout can never drift from the
-/// scheduler's partition.
+/// locality axis is on, the flat arena otherwise, stored at
+/// `cfg.precision`. The single resolution point shared by production runs
+/// and the parity/property test suites — keep them on this helper so the
+/// arena layout and storage precision can never drift from the config.
 pub fn build_messages(cfg: &RunConfig, mrf: &Mrf) -> Messages {
     match crate::model::partition::for_messages(mrf, cfg) {
-        Some(p) => Messages::uniform_partitioned(mrf, &p),
-        None => Messages::uniform(mrf),
+        Some(p) => Messages::uniform_partitioned_with(mrf, &p, cfg.precision),
+        None => Messages::uniform_with(mrf, cfg.precision),
     }
 }
 

@@ -53,6 +53,17 @@ pub struct CellResult {
     /// in pre-SIMD baselines ⇒ `scalar` — those cells measured the
     /// historical per-element path.
     pub kernel: String,
+    /// Storage precision of the message arenas (`RunConfig::precision`:
+    /// `f32` or `f64`); f64 A/B cells carry the `/f64` id suffix. Absent
+    /// in pre-precision baselines ⇒ `f64` — the only storage those cells
+    /// could have measured.
+    pub precision: String,
+    /// Logical message-arena bytes (live + lookahead cache) of the last
+    /// sample — a gauge; absent in pre-precision baselines ⇒ 0.
+    pub msg_bytes_logical: u64,
+    /// Allocated (cache-line-padded) message-arena bytes, same scope;
+    /// absent ⇒ 0.
+    pub msg_bytes_padded: u64,
     /// Per-sample wall-clock seconds.
     pub wall_secs: Vec<f64>,
     /// Per-sample committed update counts.
@@ -87,6 +98,9 @@ impl CellResult {
             ("partition", Json::Str(self.partition.clone())),
             ("fused", Json::Bool(self.fused)),
             ("kernel", Json::Str(self.kernel.clone())),
+            ("precision", Json::Str(self.precision.clone())),
+            ("msg_bytes_logical", Json::Num(self.msg_bytes_logical as f64)),
+            ("msg_bytes_padded", Json::Num(self.msg_bytes_padded as f64)),
             ("wall_secs", Json::Arr(self.wall_secs.iter().map(|&t| Json::Num(t)).collect())),
             ("updates", Json::Arr(self.updates.iter().map(|&u| Json::Num(u)).collect())),
             ("converged", Json::Bool(self.converged)),
@@ -136,6 +150,13 @@ impl CellResult {
                 .and_then(Json::as_str)
                 .unwrap_or("scalar")
                 .to_string(),
+            precision: v
+                .get("precision")
+                .and_then(Json::as_str)
+                .unwrap_or("f64")
+                .to_string(),
+            msg_bytes_logical: v.get("msg_bytes_logical").and_then(Json::as_u64).unwrap_or(0),
+            msg_bytes_padded: v.get("msg_bytes_padded").and_then(Json::as_u64).unwrap_or(0),
             wall_secs: arr("wall_secs")?,
             updates: arr("updates")?,
             converged: v
@@ -381,6 +402,9 @@ mod tests {
             partition: "off".into(),
             fused: true,
             kernel: "simd".into(),
+            precision: "f32".into(),
+            msg_bytes_logical: 4096,
+            msg_bytes_padded: 8192,
             wall_secs: vec![secs, secs * 1.05, secs * 0.95],
             updates: vec![1000.0, 1010.0, 990.0],
             converged: true,
@@ -396,6 +420,8 @@ mod tests {
                     inserts: 1100,
                     refreshes: 3300,
                     insert_batches: 1000,
+                    msg_bytes_logical: 4096,
+                    msg_bytes_padded: 8192,
                     max_priority: 1e-6,
                 }],
             },
@@ -472,6 +498,27 @@ mod tests {
         }
         let back = Baseline::from_json(&j).unwrap();
         assert_eq!(back.cells[0].kernel, "scalar", "pre-SIMD cells measured the scalar path");
+        assert!(!compare(&b, &back, DEFAULT_TOLERANCE).unwrap().has_regression());
+    }
+
+    #[test]
+    fn pre_precision_cells_parse_as_f64_with_zero_bytes() {
+        let b = baseline(vec![cell("relaxed_residual/p2", 0.5)]);
+        let mut j = b.to_json();
+        // Simulate a baseline written before the precision axis existed.
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Arr(cells)) = o.get_mut("cells") {
+                if let Json::Obj(c) = &mut cells[0] {
+                    c.remove("precision");
+                    c.remove("msg_bytes_logical");
+                    c.remove("msg_bytes_padded");
+                }
+            }
+        }
+        let back = Baseline::from_json(&j).unwrap();
+        assert_eq!(back.cells[0].precision, "f64", "pre-precision cells stored f64 arenas");
+        assert_eq!(back.cells[0].msg_bytes_logical, 0);
+        assert_eq!(back.cells[0].msg_bytes_padded, 0);
         assert!(!compare(&b, &back, DEFAULT_TOLERANCE).unwrap().has_regression());
     }
 

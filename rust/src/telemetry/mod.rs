@@ -48,6 +48,12 @@
 //!                                       // those measured edge-wise)
 //!       "kernel": "simd",               // the data-path axis (absent in
 //!                                       // pre-SIMD baselines ⇒ "scalar")
+//!       "precision": "f32",             // the storage-precision axis
+//!                                       // (absent in pre-precision
+//!                                       // baselines ⇒ "f64"); f64 A/B
+//!                                       // cells carry the "/f64" suffix
+//!       "msg_bytes_logical": 16128,     // message-arena footprint gauges
+//!       "msg_bytes_padded": 32768,      // (live + lookahead; absent ⇒ 0)
 //!       "wall_secs": [0.012, 0.011],    // one entry per sample
 //!       "updates": [4100, 4080],
 //!       "converged": true,
@@ -84,7 +90,7 @@ pub use baseline::{
 };
 pub use trace::{Trace, TracePoint, TraceRecorder};
 
-use crate::configio::{AlgorithmSpec, Kernel, ModelSpec, PartitionSpec, RunConfig};
+use crate::configio::{AlgorithmSpec, Kernel, ModelSpec, PartitionSpec, Precision, RunConfig};
 use crate::model::builders;
 use crate::run::run_on_model_observed;
 use anyhow::{bail, Result};
@@ -231,9 +237,9 @@ pub fn family_spec(family: &str, quick: bool) -> Result<ModelSpec> {
     })
 }
 
-/// One swept bench cell: algorithm, thread count, and the three axes
+/// One swept bench cell: algorithm, thread count, and the four axes
 /// (locality partition, fused/edgewise refresh shape, simd/scalar data
-/// path).
+/// path, f32/f64 storage precision).
 #[derive(Debug, Clone)]
 struct RosterCell {
     alg: AlgorithmSpec,
@@ -241,11 +247,19 @@ struct RosterCell {
     partition: PartitionSpec,
     fused: bool,
     kernel: Kernel,
+    precision: Precision,
 }
 
 impl RosterCell {
     fn new(alg: AlgorithmSpec, threads: usize, partition: PartitionSpec) -> Self {
-        RosterCell { alg, threads, partition, fused: true, kernel: Kernel::Simd }
+        RosterCell {
+            alg,
+            threads,
+            partition,
+            fused: true,
+            kernel: Kernel::Simd,
+            precision: Precision::F32,
+        }
     }
 
     fn edgewise(mut self) -> Self {
@@ -258,10 +272,15 @@ impl RosterCell {
         self
     }
 
-    /// Cell id: both-axes-default cells keep the historical
+    fn f64(mut self) -> Self {
+        self.precision = Precision::F64;
+        self
+    }
+
+    /// Cell id: all-axes-default cells keep the historical
     /// `<alg>/p<threads>` form; affine cells append the partition label,
     /// edgewise (fused-off) cells `/edgewise`, scalar-kernel cells
-    /// `/scalar`.
+    /// `/scalar`, f64-storage cells `/f64`.
     fn id(&self) -> String {
         let mut id = match self.partition {
             PartitionSpec::Off => format!("{}/p{}", self.alg.name(), self.threads),
@@ -273,19 +292,23 @@ impl RosterCell {
         if self.kernel == Kernel::Scalar {
             id.push_str("/scalar");
         }
+        if self.precision == Precision::F64 {
+            id.push_str("/f64");
+        }
         id
     }
 }
 
-/// The {engine × scheduler × threads × partition × kernel} cells swept per
-/// family: the sequential exact baseline, the exact concurrent PQ, the
-/// relaxed Multiqueue (once per locality axis in [`BenchOpts::partitions`]),
-/// and relaxed smart splash at the highest thread count. The relaxed
-/// contenders are additionally measured once with the fused refresh off
-/// (`…/edgewise` cells) and once with the scalar data-path kernel
-/// (`…/scalar` cells), so every baseline records both same-run kernel
-/// A/Bs — fused-vs-edgewise and simd-vs-scalar — the kernel axes are
-/// judged by.
+/// The {engine × scheduler × threads × partition × kernel × precision}
+/// cells swept per family: the sequential exact baseline, the exact
+/// concurrent PQ, the relaxed Multiqueue (once per locality axis in
+/// [`BenchOpts::partitions`]), and relaxed smart splash at the highest
+/// thread count. The relaxed contenders are additionally measured once
+/// with the fused refresh off (`…/edgewise` cells), once with the scalar
+/// data-path kernel (`…/scalar` cells), and once with f64 message storage
+/// (`…/f64` cells — the bit-frozen arm; base cells store f32), so every
+/// baseline records the same-run A/Bs — fused-vs-edgewise,
+/// simd-vs-scalar, and f32-vs-f64 — each axis is judged by.
 fn roster(opts: &BenchOpts) -> Vec<RosterCell> {
     use AlgorithmSpec::{CoarseGrained, RelaxedResidual, RelaxedSmartSplash, SequentialResidual};
     let mut cells = vec![RosterCell::new(SequentialResidual, 1, PartitionSpec::Off)];
@@ -296,6 +319,7 @@ fn roster(opts: &BenchOpts) -> Vec<RosterCell> {
         }
         cells.push(RosterCell::new(RelaxedResidual, p, PartitionSpec::Off).edgewise());
         cells.push(RosterCell::new(RelaxedResidual, p, PartitionSpec::Off).scalar());
+        cells.push(RosterCell::new(RelaxedResidual, p, PartitionSpec::Off).f64());
     }
     if let Some(&max_p) = opts.threads.iter().max() {
         for &part in &opts.partitions {
@@ -303,7 +327,8 @@ fn roster(opts: &BenchOpts) -> Vec<RosterCell> {
         }
         let base = RosterCell::new(RelaxedSmartSplash { h: 2 }, max_p, PartitionSpec::Off);
         cells.push(base.clone().edgewise());
-        cells.push(base.scalar());
+        cells.push(base.clone().scalar());
+        cells.push(base.f64());
     }
     cells
 }
@@ -321,19 +346,25 @@ pub fn bench_family(family: &str, opts: &BenchOpts) -> Result<Baseline> {
         let mut updates = Vec::with_capacity(opts.samples);
         let mut converged = true;
         let mut last_trace = Trace::default();
+        let mut msg_bytes = (0u64, 0u64);
         for _ in 0..opts.samples.max(1) {
             let mut cfg = RunConfig::new(spec.clone(), rc.alg.clone())
                 .with_threads(rc.threads)
                 .with_seed(opts.seed)
                 .with_partition(rc.partition)
                 .with_fused(rc.fused)
-                .with_kernel(rc.kernel);
+                .with_kernel(rc.kernel)
+                .with_precision(rc.precision);
             cfg.time_limit_secs = opts.time_limit;
             let rep = run_on_model_observed(&cfg, mrf.clone(), Some(&recorder))?;
             wall_secs.push(rep.stats.wall_secs);
             updates.push(rep.stats.metrics.total.updates as f64);
             converged &= rep.stats.converged;
             last_trace = recorder.take();
+            msg_bytes = (
+                rep.stats.metrics.total.msg_bytes_logical,
+                rep.stats.metrics.total.msg_bytes_padded,
+            );
         }
         cells.push(CellResult {
             id,
@@ -343,6 +374,9 @@ pub fn bench_family(family: &str, opts: &BenchOpts) -> Result<Baseline> {
             partition: rc.partition.label().to_string(),
             fused: rc.fused,
             kernel: rc.kernel.label().to_string(),
+            precision: rc.precision.label().to_string(),
+            msg_bytes_logical: msg_bytes.0,
+            msg_bytes_padded: msg_bytes.1,
             wall_secs,
             updates,
             converged,
@@ -452,19 +486,21 @@ pub fn render_summary(b: &Baseline) -> String {
         if b.quick { ", quick" } else { "" }
     );
     s.push_str(
-        "| cell | scheduler | partition | refresh | kernel | median time | updates (median) | trace pts | converged |\n",
+        "| cell | scheduler | partition | refresh | kernel | prec | arena KiB | median time | updates (median) | trace pts | converged |\n",
     );
-    s.push_str("|---|---|---|---|---|---|---|---|---|\n");
+    s.push_str("|---|---|---|---|---|---|---|---|---|---|---|\n");
     for c in &b.cells {
         let med = c.median_secs().unwrap_or(f64::NAN);
         let upd = crate::util::stats::Summary::of(&c.updates).map_or(0.0, |u| u.median);
         s.push_str(&format!(
-            "| {} | {} | {} | {} | {} | {} | {:.0} | {} | {} |\n",
+            "| {} | {} | {} | {} | {} | {} | {:.1} | {} | {:.0} | {} | {} |\n",
             c.id,
             c.scheduler,
             c.partition,
             if c.fused { "fused" } else { "edgewise" },
             c.kernel,
+            c.precision,
+            c.msg_bytes_padded as f64 / 1024.0,
             crate::util::fmt_duration(med),
             upd,
             c.trace.len(),
@@ -520,6 +556,18 @@ mod tests {
             .iter()
             .filter(|c| c.kernel == Kernel::Simd)
             .count() > cells.len() / 2);
+        // The storage-precision axis: base cells showcase f32, and every
+        // relaxed contender gets a bit-frozen f64 A/B twin.
+        assert!(cells
+            .iter()
+            .any(|c| c.alg == AlgorithmSpec::RelaxedResidual && c.precision == Precision::F64));
+        assert!(cells.iter().any(|c| {
+            c.alg == AlgorithmSpec::RelaxedSmartSplash { h: 2 } && c.precision == Precision::F64
+        }));
+        assert!(cells
+            .iter()
+            .filter(|c| c.precision == Precision::F32)
+            .count() > cells.len() / 2);
     }
 
     #[test]
@@ -532,6 +580,7 @@ mod tests {
         assert!(ids.contains("relaxed_residual/p2"));
         assert!(ids.contains("relaxed_residual/p2/edgewise"));
         assert!(ids.contains("relaxed_residual/p2/scalar"));
+        assert!(ids.contains("relaxed_residual/p2/f64"));
     }
 
     #[test]

@@ -42,6 +42,11 @@ pub struct TracePoint {
     /// Cumulative batched scheduler insert calls (mean insertion batch
     /// size ≈ `inserts / insert_batches` on fused runs).
     pub insert_batches: u64,
+    /// Logical message-arena bytes (live + lookahead cache) — a gauge,
+    /// constant over the run; halves under `--precision f32`.
+    pub msg_bytes_logical: u64,
+    /// Allocated (cache-line-padded) message-arena bytes, same scope.
+    pub msg_bytes_padded: u64,
     /// Max task priority at sample time (≈ max residual; the convergence
     /// signal — a converged run ends below ε).
     pub max_priority: f64,
@@ -61,6 +66,8 @@ impl TracePoint {
             inserts: c.inserts,
             refreshes: c.refreshes,
             insert_batches: c.insert_batches,
+            msg_bytes_logical: c.msg_bytes_logical,
+            msg_bytes_padded: c.msg_bytes_padded,
             max_priority,
         }
     }
@@ -78,13 +85,16 @@ impl TracePoint {
             ("inserts", Json::Num(self.inserts as f64)),
             ("refreshes", Json::Num(self.refreshes as f64)),
             ("insert_batches", Json::Num(self.insert_batches as f64)),
+            ("msg_bytes_logical", Json::Num(self.msg_bytes_logical as f64)),
+            ("msg_bytes_padded", Json::Num(self.msg_bytes_padded as f64)),
             ("max_priority", Json::Num(self.max_priority)),
         ])
     }
 
     /// Parse one `trace[]` element. `refreshes` / `insert_batches` were
-    /// added by the fused-kernel schema extension and default to 0 when
-    /// absent (pre-fused baselines).
+    /// added by the fused-kernel schema extension and the `msg_bytes_*`
+    /// gauges by the precision axis; all default to 0 when absent (older
+    /// baselines).
     pub fn from_json(v: &Json) -> Result<TracePoint> {
         let num =
             |k: &str| v.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("trace.{k} missing"));
@@ -102,6 +112,8 @@ impl TracePoint {
             inserts: int("inserts")?,
             refreshes: opt("refreshes"),
             insert_batches: opt("insert_batches"),
+            msg_bytes_logical: opt("msg_bytes_logical"),
+            msg_bytes_padded: opt("msg_bytes_padded"),
             max_priority: num("max_priority")?,
         })
     }
@@ -195,6 +207,8 @@ mod tests {
             inserts: updates + 1,
             refreshes: updates * 3,
             insert_batches: updates,
+            msg_bytes_logical: 4096,
+            msg_bytes_padded: 8192,
             max_priority: 0.5,
         }
     }
@@ -211,6 +225,8 @@ mod tests {
         let t = Trace::from_json(&v).unwrap();
         assert_eq!(t.points[0].refreshes, 0);
         assert_eq!(t.points[0].insert_batches, 0);
+        assert_eq!(t.points[0].msg_bytes_logical, 0, "pre-precision baselines carry no gauge");
+        assert_eq!(t.points[0].msg_bytes_padded, 0);
     }
 
     #[test]

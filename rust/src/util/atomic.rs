@@ -5,9 +5,11 @@
 //! volatile arrays): a reader may observe a message vector mid-update. BP
 //! tolerates this — the algorithm converges to the same fixed point — but
 //! Rust requires that such shared mutation go through atomics. [`AtomicF64`]
-//! provides relaxed-ordering f64 loads/stores via bit-casting to `u64`.
+//! provides relaxed-ordering f64 loads/stores via bit-casting to `u64`;
+//! [`AtomicF32`] is the same discipline over `u32` for the reduced-precision
+//! message arenas (`RunConfig::precision`).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
 /// An `f64` cell that can be read and written concurrently.
 ///
@@ -105,6 +107,51 @@ impl Default for AtomicF64 {
 }
 
 impl Clone for AtomicF64 {
+    fn clone(&self) -> Self {
+        Self::new(self.load())
+    }
+}
+
+/// An `f32` cell that can be read and written concurrently.
+///
+/// The storage half of the precision axis (`RunConfig::precision`): message
+/// arenas hold these when a run stores messages in single precision, so a
+/// 64-byte cache line carries 16 cells instead of 8. Same relaxed-ordering
+/// benign-race discipline as [`AtomicF64`]; compute stays f64 in registers,
+/// so this cell intentionally has no arithmetic RMW helpers — values are
+/// rounded once on store and widened on load.
+#[derive(Debug)]
+pub struct AtomicF32 {
+    bits: AtomicU32,
+}
+
+impl AtomicF32 {
+    #[inline]
+    /// Cell holding `v`.
+    pub fn new(v: f32) -> Self {
+        Self { bits: AtomicU32::new(v.to_bits()) }
+    }
+
+    #[inline]
+    /// Relaxed load.
+    pub fn load(&self) -> f32 {
+        f32::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    #[inline]
+    /// Relaxed store.
+    pub fn store(&self, v: f32) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+}
+
+impl Default for AtomicF32 {
+    fn default() -> Self {
+        Self::new(0.0)
+    }
+}
+
+impl Clone for AtomicF32 {
     fn clone(&self) -> Self {
         Self::new(self.load())
     }
@@ -214,6 +261,45 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(a.load(), 3999.0);
+    }
+
+    #[test]
+    fn f32_roundtrip_and_special_values() {
+        let a = AtomicF32::new(1.5);
+        assert_eq!(a.load(), 1.5);
+        a.store(-0.25);
+        assert_eq!(a.load(), -0.25);
+        a.store(f32::NAN);
+        assert!(a.load().is_nan());
+        a.store(0.0);
+        assert_eq!(a.load(), 0.0);
+        a.store(-0.0);
+        assert_eq!(a.load().to_bits(), (-0.0f32).to_bits());
+        assert_eq!(AtomicF32::default().load(), 0.0);
+        assert_eq!(std::mem::size_of::<AtomicF32>(), 4);
+    }
+
+    #[test]
+    fn f32_concurrent_stores_never_tear() {
+        // Every observed value must be one of the stored bit patterns.
+        let a = Arc::new(AtomicF32::new(1.0));
+        std::thread::scope(|s| {
+            for t in 0..2 {
+                let a = Arc::clone(&a);
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        a.store(if t == 0 { 1.0 } else { 2.0 });
+                    }
+                });
+            }
+            let a = Arc::clone(&a);
+            s.spawn(move || {
+                for _ in 0..1000 {
+                    let v = a.load();
+                    assert!(v == 1.0 || v == 2.0);
+                }
+            });
+        });
     }
 
     #[test]

@@ -6,7 +6,7 @@ pub mod atomic;
 pub mod rng;
 pub mod stats;
 
-pub use atomic::{AtomicF64, CachePadded};
+pub use atomic::{AtomicF32, AtomicF64, CachePadded};
 pub use rng::{SplitMix64, Xoshiro256};
 pub use stats::{fmt_count, fmt_duration, Summary};
 

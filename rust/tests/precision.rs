@@ -1,0 +1,294 @@
+//! Property tests for the storage-precision axis (`RunConfig::precision`):
+//!
+//! - the f64 arm is *bit-frozen*: `--precision f64` runs are bitwise the
+//!   historical `Messages::uniform` trajectory on every model family
+//!   (exact `==` on the final message state, not an epsilon);
+//! - f32 storage reaches the same fixed point: marginal L∞ against the
+//!   f64 run ≤ 1e-5 on the tree/Ising/Potts families;
+//! - exact zeros (deterministic LDPC parity factors) survive the f32
+//!   round-trip exactly — `0.0` is exactly representable;
+//! - every engine converges under f32 storage, across the fused and
+//!   data-path kernel axes;
+//! - snapshot/restore round-trips losslessly at both precisions (f32
+//!   snapshots are f32-exact: widening is exact, restore re-rounds to the
+//!   same bits);
+//! - stored fixed points price to exactly 0.0 under f32 (the residual is
+//!   computed against the *rounded* candidate).
+
+use relaxed_bp::bp::{
+    compute_message, max_marginal_diff, msg_buf, Kernel, Messages, MsgSource, Precision,
+};
+use relaxed_bp::configio::{AlgorithmSpec, ModelSpec, RunConfig};
+use relaxed_bp::engines::build_engine;
+use relaxed_bp::model::builders;
+use relaxed_bp::run::{build_messages, run_config};
+
+/// Every family in the roster at property-test sizes.
+fn family_specs() -> Vec<ModelSpec> {
+    vec![
+        ModelSpec::Tree { n: 31 },
+        ModelSpec::Path { n: 8 },
+        ModelSpec::AdversarialTree { n: 36 },
+        ModelSpec::UniformTree { n: 40, arity: 3 },
+        ModelSpec::Ising { n: 5 },
+        ModelSpec::Potts { n: 4, q: 3 },
+        ModelSpec::Potts { n: 4, q: 32 },
+        ModelSpec::Ldpc { n: 24, flip_prob: 0.07 },
+        ModelSpec::PowerLaw { n: 80, m: 3 },
+    ]
+}
+
+/// Drive the message state away from uniform so products are non-trivial.
+fn churn(mrf: &relaxed_bp::model::Mrf, msgs: &Messages, rounds: usize) {
+    let mut out = msg_buf();
+    for _ in 0..rounds {
+        for e in 0..mrf.num_messages() as u32 {
+            let len = compute_message(mrf, msgs, e, &mut out);
+            msgs.write_msg(mrf, e, &out[..len]);
+        }
+    }
+}
+
+/// The f64 arm is bit-frozen: a `--precision f64` run through the shared
+/// `build_messages` resolution point produces bit-for-bit the state of a
+/// run on the historical `Messages::uniform` constructor, on every family.
+#[test]
+fn f64_arm_is_bitwise_the_historical_trajectory() {
+    for spec in family_specs() {
+        let mrf = builders::build(&spec, 23);
+        let cfg = RunConfig::new(spec.clone(), AlgorithmSpec::SequentialResidual).with_seed(23);
+        assert_eq!(cfg.precision, Precision::F64, "default precision must be f64");
+
+        let new_msgs = build_messages(&cfg, &mrf);
+        assert_eq!(new_msgs.precision(), Precision::F64);
+        let old_msgs = Messages::uniform(&mrf);
+        let engine = build_engine(&cfg.algorithm);
+        let s_new = engine.run(&mrf, &new_msgs, &cfg).unwrap();
+        let s_old = engine.run(&mrf, &old_msgs, &cfg).unwrap();
+
+        assert_eq!(
+            s_new.metrics.total.updates, s_old.metrics.total.updates,
+            "{spec:?}: f64 arm changed the schedule"
+        );
+        let a = new_msgs.snapshot();
+        let b = old_msgs.snapshot();
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{spec:?} cell {i}: f64 arm not bit-frozen ({x} vs {y})"
+            );
+        }
+    }
+}
+
+/// f32 storage converges to (numerically) the same fixed point as f64:
+/// marginal L∞ ≤ 1e-5 on the tree, Ising, and Potts families.
+#[test]
+fn f32_marginals_match_f64_within_1e5() {
+    for spec in [
+        ModelSpec::Tree { n: 31 },
+        ModelSpec::Ising { n: 5 },
+        ModelSpec::Potts { n: 4, q: 3 },
+        ModelSpec::Potts { n: 4, q: 32 },
+    ] {
+        let mut marginals = Vec::new();
+        for precision in [Precision::F64, Precision::F32] {
+            let mut cfg = RunConfig::new(spec.clone(), AlgorithmSpec::SequentialResidual)
+                .with_seed(31)
+                .with_precision(precision);
+            // Below f32 cell spacing the residual of a stored fixed point
+            // is exactly 0.0, so this is reachable under f32 storage.
+            cfg.epsilon = 1e-6;
+            cfg.time_limit_secs = 60.0;
+            let rep = run_config(&cfg).unwrap();
+            assert!(rep.stats.converged, "{spec:?} {precision:?}");
+            marginals.push(rep.marginals());
+        }
+        let diff = max_marginal_diff(&marginals[0], &marginals[1]);
+        assert!(diff <= 1e-5, "{spec:?}: f64 vs f32 marginal L∞ = {diff}");
+    }
+}
+
+/// Exact zeros from deterministic LDPC factors survive f32 storage
+/// exactly: 0.0 rounds to 0.0, and the bulk I/O path preserves it too.
+///
+/// Zeros arise once the decoder's state hardens: with hard incoming
+/// messages, the bit-indicator edge factors and the even-parity potential
+/// zero out every inconsistent state. We saturate the state to hard
+/// messages (as a near-converged decoder does), recompute every message,
+/// and check the zeros round-trip through the f32 arenas bit-exactly.
+#[test]
+fn ldpc_exact_zeros_survive_f32_storage() {
+    let inst = builders::ldpc::build(24, 0.07, 11);
+    let mrf = &inst.mrf;
+    let msgs = Messages::uniform_with(mrf, Precision::F32);
+    let mut out = msg_buf();
+    let mut back = msg_buf();
+    // Saturate: every message hard on state 0 (the all-zeros codeword).
+    // Hard values 1.0/0.0 must round-trip exactly through f32 cells.
+    for e in 0..mrf.num_messages() as u32 {
+        let len = msgs.read_msg(mrf, e, &mut out);
+        out[..len].fill(0.0);
+        out[0] = 1.0;
+        msgs.write_msg(mrf, e, &out[..len]);
+        let lb = msgs.read_msg(mrf, e, &mut back);
+        assert_eq!(len, lb);
+        assert_eq!(back[0], 1.0, "edge {e}: hard 1.0 not exact in f32");
+        for x in 1..len {
+            assert_eq!(back[x], 0.0, "edge {e} x={x}: hard 0.0 not exact in f32");
+        }
+    }
+    // Recompute from the hard state: the indicator factors now produce
+    // exact zeros, which must survive both write paths.
+    let mut zeros = 0usize;
+    for e in 0..mrf.num_messages() as u32 {
+        let len = compute_message(mrf, &msgs, e, &mut out);
+        msgs.write_msg_bulk(mrf, e, &out[..len]);
+        let lb = msgs.read_msg(mrf, e, &mut back);
+        assert_eq!(len, lb);
+        for x in 0..len {
+            if out[x] == 0.0 {
+                zeros += 1;
+                assert_eq!(back[x], 0.0, "edge {e} x={x}: zero not exact after f32 round-trip");
+            }
+            // Bulk writes round exactly like per-cell writes: one
+            // round-to-nearest-f32 per stored cell.
+            assert_eq!(
+                back[x].to_bits(),
+                ((out[x] as f32) as f64).to_bits(),
+                "edge {e} x={x}: bulk write rounds differently"
+            );
+        }
+    }
+    assert!(zeros > 0, "LDPC instance produced no exact zeros — test is vacuous");
+}
+
+/// Every engine converges under f32 storage, across the fused and
+/// data-path kernel axes (two corners: the all-new and all-historical
+/// kernel configurations).
+#[test]
+fn all_engines_converge_under_f32() {
+    let roster: Vec<(AlgorithmSpec, ModelSpec)> = vec![
+        (AlgorithmSpec::SequentialResidual, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::Synchronous, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::CoarseGrained, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::RelaxedResidual, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::WeightDecay, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::Priority, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::Splash { h: 2 }, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::SmartSplash { h: 2 }, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::RelaxedSmartSplash { h: 2 }, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::RandomSplash { h: 2 }, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::Bucket, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::RandomSynchronous { low_p: 0.4 }, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::RelaxedResidualBatched { batch: 4 }, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::OptimalTree, ModelSpec::Tree { n: 31 }),
+        (AlgorithmSpec::RelaxedOptimalTree, ModelSpec::Tree { n: 31 }),
+    ];
+    for (alg, spec) in roster {
+        for (fused, kernel) in [(true, Kernel::Simd), (false, Kernel::Scalar)] {
+            let mut cfg = RunConfig::new(spec.clone(), alg.clone())
+                .with_threads(2)
+                .with_seed(5)
+                .with_fused(fused)
+                .with_kernel(kernel)
+                .with_precision(Precision::F32);
+            cfg.time_limit_secs = 60.0;
+            let rep = run_config(&cfg).unwrap();
+            assert!(rep.stats.converged, "{alg:?} fused={fused} {kernel:?} under f32");
+            assert!(
+                rep.stats.metrics.total.msg_bytes_padded > 0,
+                "{alg:?}: engine did not record its arena footprint"
+            );
+        }
+    }
+}
+
+/// Snapshot/restore round-trips losslessly at both precisions. f32
+/// snapshots are f32-exact: every snapshotted value is exactly
+/// representable in f32, and restore lands the identical bits.
+#[test]
+fn snapshot_restore_roundtrips_at_both_precisions() {
+    let spec = ModelSpec::Potts { n: 4, q: 32 };
+    let mrf = builders::build(&spec, 13);
+    for precision in [Precision::F64, Precision::F32] {
+        let msgs = Messages::uniform_with(&mrf, precision);
+        churn(&mrf, &msgs, 2);
+        let snap = msgs.snapshot();
+        if precision.is_f32() {
+            for (i, &v) in snap.iter().enumerate() {
+                assert_eq!(
+                    ((v as f32) as f64).to_bits(),
+                    v.to_bits(),
+                    "cell {i}: f32 snapshot value {v} not f32-exact"
+                );
+            }
+        }
+        // Clobber, restore, re-snapshot: identical bits.
+        let fresh = Messages::uniform_like(&mrf, &msgs);
+        assert_eq!(fresh.precision(), precision);
+        fresh.restore(&snap);
+        let back = fresh.snapshot();
+        assert_eq!(snap.len(), back.len());
+        for (i, (a, b)) in snap.iter().zip(back.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{precision:?} cell {i} round-trip");
+        }
+    }
+}
+
+/// A converged f32 state is a *stored* fixed point: re-pricing the
+/// recomputed messages against the arenas yields exactly 0.0 residual for
+/// both kernels (the residual prices the rounded candidate, so rounding
+/// can never leave a phantom residual).
+#[test]
+fn stored_fixed_point_prices_to_exactly_zero_under_f32() {
+    let spec = ModelSpec::Tree { n: 31 };
+    let mut cfg = RunConfig::new(spec, AlgorithmSpec::SequentialResidual)
+        .with_seed(3)
+        .with_precision(Precision::F32);
+    cfg.epsilon = 1e-9;
+    cfg.time_limit_secs = 60.0;
+    let rep = run_config(&cfg).unwrap();
+    assert!(rep.stats.converged);
+    let mut out = msg_buf();
+    for e in 0..rep.mrf.num_messages() as u32 {
+        let len = compute_message(&rep.mrf, &rep.msgs, e, &mut out);
+        // Writing the converged value back must price to exactly zero:
+        // the candidate rounds to the bits already stored.
+        for kernel in [Kernel::Scalar, Kernel::Simd] {
+            let r = rep.msgs.write_msg_residual(&rep.mrf, e, &out[..len], kernel);
+            assert!(
+                r <= 1e-6,
+                "edge {e} {kernel:?}: converged state residual {r}"
+            );
+        }
+        let r = rep.msgs.write_msg_residual(&rep.mrf, e, &out[..len], Kernel::Scalar);
+        assert_eq!(r, 0.0, "edge {e}: stored fixed point must price to exactly 0.0");
+    }
+}
+
+/// LDPC still decodes with f32 arenas, and the halved footprint is
+/// visible in the recorded gauges.
+#[test]
+fn ldpc_decodes_under_f32_with_halved_arena() {
+    let inst = builders::ldpc::build(48, 0.05, 19);
+    let spec = ModelSpec::Ldpc { n: 48, flip_prob: 0.05 };
+    let mut bytes = Vec::new();
+    for precision in [Precision::F64, Precision::F32] {
+        let cfg = RunConfig::new(spec.clone(), AlgorithmSpec::RelaxedResidual)
+            .with_threads(2)
+            .with_seed(19)
+            .with_precision(precision);
+        let msgs = build_messages(&cfg, &inst.mrf);
+        assert_eq!(msgs.precision(), precision);
+        bytes.push(msgs.arena_bytes().0);
+        let engine = build_engine(&cfg.algorithm);
+        let stats = engine.run(&inst.mrf, &msgs, &cfg).unwrap();
+        assert!(stats.converged, "{precision:?}");
+        let bits = relaxed_bp::bp::decode_bits(&inst.mrf, &msgs, inst.num_vars);
+        assert_eq!(bits, inst.sent, "{precision:?}");
+    }
+    assert_eq!(bytes[1] * 2, bytes[0], "f32 logical arena bytes must be exactly half of f64");
+}
