@@ -64,6 +64,47 @@ impl Lookahead {
         la
     }
 
+    /// Delta-aware re-prime for a warm start: the pending store is cloned
+    /// from `live` (so every un-refreshed edge has residual 0 and a
+    /// spurious commit is a value-preserving no-op), then only the
+    /// out-edges of `nodes` — exactly the messages whose recomputation
+    /// reads a perturbed prior `ψ_i` — are re-priced through the edge-wise
+    /// kernel. On a converged `live` state this produces the same cache as
+    /// a full [`Lookahead::init`] up to the fixed-point tolerance, in
+    /// O(Σ_{i∈nodes} deg(i)·deg·|D|) instead of O(edges) work.
+    pub fn init_delta(mrf: &Mrf, live: &Messages, kernel: Kernel, nodes: &[u32]) -> Self {
+        let la = Self::warm(mrf, live, kernel);
+        let mut scratch = MsgScratch::new();
+        for &i in nodes {
+            for s in mrf.graph.slots(i as usize) {
+                la.refresh(mrf, live, mrf.graph.adj_out[s], &mut scratch);
+            }
+        }
+        la
+    }
+
+    /// [`Lookahead::init_delta`] through the node-centric fused kernel: one
+    /// [`Lookahead::refresh_node`] per perturbed node re-prices its whole
+    /// out-set in a single O(deg·|D|) pass.
+    pub fn init_delta_fused(mrf: &Mrf, live: &Messages, kernel: Kernel, nodes: &[u32]) -> Self {
+        let la = Self::warm(mrf, live, kernel);
+        let mut scratch = NodeScratch::new();
+        let mut batch = Vec::new();
+        for &i in nodes {
+            la.refresh_node(mrf, live, i, None, &mut scratch, &mut batch);
+            batch.clear();
+        }
+        la
+    }
+
+    /// Pending store primed to equal `live` exactly (same stored bits at
+    /// either precision), all residuals zero.
+    fn warm(mrf: &Mrf, live: &Messages, kernel: Kernel) -> Self {
+        let la = Self::empty(mrf, live, kernel);
+        la.pending.restore(&live.snapshot());
+        la
+    }
+
     /// Allocate the pending store + residual table (all zero residuals).
     fn empty(mrf: &Mrf, live: &Messages, kernel: Kernel) -> Self {
         let pending = Messages::uniform_like(mrf, live);
@@ -378,6 +419,83 @@ mod tests {
         let mut buf = msg_buf();
         la.read_pending(&m, 1, &mut buf);
         assert_eq!(&buf[..2], &[0.4, 0.6]);
+    }
+
+    #[test]
+    fn init_delta_over_all_nodes_matches_fresh_init_bitwise() {
+        // The delta re-prime runs the same refresh kernels as a full init,
+        // so handing it every node must reproduce the fresh cache exactly
+        // (same bits), for both the edge-wise and the fused constructor.
+        for kernel in [Kernel::Scalar, Kernel::Simd] {
+            let m = builders::build(&ModelSpec::PowerLaw { n: 60, m: 3 }, 9);
+            let live = Messages::uniform(&m);
+            // Make the live state non-trivial first.
+            let warm = Lookahead::init(&m, &live, kernel);
+            for e in 0..8 {
+                warm.commit(&m, &live, e);
+            }
+            let all: Vec<u32> = (0..m.num_nodes() as u32).collect();
+            for (fresh, cache) in [
+                (Lookahead::init(&m, &live, kernel), Lookahead::init_delta(&m, &live, kernel, &all)),
+                (
+                    Lookahead::init_fused(&m, &live, kernel),
+                    Lookahead::init_delta_fused(&m, &live, kernel, &all),
+                ),
+            ] {
+                let mut pa = msg_buf();
+                let mut pb = msg_buf();
+                for e in 0..m.num_messages() as u32 {
+                    assert_eq!(
+                        fresh.residual(e).to_bits(),
+                        cache.residual(e).to_bits(),
+                        "{kernel:?} edge {e} residual"
+                    );
+                    let la = fresh.read_pending(&m, e, &mut pa);
+                    let lb = cache.read_pending(&m, e, &mut pb);
+                    assert_eq!(la, lb);
+                    for x in 0..la {
+                        assert_eq!(pa[x].to_bits(), pb[x].to_bits(), "{kernel:?} edge {e} x={x}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn init_delta_refreshes_only_the_perturbed_out_set() {
+        // Subset re-prime: out-edges of the named nodes carry exactly the
+        // fresh-init values; every other edge keeps pending == live
+        // (residual 0), so a spurious commit of it is a no-op.
+        let m = builders::build(&ModelSpec::Ising { n: 4 }, 7);
+        let live = Messages::uniform(&m);
+        let warm = Lookahead::init(&m, &live, Kernel::Scalar);
+        for e in 0..6 {
+            warm.commit(&m, &live, e);
+        }
+        let nodes = [2u32, 5, 11];
+        let fresh = Lookahead::init(&m, &live, Kernel::Scalar);
+        let cache = Lookahead::init_delta(&m, &live, Kernel::Scalar, &nodes);
+        let mut pa = msg_buf();
+        let mut pb = msg_buf();
+        for e in 0..m.num_messages() as u32 {
+            let src = m.graph.edge_src[e as usize];
+            if nodes.contains(&src) {
+                assert_eq!(fresh.residual(e).to_bits(), cache.residual(e).to_bits(), "edge {e}");
+                let la = fresh.read_pending(&m, e, &mut pa);
+                let lb = cache.read_pending(&m, e, &mut pb);
+                assert_eq!(la, lb);
+                for x in 0..la {
+                    assert_eq!(pa[x].to_bits(), pb[x].to_bits(), "edge {e} x={x}");
+                }
+            } else {
+                assert_eq!(cache.residual(e), 0.0, "edge {e} outside the out-set");
+                let lb = cache.read_pending(&m, e, &mut pb);
+                live.read_msg(&m, e, &mut pa);
+                for x in 0..lb {
+                    assert_eq!(pa[x].to_bits(), pb[x].to_bits(), "edge {e} pending != live");
+                }
+            }
+        }
     }
 
     #[test]

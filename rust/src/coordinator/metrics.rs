@@ -47,6 +47,12 @@ pub struct Counters {
     /// insertion batch size on a fused run is ≈ `inserts / insert_batches`
     /// (exact when every insert goes through the batched path).
     pub insert_batches: u64,
+    /// Tasks seeded by an evidence-delta warm start (the re-priced
+    /// frontier — out-edges of perturbed nodes, or their node tasks on the
+    /// node-centric engines). Zero on scratch runs and on empty deltas, so
+    /// it doubles as the "how local was this delta" signal next to
+    /// `time_to_reconverge` in the BENCH schema.
+    pub tasks_touched: u64,
     /// **Gauge** (not an event count): logical bytes of the run's message
     /// arenas — live state plus any lookahead cache — at the storage
     /// precision (`len × bytes_per_cell`). Workers share one arena, so
@@ -76,6 +82,7 @@ impl Counters {
         self.splashes += other.splashes;
         self.refreshes += other.refreshes;
         self.insert_batches += other.insert_batches;
+        self.tasks_touched += other.tasks_touched;
         self.msg_bytes_logical = self.msg_bytes_logical.max(other.msg_bytes_logical);
         self.msg_bytes_padded = self.msg_bytes_padded.max(other.msg_bytes_padded);
     }
@@ -99,6 +106,7 @@ pub struct AtomicCounters {
     splashes: AtomicU64,
     refreshes: AtomicU64,
     insert_batches: AtomicU64,
+    tasks_touched: AtomicU64,
     msg_bytes_logical: AtomicU64,
     msg_bytes_padded: AtomicU64,
 }
@@ -118,6 +126,7 @@ impl AtomicCounters {
         self.splashes.store(c.splashes, Ordering::Relaxed);
         self.refreshes.store(c.refreshes, Ordering::Relaxed);
         self.insert_batches.store(c.insert_batches, Ordering::Relaxed);
+        self.tasks_touched.store(c.tasks_touched, Ordering::Relaxed);
         self.msg_bytes_logical.store(c.msg_bytes_logical, Ordering::Relaxed);
         self.msg_bytes_padded.store(c.msg_bytes_padded, Ordering::Relaxed);
     }
@@ -136,6 +145,7 @@ impl AtomicCounters {
             splashes: self.splashes.load(Ordering::Relaxed),
             refreshes: self.refreshes.load(Ordering::Relaxed),
             insert_batches: self.insert_batches.load(Ordering::Relaxed),
+            tasks_touched: self.tasks_touched.load(Ordering::Relaxed),
             msg_bytes_logical: self.msg_bytes_logical.load(Ordering::Relaxed),
             msg_bytes_padded: self.msg_bytes_padded.load(Ordering::Relaxed),
         }

@@ -27,7 +27,7 @@ use crate::bp::{
 };
 use crate::configio::RunConfig;
 use crate::exec::{ExecCtx, TaskPolicy, WorkerPool};
-use crate::model::Mrf;
+use crate::model::{EvidenceDelta, Mrf};
 use crate::sched::SchedChoice;
 use anyhow::Result;
 
@@ -88,20 +88,13 @@ pub struct RelaxedResidualBatched {
     pub batch: usize,
 }
 
-impl Engine for RelaxedResidualBatched {
-    fn name(&self) -> String {
-        format!("relaxed_residual_batched_{}", self.batch)
-    }
-
-    fn run(&self, mrf: &Mrf, msgs: &Messages, cfg: &RunConfig) -> Result<EngineStats> {
-        self.run_observed(mrf, msgs, cfg, None)
-    }
-
-    fn run_observed(
+impl RelaxedResidualBatched {
+    fn run_inner(
         &self,
         mrf: &Mrf,
         msgs: &Messages,
         cfg: &RunConfig,
+        delta: Option<&EvidenceDelta>,
         observer: Option<&dyn crate::exec::RunObserver>,
     ) -> Result<EngineStats> {
         // Resolve the batch backend: PJRT when requested and supported.
@@ -119,11 +112,45 @@ impl Engine for RelaxedResidualBatched {
         // the backend path whenever PJRT was explicitly requested and
         // resolved (its dense kernel is the point of that configuration).
         let fused = cfg.fused && pjrt.is_none();
-        let policy = BatchedPolicy::new(mrf, msgs, cfg, backend, fused);
+        let policy = match delta {
+            None => BatchedPolicy::new(mrf, msgs, cfg, backend, fused),
+            Some(d) => BatchedPolicy::new_delta(mrf, msgs, cfg, backend, fused, d),
+        };
         Ok(WorkerPool::from_config(cfg, SchedChoice::Relaxed)
             .batch(self.batch.max(1))
             .with_partition(crate::model::partition::for_messages(mrf, cfg))
             .run_observed(&policy, observer))
+    }
+}
+
+impl Engine for RelaxedResidualBatched {
+    fn name(&self) -> String {
+        format!("relaxed_residual_batched_{}", self.batch)
+    }
+
+    fn run(&self, mrf: &Mrf, msgs: &Messages, cfg: &RunConfig) -> Result<EngineStats> {
+        self.run_observed(mrf, msgs, cfg, None)
+    }
+
+    fn run_observed(
+        &self,
+        mrf: &Mrf,
+        msgs: &Messages,
+        cfg: &RunConfig,
+        observer: Option<&dyn crate::exec::RunObserver>,
+    ) -> Result<EngineStats> {
+        self.run_inner(mrf, msgs, cfg, None, observer)
+    }
+
+    fn resume(
+        &self,
+        mrf: &Mrf,
+        msgs: &Messages,
+        cfg: &RunConfig,
+        delta: &EvidenceDelta,
+        observer: Option<&dyn crate::exec::RunObserver>,
+    ) -> Result<EngineStats> {
+        self.run_inner(mrf, msgs, cfg, Some(delta), observer)
     }
 }
 
@@ -156,6 +183,9 @@ pub(crate) struct BatchedPolicy<'a> {
     /// Node-centric fused refresh instead of the dense edge-list backend
     /// (`RunConfig::fused`, forced off when the PJRT backend is live).
     fused: bool,
+    /// Delta warm start: seed only the out-edges of these (perturbed)
+    /// nodes. `None` = scratch run, full seed.
+    seed_nodes: Option<Vec<u32>>,
 }
 
 impl<'a> BatchedPolicy<'a> {
@@ -171,7 +201,44 @@ impl<'a> BatchedPolicy<'a> {
         } else {
             Lookahead::init(mrf, msgs, cfg.kernel)
         };
-        BatchedPolicy { mrf, msgs, la, backend, stride: mrf.max_domain(), eps: cfg.epsilon, fused }
+        BatchedPolicy {
+            mrf,
+            msgs,
+            la,
+            backend,
+            stride: mrf.max_domain(),
+            eps: cfg.epsilon,
+            fused,
+            seed_nodes: None,
+        }
+    }
+
+    /// Warm-start policy over a resident `msgs` state with a delta-primed
+    /// lookahead cache (see [`Lookahead::init_delta`]).
+    pub(crate) fn new_delta(
+        mrf: &'a Mrf,
+        msgs: &'a Messages,
+        cfg: &RunConfig,
+        backend: &'a dyn BatchCompute,
+        fused: bool,
+        delta: &EvidenceDelta,
+    ) -> Self {
+        let nodes: Vec<u32> = delta.nodes().collect();
+        let la = if fused {
+            Lookahead::init_delta_fused(mrf, msgs, cfg.kernel, &nodes)
+        } else {
+            Lookahead::init_delta(mrf, msgs, cfg.kernel, &nodes)
+        };
+        BatchedPolicy {
+            mrf,
+            msgs,
+            la,
+            backend,
+            stride: mrf.max_domain(),
+            eps: cfg.epsilon,
+            fused,
+            seed_nodes: Some(nodes),
+        }
     }
 }
 
@@ -194,8 +261,25 @@ impl TaskPolicy for BatchedPolicy<'_> {
     }
 
     fn seed(&self, ctx: &mut ExecCtx<'_>) {
-        for e in 0..self.mrf.num_messages() as u32 {
-            ctx.requeue(e, self.la.residual(e));
+        match &self.seed_nodes {
+            None => {
+                for e in 0..self.mrf.num_messages() as u32 {
+                    ctx.requeue(e, self.la.residual(e));
+                }
+            }
+            Some(nodes) => {
+                // Delta warm start: one shard-grouped batched insert of
+                // the re-priced frontier (out-edges of perturbed nodes).
+                let mut batch = Vec::new();
+                for &i in nodes {
+                    for s in self.mrf.graph.slots(i as usize) {
+                        let e = self.mrf.graph.adj_out[s];
+                        batch.push((e, self.la.residual(e)));
+                    }
+                }
+                ctx.counters.tasks_touched += batch.len() as u64;
+                ctx.requeue_batch(&batch);
+            }
         }
     }
 

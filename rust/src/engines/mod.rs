@@ -36,7 +36,7 @@ use crate::bp::Messages;
 use crate::configio::{AlgorithmSpec, RunConfig};
 use crate::coordinator::MetricsReport;
 use crate::exec::RunObserver;
-use crate::model::Mrf;
+use crate::model::{EvidenceDelta, Mrf};
 use anyhow::Result;
 
 /// Outcome of one engine run. Message state is left in `msgs` (owned by the
@@ -76,6 +76,35 @@ pub trait Engine: Sync {
     ) -> Result<EngineStats> {
         let _ = observer;
         self.run(mrf, msgs, cfg)
+    }
+
+    /// Warm-start re-convergence after an evidence delta: `mrf` already
+    /// carries the perturbed priors (see
+    /// [`EvidenceDelta::apply`](crate::model::EvidenceDelta::apply)) and
+    /// `msgs` is the resident message state of a previous converged run —
+    /// NOT `uniform_like`. `delta` names the perturbed nodes so the engine
+    /// can seed only the affected frontier (the out-edges of those nodes,
+    /// re-priced against the stored cells) and report its size as
+    /// `tasks_touched`.
+    ///
+    /// The default implementation is warm-*correct* but not incremental:
+    /// it re-runs the engine's full seed against the resident state, which
+    /// reaches the same fixed point (residual seeding only changes *work*,
+    /// never results — the verify sweep re-derives every priority from
+    /// ground truth regardless of what was seeded). Engines with a
+    /// delta-aware seeder override this; the analytic optimal-tree
+    /// schedule keeps the default, since its completion criterion counts a
+    /// fixed per-edge schedule that has no incremental form.
+    fn resume(
+        &self,
+        mrf: &Mrf,
+        msgs: &Messages,
+        cfg: &RunConfig,
+        delta: &EvidenceDelta,
+        observer: Option<&dyn RunObserver>,
+    ) -> Result<EngineStats> {
+        let _ = delta;
+        self.run_observed(mrf, msgs, cfg, observer)
     }
 
     /// Display name for reports.

@@ -17,7 +17,7 @@ use super::{Engine, EngineStats};
 use crate::bp::{compute_message_with, msg_buf, Kernel, Messages, MsgBuf, MsgScratch, MsgSource};
 use crate::configio::RunConfig;
 use crate::exec::{ExecCtx, TaskPolicy, WorkerPool};
-use crate::model::Mrf;
+use crate::model::{EvidenceDelta, Mrf};
 use crate::sched::SchedChoice;
 use crate::util::AtomicF64;
 use anyhow::Result;
@@ -46,6 +46,20 @@ impl Engine for NoLookahead {
             .with_partition(crate::model::partition::for_messages(mrf, cfg))
             .run_observed(&policy, observer))
     }
+
+    fn resume(
+        &self,
+        mrf: &Mrf,
+        msgs: &Messages,
+        cfg: &RunConfig,
+        delta: &EvidenceDelta,
+        observer: Option<&dyn crate::exec::RunObserver>,
+    ) -> Result<EngineStats> {
+        let policy = ScorePolicy::new_delta(mrf, msgs, cfg, delta);
+        Ok(WorkerPool::from_config(cfg, SchedChoice::Relaxed)
+            .with_partition(crate::model::partition::for_messages(mrf, cfg))
+            .run_observed(&policy, observer))
+    }
 }
 
 /// Message buffers reused across updates by one worker.
@@ -66,13 +80,31 @@ pub(crate) struct ScorePolicy<'a> {
     eps: f64,
     /// Data-path kernel (`RunConfig::kernel`).
     kernel: Kernel,
+    /// Delta warm start: bootstrap scores only for the out-edges of these
+    /// (perturbed) nodes. `None` = scratch run, full bootstrap sweep.
+    seed_nodes: Option<Vec<u32>>,
 }
 
 impl<'a> ScorePolicy<'a> {
     pub(crate) fn new(mrf: &'a Mrf, msgs: &'a Messages, cfg: &RunConfig) -> Self {
         let mut scores = Vec::with_capacity(mrf.num_messages());
         scores.resize_with(mrf.num_messages(), AtomicF64::default);
-        ScorePolicy { mrf, msgs, scores, eps: cfg.epsilon, kernel: cfg.kernel }
+        ScorePolicy { mrf, msgs, scores, eps: cfg.epsilon, kernel: cfg.kernel, seed_nodes: None }
+    }
+
+    /// Warm-start policy over a resident `msgs` state: scores start at 0
+    /// everywhere (the resident state is a fixed point away from the
+    /// delta) and only the perturbed nodes' out-edges get the one-time
+    /// true-residual bootstrap.
+    pub(crate) fn new_delta(
+        mrf: &'a Mrf,
+        msgs: &'a Messages,
+        cfg: &RunConfig,
+        delta: &EvidenceDelta,
+    ) -> Self {
+        let mut p = Self::new(mrf, msgs, cfg);
+        p.seed_nodes = Some(delta.nodes().collect());
+        p
     }
 }
 
@@ -94,12 +126,35 @@ impl TaskPolicy for ScorePolicy<'_> {
         // message read just to price the edge.
         let mut buf = msg_buf();
         let mut gather = MsgScratch::new();
-        for e in 0..self.mrf.num_messages() as u32 {
+        let mut price = |e: u32| {
             let len =
                 compute_message_with(self.mrf, self.msgs, e, &mut buf, &mut gather, self.kernel);
             let r = self.msgs.residual_l2_against(self.mrf, e, &buf[..len], self.kernel);
             self.scores[e as usize].store(r);
-            ctx.activate(e, r);
+            r
+        };
+        match &self.seed_nodes {
+            None => {
+                for e in 0..self.mrf.num_messages() as u32 {
+                    let r = price(e);
+                    ctx.activate(e, r);
+                }
+            }
+            Some(nodes) => {
+                // Delta warm start: bootstrap only the perturbed frontier,
+                // injected as one shard-grouped batch. (At seed time no
+                // entries are outstanding, so the batched requeue's epoch
+                // bump cannot strand a valid ticket.)
+                let mut batch = Vec::new();
+                for &i in nodes {
+                    for s in self.mrf.graph.slots(i as usize) {
+                        let e = self.mrf.graph.adj_out[s];
+                        batch.push((e, price(e)));
+                    }
+                }
+                ctx.counters.tasks_touched += batch.len() as u64;
+                ctx.requeue_batch(&batch);
+            }
         }
     }
 

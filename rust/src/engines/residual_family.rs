@@ -21,7 +21,7 @@ use super::{Engine, EngineStats};
 use crate::bp::{Lookahead, Messages, MsgScratch, NodeScratch};
 use crate::configio::RunConfig;
 use crate::exec::{ExecCtx, TaskPolicy, WorkerPool};
-use crate::model::Mrf;
+use crate::model::{EvidenceDelta, Mrf};
 use crate::sched::SchedChoice;
 use anyhow::Result;
 use std::sync::atomic::{AtomicU32, Ordering};
@@ -55,6 +55,27 @@ impl ResidualEngine {
     }
 }
 
+impl ResidualEngine {
+    fn choice(&self) -> SchedChoice {
+        match self.kind {
+            Kind::CoarseGrained => SchedChoice::Exact,
+            _ => SchedChoice::Relaxed,
+        }
+    }
+
+    fn run_policy(
+        &self,
+        mrf: &Mrf,
+        cfg: &RunConfig,
+        policy: &ResidualPolicy<'_>,
+        observer: Option<&dyn crate::exec::RunObserver>,
+    ) -> EngineStats {
+        WorkerPool::from_config(cfg, self.choice())
+            .with_partition(crate::model::partition::for_messages(mrf, cfg))
+            .run_observed(policy, observer)
+    }
+}
+
 impl Engine for ResidualEngine {
     fn name(&self) -> String {
         match self.kind {
@@ -75,14 +96,21 @@ impl Engine for ResidualEngine {
         cfg: &RunConfig,
         observer: Option<&dyn crate::exec::RunObserver>,
     ) -> Result<EngineStats> {
-        let choice = match self.kind {
-            Kind::CoarseGrained => SchedChoice::Exact,
-            _ => SchedChoice::Relaxed,
-        };
         let policy = ResidualPolicy::new(mrf, msgs, cfg, self.kind == Kind::WeightDecay);
-        Ok(WorkerPool::from_config(cfg, choice)
-            .with_partition(crate::model::partition::for_messages(mrf, cfg))
-            .run_observed(&policy, observer))
+        Ok(self.run_policy(mrf, cfg, &policy, observer))
+    }
+
+    fn resume(
+        &self,
+        mrf: &Mrf,
+        msgs: &Messages,
+        cfg: &RunConfig,
+        delta: &EvidenceDelta,
+        observer: Option<&dyn crate::exec::RunObserver>,
+    ) -> Result<EngineStats> {
+        let policy =
+            ResidualPolicy::new_delta(mrf, msgs, cfg, self.kind == Kind::WeightDecay, delta);
+        Ok(self.run_policy(mrf, cfg, &policy, observer))
     }
 }
 
@@ -99,6 +127,9 @@ pub(crate) struct ResidualPolicy<'a> {
     /// Use the node-centric fused refresh + batched requeue
     /// (`RunConfig::fused`); off forces the per-edge fan-out for A/B.
     fused: bool,
+    /// Delta warm start: seed only the out-edges of these (perturbed)
+    /// nodes instead of every message. `None` = scratch run, full seed.
+    seed_nodes: Option<Vec<u32>>,
 }
 
 /// Per-worker buffers for the refresh paths: the fused kernel's
@@ -127,7 +158,40 @@ impl<'a> ResidualPolicy<'a> {
         } else {
             Lookahead::init(mrf, msgs, cfg.kernel)
         };
-        ResidualPolicy { mrf, msgs, la, counts, eps: cfg.epsilon, fused: cfg.fused }
+        ResidualPolicy { mrf, msgs, la, counts, eps: cfg.epsilon, fused: cfg.fused, seed_nodes: None }
+    }
+
+    /// Warm-start policy over a resident `msgs` state: the lookahead cache
+    /// is delta-primed (only the perturbed nodes' out-edges re-priced; see
+    /// [`Lookahead::init_delta`]) and [`TaskPolicy::seed`] will inject only
+    /// that frontier.
+    pub(crate) fn new_delta(
+        mrf: &'a Mrf,
+        msgs: &'a Messages,
+        cfg: &RunConfig,
+        weight_decay: bool,
+        delta: &EvidenceDelta,
+    ) -> Self {
+        let nodes: Vec<u32> = delta.nodes().collect();
+        let counts = weight_decay.then(|| {
+            let mut v = Vec::with_capacity(mrf.num_messages());
+            v.resize_with(mrf.num_messages(), || AtomicU32::new(0));
+            v
+        });
+        let la = if cfg.fused {
+            Lookahead::init_delta_fused(mrf, msgs, cfg.kernel, &nodes)
+        } else {
+            Lookahead::init_delta(mrf, msgs, cfg.kernel, &nodes)
+        };
+        ResidualPolicy {
+            mrf,
+            msgs,
+            la,
+            counts,
+            eps: cfg.epsilon,
+            fused: cfg.fused,
+            seed_nodes: Some(nodes),
+        }
     }
 
     /// Priority of edge `e` given its residual (weight-decay divides by the
@@ -153,8 +217,29 @@ impl TaskPolicy for ResidualPolicy<'_> {
     }
 
     fn seed(&self, ctx: &mut ExecCtx<'_>) {
-        for e in 0..self.mrf.num_messages() as u32 {
-            ctx.requeue(e, self.priority(self.la.residual(e), e));
+        match &self.seed_nodes {
+            None => {
+                for e in 0..self.mrf.num_messages() as u32 {
+                    ctx.requeue(e, self.priority(self.la.residual(e), e));
+                }
+            }
+            Some(nodes) => {
+                // Delta warm start: inject exactly the re-priced frontier
+                // (out-edges of the perturbed nodes) through the batched
+                // insert path, so with the locality axis on every entry
+                // lands in its shard's queue group. Everything else keeps
+                // residual 0 from the delta-primed cache; the verify sweep
+                // is the safety net for anything the frontier misses.
+                let mut batch = Vec::new();
+                for &i in nodes {
+                    for s in self.mrf.graph.slots(i as usize) {
+                        let e = self.mrf.graph.adj_out[s];
+                        batch.push((e, self.priority(self.la.residual(e), e)));
+                    }
+                }
+                ctx.counters.tasks_touched += batch.len() as u64;
+                ctx.requeue_batch(&batch);
+            }
         }
     }
 

@@ -12,7 +12,7 @@ use crate::bp::{Lookahead, Messages, MsgScratch, NodeScratch};
 use crate::configio::RunConfig;
 use crate::coordinator::{Budget, Counters, MetricsReport};
 use crate::exec::RunObserver;
-use crate::model::Mrf;
+use crate::model::{EvidenceDelta, Mrf};
 use crate::sched::IndexedHeap;
 use crate::util::Timer;
 use anyhow::Result;
@@ -36,17 +36,44 @@ impl Engine for SequentialResidual {
         cfg: &RunConfig,
         observer: Option<&dyn RunObserver>,
     ) -> Result<EngineStats> {
+        self.run_inner(mrf, msgs, cfg, None, observer)
+    }
+
+    fn resume(
+        &self,
+        mrf: &Mrf,
+        msgs: &Messages,
+        cfg: &RunConfig,
+        delta: &EvidenceDelta,
+        observer: Option<&dyn RunObserver>,
+    ) -> Result<EngineStats> {
+        let nodes: Vec<u32> = delta.nodes().collect();
+        self.run_inner(mrf, msgs, cfg, Some(&nodes), observer)
+    }
+}
+
+impl SequentialResidual {
+    fn run_inner(
+        &self,
+        mrf: &Mrf,
+        msgs: &Messages,
+        cfg: &RunConfig,
+        seed_nodes: Option<&[u32]>,
+        observer: Option<&dyn RunObserver>,
+    ) -> Result<EngineStats> {
         let timer = Timer::start();
         let budget = Budget::new(cfg.time_limit_secs, cfg.max_updates);
         let eps = cfg.epsilon;
 
         // Both kernel axes apply to the baseline too, so fused-vs-edgewise
         // and simd-vs-scalar comparisons against it measure scheduling,
-        // not kernel, effects.
-        let la = if cfg.fused {
-            Lookahead::init_fused(mrf, msgs, cfg.kernel)
-        } else {
-            Lookahead::init(mrf, msgs, cfg.kernel)
+        // not kernel, effects. A delta resume primes the lookahead from the
+        // resident state and prices only the perturbed frontier.
+        let la = match (seed_nodes, cfg.fused) {
+            (Some(nodes), true) => Lookahead::init_delta_fused(mrf, msgs, cfg.kernel, nodes),
+            (Some(nodes), false) => Lookahead::init_delta(mrf, msgs, cfg.kernel, nodes),
+            (None, true) => Lookahead::init_fused(mrf, msgs, cfg.kernel),
+            (None, false) => Lookahead::init(mrf, msgs, cfg.kernel),
         };
         let mut heap = IndexedHeap::new(mrf.num_messages());
         let mut c = Counters::default();
@@ -58,11 +85,31 @@ impl Engine for SequentialResidual {
         let mut gather = MsgScratch::new();
         let mut refreshed: Vec<(u32, f64)> = Vec::new();
 
-        for e in 0..mrf.num_messages() as u32 {
-            let r = la.residual(e);
-            if r >= eps {
-                heap.update(e, r);
-                c.inserts += 1;
+        match seed_nodes {
+            None => {
+                for e in 0..mrf.num_messages() as u32 {
+                    let r = la.residual(e);
+                    if r >= eps {
+                        heap.update(e, r);
+                        c.inserts += 1;
+                    }
+                }
+            }
+            Some(nodes) => {
+                // Delta warm start: only the out-edges of perturbed nodes
+                // carry non-zero residuals (everything else is bitwise at
+                // the resident fixed point), so only they can seed work.
+                for &i in nodes {
+                    for s in mrf.graph.slots(i as usize) {
+                        let e = mrf.graph.adj_out[s];
+                        c.tasks_touched += 1;
+                        let r = la.residual(e);
+                        if r >= eps {
+                            heap.update(e, r);
+                            c.inserts += 1;
+                        }
+                    }
+                }
             }
         }
 

@@ -21,7 +21,7 @@ use crate::bp::{Lookahead, Messages, MsgScratch, NodeScratch};
 use crate::configio::RunConfig;
 use crate::coordinator::Counters;
 use crate::exec::{ExecCtx, TaskPolicy, WorkerPool};
-use crate::model::Mrf;
+use crate::model::{EvidenceDelta, Mrf};
 use crate::sched::SchedChoice;
 use anyhow::Result;
 use std::collections::HashSet;
@@ -84,6 +84,21 @@ impl Engine for SplashEngine {
             .with_partition(crate::model::partition::for_nodes(mrf, cfg))
             .run_observed(&policy, observer))
     }
+
+    fn resume(
+        &self,
+        mrf: &Mrf,
+        msgs: &Messages,
+        cfg: &RunConfig,
+        delta: &EvidenceDelta,
+        observer: Option<&dyn crate::exec::RunObserver>,
+    ) -> Result<EngineStats> {
+        let policy = SplashPolicy::new_delta(mrf, msgs, cfg, self.h, self.smart, delta);
+        Ok(WorkerPool::from_config(cfg, self.choice)
+            .flush_every(128)
+            .with_partition(crate::model::partition::for_nodes(mrf, cfg))
+            .run_observed(&policy, observer))
+    }
 }
 
 /// Per-worker BFS and refresh buffers, reused across splashes.
@@ -114,6 +129,10 @@ pub(crate) struct SplashPolicy<'a> {
     /// Fused post-splash refresh + batched node requeues
     /// (`RunConfig::fused`).
     fused: bool,
+    /// Delta warm start: seed only these node tasks (the perturbed nodes
+    /// and their neighbors — the nodes whose node residual the re-priced
+    /// out-edges feed). `None` = scratch run, full seed.
+    seed_nodes: Option<Vec<u32>>,
 }
 
 impl<'a> SplashPolicy<'a> {
@@ -129,7 +148,47 @@ impl<'a> SplashPolicy<'a> {
         } else {
             Lookahead::init(mrf, msgs, cfg.kernel)
         };
-        SplashPolicy { mrf, msgs, la, h, smart, eps: cfg.epsilon, fused: cfg.fused }
+        SplashPolicy { mrf, msgs, la, h, smart, eps: cfg.epsilon, fused: cfg.fused, seed_nodes: None }
+    }
+
+    /// Warm-start policy over a resident `msgs` state: the lookahead cache
+    /// is delta-primed over the perturbed nodes' out-edges, and seeding
+    /// covers the perturbed nodes plus their neighbors — node residuals
+    /// are maxima over *incoming* messages, so a perturbed node's out-set
+    /// re-pricing raises exactly its neighbors' priorities.
+    pub(crate) fn new_delta(
+        mrf: &'a Mrf,
+        msgs: &'a Messages,
+        cfg: &RunConfig,
+        h: usize,
+        smart: bool,
+        delta: &EvidenceDelta,
+    ) -> Self {
+        let nodes: Vec<u32> = delta.nodes().collect();
+        let la = if cfg.fused {
+            Lookahead::init_delta_fused(mrf, msgs, cfg.kernel, &nodes)
+        } else {
+            Lookahead::init_delta(mrf, msgs, cfg.kernel, &nodes)
+        };
+        let mut seed: Vec<u32> = Vec::new();
+        for &i in &nodes {
+            seed.push(i);
+            for s in mrf.graph.slots(i as usize) {
+                seed.push(mrf.graph.adj_node[s]);
+            }
+        }
+        seed.sort_unstable();
+        seed.dedup();
+        SplashPolicy {
+            mrf,
+            msgs,
+            la,
+            h,
+            smart,
+            eps: cfg.epsilon,
+            fused: cfg.fused,
+            seed_nodes: Some(seed),
+        }
     }
 
     /// Node residual: max residual over incoming messages.
@@ -277,8 +336,20 @@ impl TaskPolicy for SplashPolicy<'_> {
     }
 
     fn seed(&self, ctx: &mut ExecCtx<'_>) {
-        for v in 0..self.mrf.num_nodes() as u32 {
-            ctx.requeue(v, self.node_priority(v));
+        match &self.seed_nodes {
+            None => {
+                for v in 0..self.mrf.num_nodes() as u32 {
+                    ctx.requeue(v, self.node_priority(v));
+                }
+            }
+            Some(nodes) => {
+                // Delta warm start: one shard-grouped batch over the
+                // perturbed nodes and their neighbors.
+                let batch: Vec<(u32, f64)> =
+                    nodes.iter().map(|&v| (v, self.node_priority(v))).collect();
+                ctx.counters.tasks_touched += batch.len() as u64;
+                ctx.requeue_batch(&batch);
+            }
         }
     }
 

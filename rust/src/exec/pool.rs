@@ -181,10 +181,12 @@ impl WorkerPool {
 
         // Seed phase: single-threaded, before any worker exists. Seed
         // counters are not attributed to a worker (they would skew
-        // per-thread imbalance numbers) and are discarded. With the
-        // locality axis on, the ExecCtx routes every seeded entry to its
-        // shard's queue group.
-        {
+        // per-thread imbalance numbers) and are discarded — except
+        // `tasks_touched`, the delta-frontier size a warm-start seed
+        // reports, which only the seed phase can produce and is folded
+        // into the final totals below. With the locality axis on, the
+        // ExecCtx routes every seeded entry to its shard's queue group.
+        let seed_tasks_touched = {
             let mut rng = Xoshiro256::stream(self.seed, SEED_STREAM);
             let mut seed_counters = Counters::default();
             let mut entry_buf = Vec::new();
@@ -199,7 +201,8 @@ impl WorkerPool {
                 &mut entry_buf,
             );
             policy.seed(&mut ctx);
-        }
+            seed_counters.tasks_touched
+        };
 
         // The sampler (when an observer is attached) runs beside the
         // workers in an enclosing scope: it wakes every SAMPLER_POLL, emits
@@ -380,7 +383,11 @@ impl WorkerPool {
             })
         });
 
-        let metrics = MetricsReport::aggregate(&per_thread);
+        let mut metrics = MetricsReport::aggregate(&per_thread);
+        // The delta frontier was counted in the (otherwise discarded) seed
+        // phase; fold it in before the final observer sample so the
+        // trace's last point matches the reported stats.
+        metrics.total.tasks_touched += seed_tasks_touched;
         // Final sample from the exact (post-join) totals: guarantees every
         // observed run yields at least two points (start + end) and that
         // the trace's last point matches the reported stats.
@@ -497,6 +504,85 @@ mod tests {
             }
             let m = &stats.metrics.total;
             assert_eq!(m.pops, m.stale_pops + m.claim_failures + m.updates);
+        }
+    }
+
+    #[test]
+    fn partial_seed_repairs_and_keeps_exactly_once() {
+        use crate::configio::PartitionSpec;
+
+        /// Delta-style seed: only the first `seeded` tasks go in (counted
+        /// as `tasks_touched`), the rest must be discovered by the verify
+        /// sweep. Models a warm-start batch landing on an already-drained
+        /// scheduler — including `seeded == 0`, the empty delta, where the
+        /// run starts fully quiescent.
+        struct PartialSeed {
+            n: usize,
+            seeded: usize,
+            processed: Vec<AtomicUsize>,
+        }
+        impl TaskPolicy for PartialSeed {
+            type Scratch = ();
+            fn num_tasks(&self) -> usize {
+                self.n
+            }
+            fn make_scratch(&self) -> Self::Scratch {}
+            fn seed(&self, ctx: &mut ExecCtx<'_>) {
+                for t in 0..self.seeded as u32 {
+                    assert!(ctx.requeue(t, 1.0));
+                    ctx.counters.tasks_touched += 1;
+                }
+            }
+            fn process(&self, tasks: &[u32], ctx: &mut ExecCtx<'_>, _: &mut ()) -> u64 {
+                for &t in tasks {
+                    self.processed[t as usize].fetch_add(1, Ordering::Relaxed);
+                    ctx.counters.updates += 1;
+                }
+                tasks.len() as u64
+            }
+            fn verify_sweep(&self, ctx: &mut ExecCtx<'_>) -> bool {
+                let mut clean = true;
+                for t in 0..self.n as u32 {
+                    if self.processed[t as usize].load(Ordering::Relaxed) == 0 {
+                        ctx.requeue(t, 1.0);
+                        clean = false;
+                    }
+                }
+                clean
+            }
+            fn final_priority(&self) -> f64 {
+                0.0
+            }
+        }
+
+        let threads = 4;
+        for shards in [1usize, 2, 7, threads] {
+            for seeded in [0usize, 5] {
+                let mut cfg = test_cfg(threads);
+                cfg.partition = PartitionSpec::Affine { shards, spill: 0.1, bfs: false };
+                let policy = PartialSeed {
+                    n: 60,
+                    seeded,
+                    processed: {
+                        let mut v = Vec::with_capacity(60);
+                        v.resize_with(60, || AtomicUsize::new(0));
+                        v
+                    },
+                };
+                let stats =
+                    WorkerPool::from_config(&cfg, SchedChoice::Relaxed).run(&policy);
+                assert!(stats.converged, "shards={shards} seeded={seeded}");
+                assert_eq!(stats.metrics.total.updates, 60, "shards={shards} seeded={seeded}");
+                for p in &policy.processed {
+                    assert_eq!(p.load(Ordering::Relaxed), 1, "exactly-once");
+                }
+                let m = &stats.metrics.total;
+                assert_eq!(m.pops, m.stale_pops + m.claim_failures + m.updates);
+                assert_eq!(
+                    m.tasks_touched, seeded as u64,
+                    "seed-phase frontier count must survive into the totals"
+                );
+            }
         }
     }
 

@@ -23,9 +23,9 @@ pub mod report;
 pub use report::{ratio_cell, Report, Row};
 
 use crate::configio::{AlgorithmSpec, Kernel, ModelSpec, PartitionSpec, Precision, RunConfig};
-use crate::model::{builders, Mrf};
+use crate::model::{builders, EvidenceDelta, Mrf};
 use crate::run::run_on_model_observed;
-use crate::telemetry::{Trace, TraceRecorder};
+use crate::telemetry::{Trace, TraceRecorder, DELTA_FRACTION};
 use anyhow::Result;
 use std::cell::RefCell;
 use std::path::PathBuf;
@@ -871,6 +871,116 @@ impl Harness {
         Ok(rep)
     }
 
+    /// Warm arm of the `delta` experiment: converge the base instance
+    /// (untimed), then resume across `delta` from the resident message
+    /// state via [`RunReport::resume_delta`](crate::run::RunReport),
+    /// recording the resumed run's trace under the `/delta` cell id. The
+    /// returned row's `wall_secs` is the time-to-reconverge; the second
+    /// value is the seeded frontier size (`tasks_touched`).
+    fn run_cell_warm(
+        &self,
+        mrf: &Mrf,
+        spec: &ModelSpec,
+        threads: usize,
+        delta: &EvidenceDelta,
+    ) -> Result<(Row, u64)> {
+        let alg = AlgorithmSpec::RelaxedResidual;
+        let cfg = self.cfg(spec, alg.clone(), threads);
+        eprintln!("[harness] {} / {} / p={} / delta warm …", spec.name(), alg.name(), threads);
+        let id = format!("{}/{}/p{}/delta", spec.name(), alg.name(), threads);
+        let recorder = TraceRecorder::new(Duration::from_millis(TRACE_TICK_MS));
+        let mut rep = run_on_model_observed(&cfg, mrf.clone(), None)?;
+        let base_converged = rep.stats.converged;
+        rep.resume_delta(delta, Some(&recorder))?;
+        self.trace_log.borrow_mut().push((id, recorder.take()));
+        let m = &rep.stats.metrics.total;
+        let tasks_touched = m.tasks_touched;
+        let row = Row {
+            model: spec.name().to_string(),
+            algorithm: alg.name(),
+            threads: cfg.threads,
+            wall_secs: rep.stats.wall_secs,
+            updates: m.updates,
+            useful_updates: m.useful_updates,
+            wasted_pops: m.wasted_pops,
+            stale_pops: m.stale_pops,
+            msg_bytes_padded: m.msg_bytes_padded,
+            converged: base_converged && rep.stats.converged,
+            seed: self.seed,
+        };
+        Ok((row, tasks_touched))
+    }
+
+    /// Incremental re-convergence A/B (the delta axis): perturb
+    /// [`DELTA_FRACTION`] of the priors, then re-converge relaxed residual
+    /// warm (resident state + frontier seeding) vs scratch (uniform
+    /// restart on the same perturbed instance), on the locality workloads
+    /// (power-law hubs, LDPC). The table reports time-to-reconverge, the
+    /// warm-over-scratch speedup, and the seeded frontier size — the
+    /// speedup is measured here and floored in CI on the bench delta cell.
+    pub fn delta_ab(&self) -> Result<Report> {
+        let mut rep = Report::new(
+            "delta",
+            "Warm-start re-convergence on evidence deltas vs scratch re-solve (delta axis)",
+        );
+        self.standard_notes(&mut rep);
+        rep.note(format!("perturbed prior fraction = {DELTA_FRACTION}"));
+        let pl = scaled(90_000, self.scale).max(200);
+        let ldpc = scaled(30_000, self.scale).max(24);
+        let specs = vec![
+            ModelSpec::PowerLaw { n: pl, m: 3 },
+            ModelSpec::Ldpc { n: ldpc, flip_prob: 0.07 },
+        ];
+        let mut md = String::from(
+            "| input | p | arm | time (s) | updates | tasks touched | speedup vs scratch |\n\
+             |---|---|---|---|---|---|---|\n",
+        );
+        for spec in &specs {
+            let mrf = builders::build(spec, self.seed);
+            let delta = EvidenceDelta::random_perturbation(&mrf, DELTA_FRACTION, self.seed);
+            let mut perturbed = mrf.clone();
+            delta.apply(&mut perturbed);
+            for &p in &self.threads {
+                let alg = AlgorithmSpec::RelaxedResidual;
+                let cfg = self.cfg(spec, alg.clone(), p);
+                let scratch_id =
+                    format!("{}/{}/p{}/delta_scratch", spec.name(), alg.name(), p);
+                let scratch =
+                    self.run_cell_with(&perturbed, spec, alg.clone(), cfg, scratch_id)?;
+                md.push_str(&format!(
+                    "| {} | {p} | scratch | {} | {} | — | 1.00× |\n",
+                    spec.name(),
+                    if scratch.converged {
+                        format!("{:.3}", scratch.wall_secs)
+                    } else {
+                        "—".into()
+                    },
+                    scratch.updates,
+                ));
+                let (warm, tasks_touched) = self.run_cell_warm(&mrf, spec, p, &delta)?;
+                let speedup = if warm.converged && scratch.converged {
+                    format!("{:.2}×", scratch.wall_secs / warm.wall_secs.max(1e-9))
+                } else {
+                    "—".into()
+                };
+                md.push_str(&format!(
+                    "| {} | {p} | warm | {} | {} | {tasks_touched} | {speedup} |\n",
+                    spec.name(),
+                    if warm.converged { format!("{:.3}", warm.wall_secs) } else { "—".into() },
+                    warm.updates,
+                ));
+                rep.push(scratch);
+                rep.push(warm);
+            }
+        }
+        rep.add_table(format!(
+            "### Delta axis: warm re-convergence vs scratch re-solve\n\n{md}"
+        ));
+        self.drain_traces(&mut rep);
+        rep.emit(&self.out_dir)?;
+        Ok(rep)
+    }
+
     /// Data-path kernel A/B: relaxed residual with the lane-tiled SIMD
     /// kernel vs the scalar reference, on the wide-domain workloads (LDPC
     /// 64-state constraints, q = 32 Potts) where the inner `|D|`-wide
@@ -1014,6 +1124,7 @@ impl Harness {
         self.fused_ab()?;
         self.simd_ab()?;
         self.precision_ab()?;
+        self.delta_ab()?;
         Ok(())
     }
 
@@ -1096,6 +1207,17 @@ mod tests {
             .unwrap();
         assert!(row.converged);
         assert!(row.updates >= 62);
+    }
+
+    #[test]
+    fn delta_ab_tiny_end_to_end() {
+        let h = Harness { out_dir: PathBuf::from("/tmp/rbp_harness_delta_test"), ..tiny() };
+        let rep = h.delta_ab().unwrap();
+        // Two models × two thread counts × {scratch, warm}.
+        assert_eq!(rep.rows.len(), 8);
+        let md = rep.to_markdown();
+        assert!(md.contains("| warm |") && md.contains("| scratch |"));
+        std::fs::remove_dir_all("/tmp/rbp_harness_delta_test").ok();
     }
 
     #[test]

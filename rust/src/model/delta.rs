@@ -1,0 +1,183 @@
+//! Evidence deltas — incremental prior updates on a resident model.
+//!
+//! An [`EvidenceDelta`] is a small batch of `node → new prior` overwrites
+//! applied to an already-built [`Mrf`]. Domains never change (a delta
+//! re-weights a node's states, it does not add states), so applying one is
+//! an in-place [`NodeFactors::set`](super::NodeFactors::set) per entry and
+//! every flat offset, CSR index, and message arena stays valid.
+//!
+//! Deltas are what the warm-start path re-converges from: residual BP is
+//! naturally incremental — changing `ψ_i` perturbs only the messages
+//! `μ_{i→j}` on node `i`'s out-edges, so the delta seeder re-prices exactly
+//! those tasks against the resident message state and the relaxed scheduler
+//! absorbs the rest (see `Engine::resume` and DESIGN.md §Incremental
+//! re-convergence).
+
+use super::Mrf;
+use crate::util::Xoshiro256;
+
+/// A batch of prior overwrites: `node → new ψ_i`, deduplicated (last write
+/// wins) and sorted by node id, so iteration — and therefore seeding — is
+/// deterministic in the set of entries regardless of insertion order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EvidenceDelta {
+    /// `(node, new prior)`, sorted by node, one entry per node.
+    entries: Vec<(u32, Vec<f64>)>,
+}
+
+impl EvidenceDelta {
+    /// The empty delta (a resume with it is a no-op: zero tasks seeded).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set node `i`'s new prior, replacing any earlier entry for `i`.
+    pub fn set(&mut self, node: u32, prior: Vec<f64>) {
+        match self.entries.binary_search_by_key(&node, |(n, _)| *n) {
+            Ok(k) => self.entries[k].1 = prior,
+            Err(k) => self.entries.insert(k, (node, prior)),
+        }
+    }
+
+    /// Number of perturbed nodes.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no node is perturbed.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The perturbed nodes, ascending.
+    pub fn nodes(&self) -> impl Iterator<Item = u32> + '_ {
+        self.entries.iter().map(|(n, _)| *n)
+    }
+
+    /// The `(node, prior)` entries, ascending by node.
+    pub fn entries(&self) -> &[(u32, Vec<f64>)] {
+        &self.entries
+    }
+
+    /// Compose with a later delta: the result applied once reaches the same
+    /// model state as `self` then `later` applied in sequence (`later` wins
+    /// on nodes both touch).
+    pub fn merged(&self, later: &EvidenceDelta) -> EvidenceDelta {
+        let mut out = self.clone();
+        for (n, p) in &later.entries {
+            out.set(*n, p.clone());
+        }
+        out
+    }
+
+    /// Overwrite the priors of every entry's node in `mrf`. Panics if an
+    /// entry's length does not match the node's domain (deltas re-weight
+    /// states, they never resize domains).
+    pub fn apply(&self, mrf: &mut Mrf) {
+        for (n, p) in &self.entries {
+            mrf.node_factors.set(*n as usize, p);
+        }
+    }
+
+    /// A deterministic random perturbation of `fraction` of `mrf`'s nodes
+    /// (at least one): each chosen node's prior is re-weighted
+    /// multiplicatively, `ψ_i(x) ← ψ_i(x)·e^{U[-1,1]}` per state. The
+    /// multiplicative form preserves support — exact zeros (LDPC parity
+    /// indicators) stay exactly zero, so structural constraints survive the
+    /// perturbation. This is the small-delta workload `experiment delta`
+    /// and the bench delta cells measure (0.1% of priors by default).
+    pub fn random_perturbation(mrf: &Mrf, fraction: f64, seed: u64) -> EvidenceDelta {
+        let n = mrf.num_nodes();
+        let k = ((n as f64 * fraction).round() as usize).clamp(1, n.max(1));
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut delta = EvidenceDelta::new();
+        for i in rng.sample_indices(n, k) {
+            let prior: Vec<f64> = mrf
+                .node_factors
+                .of(i)
+                .iter()
+                .map(|&v| v * rng.uniform(-1.0, 1.0).exp())
+                .collect();
+            delta.set(i as u32, prior);
+        }
+        delta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configio::ModelSpec;
+    use crate::model::builders;
+
+    #[test]
+    fn set_dedupes_last_wins_and_sorts() {
+        let mut d = EvidenceDelta::new();
+        d.set(5, vec![0.2, 0.8]);
+        d.set(1, vec![0.5, 0.5]);
+        d.set(5, vec![0.9, 0.1]);
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.nodes().collect::<Vec<_>>(), vec![1, 5]);
+        assert_eq!(d.entries()[1], (5, vec![0.9, 0.1]));
+    }
+
+    #[test]
+    fn merged_is_sequential_application() {
+        let mut a = EvidenceDelta::new();
+        a.set(0, vec![0.2, 0.8]);
+        a.set(3, vec![0.4, 0.6]);
+        let mut b = EvidenceDelta::new();
+        b.set(3, vec![0.7, 0.3]);
+        b.set(7, vec![0.1, 0.9]);
+        let m = a.merged(&b);
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.entries()[1], (3, vec![0.7, 0.3]), "later delta wins on shared nodes");
+
+        let mut mrf1 = builders::build(&ModelSpec::Tree { n: 15 }, 1);
+        let mut mrf2 = mrf1.clone();
+        a.apply(&mut mrf1);
+        b.apply(&mut mrf1);
+        m.apply(&mut mrf2);
+        for i in 0..15 {
+            assert_eq!(mrf1.node_factors.of(i), mrf2.node_factors.of(i), "node {i}");
+        }
+    }
+
+    #[test]
+    fn apply_overwrites_only_listed_nodes() {
+        let mut mrf = builders::build(&ModelSpec::Tree { n: 7 }, 1);
+        let mut d = EvidenceDelta::new();
+        d.set(3, vec![0.25, 0.75]);
+        d.apply(&mut mrf);
+        assert_eq!(mrf.node_factors.of(3), &[0.25, 0.75]);
+        assert_eq!(mrf.node_factors.of(0), &[0.1, 0.9]);
+        assert_eq!(mrf.node_factors.of(4), &[0.5, 0.5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "length must match")]
+    fn apply_rejects_domain_mismatch() {
+        let mut mrf = builders::build(&ModelSpec::Tree { n: 7 }, 1);
+        let mut d = EvidenceDelta::new();
+        d.set(2, vec![1.0, 2.0, 3.0]);
+        d.apply(&mut mrf);
+    }
+
+    #[test]
+    fn random_perturbation_is_deterministic_and_support_preserving() {
+        let inst = builders::ldpc::build(24, 0.07, 3);
+        let d1 = EvidenceDelta::random_perturbation(&inst.mrf, 0.1, 9);
+        let d2 = EvidenceDelta::random_perturbation(&inst.mrf, 0.1, 9);
+        assert_eq!(d1, d2, "deterministic in (mrf, fraction, seed)");
+        assert_eq!(d1.len(), 4, "10% of 36 nodes, rounded");
+        for (n, p) in d1.entries() {
+            let old = inst.mrf.node_factors.of(*n as usize);
+            assert_eq!(p.len(), old.len());
+            for (a, b) in old.iter().zip(p.iter()) {
+                assert_eq!(*a == 0.0, *b == 0.0, "node {n}: support must be preserved");
+            }
+        }
+        // Tiny fractions still perturb at least one node.
+        assert_eq!(EvidenceDelta::random_perturbation(&inst.mrf, 1e-9, 1).len(), 1);
+    }
+}

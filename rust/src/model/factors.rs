@@ -156,6 +156,16 @@ impl NodeFactors {
     pub fn domain(&self, i: usize) -> usize {
         (self.offsets[i + 1] - self.offsets[i]) as usize
     }
+
+    /// Overwrite `ψ_i` in place. `vals` must match the node's domain (the
+    /// flat offsets stay valid — evidence deltas change values, never
+    /// shapes) and obey the same finite-≥0 invariant as construction.
+    pub fn set(&mut self, i: usize, vals: &[f64]) {
+        assert_eq!(vals.len(), self.domain(i), "node {i}: prior length must match the domain");
+        assert!(vals.iter().all(|v| *v >= 0.0 && v.is_finite()), "priors must be finite ≥ 0");
+        let off = self.offsets[i] as usize;
+        self.data[off..off + vals.len()].copy_from_slice(vals);
+    }
 }
 
 #[cfg(test)]
@@ -208,6 +218,29 @@ mod tests {
         assert_eq!(nf.domain(1), 64);
         assert_eq!(nf.of(0), &[0.1, 0.9]);
         assert_eq!(nf.of(2), &[0.5, 0.5]);
+    }
+
+    #[test]
+    fn node_factors_set_overwrites_in_place() {
+        let mut nf = NodeFactors::from_vecs(&[vec![0.1, 0.9], vec![1.0; 64], vec![0.5, 0.5]]);
+        nf.set(2, &[0.3, 0.7]);
+        assert_eq!(nf.of(2), &[0.3, 0.7]);
+        assert_eq!(nf.of(0), &[0.1, 0.9], "neighboring rows untouched");
+        assert_eq!(nf.of(1), &[1.0; 64]);
+    }
+
+    #[test]
+    #[should_panic(expected = "length must match")]
+    fn node_factors_set_rejects_domain_change() {
+        let mut nf = NodeFactors::from_vecs(&[vec![0.5, 0.5]]);
+        nf.set(0, &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn node_factors_set_rejects_negative() {
+        let mut nf = NodeFactors::from_vecs(&[vec![0.5, 0.5]]);
+        nf.set(0, &[0.5, -0.5]);
     }
 
     #[test]

@@ -7,14 +7,17 @@
 //! Model generators for all of the paper's benchmark families live in
 //! [`builders`]; the locality layer (task → shard partitioning consumed by
 //! the sharded message arenas and the shard-affine scheduler) in
-//! [`partition`]; binary serialization in [`io`].
+//! [`partition`]; binary serialization in [`io`]; incremental prior updates
+//! (the warm-start path's [`EvidenceDelta`]) in [`delta`].
 
 pub mod builders;
+pub mod delta;
 pub mod factors;
 pub mod graph;
 pub mod io;
 pub mod partition;
 
+pub use delta::EvidenceDelta;
 pub use factors::{FactorPool, FactorRef, NodeFactors};
 pub use graph::{Csr, GraphBuilder};
 pub use partition::Partition;

@@ -5,7 +5,7 @@ use crate::bp::{all_marginals, Messages};
 use crate::configio::{Json, RunConfig};
 use crate::engines::{build_engine, Engine, EngineStats};
 use crate::exec::RunObserver;
-use crate::model::{builders, Mrf};
+use crate::model::{builders, EvidenceDelta, Mrf};
 use anyhow::Result;
 
 /// Everything a caller needs after one run.
@@ -26,6 +26,22 @@ impl RunReport {
         all_marginals(&self.mrf, &self.msgs)
     }
 
+    /// Re-converge in place after an evidence delta: apply `delta` to the
+    /// resident model, then resume the configured engine from the current
+    /// message state (no `uniform_like` reset). `stats` is replaced by the
+    /// warm run's outcome — its `tasks_touched` counter records the seeded
+    /// frontier size and its `wall_secs` is the time-to-reconverge.
+    pub fn resume_delta(
+        &mut self,
+        delta: &EvidenceDelta,
+        observer: Option<&dyn RunObserver>,
+    ) -> Result<()> {
+        delta.apply(&mut self.mrf);
+        let engine = build_engine(&self.config.algorithm);
+        self.stats = engine.resume(&self.mrf, &self.msgs, &self.config, delta, observer)?;
+        Ok(())
+    }
+
     /// JSON summary (without the full marginal dump).
     pub fn to_json(&self) -> Json {
         let m = &self.stats.metrics.total;
@@ -42,6 +58,7 @@ impl RunReport {
             ("splashes", Json::Num(m.splashes as f64)),
             ("refreshes", Json::Num(m.refreshes as f64)),
             ("insert_batches", Json::Num(m.insert_batches as f64)),
+            ("tasks_touched", Json::Num(m.tasks_touched as f64)),
             ("msg_bytes_logical", Json::Num(m.msg_bytes_logical as f64)),
             ("msg_bytes_padded", Json::Num(m.msg_bytes_padded as f64)),
             (

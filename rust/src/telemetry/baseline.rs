@@ -64,10 +64,23 @@ pub struct CellResult {
     /// Allocated (cache-line-padded) message-arena bytes, same scope;
     /// absent ⇒ 0.
     pub msg_bytes_padded: u64,
-    /// Per-sample wall-clock seconds.
+    /// Per-sample wall-clock seconds. For delta cells (`/delta` id
+    /// suffix) these are the *warm* re-convergence times.
     pub wall_secs: Vec<f64>,
     /// Per-sample committed update counts.
     pub updates: Vec<f64>,
+    /// Delta axis: per-sample wall-clock of the scratch (cold, from
+    /// uniform) solve of the same perturbed instance the warm samples
+    /// re-converged. Empty for non-delta cells; absent in pre-delta
+    /// baselines ⇒ empty.
+    pub scratch_wall_secs: Vec<f64>,
+    /// Delta axis: median warm re-convergence seconds (the primary
+    /// warm-start statistic; equals the median of `wall_secs` on delta
+    /// cells). 0 for non-delta cells; absent ⇒ 0.
+    pub time_to_reconverge: f64,
+    /// Delta axis: seeded frontier size of the last warm sample
+    /// (`Counters::tasks_touched`). 0 for non-delta cells; absent ⇒ 0.
+    pub tasks_touched: u64,
     /// Whether every sample converged within budget.
     pub converged: bool,
     /// Convergence trace of the last sample.
@@ -103,6 +116,14 @@ impl CellResult {
             ("msg_bytes_padded", Json::Num(self.msg_bytes_padded as f64)),
             ("wall_secs", Json::Arr(self.wall_secs.iter().map(|&t| Json::Num(t)).collect())),
             ("updates", Json::Arr(self.updates.iter().map(|&u| Json::Num(u)).collect())),
+            // Delta-axis fields are emitted unconditionally (zero/empty on
+            // non-delta cells) so schema consumers can grep for them.
+            (
+                "scratch_wall_secs",
+                Json::Arr(self.scratch_wall_secs.iter().map(|&t| Json::Num(t)).collect()),
+            ),
+            ("time_to_reconverge", Json::Num(self.time_to_reconverge)),
+            ("tasks_touched", Json::Num(self.tasks_touched as f64)),
             ("converged", Json::Bool(self.converged)),
             ("trace", self.trace.to_json()),
         ];
@@ -159,6 +180,16 @@ impl CellResult {
             msg_bytes_padded: v.get("msg_bytes_padded").and_then(Json::as_u64).unwrap_or(0),
             wall_secs: arr("wall_secs")?,
             updates: arr("updates")?,
+            scratch_wall_secs: if v.get("scratch_wall_secs").is_some() {
+                arr("scratch_wall_secs")?
+            } else {
+                Vec::new()
+            },
+            time_to_reconverge: v
+                .get("time_to_reconverge")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+            tasks_touched: v.get("tasks_touched").and_then(Json::as_u64).unwrap_or(0),
             converged: v
                 .get("converged")
                 .and_then(Json::as_bool)
@@ -407,6 +438,9 @@ mod tests {
             msg_bytes_padded: 8192,
             wall_secs: vec![secs, secs * 1.05, secs * 0.95],
             updates: vec![1000.0, 1010.0, 990.0],
+            scratch_wall_secs: vec![secs * 4.0, secs * 4.2, secs * 3.8],
+            time_to_reconverge: secs,
+            tasks_touched: 12,
             converged: true,
             trace: Trace {
                 points: vec![TracePoint {
@@ -420,6 +454,7 @@ mod tests {
                     inserts: 1100,
                     refreshes: 3300,
                     insert_batches: 1000,
+                    tasks_touched: 12,
                     msg_bytes_logical: 4096,
                     msg_bytes_padded: 8192,
                     max_priority: 1e-6,
@@ -519,6 +554,27 @@ mod tests {
         assert_eq!(back.cells[0].precision, "f64", "pre-precision cells stored f64 arenas");
         assert_eq!(back.cells[0].msg_bytes_logical, 0);
         assert_eq!(back.cells[0].msg_bytes_padded, 0);
+        assert!(!compare(&b, &back, DEFAULT_TOLERANCE).unwrap().has_regression());
+    }
+
+    #[test]
+    fn pre_delta_cells_parse_as_zero() {
+        let b = baseline(vec![cell("relaxed_residual/p2", 0.5)]);
+        let mut j = b.to_json();
+        // Simulate a baseline written before the delta axis existed.
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Arr(cells)) = o.get_mut("cells") {
+                if let Json::Obj(c) = &mut cells[0] {
+                    c.remove("scratch_wall_secs");
+                    c.remove("time_to_reconverge");
+                    c.remove("tasks_touched");
+                }
+            }
+        }
+        let back = Baseline::from_json(&j).unwrap();
+        assert!(back.cells[0].scratch_wall_secs.is_empty());
+        assert_eq!(back.cells[0].time_to_reconverge, 0.0);
+        assert_eq!(back.cells[0].tasks_touched, 0);
         assert!(!compare(&b, &back, DEFAULT_TOLERANCE).unwrap().has_regression());
     }
 

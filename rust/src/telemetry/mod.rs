@@ -35,7 +35,8 @@
 //!       "id": "relaxed_residual/p2",    // comparator join key; affine
 //!                                       // cells append "/<partition>",
 //!                                       // fused-off cells "/edgewise",
-//!                                       // scalar-kernel cells "/scalar"
+//!                                       // scalar-kernel cells "/scalar",
+//!                                       // warm-start cells "/delta"
 //!       "algorithm": "relaxed_residual",
 //!       "scheduler": "multiqueue",      // sequential | rounds | exact |
 //!                                       // multiqueue | random
@@ -54,8 +55,16 @@
 //!                                       // cells carry the "/f64" suffix
 //!       "msg_bytes_logical": 16128,     // message-arena footprint gauges
 //!       "msg_bytes_padded": 32768,      // (live + lookahead; absent ⇒ 0)
-//!       "wall_secs": [0.012, 0.011],    // one entry per sample
+//!       "wall_secs": [0.012, 0.011],    // one entry per sample; on
+//!                                       // "/delta" cells these are the
+//!                                       // warm re-convergence times
 //!       "updates": [4100, 4080],
+//!       "scratch_wall_secs": [0.05, 0.048], // delta cells: cold re-solve
+//!                                       // of the same perturbed instance
+//!                                       // (empty on non-delta cells)
+//!       "time_to_reconverge": 0.011,    // delta cells: median warm secs
+//!       "tasks_touched": 24,            // delta cells: seeded frontier
+//!                                       // size of the last warm sample
 //!       "converged": true,
 //!       "time_summary": { "n": 2, "mean": …, "stddev": …, "min": …,
 //!                          "max": …, "median": …, "p05": …, "p95": … },
@@ -91,7 +100,7 @@ pub use baseline::{
 pub use trace::{Trace, TracePoint, TraceRecorder};
 
 use crate::configio::{AlgorithmSpec, Kernel, ModelSpec, PartitionSpec, Precision, RunConfig};
-use crate::model::builders;
+use crate::model::{builders, EvidenceDelta};
 use crate::run::run_on_model_observed;
 use anyhow::{bail, Result};
 use std::path::{Path, PathBuf};
@@ -379,10 +388,14 @@ pub fn bench_family(family: &str, opts: &BenchOpts) -> Result<Baseline> {
             msg_bytes_padded: msg_bytes.1,
             wall_secs,
             updates,
+            scratch_wall_secs: Vec::new(),
+            time_to_reconverge: 0.0,
+            tasks_touched: 0,
             converged,
             trace: last_trace,
         });
     }
+    cells.push(bench_delta_cell(family, &spec, &mrf, opts, &recorder)?);
     Ok(Baseline {
         schema_version: SCHEMA_VERSION,
         family: family.to_string(),
@@ -396,6 +409,90 @@ pub fn bench_family(family: &str, opts: &BenchOpts) -> Result<Baseline> {
         samples_per_cell: opts.samples.max(1),
         seed: opts.seed,
         cells,
+    })
+}
+
+/// Prior fraction perturbed by the bench delta cell (the paper-scale
+/// "small delta" workload: 0.1% of nodes, clamped to at least one).
+pub const DELTA_FRACTION: f64 = 0.001;
+
+/// Measure the warm-start (delta) cell for one family: perturb
+/// [`DELTA_FRACTION`] of the priors, then re-converge the relaxed
+/// contender at the highest thread count both cold (scratch solve of the
+/// perturbed instance from uniform) and warm
+/// ([`RunReport::resume_delta`](crate::run::RunReport::resume_delta) from
+/// the resident converged state). `wall_secs` holds the warm times,
+/// `scratch_wall_secs` the cold ones; `tasks_touched` is the seeded
+/// frontier size of the last warm sample.
+fn bench_delta_cell(
+    family: &str,
+    spec: &ModelSpec,
+    mrf: &crate::model::Mrf,
+    opts: &BenchOpts,
+    recorder: &TraceRecorder,
+) -> Result<CellResult> {
+    let max_p = opts.threads.iter().copied().max().unwrap_or(1);
+    let rc = RosterCell::new(AlgorithmSpec::RelaxedResidual, max_p, PartitionSpec::Off);
+    let id = format!("{}/delta", rc.id());
+    eprintln!("[bench] {family} / {id} …");
+    let delta = EvidenceDelta::random_perturbation(mrf, DELTA_FRACTION, opts.seed);
+    let mut wall_secs = Vec::with_capacity(opts.samples);
+    let mut scratch_wall_secs = Vec::with_capacity(opts.samples);
+    let mut updates = Vec::with_capacity(opts.samples);
+    let mut converged = true;
+    let mut last_trace = Trace::default();
+    let mut msg_bytes = (0u64, 0u64);
+    let mut tasks_touched = 0u64;
+    for _ in 0..opts.samples.max(1) {
+        let mut cfg = RunConfig::new(spec.clone(), rc.alg.clone())
+            .with_threads(rc.threads)
+            .with_seed(opts.seed)
+            .with_partition(rc.partition)
+            .with_fused(rc.fused)
+            .with_kernel(rc.kernel)
+            .with_precision(rc.precision);
+        cfg.time_limit_secs = opts.time_limit;
+        // Cold arm: solve the perturbed instance from uniform messages.
+        let mut scratch_mrf = mrf.clone();
+        delta.apply(&mut scratch_mrf);
+        let cold = run_on_model_observed(&cfg, scratch_mrf, None)?;
+        scratch_wall_secs.push(cold.stats.wall_secs);
+        converged &= cold.stats.converged;
+        // Warm arm: converge the base instance (untimed), then resume
+        // across the delta from the resident message state.
+        let mut rep = run_on_model_observed(&cfg, mrf.clone(), None)?;
+        converged &= rep.stats.converged;
+        rep.resume_delta(&delta, Some(recorder))?;
+        wall_secs.push(rep.stats.wall_secs);
+        updates.push(rep.stats.metrics.total.updates as f64);
+        converged &= rep.stats.converged;
+        tasks_touched = rep.stats.metrics.total.tasks_touched;
+        last_trace = recorder.take();
+        msg_bytes = (
+            rep.stats.metrics.total.msg_bytes_logical,
+            rep.stats.metrics.total.msg_bytes_padded,
+        );
+    }
+    let time_to_reconverge =
+        crate::util::stats::Summary::of(&wall_secs).map_or(0.0, |s| s.median);
+    Ok(CellResult {
+        id,
+        algorithm: rc.alg.name(),
+        scheduler: scheduler_kind(&rc.alg).to_string(),
+        threads: rc.threads,
+        partition: rc.partition.label().to_string(),
+        fused: rc.fused,
+        kernel: rc.kernel.label().to_string(),
+        precision: rc.precision.label().to_string(),
+        msg_bytes_logical: msg_bytes.0,
+        msg_bytes_padded: msg_bytes.1,
+        wall_secs,
+        updates,
+        scratch_wall_secs,
+        time_to_reconverge,
+        tasks_touched,
+        converged,
+        trace: last_trace,
     })
 }
 
@@ -617,5 +714,14 @@ mod tests {
         }
         let summary = render_summary(&b);
         assert!(summary.contains("relaxed_residual/p2"));
+        // The delta axis contributes one warm-start cell per family.
+        let d = b.cells.iter().find(|c| c.id == "relaxed_residual/p2/delta").unwrap();
+        assert_eq!(d.scratch_wall_secs.len(), d.wall_secs.len());
+        assert!(d.tasks_touched > 0, "warm resume seeded no frontier");
+        assert!(d.time_to_reconverge > 0.0);
+        // Non-delta cells keep the delta fields at their zero defaults.
+        let base = b.cells.iter().find(|c| c.id == "relaxed_residual/p2").unwrap();
+        assert!(base.scratch_wall_secs.is_empty());
+        assert_eq!(base.tasks_touched, 0);
     }
 }

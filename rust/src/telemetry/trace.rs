@@ -42,6 +42,9 @@ pub struct TracePoint {
     /// Cumulative batched scheduler insert calls (mean insertion batch
     /// size ≈ `inserts / insert_batches` on fused runs).
     pub insert_batches: u64,
+    /// Tasks seeded by an evidence-delta warm start (0 on scratch runs);
+    /// constant after the seed phase — the delta frontier size.
+    pub tasks_touched: u64,
     /// Logical message-arena bytes (live + lookahead cache) — a gauge,
     /// constant over the run; halves under `--precision f32`.
     pub msg_bytes_logical: u64,
@@ -66,6 +69,7 @@ impl TracePoint {
             inserts: c.inserts,
             refreshes: c.refreshes,
             insert_batches: c.insert_batches,
+            tasks_touched: c.tasks_touched,
             msg_bytes_logical: c.msg_bytes_logical,
             msg_bytes_padded: c.msg_bytes_padded,
             max_priority,
@@ -85,6 +89,7 @@ impl TracePoint {
             ("inserts", Json::Num(self.inserts as f64)),
             ("refreshes", Json::Num(self.refreshes as f64)),
             ("insert_batches", Json::Num(self.insert_batches as f64)),
+            ("tasks_touched", Json::Num(self.tasks_touched as f64)),
             ("msg_bytes_logical", Json::Num(self.msg_bytes_logical as f64)),
             ("msg_bytes_padded", Json::Num(self.msg_bytes_padded as f64)),
             ("max_priority", Json::Num(self.max_priority)),
@@ -92,9 +97,9 @@ impl TracePoint {
     }
 
     /// Parse one `trace[]` element. `refreshes` / `insert_batches` were
-    /// added by the fused-kernel schema extension and the `msg_bytes_*`
-    /// gauges by the precision axis; all default to 0 when absent (older
-    /// baselines).
+    /// added by the fused-kernel schema extension, the `msg_bytes_*`
+    /// gauges by the precision axis, and `tasks_touched` by the delta
+    /// axis; all default to 0 when absent (older baselines).
     pub fn from_json(v: &Json) -> Result<TracePoint> {
         let num =
             |k: &str| v.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("trace.{k} missing"));
@@ -112,6 +117,7 @@ impl TracePoint {
             inserts: int("inserts")?,
             refreshes: opt("refreshes"),
             insert_batches: opt("insert_batches"),
+            tasks_touched: opt("tasks_touched"),
             msg_bytes_logical: opt("msg_bytes_logical"),
             msg_bytes_padded: opt("msg_bytes_padded"),
             max_priority: num("max_priority")?,
@@ -207,6 +213,7 @@ mod tests {
             inserts: updates + 1,
             refreshes: updates * 3,
             insert_batches: updates,
+            tasks_touched: 4,
             msg_bytes_logical: 4096,
             msg_bytes_padded: 8192,
             max_priority: 0.5,
@@ -227,6 +234,7 @@ mod tests {
         assert_eq!(t.points[0].insert_batches, 0);
         assert_eq!(t.points[0].msg_bytes_logical, 0, "pre-precision baselines carry no gauge");
         assert_eq!(t.points[0].msg_bytes_padded, 0);
+        assert_eq!(t.points[0].tasks_touched, 0, "pre-delta baselines carry no frontier count");
     }
 
     #[test]

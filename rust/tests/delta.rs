@@ -1,0 +1,278 @@
+//! Property tests for incremental re-convergence on evidence deltas
+//! (`EvidenceDelta` + `Engine::resume`):
+//!
+//! - warm-start parity: re-converging from a resident state across a prior
+//!   perturbation reaches the same fixed point as a scratch solve of the
+//!   perturbed instance — marginal L∞ ≤ 1e-9 under f64 on every model
+//!   family and across the engine roster (≤ 1e-5 under f32, where two
+//!   stored fixed points may legitimately sit one rounding plateau apart);
+//! - an empty delta is a no-op on every delta-aware engine: zero tasks
+//!   seeded (`tasks_touched == 0`), zero updates committed, and the
+//!   message state bitwise unchanged;
+//! - delta-then-delta composes: two sequential resumes land on the same
+//!   fixed point as one resume over the merged delta;
+//! - resume keeps the pool's pop-accounting identity and quiesces across
+//!   shard counts, including shard counts that don't divide the thread
+//!   count.
+//!
+//! Parity runs use a tiny epsilon (far below both arms' discretization)
+//! so the two trajectories are forced onto the same fixed point rather
+//! than merely into the same ε-ball.
+
+use relaxed_bp::bp::{max_marginal_diff, Kernel, Precision};
+use relaxed_bp::configio::{AlgorithmSpec, ModelSpec, PartitionSpec, RunConfig};
+use relaxed_bp::model::{builders, EvidenceDelta};
+use relaxed_bp::run::{run_config, run_on_model};
+
+/// Every family in the roster at property-test sizes.
+fn family_specs() -> Vec<ModelSpec> {
+    vec![
+        ModelSpec::Tree { n: 31 },
+        ModelSpec::Path { n: 8 },
+        ModelSpec::AdversarialTree { n: 36 },
+        ModelSpec::UniformTree { n: 40, arity: 3 },
+        ModelSpec::Ising { n: 5 },
+        ModelSpec::Potts { n: 4, q: 3 },
+        ModelSpec::Potts { n: 4, q: 32 },
+        ModelSpec::Ldpc { n: 24, flip_prob: 0.07 },
+        ModelSpec::PowerLaw { n: 80, m: 3 },
+    ]
+}
+
+/// Engines with a delta-aware seeder (an `Engine::resume` override that
+/// seeds only the perturbed frontier and reports it as `tasks_touched`).
+/// Round-based engines and the analytic optimal-tree schedule keep the
+/// default warm-correct resume, which seeds nothing incremental.
+fn delta_aware(alg: &AlgorithmSpec) -> bool {
+    use AlgorithmSpec::*;
+    matches!(
+        alg,
+        SequentialResidual
+            | CoarseGrained
+            | RelaxedResidual
+            | WeightDecay
+            | Priority
+            | Splash { .. }
+            | SmartSplash { .. }
+            | RelaxedSmartSplash { .. }
+            | RandomSplash { .. }
+            | RelaxedResidualBatched { .. }
+    )
+}
+
+/// Converge `cfg` from uniform, perturb `fraction` of the priors, then
+/// re-converge both warm (resume from the resident state) and scratch
+/// (uniform restart on the perturbed instance); return the marginal L∞
+/// between the two fixed points and the warm run's seeded-frontier count.
+fn warm_vs_scratch(cfg: &RunConfig, fraction: f64, delta_seed: u64) -> (f64, u64) {
+    let mut warm = run_config(cfg).unwrap();
+    assert!(warm.stats.converged, "{:?}: base run did not converge", cfg.algorithm);
+    let delta = EvidenceDelta::random_perturbation(&warm.mrf, fraction, delta_seed);
+    assert!(!delta.is_empty());
+
+    let mut scratch_mrf = builders::build(&cfg.model, cfg.seed);
+    delta.apply(&mut scratch_mrf);
+    let scratch = run_on_model(cfg, scratch_mrf).unwrap();
+    assert!(scratch.stats.converged, "{:?}: scratch run did not converge", cfg.algorithm);
+
+    warm.resume_delta(&delta, None).unwrap();
+    assert!(warm.stats.converged, "{:?}: warm resume did not converge", cfg.algorithm);
+
+    let diff = max_marginal_diff(&warm.marginals(), &scratch.marginals());
+    (diff, warm.stats.metrics.total.tasks_touched)
+}
+
+/// Warm-start parity on every model family, across the kernel-axis
+/// corners (all-new: fused+simd; all-historical: edgewise+scalar) and
+/// both storage precisions, with the relaxed Multiqueue contender.
+#[test]
+fn warm_matches_scratch_on_every_family() {
+    for spec in family_specs() {
+        for (fused, kernel) in [(true, Kernel::Simd), (false, Kernel::Scalar)] {
+            for precision in [Precision::F64, Precision::F32] {
+                let mut cfg = RunConfig::new(spec.clone(), AlgorithmSpec::RelaxedResidual)
+                    .with_threads(2)
+                    .with_seed(17)
+                    .with_fused(fused)
+                    .with_kernel(kernel)
+                    .with_precision(precision);
+                // Far below both discretizations: forces each arm onto an
+                // exactly-stored fixed point (f32 residuals snap to 0.0
+                // once the candidate rounds to the stored bits).
+                cfg.epsilon = 1e-12;
+                cfg.time_limit_secs = 120.0;
+                let (diff, touched) = warm_vs_scratch(&cfg, 0.05, 99);
+                assert!(touched > 0, "{spec:?}: warm resume seeded no frontier");
+                // Two f32 stored fixed points may differ by a rounding
+                // plateau (~1 ulp of the message scale); f64 fixed points
+                // at ε = 1e-12 must agree to 1e-9.
+                let bound = if precision == Precision::F64 { 1e-9 } else { 1e-5 };
+                assert!(
+                    diff <= bound,
+                    "{spec:?} fused={fused} {kernel:?} {precision:?}: warm vs scratch L∞ = {diff}"
+                );
+            }
+        }
+    }
+}
+
+/// Warm-start parity across the full engine roster (delta-aware engines
+/// seed the frontier; the others fall back to the warm-correct default
+/// resume), at both kernel-axis corners under f64.
+#[test]
+fn warm_matches_scratch_across_engine_roster() {
+    let roster: Vec<(AlgorithmSpec, ModelSpec)> = vec![
+        (AlgorithmSpec::SequentialResidual, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::Synchronous, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::CoarseGrained, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::RelaxedResidual, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::WeightDecay, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::Priority, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::Splash { h: 2 }, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::SmartSplash { h: 2 }, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::RelaxedSmartSplash { h: 2 }, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::RandomSplash { h: 2 }, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::Bucket, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::RandomSynchronous { low_p: 0.4 }, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::RelaxedResidualBatched { batch: 4 }, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::OptimalTree, ModelSpec::Tree { n: 31 }),
+        (AlgorithmSpec::RelaxedOptimalTree, ModelSpec::Tree { n: 31 }),
+    ];
+    for (alg, spec) in roster {
+        for (fused, kernel) in [(true, Kernel::Simd), (false, Kernel::Scalar)] {
+            let mut cfg = RunConfig::new(spec.clone(), alg.clone())
+                .with_threads(2)
+                .with_seed(5)
+                .with_fused(fused)
+                .with_kernel(kernel);
+            cfg.epsilon = 1e-12;
+            cfg.time_limit_secs = 120.0;
+            let (diff, touched) = warm_vs_scratch(&cfg, 0.1, 7);
+            if delta_aware(&alg) {
+                assert!(touched > 0, "{alg:?}: delta-aware engine seeded no frontier");
+            } else {
+                assert_eq!(touched, 0, "{alg:?}: default resume must not report a frontier");
+            }
+            assert!(
+                diff <= 1e-9,
+                "{alg:?} fused={fused} {kernel:?}: warm vs scratch L∞ = {diff}"
+            );
+        }
+    }
+}
+
+/// An empty delta is a no-op on every delta-aware engine: the seeder
+/// injects nothing (the run starts quiescent and the elected verifier
+/// confirms convergence), no update is committed, and the resident
+/// message state survives bitwise.
+#[test]
+fn empty_delta_is_a_noop() {
+    let roster: Vec<(AlgorithmSpec, ModelSpec)> = vec![
+        (AlgorithmSpec::SequentialResidual, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::CoarseGrained, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::RelaxedResidual, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::WeightDecay, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::Priority, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::Splash { h: 2 }, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::SmartSplash { h: 2 }, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::RelaxedSmartSplash { h: 2 }, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::RandomSplash { h: 2 }, ModelSpec::Ising { n: 4 }),
+        (AlgorithmSpec::RelaxedResidualBatched { batch: 4 }, ModelSpec::Ising { n: 4 }),
+    ];
+    for (alg, spec) in roster {
+        assert!(delta_aware(&alg));
+        let cfg = RunConfig::new(spec.clone(), alg.clone()).with_threads(2).with_seed(5);
+        let mut rep = run_config(&cfg).unwrap();
+        assert!(rep.stats.converged, "{alg:?}: base run did not converge");
+        let before = rep.msgs.snapshot();
+
+        let delta = EvidenceDelta::new();
+        assert!(delta.is_empty());
+        rep.resume_delta(&delta, None).unwrap();
+
+        assert!(rep.stats.converged, "{alg:?}: empty-delta resume did not converge");
+        let m = &rep.stats.metrics.total;
+        assert_eq!(m.tasks_touched, 0, "{alg:?}: empty delta seeded tasks");
+        assert_eq!(m.updates, 0, "{alg:?}: empty delta committed updates");
+        let after = rep.msgs.snapshot();
+        assert_eq!(before.len(), after.len());
+        for (i, (a, b)) in before.iter().zip(after.iter()).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{alg:?} cell {i}: empty delta changed the message state ({a} vs {b})"
+            );
+        }
+    }
+}
+
+/// Two sequential deltas compose: resume(d1) then resume(d2) lands on the
+/// same fixed point as one scratch solve under merged(d1, d2) (later
+/// entries win on overlap, matching `EvidenceDelta::merged`).
+#[test]
+fn sequential_deltas_compose_to_the_merged_fixed_point() {
+    for spec in [ModelSpec::PowerLaw { n: 80, m: 3 }, ModelSpec::Ising { n: 5 }] {
+        let mut cfg = RunConfig::new(spec.clone(), AlgorithmSpec::RelaxedResidual)
+            .with_threads(2)
+            .with_seed(21);
+        cfg.epsilon = 1e-12;
+        cfg.time_limit_secs = 120.0;
+        let mut rep = run_config(&cfg).unwrap();
+        assert!(rep.stats.converged);
+
+        // Both deltas are computed against the BASE priors, so applying d1
+        // then d2 is exactly the later-wins merge.
+        let d1 = EvidenceDelta::random_perturbation(&rep.mrf, 0.05, 1);
+        let d2 = EvidenceDelta::random_perturbation(&rep.mrf, 0.05, 2);
+        rep.resume_delta(&d1, None).unwrap();
+        assert!(rep.stats.converged, "{spec:?}: first resume did not converge");
+        rep.resume_delta(&d2, None).unwrap();
+        assert!(rep.stats.converged, "{spec:?}: second resume did not converge");
+
+        let merged = d1.merged(&d2);
+        let mut scratch_mrf = builders::build(&spec, cfg.seed);
+        merged.apply(&mut scratch_mrf);
+        let scratch = run_on_model(&cfg, scratch_mrf).unwrap();
+        assert!(scratch.stats.converged);
+
+        let diff = max_marginal_diff(&rep.marginals(), &scratch.marginals());
+        assert!(diff <= 1e-9, "{spec:?}: delta-then-delta vs merged L∞ = {diff}");
+    }
+}
+
+/// Resume keeps the pool's exactly-once pop accounting and quiesces
+/// across shard counts — including 7, which divides neither the thread
+/// count nor the frontier — and reports the exact frontier size.
+#[test]
+fn resume_pop_accounting_and_quiescence_across_shard_counts() {
+    let spec = ModelSpec::PowerLaw { n: 80, m: 3 };
+    let threads = 4usize;
+    for shards in [1usize, 2, 7, threads] {
+        let cfg = RunConfig::new(spec.clone(), AlgorithmSpec::RelaxedResidual)
+            .with_threads(threads)
+            .with_seed(33)
+            .with_partition(PartitionSpec::Affine { shards, spill: 0.1, bfs: false });
+        let mut rep = run_config(&cfg).unwrap();
+        assert!(rep.stats.converged, "shards={shards}: base run did not converge");
+
+        let delta = EvidenceDelta::random_perturbation(&rep.mrf, 0.05, 44);
+        let frontier: u64 =
+            delta.nodes().map(|i| rep.mrf.graph.slots(i as usize).len() as u64).sum();
+        assert!(frontier > 0);
+        rep.resume_delta(&delta, None).unwrap();
+
+        assert!(rep.stats.converged, "shards={shards}: warm resume did not converge");
+        let m = &rep.stats.metrics.total;
+        assert_eq!(
+            m.tasks_touched, frontier,
+            "shards={shards}: tasks_touched must equal the perturbed out-edge count"
+        );
+        // One update per successful claim: every pop is accounted as
+        // stale, claim-failed, or an executed update.
+        assert_eq!(
+            m.pops,
+            m.stale_pops + m.claim_failures + m.updates,
+            "shards={shards}: pop accounting identity broken on resume"
+        );
+    }
+}
