@@ -1,11 +1,14 @@
 //! `cargo bench --bench microbench` — component-level benchmarks feeding
 //! the §Perf analysis in EXPERIMENTS.md: scheduler op throughput, message
 //! update rate per model family, the update-kernel axes (edgewise vs fused
-//! refresh shape, scalar vs SIMD data path), lookahead refresh cost, and
-//! PJRT call overhead (when artifacts exist). Each group reports markdown
-//! to stdout and CSV + JSON under `results/bench/`; full end-to-end sweeps
-//! with convergence traces are `relaxed-bp bench` (see the `telemetry`
-//! module).
+//! refresh shape, scalar vs SIMD data path), lookahead refresh cost, the
+//! cold path (CSR build, model save/load, message init), and PJRT call
+//! overhead (when artifacts exist). Each group reports markdown to stdout
+//! and CSV + JSON under `results/bench/`; full end-to-end sweeps with
+//! convergence traces are `relaxed-bp bench` (see the `telemetry` module).
+//!
+//! `--quick` shrinks sizes for CI smoke; `--only GROUP` runs one group
+//! (e.g. `--only model_prep` for the cold-path floors in CI).
 
 use relaxed_bp::benchlib::{BenchConfig, BenchGroup};
 use relaxed_bp::bp::{
@@ -14,7 +17,7 @@ use relaxed_bp::bp::{
 };
 use relaxed_bp::configio::ModelSpec;
 use relaxed_bp::engines::batched::{BatchCompute, NativeBatch};
-use relaxed_bp::model::{builders, FactorPool, GraphBuilder, Mrf, NodeFactors};
+use relaxed_bp::model::{builders, io as model_io, FactorPool, GraphBuilder, Mrf, NodeFactors};
 use relaxed_bp::runtime::{artifacts_dir, batch::PjrtBatch};
 use relaxed_bp::sched::{Entry, ExactQueue, Multiqueue, RandomQueues, Scheduler};
 use relaxed_bp::util::Xoshiro256;
@@ -23,6 +26,17 @@ use relaxed_bp::util::Xoshiro256;
 /// budget, same coverage.
 fn quick() -> bool {
     std::env::args().any(|a| a == "--quick")
+}
+
+/// `--only GROUP` = run a single benchmark group.
+fn only() -> Option<String> {
+    let mut args = std::env::args();
+    while let Some(a) = args.next() {
+        if a == "--only" {
+            return args.next();
+        }
+    }
+    None
 }
 
 fn cfg() -> BenchConfig {
@@ -78,12 +92,12 @@ fn star_mrf(deg: usize, dom: usize, seed: u64) -> Mrf {
     )
 }
 
-fn main() {
-    // ---- Update kernel: edge-wise fan-out vs fused node refresh, with
-    // the scalar-vs-SIMD data path on the fused shape ----
-    // One "node touch" = recompute every out-message of the center node.
-    // Edge-wise pays one full gather per out-edge (O(deg²) message
-    // reads); fused pays one prefix/suffix pass (O(deg)).
+/// Update kernel: edge-wise fan-out vs fused node refresh, with the
+/// scalar-vs-SIMD data path on the fused shape. One "node touch" =
+/// recompute every out-message of the center node. Edge-wise pays one full
+/// gather per out-edge (O(deg²) message reads); fused pays one
+/// prefix/suffix pass (O(deg)).
+fn group_update_kernel() {
     let mut g = BenchGroup::new("update_kernel").with_config(cfg());
     let reps: usize = if quick() { 50 } else { 500 };
     for &deg in &[2usize, 8, 64] {
@@ -127,9 +141,11 @@ fn main() {
         }
     }
     g.report();
+}
 
-    // ---- SIMD kernel group: scalar vs simd full sweeps on the
-    // wide-domain families (the data-path axis in isolation) ----
+/// SIMD kernel group: scalar vs simd full sweeps on the wide-domain
+/// families (the data-path axis in isolation).
+fn group_simd_kernel() {
     let mut g = BenchGroup::new("simd_kernel").with_config(cfg());
     for spec in [
         ModelSpec::Ldpc { n: if quick() { 120 } else { 3_000 }, flip_prob: 0.07 },
@@ -151,11 +167,12 @@ fn main() {
         }
     }
     g.report();
+}
 
-    // ---- Storage precision: f64 vs f32 arenas under the full
-    // read→compute→write cycle (gathers widen, stores round; the compute
-    // in between is identical f64 either way, so the delta is pure
-    // memory-path) ----
+/// Storage precision: f64 vs f32 arenas under the full
+/// read→compute→write cycle (gathers widen, stores round; the compute in
+/// between is identical f64 either way, so the delta is pure memory-path).
+fn group_precision() {
     let mut g = BenchGroup::new("precision").with_config(cfg());
     for spec in [
         ModelSpec::Ldpc { n: if quick() { 120 } else { 3_000 }, flip_prob: 0.07 },
@@ -179,16 +196,20 @@ fn main() {
         }
     }
     g.report();
+}
 
-    // ---- Scheduler ops ----
+/// Scheduler ops.
+fn group_schedulers() {
     let mut g = BenchGroup::new("schedulers").with_config(cfg());
     bench_scheduler(&mut g, "exact", &ExactQueue::new());
     bench_scheduler(&mut g, "multiqueue_8", &Multiqueue::new(8));
     bench_scheduler(&mut g, "multiqueue_32", &Multiqueue::new(32));
     bench_scheduler(&mut g, "random_queues_8", &RandomQueues::new(8));
     g.report();
+}
 
-    // ---- Message update kernel (native) per model family ----
+/// Message update kernel (native) per model family.
+fn group_message_update() {
     let mut g = BenchGroup::new("message_update").with_config(cfg());
     for spec in [
         ModelSpec::Tree { n: 10_000 },
@@ -208,8 +229,10 @@ fn main() {
         });
     }
     g.report();
+}
 
-    // ---- Lookahead refresh + commit cycle ----
+/// Lookahead refresh + commit cycle.
+fn group_lookahead() {
     let mut g = BenchGroup::new("lookahead").with_config(cfg());
     let mrf = builders::build(&ModelSpec::Ising { n: 100 }, 1);
     let msgs = Messages::uniform(&mrf);
@@ -223,8 +246,10 @@ fn main() {
         me as f64
     });
     g.report();
+}
 
-    // ---- Batched backends: native (scalar + simd) vs PJRT ----
+/// Batched backends: native (scalar + simd) vs PJRT.
+fn group_batched_backends() {
     let mut g = BenchGroup::new("batched_backends").with_config(cfg());
     let mrf = builders::build(&ModelSpec::Ising { n: 64 }, 1);
     let msgs = Messages::uniform(&mrf);
@@ -249,4 +274,96 @@ fn main() {
         eprintln!("[microbench] skipping PJRT backend (run `make artifacts`)");
     }
     g.report();
+}
+
+/// Deterministic "ring + chords" edge stream: node `i` connects to `i+1`
+/// and `i+7` (mod `n`) — duplicate-free and self-loop-free for the sizes
+/// used here, isolating CSR counting-sort throughput from RNG and factor
+/// construction.
+fn stream_edges(gb: &mut GraphBuilder, n: usize) {
+    for i in 0..n {
+        gb.add_edge(i, (i + 1) % n);
+        gb.add_edge(i, (i + 7) % n);
+    }
+}
+
+/// Cold path: CSR construction (serial vs 8-thread counting sort on the
+/// same edge stream — bit-identical outputs, see `model::graph` tests),
+/// full model build, v1-vs-v2 snapshot save/load, and message-state init.
+/// CI's large-model smoke job runs `--only model_prep` and gates on the
+/// serial-vs-parallel build and v1-vs-v2 load ratios.
+fn group_model_prep() {
+    let mut g = BenchGroup::new("model_prep").with_config(cfg());
+    let n: usize = if quick() { 100_000 } else { 1_000_000 };
+    for &threads in &[1usize, 8] {
+        g.bench(&format!("csr_build/threads{threads}"), || {
+            let mut gb = GraphBuilder::with_edge_capacity(n, 2 * n);
+            stream_edges(&mut gb, n);
+            let csr = gb.build_with_threads(threads);
+            csr.num_directed_edges() as f64
+        });
+    }
+
+    let spec = ModelSpec::PowerLaw { n: if quick() { 50_000 } else { 500_000 }, m: 2 };
+    g.bench("powerlaw/full_build", || {
+        let mrf = builders::build(&spec, 42);
+        mrf.num_messages() as f64
+    });
+
+    // Snapshot I/O: v1 (streamed, serial) vs v2 (sectioned bulk writes,
+    // parallel chunked loads) on the same instance.
+    let mrf = builders::build(&spec, 42);
+    let dir = std::env::temp_dir();
+    let p1 = dir.join("rbp_model_prep_v1.rbpm");
+    let p2 = dir.join("rbp_model_prep_v2.rbpm");
+    let (s1, s2) = (p1.to_string_lossy().into_owned(), p2.to_string_lossy().into_owned());
+    g.bench("save/v1", || model_io::save_v1(&mrf, &s1).expect("save v1") as f64);
+    g.bench("save/v2", || model_io::save(&mrf, &s2).expect("save v2") as f64);
+    g.bench("load/v1", || model_io::load(&s1).expect("load v1").num_messages() as f64);
+    for &threads in &[1usize, 8] {
+        g.bench(&format!("load/v2_threads{threads}"), || {
+            model_io::load_with_threads(&s2, threads).expect("load v2").num_messages() as f64
+        });
+    }
+    let _ = std::fs::remove_file(&p1);
+    let _ = std::fs::remove_file(&p2);
+
+    g.bench("messages/uniform_init", || {
+        let msgs = Messages::uniform(&mrf);
+        drop(msgs);
+        mrf.num_messages() as f64
+    });
+    g.report();
+}
+
+fn main() {
+    let groups: &[(&str, fn())] = &[
+        ("update_kernel", group_update_kernel),
+        ("simd_kernel", group_simd_kernel),
+        ("precision", group_precision),
+        ("schedulers", group_schedulers),
+        ("message_update", group_message_update),
+        ("lookahead", group_lookahead),
+        ("batched_backends", group_batched_backends),
+        ("model_prep", group_model_prep),
+    ];
+    let only = only();
+    for (name, run) in groups {
+        let selected = match only.as_deref() {
+            None => true,
+            Some(o) => o == *name,
+        };
+        if selected {
+            run();
+        }
+    }
+    if let Some(o) = only {
+        if !groups.iter().any(|(name, _)| *name == o) {
+            eprintln!("[microbench] unknown group '{o}'; available:");
+            for (name, _) in groups {
+                eprintln!("  {name}");
+            }
+            std::process::exit(2);
+        }
+    }
 }

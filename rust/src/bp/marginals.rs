@@ -5,7 +5,9 @@
 
 use super::state::{msg_buf, MsgSource};
 use super::update::normalize;
+use crate::coordinator::run_workers;
 use crate::model::Mrf;
+use crate::util::cold_path_threads;
 
 /// Compute the belief at node `i` into `out[..d_i]`; returns `d_i`.
 pub fn node_marginal<S: MsgSource + ?Sized>(
@@ -28,13 +30,27 @@ pub fn node_marginal<S: MsgSource + ?Sized>(
     d
 }
 
-/// All node marginals as owned vectors.
-pub fn all_marginals<S: MsgSource + ?Sized>(mrf: &Mrf, src: &S) -> Vec<Vec<f64>> {
-    let mut out = Vec::with_capacity(mrf.num_nodes());
-    let mut buf = msg_buf();
-    for i in 0..mrf.num_nodes() {
-        let d = node_marginal(mrf, src, i, &mut buf);
-        out.push(buf[..d].to_vec());
+/// All node marginals as owned vectors, extracted in parallel over
+/// contiguous node ranges above the cold-path threshold. Each node's
+/// belief is computed independently, so the result is identical for
+/// every thread count.
+pub fn all_marginals<S: MsgSource + Sync + ?Sized>(mrf: &Mrf, src: &S) -> Vec<Vec<f64>> {
+    let n = mrf.num_nodes();
+    let threads = cold_path_threads(n);
+    let chunks = run_workers(threads, |t| {
+        let lo = t * n / threads;
+        let hi = (t + 1) * n / threads;
+        let mut part = Vec::with_capacity(hi - lo);
+        let mut buf = msg_buf();
+        for i in lo..hi {
+            let d = node_marginal(mrf, src, i, &mut buf);
+            part.push(buf[..d].to_vec());
+        }
+        part
+    });
+    let mut out = Vec::with_capacity(n);
+    for part in chunks {
+        out.extend(part);
     }
     out
 }

@@ -37,8 +37,9 @@
 //! snapshot and restoring (which re-rounds) round-trips bit-for-bit.
 
 use super::simd::{self, Kernel};
+use crate::coordinator::run_workers;
 use crate::model::{Mrf, Partition, MAX_DOMAIN};
-use crate::util::{AtomicF32, AtomicF64};
+use crate::util::{cold_path_threads, AtomicF32, AtomicF64, DisjointWriter};
 
 /// Fixed-size stack buffer for one message / one domain's worth of values.
 pub type MsgBuf = [f64; MAX_DOMAIN];
@@ -288,13 +289,79 @@ impl MsgCell for CellF32 {
     }
 }
 
-/// Build one arena from plain values — a single non-atomic initialization
-/// pass over a freshly owned allocation (the cells become shared only when
-/// the arena is published to worker threads).
+/// Build one arena from plain values — a non-atomic initialization pass
+/// over a freshly owned allocation (the cells become shared only when the
+/// arena is published to worker threads), parallelized over line ranges
+/// at the cold-path thread count. Values are position-determined, so the
+/// result is identical for every thread count.
 fn arena_from_values<C: MsgCell>(vals: &[f64]) -> Box<[C::Line]> {
-    (0..vals.len().div_ceil(C::PER_LINE))
-        .map(|l| C::line_from(vals, l * C::PER_LINE))
-        .collect()
+    arena_from_values_n::<C>(vals, cold_path_threads(vals.len().div_ceil(C::PER_LINE)))
+}
+
+/// [`arena_from_values`] at an explicit thread count (1 inside workers
+/// that are themselves already parallel over shards).
+fn arena_from_values_n<C: MsgCell>(vals: &[f64], threads: usize) -> Box<[C::Line]> {
+    let nlines = vals.len().div_ceil(C::PER_LINE);
+    let mut lines: Vec<C::Line> = Vec::with_capacity(nlines);
+    if threads <= 1 || nlines < 2 {
+        lines.extend((0..nlines).map(|l| C::line_from(vals, l * C::PER_LINE)));
+    } else {
+        let threads = threads.min(nlines);
+        let mut rest = &mut lines.spare_capacity_mut()[..nlines];
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let lo = t * nlines / threads;
+                let hi = (t + 1) * nlines / threads;
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(hi - lo);
+                rest = tail;
+                s.spawn(move || {
+                    for (j, slot) in chunk.iter_mut().enumerate() {
+                        slot.write(C::line_from(vals, (lo + j) * C::PER_LINE));
+                    }
+                });
+            }
+        });
+        // SAFETY: the chunks split off above tile 0..nlines exactly, and
+        // every thread wrote each slot of its chunk, so all `nlines`
+        // elements are initialized.
+        unsafe { lines.set_len(nlines) };
+    }
+    lines.into_boxed_slice()
+}
+
+/// Split `out` (a flat-layout array tiled by `offsets`, which carries one
+/// entry per message plus a trailing total) into per-thread pieces at
+/// message boundaries and run `work(piece, e0, e1, base)` on each —
+/// `piece` holds the flat range `[base, offsets[e1])` covering messages
+/// `e0..e1`. Writes are position-determined, so results are identical
+/// for every thread count.
+fn for_flat_chunks(
+    offsets: &[u32],
+    out: &mut [f64],
+    threads: usize,
+    work: impl Fn(&mut [f64], usize, usize, usize) + Sync,
+) {
+    let me = offsets.len() - 1;
+    if threads <= 1 || me == 0 {
+        work(out, 0, me, 0);
+        return;
+    }
+    let threads = threads.min(me);
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut base = 0usize;
+        for t in 0..threads {
+            let e0 = t * me / threads;
+            let e1 = (t + 1) * me / threads;
+            let end = offsets[e1] as usize;
+            let (piece, tail) = std::mem::take(&mut rest).split_at_mut(end - base);
+            rest = tail;
+            let work = &work;
+            let b = base;
+            base = end;
+            s.spawn(move || work(piece, e0, e1, b));
+        }
+    });
 }
 
 /// The generic storage engine behind [`Messages`]: per-shard arenas of one
@@ -317,17 +384,21 @@ struct ArenaSet<C: MsgCell> {
 impl<C: MsgCell> ArenaSet<C> {
     fn uniform(mrf: &Mrf) -> Self {
         let me = mrf.num_messages();
+        let flat_offset = flat_offsets(mrf);
         let mut vals = vec![0.0f64; mrf.total_msg_len];
-        for e in 0..me as u32 {
-            let len = mrf.msg_len(e);
-            let off = mrf.msg_offset[e as usize] as usize;
-            vals[off..off + len].fill(1.0 / len as f64);
-        }
+        let threads = cold_path_threads(me);
+        for_flat_chunks(&flat_offset, &mut vals, threads, |piece, e0, e1, base| {
+            for e in e0..e1 {
+                let len = mrf.msg_len(e as u32);
+                let off = mrf.msg_offset[e] as usize - base;
+                piece[off..off + len].fill(1.0 / len as f64);
+            }
+        });
         ArenaSet {
             arenas: vec![arena_from_values::<C>(&vals)],
             edge_shard: vec![0u32; me].into_boxed_slice(),
             edge_local: mrf.msg_offset.clone().into_boxed_slice(),
-            flat_offset: flat_offsets(mrf),
+            flat_offset,
         }
     }
 
@@ -341,18 +412,53 @@ impl<C: MsgCell> ArenaSet<C> {
         let k = partition.num_shards();
         let mut edge_shard = vec![0u32; me];
         let mut edge_local = vec![0u32; me];
-        let mut arenas = Vec::with_capacity(k);
-        let mut vals: Vec<f64> = Vec::new();
-        for s in 0..k {
-            vals.clear();
-            for &e in partition.tasks_of(s) {
-                edge_shard[e as usize] = s as u32;
-                edge_local[e as usize] = vals.len() as u32;
-                let len = mrf.msg_len(e);
-                vals.resize(vals.len() + len, 1.0 / len as f64);
+        let threads = cold_path_threads(me).min(k.max(1));
+        let arenas: Vec<Box<[C::Line]>> = if threads <= 1 {
+            let mut arenas = Vec::with_capacity(k);
+            let mut vals: Vec<f64> = Vec::new();
+            for s in 0..k {
+                vals.clear();
+                for &e in partition.tasks_of(s) {
+                    edge_shard[e as usize] = s as u32;
+                    edge_local[e as usize] = vals.len() as u32;
+                    let len = mrf.msg_len(e);
+                    vals.resize(vals.len() + len, 1.0 / len as f64);
+                }
+                arenas.push(arena_from_values::<C>(&vals));
             }
-            arenas.push(arena_from_values::<C>(&vals));
-        }
+            arenas
+        } else {
+            let shard_w = DisjointWriter::new(&mut edge_shard);
+            let local_w = DisjointWriter::new(&mut edge_local);
+            let per_worker = run_workers(threads, |t| {
+                let mut built: Vec<(usize, Box<[C::Line]>)> = Vec::new();
+                let mut vals: Vec<f64> = Vec::new();
+                for s in (t..k).step_by(threads) {
+                    vals.clear();
+                    for &e in partition.tasks_of(s) {
+                        // SAFETY: a partition assigns each task id to
+                        // exactly one shard, and each shard is visited by
+                        // exactly one worker, so slot `e` is written once.
+                        unsafe {
+                            shard_w.write(e as usize, s as u32);
+                            local_w.write(e as usize, vals.len() as u32);
+                        }
+                        let len = mrf.msg_len(e);
+                        vals.resize(vals.len() + len, 1.0 / len as f64);
+                    }
+                    built.push((s, arena_from_values_n::<C>(&vals, 1)));
+                }
+                built
+            });
+            let mut slots: Vec<Option<Box<[C::Line]>>> = (0..k).map(|_| None).collect();
+            for (s, arena) in per_worker.into_iter().flatten() {
+                slots[s] = Some(arena);
+            }
+            slots
+                .into_iter()
+                .map(|a| a.expect("every shard built exactly once"))
+                .collect()
+        };
         ArenaSet {
             arenas,
             edge_shard: edge_shard.into_boxed_slice(),
@@ -364,19 +470,55 @@ impl<C: MsgCell> ArenaSet<C> {
     fn uniform_like(mrf: &Mrf, layout: &ArenaSet<C>) -> Self {
         let me = layout.edge_shard.len();
         assert_eq!(mrf.num_messages(), me, "layout built for a different model");
-        let mut vals: Vec<Vec<f64>> = layout
-            .arenas
-            .iter()
-            .map(|a| vec![0.0f64; a.len() * C::PER_LINE])
-            .collect();
-        for e in 0..me as u32 {
-            let s = layout.edge_shard[e as usize] as usize;
-            let off = layout.edge_local[e as usize] as usize;
-            let len = mrf.msg_len(e);
-            vals[s][off..off + len].fill(1.0 / len as f64);
-        }
+        let k = layout.arenas.len();
+        let threads = cold_path_threads(me).min(k.max(1));
+        let arenas: Vec<Box<[C::Line]>> = if threads <= 1 {
+            let mut vals: Vec<Vec<f64>> = layout
+                .arenas
+                .iter()
+                .map(|a| vec![0.0f64; a.len() * C::PER_LINE])
+                .collect();
+            for e in 0..me as u32 {
+                let s = layout.edge_shard[e as usize] as usize;
+                let off = layout.edge_local[e as usize] as usize;
+                let len = mrf.msg_len(e);
+                vals[s][off..off + len].fill(1.0 / len as f64);
+            }
+            vals.iter().map(|v| arena_from_values::<C>(v)).collect()
+        } else {
+            // Each worker owns the shards `s ≡ t (mod threads)`: it scans
+            // the edge table once, fills the value images of its own
+            // shards, then builds their arenas. Reads are shared, writes
+            // stay worker-local.
+            let per_worker = run_workers(threads, |t| {
+                let mut mine: Vec<(usize, Vec<f64>)> = (t..k)
+                    .step_by(threads)
+                    .map(|s| (s, vec![0.0f64; layout.arenas[s].len() * C::PER_LINE]))
+                    .collect();
+                for e in 0..me {
+                    let s = layout.edge_shard[e] as usize;
+                    if s % threads != t {
+                        continue;
+                    }
+                    let off = layout.edge_local[e] as usize;
+                    let len = mrf.msg_len(e as u32);
+                    mine[(s - t) / threads].1[off..off + len].fill(1.0 / len as f64);
+                }
+                mine.into_iter()
+                    .map(|(s, v)| (s, arena_from_values_n::<C>(&v, 1)))
+                    .collect::<Vec<_>>()
+            });
+            let mut slots: Vec<Option<Box<[C::Line]>>> = (0..k).map(|_| None).collect();
+            for (s, arena) in per_worker.into_iter().flatten() {
+                slots[s] = Some(arena);
+            }
+            slots
+                .into_iter()
+                .map(|a| a.expect("every shard built exactly once"))
+                .collect()
+        };
         ArenaSet {
-            arenas: vals.iter().map(|v| arena_from_values::<C>(v)).collect(),
+            arenas,
             edge_shard: layout.edge_shard.clone(),
             edge_local: layout.edge_local.clone(),
             flat_offset: layout.flat_offset.clone(),
@@ -487,30 +629,38 @@ impl<C: MsgCell> ArenaSet<C> {
     }
 
     fn snapshot(&self) -> Vec<f64> {
+        let me = self.edge_shard.len();
         let mut out = vec![0.0f64; self.len()];
-        for e in 0..self.edge_shard.len() {
-            let flat = self.flat_offset[e] as usize;
-            let len = (self.flat_offset[e + 1] - self.flat_offset[e]) as usize;
-            let shard = self.edge_shard[e] as usize;
-            let off = self.edge_local[e] as usize;
-            for k in 0..len {
-                out[flat + k] = self.cell_load(shard, off + k);
+        let threads = cold_path_threads(me);
+        for_flat_chunks(&self.flat_offset, &mut out, threads, |piece, e0, e1, base| {
+            for e in e0..e1 {
+                let flat = self.flat_offset[e] as usize - base;
+                let len = (self.flat_offset[e + 1] - self.flat_offset[e]) as usize;
+                let shard = self.edge_shard[e] as usize;
+                let off = self.edge_local[e] as usize;
+                for k in 0..len {
+                    piece[flat + k] = self.cell_load(shard, off + k);
+                }
             }
-        }
+        });
         out
     }
 
     fn restore(&self, snap: &[f64]) {
         assert_eq!(snap.len(), self.len());
-        for e in 0..self.edge_shard.len() {
-            let flat = self.flat_offset[e] as usize;
-            let len = (self.flat_offset[e + 1] - self.flat_offset[e]) as usize;
-            let shard = self.edge_shard[e] as usize;
-            let off = self.edge_local[e] as usize;
-            for k in 0..len {
-                self.cell_store(shard, off + k, snap[flat + k]);
+        let me = self.edge_shard.len();
+        let threads = cold_path_threads(me);
+        run_workers(threads, |t| {
+            for e in (t * me / threads)..((t + 1) * me / threads) {
+                let flat = self.flat_offset[e] as usize;
+                let len = (self.flat_offset[e + 1] - self.flat_offset[e]) as usize;
+                let shard = self.edge_shard[e] as usize;
+                let off = self.edge_local[e] as usize;
+                for k in 0..len {
+                    self.cell_store(shard, off + k, snap[flat + k]);
+                }
             }
-        }
+        });
     }
 
     #[inline]

@@ -105,6 +105,12 @@ impl Args {
         }
     }
 
+    /// Value of `--key` as an owned path, if given (for directory/file
+    /// options like `--save-model`).
+    pub fn opt_path(&self, key: &str) -> Option<std::path::PathBuf> {
+        self.opt(key).map(std::path::PathBuf::from)
+    }
+
     /// True when `--name` was given (must be listed in `known_switches`).
     pub fn has_switch(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name)

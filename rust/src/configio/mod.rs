@@ -137,6 +137,25 @@ impl ModelSpec {
         })
     }
 
+    /// File-name-safe identity of this instance at `seed`, used by the
+    /// `--save-model`/`--load-model` cache to key models on disk
+    /// (`<kind>_<params>_seed<seed>.rbpm`). Every spec field participates,
+    /// so two specs share a cache file only when they build the identical
+    /// model.
+    pub fn cache_slug(&self, seed: u64) -> String {
+        let params = match self {
+            ModelSpec::Tree { n }
+            | ModelSpec::Ising { n }
+            | ModelSpec::Path { n }
+            | ModelSpec::AdversarialTree { n } => format!("{n}"),
+            ModelSpec::Potts { n, q } => format!("{n}_q{q}"),
+            ModelSpec::Ldpc { n, flip_prob } => format!("{n}_f{flip_prob}"),
+            ModelSpec::UniformTree { n, arity } => format!("{n}_a{arity}"),
+            ModelSpec::PowerLaw { n, m } => format!("{n}_m{m}"),
+        };
+        format!("{}_{}_seed{}.rbpm", self.name(), params, seed)
+    }
+
     /// Parse CLI-style `kind:n[:extra]`, e.g. `ising:300` or `ldpc:30000:0.07`.
     pub fn parse_cli(s: &str) -> Result<ModelSpec> {
         let parts: Vec<&str> = s.split(':').collect();

@@ -63,6 +63,12 @@ pub struct Counters {
     /// process actually maps for message storage. Max-merged like
     /// [`Counters::msg_bytes_logical`].
     pub msg_bytes_padded: u64,
+    /// **Gauge**: serialized size of the model file this run loaded or
+    /// saved (`model::io` v1/v2 bytes on disk); zero when the model was
+    /// built in process without touching disk. Max-merged like the other
+    /// gauges — the model is shared run-wide state, not a per-worker
+    /// event.
+    pub model_bytes: u64,
 }
 
 impl Counters {
@@ -85,6 +91,7 @@ impl Counters {
         self.tasks_touched += other.tasks_touched;
         self.msg_bytes_logical = self.msg_bytes_logical.max(other.msg_bytes_logical);
         self.msg_bytes_padded = self.msg_bytes_padded.max(other.msg_bytes_padded);
+        self.model_bytes = self.model_bytes.max(other.model_bytes);
     }
 }
 
@@ -109,6 +116,7 @@ pub struct AtomicCounters {
     tasks_touched: AtomicU64,
     msg_bytes_logical: AtomicU64,
     msg_bytes_padded: AtomicU64,
+    model_bytes: AtomicU64,
 }
 
 impl AtomicCounters {
@@ -129,6 +137,7 @@ impl AtomicCounters {
         self.tasks_touched.store(c.tasks_touched, Ordering::Relaxed);
         self.msg_bytes_logical.store(c.msg_bytes_logical, Ordering::Relaxed);
         self.msg_bytes_padded.store(c.msg_bytes_padded, Ordering::Relaxed);
+        self.model_bytes.store(c.model_bytes, Ordering::Relaxed);
     }
 
     /// Read the last published snapshot.
@@ -148,6 +157,7 @@ impl AtomicCounters {
             tasks_touched: self.tasks_touched.load(Ordering::Relaxed),
             msg_bytes_logical: self.msg_bytes_logical.load(Ordering::Relaxed),
             msg_bytes_padded: self.msg_bytes_padded.load(Ordering::Relaxed),
+            model_bytes: self.model_bytes.load(Ordering::Relaxed),
         }
     }
 }

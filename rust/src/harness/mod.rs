@@ -23,7 +23,7 @@ pub mod report;
 pub use report::{ratio_cell, Report, Row};
 
 use crate::configio::{AlgorithmSpec, Kernel, ModelSpec, PartitionSpec, Precision, RunConfig};
-use crate::model::{builders, EvidenceDelta, Mrf};
+use crate::model::{EvidenceDelta, Mrf};
 use crate::run::run_on_model_observed;
 use crate::telemetry::{Trace, TraceRecorder, DELTA_FRACTION};
 use anyhow::Result;
@@ -67,6 +67,13 @@ pub struct Harness {
     /// experiment additionally sweeps it per cell). Defaults to f64 so
     /// every historical experiment trajectory stays bit-identical.
     pub precision: Precision,
+    /// Model-cache directory consulted before building (`--load-model`):
+    /// a spec whose `cache_slug` file exists there is loaded from disk
+    /// instead of rebuilt.
+    pub load_model: Option<PathBuf>,
+    /// Model-cache directory built models are saved into (`--save-model`,
+    /// format v2) so later sweeps can `--load-model` them.
+    pub save_model: Option<PathBuf>,
     /// Traces recorded by [`Harness::run_cell`] since the last
     /// [`Harness::drain_traces`], keyed by cell id.
     pub trace_log: RefCell<Vec<(String, Trace)>>,
@@ -86,6 +93,8 @@ impl Default for Harness {
             fused: true,
             kernel: Kernel::Simd,
             precision: Precision::F64,
+            load_model: None,
+            save_model: None,
             trace_log: RefCell::new(Vec::new()),
         }
     }
@@ -100,6 +109,21 @@ impl Harness {
             ModelSpec::Potts { n: side(300, self.scale).max(4), q: 3 },
             ModelSpec::Ldpc { n: scaled(30_000, self.scale).max(24), flip_prob: 0.07 },
         ]
+    }
+
+    /// Resolve `spec` through the optional model cache: load it from
+    /// `load_model` when the cached file exists, otherwise build it (and
+    /// persist into `save_model` when set). All experiment model
+    /// construction funnels through here so every sweep honors
+    /// `--save-model`/`--load-model`.
+    pub fn model(&self, spec: &ModelSpec) -> Result<Mrf> {
+        let (mrf, _prep) = crate::run::obtain_model(
+            spec,
+            self.seed,
+            self.load_model.as_deref(),
+            self.save_model.as_deref(),
+        )?;
+        Ok(mrf)
     }
 
     fn cfg(&self, spec: &ModelSpec, alg: AlgorithmSpec, threads: usize) -> RunConfig {
@@ -246,7 +270,7 @@ impl Harness {
         updates_md.push_str(&sep);
 
         for spec in self.models() {
-            let mrf = builders::build(&spec, self.seed);
+            let mrf = self.model(&spec)?;
             let base = self.run_cell(&mrf, &spec, AlgorithmSpec::SequentialResidual, 1)?;
             speedup_md
                 .push_str(&format!("| {} | {:.2} s |", spec.name(), base.wall_secs));
@@ -291,7 +315,7 @@ impl Harness {
         let mut baselines = Vec::new();
         let mut mrfs = Vec::new();
         for spec in &models {
-            let mrf = builders::build(spec, self.seed);
+            let mrf = self.model(spec)?;
             let base = self.run_cell(&mrf, spec, AlgorithmSpec::SequentialResidual, 1)?;
             rep.push(base.clone());
             baselines.push(base);
@@ -357,7 +381,7 @@ impl Harness {
         for &p in &self.threads {
             md.push_str(&format!("| {p} |"));
             for spec in &models {
-                let mrf = builders::build(spec, self.seed);
+                let mrf = self.model(spec)?;
                 let rr = self.run_cell(&mrf, spec, AlgorithmSpec::RelaxedResidual, p)?;
                 let mut best: Option<f64> = None;
                 for alg in &non_relaxed {
@@ -416,7 +440,7 @@ impl Harness {
         let synch: Vec<Row> = models
             .iter()
             .map(|s| {
-                let mrf = builders::build(s, self.seed);
+                let mrf = self.model(s)?;
                 self.run_cell(&mrf, s, AlgorithmSpec::Synchronous, self.max_threads)
             })
             .collect::<Result<_>>()?;
@@ -425,7 +449,7 @@ impl Harness {
         let rr1: Vec<Row> = models
             .iter()
             .map(|s| {
-                let mrf = builders::build(s, self.seed);
+                let mrf = self.model(s)?;
                 self.run_cell(&mrf, s, AlgorithmSpec::RelaxedResidual, 1)
             })
             .collect::<Result<_>>()?;
@@ -435,7 +459,7 @@ impl Harness {
             let rows: Vec<Row> = models
                 .iter()
                 .map(|s| {
-                    let mrf = builders::build(s, self.seed);
+                    let mrf = self.model(s)?;
                     self.run_cell(
                         &mrf,
                         s,
@@ -465,7 +489,7 @@ impl Harness {
         let spec = ModelSpec::Ising { n: side(1000, self.scale).max(8) };
         let points: Vec<usize> = self.fig2_threads();
         rep.note(format!("model: ising {0}×{0}", match spec { ModelSpec::Ising { n } => n, _ => 0 }));
-        let mrf = builders::build(&spec, self.seed);
+        let mrf = self.model(&spec)?;
         let base = self.run_cell(&mrf, &spec, AlgorithmSpec::SequentialResidual, 1)?;
         rep.push(base.clone());
         let algs = [
@@ -529,7 +553,7 @@ impl Harness {
             AlgorithmSpec::RandomSplash { h: 2 },
             AlgorithmSpec::RelaxedSmartSplash { h: 2 },
         ];
-        let mrf = builders::build(&spec, self.seed);
+        let mrf = self.model(&spec)?;
         let base = self.run_cell(&mrf, &spec, AlgorithmSpec::SequentialResidual, 1)?;
         rep.push(base.clone());
 
@@ -589,7 +613,7 @@ impl Harness {
             "| instance | p | algorithm | useful | total updates | waste (%) |\n|---|---|---|---|---|---|\n",
         );
         for spec in &specs {
-            let mrf = builders::build(spec, self.seed);
+            let mrf = self.model(spec)?;
             for &p in &self.threads {
                 for alg in [AlgorithmSpec::RelaxedResidual, AlgorithmSpec::RelaxedOptimalTree] {
                     // Optimal-tree needs a tree; all these are trees.
@@ -638,7 +662,7 @@ impl Harness {
             "| input | p | partition | time (s) | updates | speedup vs off |\n|---|---|---|---|---|---|\n",
         );
         for spec in &specs {
-            let mrf = builders::build(spec, self.seed);
+            let mrf = self.model(spec)?;
             for &p in &self.threads {
                 // Baseline timing is only meaningful from a converged run;
                 // a timed-out baseline would fabricate a speedup (see
@@ -827,7 +851,7 @@ impl Harness {
             "| input | p | precision | arena KiB | time (s) | updates | speedup vs f64 |\n|---|---|---|---|---|---|---|\n",
         );
         for spec in &specs {
-            let mrf = builders::build(spec, self.seed);
+            let mrf = self.model(spec)?;
             for &p in &self.threads {
                 let mut f64_secs = None;
                 for precision in [Precision::F64, Precision::F32] {
@@ -936,7 +960,7 @@ impl Harness {
              |---|---|---|---|---|---|---|\n",
         );
         for spec in &specs {
-            let mrf = builders::build(spec, self.seed);
+            let mrf = self.model(spec)?;
             let delta = EvidenceDelta::random_perturbation(&mrf, DELTA_FRACTION, self.seed);
             let mut perturbed = mrf.clone();
             delta.apply(&mut perturbed);
@@ -1002,7 +1026,7 @@ impl Harness {
             "| input | p | kernel | time (s) | updates | speedup vs scalar |\n|---|---|---|---|---|---|\n",
         );
         for spec in &specs {
-            let mrf = builders::build(spec, self.seed);
+            let mrf = self.model(spec)?;
             for &p in &self.threads {
                 let mut scalar_secs = None;
                 for kernel in [Kernel::Scalar, Kernel::Simd] {
@@ -1066,7 +1090,7 @@ impl Harness {
             "| input | p | kernel | time (s) | updates | speedup vs edgewise |\n|---|---|---|---|---|---|\n",
         );
         for spec in &specs {
-            let mrf = builders::build(spec, self.seed);
+            let mrf = self.model(spec)?;
             for &p in &self.threads {
                 let mut edgewise_secs = None;
                 for fused in [false, true] {
@@ -1201,7 +1225,7 @@ mod tests {
     fn run_cell_tiny_tree() {
         let h = tiny();
         let spec = ModelSpec::Tree { n: 63 };
-        let mrf = builders::build(&spec, h.seed);
+        let mrf = crate::model::builders::build(&spec, h.seed);
         let row = h
             .run_cell(&mrf, &spec, AlgorithmSpec::RelaxedResidual, 2)
             .unwrap();

@@ -9,7 +9,7 @@
 //! relaxed-bp bench [--quick] [--families tree,ising] [--threads 1,2] [--samples 3]
 //!                [--out-dir DIR] [--check] [--tolerance 1.5]
 //! relaxed-bp bench-compare BENCH_old.json BENCH_new.json [--tolerance 1.5]
-//! relaxed-bp generate --model ldpc:30000 --out model.rbpm [--seed 42]
+//! relaxed-bp generate --model ldpc:30000 --out model.rbpm [--seed 42] [--format v1|v2]
 //! relaxed-bp list-algorithms
 //! ```
 
@@ -21,8 +21,9 @@ use relaxed_bp::configio::{
 };
 use relaxed_bp::harness::Harness;
 use relaxed_bp::model::{builders, io as model_io, EvidenceDelta};
-use relaxed_bp::run::run_config;
+use relaxed_bp::run::{run_config, run_on_model_prepped, PrepStats};
 use relaxed_bp::telemetry;
+use relaxed_bp::util::Timer;
 
 const SWITCHES: &[&str] = &["use-pjrt", "verbose", "marginals", "quick", "check"];
 
@@ -110,7 +111,32 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.precision = parse_precision(p)?;
     }
 
-    let mut report = run_config(&cfg)?;
+    // Model cache legs: --load-model replaces the in-process build with a
+    // disk load (v1/v2 auto-detected, parallel chunked reads); --save-model
+    // persists the model (format v2) after building so later runs can sweep
+    // it without regenerating ("generate once, sweep many"). --model is
+    // still required: it describes the instance in the report/config.
+    let mut report = if args.opt("load-model").is_some() || args.opt("save-model").is_some() {
+        let mut prep = PrepStats::default();
+        let mrf = if let Some(path) = args.opt("load-model") {
+            let t = Timer::start();
+            let mrf = model_io::load(path)?;
+            prep.load_secs = t.elapsed_secs();
+            prep.model_bytes = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+            mrf
+        } else {
+            let t = Timer::start();
+            let mrf = builders::build(&cfg.model, cfg.seed);
+            prep.build_secs = t.elapsed_secs();
+            mrf
+        };
+        if let Some(path) = args.opt("save-model") {
+            prep.model_bytes = model_io::save(&mrf, path)?;
+        }
+        run_on_model_prepped(&cfg, mrf, None, prep)?
+    } else {
+        run_config(&cfg)?
+    };
     let json = report.to_json();
     println!("{}", json.to_string_pretty());
     if args.has_switch("marginals") {
@@ -181,6 +207,8 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     if let Some(p) = args.opt("precision") {
         h.precision = parse_precision(p)?;
     }
+    h.load_model = args.opt_path("load-model");
+    h.save_model = args.opt_path("save-model");
 
     match which {
         "table1" | "table2" | "table5" | "table6" | "moderate" => {
@@ -272,6 +300,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
             .map(|s| PartitionSpec::parse_cli(s))
             .collect::<Result<Vec<_>>>()?;
     }
+    opts.load_model = args.opt_path("load-model");
+    opts.save_model = args.opt_path("save-model");
     opts.check = args.has_switch("check");
 
     let outcomes = telemetry::run_bench(&opts)?;
@@ -324,13 +354,23 @@ fn cmd_generate(args: &Args) -> Result<()> {
     )?;
     let seed = args.opt_or("seed", 42u64)?;
     let out = args.opt("out").ok_or_else(|| anyhow!("--out required"))?;
+    let format = args.opt("format").unwrap_or("v2");
+    let t = Timer::start();
     let mrf = builders::build(&model, seed);
-    model_io::save(&mrf, out)?;
+    let build_secs = t.elapsed_secs();
+    let t = Timer::start();
+    let bytes = match format {
+        "v2" => model_io::save(&mrf, out)?,
+        "v1" => model_io::save_v1(&mrf, out)?,
+        other => bail!("unknown --format '{other}' (expected v1 or v2)"),
+    };
+    let save_secs = t.elapsed_secs();
     println!(
-        "wrote {out}: {} nodes, {} messages, ~{} MiB",
+        "wrote {out} ({format}): {} nodes, {} messages, {} bytes \
+         (build {build_secs:.3}s, save {save_secs:.3}s)",
         mrf.num_nodes(),
         mrf.num_messages(),
-        mrf.approx_bytes() / (1 << 20)
+        bytes
     );
     Ok(())
 }
@@ -344,24 +384,34 @@ USAGE:
                  [--partition off|affine[:shards[:spill]]|bfs[:shards[:spill]]]
                  [--fused on|off] [--kernel scalar|simd] [--precision f64|f32]
                  [--config cfg.json] [--out report.json] [--marginals]
-                 [--delta-fraction F]
+                 [--delta-fraction F] [--save-model FILE] [--load-model FILE]
   relaxed-bp experiment <id> [--scale F] [--threads 1,2,4,8]
                  [--max-threads N] [--out-dir DIR] [--seed S] [--use-pjrt]
                  [--partition MODE] [--fused on|off] [--kernel scalar|simd]
-                 [--precision f64|f32]
+                 [--precision f64|f32] [--save-model DIR] [--load-model DIR]
       ids: table1 table3 table4 table7 fig2 fig4 fig5 fig6 fig7 lemma2
            locality fused simd precision delta all
   relaxed-bp bench [--quick] [--families tree,ising,potts,potts32,ldpc,powerlaw]
                  [--threads 1,2] [--samples N] [--out-dir DIR] [--seed S]
                  [--time-limit SECS] [--tick-ms MS] [--tolerance X]
                  [--partitions off,affine] [--check]
+                 [--save-model DIR] [--load-model DIR]
       writes BENCH_<FAMILY>.json baselines (with convergence traces) to the
       repo root and diffs them against the previous revision's baselines;
       --check exits non-zero on regression
   relaxed-bp bench-compare <old.json> <new.json> [--tolerance X]
       diffs two baselines; exits non-zero when <new> regresses
   relaxed-bp generate --model <kind:size> --out model.rbpm [--seed S]
+                 [--format v1|v2]
   relaxed-bp list-algorithms
+
+MODEL CACHE (the cold-path axis): generate once, sweep many. run takes
+        file paths: --save-model writes the built model (format v2:
+        sectioned bulk layout, parallel chunked loads); --load-model skips
+        the build and loads from disk (v1/v2 auto-detected). experiment
+        and bench take cache directories keyed by <family>_<params>_seedS
+        .rbpm: --load-model consults the cache before building, --save-model
+        fills it. Reports carry build_secs/load_secs/init_secs/model_bytes.
 
 MODELS: tree:N ising:N potts:N[:q] ldpc:N[:flip] path:N adversarial_tree:N
         uniform_tree:N[:arity] powerlaw:N[:m]

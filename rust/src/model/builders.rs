@@ -40,18 +40,23 @@ pub fn build(spec: &ModelSpec, seed: u64) -> Mrf {
     }
 }
 
-/// Assemble a binary-domain tree MRF from an edge list oriented away from
-/// the root: node 0 carries the `(0.1, 0.9)` root prior, every other node
-/// is uniform, and all edges share one factor matrix.
-fn evidence_tree(name: &str, n: usize, edges: Vec<(usize, usize)>, factor: [f64; 4]) -> Mrf {
-    let mut gb = GraphBuilder::new(n);
+/// Assemble a binary-domain tree MRF from an edge sequence oriented away
+/// from the root: node 0 carries the `(0.1, 0.9)` root prior, every other
+/// node is uniform, and all edges share one factor matrix. Edges stream
+/// straight into the builder — no intermediate edge list is materialized.
+fn evidence_tree(
+    name: &str,
+    n: usize,
+    edges: impl IntoIterator<Item = (usize, usize)>,
+    factor: [f64; 4],
+) -> Mrf {
+    let mut gb = GraphBuilder::with_edge_capacity(n, n.saturating_sub(1));
     let mut pool = FactorPool::new();
     let f = pool.add(2, 2, &factor);
-    let mut edge_idx = Vec::with_capacity(edges.len());
     for (a, b) in edges {
         gb.add_edge(a, b);
-        edge_idx.push(f);
     }
+    let edge_idx = vec![f; gb.num_edges()];
     let mut priors = vec![vec![0.5, 0.5]; n];
     if n > 0 {
         priors[0] = vec![0.1, 0.9];
@@ -72,20 +77,15 @@ const EQUALITY: [f64; 4] = [1.0, 0.0, 0.0, 1.0];
 /// Full binary tree with `n` vertices: node `i`'s children are `2i+1` and
 /// `2i+2`; edges oriented parent→child.
 fn binary_tree(n: usize) -> Mrf {
-    let mut edges = Vec::with_capacity(n.saturating_sub(1));
-    for i in 0..n {
-        for c in [2 * i + 1, 2 * i + 2] {
-            if c < n {
-                edges.push((i, c));
-            }
-        }
-    }
+    let edges = (0..n).flat_map(|i| {
+        [2 * i + 1, 2 * i + 2].into_iter().filter(move |&c| c < n).map(move |c| (i, c))
+    });
     evidence_tree("tree", n, edges, EQUALITY)
 }
 
 /// Path graph rooted at node 0 (the Lemma-2 bad case).
 fn path(n: usize) -> Mrf {
-    let edges = (0..n.saturating_sub(1)).map(|i| (i, i + 1)).collect();
+    let edges = (0..n.saturating_sub(1)).map(|i| (i, i + 1));
     evidence_tree("path", n, edges, EQUALITY)
 }
 
@@ -123,15 +123,9 @@ fn adversarial_tree(n: usize) -> Mrf {
 /// with uniform geometric expansion.
 fn uniform_tree(n: usize, arity: usize) -> Mrf {
     let arity = arity.max(1);
-    let mut edges = Vec::with_capacity(n.saturating_sub(1));
-    for i in 0..n {
-        for k in 1..=arity {
-            let c = arity * i + k;
-            if c < n {
-                edges.push((i, c));
-            }
-        }
-    }
+    let edges = (0..n).flat_map(move |i| {
+        (1..=arity).map(move |k| arity * i + k).filter(move |&c| c < n).map(move |c| (i, c))
+    });
     evidence_tree("uniform_tree", n, edges, [0.9, 0.1, 0.1, 0.9])
 }
 
@@ -158,9 +152,10 @@ fn grid_spin_glass(name: &str, n: usize, seed: u64, amp: f64) -> Mrf {
     let nodes = n * n;
     let priors: Vec<Vec<f64>> =
         (0..nodes).map(|_| spin_prior(rng.uniform(-amp, amp))).collect();
-    let mut gb = GraphBuilder::new(nodes);
+    let grid_edges = 2 * n * n.saturating_sub(1);
+    let mut gb = GraphBuilder::with_edge_capacity(nodes, grid_edges);
     let mut pool = FactorPool::new();
-    let mut edge_idx = Vec::new();
+    let mut edge_idx = Vec::with_capacity(grid_edges);
     for r in 0..n {
         for c in 0..n {
             let i = r * n + c;
@@ -201,9 +196,10 @@ fn potts(n: usize, q: usize, seed: u64) -> Mrf {
     let priors: Vec<Vec<f64>> = (0..nodes)
         .map(|_| (0..q).map(|_| rng.uniform(-2.5, 2.5).exp()).collect())
         .collect();
-    let mut gb = GraphBuilder::new(nodes);
+    let grid_edges = 2 * n * n.saturating_sub(1);
+    let mut gb = GraphBuilder::with_edge_capacity(nodes, grid_edges);
     let mut pool = FactorPool::new();
-    let mut edge_idx = Vec::new();
+    let mut edge_idx = Vec::with_capacity(grid_edges);
     let coupling = |rng: &mut Xoshiro256, pool: &mut FactorPool| {
         let b = rng.uniform(-2.5f64, 2.5).exp();
         let mut m = vec![1.0f64; q * q];
@@ -242,7 +238,7 @@ fn potts(n: usize, q: usize, seed: u64) -> Mrf {
 fn powerlaw(n: usize, m: usize, seed: u64) -> Mrf {
     let m = m.max(1);
     let mut rng = Xoshiro256::seed_from_u64(seed);
-    let mut gb = GraphBuilder::new(n);
+    let mut gb = GraphBuilder::with_edge_capacity(n, n.saturating_mul(m));
     // One endpoint entry per edge side: sampling uniformly from this list
     // is degree-proportional sampling.
     let mut endpoints: Vec<u32> = Vec::with_capacity(2 * n * m);
@@ -269,6 +265,12 @@ fn powerlaw(n: usize, m: usize, seed: u64) -> Mrf {
         }
     }
     let num_edges = gb.num_edges();
+    // The attachment list has served its purpose; free it before the
+    // prior/coupling tables are built (it is 8 bytes per edge — real
+    // memory at 10⁸ edges). Dropping consumes no RNG draws, so the
+    // random stream — and therefore every generated instance — is
+    // unchanged.
+    drop(endpoints);
     let priors: Vec<Vec<f64>> = (0..n).map(|_| spin_prior(rng.uniform(-1.0, 1.0))).collect();
     let mut pool = FactorPool::new();
     let mut edge_idx = Vec::with_capacity(num_edges);
@@ -351,7 +353,7 @@ pub mod ldpc {
         // Graph + factors. Edge insertion order fixes each edge's bit
         // position within its constraint.
         let nodes = n + checks;
-        let mut gb = GraphBuilder::new(nodes);
+        let mut gb = GraphBuilder::with_edge_capacity(nodes, n * VAR_DEG);
         let mut pool = FactorPool::new();
         // Six shared bit-position indicator matrices ψ_k(x, s) = [bit_k(s) = x].
         let bit_factor: Vec<u32> = (0..CHECK_DEG)

@@ -116,6 +116,43 @@ impl FactorPool {
     pub fn data_len(&self) -> usize {
         self.data.len()
     }
+
+    /// Raw concatenated matrix data (serialization support).
+    pub fn data_raw(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Raw per-matrix `(offset, rows, cols)` entries (serialization
+    /// support).
+    pub fn entries_raw(&self) -> &[(u32, u16, u16)] {
+        &self.entries
+    }
+
+    /// Reassemble a pool from raw parts (the bulk-load path), validating
+    /// every invariant [`FactorPool::add`] enforces incrementally. Errors
+    /// instead of panicking — the parts may come from an untrusted file.
+    pub fn from_raw(data: Vec<f64>, entries: Vec<(u32, u16, u16)>) -> Result<Self, String> {
+        let mut expect = 0usize;
+        for (i, &(off, r, c)) in entries.iter().enumerate() {
+            if off as usize != expect {
+                return Err(format!("factor pool entry {i}: offset {off}, expected {expect}"));
+            }
+            if r == 0 || c == 0 {
+                return Err(format!("factor pool entry {i}: degenerate shape {r}x{c}"));
+            }
+            expect += r as usize * c as usize;
+        }
+        if expect != data.len() {
+            return Err(format!(
+                "factor pool data length {} does not match entries (expected {expect})",
+                data.len()
+            ));
+        }
+        if !data.iter().all(|v| *v >= 0.0 && v.is_finite()) {
+            return Err("factor pool contains non-finite or negative values".into());
+        }
+        Ok(Self { data, entries })
+    }
 }
 
 /// Flat node-factor table with per-node offsets.
@@ -165,6 +202,42 @@ impl NodeFactors {
         assert!(vals.iter().all(|v| *v >= 0.0 && v.is_finite()), "priors must be finite ≥ 0");
         let off = self.offsets[i] as usize;
         self.data[off..off + vals.len()].copy_from_slice(vals);
+    }
+
+    /// Raw per-node offsets, length `num_nodes() + 1` (serialization
+    /// support).
+    pub fn offsets_raw(&self) -> &[u32] {
+        &self.offsets
+    }
+
+    /// Raw flat factor data (serialization support).
+    pub fn data_raw(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Reassemble node factors from raw parts (the bulk-load path),
+    /// validating the invariants [`NodeFactors::from_vecs`] enforces.
+    /// Errors instead of panicking — the parts may come from an untrusted
+    /// file.
+    pub fn from_raw(offsets: Vec<u32>, data: Vec<f64>) -> Result<Self, String> {
+        if offsets.first() != Some(&0) {
+            return Err("node factor offsets must start at 0".into());
+        }
+        for (i, w) in offsets.windows(2).enumerate() {
+            if w[1] <= w[0] {
+                return Err(format!("node {i}: empty or non-monotone factor row"));
+            }
+        }
+        if offsets.last().copied().unwrap_or(0) as usize != data.len() {
+            return Err(format!(
+                "node factor data length {} does not match final offset",
+                data.len()
+            ));
+        }
+        if !data.iter().all(|v| *v >= 0.0 && v.is_finite()) {
+            return Err("node factors contain non-finite or negative values".into());
+        }
+        Ok(Self { offsets, data })
     }
 }
 
@@ -241,6 +314,37 @@ mod tests {
     fn node_factors_set_rejects_negative() {
         let mut nf = NodeFactors::from_vecs(&[vec![0.5, 0.5]]);
         nf.set(0, &[0.5, -0.5]);
+    }
+
+    #[test]
+    fn pool_raw_roundtrip() {
+        let mut p = FactorPool::new();
+        p.add(2, 2, &[1.0, 0.0, 0.0, 1.0]);
+        p.add(1, 3, &[0.25, 0.5, 0.25]);
+        let back =
+            FactorPool::from_raw(p.data_raw().to_vec(), p.entries_raw().to_vec()).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.matrix(1), p.matrix(1));
+        assert!(FactorPool::from_raw(vec![1.0], vec![(0, 2, 2)]).is_err(), "length mismatch");
+        assert!(FactorPool::from_raw(vec![-1.0], vec![(0, 1, 1)]).is_err(), "negative value");
+        assert!(FactorPool::from_raw(vec![], vec![(0, 0, 4)]).is_err(), "degenerate shape");
+        assert!(
+            FactorPool::from_raw(vec![1.0, 1.0], vec![(1, 1, 1)]).is_err(),
+            "bad first offset"
+        );
+    }
+
+    #[test]
+    fn node_factors_raw_roundtrip() {
+        let nf = NodeFactors::from_vecs(&[vec![0.1, 0.9], vec![1.0; 5]]);
+        let back =
+            NodeFactors::from_raw(nf.offsets_raw().to_vec(), nf.data_raw().to_vec()).unwrap();
+        assert_eq!(back.num_nodes(), 2);
+        assert_eq!(back.of(1), nf.of(1));
+        assert!(NodeFactors::from_raw(vec![0, 0], vec![]).is_err(), "empty row");
+        assert!(NodeFactors::from_raw(vec![1, 2], vec![0.5]).is_err(), "nonzero start");
+        assert!(NodeFactors::from_raw(vec![0, 1], vec![0.5, 0.5]).is_err(), "length mismatch");
+        assert!(NodeFactors::from_raw(vec![0, 1], vec![f64::NAN]).is_err(), "non-finite");
     }
 
     #[test]

@@ -6,19 +6,52 @@
 //! records, for every adjacency slot, which directed edge points *into* the
 //! node and which points *out*. All ids are `u32` (models up to ~4B edges,
 //! far beyond what fits in RAM anyway) to halve index memory.
+//!
+//! The builder **streams**: [`GraphBuilder::add_edge`] feeds degree
+//! counters and the final per-directed-edge endpoint arrays directly, so
+//! no intermediate `(a, b)` edge list is ever materialized — at 10⁸ edges
+//! that list was the peak-memory blocker. Freezing
+//! ([`GraphBuilder::build`]) is a counting sort whose cursor fill is
+//! parallelized over contiguous edge chunks with per-thread degree
+//! partials; because chunk `c`'s start cursor for node `v` is exactly the
+//! sequential cursor value at the chunk boundary, the parallel fill writes
+//! every adjacency slot to the same value as the sequential one — the
+//! output is bit-identical for every thread count (pinned by the cold-path
+//! equality suite).
 
-/// Builder: collect undirected edges, then freeze into a [`Csr`].
+use crate::coordinator::run_workers;
+use crate::util::{cold_path_threads, DisjointWriter};
+
+/// Builder: stream undirected edges into degree counters and endpoint
+/// arrays, then freeze into a [`Csr`].
 #[derive(Debug, Default, Clone)]
 pub struct GraphBuilder {
     n: usize,
-    edges: Vec<(u32, u32)>,
+    /// Undirected degree per node, maintained incrementally by `add_edge`.
+    degree: Vec<u32>,
+    /// Source node per *directed* edge: undirected edge `k` contributes
+    /// `edge_src[2k] = a` and `edge_src[2k+1] = b`. These become
+    /// [`Csr::edge_src`] / [`Csr::edge_dst`] verbatim at freeze time.
+    edge_src: Vec<u32>,
+    /// Destination node per directed edge (see `edge_src`).
+    edge_dst: Vec<u32>,
 }
 
 impl GraphBuilder {
     /// Empty edge list over `n` nodes.
     pub fn new(n: usize) -> Self {
         assert!(n <= u32::MAX as usize, "node count exceeds u32");
-        Self { n, edges: Vec::new() }
+        Self { n, degree: vec![0u32; n], edge_src: Vec::new(), edge_dst: Vec::new() }
+    }
+
+    /// [`GraphBuilder::new`] with capacity reserved for `edges` undirected
+    /// edges — generators that know their edge count up front avoid the
+    /// doubling-reallocation copies of the endpoint arrays.
+    pub fn with_edge_capacity(n: usize, edges: usize) -> Self {
+        let mut b = Self::new(n);
+        b.edge_src.reserve(2 * edges);
+        b.edge_dst.reserve(2 * edges);
+        b
     }
 
     /// Number of nodes.
@@ -28,65 +61,146 @@ impl GraphBuilder {
 
     /// Number of undirected edges added so far.
     pub fn num_edges(&self) -> usize {
-        self.edges.len()
+        self.edge_src.len() / 2
     }
 
-    /// Add undirected edge `{a, b}`. Self-loops and duplicate edges are
-    /// rejected at freeze time (BP's update rule assumes simple graphs).
+    /// Add undirected edge `{a, b}`. Self-loops are rejected immediately;
+    /// duplicate edges at freeze time (BP's update rule assumes simple
+    /// graphs).
     pub fn add_edge(&mut self, a: usize, b: usize) {
         debug_assert!(a < self.n && b < self.n, "edge ({a},{b}) out of range");
-        self.edges.push((a as u32, b as u32));
+        assert_ne!(a, b, "self-loop at node {a}");
+        self.degree[a] += 1;
+        self.degree[b] += 1;
+        let (a, b) = (a as u32, b as u32);
+        self.edge_src.push(a);
+        self.edge_src.push(b);
+        self.edge_dst.push(b);
+        self.edge_dst.push(a);
     }
 
-    /// Freeze into CSR form. Panics on self-loops or duplicate edges.
+    /// Freeze into CSR form with an automatic cold-path thread count.
+    /// Panics on duplicate edges. The result is bit-identical for every
+    /// thread count — see [`GraphBuilder::build_with_threads`].
     pub fn build(self) -> Csr {
-        let n = self.n;
-        let m = self.edges.len();
-        let mut degree = vec![0u32; n];
-        for &(a, b) in &self.edges {
-            assert_ne!(a, b, "self-loop at node {a}");
-            degree[a as usize] += 1;
-            degree[b as usize] += 1;
-        }
+        let threads = cold_path_threads(self.num_edges());
+        self.build_with_threads(threads)
+    }
+
+    /// Freeze into CSR form using `threads` worker threads for the
+    /// counting-sort cursor fill and the simplicity check.
+    ///
+    /// Determinism: node `v`'s adjacency slots are filled in global edge
+    /// order regardless of `threads`. Each parallel chunk is a contiguous
+    /// range of undirected edge ids, chunk `c`'s start cursor for `v` is
+    /// `offsets[v] + Σ_{c' < c} count(c', v)` (per-thread degree
+    /// partials), and within a chunk edges are processed in id order — so
+    /// every slot receives exactly the value the sequential fill writes.
+    pub fn build_with_threads(self, threads: usize) -> Csr {
+        let GraphBuilder { n, degree, edge_src, edge_dst } = self;
+        let me = edge_src.len();
+        let m = me / 2;
+        let threads = threads.clamp(1, m.max(1));
+
         let mut offsets = vec![0u32; n + 1];
         for i in 0..n {
             offsets[i + 1] = offsets[i] + degree[i];
         }
-        let total = offsets[n] as usize;
-        debug_assert_eq!(total, 2 * m);
+        drop(degree);
+        debug_assert_eq!(offsets[n] as usize, me);
 
-        // Directed edge ids: undirected edge k gets ids 2k (a→b) and 2k+1 (b→a).
-        let mut adj_node = vec![0u32; total];
-        let mut adj_out = vec![0u32; total]; // directed edge leaving the row node
-        let mut adj_in = vec![0u32; total]; // directed edge entering the row node
-        let mut cursor: Vec<u32> = offsets[..n].to_vec();
-        for (k, &(a, b)) in self.edges.iter().enumerate() {
-            let out_ab = (2 * k) as u32;
-            let out_ba = (2 * k + 1) as u32;
-            let ca = cursor[a as usize] as usize;
-            adj_node[ca] = b;
-            adj_out[ca] = out_ab;
-            adj_in[ca] = out_ba;
-            cursor[a as usize] += 1;
-            let cb = cursor[b as usize] as usize;
-            adj_node[cb] = a;
-            adj_out[cb] = out_ba;
-            adj_in[cb] = out_ab;
-            cursor[b as usize] += 1;
-        }
+        // Directed edge ids: undirected edge k gets ids 2k (a→b), 2k+1 (b→a).
+        let mut adj_node = vec![0u32; me];
+        let mut adj_out = vec![0u32; me]; // directed edge leaving the row node
+        let mut adj_in = vec![0u32; me]; // directed edge entering the row node
 
-        // Per-directed-edge endpoints.
-        let mut edge_src = vec![0u32; 2 * m];
-        let mut edge_dst = vec![0u32; 2 * m];
-        for (k, &(a, b)) in self.edges.iter().enumerate() {
-            edge_src[2 * k] = a;
-            edge_dst[2 * k] = b;
-            edge_src[2 * k + 1] = b;
-            edge_dst[2 * k + 1] = a;
+        if threads == 1 {
+            // Sequential reference fill (the parallel path is pinned
+            // bit-identical to this one).
+            let mut cursor: Vec<u32> = offsets[..n].to_vec();
+            for k in 0..m {
+                let (a, b) = (edge_src[2 * k] as usize, edge_src[2 * k + 1] as usize);
+                let out_ab = (2 * k) as u32;
+                let out_ba = (2 * k + 1) as u32;
+                let ca = cursor[a] as usize;
+                adj_node[ca] = b as u32;
+                adj_out[ca] = out_ab;
+                adj_in[ca] = out_ba;
+                cursor[a] += 1;
+                let cb = cursor[b] as usize;
+                adj_node[cb] = a as u32;
+                adj_out[cb] = out_ba;
+                adj_in[cb] = out_ab;
+                cursor[b] += 1;
+            }
+        } else {
+            let chunks: Vec<(usize, usize)> =
+                (0..threads).map(|t| (t * m / threads, (t + 1) * m / threads)).collect();
+
+            // Per-chunk slot counts (the per-thread degree partials).
+            let partials: Vec<Vec<u32>> = run_workers(threads, |t| {
+                let (k0, k1) = chunks[t];
+                let mut cnt = vec![0u32; n];
+                for k in k0..k1 {
+                    cnt[edge_src[2 * k] as usize] += 1;
+                    cnt[edge_src[2 * k + 1] as usize] += 1;
+                }
+                cnt
+            });
+
+            // Exclusive prefix over chunks turns partial counts into each
+            // chunk's start cursors.
+            let mut cursors = partials;
+            let mut running: Vec<u32> = offsets[..n].to_vec();
+            for cur in &mut cursors {
+                for (v, c) in cur.iter_mut().enumerate() {
+                    let count = *c;
+                    *c = running[v];
+                    running[v] += count;
+                }
+            }
+            debug_assert_eq!(&running[..], &offsets[1..]);
+
+            let w_node = DisjointWriter::new(&mut adj_node);
+            let w_out = DisjointWriter::new(&mut adj_out);
+            let w_in = DisjointWriter::new(&mut adj_in);
+            std::thread::scope(|s| {
+                for (t, mut cur) in cursors.into_iter().enumerate() {
+                    let (k0, k1) = chunks[t];
+                    let (w_node, w_out, w_in) = (&w_node, &w_out, &w_in);
+                    let edge_src = &edge_src;
+                    s.spawn(move || {
+                        for k in k0..k1 {
+                            let a = edge_src[2 * k] as usize;
+                            let b = edge_src[2 * k + 1] as usize;
+                            let out_ab = (2 * k) as u32;
+                            let out_ba = (2 * k + 1) as u32;
+                            // SAFETY: chunk-start cursors partition each
+                            // node's slot range by chunk, and within a
+                            // chunk each slot is taken once — every index
+                            // is written by exactly one thread.
+                            let ca = cur[a] as usize;
+                            unsafe {
+                                w_node.write(ca, b as u32);
+                                w_out.write(ca, out_ab);
+                                w_in.write(ca, out_ba);
+                            }
+                            cur[a] += 1;
+                            let cb = cur[b] as usize;
+                            unsafe {
+                                w_node.write(cb, a as u32);
+                                w_out.write(cb, out_ba);
+                                w_in.write(cb, out_ab);
+                            }
+                            cur[b] += 1;
+                        }
+                    });
+                }
+            });
         }
 
         let csr = Csr { offsets, adj_node, adj_out, adj_in, edge_src, edge_dst };
-        csr.assert_simple();
+        csr.assert_simple(threads);
         csr
     }
 }
@@ -174,16 +288,64 @@ impl Csr {
         dist
     }
 
-    /// Check the graph is simple (no duplicate edges / self-loops).
-    fn assert_simple(&self) {
-        for i in 0..self.num_nodes() {
+    /// Check nodes `lo..hi` for duplicate edges and self-loops (simple
+    /// graph requirement). Returns the first violation as a message.
+    pub(crate) fn check_simple(&self, lo: usize, hi: usize) -> Result<(), String> {
+        let mut sorted: Vec<u32> = Vec::new();
+        for i in lo..hi {
             let nbrs = self.neighbors(i);
-            let mut sorted: Vec<u32> = nbrs.to_vec();
+            sorted.clear();
+            sorted.extend_from_slice(nbrs);
             sorted.sort_unstable();
             for w in sorted.windows(2) {
-                assert_ne!(w[0], w[1], "duplicate edge at node {i}");
+                if w[0] == w[1] {
+                    return Err(format!("duplicate edge at node {i}"));
+                }
             }
-            assert!(!nbrs.contains(&(i as u32)), "self-loop at node {i}");
+            if nbrs.contains(&(i as u32)) {
+                return Err(format!("self-loop at node {i}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Check the slot/edge cross-references of nodes `lo..hi` (bounds
+    /// included, so this is safe on untrusted data). Returns the first
+    /// inconsistency as a message.
+    pub(crate) fn check_consistent(&self, lo: usize, hi: usize) -> Result<(), String> {
+        let n = self.num_nodes();
+        let me = self.num_directed_edges();
+        for i in lo..hi {
+            for s in self.slots(i) {
+                let j = self.adj_node[s] as usize;
+                let out = self.adj_out[s] as usize;
+                let inn = self.adj_in[s] as usize;
+                if j >= n || out >= me || inn >= me || out ^ 1 != inn {
+                    return Err(format!("corrupt adjacency slot {s} at node {i}"));
+                }
+                if self.edge_src[out] as usize != i
+                    || self.edge_dst[out] as usize != j
+                    || self.edge_src[inn] as usize != j
+                    || self.edge_dst[inn] as usize != i
+                {
+                    return Err(format!("adjacency/endpoint mismatch at node {i} slot {s}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Panic unless the graph is simple, checking node ranges on `threads`
+    /// worker threads (errors are collected and re-raised on the caller's
+    /// thread so panic messages stay deterministic).
+    fn assert_simple(&self, threads: usize) {
+        let n = self.num_nodes();
+        let threads = threads.clamp(1, n.max(1));
+        let errors = run_workers(threads, |t| {
+            self.check_simple(t * n / threads, (t + 1) * n / threads).err()
+        });
+        if let Some(msg) = errors.into_iter().flatten().next() {
+            panic!("{msg}");
         }
     }
 
@@ -192,17 +354,8 @@ impl Csr {
         let n = self.num_nodes();
         let me = self.num_directed_edges();
         assert_eq!(self.offsets[n] as usize, me);
-        for i in 0..n {
-            for s in self.slots(i) {
-                let j = self.adj_node[s] as usize;
-                let out = self.adj_out[s];
-                let inn = self.adj_in[s];
-                assert_eq!(self.edge_src[out as usize] as usize, i);
-                assert_eq!(self.edge_dst[out as usize] as usize, j);
-                assert_eq!(self.edge_src[inn as usize] as usize, j);
-                assert_eq!(self.edge_dst[inn as usize] as usize, i);
-                assert_eq!(self.reverse(out), inn);
-            }
+        if let Err(msg) = self.check_consistent(0, n) {
+            panic!("{msg}");
         }
     }
 }
@@ -274,6 +427,16 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "duplicate edge")]
+    fn rejects_duplicate_parallel() {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(1, 0);
+        b.build_with_threads(2);
+    }
+
+    #[test]
     fn bfs_on_path() {
         let mut b = GraphBuilder::new(5);
         for i in 0..4 {
@@ -297,5 +460,48 @@ mod tests {
         let d = g.bfs_distances(1);
         assert_eq!(d[0], u32::MAX);
         assert_eq!(d[1], 0);
+    }
+
+    /// A messy multi-hub graph whose adjacency fill order actually
+    /// exercises the chunk-cursor math (hubs receive slots from many
+    /// chunks).
+    fn hub_builder() -> GraphBuilder {
+        let n = 97;
+        let mut b = GraphBuilder::with_edge_capacity(n, 4 * n);
+        for i in 1..n {
+            b.add_edge(0, i); // hub 0 touches every chunk
+            if i + 7 < n {
+                b.add_edge(i, i + 7);
+            }
+            if i % 3 == 0 && i + 1 < n {
+                b.add_edge(i, i + 1);
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn parallel_build_is_bit_identical() {
+        let reference = hub_builder().build_with_threads(1);
+        for threads in [2, 3, 8, 16] {
+            let par = hub_builder().build_with_threads(threads);
+            assert_eq!(par.offsets, reference.offsets, "threads={threads}");
+            assert_eq!(par.adj_node, reference.adj_node, "threads={threads}");
+            assert_eq!(par.adj_out, reference.adj_out, "threads={threads}");
+            assert_eq!(par.adj_in, reference.adj_in, "threads={threads}");
+            assert_eq!(par.edge_src, reference.edge_src, "threads={threads}");
+            assert_eq!(par.edge_dst, reference.edge_dst, "threads={threads}");
+            par.validate();
+        }
+    }
+
+    #[test]
+    fn builder_counts_edges_incrementally() {
+        let mut b = GraphBuilder::new(4);
+        assert_eq!(b.num_edges(), 0);
+        b.add_edge(0, 1);
+        b.add_edge(2, 3);
+        assert_eq!(b.num_edges(), 2);
+        assert_eq!(b.num_nodes(), 4);
     }
 }

@@ -4,15 +4,173 @@
 //! algorithm/thread-count sweep load the identical model (important for the
 //! paper's tables, where all algorithms must see the same random couplings).
 //!
-//! Format (little-endian): magic `RBPM`, version, name, node count, domains,
-//! node factors, undirected edge list with pool indices, factor pool.
+//! Two on-disk formats share the `RBPM` magic:
+//!
+//! * **v1** (frozen compat arm): a streamed scalar-at-a-time layout —
+//!   magic, version, name, domains, node factors, undirected edge list
+//!   with pool indices, factor pool. Simple and portable, but it re-runs
+//!   graph construction on load and moves one scalar per `Read` call, so
+//!   it is kept only so old files stay readable.
+//! * **v2** (default): a flat *section* layout sized for 100M-edge
+//!   models. A 64-byte header (counts) is followed by a 15-entry section
+//!   table (offset, byte length, checksum per section) and then the
+//!   sections themselves, each 64-byte-aligned: the CSR arrays, domains,
+//!   node factors, factor pool, and message offsets — exactly the vectors
+//!   an [`Mrf`] holds in memory. Saving is one bulk `write_all` per
+//!   section; loading is `read_exact_at` of 4 MiB chunks fanned out over
+//!   worker threads straight into the destination vectors, so a load is
+//!   a handful of large reads instead of hundreds of millions of tiny
+//!   ones, and no graph rebuild happens at all.
+//!
+//! Integrity: each section carries a checksum computed per 1 MiB block
+//! and combined with a commutative `wrapping_add`, so parallel loaders
+//! verify blocks in whatever order their chunks arrive and still compare
+//! against the same value the (serial or parallel) writer produced. All
+//! length fields are validated against the header counts *and* the real
+//! file size before any allocation — a hostile length field produces a
+//! clean error, never an OOM-sized `Vec` or an out-of-bounds read.
+//!
+//! v2 files are little-endian (the byte-cast bulk path writes native
+//! words); big-endian hosts get a clean refusal rather than silent
+//! garbage.
 
-use super::{FactorPool, GraphBuilder, Mrf, NodeFactors};
+use super::{Csr, FactorPool, FactorRef, GraphBuilder, Mrf, NodeFactors, MAX_DOMAIN};
+use crate::coordinator::run_workers;
+use crate::util::cold_path_threads;
 use anyhow::{bail, Context, Result};
+use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
+use std::os::unix::fs::FileExt;
 
 const MAGIC: &[u8; 4] = b"RBPM";
-const VERSION: u32 = 1;
+const VERSION_V1: u32 = 1;
+const VERSION_V2: u32 = 2;
+
+/// Section checksum block granularity. Checksums combine across blocks
+/// with `wrapping_add`, so any partition of a section into block-aligned
+/// chunks verifies to the same value.
+const BLOCK: usize = 1 << 20;
+/// Parallel-read chunk size (a multiple of [`BLOCK`], so no checksum
+/// block ever straddles two chunks).
+const CHUNK: usize = 4 << 20;
+/// Section payload alignment.
+const ALIGN: u64 = 64;
+/// Hard ceiling on any count field read from a file; combined with the
+/// offset+length ≤ file-size check this bounds every allocation by the
+/// actual file size.
+const MAX_COUNT: u64 = 1 << 33;
+/// Model names are human-readable labels; anything larger is corruption.
+const MAX_NAME: u64 = 1 << 16;
+
+const SECTION_COUNT: usize = 15;
+const SECTION_NAMES: [&str; SECTION_COUNT] = [
+    "name",
+    "domain",
+    "csr_offsets",
+    "adj_node",
+    "adj_out",
+    "adj_in",
+    "edge_src",
+    "edge_dst",
+    "nf_offsets",
+    "nf_data",
+    "edge_pool_index",
+    "pool_offsets",
+    "pool_shapes",
+    "pool_data",
+    "msg_offset",
+];
+
+const HEADER_BYTES: u64 = 64;
+const TABLE_BYTES: u64 = (SECTION_COUNT * 24) as u64;
+/// First section offset: header + table rounded up to [`ALIGN`].
+const FIRST_SECTION: u64 = (HEADER_BYTES + TABLE_BYTES).div_ceil(ALIGN) * ALIGN;
+
+fn align64(x: u64) -> u64 {
+    x.div_ceil(ALIGN) * ALIGN
+}
+
+/// Marker for types whose in-memory bytes are their on-disk bytes (any
+/// bit pattern is a valid value, no padding, little-endian host).
+trait Pod: Copy + Send + Sync {}
+impl Pod for u32 {}
+impl Pod for f64 {}
+
+fn bytes_of<T: Pod>(v: &[T]) -> &[u8] {
+    // SAFETY: `Pod` types have no padding and no invalid bit patterns;
+    // the returned slice covers exactly the elements of `v`.
+    unsafe { std::slice::from_raw_parts(v.as_ptr().cast(), std::mem::size_of_val(v)) }
+}
+
+fn bytes_of_mut<T: Pod>(v: &mut [T]) -> &mut [u8] {
+    // SAFETY: as in `bytes_of`; additionally any byte pattern written
+    // through this view leaves `v`'s elements valid (Pod contract).
+    unsafe { std::slice::from_raw_parts_mut(v.as_mut_ptr().cast(), std::mem::size_of_val(v)) }
+}
+
+/// FNV-style hash of one checksum block, seeded by the block's index so
+/// swapped blocks are detected despite the commutative combine.
+fn block_hash(block_index: u64, bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ block_index.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    let mut words = bytes.chunks_exact(8);
+    for w in words.by_ref() {
+        h = (h ^ u64::from_le_bytes(w.try_into().unwrap())).wrapping_mul(0x100_0000_01b3);
+    }
+    let rem = words.remainder();
+    if !rem.is_empty() {
+        let mut w = [0u8; 8];
+        w[..rem.len()].copy_from_slice(rem);
+        h = (h ^ u64::from_le_bytes(w)).wrapping_mul(0x100_0000_01b3);
+    }
+    h ^ bytes.len() as u64
+}
+
+/// Whole-section checksum: `wrapping_add` of per-block hashes. Runs
+/// blocks on the cold-path thread pool when the section is large.
+fn checksum_bytes(bytes: &[u8]) -> u64 {
+    let nblocks = bytes.len().div_ceil(BLOCK);
+    let threads = cold_path_threads(bytes.len() / 64).min(nblocks.max(1));
+    let hash_range = |lo: usize, hi: usize| {
+        let mut s = 0u64;
+        for b in lo..hi {
+            let end = ((b + 1) * BLOCK).min(bytes.len());
+            s = s.wrapping_add(block_hash(b as u64, &bytes[b * BLOCK..end]));
+        }
+        s
+    };
+    if threads <= 1 {
+        return hash_range(0, nblocks);
+    }
+    run_workers(threads, |t| hash_range(t * nblocks / threads, (t + 1) * nblocks / threads))
+        .into_iter()
+        .fold(0u64, u64::wrapping_add)
+}
+
+fn u64_at(b: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(b[off..off + 8].try_into().unwrap())
+}
+
+/// Run a range-check over `items` on `threads` workers; the first failure
+/// (in range order) becomes an error.
+fn par_check(
+    threads: usize,
+    items: usize,
+    check: impl Fn(usize, usize) -> Result<(), String> + Sync,
+) -> Result<()> {
+    if items == 0 {
+        return Ok(());
+    }
+    let threads = threads.clamp(1, items);
+    let errs = run_workers(threads, |t| check(t * items / threads, (t + 1) * items / threads).err());
+    if let Some(e) = errs.into_iter().flatten().next() {
+        bail!("corrupt model: {e}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// v1: streamed scalar codec (frozen compat arm)
+// ---------------------------------------------------------------------------
 
 struct Writer<W: Write>(W);
 
@@ -89,11 +247,11 @@ impl<R: Read> Reader<R> {
     }
 }
 
-/// Serialize an MRF to a writer.
+/// Serialize an MRF to a writer in the legacy v1 stream format.
 pub fn write_mrf<W: Write>(mrf: &Mrf, w: W) -> Result<()> {
     let mut w = Writer(BufWriter::new(w));
     w.0.write_all(MAGIC)?;
-    w.u32(VERSION)?;
+    w.u32(VERSION_V1)?;
     w.bytes(mrf.name.as_bytes())?;
 
     let n = mrf.num_nodes();
@@ -127,7 +285,7 @@ pub fn write_mrf<W: Write>(mrf: &Mrf, w: W) -> Result<()> {
     Ok(())
 }
 
-/// Deserialize an MRF from a reader.
+/// Deserialize an MRF from a v1 stream (magic + version included).
 pub fn read_mrf<R: Read>(r: R) -> Result<Mrf> {
     let mut r = Reader(BufReader::new(r));
     let mut magic = [0u8; 4];
@@ -136,8 +294,8 @@ pub fn read_mrf<R: Read>(r: R) -> Result<Mrf> {
         bail!("not an RBPM file");
     }
     let version = r.u32()?;
-    if version != VERSION {
-        bail!("unsupported RBPM version {version}");
+    if version != VERSION_V1 {
+        bail!("unsupported RBPM version {version} in v1 stream reader");
     }
     let name = String::from_utf8(r.bytes()?).context("bad name")?;
 
@@ -163,6 +321,12 @@ pub fn read_mrf<R: Read>(r: R) -> Result<Mrf> {
         let a = r.u32()?;
         let b = r.u32()?;
         let p = r.u32()?;
+        if a as usize >= n || b as usize >= n {
+            bail!("edge endpoint out of range");
+        }
+        if a == b {
+            bail!("corrupt model: self-loop at node {a}");
+        }
         gb.add_edge(a as usize, b as usize);
         edge_pool_index.push(p);
     }
@@ -189,35 +353,458 @@ pub fn read_mrf<R: Read>(r: R) -> Result<Mrf> {
     ))
 }
 
-/// Save to a file path.
-pub fn save(mrf: &Mrf, path: &str) -> Result<()> {
-    let f = std::fs::File::create(path).with_context(|| format!("creating {path}"))?;
-    write_mrf(mrf, f)
+// ---------------------------------------------------------------------------
+// v2: sectioned bulk format
+// ---------------------------------------------------------------------------
+
+/// Serialize an MRF to a writer in the sectioned v2 format; returns the
+/// total bytes written.
+pub fn write_mrf_v2<W: Write>(mrf: &Mrf, mut w: W) -> Result<u64> {
+    #[cfg(target_endian = "big")]
+    bail!("RBPM v2 files are little-endian only");
+
+    let n = mrf.num_nodes() as u64;
+    let m = (mrf.num_messages() / 2) as u64;
+    let epi: Vec<u32> =
+        (0..m as usize).map(|k| mrf.edge_factor[2 * k].pool_index() as u32).collect();
+    let entries = mrf.pool.entries_raw();
+    let pool_offsets: Vec<u32> = entries.iter().map(|&(o, _, _)| o).collect();
+    let pool_shapes: Vec<u32> =
+        entries.iter().map(|&(_, r, c)| ((r as u32) << 16) | c as u32).collect();
+
+    let sections: [&[u8]; SECTION_COUNT] = [
+        mrf.name.as_bytes(),
+        bytes_of(&mrf.domain),
+        bytes_of(&mrf.graph.offsets),
+        bytes_of(&mrf.graph.adj_node),
+        bytes_of(&mrf.graph.adj_out),
+        bytes_of(&mrf.graph.adj_in),
+        bytes_of(&mrf.graph.edge_src),
+        bytes_of(&mrf.graph.edge_dst),
+        bytes_of(mrf.node_factors.offsets_raw()),
+        bytes_of(mrf.node_factors.data_raw()),
+        bytes_of(&epi),
+        bytes_of(&pool_offsets),
+        bytes_of(&pool_shapes),
+        bytes_of(mrf.pool.data_raw()),
+        bytes_of(&mrf.msg_offset),
+    ];
+
+    // Section table: aligned offsets, exact byte lengths, block checksums.
+    let mut table = [(0u64, 0u64, 0u64); SECTION_COUNT];
+    let mut pos = FIRST_SECTION;
+    for (i, s) in sections.iter().enumerate() {
+        let off = align64(pos);
+        table[i] = (off, s.len() as u64, checksum_bytes(s));
+        pos = off + s.len() as u64;
+    }
+    let total = pos;
+
+    let mut cur = 0u64;
+    let put = |w: &mut W, b: &[u8], cur: &mut u64| -> Result<()> {
+        w.write_all(b)?;
+        *cur += b.len() as u64;
+        Ok(())
+    };
+    let pad_to = |w: &mut W, target: u64, cur: &mut u64| -> Result<()> {
+        debug_assert!(target >= *cur);
+        let zeros = [0u8; 64];
+        let mut gap = (target - *cur) as usize;
+        while gap > 0 {
+            let k = gap.min(zeros.len());
+            w.write_all(&zeros[..k])?;
+            gap -= k;
+        }
+        *cur = target;
+        Ok(())
+    };
+
+    put(&mut w, MAGIC, &mut cur)?;
+    put(&mut w, &VERSION_V2.to_le_bytes(), &mut cur)?;
+    for v in [
+        n,
+        m,
+        mrf.pool.len() as u64,
+        mrf.node_factors.data_raw().len() as u64,
+        mrf.pool.data_len() as u64,
+        mrf.total_msg_len as u64,
+    ] {
+        put(&mut w, &v.to_le_bytes(), &mut cur)?;
+    }
+    put(&mut w, &[0u8; 8], &mut cur)?; // reserved
+    debug_assert_eq!(cur, HEADER_BYTES);
+    for &(off, len, sum) in &table {
+        put(&mut w, &off.to_le_bytes(), &mut cur)?;
+        put(&mut w, &len.to_le_bytes(), &mut cur)?;
+        put(&mut w, &sum.to_le_bytes(), &mut cur)?;
+    }
+    for (i, s) in sections.iter().enumerate() {
+        pad_to(&mut w, table[i].0, &mut cur)?;
+        put(&mut w, s, &mut cur)?; // one bulk write per section
+    }
+    debug_assert_eq!(cur, total);
+    w.flush()?;
+    Ok(total)
 }
 
-/// Load from a file path.
+/// One parallel-read work item: a block-aligned chunk of a section.
+struct ChunkTask<'a> {
+    sect: usize,
+    file_off: u64,
+    first_block: u64,
+    buf: &'a mut [u8],
+}
+
+/// Fill the destination buffers from `f` with `threads` workers and
+/// return the per-section checksums of what was read.
+fn read_sections(
+    f: &File,
+    dests: Vec<(usize, u64, &mut [u8])>,
+    threads: usize,
+) -> Result<[u64; SECTION_COUNT]> {
+    let mut tasks: Vec<ChunkTask> = Vec::new();
+    for (sect, off, buf) in dests {
+        let mut pos = 0usize;
+        for piece in buf.chunks_mut(CHUNK) {
+            let len = piece.len();
+            tasks.push(ChunkTask {
+                sect,
+                file_off: off + pos as u64,
+                first_block: (pos / BLOCK) as u64,
+                buf: piece,
+            });
+            pos += len;
+        }
+    }
+
+    let run_tasks = |tasks: Vec<ChunkTask>| -> Result<[u64; SECTION_COUNT], String> {
+        let mut sums = [0u64; SECTION_COUNT];
+        for t in tasks {
+            f.read_exact_at(t.buf, t.file_off)
+                .map_err(|e| format!("reading section {}: {e}", SECTION_NAMES[t.sect]))?;
+            for (b, blk) in t.buf.chunks(BLOCK).enumerate() {
+                sums[t.sect] = sums[t.sect].wrapping_add(block_hash(t.first_block + b as u64, blk));
+            }
+        }
+        Ok(sums)
+    };
+
+    let partials: Vec<Result<[u64; SECTION_COUNT], String>> = if threads <= 1 {
+        vec![run_tasks(tasks)]
+    } else {
+        let mut per_thread: Vec<Vec<ChunkTask>> = (0..threads).map(|_| Vec::new()).collect();
+        for (i, t) in tasks.into_iter().enumerate() {
+            per_thread[i % threads].push(t);
+        }
+        std::thread::scope(|s| {
+            let handles: Vec<_> = per_thread
+                .into_iter()
+                .map(|list| s.spawn(|| run_tasks(list)))
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("io worker panicked")).collect()
+        })
+    };
+
+    let mut sums = [0u64; SECTION_COUNT];
+    for p in partials {
+        let part = p.map_err(|e| anyhow::anyhow!(e))?;
+        for (a, b) in sums.iter_mut().zip(part) {
+            *a = a.wrapping_add(b);
+        }
+    }
+    Ok(sums)
+}
+
+/// Deserialize a v2 file via positioned bulk reads on `threads` workers,
+/// validating section bounds and checksums before trusting any content.
+fn read_mrf_v2(f: &File, file_len: u64, threads: usize) -> Result<Mrf> {
+    #[cfg(target_endian = "big")]
+    bail!("RBPM v2 files are little-endian only");
+
+    let mut head = [0u8; HEADER_BYTES as usize];
+    f.read_exact_at(&mut head, 0).context("reading v2 header")?;
+    if &head[0..4] != MAGIC {
+        bail!("not an RBPM file");
+    }
+    let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
+    if version != VERSION_V2 {
+        bail!("unsupported RBPM version {version}");
+    }
+    let n = u64_at(&head, 8);
+    let m = u64_at(&head, 16);
+    let pool_len = u64_at(&head, 24);
+    let nf_len = u64_at(&head, 32);
+    let pool_data_len = u64_at(&head, 40);
+    let total_msg_len = u64_at(&head, 48);
+    for (what, v) in [
+        ("node count", n),
+        ("edge count", m),
+        ("pool entry count", pool_len),
+        ("node factor length", nf_len),
+        ("pool data length", pool_data_len),
+        ("message array length", total_msg_len),
+    ] {
+        if v > MAX_COUNT {
+            bail!("corrupt file: oversized {what} ({v})");
+        }
+    }
+    if n > u32::MAX as u64 || 2 * m > u32::MAX as u64 || total_msg_len > u32::MAX as u64 {
+        bail!("corrupt file: counts exceed u32 indexing");
+    }
+    if pool_data_len > u32::MAX as u64 {
+        bail!("corrupt file: pool data exceeds u32 offsets");
+    }
+
+    let mut table_bytes = [0u8; TABLE_BYTES as usize];
+    f.read_exact_at(&mut table_bytes, HEADER_BYTES).context("reading v2 section table")?;
+    let mut table = [(0u64, 0u64, 0u64); SECTION_COUNT];
+    for (i, t) in table.iter_mut().enumerate() {
+        let b = 24 * i;
+        *t = (u64_at(&table_bytes, b), u64_at(&table_bytes, b + 8), u64_at(&table_bytes, b + 16));
+    }
+
+    // Expected byte length per section, from the header counts (the name's
+    // length is only bounded, not derived).
+    let me = 2 * m; // directed edges
+    let expected: [Option<u64>; SECTION_COUNT] = [
+        None,
+        Some(4 * n),
+        Some(4 * (n + 1)),
+        Some(4 * me),
+        Some(4 * me),
+        Some(4 * me),
+        Some(4 * me),
+        Some(4 * me),
+        Some(4 * (n + 1)),
+        Some(8 * nf_len),
+        Some(4 * m),
+        Some(4 * pool_len),
+        Some(4 * pool_len),
+        Some(8 * pool_data_len),
+        Some(4 * me),
+    ];
+    for (i, &(off, len, _)) in table.iter().enumerate() {
+        let name = SECTION_NAMES[i];
+        match expected[i] {
+            Some(want) if len != want => {
+                bail!("section {name} length mismatch: header implies {want} bytes, table says {len}")
+            }
+            None if len > MAX_NAME => bail!("section {name} oversized ({len} bytes)"),
+            _ => {}
+        }
+        // `len ≤ file_len` first, so `file_len - len` cannot underflow.
+        if off < FIRST_SECTION || len > file_len || off > file_len - len {
+            bail!("section {name} out of bounds (offset {off}, length {len}, file {file_len})");
+        }
+    }
+
+    // Allocate destinations (every size is now proven ≤ the file size)
+    // and pull the sections in parallel chunks.
+    let (n, m, me) = (n as usize, m as usize, me as usize);
+    let mut name_bytes = vec![0u8; table[0].1 as usize];
+    let mut domain = vec![0u32; n];
+    let mut offsets = vec![0u32; n + 1];
+    let mut adj_node = vec![0u32; me];
+    let mut adj_out = vec![0u32; me];
+    let mut adj_in = vec![0u32; me];
+    let mut edge_src = vec![0u32; me];
+    let mut edge_dst = vec![0u32; me];
+    let mut nf_offsets = vec![0u32; n + 1];
+    let mut nf_data = vec![0f64; nf_len as usize];
+    let mut epi = vec![0u32; m];
+    let mut pool_offsets = vec![0u32; pool_len as usize];
+    let mut pool_shapes = vec![0u32; pool_len as usize];
+    let mut pool_data = vec![0f64; pool_data_len as usize];
+    let mut msg_offset = vec![0u32; me];
+
+    let dests: Vec<(usize, u64, &mut [u8])> = vec![
+        (0, table[0].0, &mut name_bytes[..]),
+        (1, table[1].0, bytes_of_mut(&mut domain)),
+        (2, table[2].0, bytes_of_mut(&mut offsets)),
+        (3, table[3].0, bytes_of_mut(&mut adj_node)),
+        (4, table[4].0, bytes_of_mut(&mut adj_out)),
+        (5, table[5].0, bytes_of_mut(&mut adj_in)),
+        (6, table[6].0, bytes_of_mut(&mut edge_src)),
+        (7, table[7].0, bytes_of_mut(&mut edge_dst)),
+        (8, table[8].0, bytes_of_mut(&mut nf_offsets)),
+        (9, table[9].0, bytes_of_mut(&mut nf_data)),
+        (10, table[10].0, bytes_of_mut(&mut epi)),
+        (11, table[11].0, bytes_of_mut(&mut pool_offsets)),
+        (12, table[12].0, bytes_of_mut(&mut pool_shapes)),
+        (13, table[13].0, bytes_of_mut(&mut pool_data)),
+        (14, table[14].0, bytes_of_mut(&mut msg_offset)),
+    ];
+    let sums = read_sections(f, dests, threads)?;
+    for (i, (&got, &(_, _, want))) in sums.iter().zip(table.iter()).enumerate() {
+        if got != want {
+            bail!("checksum mismatch in section {}", SECTION_NAMES[i]);
+        }
+    }
+
+    // Semantic validation, parallel over nodes/edges. Everything the
+    // engines index by is proven in-bounds here, so downstream code can
+    // trust the model as if it came from a builder.
+    let name = String::from_utf8(name_bytes).context("bad model name")?;
+    par_check(threads, n, |lo, hi| {
+        for i in lo..hi {
+            let d = domain[i] as usize;
+            if d == 0 || d > MAX_DOMAIN {
+                return Err(format!("node {i}: domain {d} out of range"));
+            }
+            if offsets[i] > offsets[i + 1] {
+                return Err(format!("node {i}: CSR offsets not monotone"));
+            }
+        }
+        Ok(())
+    })?;
+    if offsets.first() != Some(&0) || offsets[n] as usize != me {
+        bail!("corrupt model: CSR offsets do not cover the edge list");
+    }
+
+    let graph = Csr { offsets, adj_node, adj_out, adj_in, edge_src, edge_dst };
+    par_check(threads, n, |lo, hi| graph.check_consistent(lo, hi))?;
+    par_check(threads, n, |lo, hi| graph.check_simple(lo, hi))?;
+
+    let node_factors =
+        NodeFactors::from_raw(nf_offsets, nf_data).map_err(|e| anyhow::anyhow!("corrupt model: {e}"))?;
+    par_check(threads, n, |lo, hi| {
+        for i in lo..hi {
+            if node_factors.domain(i) != domain[i] as usize {
+                return Err(format!("node {i}: factor width does not match domain"));
+            }
+        }
+        Ok(())
+    })?;
+
+    let entries: Vec<(u32, u16, u16)> = pool_offsets
+        .iter()
+        .zip(&pool_shapes)
+        .map(|(&o, &s)| (o, (s >> 16) as u16, (s & 0xffff) as u16))
+        .collect();
+    let pool =
+        FactorPool::from_raw(pool_data, entries).map_err(|e| anyhow::anyhow!("corrupt model: {e}"))?;
+
+    let total = total_msg_len as usize;
+    par_check(threads, m, |lo, hi| {
+        for k in lo..hi {
+            let pi = epi[k] as usize;
+            if pi >= pool.len() {
+                return Err(format!("edge {k}: pool index {pi} out of range"));
+            }
+            let (r, c) = pool.shape(pi);
+            let (src, dst) = (graph.edge_src[2 * k] as usize, graph.edge_dst[2 * k] as usize);
+            if r != domain[src] as usize || c != domain[dst] as usize {
+                return Err(format!("edge {k}: factor shape does not match endpoint domains"));
+            }
+            for e in [2 * k, 2 * k + 1] {
+                let next =
+                    if e + 1 < 2 * m { msg_offset[e + 1] as usize } else { total };
+                let want = domain[graph.edge_dst[e] as usize] as usize;
+                if next < msg_offset[e] as usize || next - msg_offset[e] as usize != want {
+                    return Err(format!("edge {e}: message offset stride mismatch"));
+                }
+            }
+        }
+        Ok(())
+    })?;
+    if m > 0 && msg_offset[0] != 0 {
+        bail!("corrupt model: message offsets do not start at 0");
+    }
+    if m == 0 && total != 0 {
+        bail!("corrupt model: message length without edges");
+    }
+
+    // Directed-edge factor refs (even = stored orientation, odd =
+    // transposed), built in parallel — the one remaining O(edges) fill.
+    let mut edge_factor = vec![FactorRef::new(0, false); me];
+    if me > 0 {
+        let per = (m.div_ceil(threads.max(1))).max(1) * 2;
+        std::thread::scope(|s| {
+            for (c, chunk) in edge_factor.chunks_mut(per).enumerate() {
+                let epi = &epi;
+                s.spawn(move || {
+                    for (j, slot) in chunk.iter_mut().enumerate() {
+                        let e = c * per + j;
+                        *slot = FactorRef::new(epi[e / 2], e % 2 == 1);
+                    }
+                });
+            }
+        });
+    }
+
+    Ok(Mrf { graph, domain, node_factors, edge_factor, pool, msg_offset, total_msg_len: total, name })
+}
+
+// ---------------------------------------------------------------------------
+// File-level entry points
+// ---------------------------------------------------------------------------
+
+/// Save to a file path in the default (v2 sectioned) format; returns the
+/// file size in bytes.
+pub fn save(mrf: &Mrf, path: &str) -> Result<u64> {
+    let f = File::create(path).with_context(|| format!("creating {path}"))?;
+    // Header/table writes are small, so buffer them; section payloads
+    // pass through `BufWriter` as single large writes.
+    write_mrf_v2(mrf, BufWriter::new(f))
+}
+
+/// Save to a file path in the legacy v1 stream format; returns the file
+/// size in bytes. The scalar-at-a-time codec *requires* buffering here —
+/// handing it a raw `File` costs one syscall per scalar.
+pub fn save_v1(mrf: &Mrf, path: &str) -> Result<u64> {
+    let f = File::create(path).with_context(|| format!("creating {path}"))?;
+    write_mrf(mrf, BufWriter::new(f))?;
+    Ok(std::fs::metadata(path).with_context(|| format!("sizing {path}"))?.len())
+}
+
+/// Load from a file path, auto-detecting the format version, with an
+/// automatic cold-path thread count for v2 parallel reads.
 pub fn load(path: &str) -> Result<Mrf> {
-    let f = std::fs::File::open(path).with_context(|| format!("opening {path}"))?;
-    read_mrf(f)
+    let len = std::fs::metadata(path).with_context(|| format!("opening {path}"))?.len();
+    load_with_threads(path, cold_path_threads((len / 64) as usize))
+}
+
+/// Load from a file path, auto-detecting the format version; v2 files
+/// are read with `threads` positioned-read workers.
+pub fn load_with_threads(path: &str, threads: usize) -> Result<Mrf> {
+    let f = File::open(path).with_context(|| format!("opening {path}"))?;
+    let file_len = f.metadata().with_context(|| format!("sizing {path}"))?.len();
+    let mut head = [0u8; 8];
+    f.read_exact_at(&mut head, 0).with_context(|| format!("{path}: file too short"))?;
+    if &head[0..4] != MAGIC {
+        bail!("{path}: not an RBPM file");
+    }
+    match u32::from_le_bytes(head[4..8].try_into().unwrap()) {
+        // Positioned reads left the cursor at 0, so the stream reader
+        // (explicitly buffered — the legacy codec reads one scalar at a
+        // time) starts from the magic again.
+        VERSION_V1 => read_mrf(BufReader::new(f)).with_context(|| format!("loading {path} (v1)")),
+        VERSION_V2 => {
+            read_mrf_v2(&f, file_len, threads.max(1)).with_context(|| format!("loading {path} (v2)"))
+        }
+        v => bail!("{path}: unsupported RBPM version {v}"),
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::builders;
     use crate::configio::ModelSpec;
+    use crate::model::builders;
 
-    fn roundtrip(spec: &ModelSpec) {
-        let m = builders::build(spec, 5);
-        let mut buf = Vec::new();
-        write_mrf(&m, &mut buf).unwrap();
-        let back = read_mrf(&buf[..]).unwrap();
+    fn assert_models_equal(m: &Mrf, back: &Mrf) {
         assert_eq!(back.name, m.name);
         assert_eq!(back.num_nodes(), m.num_nodes());
         assert_eq!(back.num_messages(), m.num_messages());
         assert_eq!(back.domain, m.domain);
+        assert_eq!(back.graph.offsets, m.graph.offsets);
         assert_eq!(back.graph.adj_node, m.graph.adj_node);
+        assert_eq!(back.graph.adj_out, m.graph.adj_out);
+        assert_eq!(back.graph.adj_in, m.graph.adj_in);
+        assert_eq!(back.graph.edge_src, m.graph.edge_src);
+        assert_eq!(back.graph.edge_dst, m.graph.edge_dst);
         assert_eq!(back.msg_offset, m.msg_offset);
+        assert_eq!(back.total_msg_len, m.total_msg_len);
         for i in 0..m.num_nodes() {
             assert_eq!(back.node_factors.of(i), m.node_factors.of(i));
         }
@@ -232,6 +819,14 @@ mod tests {
                 }
             }
         }
+    }
+
+    fn roundtrip(spec: &ModelSpec) {
+        let m = builders::build(spec, 5);
+        let mut buf = Vec::new();
+        write_mrf(&m, &mut buf).unwrap();
+        let back = read_mrf(&buf[..]).unwrap();
+        assert_models_equal(&m, &back);
     }
 
     #[test]
@@ -265,12 +860,96 @@ mod tests {
     }
 
     #[test]
-    fn file_roundtrip() {
+    fn file_roundtrip_v2() {
         let m = builders::build(&ModelSpec::Potts { n: 3, q: 3 }, 2);
-        let path = "/tmp/rbp_io_test.rbpm";
-        save(&m, path).unwrap();
+        let path = "/tmp/rbp_io_test_v2.rbpm";
+        let bytes = save(&m, path).unwrap();
+        assert_eq!(bytes, std::fs::metadata(path).unwrap().len());
+        for threads in [1, 2, 8] {
+            let back = load_with_threads(path, threads).unwrap();
+            assert_models_equal(&m, &back);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn file_roundtrip_v1() {
+        let m = builders::build(&ModelSpec::Potts { n: 3, q: 3 }, 2);
+        let path = "/tmp/rbp_io_test_v1.rbpm";
+        let bytes = save_v1(&m, path).unwrap();
+        assert_eq!(bytes, std::fs::metadata(path).unwrap().len());
         let back = load(path).unwrap();
-        assert_eq!(back.num_messages(), m.num_messages());
+        assert_models_equal(&m, &back);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn v2_sections_are_aligned() {
+        let m = builders::build(&ModelSpec::Ising { n: 4 }, 3);
+        let path = "/tmp/rbp_io_test_align.rbpm";
+        save(&m, path).unwrap();
+        let bytes = std::fs::read(path).unwrap();
+        assert_eq!(&bytes[0..4], MAGIC);
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), VERSION_V2);
+        for i in 0..SECTION_COUNT {
+            let off = u64_at(&bytes, (HEADER_BYTES as usize) + 24 * i);
+            assert_eq!(off % ALIGN, 0, "section {} misaligned", SECTION_NAMES[i]);
+            assert!(off >= FIRST_SECTION);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn v2_rejects_unknown_version() {
+        let m = builders::build(&ModelSpec::Tree { n: 7 }, 1);
+        let path = "/tmp/rbp_io_test_ver.rbpm";
+        save(&m, path).unwrap();
+        let mut bytes = std::fs::read(path).unwrap();
+        bytes[4..8].copy_from_slice(&99u32.to_le_bytes());
+        std::fs::write(path, &bytes).unwrap();
+        let err = load(path).unwrap_err().to_string();
+        assert!(err.contains("version 99"), "unexpected error: {err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn v2_rejects_checksum_corruption() {
+        let m = builders::build(&ModelSpec::Ising { n: 4 }, 3);
+        let path = "/tmp/rbp_io_test_sum.rbpm";
+        save(&m, path).unwrap();
+        let mut bytes = std::fs::read(path).unwrap();
+        // Flip one payload byte in the last section (msg_offset).
+        let off = u64_at(&bytes, (HEADER_BYTES as usize) + 24 * (SECTION_COUNT - 1)) as usize;
+        bytes[off] ^= 0x40;
+        std::fs::write(path, &bytes).unwrap();
+        let err = load(path).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "unexpected error: {err:#}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn v2_rejects_hostile_length_without_allocating() {
+        let m = builders::build(&ModelSpec::Tree { n: 7 }, 1);
+        let path = "/tmp/rbp_io_test_len.rbpm";
+        save(&m, path).unwrap();
+        let mut bytes = std::fs::read(path).unwrap();
+        // Claim ~u64::MAX nodes in the header: must fail the count guard,
+        // not attempt a multi-exabyte allocation.
+        bytes[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(path, &bytes).unwrap();
+        let err = format!("{:#}", load(path).unwrap_err());
+        assert!(err.contains("oversized") || err.contains("mismatch"), "unexpected error: {err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn v2_rejects_truncated_file() {
+        let m = builders::build(&ModelSpec::Ising { n: 4 }, 3);
+        let path = "/tmp/rbp_io_test_trunc.rbpm";
+        save(&m, path).unwrap();
+        let bytes = std::fs::read(path).unwrap();
+        std::fs::write(path, &bytes[..bytes.len() * 2 / 3]).unwrap();
+        assert!(load(path).is_err());
         std::fs::remove_file(path).ok();
     }
 }

@@ -6,7 +6,25 @@ use crate::configio::{Json, RunConfig};
 use crate::engines::{build_engine, Engine, EngineStats};
 use crate::exec::RunObserver;
 use crate::model::{builders, EvidenceDelta, Mrf};
+use crate::util::Timer;
 use anyhow::Result;
+
+/// Cold-path cost of one run — everything that happens before the solve
+/// loop starts. A run either builds its model in process (`build_secs`)
+/// or loads it from disk (`load_secs` + `model_bytes`); the other leg is
+/// zero, as are all legs on pre-built models handed straight to
+/// [`run_on_model`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PrepStats {
+    /// Seconds spent building the model in process.
+    pub build_secs: f64,
+    /// Seconds spent loading the model from disk.
+    pub load_secs: f64,
+    /// Seconds spent initializing the message state.
+    pub init_secs: f64,
+    /// Serialized model size on disk (bytes); zero for in-process builds.
+    pub model_bytes: u64,
+}
 
 /// Everything a caller needs after one run.
 pub struct RunReport {
@@ -18,6 +36,8 @@ pub struct RunReport {
     pub msgs: Messages,
     /// The configuration that produced this run.
     pub config: RunConfig,
+    /// Cold-path timings (model build/load, message init).
+    pub prep: PrepStats,
 }
 
 impl RunReport {
@@ -61,6 +81,10 @@ impl RunReport {
             ("tasks_touched", Json::Num(m.tasks_touched as f64)),
             ("msg_bytes_logical", Json::Num(m.msg_bytes_logical as f64)),
             ("msg_bytes_padded", Json::Num(m.msg_bytes_padded as f64)),
+            ("build_secs", Json::Num(self.prep.build_secs)),
+            ("load_secs", Json::Num(self.prep.load_secs)),
+            ("init_secs", Json::Num(self.prep.init_secs)),
+            ("model_bytes", Json::Num(self.prep.model_bytes as f64)),
             (
                 "updates_per_sec",
                 Json::Num(if self.stats.wall_secs > 0.0 {
@@ -78,11 +102,51 @@ impl RunReport {
     }
 }
 
+/// Resolve a model through the optional on-disk cache ("generate once,
+/// sweep many"): when `load_dir` holds this spec's
+/// [`cache_slug`](crate::configio::ModelSpec::cache_slug) file, load it
+/// (v1/v2 auto-detected, parallel chunked reads); otherwise build from
+/// the spec and, when `save_dir` is set, persist it as format v2 for the
+/// next sweep. The returned [`PrepStats`] carries whichever cold-path
+/// legs were exercised.
+pub fn obtain_model(
+    spec: &crate::configio::ModelSpec,
+    seed: u64,
+    load_dir: Option<&std::path::Path>,
+    save_dir: Option<&std::path::Path>,
+) -> Result<(Mrf, PrepStats)> {
+    use crate::model::io as model_io;
+    let mut prep = PrepStats::default();
+    let slug = spec.cache_slug(seed);
+    if let Some(dir) = load_dir {
+        let path = dir.join(&slug);
+        if path.exists() {
+            let path = path.to_string_lossy().into_owned();
+            let t = Timer::start();
+            let mrf = model_io::load(&path)?;
+            prep.load_secs = t.elapsed_secs();
+            prep.model_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+            return Ok((mrf, prep));
+        }
+    }
+    let t = Timer::start();
+    let mrf = builders::build(spec, seed);
+    prep.build_secs = t.elapsed_secs();
+    if let Some(dir) = save_dir {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(&slug).to_string_lossy().into_owned();
+        prep.model_bytes = model_io::save(&mrf, &path)?;
+    }
+    Ok((mrf, prep))
+}
+
 /// Build the model from `cfg`, run the configured engine on fresh uniform
-/// messages, and return the report.
+/// messages, and return the report (with `build_secs` recorded).
 pub fn run_config(cfg: &RunConfig) -> Result<RunReport> {
+    let t = Timer::start();
     let mrf = builders::build(&cfg.model, cfg.seed);
-    run_on_model(cfg, mrf)
+    let prep = PrepStats { build_secs: t.elapsed_secs(), ..Default::default() };
+    run_on_model_prepped(cfg, mrf, None, prep)
 }
 
 /// Run on a pre-built model (lets sweeps reuse one instance across
@@ -104,10 +168,26 @@ pub fn run_on_model_observed(
     mrf: Mrf,
     observer: Option<&dyn RunObserver>,
 ) -> Result<RunReport> {
+    run_on_model_prepped(cfg, mrf, observer, PrepStats::default())
+}
+
+/// Like [`run_on_model_observed`], threading through cold-path stats the
+/// caller already accrued (model build or disk-load time). Message-init
+/// time is measured here, and the run's counters are stamped with the
+/// model's on-disk size so it lands in BENCH cells.
+pub fn run_on_model_prepped(
+    cfg: &RunConfig,
+    mrf: Mrf,
+    observer: Option<&dyn RunObserver>,
+    mut prep: PrepStats,
+) -> Result<RunReport> {
+    let t = Timer::start();
     let msgs = build_messages(cfg, &mrf);
+    prep.init_secs = t.elapsed_secs();
     let engine = build_engine(&cfg.algorithm);
-    let stats = engine.run_observed(&mrf, &msgs, cfg, observer)?;
-    Ok(RunReport { stats, mrf, msgs, config: cfg.clone() })
+    let mut stats = engine.run_observed(&mrf, &msgs, cfg, observer)?;
+    stats.metrics.total.model_bytes = stats.metrics.total.model_bytes.max(prep.model_bytes);
+    Ok(RunReport { stats, mrf, msgs, config: cfg.clone(), prep })
 }
 
 /// Uniform message state laid out for the run described by `cfg`:

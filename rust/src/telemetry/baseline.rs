@@ -64,6 +64,19 @@ pub struct CellResult {
     /// Allocated (cache-line-padded) message-arena bytes, same scope;
     /// absent ⇒ 0.
     pub msg_bytes_padded: u64,
+    /// Cold path: seconds spent building the family's model in process
+    /// (amortized across the family's cells — the model is built once per
+    /// sweep). Absent in pre-coldpath baselines ⇒ 0.
+    pub build_secs: f64,
+    /// Cold path: seconds spent loading the model from disk (zero unless
+    /// the sweep ran against a `--load-model` file). Absent ⇒ 0.
+    pub load_secs: f64,
+    /// Cold path: message-state initialization seconds of the last
+    /// sample. Absent ⇒ 0.
+    pub init_secs: f64,
+    /// Cold path: serialized model size on disk in bytes (zero for
+    /// in-process builds). Absent ⇒ 0.
+    pub model_bytes: u64,
     /// Per-sample wall-clock seconds. For delta cells (`/delta` id
     /// suffix) these are the *warm* re-convergence times.
     pub wall_secs: Vec<f64>,
@@ -114,6 +127,12 @@ impl CellResult {
             ("precision", Json::Str(self.precision.clone())),
             ("msg_bytes_logical", Json::Num(self.msg_bytes_logical as f64)),
             ("msg_bytes_padded", Json::Num(self.msg_bytes_padded as f64)),
+            // Cold-path fields are emitted unconditionally (zero when the
+            // leg was not exercised) so schema consumers can grep for them.
+            ("build_secs", Json::Num(self.build_secs)),
+            ("load_secs", Json::Num(self.load_secs)),
+            ("init_secs", Json::Num(self.init_secs)),
+            ("model_bytes", Json::Num(self.model_bytes as f64)),
             ("wall_secs", Json::Arr(self.wall_secs.iter().map(|&t| Json::Num(t)).collect())),
             ("updates", Json::Arr(self.updates.iter().map(|&u| Json::Num(u)).collect())),
             // Delta-axis fields are emitted unconditionally (zero/empty on
@@ -178,6 +197,10 @@ impl CellResult {
                 .to_string(),
             msg_bytes_logical: v.get("msg_bytes_logical").and_then(Json::as_u64).unwrap_or(0),
             msg_bytes_padded: v.get("msg_bytes_padded").and_then(Json::as_u64).unwrap_or(0),
+            build_secs: v.get("build_secs").and_then(Json::as_f64).unwrap_or(0.0),
+            load_secs: v.get("load_secs").and_then(Json::as_f64).unwrap_or(0.0),
+            init_secs: v.get("init_secs").and_then(Json::as_f64).unwrap_or(0.0),
+            model_bytes: v.get("model_bytes").and_then(Json::as_u64).unwrap_or(0),
             wall_secs: arr("wall_secs")?,
             updates: arr("updates")?,
             scratch_wall_secs: if v.get("scratch_wall_secs").is_some() {
@@ -436,6 +459,10 @@ mod tests {
             precision: "f32".into(),
             msg_bytes_logical: 4096,
             msg_bytes_padded: 8192,
+            build_secs: 0.02,
+            load_secs: 0.0,
+            init_secs: 0.001,
+            model_bytes: 0,
             wall_secs: vec![secs, secs * 1.05, secs * 0.95],
             updates: vec![1000.0, 1010.0, 990.0],
             scratch_wall_secs: vec![secs * 4.0, secs * 4.2, secs * 3.8],
@@ -554,6 +581,29 @@ mod tests {
         assert_eq!(back.cells[0].precision, "f64", "pre-precision cells stored f64 arenas");
         assert_eq!(back.cells[0].msg_bytes_logical, 0);
         assert_eq!(back.cells[0].msg_bytes_padded, 0);
+        assert!(!compare(&b, &back, DEFAULT_TOLERANCE).unwrap().has_regression());
+    }
+
+    #[test]
+    fn pre_coldpath_cells_parse_as_zero() {
+        let b = baseline(vec![cell("relaxed_residual/p2", 0.5)]);
+        let mut j = b.to_json();
+        // Simulate a baseline written before the cold-path fields existed.
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Arr(cells)) = o.get_mut("cells") {
+                if let Json::Obj(c) = &mut cells[0] {
+                    c.remove("build_secs");
+                    c.remove("load_secs");
+                    c.remove("init_secs");
+                    c.remove("model_bytes");
+                }
+            }
+        }
+        let back = Baseline::from_json(&j).unwrap();
+        assert_eq!(back.cells[0].build_secs, 0.0);
+        assert_eq!(back.cells[0].load_secs, 0.0);
+        assert_eq!(back.cells[0].init_secs, 0.0);
+        assert_eq!(back.cells[0].model_bytes, 0);
         assert!(!compare(&b, &back, DEFAULT_TOLERANCE).unwrap().has_regression());
     }
 

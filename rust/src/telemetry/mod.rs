@@ -55,6 +55,16 @@
 //!                                       // cells carry the "/f64" suffix
 //!       "msg_bytes_logical": 16128,     // message-arena footprint gauges
 //!       "msg_bytes_padded": 32768,      // (live + lookahead; absent ⇒ 0)
+//!       "build_secs": 0.8,              // cold path: model build seconds
+//!                                       // (once per family sweep; absent
+//!                                       // in pre-coldpath baselines ⇒ 0)
+//!       "load_secs": 0.0,               // cold path: model disk-load
+//!                                       // seconds (absent ⇒ 0)
+//!       "init_secs": 0.002,             // cold path: message-state init
+//!                                       // seconds, last sample (absent ⇒ 0)
+//!       "model_bytes": 0,               // cold path: serialized model
+//!                                       // bytes on disk; 0 for in-process
+//!                                       // builds (absent ⇒ 0)
 //!       "wall_secs": [0.012, 0.011],    // one entry per sample; on
 //!                                       // "/delta" cells these are the
 //!                                       // warm re-convergence times
@@ -100,7 +110,7 @@ pub use baseline::{
 pub use trace::{Trace, TracePoint, TraceRecorder};
 
 use crate::configio::{AlgorithmSpec, Kernel, ModelSpec, PartitionSpec, Precision, RunConfig};
-use crate::model::{builders, EvidenceDelta};
+use crate::model::EvidenceDelta;
 use crate::run::run_on_model_observed;
 use anyhow::{bail, Result};
 use std::path::{Path, PathBuf};
@@ -144,6 +154,13 @@ pub struct BenchOpts {
     /// the gate stays red on re-runs until the regression is fixed (or the
     /// baseline is regenerated without `--check`).
     pub check: bool,
+    /// Model-cache directory consulted before building each family's
+    /// instance (`--load-model`): cached models are disk-loaded instead of
+    /// rebuilt, and cells record `load_secs`/`model_bytes` for that leg.
+    pub load_model: Option<PathBuf>,
+    /// Model-cache directory built instances are saved into
+    /// (`--save-model`, format v2) so later sweeps can `--load-model` them.
+    pub save_model: Option<PathBuf>,
 }
 
 impl BenchOpts {
@@ -161,6 +178,8 @@ impl BenchOpts {
             tolerance: DEFAULT_TOLERANCE,
             partitions: vec![PartitionSpec::Off, PartitionSpec::affine()],
             check: false,
+            load_model: None,
+            save_model: None,
         }
     }
 
@@ -345,7 +364,12 @@ fn roster(opts: &BenchOpts) -> Vec<RosterCell> {
 /// Sweep one family and assemble its [`Baseline`] (nothing is written).
 pub fn bench_family(family: &str, opts: &BenchOpts) -> Result<Baseline> {
     let spec = family_spec(family, opts.quick)?;
-    let mrf = builders::build(&spec, opts.seed);
+    let (mrf, prep) = crate::run::obtain_model(
+        &spec,
+        opts.seed,
+        opts.load_model.as_deref(),
+        opts.save_model.as_deref(),
+    )?;
     let recorder = TraceRecorder::new(Duration::from_millis(opts.tick_ms.max(1)));
     let mut cells = Vec::new();
     for rc in roster(opts) {
@@ -356,6 +380,7 @@ pub fn bench_family(family: &str, opts: &BenchOpts) -> Result<Baseline> {
         let mut converged = true;
         let mut last_trace = Trace::default();
         let mut msg_bytes = (0u64, 0u64);
+        let mut init_secs = 0.0f64;
         for _ in 0..opts.samples.max(1) {
             let mut cfg = RunConfig::new(spec.clone(), rc.alg.clone())
                 .with_threads(rc.threads)
@@ -374,6 +399,7 @@ pub fn bench_family(family: &str, opts: &BenchOpts) -> Result<Baseline> {
                 rep.stats.metrics.total.msg_bytes_logical,
                 rep.stats.metrics.total.msg_bytes_padded,
             );
+            init_secs = rep.prep.init_secs;
         }
         cells.push(CellResult {
             id,
@@ -386,6 +412,10 @@ pub fn bench_family(family: &str, opts: &BenchOpts) -> Result<Baseline> {
             precision: rc.precision.label().to_string(),
             msg_bytes_logical: msg_bytes.0,
             msg_bytes_padded: msg_bytes.1,
+            build_secs: prep.build_secs,
+            load_secs: prep.load_secs,
+            init_secs,
+            model_bytes: prep.model_bytes,
             wall_secs,
             updates,
             scratch_wall_secs: Vec::new(),
@@ -395,7 +425,7 @@ pub fn bench_family(family: &str, opts: &BenchOpts) -> Result<Baseline> {
             trace: last_trace,
         });
     }
-    cells.push(bench_delta_cell(family, &spec, &mrf, opts, &recorder)?);
+    cells.push(bench_delta_cell(family, &spec, &mrf, opts, &recorder, &prep)?);
     Ok(Baseline {
         schema_version: SCHEMA_VERSION,
         family: family.to_string(),
@@ -430,6 +460,7 @@ fn bench_delta_cell(
     mrf: &crate::model::Mrf,
     opts: &BenchOpts,
     recorder: &TraceRecorder,
+    prep: &crate::run::PrepStats,
 ) -> Result<CellResult> {
     let max_p = opts.threads.iter().copied().max().unwrap_or(1);
     let rc = RosterCell::new(AlgorithmSpec::RelaxedResidual, max_p, PartitionSpec::Off);
@@ -443,6 +474,7 @@ fn bench_delta_cell(
     let mut last_trace = Trace::default();
     let mut msg_bytes = (0u64, 0u64);
     let mut tasks_touched = 0u64;
+    let mut init_secs = 0.0f64;
     for _ in 0..opts.samples.max(1) {
         let mut cfg = RunConfig::new(spec.clone(), rc.alg.clone())
             .with_threads(rc.threads)
@@ -472,6 +504,7 @@ fn bench_delta_cell(
             rep.stats.metrics.total.msg_bytes_logical,
             rep.stats.metrics.total.msg_bytes_padded,
         );
+        init_secs = rep.prep.init_secs;
     }
     let time_to_reconverge =
         crate::util::stats::Summary::of(&wall_secs).map_or(0.0, |s| s.median);
@@ -486,6 +519,10 @@ fn bench_delta_cell(
         precision: rc.precision.label().to_string(),
         msg_bytes_logical: msg_bytes.0,
         msg_bytes_padded: msg_bytes.1,
+        build_secs: prep.build_secs,
+        load_secs: prep.load_secs,
+        init_secs,
+        model_bytes: prep.model_bytes,
         wall_secs,
         updates,
         scratch_wall_secs,

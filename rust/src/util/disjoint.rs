@@ -1,0 +1,92 @@
+//! Shared-slice writer for provably disjoint parallel writes.
+//!
+//! The deterministic parallel counting sort in [`crate::model::graph`] and
+//! the parallel arena initialization in [`crate::bp`] both partition an
+//! output slice by *value-dependent* indices (a node's adjacency slots, an
+//! edge's shard), so the compiler cannot see that concurrent writers touch
+//! disjoint elements. [`DisjointWriter`] is the one narrow escape hatch:
+//! it shares a `&mut [T]` across scoped threads and exposes an `unsafe`
+//! per-index write whose safety contract is exactly "no two threads write
+//! the same index, and nobody reads until the threads join".
+
+use std::cell::UnsafeCell;
+
+/// A shared view of a mutable slice allowing concurrent writes from many
+/// threads, provided the caller's partitioning guarantees every index is
+/// written by at most one thread.
+///
+/// The borrow of the underlying slice keeps ordinary readers out for the
+/// writer's lifetime; reads through the writer itself are not offered, so
+/// the only aliasing to reason about is write/write disjointness.
+pub struct DisjointWriter<'a, T> {
+    cells: &'a [UnsafeCell<T>],
+}
+
+// SAFETY: `DisjointWriter` only allows writes, and `write`'s contract
+// requires callers to keep concurrently-written indices disjoint, so
+// sharing the view across threads cannot create a data race that the
+// contract doesn't already forbid.
+unsafe impl<T: Send + Sync> Sync for DisjointWriter<'_, T> {}
+
+impl<'a, T> DisjointWriter<'a, T> {
+    /// Wrap a mutable slice for disjoint parallel writing. The slice is
+    /// exclusively borrowed for the writer's lifetime.
+    pub fn new(slice: &'a mut [T]) -> Self {
+        let len = slice.len();
+        let ptr = slice.as_mut_ptr().cast::<UnsafeCell<T>>();
+        // SAFETY: `UnsafeCell<T>` is `repr(transparent)` over `T`, and we
+        // hold the unique borrow of the slice, so reinterpreting it as a
+        // slice of cells of the same length is sound.
+        let cells = unsafe { std::slice::from_raw_parts(ptr, len) };
+        Self { cells }
+    }
+
+    /// Number of elements in the wrapped slice.
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// True when the wrapped slice is empty.
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Write `v` into element `i`.
+    ///
+    /// # Safety
+    ///
+    /// No other thread may write index `i` concurrently, and no element
+    /// may be read through any alias until all writing threads have been
+    /// joined. Bounds are still checked (out-of-range panics).
+    #[inline]
+    pub unsafe fn write(&self, i: usize, v: T) {
+        // SAFETY: per the contract above, this thread is the only writer
+        // of index `i` while the scope is live.
+        unsafe { *self.cells[i].get() = v };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disjoint_parallel_writes_land() {
+        let mut out = vec![0u32; 1024];
+        let w = DisjointWriter::new(&mut out);
+        assert_eq!(w.len(), 1024);
+        assert!(!w.is_empty());
+        std::thread::scope(|s| {
+            for t in 0..4usize {
+                let w = &w;
+                s.spawn(move || {
+                    for i in (t..1024).step_by(4) {
+                        // SAFETY: threads write strided, disjoint indices.
+                        unsafe { w.write(i, i as u32) };
+                    }
+                });
+            }
+        });
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i as u32));
+    }
+}

@@ -3,14 +3,29 @@
 //! `criterion`-adjacent crates that are unavailable in the offline build.
 
 pub mod atomic;
+pub mod disjoint;
 pub mod rng;
 pub mod stats;
 
 pub use atomic::{AtomicF32, AtomicF64, CachePadded};
+pub use disjoint::DisjointWriter;
 pub use rng::{SplitMix64, Xoshiro256};
 pub use stats::{fmt_count, fmt_duration, Summary};
 
 use std::time::Instant;
+
+/// Thread count for cold-path parallel sweeps (model build, bulk model
+/// I/O, arena init, snapshot/marginal extraction): 1 below a small work
+/// threshold — where spawn overhead swamps the sweep itself — otherwise
+/// the machine's parallelism capped at 8 (the cold path is memory-bound;
+/// wider fan-out only adds contention). Solve-loop threading is configured
+/// explicitly per run and does not use this heuristic.
+pub fn cold_path_threads(work_items: usize) -> usize {
+    if work_items < (1 << 14) {
+        return 1;
+    }
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(8)
+}
 
 /// Simple scope timer returning elapsed seconds.
 pub struct Timer {

@@ -1,0 +1,183 @@
+//! Cold-path integration suite: model snapshot round-trips across every
+//! model family × storage format {v1, v2} × load parallelism, the
+//! parallel-vs-serial CSR construction equality per family, the
+//! `obtain_model` cache ("generate once, sweep many"), and file-level
+//! robustness (corruption / truncation must be clean errors, not panics).
+
+use relaxed_bp::configio::ModelSpec;
+use relaxed_bp::model::{builders, io as model_io, GraphBuilder, Mrf};
+
+/// One small instance per model family (all nine builders).
+fn families() -> Vec<ModelSpec> {
+    vec![
+        ModelSpec::Tree { n: 31 },
+        ModelSpec::Path { n: 17 },
+        ModelSpec::AdversarialTree { n: 15 },
+        ModelSpec::UniformTree { n: 40, arity: 3 },
+        ModelSpec::Ising { n: 5 },
+        ModelSpec::Potts { n: 4, q: 3 },
+        ModelSpec::Potts { n: 3, q: 32 },
+        ModelSpec::Ldpc { n: 24, flip_prob: 0.07 },
+        ModelSpec::PowerLaw { n: 64, m: 2 },
+    ]
+}
+
+/// Field-by-field bit-exact equality of two models (graph arrays, domains,
+/// node factors, and every pairwise factor entry).
+fn assert_models_equal(m: &Mrf, back: &Mrf) {
+    assert_eq!(back.name, m.name);
+    assert_eq!(back.num_nodes(), m.num_nodes());
+    assert_eq!(back.num_messages(), m.num_messages());
+    assert_eq!(back.domain, m.domain);
+    assert_eq!(back.graph.offsets, m.graph.offsets);
+    assert_eq!(back.graph.adj_node, m.graph.adj_node);
+    assert_eq!(back.graph.adj_out, m.graph.adj_out);
+    assert_eq!(back.graph.adj_in, m.graph.adj_in);
+    assert_eq!(back.graph.edge_src, m.graph.edge_src);
+    assert_eq!(back.graph.edge_dst, m.graph.edge_dst);
+    assert_eq!(back.msg_offset, m.msg_offset);
+    assert_eq!(back.total_msg_len, m.total_msg_len);
+    for i in 0..m.num_nodes() {
+        assert_eq!(back.node_factors.of(i), m.node_factors.of(i));
+    }
+    for e in 0..m.num_messages() {
+        let fr_a = m.edge_factor[e];
+        let fr_b = back.edge_factor[e];
+        assert_eq!(m.pool.shape_of(fr_a), back.pool.shape_of(fr_b));
+        let (dr, dc) = m.pool.shape_of(fr_a);
+        for a in 0..dr {
+            for b in 0..dc {
+                assert_eq!(m.pool.get(fr_a, a, b), back.pool.get(fr_b, a, b));
+            }
+        }
+    }
+}
+
+fn tmp_path(tag: &str, spec: &ModelSpec, seed: u64) -> String {
+    std::env::temp_dir()
+        .join(format!("coldpath_{tag}_{}", spec.cache_slug(seed)))
+        .to_string_lossy()
+        .into_owned()
+}
+
+#[test]
+fn roundtrip_all_families_v2_across_load_threads() {
+    for spec in families() {
+        let m = builders::build(&spec, 7);
+        let path = tmp_path("v2", &spec, 7);
+        let bytes = model_io::save(&m, &path).unwrap();
+        assert_eq!(bytes, std::fs::metadata(&path).unwrap().len());
+        for threads in [1, 2, 8] {
+            let back = model_io::load_with_threads(&path, threads)
+                .unwrap_or_else(|e| panic!("{} (threads={threads}): {e:#}", spec.name()));
+            assert_models_equal(&m, &back);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn roundtrip_all_families_v1() {
+    for spec in families() {
+        let m = builders::build(&spec, 7);
+        let path = tmp_path("v1", &spec, 7);
+        let bytes = model_io::save_v1(&m, &path).unwrap();
+        assert_eq!(bytes, std::fs::metadata(&path).unwrap().len());
+        // The threads knob must be a no-op for the v1 stream format.
+        for threads in [1, 2, 8] {
+            let back = model_io::load_with_threads(&path, threads).unwrap();
+            assert_models_equal(&m, &back);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn parallel_csr_build_matches_serial_per_family() {
+    for spec in families() {
+        let m = builders::build(&spec, 7);
+        let g = &m.graph;
+        let me = g.num_directed_edges() / 2;
+        // Replay the family's frozen edge stream (undirected edge k is the
+        // k-th add_edge call, stored as directed pair 2k / 2k+1).
+        let mk = || {
+            let mut gb = GraphBuilder::with_edge_capacity(g.num_nodes(), me);
+            for k in 0..me {
+                gb.add_edge(g.edge_src[2 * k] as usize, g.edge_dst[2 * k] as usize);
+            }
+            gb
+        };
+        let serial = mk().build_with_threads(1);
+        for threads in [2, 8] {
+            let par = mk().build_with_threads(threads);
+            assert_eq!(par.offsets, serial.offsets, "{}", spec.name());
+            assert_eq!(par.adj_node, serial.adj_node, "{}", spec.name());
+            assert_eq!(par.adj_out, serial.adj_out, "{}", spec.name());
+            assert_eq!(par.adj_in, serial.adj_in, "{}", spec.name());
+            assert_eq!(par.edge_src, serial.edge_src, "{}", spec.name());
+            assert_eq!(par.edge_dst, serial.edge_dst, "{}", spec.name());
+        }
+        // And the replay reproduces the original build bit-for-bit.
+        assert_eq!(serial.offsets, g.offsets, "{}", spec.name());
+        assert_eq!(serial.adj_node, g.adj_node, "{}", spec.name());
+        assert_eq!(serial.adj_out, g.adj_out, "{}", spec.name());
+        assert_eq!(serial.adj_in, g.adj_in, "{}", spec.name());
+    }
+}
+
+#[test]
+fn obtain_model_cache_roundtrip() {
+    let dir = std::env::temp_dir().join("rbp_coldpath_cache");
+    let spec = ModelSpec::Ising { n: 5 };
+    // Stale entries from an earlier run would turn the miss into a hit.
+    std::fs::remove_file(dir.join(spec.cache_slug(9))).ok();
+    // First call: cache miss → build + save.
+    let (built, miss) = relaxed_bp::run::obtain_model(&spec, 9, Some(&dir), Some(&dir)).unwrap();
+    assert!(miss.model_bytes > 0, "save leg should record the file size");
+    assert!(miss.load_secs == 0.0, "cache miss must not record a load");
+    // Second call: cache hit → disk load, bit-identical model.
+    let (loaded, hit) = relaxed_bp::run::obtain_model(&spec, 9, Some(&dir), None).unwrap();
+    assert!(hit.build_secs == 0.0, "cache hit must not rebuild");
+    assert_eq!(hit.model_bytes, miss.model_bytes);
+    assert_models_equal(&built, &loaded);
+    // A different seed is a different cache entry → build leg again.
+    let (_, other) = relaxed_bp::run::obtain_model(&spec, 10, Some(&dir), None).unwrap();
+    assert!(other.load_secs == 0.0);
+    std::fs::remove_file(dir.join(spec.cache_slug(9))).ok();
+}
+
+#[test]
+fn corrupted_and_truncated_files_are_clean_errors() {
+    let spec = ModelSpec::Ising { n: 5 };
+    let m = builders::build(&spec, 3);
+    let path = tmp_path("corrupt", &spec, 3);
+    model_io::save(&m, &path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // Flip a 128-byte window in the payload: inter-section alignment gaps
+    // are under 64 bytes, so the window always covers checksummed section
+    // data and the per-section checksum must catch the corruption.
+    let mut bad = good.clone();
+    let mid = bad.len() / 2;
+    for b in bad[mid..(mid + 128).min(good.len())].iter_mut() {
+        *b ^= 0x40;
+    }
+    std::fs::write(&path, &bad).unwrap();
+    assert!(model_io::load(&path).is_err(), "bit flips must fail the checksum");
+
+    // Truncation at several points must error out, never panic.
+    for cut in [6, good.len() / 3, good.len() - 1] {
+        std::fs::write(&path, &good[..cut]).unwrap();
+        assert!(model_io::load(&path).is_err(), "truncated at {cut}");
+    }
+
+    // Wrong magic / unsupported version.
+    std::fs::write(&path, b"NOPEnope").unwrap();
+    assert!(model_io::load(&path).is_err());
+    let mut vbad = good;
+    vbad[4..8].copy_from_slice(&99u32.to_le_bytes());
+    std::fs::write(&path, &vbad).unwrap();
+    let err = model_io::load(&path).unwrap_err();
+    assert!(format!("{err:#}").contains("version"), "got: {err:#}");
+    std::fs::remove_file(&path).ok();
+}
