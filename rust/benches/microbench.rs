@@ -336,6 +336,54 @@ fn group_model_prep() {
     g.report();
 }
 
+/// Out-of-core load axis: the zero-copy mmap load (verify off and on)
+/// vs the copying read path at 1 and 8 threads, on the same generated
+/// v2 file, plus mem-vs-mmap message-arena init. CI's out-of-core smoke
+/// job runs `--only mmap_load` and gates on the map-vs-read ratio.
+fn group_mmap_load() {
+    use relaxed_bp::bp::ArenaMode;
+    use relaxed_bp::model::io::LoadMode;
+    let mut g = BenchGroup::new("mmap_load").with_config(cfg());
+    let spec = ModelSpec::PowerLaw { n: if quick() { 50_000 } else { 500_000 }, m: 2 };
+    let mrf = builders::build(&spec, 42);
+    let p = std::env::temp_dir().join("rbp_mmap_load_v2.rbpm");
+    let s = p.to_string_lossy().into_owned();
+    model_io::save(&mrf, &s).expect("save v2");
+
+    g.bench("load/map", || {
+        let (m, mode) = model_io::load_with_mode(&s, 8, LoadMode::Map, false).expect("map load");
+        assert!(!cfg!(unix) || mode == LoadMode::Map, "map load fell back on unix");
+        m.num_messages() as f64
+    });
+    g.bench("load/map_verified", || {
+        let (m, _) = model_io::load_with_mode(&s, 8, LoadMode::Map, true).expect("map load");
+        m.num_messages() as f64
+    });
+    for &threads in &[1usize, 8] {
+        g.bench(&format!("load/read_threads{threads}"), || {
+            let (m, _) =
+                model_io::load_with_mode(&s, threads, LoadMode::Read, true).expect("read load");
+            m.num_messages() as f64
+        });
+    }
+    let _ = std::fs::remove_file(&p);
+
+    g.bench("arena/uniform_init_mem", || {
+        let msgs = Messages::uniform_in(&mrf, Precision::F64, &ArenaMode::Mem).expect("mem arena");
+        drop(msgs);
+        mrf.num_messages() as f64
+    });
+    if cfg!(unix) {
+        g.bench("arena/uniform_init_mmap", || {
+            let msgs = Messages::uniform_in(&mrf, Precision::F64, &ArenaMode::Mmap { dir: None })
+                .expect("mmap arena");
+            drop(msgs);
+            mrf.num_messages() as f64
+        });
+    }
+    g.report();
+}
+
 fn main() {
     let groups: &[(&str, fn())] = &[
         ("update_kernel", group_update_kernel),
@@ -346,6 +394,7 @@ fn main() {
         ("lookahead", group_lookahead),
         ("batched_backends", group_batched_backends),
         ("model_prep", group_model_prep),
+        ("mmap_load", group_mmap_load),
     ];
     let only = only();
     for (name, run) in groups {

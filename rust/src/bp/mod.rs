@@ -12,7 +12,7 @@ pub use lookahead::Lookahead;
 pub use marginals::{all_marginals, decode_bits, max_marginal_diff, node_marginal};
 pub use oracle::exact_marginals;
 pub use simd::Kernel;
-pub use state::{msg_buf, Messages, MsgBuf, MsgSource, Precision};
+pub use state::{msg_buf, ArenaMode, Messages, MsgBuf, MsgSource, Precision};
 pub use update::{
     compute_message, compute_message_with, fused_node_refresh, incoming_product, normalize,
     residual_l2, residual_linf, MsgScratch, NodeScratch,

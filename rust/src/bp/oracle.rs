@@ -16,7 +16,7 @@ pub fn exact_marginals(mrf: &Mrf, limit: u64) -> Option<Vec<Vec<f64>>> {
     let n = mrf.num_nodes();
     // State-space size with overflow care.
     let mut total: u64 = 1;
-    for &d in &mrf.domain {
+    for &d in mrf.domain.iter() {
         total = total.checked_mul(d as u64)?;
         if total > limit {
             return None;

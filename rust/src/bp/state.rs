@@ -35,11 +35,24 @@
 //! across layouts. A snapshot of an f32 run is f32-exact: every stored
 //! value is exactly representable in `f32`, so widening into the `f64`
 //! snapshot and restoring (which re-rounds) round-trips bit-for-bit.
+//!
+//! Orthogonally to precision and sharding, the arenas' **backing
+//! allocation** is a run axis ([`ArenaMode`], `--arena`): heap boxes
+//! (the default) or file-backed mappings of unlinked sparse temp files
+//! ([`ArenaMode::Mmap`]) for runs whose message state exceeds RAM. A
+//! mapped arena holds exactly the same 64-byte-aligned atomic lines at
+//! the same indices — only the allocator differs — so cell values,
+//! relaxed-atomic semantics, and snapshot layout are identical; the
+//! kernel pages cold lines to disk instead of OOM-killing the run, and
+//! the relaxed schedulers tolerate the extra page-fault latency the same
+//! way they tolerate stale reads.
 
 use super::simd::{self, Kernel};
 use crate::coordinator::run_workers;
 use crate::model::{Mrf, Partition, MAX_DOMAIN};
+use crate::util::mmap::MmapMut;
 use crate::util::{cold_path_threads, AtomicF32, AtomicF64, DisjointWriter};
+use anyhow::{Context, Result};
 
 /// Fixed-size stack buffer for one message / one domain's worth of values.
 pub type MsgBuf = [f64; MAX_DOMAIN];
@@ -92,6 +105,66 @@ impl Precision {
         match self {
             Precision::F64 => 8,
             Precision::F32 => 4,
+        }
+    }
+}
+
+/// Backing allocation of the message arenas (`--arena`).
+///
+/// [`ArenaMode::Mem`] is the historical heap allocation. With
+/// [`ArenaMode::Mmap`] each shard's arena lives in a file-backed mapping
+/// of an unlinked sparse temp file, so message state larger than RAM
+/// spills to disk under kernel page replacement instead of failing to
+/// allocate. Cell values, indices, 64-byte line alignment (mappings are
+/// page-aligned, 4096 ⊇ 64), and the relaxed-atomic access contract are
+/// identical across modes; snapshots are interchangeable.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum ArenaMode {
+    /// Heap-allocated arenas (default; bit- and behavior-frozen arm).
+    #[default]
+    Mem,
+    /// File-backed arenas in unlinked sparse temp files. The files are
+    /// unlinked at creation, so the kernel reclaims the blocks when the
+    /// state drops — even on crash — with no cleanup pass.
+    Mmap {
+        /// Directory for the temp files; `None` means
+        /// `std::env::temp_dir()`. Point this at a filesystem with room
+        /// for the padded arena bytes.
+        dir: Option<std::path::PathBuf>,
+    },
+}
+
+impl ArenaMode {
+    /// Stable kind label used by telemetry and bench cell JSON
+    /// (directory-independent): `"mem"` or `"mmap"`.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ArenaMode::Mem => "mem",
+            ArenaMode::Mmap { .. } => "mmap",
+        }
+    }
+
+    /// Full round-trippable spec string as accepted by the CLI/config
+    /// parser: `"mem"`, `"mmap"`, or `"mmap:<dir>"`.
+    pub fn spec(&self) -> String {
+        match self {
+            ArenaMode::Mem => "mem".to_string(),
+            ArenaMode::Mmap { dir: None } => "mmap".to_string(),
+            ArenaMode::Mmap { dir: Some(d) } => format!("mmap:{}", d.display()),
+        }
+    }
+
+    /// True for the file-backed arm.
+    pub fn is_mmap(&self) -> bool {
+        matches!(self, ArenaMode::Mmap { .. })
+    }
+
+    /// Resolved temp-file directory for the file-backed arm.
+    fn dir(&self) -> std::path::PathBuf {
+        match self {
+            ArenaMode::Mem => unreachable!("no directory for heap arenas"),
+            ArenaMode::Mmap { dir: Some(d) } => d.clone(),
+            ArenaMode::Mmap { dir: None } => std::env::temp_dir(),
         }
     }
 }
@@ -289,44 +362,112 @@ impl MsgCell for CellF32 {
     }
 }
 
-/// Build one arena from plain values — a non-atomic initialization pass
-/// over a freshly owned allocation (the cells become shared only when the
-/// arena is published to worker threads), parallelized over line ranges
-/// at the cold-path thread count. Values are position-determined, so the
-/// result is identical for every thread count.
-fn arena_from_values<C: MsgCell>(vals: &[f64]) -> Box<[C::Line]> {
-    arena_from_values_n::<C>(vals, cold_path_threads(vals.len().div_ceil(C::PER_LINE)))
+/// Backing allocation of one shard's arena: a heap box
+/// ([`ArenaMode::Mem`]) or a file-backed mapping ([`ArenaMode::Mmap`]).
+/// Derefs to the line slice, so all arena indexing is mode-agnostic.
+enum ArenaBuf<L> {
+    /// Heap-allocated lines (historical representation).
+    Heap(Box<[L]>),
+    /// `len` fully initialized `L`s at the (page-aligned) base of an
+    /// unlinked temp-file mapping. Initialization happens before the
+    /// buffer is shared; afterwards all access goes through the atomic
+    /// cells inside `L`, exactly as for the heap arm.
+    Mapped { map: MmapMut, len: usize },
 }
 
-/// [`arena_from_values`] at an explicit thread count (1 inside workers
-/// that are themselves already parallel over shards).
-fn arena_from_values_n<C: MsgCell>(vals: &[f64], threads: usize) -> Box<[C::Line]> {
-    let nlines = vals.len().div_ceil(C::PER_LINE);
-    let mut lines: Vec<C::Line> = Vec::with_capacity(nlines);
-    if threads <= 1 || nlines < 2 {
-        lines.extend((0..nlines).map(|l| C::line_from(vals, l * C::PER_LINE)));
-    } else {
-        let threads = threads.min(nlines);
-        let mut rest = &mut lines.spare_capacity_mut()[..nlines];
-        std::thread::scope(|s| {
-            for t in 0..threads {
-                let lo = t * nlines / threads;
-                let hi = (t + 1) * nlines / threads;
-                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(hi - lo);
-                rest = tail;
-                s.spawn(move || {
-                    for (j, slot) in chunk.iter_mut().enumerate() {
-                        slot.write(C::line_from(vals, (lo + j) * C::PER_LINE));
-                    }
-                });
-            }
-        });
-        // SAFETY: the chunks split off above tile 0..nlines exactly, and
-        // every thread wrote each slot of its chunk, so all `nlines`
-        // elements are initialized.
-        unsafe { lines.set_len(nlines) };
+impl<L> ArenaBuf<L> {
+    #[inline]
+    fn as_slice(&self) -> &[L] {
+        match self {
+            ArenaBuf::Heap(b) => b,
+            // SAFETY: `map` holds `len * size_of::<L>()` mapped bytes
+            // (sized at construction), page alignment satisfies `L`'s
+            // 64-byte alignment, every element was initialized before
+            // the buffer was published, and the mapping lives until
+            // `self` drops.
+            ArenaBuf::Mapped { map, len } => unsafe {
+                std::slice::from_raw_parts(map.as_ptr() as *const L, *len)
+            },
+        }
     }
-    lines.into_boxed_slice()
+}
+
+impl<L> std::ops::Deref for ArenaBuf<L> {
+    type Target = [L];
+
+    #[inline]
+    fn deref(&self) -> &[L] {
+        self.as_slice()
+    }
+}
+
+/// Initialize `slots` (line `l` ← `vals[l * PER_LINE ..]`) — a
+/// non-atomic pass over freshly owned, not-yet-shared cells,
+/// parallelized over line ranges. Values are position-determined, so
+/// the result is identical for every thread count.
+fn fill_lines<C: MsgCell>(
+    slots: &mut [std::mem::MaybeUninit<C::Line>],
+    vals: &[f64],
+    threads: usize,
+) {
+    let nlines = slots.len();
+    if threads <= 1 || nlines < 2 {
+        for (l, slot) in slots.iter_mut().enumerate() {
+            slot.write(C::line_from(vals, l * C::PER_LINE));
+        }
+        return;
+    }
+    let threads = threads.min(nlines);
+    let mut rest = slots;
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let lo = t * nlines / threads;
+            let hi = (t + 1) * nlines / threads;
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(hi - lo);
+            rest = tail;
+            s.spawn(move || {
+                for (j, slot) in chunk.iter_mut().enumerate() {
+                    slot.write(C::line_from(vals, (lo + j) * C::PER_LINE));
+                }
+            });
+        }
+    });
+}
+
+/// Build one arena from plain values under the given [`ArenaMode`], at
+/// an explicit thread count (1 inside workers that are themselves
+/// already parallel over shards). Heap allocation is infallible; the
+/// file-backed arm fails cleanly if the temp file cannot be created.
+fn arena_from_values_in<C: MsgCell>(
+    vals: &[f64],
+    threads: usize,
+    mode: &ArenaMode,
+) -> Result<ArenaBuf<C::Line>> {
+    let nlines = vals.len().div_ceil(C::PER_LINE);
+    if matches!(mode, ArenaMode::Mmap { .. }) && nlines > 0 {
+        let bytes = nlines * std::mem::size_of::<C::Line>();
+        let map = MmapMut::temp(&mode.dir(), "msgs", bytes)
+            .context("allocating file-backed message arena")?;
+        debug_assert_eq!(map.as_ptr() as usize % 64, 0, "mappings are page-aligned");
+        // SAFETY: the mapping is exactly `nlines` lines long, exclusive
+        // to this call until returned, and page alignment satisfies the
+        // line alignment; `fill_lines` initializes every slot.
+        let slots = unsafe {
+            std::slice::from_raw_parts_mut(
+                map.as_ptr() as *mut std::mem::MaybeUninit<C::Line>,
+                nlines,
+            )
+        };
+        fill_lines::<C>(slots, vals, threads);
+        return Ok(ArenaBuf::Mapped { map, len: nlines });
+    }
+    // Heap arm (also the zero-line degenerate case of the mmap arm:
+    // nothing to map, and `mmap` rejects zero-length mappings anyway).
+    let mut lines: Vec<C::Line> = Vec::with_capacity(nlines);
+    fill_lines::<C>(&mut lines.spare_capacity_mut()[..nlines], vals, threads);
+    // SAFETY: `fill_lines` initialized all `nlines` slots.
+    unsafe { lines.set_len(nlines) };
+    Ok(ArenaBuf::Heap(lines.into_boxed_slice()))
 }
 
 /// Split `out` (a flat-layout array tiled by `offsets`, which carries one
@@ -371,7 +512,7 @@ fn for_flat_chunks(
 /// bit-frozen.
 struct ArenaSet<C: MsgCell> {
     /// One cache-line-aligned cell arena per shard.
-    arenas: Vec<Box<[C::Line]>>,
+    arenas: Vec<ArenaBuf<C::Line>>,
     /// Shard holding each message.
     edge_shard: Box<[u32]>,
     /// Cell offset of each message within its shard's arena.
@@ -379,10 +520,13 @@ struct ArenaSet<C: MsgCell> {
     /// Flat-layout offsets (= `Mrf::msg_offset` plus a trailing total):
     /// the snapshot/restore layout, shared across all arena shardings.
     flat_offset: Box<[u32]>,
+    /// Backing-allocation mode, kept so shadow states
+    /// ([`ArenaSet::uniform_like`]) mirror it.
+    mode: ArenaMode,
 }
 
 impl<C: MsgCell> ArenaSet<C> {
-    fn uniform(mrf: &Mrf) -> Self {
+    fn uniform(mrf: &Mrf, mode: &ArenaMode) -> Result<Self> {
         let me = mrf.num_messages();
         let flat_offset = flat_offsets(mrf);
         let mut vals = vec![0.0f64; mrf.total_msg_len];
@@ -394,15 +538,17 @@ impl<C: MsgCell> ArenaSet<C> {
                 piece[off..off + len].fill(1.0 / len as f64);
             }
         });
-        ArenaSet {
-            arenas: vec![arena_from_values::<C>(&vals)],
+        let init_threads = cold_path_threads(vals.len().div_ceil(C::PER_LINE));
+        Ok(ArenaSet {
+            arenas: vec![arena_from_values_in::<C>(&vals, init_threads, mode)?],
             edge_shard: vec![0u32; me].into_boxed_slice(),
-            edge_local: mrf.msg_offset.clone().into_boxed_slice(),
+            edge_local: mrf.msg_offset.to_vec().into_boxed_slice(),
             flat_offset,
-        }
+            mode: mode.clone(),
+        })
     }
 
-    fn uniform_partitioned(mrf: &Mrf, partition: &Partition) -> Self {
+    fn uniform_partitioned(mrf: &Mrf, partition: &Partition, mode: &ArenaMode) -> Result<Self> {
         let me = mrf.num_messages();
         assert_eq!(
             partition.num_tasks(),
@@ -413,7 +559,7 @@ impl<C: MsgCell> ArenaSet<C> {
         let mut edge_shard = vec![0u32; me];
         let mut edge_local = vec![0u32; me];
         let threads = cold_path_threads(me).min(k.max(1));
-        let arenas: Vec<Box<[C::Line]>> = if threads <= 1 {
+        let arenas: Vec<ArenaBuf<C::Line>> = if threads <= 1 {
             let mut arenas = Vec::with_capacity(k);
             let mut vals: Vec<f64> = Vec::new();
             for s in 0..k {
@@ -424,14 +570,15 @@ impl<C: MsgCell> ArenaSet<C> {
                     let len = mrf.msg_len(e);
                     vals.resize(vals.len() + len, 1.0 / len as f64);
                 }
-                arenas.push(arena_from_values::<C>(&vals));
+                let t = cold_path_threads(vals.len().div_ceil(C::PER_LINE));
+                arenas.push(arena_from_values_in::<C>(&vals, t, mode)?);
             }
             arenas
         } else {
             let shard_w = DisjointWriter::new(&mut edge_shard);
             let local_w = DisjointWriter::new(&mut edge_local);
-            let per_worker = run_workers(threads, |t| {
-                let mut built: Vec<(usize, Box<[C::Line]>)> = Vec::new();
+            let per_worker = run_workers(threads, |t| -> Result<Vec<_>> {
+                let mut built: Vec<(usize, ArenaBuf<C::Line>)> = Vec::new();
                 let mut vals: Vec<f64> = Vec::new();
                 for s in (t..k).step_by(threads) {
                     vals.clear();
@@ -446,33 +593,37 @@ impl<C: MsgCell> ArenaSet<C> {
                         let len = mrf.msg_len(e);
                         vals.resize(vals.len() + len, 1.0 / len as f64);
                     }
-                    built.push((s, arena_from_values_n::<C>(&vals, 1)));
+                    built.push((s, arena_from_values_in::<C>(&vals, 1, mode)?));
                 }
-                built
+                Ok(built)
             });
-            let mut slots: Vec<Option<Box<[C::Line]>>> = (0..k).map(|_| None).collect();
-            for (s, arena) in per_worker.into_iter().flatten() {
-                slots[s] = Some(arena);
+            let mut slots: Vec<Option<ArenaBuf<C::Line>>> = (0..k).map(|_| None).collect();
+            for worker in per_worker {
+                for (s, arena) in worker? {
+                    slots[s] = Some(arena);
+                }
             }
             slots
                 .into_iter()
                 .map(|a| a.expect("every shard built exactly once"))
                 .collect()
         };
-        ArenaSet {
+        Ok(ArenaSet {
             arenas,
             edge_shard: edge_shard.into_boxed_slice(),
             edge_local: edge_local.into_boxed_slice(),
             flat_offset: flat_offsets(mrf),
-        }
+            mode: mode.clone(),
+        })
     }
 
-    fn uniform_like(mrf: &Mrf, layout: &ArenaSet<C>) -> Self {
+    fn uniform_like(mrf: &Mrf, layout: &ArenaSet<C>) -> Result<Self> {
         let me = layout.edge_shard.len();
         assert_eq!(mrf.num_messages(), me, "layout built for a different model");
         let k = layout.arenas.len();
+        let mode = &layout.mode;
         let threads = cold_path_threads(me).min(k.max(1));
-        let arenas: Vec<Box<[C::Line]>> = if threads <= 1 {
+        let arenas: Vec<ArenaBuf<C::Line>> = if threads <= 1 {
             let mut vals: Vec<Vec<f64>> = layout
                 .arenas
                 .iter()
@@ -484,13 +635,18 @@ impl<C: MsgCell> ArenaSet<C> {
                 let len = mrf.msg_len(e);
                 vals[s][off..off + len].fill(1.0 / len as f64);
             }
-            vals.iter().map(|v| arena_from_values::<C>(v)).collect()
+            vals.iter()
+                .map(|v| {
+                    let t = cold_path_threads(v.len().div_ceil(C::PER_LINE));
+                    arena_from_values_in::<C>(v, t, mode)
+                })
+                .collect::<Result<_>>()?
         } else {
             // Each worker owns the shards `s ≡ t (mod threads)`: it scans
             // the edge table once, fills the value images of its own
             // shards, then builds their arenas. Reads are shared, writes
             // stay worker-local.
-            let per_worker = run_workers(threads, |t| {
+            let per_worker = run_workers(threads, |t| -> Result<Vec<_>> {
                 let mut mine: Vec<(usize, Vec<f64>)> = (t..k)
                     .step_by(threads)
                     .map(|s| (s, vec![0.0f64; layout.arenas[s].len() * C::PER_LINE]))
@@ -505,24 +661,27 @@ impl<C: MsgCell> ArenaSet<C> {
                     mine[(s - t) / threads].1[off..off + len].fill(1.0 / len as f64);
                 }
                 mine.into_iter()
-                    .map(|(s, v)| (s, arena_from_values_n::<C>(&v, 1)))
-                    .collect::<Vec<_>>()
+                    .map(|(s, v)| Ok((s, arena_from_values_in::<C>(&v, 1, mode)?)))
+                    .collect::<Result<Vec<_>>>()
             });
-            let mut slots: Vec<Option<Box<[C::Line]>>> = (0..k).map(|_| None).collect();
-            for (s, arena) in per_worker.into_iter().flatten() {
-                slots[s] = Some(arena);
+            let mut slots: Vec<Option<ArenaBuf<C::Line>>> = (0..k).map(|_| None).collect();
+            for worker in per_worker {
+                for (s, arena) in worker? {
+                    slots[s] = Some(arena);
+                }
             }
             slots
                 .into_iter()
                 .map(|a| a.expect("every shard built exactly once"))
                 .collect()
         };
-        ArenaSet {
+        Ok(ArenaSet {
             arenas,
             edge_shard: layout.edge_shard.clone(),
             edge_local: layout.edge_local.clone(),
             flat_offset: layout.flat_offset.clone(),
-        }
+            mode: mode.clone(),
+        })
     }
 
     #[inline]
@@ -772,8 +931,8 @@ pub struct Messages {
 impl Messages {
     /// All messages initialized uniform (1/|D|), in one flat arena whose
     /// cell order is the `Mrf::msg_offset` layout, stored at the default
-    /// [`Precision::F64`]. Initialization is a single bulk pass — no
-    /// per-cell atomic stores on the freshly owned allocation.
+    /// [`Precision::F64`] in heap arenas. Initialization is a single bulk
+    /// pass — no per-cell atomic stores on the freshly owned allocation.
     pub fn uniform(mrf: &Mrf) -> Self {
         Self::uniform_with(mrf, Precision::F64)
     }
@@ -783,19 +942,28 @@ impl Messages {
     /// (e.g. `1/3` stores as the nearest `f32`), exactly as a store of the
     /// same value would.
     pub fn uniform_with(mrf: &Mrf, precision: Precision) -> Self {
+        Self::uniform_in(mrf, precision, &ArenaMode::Mem)
+            .expect("heap arena allocation is infallible")
+    }
+
+    /// [`Messages::uniform_with`] at an explicit [`ArenaMode`]. The only
+    /// fallible arm is [`ArenaMode::Mmap`] (arena temp-file creation);
+    /// cell values and layout are identical across modes.
+    pub fn uniform_in(mrf: &Mrf, precision: Precision, arena: &ArenaMode) -> Result<Self> {
         let store = match precision {
-            Precision::F64 => Store::F64(ArenaSet::uniform(mrf)),
-            Precision::F32 => Store::F32(ArenaSet::uniform(mrf)),
+            Precision::F64 => Store::F64(ArenaSet::uniform(mrf, arena)?),
+            Precision::F32 => Store::F32(ArenaSet::uniform(mrf, arena)?),
         };
-        Messages { store }
+        Ok(Messages { store })
     }
 
     /// All messages initialized uniform, with each shard of `partition`
     /// (over the message universe: `partition.num_tasks()` must equal
     /// `mrf.num_messages()`) stored contiguously in its own cache-line-
-    /// aligned arena, at the default [`Precision::F64`]. Behaviorally
-    /// identical to [`Messages::uniform`] through [`MsgSource`] /
-    /// [`Messages::write_msg`]; only the physical layout differs.
+    /// aligned arena, at the default [`Precision::F64`] in heap arenas.
+    /// Behaviorally identical to [`Messages::uniform`] through
+    /// [`MsgSource`] / [`Messages::write_msg`]; only the physical layout
+    /// differs.
     pub fn uniform_partitioned(mrf: &Mrf, partition: &Partition) -> Self {
         Self::uniform_partitioned_with(mrf, partition, Precision::F64)
     }
@@ -806,21 +974,47 @@ impl Messages {
         partition: &Partition,
         precision: Precision,
     ) -> Self {
-        let store = match precision {
-            Precision::F64 => Store::F64(ArenaSet::uniform_partitioned(mrf, partition)),
-            Precision::F32 => Store::F32(ArenaSet::uniform_partitioned(mrf, partition)),
-        };
-        Messages { store }
+        Self::uniform_partitioned_in(mrf, partition, precision, &ArenaMode::Mem)
+            .expect("heap arena allocation is infallible")
     }
 
-    /// Uniform state sharing `layout`'s arena sharding **and** storage
-    /// precision — used by caches that shadow the live state (the residual
-    /// lookahead) so their locality and rounding behavior match the state
-    /// they mirror.
+    /// [`Messages::uniform_partitioned_with`] at an explicit
+    /// [`ArenaMode`]: each shard's arena gets its own file-backed
+    /// mapping under [`ArenaMode::Mmap`].
+    pub fn uniform_partitioned_in(
+        mrf: &Mrf,
+        partition: &Partition,
+        precision: Precision,
+        arena: &ArenaMode,
+    ) -> Result<Self> {
+        let store = match precision {
+            Precision::F64 => Store::F64(ArenaSet::uniform_partitioned(mrf, partition, arena)?),
+            Precision::F32 => Store::F32(ArenaSet::uniform_partitioned(mrf, partition, arena)?),
+        };
+        Ok(Messages { store })
+    }
+
+    /// Uniform state sharing `layout`'s arena sharding, storage
+    /// precision, **and** backing [`ArenaMode`] — used by caches that
+    /// shadow the live state (the residual lookahead, the synchronous
+    /// engine's double buffers) so their locality, rounding, and
+    /// spill-to-disk behavior match the state they mirror. An mmap-mode
+    /// shadow that would otherwise stay heap-resident is exactly the
+    /// allocation that defeats an out-of-core run.
+    ///
+    /// # Panics
+    ///
+    /// If `layout` is file-backed and the shadow's arena temp files
+    /// cannot be created (the live state already succeeded in the same
+    /// directory moments earlier, so this is disk-full territory).
     pub fn uniform_like(mrf: &Mrf, layout: &Messages) -> Self {
         let store = match &layout.store {
-            Store::F64(a) => Store::F64(ArenaSet::uniform_like(mrf, a)),
-            Store::F32(a) => Store::F32(ArenaSet::uniform_like(mrf, a)),
+            Store::F64(a) => Store::F64(
+                ArenaSet::uniform_like(mrf, a).expect("allocating shadow message arenas"),
+            ),
+            Store::F32(a) => Store::F32(
+                ArenaSet::uniform_like(mrf, a).expect("allocating shadow message arenas"),
+            ),
         };
         Messages { store }
     }
@@ -831,6 +1025,11 @@ impl Messages {
             Store::F64(_) => Precision::F64,
             Store::F32(_) => Precision::F32,
         }
+    }
+
+    /// Backing-allocation mode of the arenas.
+    pub fn arena_mode(&self) -> &ArenaMode {
+        dispatch!(self, a => &a.mode)
     }
 
     /// Message-arena footprint as `(logical_bytes, padded_bytes)`:
@@ -1228,5 +1427,81 @@ mod tests {
         let shadow = Messages::uniform_like(&m, &live);
         assert_eq!(shadow.precision(), Precision::F32);
         assert_eq!(shadow.num_shards(), live.num_shards());
+    }
+
+    #[test]
+    fn arena_mode_labels_and_specs() {
+        assert_eq!(ArenaMode::default(), ArenaMode::Mem);
+        assert_eq!(ArenaMode::Mem.label(), "mem");
+        assert_eq!(ArenaMode::Mem.spec(), "mem");
+        assert!(!ArenaMode::Mem.is_mmap());
+        let plain = ArenaMode::Mmap { dir: None };
+        assert_eq!(plain.label(), "mmap");
+        assert_eq!(plain.spec(), "mmap");
+        assert!(plain.is_mmap());
+        let dir = ArenaMode::Mmap { dir: Some("/x/y".into()) };
+        assert_eq!(dir.label(), "mmap");
+        assert_eq!(dir.spec(), "mmap:/x/y");
+    }
+
+    #[test]
+    fn default_arena_mode_is_mem() {
+        let m = builders::build(&ModelSpec::Path { n: 3 }, 1);
+        assert_eq!(*Messages::uniform(&m).arena_mode(), ArenaMode::Mem);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mmap_arena_matches_mem_bitwise() {
+        let m = builders::build(&ModelSpec::Ising { n: 4 }, 7);
+        let mode = ArenaMode::Mmap { dir: None };
+        for precision in [Precision::F64, Precision::F32] {
+            let mapped = Messages::uniform_in(&m, precision, &mode).unwrap();
+            assert!(mapped.arena_mode().is_mmap());
+            let mem = Messages::uniform_with(&m, precision);
+            assert_eq!(mapped.snapshot(), mem.snapshot(), "{precision:?}");
+            // Writes land identically through the shared cell contract.
+            mapped.write_msg(&m, 5, &[0.2, 0.8]);
+            mem.write_msg(&m, 5, &[0.2, 0.8]);
+            assert_eq!(mapped.snapshot(), mem.snapshot(), "{precision:?}");
+            assert_eq!(mapped.arena_bytes(), mem.arena_bytes());
+        }
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mmap_arena_partitioned_and_snapshot_restore() {
+        let m = builders::build(&ModelSpec::Potts { n: 3, q: 3 }, 2);
+        let p = Partition::bfs_edges(&m.graph, 3);
+        let mode = ArenaMode::Mmap { dir: None };
+        let msgs =
+            Messages::uniform_partitioned_in(&m, &p, Precision::F64, &mode).unwrap();
+        msgs.write_msg(&m, 3, &[0.1, 0.2, 0.7]);
+        let snap = msgs.snapshot();
+        msgs.write_msg(&m, 3, &[0.5, 0.3, 0.2]);
+        msgs.restore(&snap);
+        assert_eq!(msgs.snapshot(), snap);
+        // Snapshots are interchangeable with heap-arena states.
+        let mem = Messages::uniform(&m);
+        mem.restore(&snap);
+        assert_eq!(mem.snapshot(), snap);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn uniform_like_mirrors_arena_mode() {
+        let m = builders::build(&ModelSpec::Ising { n: 3 }, 1);
+        let mode = ArenaMode::Mmap { dir: None };
+        let live = Messages::uniform_in(&m, Precision::F64, &mode).unwrap();
+        let shadow = Messages::uniform_like(&m, &live);
+        assert!(shadow.arena_mode().is_mmap());
+        assert_eq!(shadow.snapshot(), Messages::uniform(&m).snapshot());
+    }
+
+    #[test]
+    fn mmap_arena_bad_dir_is_clean_error() {
+        let m = builders::build(&ModelSpec::Path { n: 3 }, 1);
+        let mode = ArenaMode::Mmap { dir: Some("/nonexistent-rbp-arena-dir".into()) };
+        assert!(Messages::uniform_in(&m, Precision::F64, &mode).is_err());
     }
 }

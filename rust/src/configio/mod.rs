@@ -7,7 +7,8 @@ pub mod json;
 
 pub use json::{parse, Json, JsonError};
 
-pub use crate::bp::{Kernel, Precision};
+pub use crate::bp::{ArenaMode, Kernel, Precision};
+pub use crate::model::io::{parse_load_mode, LoadMode};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -254,6 +255,23 @@ pub fn parse_precision(s: &str) -> Result<Precision> {
         "f32" => Ok(Precision::F32),
         other => bail!("expected f64|f32, got '{other}'"),
     }
+}
+
+/// Parse the arena-backing axis value (`--arena mem|mmap[:dir]`).
+pub fn parse_arena_mode(s: &str) -> Result<ArenaMode> {
+    if s == "mem" {
+        return Ok(ArenaMode::Mem);
+    }
+    if s == "mmap" {
+        return Ok(ArenaMode::Mmap { dir: None });
+    }
+    if let Some(dir) = s.strip_prefix("mmap:") {
+        if dir.is_empty() {
+            bail!("mmap arena directory is empty (use plain 'mmap' for the default temp dir)");
+        }
+        return Ok(ArenaMode::Mmap { dir: Some(dir.into()) });
+    }
+    bail!("expected mem|mmap[:dir], got '{s}'")
 }
 
 /// Reject Potts state counts outside 2..=MAX_DOMAIN at the config
@@ -534,6 +552,23 @@ pub struct RunConfig {
     /// cells per cache line). Compute stays f64 in registers either way —
     /// reads widen exactly, writes round once per stored cell.
     pub precision: Precision,
+    /// Model-load axis (`--load-mode read|map|auto`): how `--load-model`
+    /// snapshots come into memory. `Auto` (default) memory-maps v2 files
+    /// zero-copy and falls back to the copying read path when the file
+    /// cannot be mapped; `Read` forces the historical copying path;
+    /// `Map` states the zero-copy intent explicitly. The loaded model is
+    /// bit-identical either way.
+    pub load_mode: LoadMode,
+    /// Arena-backing axis (`--arena mem|mmap[:dir]`): heap message
+    /// arenas (default) or file-backed arenas in unlinked sparse temp
+    /// files, for runs whose message state exceeds RAM. Cell values and
+    /// trajectories are identical across modes.
+    pub arena: ArenaMode,
+    /// Verify checksums + semantic invariants on the mapped load path
+    /// (`--verify-load`). Off by default: full verification touches
+    /// every page, which defeats the point of a lazy zero-copy map. The
+    /// read path always verifies regardless.
+    pub verify_load: bool,
 }
 
 impl RunConfig {
@@ -562,6 +597,9 @@ impl RunConfig {
             fused: true,
             kernel: Kernel::Simd,
             precision: Precision::F64,
+            load_mode: LoadMode::Auto,
+            arena: ArenaMode::Mem,
+            verify_load: false,
         }
     }
 
@@ -613,6 +651,24 @@ impl RunConfig {
         self
     }
 
+    /// Set the model-load axis (zero-copy map vs copying read).
+    pub fn with_load_mode(mut self, mode: LoadMode) -> Self {
+        self.load_mode = mode;
+        self
+    }
+
+    /// Set the arena-backing axis (heap vs file-backed message arenas).
+    pub fn with_arena(mut self, arena: ArenaMode) -> Self {
+        self.arena = arena;
+        self
+    }
+
+    /// Enable checksum + semantic verification on the mapped load path.
+    pub fn with_verify_load(mut self, verify: bool) -> Self {
+        self.verify_load = verify;
+        self
+    }
+
     /// Serialize as a JSON object.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -629,6 +685,9 @@ impl RunConfig {
             ("fused", Json::Bool(self.fused)),
             ("kernel", Json::Str(self.kernel.label().into())),
             ("precision", Json::Str(self.precision.label().into())),
+            ("load_mode", Json::Str(self.load_mode.label().into())),
+            ("arena", Json::Str(self.arena.spec())),
+            ("verify_load", Json::Bool(self.verify_load)),
         ])
     }
 
@@ -685,6 +744,25 @@ impl RunConfig {
                 p.as_str()
                     .ok_or_else(|| anyhow!("precision must be a string (f64|f32)"))?,
             )?;
+        }
+        if let Some(l) = v.get("load_mode") {
+            // Configs written before the out-of-core axes parse with the
+            // defaults; present-but-malformed values are errors.
+            cfg.load_mode = parse_load_mode(
+                l.as_str()
+                    .ok_or_else(|| anyhow!("load_mode must be a string (read|map|auto)"))?,
+            )?;
+        }
+        if let Some(a) = v.get("arena") {
+            cfg.arena = parse_arena_mode(
+                a.as_str()
+                    .ok_or_else(|| anyhow!("arena must be a string (mem|mmap[:dir])"))?,
+            )?;
+        }
+        if let Some(b) = v.get("verify_load") {
+            cfg.verify_load = b
+                .as_bool()
+                .ok_or_else(|| anyhow!("verify_load must be a boolean (true|false)"))?;
         }
         Ok(cfg)
     }
@@ -917,6 +995,47 @@ mod tests {
         assert!(parse_on_off("wat").is_err());
         // A malformed fused value is an error, not a silent default.
         let bad = r#"{"model": {"kind": "ising", "n": 5}, "algorithm": "rr", "fused": "off"}"#;
+        assert!(RunConfig::from_json(&parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn outofcore_axes_roundtrip_and_back_compat() {
+        let cfg = RunConfig::new(ModelSpec::Ising { n: 6 }, AlgorithmSpec::RelaxedResidual)
+            .with_load_mode(LoadMode::Map)
+            .with_arena(ArenaMode::Mmap { dir: Some("/var/tmp".into()) })
+            .with_verify_load(true);
+        let j = cfg.to_json().to_string_pretty();
+        let back = RunConfig::from_json(&parse(&j).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+        assert_eq!(back.load_mode, LoadMode::Map);
+        assert_eq!(back.arena, ArenaMode::Mmap { dir: Some("/var/tmp".into()) });
+        assert!(back.verify_load);
+        // Configs written before the out-of-core axes parse with defaults.
+        let legacy = r#"{"model": {"kind": "ising", "n": 5}, "algorithm": "rr"}"#;
+        let cfg = RunConfig::from_json(&parse(legacy).unwrap()).unwrap();
+        assert_eq!(cfg.load_mode, LoadMode::Auto);
+        assert_eq!(cfg.arena, ArenaMode::Mem);
+        assert!(!cfg.verify_load);
+        // CLI values.
+        assert_eq!(parse_load_mode("read").unwrap(), LoadMode::Read);
+        assert_eq!(parse_load_mode("map").unwrap(), LoadMode::Map);
+        assert_eq!(parse_load_mode("auto").unwrap(), LoadMode::Auto);
+        assert!(parse_load_mode("lazy").is_err());
+        assert_eq!(parse_arena_mode("mem").unwrap(), ArenaMode::Mem);
+        assert_eq!(parse_arena_mode("mmap").unwrap(), ArenaMode::Mmap { dir: None });
+        assert_eq!(
+            parse_arena_mode("mmap:/scratch").unwrap(),
+            ArenaMode::Mmap { dir: Some("/scratch".into()) }
+        );
+        assert!(parse_arena_mode("mmap:").is_err());
+        assert!(parse_arena_mode("disk").is_err());
+        // Malformed values are errors, not silent defaults.
+        let bad = r#"{"model": {"kind": "ising", "n": 5}, "algorithm": "rr", "load_mode": 1}"#;
+        assert!(RunConfig::from_json(&parse(bad).unwrap()).is_err());
+        let bad = r#"{"model": {"kind": "ising", "n": 5}, "algorithm": "rr", "arena": "tape"}"#;
+        assert!(RunConfig::from_json(&parse(bad).unwrap()).is_err());
+        let bad =
+            r#"{"model": {"kind": "ising", "n": 5}, "algorithm": "rr", "verify_load": "yes"}"#;
         assert!(RunConfig::from_json(&parse(bad).unwrap()).is_err());
     }
 

@@ -69,6 +69,13 @@ pub struct Counters {
     /// gauges — the model is shared run-wide state, not a per-worker
     /// event.
     pub model_bytes: u64,
+    /// **Gauge**: the process's peak resident set (`VmHWM` from
+    /// `/proc/self/status`, bytes) sampled by the telemetry ticker and once
+    /// at run end — the out-of-core axis's headline number: an mmap-arena
+    /// run of a larger-than-RAM model keeps this far below
+    /// `msg_bytes_padded + model_bytes`. Process-wide, so max-merged;
+    /// zero on platforms without procfs.
+    pub peak_rss_bytes: u64,
 }
 
 impl Counters {
@@ -92,6 +99,7 @@ impl Counters {
         self.msg_bytes_logical = self.msg_bytes_logical.max(other.msg_bytes_logical);
         self.msg_bytes_padded = self.msg_bytes_padded.max(other.msg_bytes_padded);
         self.model_bytes = self.model_bytes.max(other.model_bytes);
+        self.peak_rss_bytes = self.peak_rss_bytes.max(other.peak_rss_bytes);
     }
 }
 
@@ -117,6 +125,7 @@ pub struct AtomicCounters {
     msg_bytes_logical: AtomicU64,
     msg_bytes_padded: AtomicU64,
     model_bytes: AtomicU64,
+    peak_rss_bytes: AtomicU64,
 }
 
 impl AtomicCounters {
@@ -138,6 +147,7 @@ impl AtomicCounters {
         self.msg_bytes_logical.store(c.msg_bytes_logical, Ordering::Relaxed);
         self.msg_bytes_padded.store(c.msg_bytes_padded, Ordering::Relaxed);
         self.model_bytes.store(c.model_bytes, Ordering::Relaxed);
+        self.peak_rss_bytes.store(c.peak_rss_bytes, Ordering::Relaxed);
     }
 
     /// Read the last published snapshot.
@@ -158,6 +168,7 @@ impl AtomicCounters {
             msg_bytes_logical: self.msg_bytes_logical.load(Ordering::Relaxed),
             msg_bytes_padded: self.msg_bytes_padded.load(Ordering::Relaxed),
             model_bytes: self.model_bytes.load(Ordering::Relaxed),
+            peak_rss_bytes: self.peak_rss_bytes.load(Ordering::Relaxed),
         }
     }
 }
@@ -255,13 +266,26 @@ mod tests {
         // Every worker reports the same shared arenas: aggregation must
         // not multiply the footprint by the thread count.
         let per = vec![
-            Counters { updates: 1, msg_bytes_logical: 640, msg_bytes_padded: 704, ..Default::default() },
-            Counters { updates: 2, msg_bytes_logical: 640, msg_bytes_padded: 704, ..Default::default() },
+            Counters {
+                updates: 1,
+                msg_bytes_logical: 640,
+                msg_bytes_padded: 704,
+                peak_rss_bytes: 9000,
+                ..Default::default()
+            },
+            Counters {
+                updates: 2,
+                msg_bytes_logical: 640,
+                msg_bytes_padded: 704,
+                peak_rss_bytes: 8000,
+                ..Default::default()
+            },
         ];
         let m = MetricsReport::aggregate(&per);
         assert_eq!(m.total.updates, 3);
         assert_eq!(m.total.msg_bytes_logical, 640);
         assert_eq!(m.total.msg_bytes_padded, 704);
+        assert_eq!(m.total.peak_rss_bytes, 9000, "process-wide gauge max-merges");
     }
 
     #[test]

@@ -215,9 +215,16 @@ impl WorkerPool {
                 let timer = &timer;
                 let _sampler = outer.spawn(move || {
                     let tick = obs.tick().max(Duration::from_micros(100)).as_secs_f64();
+                    // The peak-RSS gauge is process-wide state, not a
+                    // per-worker counter: the sampler stamps it into each
+                    // snapshot it emits (workers never touch it).
+                    let stamped = |mut c: Counters| {
+                        c.peak_rss_bytes = crate::util::peak_rss_bytes();
+                        c
+                    };
                     obs.sample(
                         timer.elapsed_secs(),
-                        &board.snapshot_total(),
+                        &stamped(board.snapshot_total()),
                         policy.final_priority(),
                     );
                     let mut last = timer.elapsed_secs();
@@ -226,7 +233,11 @@ impl WorkerPool {
                         let now = timer.elapsed_secs();
                         if now - last >= tick {
                             last = now;
-                            obs.sample(now, &board.snapshot_total(), policy.final_priority());
+                            obs.sample(
+                                now,
+                                &stamped(board.snapshot_total()),
+                                policy.final_priority(),
+                            );
                         }
                     }
                 });
@@ -388,6 +399,10 @@ impl WorkerPool {
         // phase; fold it in before the final observer sample so the
         // trace's last point matches the reported stats.
         metrics.total.tasks_touched += seed_tasks_touched;
+        // Stamp the process-wide peak-RSS gauge into the totals (even
+        // unobserved runs report it in their stats/JSON).
+        metrics.total.peak_rss_bytes =
+            metrics.total.peak_rss_bytes.max(crate::util::peak_rss_bytes());
         // Final sample from the exact (post-join) totals: guarantees every
         // observed run yields at least two points (start + end) and that
         // the trace's last point matches the reported stats.

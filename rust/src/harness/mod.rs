@@ -22,7 +22,9 @@ pub mod report;
 
 pub use report::{ratio_cell, Report, Row};
 
-use crate::configio::{AlgorithmSpec, Kernel, ModelSpec, PartitionSpec, Precision, RunConfig};
+use crate::configio::{
+    AlgorithmSpec, ArenaMode, Kernel, LoadMode, ModelSpec, PartitionSpec, Precision, RunConfig,
+};
 use crate::model::{EvidenceDelta, Mrf};
 use crate::run::run_on_model_observed;
 use crate::telemetry::{Trace, TraceRecorder, DELTA_FRACTION};
@@ -74,6 +76,15 @@ pub struct Harness {
     /// Model-cache directory built models are saved into (`--save-model`,
     /// format v2) so later sweeps can `--load-model` them.
     pub save_model: Option<PathBuf>,
+    /// How `--load-model` files are brought in (`--load-mode`): zero-copy
+    /// mapped sections, copying reads, or auto (map with read fallback).
+    pub load_mode: LoadMode,
+    /// Message-arena backing applied to every cell (`--arena`): heap or
+    /// file-backed temp mappings (the out-of-core axis).
+    pub arena: ArenaMode,
+    /// Run checksum + semantic validation on mapped loads
+    /// (`--verify-load`).
+    pub verify_load: bool,
     /// Traces recorded by [`Harness::run_cell`] since the last
     /// [`Harness::drain_traces`], keyed by cell id.
     pub trace_log: RefCell<Vec<(String, Trace)>>,
@@ -95,6 +106,9 @@ impl Default for Harness {
             precision: Precision::F64,
             load_model: None,
             save_model: None,
+            load_mode: LoadMode::Auto,
+            arena: ArenaMode::Mem,
+            verify_load: false,
             trace_log: RefCell::new(Vec::new()),
         }
     }
@@ -122,6 +136,8 @@ impl Harness {
             self.seed,
             self.load_model.as_deref(),
             self.save_model.as_deref(),
+            self.load_mode,
+            self.verify_load,
         )?;
         Ok(mrf)
     }
@@ -134,6 +150,7 @@ impl Harness {
         cfg.fused = self.fused;
         cfg.kernel = self.kernel;
         cfg.precision = self.precision;
+        cfg.arena = self.arena.clone();
         cfg
     }
 

@@ -16,8 +16,8 @@
 use anyhow::{anyhow, bail, Result};
 use relaxed_bp::cli::Args;
 use relaxed_bp::configio::{
-    parse_kernel, parse_on_off, parse_precision, AlgorithmSpec, ModelSpec, PartitionSpec,
-    RunConfig,
+    parse_arena_mode, parse_kernel, parse_load_mode, parse_on_off, parse_precision,
+    AlgorithmSpec, ModelSpec, PartitionSpec, RunConfig,
 };
 use relaxed_bp::harness::Harness;
 use relaxed_bp::model::{builders, io as model_io, EvidenceDelta};
@@ -25,7 +25,7 @@ use relaxed_bp::run::{run_config, run_on_model_prepped, PrepStats};
 use relaxed_bp::telemetry;
 use relaxed_bp::util::Timer;
 
-const SWITCHES: &[&str] = &["use-pjrt", "verbose", "marginals", "quick", "check"];
+const SWITCHES: &[&str] = &["use-pjrt", "verbose", "marginals", "quick", "check", "verify-load"];
 
 fn main() {
     if let Err(e) = real_main() {
@@ -110,6 +110,15 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(p) = args.opt("precision") {
         cfg.precision = parse_precision(p)?;
     }
+    if let Some(m) = args.opt("load-mode") {
+        cfg.load_mode = parse_load_mode(m)?;
+    }
+    if let Some(a) = args.opt("arena") {
+        cfg.arena = parse_arena_mode(a)?;
+    }
+    if args.has_switch("verify-load") {
+        cfg.verify_load = true;
+    }
 
     // Model cache legs: --load-model replaces the in-process build with a
     // disk load (v1/v2 auto-detected, parallel chunked reads); --save-model
@@ -120,8 +129,10 @@ fn cmd_run(args: &Args) -> Result<()> {
         let mut prep = PrepStats::default();
         let mrf = if let Some(path) = args.opt("load-model") {
             let t = Timer::start();
-            let mrf = model_io::load(path)?;
+            let (mrf, resolved) =
+                model_io::load_with_mode(path, cfg.threads, cfg.load_mode, cfg.verify_load)?;
             prep.load_secs = t.elapsed_secs();
+            prep.load_mode = resolved;
             prep.model_bytes = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
             mrf
         } else {
@@ -209,6 +220,13 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     }
     h.load_model = args.opt_path("load-model");
     h.save_model = args.opt_path("save-model");
+    if let Some(m) = args.opt("load-mode") {
+        h.load_mode = parse_load_mode(m)?;
+    }
+    if let Some(a) = args.opt("arena") {
+        h.arena = parse_arena_mode(a)?;
+    }
+    h.verify_load = args.has_switch("verify-load");
 
     match which {
         "table1" | "table2" | "table5" | "table6" | "moderate" => {
@@ -302,6 +320,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
     }
     opts.load_model = args.opt_path("load-model");
     opts.save_model = args.opt_path("save-model");
+    if let Some(m) = args.opt("load-mode") {
+        opts.load_mode = parse_load_mode(m)?;
+    }
+    if let Some(a) = args.opt("arena") {
+        opts.arena = parse_arena_mode(a)?;
+    }
+    opts.verify_load = args.has_switch("verify-load");
     opts.check = args.has_switch("check");
 
     let outcomes = telemetry::run_bench(&opts)?;
@@ -385,10 +410,14 @@ USAGE:
                  [--fused on|off] [--kernel scalar|simd] [--precision f64|f32]
                  [--config cfg.json] [--out report.json] [--marginals]
                  [--delta-fraction F] [--save-model FILE] [--load-model FILE]
+                 [--load-mode read|map|auto] [--arena mem|mmap[:dir]]
+                 [--verify-load]
   relaxed-bp experiment <id> [--scale F] [--threads 1,2,4,8]
                  [--max-threads N] [--out-dir DIR] [--seed S] [--use-pjrt]
                  [--partition MODE] [--fused on|off] [--kernel scalar|simd]
                  [--precision f64|f32] [--save-model DIR] [--load-model DIR]
+                 [--load-mode read|map|auto] [--arena mem|mmap[:dir]]
+                 [--verify-load]
       ids: table1 table3 table4 table7 fig2 fig4 fig5 fig6 fig7 lemma2
            locality fused simd precision delta all
   relaxed-bp bench [--quick] [--families tree,ising,potts,potts32,ldpc,powerlaw]
@@ -396,6 +425,8 @@ USAGE:
                  [--time-limit SECS] [--tick-ms MS] [--tolerance X]
                  [--partitions off,affine] [--check]
                  [--save-model DIR] [--load-model DIR]
+                 [--load-mode read|map|auto] [--arena mem|mmap[:dir]]
+                 [--verify-load]
       writes BENCH_<FAMILY>.json baselines (with convergence traces) to the
       repo root and diffs them against the previous revision's baselines;
       --check exits non-zero on regression
@@ -412,6 +443,22 @@ MODEL CACHE (the cold-path axis): generate once, sweep many. run takes
         and bench take cache directories keyed by <family>_<params>_seedS
         .rbpm: --load-model consults the cache before building, --save-model
         fills it. Reports carry build_secs/load_secs/init_secs/model_bytes.
+
+LOAD MODE (the out-of-core load axis): auto (default) = mmap v2 files
+        zero-copy when the platform and file layout allow it, else fall
+        back to the threaded read path; map = require the zero-copy path
+        (error if unavailable); read = always the threaded read path.
+        Mapped loads skip checksum verification so pages fault in lazily;
+        --verify-load forces the full checksum + semantic sweep (pages
+        everything in). Reports carry load_mode.
+
+ARENA (the out-of-core message axis): mem (default) = heap-allocated
+        message arenas; mmap[:dir] = arenas backed by unlinked sparse temp
+        files (under dir, default the system temp dir) mapped read-write,
+        so message state larger than RAM spills to disk under memory
+        pressure instead of OOM-killing the run. Same alignment, atomic
+        access, and snapshot semantics as mem — fixed points are
+        bit-identical. Reports carry arena and peak_rss_bytes.
 
 MODELS: tree:N ising:N potts:N[:q] ldpc:N[:flip] path:N adversarial_tree:N
         uniform_tree:N[:arity] powerlaw:N[:m]

@@ -38,11 +38,14 @@ impl FactorRef {
     }
 }
 
+use crate::model::ModelStorage;
+
 /// Deduplicated pool of edge-factor matrices.
 #[derive(Debug, Clone, Default)]
 pub struct FactorPool {
-    /// Matrix data, concatenated row-major.
-    data: Vec<f64>,
+    /// Matrix data, concatenated row-major (heap-owned, or borrowed from
+    /// a mapped snapshot).
+    data: ModelStorage<f64>,
     /// Per-matrix (offset, rows, cols).
     entries: Vec<(u32, u16, u16)>,
 }
@@ -58,7 +61,7 @@ impl FactorPool {
         assert_eq!(values.len(), rows * cols, "factor matrix shape mismatch");
         assert!(values.iter().all(|v| *v >= 0.0 && v.is_finite()), "factors must be finite ≥ 0");
         let off = self.data.len() as u32;
-        self.data.extend_from_slice(values);
+        self.data.to_mut().extend_from_slice(values);
         let idx = self.entries.len() as u32;
         self.entries.push((off, rows as u16, cols as u16));
         idx
@@ -132,6 +135,21 @@ impl FactorPool {
     /// every invariant [`FactorPool::add`] enforces incrementally. Errors
     /// instead of panicking — the parts may come from an untrusted file.
     pub fn from_raw(data: Vec<f64>, entries: Vec<(u32, u16, u16)>) -> Result<Self, String> {
+        Self::from_storage(data.into(), entries, true)
+    }
+
+    /// [`FactorPool::from_raw`] over any [`ModelStorage`] backing (the
+    /// zero-copy map path passes a borrowed section). Shape/offset
+    /// invariants are always checked (they only touch `entries`);
+    /// `verify_values` gates the finite-≥0 scan of the data, which pages
+    /// in the whole section on a mapped load — unverified maps
+    /// (`--load-mode map` without `--verify-load`) skip it, matching the
+    /// checksum policy.
+    pub fn from_storage(
+        data: ModelStorage<f64>,
+        entries: Vec<(u32, u16, u16)>,
+        verify_values: bool,
+    ) -> Result<Self, String> {
         let mut expect = 0usize;
         for (i, &(off, r, c)) in entries.iter().enumerate() {
             if off as usize != expect {
@@ -148,7 +166,7 @@ impl FactorPool {
                 data.len()
             ));
         }
-        if !data.iter().all(|v| *v >= 0.0 && v.is_finite()) {
+        if verify_values && !data.iter().all(|v| *v >= 0.0 && v.is_finite()) {
             return Err("factor pool contains non-finite or negative values".into());
         }
         Ok(Self { data, entries })
@@ -158,8 +176,8 @@ impl FactorPool {
 /// Flat node-factor table with per-node offsets.
 #[derive(Debug, Clone, Default)]
 pub struct NodeFactors {
-    offsets: Vec<u32>,
-    data: Vec<f64>,
+    offsets: ModelStorage<u32>,
+    data: ModelStorage<f64>,
 }
 
 impl NodeFactors {
@@ -175,7 +193,7 @@ impl NodeFactors {
             data.extend_from_slice(f);
             offsets.push(data.len() as u32);
         }
-        Self { offsets, data }
+        Self { offsets: offsets.into(), data: data.into() }
     }
 
     /// Number of nodes with assigned potentials.
@@ -201,7 +219,9 @@ impl NodeFactors {
         assert_eq!(vals.len(), self.domain(i), "node {i}: prior length must match the domain");
         assert!(vals.iter().all(|v| *v >= 0.0 && v.is_finite()), "priors must be finite ≥ 0");
         let off = self.offsets[i] as usize;
-        self.data[off..off + vals.len()].copy_from_slice(vals);
+        // Copy-on-write: a mapped table is copied to the heap on the
+        // first evidence write (mapped snapshots are read-only).
+        self.data.to_mut()[off..off + vals.len()].copy_from_slice(vals);
     }
 
     /// Raw per-node offsets, length `num_nodes() + 1` (serialization
@@ -220,12 +240,28 @@ impl NodeFactors {
     /// Errors instead of panicking — the parts may come from an untrusted
     /// file.
     pub fn from_raw(offsets: Vec<u32>, data: Vec<f64>) -> Result<Self, String> {
+        Self::from_storage(offsets.into(), data.into(), true)
+    }
+
+    /// [`NodeFactors::from_raw`] over any [`ModelStorage`] backing (the
+    /// zero-copy map path passes borrowed sections). `verify_values`
+    /// gates the two full-table scans (offset monotonicity and the
+    /// finite-≥0 value check), which page in both sections on a mapped
+    /// load; the cheap structural checks (first/last offset vs data
+    /// length) always run.
+    pub fn from_storage(
+        offsets: ModelStorage<u32>,
+        data: ModelStorage<f64>,
+        verify_values: bool,
+    ) -> Result<Self, String> {
         if offsets.first() != Some(&0) {
             return Err("node factor offsets must start at 0".into());
         }
-        for (i, w) in offsets.windows(2).enumerate() {
-            if w[1] <= w[0] {
-                return Err(format!("node {i}: empty or non-monotone factor row"));
+        if verify_values {
+            for (i, w) in offsets.windows(2).enumerate() {
+                if w[1] <= w[0] {
+                    return Err(format!("node {i}: empty or non-monotone factor row"));
+                }
             }
         }
         if offsets.last().copied().unwrap_or(0) as usize != data.len() {
@@ -234,7 +270,7 @@ impl NodeFactors {
                 data.len()
             ));
         }
-        if !data.iter().all(|v| *v >= 0.0 && v.is_finite()) {
+        if verify_values && !data.iter().all(|v| *v >= 0.0 && v.is_finite()) {
             return Err("node factors contain non-finite or negative values".into());
         }
         Ok(Self { offsets, data })

@@ -20,6 +20,7 @@
 //! equality suite).
 
 use crate::coordinator::run_workers;
+use crate::model::ModelStorage;
 use crate::util::{cold_path_threads, DisjointWriter};
 
 /// Builder: stream undirected edges into degree counters and endpoint
@@ -199,7 +200,14 @@ impl GraphBuilder {
             });
         }
 
-        let csr = Csr { offsets, adj_node, adj_out, adj_in, edge_src, edge_dst };
+        let csr = Csr {
+            offsets: offsets.into(),
+            adj_node: adj_node.into(),
+            adj_out: adj_out.into(),
+            adj_in: adj_in.into(),
+            edge_src: edge_src.into(),
+            edge_dst: edge_dst.into(),
+        };
         csr.assert_simple(threads);
         csr
     }
@@ -213,17 +221,17 @@ impl GraphBuilder {
 #[derive(Debug, Clone)]
 pub struct Csr {
     /// `offsets[i]..offsets[i+1]` indexes node i's adjacency slots.
-    pub offsets: Vec<u32>,
+    pub offsets: ModelStorage<u32>,
     /// Neighbor node id per slot.
-    pub adj_node: Vec<u32>,
+    pub adj_node: ModelStorage<u32>,
     /// Directed edge id leaving the row node, per slot.
-    pub adj_out: Vec<u32>,
+    pub adj_out: ModelStorage<u32>,
     /// Directed edge id entering the row node, per slot.
-    pub adj_in: Vec<u32>,
+    pub adj_in: ModelStorage<u32>,
     /// Source node per directed edge.
-    pub edge_src: Vec<u32>,
+    pub edge_src: ModelStorage<u32>,
     /// Destination node per directed edge.
-    pub edge_dst: Vec<u32>,
+    pub edge_dst: ModelStorage<u32>,
 }
 
 impl Csr {

@@ -34,13 +34,15 @@
 //! words); big-endian hosts get a clean refusal rather than silent
 //! garbage.
 
-use super::{Csr, FactorPool, FactorRef, GraphBuilder, Mrf, NodeFactors, MAX_DOMAIN};
+use super::{Csr, FactorPool, FactorRef, GraphBuilder, ModelStorage, Mrf, NodeFactors, MAX_DOMAIN};
 use crate::coordinator::run_workers;
 use crate::util::cold_path_threads;
-use anyhow::{bail, Context, Result};
+use crate::util::mmap::Mmap;
+use anyhow::{anyhow, bail, Context, Result};
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::os::unix::fs::FileExt;
+use std::sync::Arc;
 
 const MAGIC: &[u8; 4] = b"RBPM";
 const VERSION_V1: u32 = 1;
@@ -374,20 +376,20 @@ pub fn write_mrf_v2<W: Write>(mrf: &Mrf, mut w: W) -> Result<u64> {
 
     let sections: [&[u8]; SECTION_COUNT] = [
         mrf.name.as_bytes(),
-        bytes_of(&mrf.domain),
-        bytes_of(&mrf.graph.offsets),
-        bytes_of(&mrf.graph.adj_node),
-        bytes_of(&mrf.graph.adj_out),
-        bytes_of(&mrf.graph.adj_in),
-        bytes_of(&mrf.graph.edge_src),
-        bytes_of(&mrf.graph.edge_dst),
+        bytes_of(&mrf.domain[..]),
+        bytes_of(&mrf.graph.offsets[..]),
+        bytes_of(&mrf.graph.adj_node[..]),
+        bytes_of(&mrf.graph.adj_out[..]),
+        bytes_of(&mrf.graph.adj_in[..]),
+        bytes_of(&mrf.graph.edge_src[..]),
+        bytes_of(&mrf.graph.edge_dst[..]),
         bytes_of(mrf.node_factors.offsets_raw()),
         bytes_of(mrf.node_factors.data_raw()),
         bytes_of(&epi),
         bytes_of(&pool_offsets),
         bytes_of(&pool_shapes),
         bytes_of(mrf.pool.data_raw()),
-        bytes_of(&mrf.msg_offset),
+        bytes_of(&mrf.msg_offset[..]),
     ];
 
     // Section table: aligned offsets, exact byte lengths, block checksums.
@@ -399,6 +401,15 @@ pub fn write_mrf_v2<W: Write>(mrf: &Mrf, mut w: W) -> Result<u64> {
         pos = off + s.len() as u64;
     }
     let total = pos;
+
+    // The zero-copy map loader casts sections in place, so 64-byte file
+    // offsets are a format invariant, not a nicety — refuse to emit a
+    // file that would silently lose the mmap fast path.
+    for (i, &(off, _, _)) in table.iter().enumerate() {
+        if off % ALIGN != 0 {
+            bail!("internal error: section {} offset {off} unaligned at save", SECTION_NAMES[i]);
+        }
+    }
 
     let mut cur = 0u64;
     let put = |w: &mut W, b: &[u8], cur: &mut u64| -> Result<()> {
@@ -515,14 +526,24 @@ fn read_sections(
     Ok(sums)
 }
 
-/// Deserialize a v2 file via positioned bulk reads on `threads` workers,
-/// validating section bounds and checksums before trusting any content.
-fn read_mrf_v2(f: &File, file_len: u64, threads: usize) -> Result<Mrf> {
-    #[cfg(target_endian = "big")]
-    bail!("RBPM v2 files are little-endian only");
+/// Parsed-and-validated v2 header counts plus the section table. Every
+/// (offset, length) has been proven inside the real file size and
+/// consistent with the header counts before this exists — both readers
+/// (positioned bulk reads and zero-copy map) build on it.
+struct V2Layout {
+    n: u64,
+    m: u64,
+    pool_len: u64,
+    nf_len: u64,
+    pool_data_len: u64,
+    total_msg_len: u64,
+    table: [(u64, u64, u64); SECTION_COUNT],
+}
 
-    let mut head = [0u8; HEADER_BYTES as usize];
-    f.read_exact_at(&mut head, 0).context("reading v2 header")?;
+/// Validate a v2 header + section table against the actual `file_len`.
+/// `head` must hold [`HEADER_BYTES`] bytes and `table_bytes`
+/// [`TABLE_BYTES`] bytes.
+fn parse_v2_layout(head: &[u8], table_bytes: &[u8], file_len: u64) -> Result<V2Layout> {
     if &head[0..4] != MAGIC {
         bail!("not an RBPM file");
     }
@@ -530,12 +551,12 @@ fn read_mrf_v2(f: &File, file_len: u64, threads: usize) -> Result<Mrf> {
     if version != VERSION_V2 {
         bail!("unsupported RBPM version {version}");
     }
-    let n = u64_at(&head, 8);
-    let m = u64_at(&head, 16);
-    let pool_len = u64_at(&head, 24);
-    let nf_len = u64_at(&head, 32);
-    let pool_data_len = u64_at(&head, 40);
-    let total_msg_len = u64_at(&head, 48);
+    let n = u64_at(head, 8);
+    let m = u64_at(head, 16);
+    let pool_len = u64_at(head, 24);
+    let nf_len = u64_at(head, 32);
+    let pool_data_len = u64_at(head, 40);
+    let total_msg_len = u64_at(head, 48);
     for (what, v) in [
         ("node count", n),
         ("edge count", m),
@@ -555,12 +576,10 @@ fn read_mrf_v2(f: &File, file_len: u64, threads: usize) -> Result<Mrf> {
         bail!("corrupt file: pool data exceeds u32 offsets");
     }
 
-    let mut table_bytes = [0u8; TABLE_BYTES as usize];
-    f.read_exact_at(&mut table_bytes, HEADER_BYTES).context("reading v2 section table")?;
     let mut table = [(0u64, 0u64, 0u64); SECTION_COUNT];
     for (i, t) in table.iter_mut().enumerate() {
         let b = 24 * i;
-        *t = (u64_at(&table_bytes, b), u64_at(&table_bytes, b + 8), u64_at(&table_bytes, b + 16));
+        *t = (u64_at(table_bytes, b), u64_at(table_bytes, b + 8), u64_at(table_bytes, b + 16));
     }
 
     // Expected byte length per section, from the header counts (the name's
@@ -597,9 +616,25 @@ fn read_mrf_v2(f: &File, file_len: u64, threads: usize) -> Result<Mrf> {
             bail!("section {name} out of bounds (offset {off}, length {len}, file {file_len})");
         }
     }
+    Ok(V2Layout { n, m, pool_len, nf_len, pool_data_len, total_msg_len, table })
+}
+
+/// Deserialize a v2 file via positioned bulk reads on `threads` workers,
+/// validating section bounds and checksums before trusting any content.
+fn read_mrf_v2(f: &File, file_len: u64, threads: usize) -> Result<Mrf> {
+    #[cfg(target_endian = "big")]
+    bail!("RBPM v2 files are little-endian only");
+
+    let mut head = [0u8; HEADER_BYTES as usize];
+    f.read_exact_at(&mut head, 0).context("reading v2 header")?;
+    let mut table_bytes = [0u8; TABLE_BYTES as usize];
+    f.read_exact_at(&mut table_bytes, HEADER_BYTES).context("reading v2 section table")?;
+    let V2Layout { n, m, pool_len, nf_len, pool_data_len, total_msg_len, table } =
+        parse_v2_layout(&head, &table_bytes, file_len)?;
 
     // Allocate destinations (every size is now proven ≤ the file size)
     // and pull the sections in parallel chunks.
+    let me = 2 * m;
     let (n, m, me) = (n as usize, m as usize, me as usize);
     let mut name_bytes = vec![0u8; table[0].1 as usize];
     let mut domain = vec![0u32; n];
@@ -661,7 +696,14 @@ fn read_mrf_v2(f: &File, file_len: u64, threads: usize) -> Result<Mrf> {
         bail!("corrupt model: CSR offsets do not cover the edge list");
     }
 
-    let graph = Csr { offsets, adj_node, adj_out, adj_in, edge_src, edge_dst };
+    let graph = Csr {
+        offsets: offsets.into(),
+        adj_node: adj_node.into(),
+        adj_out: adj_out.into(),
+        adj_in: adj_in.into(),
+        edge_src: edge_src.into(),
+        edge_dst: edge_dst.into(),
+    };
     par_check(threads, n, |lo, hi| graph.check_consistent(lo, hi))?;
     par_check(threads, n, |lo, hi| graph.check_simple(lo, hi))?;
 
@@ -732,7 +774,237 @@ fn read_mrf_v2(f: &File, file_len: u64, threads: usize) -> Result<Mrf> {
         });
     }
 
-    Ok(Mrf { graph, domain, node_factors, edge_factor, pool, msg_offset, total_msg_len: total, name })
+    Ok(Mrf {
+        graph,
+        domain: domain.into(),
+        node_factors,
+        edge_factor,
+        pool,
+        msg_offset: msg_offset.into(),
+        total_msg_len: total,
+        name,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// v2 zero-copy map reader
+// ---------------------------------------------------------------------------
+
+/// Borrow section `i` out of the mapped file as a typed slice. Alignment
+/// and bounds were validated by [`parse_v2_layout`] plus the map-path
+/// offset-alignment gate, but [`ModelStorage::from_mapped`] re-checks
+/// both before the cast — corruption fails cleanly, never UB.
+fn mapped_section<T: Pod>(
+    map: &Arc<Mmap>,
+    table: &[(u64, u64, u64); SECTION_COUNT],
+    i: usize,
+) -> Result<ModelStorage<T>> {
+    let (off, len, _) = table[i];
+    let elems = len as usize / std::mem::size_of::<T>();
+    ModelStorage::from_mapped(map.clone(), off as usize, elems)
+        .map_err(|e| anyhow!("section {}: {e}", SECTION_NAMES[i]))
+}
+
+/// Deserialize a v2 file by mapping it and borrowing every section in
+/// place — no copy pass. Returns `Ok(None)` when this file cannot be
+/// mapped (v1 format, unaligned sections, platform without mmap): the
+/// caller falls back to the positioned-read path. Returns `Err` only for
+/// corruption — fallback would just fail again.
+///
+/// `verify` gates the expensive integrity work (per-section checksums
+/// plus the full semantic validation sweeps), each of which pages in
+/// every mapped byte and so costs exactly the copy pass this reader
+/// exists to delete. Structural validation (header counts, section
+/// bounds/alignment, offset endpoints) always runs; with `verify` off, a
+/// corrupt payload can still only produce a clean panic on a bounds
+/// check downstream, never UB.
+fn read_mrf_v2_mapped(f: &File, file_len: u64, threads: usize, verify: bool) -> Result<Option<Mrf>> {
+    #[cfg(target_endian = "big")]
+    return Ok(None);
+
+    if !cfg!(unix) || file_len < FIRST_SECTION {
+        return Ok(None);
+    }
+    // A short read of the version probe means a truncated header — let
+    // the read path produce its canonical error.
+    let mut head8 = [0u8; 8];
+    if f.read_exact_at(&mut head8, 0).is_err() || &head8[0..4] != MAGIC {
+        return Ok(None);
+    }
+    if u32::from_le_bytes(head8[4..8].try_into().unwrap()) != VERSION_V2 {
+        return Ok(None); // v1 stream: only the read path knows it
+    }
+    let map = match Mmap::map_file(f, file_len) {
+        Ok(m) => Arc::new(m),
+        Err(_) => return Ok(None), // kernel refused; read path still works
+    };
+    let bytes = map.as_slice();
+    let layout = parse_v2_layout(
+        &bytes[..HEADER_BYTES as usize],
+        &bytes[HEADER_BYTES as usize..(HEADER_BYTES + TABLE_BYTES) as usize],
+        file_len,
+    )?;
+    let V2Layout { n, m, pool_len: _, nf_len: _, pool_data_len: _, total_msg_len, table } = layout;
+
+    // Unaligned section offsets (a foreign or hand-edited v2 file): not
+    // corruption — the read path handles them — so fall back, per the
+    // format contract that mapping never changes what loads.
+    if table.iter().any(|&(off, _, _)| off % ALIGN != 0) {
+        return Ok(None);
+    }
+
+    // Our saver ends the file exactly at the last section's end. A tail
+    // beyond that means the file was grown or spliced after save — a
+    // layout this reader does not understand, so corruption, not
+    // fallback (the read path would silently ignore the tail).
+    let end = table.iter().map(|&(off, len, _)| off + len).max().unwrap_or(FIRST_SECTION);
+    if file_len != end {
+        bail!("file length {file_len} does not match section layout end {end}");
+    }
+
+    if verify {
+        // Sections are few; `checksum_bytes` parallelizes internally over
+        // blocks, so the big sections already use the cold-path pool.
+        for (i, &(off, len, want)) in table.iter().enumerate() {
+            if checksum_bytes(&bytes[off as usize..(off + len) as usize]) != want {
+                bail!("checksum mismatch in section {}", SECTION_NAMES[i]);
+            }
+        }
+    }
+
+    let me = 2 * m;
+    let (n, m, me) = (n as usize, m as usize, me as usize);
+    let name_bytes = bytes[table[0].0 as usize..(table[0].0 + table[0].1) as usize].to_vec();
+    let name = String::from_utf8(name_bytes).context("bad model name")?;
+
+    let domain: ModelStorage<u32> = mapped_section(&map, &table, 1)?;
+    let offsets: ModelStorage<u32> = mapped_section(&map, &table, 2)?;
+    let nf_offsets: ModelStorage<u32> = mapped_section(&map, &table, 8)?;
+    let nf_data: ModelStorage<f64> = mapped_section(&map, &table, 9)?;
+    let epi: ModelStorage<u32> = mapped_section(&map, &table, 10)?;
+    let pool_offsets: ModelStorage<u32> = mapped_section(&map, &table, 11)?;
+    let pool_shapes: ModelStorage<u32> = mapped_section(&map, &table, 12)?;
+    let pool_data: ModelStorage<f64> = mapped_section(&map, &table, 13)?;
+    let msg_offset: ModelStorage<u32> = mapped_section(&map, &table, 14)?;
+
+    // Endpoint structural checks: O(1), touch two pages per section.
+    if offsets.first() != Some(&0) || offsets[n] as usize != me {
+        bail!("corrupt model: CSR offsets do not cover the edge list");
+    }
+    let total = total_msg_len as usize;
+    if m > 0 && msg_offset[0] != 0 {
+        bail!("corrupt model: message offsets do not start at 0");
+    }
+    if m == 0 && total != 0 {
+        bail!("corrupt model: message length without edges");
+    }
+
+    let graph = Csr {
+        offsets,
+        adj_node: mapped_section(&map, &table, 3)?,
+        adj_out: mapped_section(&map, &table, 4)?,
+        adj_in: mapped_section(&map, &table, 5)?,
+        edge_src: mapped_section(&map, &table, 6)?,
+        edge_dst: mapped_section(&map, &table, 7)?,
+    };
+
+    if verify {
+        par_check(threads, n, |lo, hi| {
+            for i in lo..hi {
+                let d = domain[i] as usize;
+                if d == 0 || d > MAX_DOMAIN {
+                    return Err(format!("node {i}: domain {d} out of range"));
+                }
+                if graph.offsets[i] > graph.offsets[i + 1] {
+                    return Err(format!("node {i}: CSR offsets not monotone"));
+                }
+            }
+            Ok(())
+        })?;
+        par_check(threads, n, |lo, hi| graph.check_consistent(lo, hi))?;
+        par_check(threads, n, |lo, hi| graph.check_simple(lo, hi))?;
+    }
+
+    let node_factors = NodeFactors::from_storage(nf_offsets, nf_data, verify)
+        .map_err(|e| anyhow!("corrupt model: {e}"))?;
+    if verify {
+        par_check(threads, n, |lo, hi| {
+            for i in lo..hi {
+                if node_factors.domain(i) != domain[i] as usize {
+                    return Err(format!("node {i}: factor width does not match domain"));
+                }
+            }
+            Ok(())
+        })?;
+    }
+
+    // Pool entries are rebuilt from the two u32 sections (pool_len is
+    // tiny for shared-factor families, O(edges) for per-edge couplings —
+    // either way far smaller than the pool data we leave mapped).
+    let entries: Vec<(u32, u16, u16)> = pool_offsets
+        .iter()
+        .zip(pool_shapes.iter())
+        .map(|(&o, &s)| (o, (s >> 16) as u16, (s & 0xffff) as u16))
+        .collect();
+    drop((pool_offsets, pool_shapes));
+    let pool = FactorPool::from_storage(pool_data, entries, verify)
+        .map_err(|e| anyhow!("corrupt model: {e}"))?;
+
+    if verify {
+        par_check(threads, m, |lo, hi| {
+            for k in lo..hi {
+                let pi = epi[k] as usize;
+                if pi >= pool.len() {
+                    return Err(format!("edge {k}: pool index {pi} out of range"));
+                }
+                let (r, c) = pool.shape(pi);
+                let (src, dst) =
+                    (graph.edge_src[2 * k] as usize, graph.edge_dst[2 * k] as usize);
+                if r != domain[src] as usize || c != domain[dst] as usize {
+                    return Err(format!("edge {k}: factor shape does not match endpoint domains"));
+                }
+                for e in [2 * k, 2 * k + 1] {
+                    let next = if e + 1 < 2 * m { msg_offset[e + 1] as usize } else { total };
+                    let want = domain[graph.edge_dst[e] as usize] as usize;
+                    if next < msg_offset[e] as usize || next - msg_offset[e] as usize != want {
+                        return Err(format!("edge {e}: message offset stride mismatch"));
+                    }
+                }
+            }
+            Ok(())
+        })?;
+    }
+
+    // Directed-edge factor refs (even = stored orientation, odd =
+    // transposed), materialized in parallel exactly as on the read path
+    // (the only O(edges) heap allocation the map load keeps).
+    let mut edge_factor = vec![FactorRef::new(0, false); me];
+    if me > 0 {
+        let threads = threads.max(1);
+        let per = (m.div_ceil(threads)).max(1) * 2;
+        std::thread::scope(|s| {
+            for (c, chunk) in edge_factor.chunks_mut(per).enumerate() {
+                let epi = &epi;
+                s.spawn(move || {
+                    for (j, slot) in chunk.iter_mut().enumerate() {
+                        let e = c * per + j;
+                        *slot = FactorRef::new(epi[e / 2], e % 2 == 1);
+                    }
+                });
+            }
+        });
+    }
+
+    Ok(Some(Mrf {
+        graph,
+        domain,
+        node_factors,
+        edge_factor,
+        pool,
+        msg_offset,
+        total_msg_len: total,
+        name,
+    }))
 }
 
 // ---------------------------------------------------------------------------
@@ -757,8 +1029,48 @@ pub fn save_v1(mrf: &Mrf, path: &str) -> Result<u64> {
     Ok(std::fs::metadata(path).with_context(|| format!("sizing {path}"))?.len())
 }
 
+/// How a model file is brought into memory (the `--load-mode` axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LoadMode {
+    /// Positioned bulk reads copying every section to the heap (the
+    /// frozen historical path; always fully validated).
+    Read,
+    /// Zero-copy: map the file and borrow sections in place, falling
+    /// back to `Read` when the file cannot be mapped (v1 format,
+    /// unaligned sections, non-unix).
+    Map,
+    /// Default: same preference order as `Map`. Load mode never changes
+    /// the loaded model — both paths are pinned bit-equal — so auto is
+    /// safe as a default.
+    #[default]
+    Auto,
+}
+
+impl LoadMode {
+    /// Report label (`read` | `map` | `auto`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            LoadMode::Read => "read",
+            LoadMode::Map => "map",
+            LoadMode::Auto => "auto",
+        }
+    }
+}
+
+/// Parse the load-mode axis value (`--load-mode read|map|auto`).
+pub fn parse_load_mode(s: &str) -> Result<LoadMode> {
+    match s {
+        "read" => Ok(LoadMode::Read),
+        "map" => Ok(LoadMode::Map),
+        "auto" => Ok(LoadMode::Auto),
+        other => bail!("expected read|map|auto, got '{other}'"),
+    }
+}
+
 /// Load from a file path, auto-detecting the format version, with an
-/// automatic cold-path thread count for v2 parallel reads.
+/// automatic cold-path thread count for v2 parallel reads. Always uses
+/// the copying read path (the frozen behavior; the map path is opt-in
+/// through [`load_with_mode`]).
 pub fn load(path: &str) -> Result<Mrf> {
     let len = std::fs::metadata(path).with_context(|| format!("opening {path}"))?.len();
     load_with_threads(path, cold_path_threads((len / 64) as usize))
@@ -767,23 +1079,47 @@ pub fn load(path: &str) -> Result<Mrf> {
 /// Load from a file path, auto-detecting the format version; v2 files
 /// are read with `threads` positioned-read workers.
 pub fn load_with_threads(path: &str, threads: usize) -> Result<Mrf> {
+    load_with_mode(path, threads, LoadMode::Read, true).map(|(mrf, _)| mrf)
+}
+
+/// Load from a file path under an explicit [`LoadMode`]; returns the
+/// model plus the mode that actually produced it ([`LoadMode::Read`] or
+/// [`LoadMode::Map`], for telemetry). `verify` controls checksum +
+/// semantic validation on the map path; the read path always verifies
+/// (it is touching every byte anyway).
+pub fn load_with_mode(
+    path: &str,
+    threads: usize,
+    mode: LoadMode,
+    verify: bool,
+) -> Result<(Mrf, LoadMode)> {
     let f = File::open(path).with_context(|| format!("opening {path}"))?;
     let file_len = f.metadata().with_context(|| format!("sizing {path}"))?.len();
+    let threads = threads.max(1);
+
+    if matches!(mode, LoadMode::Map | LoadMode::Auto) {
+        if let Some(mrf) = read_mrf_v2_mapped(&f, file_len, threads, verify)
+            .with_context(|| format!("loading {path} (v2, mapped)"))?
+        {
+            return Ok((mrf, LoadMode::Map));
+        }
+    }
+
     let mut head = [0u8; 8];
     f.read_exact_at(&mut head, 0).with_context(|| format!("{path}: file too short"))?;
     if &head[0..4] != MAGIC {
         bail!("{path}: not an RBPM file");
     }
-    match u32::from_le_bytes(head[4..8].try_into().unwrap()) {
+    let mrf = match u32::from_le_bytes(head[4..8].try_into().unwrap()) {
         // Positioned reads left the cursor at 0, so the stream reader
         // (explicitly buffered — the legacy codec reads one scalar at a
         // time) starts from the magic again.
-        VERSION_V1 => read_mrf(BufReader::new(f)).with_context(|| format!("loading {path} (v1)")),
-        VERSION_V2 => {
-            read_mrf_v2(&f, file_len, threads.max(1)).with_context(|| format!("loading {path} (v2)"))
-        }
+        VERSION_V1 => read_mrf(BufReader::new(f)).with_context(|| format!("loading {path} (v1)"))?,
+        VERSION_V2 => read_mrf_v2(&f, file_len, threads)
+            .with_context(|| format!("loading {path} (v2)"))?,
         v => bail!("{path}: unsupported RBPM version {v}"),
-    }
+    };
+    Ok((mrf, LoadMode::Read))
 }
 
 #[cfg(test)]

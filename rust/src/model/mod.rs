@@ -16,11 +16,13 @@ pub mod factors;
 pub mod graph;
 pub mod io;
 pub mod partition;
+pub mod storage;
 
 pub use delta::EvidenceDelta;
 pub use factors::{FactorPool, FactorRef, NodeFactors};
 pub use graph::{Csr, GraphBuilder};
 pub use partition::Partition;
+pub use storage::ModelStorage;
 
 /// Largest variable domain supported by the stack-buffer update kernels
 /// (LDPC constraint nodes need 2^6 = 64).
@@ -31,8 +33,8 @@ pub const MAX_DOMAIN: usize = 64;
 pub struct Mrf {
     /// Adjacency in CSR form; directed edge `e`'s reverse is `e ^ 1`.
     pub graph: Csr,
-    /// `|D_i|` per node.
-    pub domain: Vec<u32>,
+    /// `|D_i|` per node (heap-owned, or borrowed from a mapped snapshot).
+    pub domain: ModelStorage<u32>,
     /// Node potentials `ψ_i`.
     pub node_factors: NodeFactors,
     /// Edge-factor matrix per directed edge, as a [`FactorRef`] into `pool`.
@@ -42,7 +44,7 @@ pub struct Mrf {
     pub pool: FactorPool,
     /// Message-vector offset per directed edge into the flat message array;
     /// the message for edge `e` has length `domain[dst(e)]`.
-    pub msg_offset: Vec<u32>,
+    pub msg_offset: ModelStorage<u32>,
     /// Total length of the flat message array.
     pub total_msg_len: usize,
     /// Human-readable model name (for reports).
@@ -102,11 +104,11 @@ impl Mrf {
 
         Mrf {
             graph,
-            domain,
+            domain: domain.into(),
             node_factors,
             edge_factor,
             pool,
-            msg_offset,
+            msg_offset: msg_offset.into(),
             total_msg_len: off as usize,
             name: name.to_string(),
         }

@@ -1,0 +1,214 @@
+//! Storage-agnostic backing for model arrays: heap-owned vectors or
+//! typed sections borrowed from a memory-mapped model file.
+//!
+//! The zero-copy load path (`model::io`, `--load-mode map`) maps a v2
+//! snapshot and hands each section out as a [`ModelStorage::Mapped`]
+//! slice, so a 100M-edge model's CSR arrays, domains, factors, and
+//! message offsets never pass through a heap copy. Everything else —
+//! generators, the v1/read load paths, tests — keeps building plain
+//! vectors through `From<Vec<T>>`.
+//!
+//! [`ModelStorage`] derefs to `&[T]`, so consumers index it exactly like
+//! the `Vec<T>` it replaced. The rare mutators (evidence deltas writing
+//! node priors, builders appending factors) go through
+//! [`ModelStorage::to_mut`], which copies a mapped section to the heap
+//! on first write (copy-on-write at section granularity).
+
+use crate::util::mmap::Mmap;
+use std::sync::Arc;
+
+/// A model array: heap-owned, or borrowed from a mapped model file.
+pub enum ModelStorage<T: 'static> {
+    /// Heap-allocated (the historical representation).
+    Owned(Vec<T>),
+    /// A typed view into a shared read-only file mapping. The `Arc`
+    /// keeps the mapping alive for as long as any section borrows it.
+    Mapped {
+        /// The mapping this view borrows from (held only for lifetime).
+        map: Arc<Mmap>,
+        /// First element of the section (validated aligned + in bounds
+        /// at construction).
+        ptr: *const T,
+        /// Element count.
+        len: usize,
+    },
+}
+
+// SAFETY: `Mapped` is a read-only view of an immutable shared file
+// mapping (writes never happen through it — mutation goes through
+// `to_mut`, which copies to an owned Vec first), so sharing or sending
+// it across threads is as sound as sharing `&[T]`.
+unsafe impl<T: Send + Sync> Send for ModelStorage<T> {}
+unsafe impl<T: Send + Sync> Sync for ModelStorage<T> {}
+
+impl<T> ModelStorage<T> {
+    /// Borrow `len` elements of `T` starting at byte offset `offset` of
+    /// the mapping. Errors (no panic, no UB) unless the range is in
+    /// bounds and the file offset is aligned for `T` — callers surface
+    /// this as a clean "unaligned v2 file" load failure.
+    pub fn from_mapped(map: Arc<Mmap>, offset: usize, len: usize) -> Result<Self, String> {
+        let bytes = len
+            .checked_mul(std::mem::size_of::<T>())
+            .ok_or_else(|| "section length overflows".to_string())?;
+        if offset > map.len() || bytes > map.len() - offset {
+            return Err(format!(
+                "section [{offset}, {offset}+{bytes}) exceeds mapped file ({} bytes)",
+                map.len()
+            ));
+        }
+        let ptr = map.as_slice()[offset..].as_ptr();
+        if (ptr as usize) % std::mem::align_of::<T>() != 0 {
+            return Err(format!(
+                "section at file offset {offset} is not aligned for {}",
+                std::any::type_name::<T>()
+            ));
+        }
+        Ok(ModelStorage::Mapped { map, ptr: ptr.cast(), len })
+    }
+
+    /// The elements as a slice (also available through `Deref`).
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        match self {
+            ModelStorage::Owned(v) => v.as_slice(),
+            // SAFETY: ptr/len were validated in-bounds and aligned at
+            // construction, and the `map` Arc keeps the backing mapping
+            // alive for the life of `self`.
+            ModelStorage::Mapped { ptr, len, .. } => unsafe {
+                std::slice::from_raw_parts(*ptr, *len)
+            },
+        }
+    }
+
+    /// Mutable access, copying a mapped section to the heap first
+    /// (copy-on-write). Mutators are all cold paths (evidence deltas,
+    /// builder appends), so the copy happens at most once per section.
+    pub fn to_mut(&mut self) -> &mut Vec<T>
+    where
+        T: Clone,
+    {
+        if let ModelStorage::Mapped { .. } = self {
+            *self = ModelStorage::Owned(self.as_slice().to_vec());
+        }
+        match self {
+            ModelStorage::Owned(v) => v,
+            ModelStorage::Mapped { .. } => unreachable!("converted to Owned above"),
+        }
+    }
+
+    /// True when this array borrows from a file mapping.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, ModelStorage::Mapped { .. })
+    }
+}
+
+impl<T> std::ops::Deref for ModelStorage<T> {
+    type Target = [T];
+
+    #[inline]
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T> From<Vec<T>> for ModelStorage<T> {
+    fn from(v: Vec<T>) -> Self {
+        ModelStorage::Owned(v)
+    }
+}
+
+impl<T: Clone> Clone for ModelStorage<T> {
+    fn clone(&self) -> Self {
+        match self {
+            ModelStorage::Owned(v) => ModelStorage::Owned(v.clone()),
+            // Cloning a mapped section clones the view, not the data:
+            // the Arc refcount keeps the mapping alive.
+            ModelStorage::Mapped { map, ptr, len } => {
+                ModelStorage::Mapped { map: map.clone(), ptr: *ptr, len: *len }
+            }
+        }
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for ModelStorage<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.as_slice().fmt(f)
+    }
+}
+
+impl<T: PartialEq> PartialEq for ModelStorage<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T> Default for ModelStorage<T> {
+    fn default() -> Self {
+        ModelStorage::Owned(Vec::new())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    #[test]
+    fn owned_derefs_and_mutates() {
+        let mut s: ModelStorage<u32> = vec![1, 2, 3].into();
+        assert_eq!(&s[..], &[1, 2, 3]);
+        assert!(!s.is_mapped());
+        s.to_mut().push(4);
+        assert_eq!(s.len(), 4);
+        let c = s.clone();
+        assert_eq!(c, s);
+    }
+
+    #[cfg(unix)]
+    fn mapped_file(bytes: &[u8]) -> Arc<Mmap> {
+        let path =
+            std::env::temp_dir().join(format!(".rbp-storage-test-{}", std::process::id()));
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(bytes).unwrap();
+        f.sync_all().unwrap();
+        let f = std::fs::File::open(&path).unwrap();
+        let m = Mmap::map_file(&f, bytes.len() as u64).unwrap();
+        std::fs::remove_file(&path).ok();
+        Arc::new(m)
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mapped_section_reads_and_cows() {
+        let mut bytes = Vec::new();
+        for v in [7u32, 8, 9] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        bytes.extend_from_slice(&[0u8; 4]); // pad
+        let map = mapped_file(&bytes);
+        let mut s: ModelStorage<u32> = ModelStorage::from_mapped(map.clone(), 0, 3).unwrap();
+        assert!(s.is_mapped());
+        assert_eq!(&s[..], &[7, 8, 9]);
+        let c = s.clone();
+        assert!(c.is_mapped());
+        // Copy-on-write leaves the clone untouched.
+        s.to_mut()[0] = 100;
+        assert!(!s.is_mapped());
+        assert_eq!(s[0], 100);
+        assert_eq!(c[0], 7);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mapped_section_rejects_out_of_bounds_and_unaligned() {
+        let map = mapped_file(&[0u8; 16]);
+        assert!(ModelStorage::<u32>::from_mapped(map.clone(), 0, 4).is_ok());
+        assert!(ModelStorage::<u32>::from_mapped(map.clone(), 0, 5).is_err(), "too long");
+        assert!(ModelStorage::<u32>::from_mapped(map.clone(), 17, 0).is_err(), "past end");
+        assert!(ModelStorage::<u32>::from_mapped(map.clone(), 2, 1).is_err(), "unaligned");
+        assert!(
+            ModelStorage::<u64>::from_mapped(map, usize::MAX, usize::MAX).is_err(),
+            "overflow"
+        );
+    }
+}

@@ -2,7 +2,7 @@
 //! and package the results.
 
 use crate::bp::{all_marginals, Messages};
-use crate::configio::{Json, RunConfig};
+use crate::configio::{Json, LoadMode, RunConfig};
 use crate::engines::{build_engine, Engine, EngineStats};
 use crate::exec::RunObserver;
 use crate::model::{builders, EvidenceDelta, Mrf};
@@ -14,7 +14,7 @@ use anyhow::Result;
 /// or loads it from disk (`load_secs` + `model_bytes`); the other leg is
 /// zero, as are all legs on pre-built models handed straight to
 /// [`run_on_model`].
-#[derive(Debug, Clone, Copy, Default, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PrepStats {
     /// Seconds spent building the model in process.
     pub build_secs: f64,
@@ -24,6 +24,23 @@ pub struct PrepStats {
     pub init_secs: f64,
     /// Serialized model size on disk (bytes); zero for in-process builds.
     pub model_bytes: u64,
+    /// The load path that actually produced the model: [`LoadMode::Map`]
+    /// when sections are borrowed from a file mapping, [`LoadMode::Read`]
+    /// otherwise (copying disk loads *and* in-process builds — both leave
+    /// the model heap-owned).
+    pub load_mode: LoadMode,
+}
+
+impl Default for PrepStats {
+    fn default() -> Self {
+        PrepStats {
+            build_secs: 0.0,
+            load_secs: 0.0,
+            init_secs: 0.0,
+            model_bytes: 0,
+            load_mode: LoadMode::Read,
+        }
+    }
 }
 
 /// Everything a caller needs after one run.
@@ -85,6 +102,9 @@ impl RunReport {
             ("load_secs", Json::Num(self.prep.load_secs)),
             ("init_secs", Json::Num(self.prep.init_secs)),
             ("model_bytes", Json::Num(self.prep.model_bytes as f64)),
+            ("load_mode", Json::Str(self.prep.load_mode.label().into())),
+            ("arena", Json::Str(self.config.arena.label().into())),
+            ("peak_rss_bytes", Json::Num(m.peak_rss_bytes as f64)),
             (
                 "updates_per_sec",
                 Json::Num(if self.stats.wall_secs > 0.0 {
@@ -105,27 +125,39 @@ impl RunReport {
 /// Resolve a model through the optional on-disk cache ("generate once,
 /// sweep many"): when `load_dir` holds this spec's
 /// [`cache_slug`](crate::configio::ModelSpec::cache_slug) file, load it
-/// (v1/v2 auto-detected, parallel chunked reads); otherwise build from
-/// the spec and, when `save_dir` is set, persist it as format v2 for the
-/// next sweep. The returned [`PrepStats`] carries whichever cold-path
-/// legs were exercised.
+/// under `mode` (zero-copy mapped for v2 files under `Map`/`Auto`, the
+/// copying v1/v2 read path otherwise; `verify` gates checksum + semantic
+/// validation on the map path); otherwise build from the spec and, when
+/// `save_dir` is set, persist it as format v2 for the next sweep. The
+/// returned [`PrepStats`] carries whichever cold-path legs were
+/// exercised, plus the load path that actually produced the model.
 pub fn obtain_model(
     spec: &crate::configio::ModelSpec,
     seed: u64,
     load_dir: Option<&std::path::Path>,
     save_dir: Option<&std::path::Path>,
+    mode: LoadMode,
+    verify: bool,
 ) -> Result<(Mrf, PrepStats)> {
     use crate::model::io as model_io;
+    use crate::util::cold_path_threads;
     let mut prep = PrepStats::default();
     let slug = spec.cache_slug(seed);
     if let Some(dir) = load_dir {
         let path = dir.join(&slug);
         if path.exists() {
             let path = path.to_string_lossy().into_owned();
+            let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
             let t = Timer::start();
-            let mrf = model_io::load(&path)?;
+            let (mrf, resolved) = model_io::load_with_mode(
+                &path,
+                cold_path_threads((bytes / 64) as usize),
+                mode,
+                verify,
+            )?;
             prep.load_secs = t.elapsed_secs();
-            prep.model_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+            prep.model_bytes = bytes;
+            prep.load_mode = resolved;
             return Ok((mrf, prep));
         }
     }
@@ -182,24 +214,30 @@ pub fn run_on_model_prepped(
     mut prep: PrepStats,
 ) -> Result<RunReport> {
     let t = Timer::start();
-    let msgs = build_messages(cfg, &mrf);
+    let msgs = build_messages(cfg, &mrf)?;
     prep.init_secs = t.elapsed_secs();
     let engine = build_engine(&cfg.algorithm);
     let mut stats = engine.run_observed(&mrf, &msgs, cfg, observer)?;
     stats.metrics.total.model_bytes = stats.metrics.total.model_bytes.max(prep.model_bytes);
+    // Engines that never enter the worker pool (sequential, synchronous)
+    // still report the process-wide peak-RSS gauge.
+    stats.metrics.total.peak_rss_bytes =
+        stats.metrics.total.peak_rss_bytes.max(crate::util::peak_rss_bytes());
     Ok(RunReport { stats, mrf, msgs, config: cfg.clone(), prep })
 }
 
 /// Uniform message state laid out for the run described by `cfg`:
 /// per-shard arenas matching the run's message partition when the
 /// locality axis is on, the flat arena otherwise, stored at
-/// `cfg.precision`. The single resolution point shared by production runs
-/// and the parity/property test suites — keep them on this helper so the
-/// arena layout and storage precision can never drift from the config.
-pub fn build_messages(cfg: &RunConfig, mrf: &Mrf) -> Messages {
+/// `cfg.precision` in `cfg.arena`-backed allocations. The single
+/// resolution point shared by production runs and the parity/property
+/// test suites — keep them on this helper so the arena layout, storage
+/// precision, and backing mode can never drift from the config. Only the
+/// file-backed arena arm can fail (temp-file creation).
+pub fn build_messages(cfg: &RunConfig, mrf: &Mrf) -> Result<Messages> {
     match crate::model::partition::for_messages(mrf, cfg) {
-        Some(p) => Messages::uniform_partitioned_with(mrf, &p, cfg.precision),
-        None => Messages::uniform_with(mrf, cfg.precision),
+        Some(p) => Messages::uniform_partitioned_in(mrf, &p, cfg.precision, &cfg.arena),
+        None => Messages::uniform_in(mrf, cfg.precision, &cfg.arena),
     }
 }
 

@@ -77,6 +77,17 @@ pub struct CellResult {
     /// Cold path: serialized model size on disk in bytes (zero for
     /// in-process builds). Absent ⇒ 0.
     pub model_bytes: u64,
+    /// Out-of-core axis: the load path that produced the family's model
+    /// (`map` = zero-copy mapped v2 sections, `read` = copying loads and
+    /// in-process builds). Absent in pre-outofcore baselines ⇒ `read` —
+    /// the only path those cells could have taken.
+    pub load_mode: String,
+    /// Out-of-core axis: the message-arena backing of the cell's runs
+    /// (`mem` = heap, `mmap` = file-backed temp mappings). Absent ⇒ `mem`.
+    pub arena: String,
+    /// Out-of-core axis: process peak resident set (`VmHWM`, bytes) after
+    /// the cell's last sample — a **gauge**; 0 without procfs. Absent ⇒ 0.
+    pub peak_rss_bytes: u64,
     /// Per-sample wall-clock seconds. For delta cells (`/delta` id
     /// suffix) these are the *warm* re-convergence times.
     pub wall_secs: Vec<f64>,
@@ -133,6 +144,12 @@ impl CellResult {
             ("load_secs", Json::Num(self.load_secs)),
             ("init_secs", Json::Num(self.init_secs)),
             ("model_bytes", Json::Num(self.model_bytes as f64)),
+            // Out-of-core fields are emitted unconditionally (their
+            // defaults when the axis was off) so schema consumers can grep
+            // for them.
+            ("load_mode", Json::Str(self.load_mode.clone())),
+            ("arena", Json::Str(self.arena.clone())),
+            ("peak_rss_bytes", Json::Num(self.peak_rss_bytes as f64)),
             ("wall_secs", Json::Arr(self.wall_secs.iter().map(|&t| Json::Num(t)).collect())),
             ("updates", Json::Arr(self.updates.iter().map(|&u| Json::Num(u)).collect())),
             // Delta-axis fields are emitted unconditionally (zero/empty on
@@ -201,6 +218,13 @@ impl CellResult {
             load_secs: v.get("load_secs").and_then(Json::as_f64).unwrap_or(0.0),
             init_secs: v.get("init_secs").and_then(Json::as_f64).unwrap_or(0.0),
             model_bytes: v.get("model_bytes").and_then(Json::as_u64).unwrap_or(0),
+            load_mode: v
+                .get("load_mode")
+                .and_then(Json::as_str)
+                .unwrap_or("read")
+                .to_string(),
+            arena: v.get("arena").and_then(Json::as_str).unwrap_or("mem").to_string(),
+            peak_rss_bytes: v.get("peak_rss_bytes").and_then(Json::as_u64).unwrap_or(0),
             wall_secs: arr("wall_secs")?,
             updates: arr("updates")?,
             scratch_wall_secs: if v.get("scratch_wall_secs").is_some() {
@@ -463,6 +487,9 @@ mod tests {
             load_secs: 0.0,
             init_secs: 0.001,
             model_bytes: 0,
+            load_mode: "read".into(),
+            arena: "mem".into(),
+            peak_rss_bytes: 1 << 22,
             wall_secs: vec![secs, secs * 1.05, secs * 0.95],
             updates: vec![1000.0, 1010.0, 990.0],
             scratch_wall_secs: vec![secs * 4.0, secs * 4.2, secs * 3.8],
@@ -484,6 +511,7 @@ mod tests {
                     tasks_touched: 12,
                     msg_bytes_logical: 4096,
                     msg_bytes_padded: 8192,
+                    peak_rss_bytes: 1 << 22,
                     max_priority: 1e-6,
                 }],
             },
@@ -604,6 +632,27 @@ mod tests {
         assert_eq!(back.cells[0].load_secs, 0.0);
         assert_eq!(back.cells[0].init_secs, 0.0);
         assert_eq!(back.cells[0].model_bytes, 0);
+        assert!(!compare(&b, &back, DEFAULT_TOLERANCE).unwrap().has_regression());
+    }
+
+    #[test]
+    fn pre_outofcore_cells_parse_as_read_mem_zero() {
+        let b = baseline(vec![cell("relaxed_residual/p2", 0.5)]);
+        let mut j = b.to_json();
+        // Simulate a baseline written before the out-of-core axis existed.
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Arr(cells)) = o.get_mut("cells") {
+                if let Json::Obj(c) = &mut cells[0] {
+                    c.remove("load_mode");
+                    c.remove("arena");
+                    c.remove("peak_rss_bytes");
+                }
+            }
+        }
+        let back = Baseline::from_json(&j).unwrap();
+        assert_eq!(back.cells[0].load_mode, "read", "pre-outofcore cells used copying loads");
+        assert_eq!(back.cells[0].arena, "mem", "pre-outofcore cells used heap arenas");
+        assert_eq!(back.cells[0].peak_rss_bytes, 0);
         assert!(!compare(&b, &back, DEFAULT_TOLERANCE).unwrap().has_regression());
     }
 

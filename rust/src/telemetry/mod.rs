@@ -65,6 +65,17 @@
 //!       "model_bytes": 0,               // cold path: serialized model
 //!                                       // bytes on disk; 0 for in-process
 //!                                       // builds (absent ⇒ 0)
+//!       "load_mode": "read",            // out-of-core axis: how the model
+//!                                       // came in — "map" = zero-copy
+//!                                       // mapped v2 sections, "read" =
+//!                                       // copying loads / in-process
+//!                                       // builds (absent ⇒ "read")
+//!       "arena": "mem",                 // out-of-core axis: message-arena
+//!                                       // backing — "mem" heap, "mmap"
+//!                                       // file-backed (absent ⇒ "mem")
+//!       "peak_rss_bytes": 73400320,     // out-of-core axis: process VmHWM
+//!                                       // after the last sample; a gauge
+//!                                       // (absent ⇒ 0)
 //!       "wall_secs": [0.012, 0.011],    // one entry per sample; on
 //!                                       // "/delta" cells these are the
 //!                                       // warm re-convergence times
@@ -109,7 +120,9 @@ pub use baseline::{
 };
 pub use trace::{Trace, TracePoint, TraceRecorder};
 
-use crate::configio::{AlgorithmSpec, Kernel, ModelSpec, PartitionSpec, Precision, RunConfig};
+use crate::configio::{
+    AlgorithmSpec, ArenaMode, Kernel, LoadMode, ModelSpec, PartitionSpec, Precision, RunConfig,
+};
 use crate::model::EvidenceDelta;
 use crate::run::run_on_model_observed;
 use anyhow::{bail, Result};
@@ -161,6 +174,18 @@ pub struct BenchOpts {
     /// Model-cache directory built instances are saved into
     /// (`--save-model`, format v2) so later sweeps can `--load-model` them.
     pub save_model: Option<PathBuf>,
+    /// How `--load-model` files are brought in (`--load-mode`): zero-copy
+    /// mapped sections, copying reads, or auto (map with read fallback).
+    pub load_mode: LoadMode,
+    /// Message-arena backing for every cell's runs (`--arena`): heap or
+    /// file-backed temp mappings. Sweep-wide, not a per-cell axis — the
+    /// baselines measure scheduling, and `mmap` arenas on a fits-in-RAM
+    /// instance measure the same thing through the page cache.
+    pub arena: ArenaMode,
+    /// Run checksum + semantic validation on mapped loads
+    /// (`--verify-load`); off by default because full verification pages
+    /// in every byte, costing exactly the copy pass mapping avoids.
+    pub verify_load: bool,
 }
 
 impl BenchOpts {
@@ -180,6 +205,9 @@ impl BenchOpts {
             check: false,
             load_model: None,
             save_model: None,
+            load_mode: LoadMode::Auto,
+            arena: ArenaMode::Mem,
+            verify_load: false,
         }
     }
 
@@ -369,6 +397,8 @@ pub fn bench_family(family: &str, opts: &BenchOpts) -> Result<Baseline> {
         opts.seed,
         opts.load_model.as_deref(),
         opts.save_model.as_deref(),
+        opts.load_mode,
+        opts.verify_load,
     )?;
     let recorder = TraceRecorder::new(Duration::from_millis(opts.tick_ms.max(1)));
     let mut cells = Vec::new();
@@ -381,6 +411,7 @@ pub fn bench_family(family: &str, opts: &BenchOpts) -> Result<Baseline> {
         let mut last_trace = Trace::default();
         let mut msg_bytes = (0u64, 0u64);
         let mut init_secs = 0.0f64;
+        let mut peak_rss = 0u64;
         for _ in 0..opts.samples.max(1) {
             let mut cfg = RunConfig::new(spec.clone(), rc.alg.clone())
                 .with_threads(rc.threads)
@@ -388,7 +419,8 @@ pub fn bench_family(family: &str, opts: &BenchOpts) -> Result<Baseline> {
                 .with_partition(rc.partition)
                 .with_fused(rc.fused)
                 .with_kernel(rc.kernel)
-                .with_precision(rc.precision);
+                .with_precision(rc.precision)
+                .with_arena(opts.arena.clone());
             cfg.time_limit_secs = opts.time_limit;
             let rep = run_on_model_observed(&cfg, mrf.clone(), Some(&recorder))?;
             wall_secs.push(rep.stats.wall_secs);
@@ -400,6 +432,7 @@ pub fn bench_family(family: &str, opts: &BenchOpts) -> Result<Baseline> {
                 rep.stats.metrics.total.msg_bytes_padded,
             );
             init_secs = rep.prep.init_secs;
+            peak_rss = rep.stats.metrics.total.peak_rss_bytes;
         }
         cells.push(CellResult {
             id,
@@ -416,6 +449,9 @@ pub fn bench_family(family: &str, opts: &BenchOpts) -> Result<Baseline> {
             load_secs: prep.load_secs,
             init_secs,
             model_bytes: prep.model_bytes,
+            load_mode: prep.load_mode.label().to_string(),
+            arena: opts.arena.label().to_string(),
+            peak_rss_bytes: peak_rss,
             wall_secs,
             updates,
             scratch_wall_secs: Vec::new(),
@@ -475,6 +511,7 @@ fn bench_delta_cell(
     let mut msg_bytes = (0u64, 0u64);
     let mut tasks_touched = 0u64;
     let mut init_secs = 0.0f64;
+    let mut peak_rss = 0u64;
     for _ in 0..opts.samples.max(1) {
         let mut cfg = RunConfig::new(spec.clone(), rc.alg.clone())
             .with_threads(rc.threads)
@@ -482,7 +519,8 @@ fn bench_delta_cell(
             .with_partition(rc.partition)
             .with_fused(rc.fused)
             .with_kernel(rc.kernel)
-            .with_precision(rc.precision);
+            .with_precision(rc.precision)
+            .with_arena(opts.arena.clone());
         cfg.time_limit_secs = opts.time_limit;
         // Cold arm: solve the perturbed instance from uniform messages.
         let mut scratch_mrf = mrf.clone();
@@ -505,6 +543,7 @@ fn bench_delta_cell(
             rep.stats.metrics.total.msg_bytes_padded,
         );
         init_secs = rep.prep.init_secs;
+        peak_rss = rep.stats.metrics.total.peak_rss_bytes;
     }
     let time_to_reconverge =
         crate::util::stats::Summary::of(&wall_secs).map_or(0.0, |s| s.median);
@@ -523,6 +562,9 @@ fn bench_delta_cell(
         load_secs: prep.load_secs,
         init_secs,
         model_bytes: prep.model_bytes,
+        load_mode: prep.load_mode.label().to_string(),
+        arena: opts.arena.label().to_string(),
+        peak_rss_bytes: peak_rss,
         wall_secs,
         updates,
         scratch_wall_secs,
@@ -746,6 +788,11 @@ mod tests {
             assert!(c.converged, "{} did not converge", c.id);
             assert!(!c.trace.is_empty(), "{} trace is empty", c.id);
             assert_eq!(c.wall_secs.len(), 1);
+            assert_eq!(c.load_mode, "read", "in-process builds report the read path");
+            assert_eq!(c.arena, "mem", "default sweeps use heap arenas");
+            if cfg!(target_os = "linux") {
+                assert!(c.peak_rss_bytes > 0, "{}: RSS gauge not sampled", c.id);
+            }
             let last = c.trace.points.last().unwrap();
             assert!(last.max_priority < 1e-4, "{}: final priority {}", c.id, last.max_priority);
         }

@@ -50,6 +50,9 @@ pub struct TracePoint {
     pub msg_bytes_logical: u64,
     /// Allocated (cache-line-padded) message-arena bytes, same scope.
     pub msg_bytes_padded: u64,
+    /// Process peak resident set (`VmHWM`, bytes) at sample time — the
+    /// out-of-core gauge; monotone over a run, 0 without procfs.
+    pub peak_rss_bytes: u64,
     /// Max task priority at sample time (≈ max residual; the convergence
     /// signal — a converged run ends below ε).
     pub max_priority: f64,
@@ -72,6 +75,7 @@ impl TracePoint {
             tasks_touched: c.tasks_touched,
             msg_bytes_logical: c.msg_bytes_logical,
             msg_bytes_padded: c.msg_bytes_padded,
+            peak_rss_bytes: c.peak_rss_bytes,
             max_priority,
         }
     }
@@ -92,14 +96,16 @@ impl TracePoint {
             ("tasks_touched", Json::Num(self.tasks_touched as f64)),
             ("msg_bytes_logical", Json::Num(self.msg_bytes_logical as f64)),
             ("msg_bytes_padded", Json::Num(self.msg_bytes_padded as f64)),
+            ("peak_rss_bytes", Json::Num(self.peak_rss_bytes as f64)),
             ("max_priority", Json::Num(self.max_priority)),
         ])
     }
 
     /// Parse one `trace[]` element. `refreshes` / `insert_batches` were
     /// added by the fused-kernel schema extension, the `msg_bytes_*`
-    /// gauges by the precision axis, and `tasks_touched` by the delta
-    /// axis; all default to 0 when absent (older baselines).
+    /// gauges by the precision axis, `tasks_touched` by the delta axis,
+    /// and `peak_rss_bytes` by the out-of-core axis; all default to 0
+    /// when absent (older baselines).
     pub fn from_json(v: &Json) -> Result<TracePoint> {
         let num =
             |k: &str| v.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("trace.{k} missing"));
@@ -120,6 +126,7 @@ impl TracePoint {
             tasks_touched: opt("tasks_touched"),
             msg_bytes_logical: opt("msg_bytes_logical"),
             msg_bytes_padded: opt("msg_bytes_padded"),
+            peak_rss_bytes: opt("peak_rss_bytes"),
             max_priority: num("max_priority")?,
         })
     }
@@ -216,6 +223,7 @@ mod tests {
             tasks_touched: 4,
             msg_bytes_logical: 4096,
             msg_bytes_padded: 8192,
+            peak_rss_bytes: 1 << 20,
             max_priority: 0.5,
         }
     }
@@ -235,6 +243,7 @@ mod tests {
         assert_eq!(t.points[0].msg_bytes_logical, 0, "pre-precision baselines carry no gauge");
         assert_eq!(t.points[0].msg_bytes_padded, 0);
         assert_eq!(t.points[0].tasks_touched, 0, "pre-delta baselines carry no frontier count");
+        assert_eq!(t.points[0].peak_rss_bytes, 0, "pre-outofcore baselines carry no RSS gauge");
     }
 
     #[test]

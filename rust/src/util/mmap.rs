@@ -1,0 +1,306 @@
+//! Minimal raw-`mmap` wrapper for the out-of-core paths (zero-copy model
+//! loads, file-backed message arenas).
+//!
+//! The offline build has no `libc` crate, so the two syscall entry points
+//! we need (`mmap`/`munmap`, plus `ftruncate` for sizing arena temp
+//! files) are declared by hand with their Linux/unix ABI constants. Both
+//! wrappers are `#[cfg(unix)]`; on other platforms the constructors
+//! return a clean error and callers fall back to the owned/heap paths.
+//!
+//! Two mapping flavors:
+//!
+//! - [`Mmap`]: a shared read-only mapping of a whole file — the zero-copy
+//!   model-load path borrows typed sections straight out of it.
+//! - [`MmapMut`]: a shared read-write mapping of an *unlinked* temp file —
+//!   the file-backed arena path writes message cells through it. The file
+//!   is unlinked immediately after creation, so the mapping is the only
+//!   live reference and the kernel reclaims the blocks when the mapping
+//!   drops (including on crash), with no cleanup pass needed.
+//!
+//! Safety argument (shared by both): a mapping is only constructed over
+//! `len > 0` bytes the kernel accepted (`mmap` returning `MAP_FAILED` is
+//! an error), the pointer is page-aligned by the mmap contract (4096 ⊇
+//! the 64-byte alignment every caller needs), and the backing memory
+//! stays valid until `Drop` runs `munmap`. Callers that reinterpret
+//! bytes as `u32`/`f64` validate length-divisibility and offset
+//! alignment *before* the cast; see `model::io` and `bp::state`.
+
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+
+#[cfg(unix)]
+use std::os::unix::io::AsRawFd;
+
+#[cfg(unix)]
+mod sys {
+    //! Hand-declared prototypes for the three syscalls used here,
+    //! matching the Linux (and POSIX) C ABI on 64-bit targets.
+    pub const PROT_READ: i32 = 1;
+    pub const PROT_WRITE: i32 = 2;
+    pub const MAP_SHARED: i32 = 1;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        pub fn munmap(addr: *mut u8, len: usize) -> i32;
+        pub fn ftruncate(fd: i32, len: i64) -> i32;
+    }
+
+    /// `MAP_FAILED` is `(void*)-1`.
+    pub fn map_failed() -> *mut u8 {
+        usize::MAX as *mut u8
+    }
+}
+
+/// A shared read-only memory mapping of an entire file.
+///
+/// The mapped bytes live until this value drops; the model loader keeps
+/// an `Arc<Mmap>` next to every borrowed section so the lifetime is
+/// enforced by reference counting rather than borrows.
+#[derive(Debug)]
+pub struct Mmap {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is read-only and file-backed; the raw pointer is
+// only dereferenced through `as_slice`, which hands out `&[u8]` — shared
+// immutable access from any thread is sound.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `len` bytes of `file` read-only. Fails cleanly on empty files,
+    /// on kernel refusal, and on non-unix platforms.
+    #[cfg(unix)]
+    pub fn map_file(file: &File, len: u64) -> Result<Mmap> {
+        if len == 0 {
+            bail!("cannot mmap an empty file");
+        }
+        let len = usize::try_from(len).context("file too large for address space")?;
+        // SAFETY: fd is a valid open file descriptor for the lifetime of
+        // the call; a MAP_SHARED PROT_READ mapping of a regular file has
+        // no aliasing requirements on our side. The result is checked
+        // against MAP_FAILED before use.
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == sys::map_failed() {
+            bail!("mmap of {len} bytes failed");
+        }
+        Ok(Mmap { ptr, len })
+    }
+
+    /// Non-unix stub: always an error, so callers fall back to the read
+    /// path.
+    #[cfg(not(unix))]
+    pub fn map_file(_file: &File, _len: u64) -> Result<Mmap> {
+        bail!("mmap model loading is only supported on unix")
+    }
+
+    /// The mapped bytes.
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        // SAFETY: ptr/len describe a live mapping established in
+        // `map_file` and released only in `Drop`.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    /// Mapped length in bytes.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when nothing is mapped (never constructed; kept for API
+    /// completeness and clippy's `len_without_is_empty`).
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        // SAFETY: ptr/len came from a successful mmap and are unmapped
+        // exactly once.
+        unsafe {
+            sys::munmap(self.ptr, self.len);
+        }
+    }
+}
+
+/// A shared read-write mapping of a freshly created, immediately
+/// unlinked temp file — backing storage for file-backed message arenas.
+///
+/// The file is sparse (`ftruncate` to size, no data written), so blocks
+/// materialize only as pages are dirtied; unlinking right after `mmap`
+/// means the kernel drops the blocks when the mapping (the sole
+/// reference) goes away, even if the process crashes.
+#[derive(Debug)]
+pub struct MmapMut {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is private to this process (the backing file is
+// unlinked before the constructor returns). Callers only ever access it
+// through atomic cells (`AtomicF64`/`AtomicF32` lines), which carry
+// their own synchronization — the same contract as the heap arenas.
+unsafe impl Send for MmapMut {}
+unsafe impl Sync for MmapMut {}
+
+impl MmapMut {
+    /// Create an unlinked sparse temp file of `len` bytes under `dir`
+    /// and map it read-write. `tag` disambiguates concurrent arenas.
+    #[cfg(unix)]
+    pub fn temp(dir: &std::path::Path, tag: &str, len: usize) -> Result<MmapMut> {
+        if len == 0 {
+            bail!("cannot create an empty arena mapping");
+        }
+        // Unique name: pid + tag + a process-wide counter. The file is
+        // unlinked before we return, so the name only needs to dodge
+        // collisions within this call window.
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+        let name = format!(".rbp-arena-{}-{}-{}", std::process::id(), tag, seq);
+        let path = dir.join(name);
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create_new(true)
+            .open(&path)
+            .with_context(|| format!("creating arena temp file in {}", dir.display()))?;
+        // SAFETY: fd is valid; ftruncate extends the empty file to `len`
+        // sparse bytes. Checked for failure (e.g. ENOSPC-reserving
+        // filesystems, EFBIG).
+        let rc = unsafe { sys::ftruncate(file.as_raw_fd(), len as i64) };
+        if rc != 0 {
+            std::fs::remove_file(&path).ok();
+            bail!("sizing arena temp file to {len} bytes failed");
+        }
+        // SAFETY: as in `Mmap::map_file`, but PROT_READ|PROT_WRITE over
+        // a file we exclusively own; result checked against MAP_FAILED.
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ | sys::PROT_WRITE,
+                sys::MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        // Unlink regardless of mmap success: on success the mapping
+        // keeps the inode alive; on failure we must not leak the file.
+        std::fs::remove_file(&path).ok();
+        if ptr == sys::map_failed() {
+            bail!("mmap of {len}-byte arena file failed");
+        }
+        Ok(MmapMut { ptr, len })
+    }
+
+    /// Non-unix stub: always an error, so callers fall back to heap
+    /// arenas.
+    #[cfg(not(unix))]
+    pub fn temp(_dir: &std::path::Path, _tag: &str, _len: usize) -> Result<MmapMut> {
+        bail!("mmap-backed arenas are only supported on unix")
+    }
+
+    /// Base pointer of the mapping (page-aligned).
+    #[inline]
+    pub fn as_ptr(&self) -> *mut u8 {
+        self.ptr
+    }
+
+    /// Mapped length in bytes.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when nothing is mapped (never constructed; for clippy's
+    /// `len_without_is_empty`).
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Drop for MmapMut {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        // SAFETY: ptr/len came from a successful mmap and are unmapped
+        // exactly once; the unlinked backing file dies with the mapping.
+        unsafe {
+            sys::munmap(self.ptr, self.len);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    #[test]
+    fn map_file_round_trip() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!(".rbp-mmap-test-{}", std::process::id()));
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(&[1u8, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+        f.sync_all().unwrap();
+        let f = std::fs::File::open(&path).unwrap();
+        let m = Mmap::map_file(&f, 8).unwrap();
+        assert_eq!(m.as_slice(), &[1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_eq!(m.len(), 8);
+        assert!(!m.is_empty());
+        drop(m);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn map_empty_file_is_clean_error() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!(".rbp-mmap-empty-{}", std::process::id()));
+        std::fs::File::create(&path).unwrap();
+        let f = std::fs::File::open(&path).unwrap();
+        assert!(Mmap::map_file(&f, 0).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn temp_mapping_reads_back_writes() {
+        let m = MmapMut::temp(&std::env::temp_dir(), "test", 4096).unwrap();
+        assert_eq!(m.len(), 4096);
+        assert!(!m.is_empty());
+        // SAFETY: test-local exclusive access to a live 4096-byte mapping.
+        unsafe {
+            *m.as_ptr() = 0xAB;
+            *m.as_ptr().add(4095) = 0xCD;
+            assert_eq!(*m.as_ptr(), 0xAB);
+            assert_eq!(*m.as_ptr().add(4095), 0xCD);
+        }
+    }
+
+    #[test]
+    fn temp_mapping_rejects_bad_dir() {
+        let bad = std::path::Path::new("/nonexistent-rbp-dir");
+        assert!(MmapMut::temp(bad, "test", 4096).is_err());
+    }
+}

@@ -131,17 +131,26 @@ fn obtain_model_cache_roundtrip() {
     let spec = ModelSpec::Ising { n: 5 };
     // Stale entries from an earlier run would turn the miss into a hit.
     std::fs::remove_file(dir.join(spec.cache_slug(9))).ok();
-    // First call: cache miss → build + save.
-    let (built, miss) = relaxed_bp::run::obtain_model(&spec, 9, Some(&dir), Some(&dir)).unwrap();
+    use relaxed_bp::model::io::LoadMode;
+    // First call: cache miss → build + save. The read mode keeps this
+    // test pinned to the historical copying path; the map path has its
+    // own suite (tests/outofcore.rs).
+    let (built, miss) =
+        relaxed_bp::run::obtain_model(&spec, 9, Some(&dir), Some(&dir), LoadMode::Read, true)
+            .unwrap();
     assert!(miss.model_bytes > 0, "save leg should record the file size");
     assert!(miss.load_secs == 0.0, "cache miss must not record a load");
+    assert_eq!(miss.load_mode, LoadMode::Read, "builds report the read path");
     // Second call: cache hit → disk load, bit-identical model.
-    let (loaded, hit) = relaxed_bp::run::obtain_model(&spec, 9, Some(&dir), None).unwrap();
+    let (loaded, hit) =
+        relaxed_bp::run::obtain_model(&spec, 9, Some(&dir), None, LoadMode::Read, true).unwrap();
     assert!(hit.build_secs == 0.0, "cache hit must not rebuild");
     assert_eq!(hit.model_bytes, miss.model_bytes);
+    assert_eq!(hit.load_mode, LoadMode::Read);
     assert_models_equal(&built, &loaded);
     // A different seed is a different cache entry → build leg again.
-    let (_, other) = relaxed_bp::run::obtain_model(&spec, 10, Some(&dir), None).unwrap();
+    let (_, other) =
+        relaxed_bp::run::obtain_model(&spec, 10, Some(&dir), None, LoadMode::Read, true).unwrap();
     assert!(other.load_secs == 0.0);
     std::fs::remove_file(dir.join(spec.cache_slug(9))).ok();
 }

@@ -44,7 +44,7 @@ fn run_partitioned(
         .with_threads(threads)
         .with_seed(seed)
         .with_partition(partition);
-    let msgs = relaxed_bp::run::build_messages(&cfg, &mrf);
+    let msgs = relaxed_bp::run::build_messages(&cfg, &mrf).unwrap();
     let stats = build_engine(alg).run(&mrf, &msgs, &cfg).unwrap();
     assert!(
         stats.converged,

@@ -176,7 +176,7 @@ fn fused_batched_engine_pop_accounting_and_ldpc_decode() {
             .with_threads(2)
             .with_seed(19)
             .with_fused(fused);
-        let msgs = build_messages(&cfg, &inst.mrf);
+        let msgs = build_messages(&cfg, &inst.mrf).unwrap();
         let engine = relaxed_bp::engines::build_engine(&cfg.algorithm);
         let stats = engine.run(&inst.mrf, &msgs, &cfg).unwrap();
         assert!(stats.converged, "fused={fused}");

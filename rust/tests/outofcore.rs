@@ -1,0 +1,331 @@
+//! Out-of-core storage parity suite (the `--load-mode` / `--arena` axes):
+//!
+//! - mmap-load vs read-load bit-exact `Mrf` equality across all nine
+//!   model families;
+//! - mmap-arena vs mem-arena fixed points are bit-identical for the
+//!   deterministic sequential engine, and every engine in the roster
+//!   converges on file-backed arenas;
+//! - snapshot/restore round-trips through mmap arenas, interchangeably
+//!   with heap snapshots, and `uniform_like` shadows mirror the backing
+//!   mode;
+//! - truncated / grown / table-corrupt files fail the map path as clean
+//!   `anyhow` errors (never panics), and a valid-but-unaligned v2 file
+//!   falls back to the read path automatically.
+
+use relaxed_bp::bp::{max_marginal_diff, msg_buf, ArenaMode, Messages, MsgSource, Precision};
+use relaxed_bp::configio::{AlgorithmSpec, ModelSpec, PartitionSpec, RunConfig};
+use relaxed_bp::model::io::{self as model_io, LoadMode};
+use relaxed_bp::model::{builders, Mrf};
+use relaxed_bp::run::run_config;
+use relaxed_bp::util::Xoshiro256;
+
+/// One small instance per model family (all nine builders) — the same
+/// roster the cold-path suite pins.
+fn families() -> Vec<ModelSpec> {
+    vec![
+        ModelSpec::Tree { n: 31 },
+        ModelSpec::Path { n: 17 },
+        ModelSpec::AdversarialTree { n: 15 },
+        ModelSpec::UniformTree { n: 40, arity: 3 },
+        ModelSpec::Ising { n: 5 },
+        ModelSpec::Potts { n: 4, q: 3 },
+        ModelSpec::Potts { n: 3, q: 32 },
+        ModelSpec::Ldpc { n: 24, flip_prob: 0.07 },
+        ModelSpec::PowerLaw { n: 64, m: 2 },
+    ]
+}
+
+/// Field-by-field bit-exact equality of two models (graph arrays,
+/// domains, node factors, and every pairwise factor entry) — mapped
+/// storage must be indistinguishable from owned.
+fn assert_models_equal(m: &Mrf, back: &Mrf) {
+    assert_eq!(back.name, m.name);
+    assert_eq!(back.num_nodes(), m.num_nodes());
+    assert_eq!(back.num_messages(), m.num_messages());
+    assert_eq!(back.domain, m.domain);
+    assert_eq!(back.graph.offsets, m.graph.offsets);
+    assert_eq!(back.graph.adj_node, m.graph.adj_node);
+    assert_eq!(back.graph.adj_out, m.graph.adj_out);
+    assert_eq!(back.graph.adj_in, m.graph.adj_in);
+    assert_eq!(back.graph.edge_src, m.graph.edge_src);
+    assert_eq!(back.graph.edge_dst, m.graph.edge_dst);
+    assert_eq!(back.msg_offset, m.msg_offset);
+    assert_eq!(back.total_msg_len, m.total_msg_len);
+    for i in 0..m.num_nodes() {
+        assert_eq!(back.node_factors.of(i), m.node_factors.of(i));
+    }
+    for e in 0..m.num_messages() {
+        let fr_a = m.edge_factor[e];
+        let fr_b = back.edge_factor[e];
+        assert_eq!(m.pool.shape_of(fr_a), back.pool.shape_of(fr_b));
+        let (dr, dc) = m.pool.shape_of(fr_a);
+        for a in 0..dr {
+            for b in 0..dc {
+                assert_eq!(m.pool.get(fr_a, a, b), back.pool.get(fr_b, a, b));
+            }
+        }
+    }
+}
+
+fn tmp_path(tag: &str, spec: &ModelSpec, seed: u64) -> String {
+    std::env::temp_dir()
+        .join(format!("outofcore_{tag}_{}", spec.cache_slug(seed)))
+        .to_string_lossy()
+        .into_owned()
+}
+
+#[test]
+fn mmap_load_equals_read_load_across_all_families() {
+    for spec in families() {
+        let m = builders::build(&spec, 7);
+        let path = tmp_path("map", &spec, 7);
+        model_io::save(&m, &path).unwrap();
+        let (read, rmode) = model_io::load_with_mode(&path, 2, LoadMode::Read, true)
+            .unwrap_or_else(|e| panic!("{} read: {e:#}", spec.name()));
+        assert_eq!(rmode, LoadMode::Read);
+        for verify in [false, true] {
+            let (mapped, mmode) = model_io::load_with_mode(&path, 2, LoadMode::Map, verify)
+                .unwrap_or_else(|e| panic!("{} map (verify={verify}): {e:#}", spec.name()));
+            if cfg!(unix) {
+                assert_eq!(mmode, LoadMode::Map, "{}: map must not fall back", spec.name());
+            }
+            assert_models_equal(&m, &mapped);
+            assert_models_equal(&read, &mapped);
+        }
+        // Auto prefers the map path but must load the same bits either way.
+        let (auto, amode) = model_io::load_with_mode(&path, 2, LoadMode::Auto, false).unwrap();
+        if cfg!(unix) {
+            assert_eq!(amode, LoadMode::Map);
+        }
+        assert_models_equal(&m, &auto);
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+/// The deterministic sequential engine must land on a bit-identical
+/// fixed point regardless of the arena backing: the mmap arm changes
+/// where the bytes live, never what they are.
+#[test]
+fn mmap_arena_fixed_point_is_bit_identical_to_mem() {
+    if !cfg!(unix) {
+        return; // file-backed arenas are unix-only
+    }
+    for spec in [ModelSpec::Ising { n: 5 }, ModelSpec::Tree { n: 31 }] {
+        let run = |arena: ArenaMode| {
+            let cfg = RunConfig::new(spec.clone(), AlgorithmSpec::SequentialResidual)
+                .with_seed(11)
+                .with_arena(arena);
+            let rep = run_config(&cfg).unwrap();
+            assert!(rep.stats.converged, "{}", spec.name());
+            rep.marginals()
+        };
+        let mem = run(ArenaMode::Mem);
+        let mmap = run(ArenaMode::Mmap { dir: None });
+        assert_eq!(mem.len(), mmap.len());
+        for (i, (a, b)) in mem.iter().zip(mmap.iter()).enumerate() {
+            for (x, (va, vb)) in a.iter().zip(b.iter()).enumerate() {
+                assert!(
+                    va.to_bits() == vb.to_bits(),
+                    "{} node {i} x={x}: {va} vs {vb} differ in bits",
+                    spec.name()
+                );
+            }
+        }
+    }
+}
+
+/// Every engine in the roster (all 15 algorithm specs) runs to
+/// convergence on file-backed arenas. A tree instance keeps the two
+/// optimal-tree engines in scope; threads = 2 exercises the shared pool
+/// runtime over mapped memory.
+#[test]
+fn all_engines_smoke_on_mmap_arenas() {
+    if !cfg!(unix) {
+        return;
+    }
+    let spec = ModelSpec::Tree { n: 31 };
+    let roster: Vec<AlgorithmSpec> = vec![
+        AlgorithmSpec::SequentialResidual,
+        AlgorithmSpec::Synchronous,
+        AlgorithmSpec::CoarseGrained,
+        AlgorithmSpec::RelaxedResidual,
+        AlgorithmSpec::WeightDecay,
+        AlgorithmSpec::Priority,
+        AlgorithmSpec::Splash { h: 2 },
+        AlgorithmSpec::SmartSplash { h: 2 },
+        AlgorithmSpec::RelaxedSmartSplash { h: 2 },
+        AlgorithmSpec::RandomSplash { h: 2 },
+        AlgorithmSpec::Bucket,
+        AlgorithmSpec::RandomSynchronous { low_p: 0.4 },
+        AlgorithmSpec::RelaxedResidualBatched { batch: 8 },
+        AlgorithmSpec::OptimalTree,
+        AlgorithmSpec::RelaxedOptimalTree,
+    ];
+    assert_eq!(roster.len(), 15, "roster must cover every engine");
+    let reference = {
+        let cfg = RunConfig::new(spec.clone(), AlgorithmSpec::SequentialResidual).with_seed(3);
+        let rep = run_config(&cfg).unwrap();
+        assert!(rep.stats.converged);
+        rep.marginals()
+    };
+    for alg in roster {
+        let cfg = RunConfig::new(spec.clone(), alg.clone())
+            .with_threads(2)
+            .with_seed(3)
+            .with_arena(ArenaMode::Mmap { dir: None });
+        let rep = run_config(&cfg).unwrap();
+        assert!(rep.stats.converged, "{} on mmap arenas", alg.name());
+        let diff = max_marginal_diff(&rep.marginals(), &reference);
+        assert!(diff < 1e-3, "{} on mmap arenas: marginal diff {diff}", alg.name());
+    }
+}
+
+/// Sharded file-backed arenas (locality axis × out-of-core axis): the
+/// partitioned Multiqueue path must reach the same fixed point over
+/// per-shard mappings as over per-shard heap arenas.
+#[test]
+fn partitioned_mmap_arenas_reach_the_mem_fixed_point() {
+    if !cfg!(unix) {
+        return;
+    }
+    let spec = ModelSpec::Ising { n: 5 };
+    let run = |arena: ArenaMode| {
+        let cfg = RunConfig::new(spec.clone(), AlgorithmSpec::RelaxedResidual)
+            .with_threads(4)
+            .with_seed(11)
+            .with_partition(PartitionSpec::Affine { shards: 7, spill: 0.1, bfs: false })
+            .with_arena(arena);
+        let rep = run_config(&cfg).unwrap();
+        assert!(rep.stats.converged);
+        rep.marginals()
+    };
+    let diff = max_marginal_diff(&run(ArenaMode::Mem), &run(ArenaMode::Mmap { dir: None }));
+    assert!(diff < 2e-2, "sharded mem vs mmap marginal diff {diff}");
+}
+
+/// Snapshot/restore and `uniform_like` through file-backed arenas:
+/// snapshots are interchangeable with heap snapshots bit for bit, and
+/// restore rewinds mapped state exactly.
+#[test]
+fn snapshot_restore_roundtrip_through_mmap_arenas() {
+    if !cfg!(unix) {
+        return;
+    }
+    let mrf = builders::build(&ModelSpec::Ising { n: 4 }, 5);
+    let arena = ArenaMode::Mmap { dir: None };
+    for precision in [Precision::F64, Precision::F32] {
+        let mm = Messages::uniform_in(&mrf, precision, &arena).unwrap();
+        assert!(mm.arena_mode().is_mmap());
+        let heap = Messages::uniform_with(&mrf, precision);
+        let mut rng = Xoshiro256::seed_from_u64(13);
+        let mut write_round = |seed_rng: &mut Xoshiro256| {
+            for _ in 0..200 {
+                let e = seed_rng.index(mrf.num_messages()) as u32;
+                let a = seed_rng.uniform(0.01, 0.99);
+                mm.write_msg(&mrf, e, &[a, 1.0 - a]);
+                heap.write_msg(&mrf, e, &[a, 1.0 - a]);
+            }
+        };
+        write_round(&mut rng);
+        let snap = mm.snapshot();
+        assert_eq!(snap, heap.snapshot(), "mapped and heap snapshots are interchangeable");
+        // Diverge, then rewind the mapped state from the snapshot.
+        mm.write_msg(&mrf, 0, &[0.25, 0.75]);
+        mm.write_msg(&mrf, 1, &[0.75, 0.25]);
+        mm.restore(&snap);
+        assert_eq!(mm.snapshot(), snap, "restore rewinds mapped cells exactly");
+        let mut a = msg_buf();
+        let mut b = msg_buf();
+        for e in 0..mrf.num_messages() as u32 {
+            let la = mm.read_msg(&mrf, e, &mut a);
+            let lb = heap.read_msg(&mrf, e, &mut b);
+            assert_eq!(la, lb);
+            assert_eq!(&a[..la], &b[..lb], "edge {e}");
+        }
+        // Shadow states mirror the backing mode (an out-of-core run must
+        // not regain a heap-resident copy through its caches).
+        let shadow = Messages::uniform_like(&mrf, &mm);
+        assert!(shadow.arena_mode().is_mmap(), "uniform_like mirrors the arena mode");
+        assert_eq!(shadow.precision(), precision);
+        assert_eq!(shadow.num_shards(), mm.num_shards());
+    }
+}
+
+/// File-level robustness of the map path: truncation, growth, and a
+/// corrupt section table must all surface as clean `anyhow` errors, and
+/// a valid-but-unaligned v2 file must fall back to the read path
+/// automatically (mapping never changes what loads).
+#[test]
+fn map_attempts_on_damaged_files_fail_cleanly() {
+    let spec = ModelSpec::Ising { n: 5 };
+    let m = builders::build(&spec, 3);
+    let path = tmp_path("damage", &spec, 3);
+    model_io::save(&m, &path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // Truncation at several points: below the section area the map probe
+    // defers to the read path's canonical error; inside it the section
+    // bounds check fires. Either way: error, not panic.
+    for cut in [6, 300, good.len() / 3, good.len() - 1] {
+        std::fs::write(&path, &good[..cut]).unwrap();
+        for mode in [LoadMode::Map, LoadMode::Auto] {
+            assert!(
+                model_io::load_with_mode(&path, 2, mode, false).is_err(),
+                "truncated at {cut} ({mode:?})"
+            );
+        }
+    }
+
+    // A grown file (trailing bytes past the last section) is a layout
+    // the mapped reader does not understand: clean error on unix, where
+    // the map path actually runs.
+    let mut grown = good.clone();
+    grown.extend_from_slice(&[0u8; 64]);
+    std::fs::write(&path, &grown).unwrap();
+    if cfg!(unix) {
+        let err = model_io::load_with_mode(&path, 2, LoadMode::Map, false).unwrap_err();
+        assert!(format!("{err:#}").contains("layout"), "got: {err:#}");
+    }
+
+    // Corrupt section table: point a section past the end of the file.
+    let mut bad_table = good.clone();
+    let off_pos = 64 + 24; // header (64B) + table row 0 → row 1's offset
+    bad_table[off_pos..off_pos + 8].copy_from_slice(&(good.len() as u64 * 2).to_le_bytes());
+    std::fs::write(&path, &bad_table).unwrap();
+    let err = model_io::load_with_mode(&path, 2, LoadMode::Map, false).unwrap_err();
+    assert!(format!("{err:#}").contains("bounds"), "got: {err:#}");
+
+    // Payload corruption is caught by --verify-load on the map path.
+    if cfg!(unix) {
+        let mut flipped = good.clone();
+        let mid = flipped.len() / 2;
+        for b in flipped[mid..mid + 128].iter_mut() {
+            *b ^= 0x40;
+        }
+        std::fs::write(&path, &flipped).unwrap();
+        let err = model_io::load_with_mode(&path, 2, LoadMode::Map, true).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "got: {err:#}");
+    }
+
+    // Valid but unaligned: slide the name section 4 bytes into its
+    // padding gap (data + table offset move together, so the read path
+    // still verifies). The map probe must decline and fall back.
+    let name_off_pos = 64; // table row 0: name section offset
+    let name_off = u64::from_le_bytes(good[name_off_pos..name_off_pos + 8].try_into().unwrap());
+    let name_len =
+        u64::from_le_bytes(good[name_off_pos + 8..name_off_pos + 16].try_into().unwrap());
+    let mut unaligned = good.clone();
+    let (src, dst) = (name_off as usize, name_off as usize + 4);
+    let name_bytes = unaligned[src..src + name_len as usize].to_vec();
+    unaligned[src..src + 4].fill(0);
+    unaligned[dst..dst + name_len as usize].copy_from_slice(&name_bytes);
+    unaligned[name_off_pos..name_off_pos + 8].copy_from_slice(&(name_off + 4).to_le_bytes());
+    assert!(dst + name_len as usize <= 512, "name must fit inside its padding gap");
+    std::fs::write(&path, &unaligned).unwrap();
+    let (back, mode) = model_io::load_with_mode(&path, 2, LoadMode::Map, false)
+        .expect("unaligned v2 file falls back to the read path");
+    assert_eq!(mode, LoadMode::Read, "fallback must report the read path");
+    assert_models_equal(&m, &back);
+
+    std::fs::remove_file(&path).ok();
+}

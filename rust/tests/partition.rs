@@ -140,7 +140,7 @@ fn engines_reach_the_reference_fixed_point_with_partitioning_on() {
                     .with_threads(4)
                     .with_seed(11)
                     .with_partition(axis);
-                let msgs = relaxed_bp::run::build_messages(&cfg, &mrf);
+                let msgs = relaxed_bp::run::build_messages(&cfg, &mrf).unwrap();
                 let stats = build_engine(&alg).run(&mrf, &msgs, &cfg).unwrap();
                 assert!(
                     stats.converged,

@@ -59,7 +59,7 @@ fn f64_arm_is_bitwise_the_historical_trajectory() {
         let cfg = RunConfig::new(spec.clone(), AlgorithmSpec::SequentialResidual).with_seed(23);
         assert_eq!(cfg.precision, Precision::F64, "default precision must be f64");
 
-        let new_msgs = build_messages(&cfg, &mrf);
+        let new_msgs = build_messages(&cfg, &mrf).unwrap();
         assert_eq!(new_msgs.precision(), Precision::F64);
         let old_msgs = Messages::uniform(&mrf);
         let engine = build_engine(&cfg.algorithm);
@@ -281,7 +281,7 @@ fn ldpc_decodes_under_f32_with_halved_arena() {
             .with_threads(2)
             .with_seed(19)
             .with_precision(precision);
-        let msgs = build_messages(&cfg, &inst.mrf);
+        let msgs = build_messages(&cfg, &inst.mrf).unwrap();
         assert_eq!(msgs.precision(), precision);
         bytes.push(msgs.arena_bytes().0);
         let engine = build_engine(&cfg.algorithm);

@@ -297,7 +297,7 @@ fn ldpc_decodes_under_both_kernels() {
             .with_threads(2)
             .with_seed(19)
             .with_kernel(kernel);
-        let msgs = relaxed_bp::run::build_messages(&cfg, &inst.mrf);
+        let msgs = relaxed_bp::run::build_messages(&cfg, &inst.mrf).unwrap();
         let engine = relaxed_bp::engines::build_engine(&cfg.algorithm);
         let stats = engine.run(&inst.mrf, &msgs, &cfg).unwrap();
         assert!(stats.converged, "{kernel:?}");
