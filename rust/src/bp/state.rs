@@ -926,6 +926,11 @@ macro_rules! dispatch {
 /// matching monomorphization.
 pub struct Messages {
     store: Store,
+    /// Geometric damping factor applied by every write path: a store of
+    /// candidate `m` first blends `m' = m^{1−F}·m_old^F` (renormalized)
+    /// against the cell's current value. `0.0` (the constructor default)
+    /// skips the blend entirely, keeping the undamped path bit-frozen.
+    damping: f64,
 }
 
 impl Messages {
@@ -954,7 +959,7 @@ impl Messages {
             Precision::F64 => Store::F64(ArenaSet::uniform(mrf, arena)?),
             Precision::F32 => Store::F32(ArenaSet::uniform(mrf, arena)?),
         };
-        Ok(Messages { store })
+        Ok(Messages { store, damping: 0.0 })
     }
 
     /// All messages initialized uniform, with each shard of `partition`
@@ -991,7 +996,7 @@ impl Messages {
             Precision::F64 => Store::F64(ArenaSet::uniform_partitioned(mrf, partition, arena)?),
             Precision::F32 => Store::F32(ArenaSet::uniform_partitioned(mrf, partition, arena)?),
         };
-        Ok(Messages { store })
+        Ok(Messages { store, damping: 0.0 })
     }
 
     /// Uniform state sharing `layout`'s arena sharding, storage
@@ -1007,6 +1012,10 @@ impl Messages {
     /// If `layout` is file-backed and the shadow's arena temp files
     /// cannot be created (the live state already succeeded in the same
     /// directory moments earlier, so this is disk-full territory).
+    ///
+    /// The shadow does **not** inherit `layout`'s damping factor: caches
+    /// like the lookahead hold *candidate* values, and damping them again
+    /// on store would double-apply the blend the live state already paid.
     pub fn uniform_like(mrf: &Mrf, layout: &Messages) -> Self {
         let store = match &layout.store {
             Store::F64(a) => Store::F64(
@@ -1016,7 +1025,45 @@ impl Messages {
                 ArenaSet::uniform_like(mrf, a).expect("allocating shadow message arenas"),
             ),
         };
-        Messages { store }
+        Messages { store, damping: 0.0 }
+    }
+
+    /// Set the geometric damping factor the write paths apply (`0.0` =
+    /// undamped, bit-frozen to the pre-axis store path). Set once at
+    /// construction time — [`crate::run::build_messages`] wires it from
+    /// the config before the state is shared with workers.
+    pub fn set_damping(&mut self, damping: f64) {
+        self.damping = damping;
+    }
+
+    /// The geometric damping factor the write paths apply.
+    pub fn damping(&self) -> f64 {
+        self.damping
+    }
+
+    /// Fill `buf` with the renormalized geometric blend of the candidate
+    /// `vals` against message `e`'s current value; returns the domain
+    /// length. Exact zeros survive (0^x = 0), so hard-factor support sets
+    /// are preserved; a degenerate blend (zero or non-finite mass) falls
+    /// back to the undamped candidate rather than storing garbage.
+    fn damp_into(&self, mrf: &Mrf, e: u32, vals: &[f64], buf: &mut MsgBuf) -> usize {
+        let f = self.damping;
+        let mut old = msg_buf();
+        let len = self.read_msg(mrf, e, &mut old);
+        let mut sum = 0.0;
+        for i in 0..len {
+            let b = vals[i].powf(1.0 - f) * old[i].powf(f);
+            buf[i] = b;
+            sum += b;
+        }
+        if sum > 0.0 && sum.is_finite() {
+            for v in &mut buf[..len] {
+                *v /= sum;
+            }
+        } else {
+            buf[..len].copy_from_slice(&vals[..len]);
+        }
+        len
     }
 
     /// Storage precision of the arenas.
@@ -1052,9 +1099,17 @@ impl Messages {
     }
 
     /// Write message `e` from `vals[..len]`, rounding each value once to
-    /// the storage precision.
+    /// the storage precision. Under a nonzero damping factor the stored
+    /// value is the geometric blend against the cell's current value (see
+    /// [`Messages::set_damping`]).
     #[inline]
     pub fn write_msg(&self, mrf: &Mrf, e: u32, vals: &[f64]) {
+        if self.damping != 0.0 {
+            let mut buf = msg_buf();
+            let len = self.damp_into(mrf, e, vals, &mut buf);
+            dispatch!(self, a => a.write_msg(mrf, e, &buf[..len]));
+            return;
+        }
         dispatch!(self, a => a.write_msg(mrf, e, vals));
     }
 
@@ -1065,6 +1120,12 @@ impl Messages {
     /// ordering; used by the SIMD kernel's write pass.
     #[inline]
     pub fn write_msg_bulk(&self, mrf: &Mrf, e: u32, vals: &[f64]) {
+        if self.damping != 0.0 {
+            let mut buf = msg_buf();
+            let len = self.damp_into(mrf, e, vals, &mut buf);
+            dispatch!(self, a => a.write_msg_bulk(mrf, e, &buf[..len]));
+            return;
+        }
         dispatch!(self, a => a.write_msg_bulk(mrf, e, vals));
     }
 
@@ -1079,6 +1140,26 @@ impl Messages {
     /// [`Kernel::Simd`] uses the lane-tiled reduction. Returns the
     /// residual.
     pub fn write_msg_residual(&self, mrf: &Mrf, e: u32, vals: &[f64], kernel: Kernel) -> f64 {
+        if self.damping != 0.0 {
+            // The blended value is what actually lands in the cell, so it
+            // is also what gets priced: the returned residual measures the
+            // damped step, which is the step the schedulers should see.
+            let mut buf = msg_buf();
+            let len = self.damp_into(mrf, e, vals, &mut buf);
+            return dispatch!(self, a => a.write_msg_residual(mrf, e, &buf[..len], kernel));
+        }
+        dispatch!(self, a => a.write_msg_residual(mrf, e, vals, kernel))
+    }
+
+    /// [`Messages::write_msg_residual`] minus the damping blend: store
+    /// `vals` verbatim (rounded once to the storage precision) regardless
+    /// of the configured damping factor, returning the residual against
+    /// the values the cells held before the store. This is the
+    /// distributed ingress path: a boundary value arrives *already
+    /// damped* by the rank that committed it, so applying it through the
+    /// damped facade would blend the factor in twice and the mirrored
+    /// cell would drift from the owner's.
+    pub fn write_msg_residual_raw(&self, mrf: &Mrf, e: u32, vals: &[f64], kernel: Kernel) -> f64 {
         dispatch!(self, a => a.write_msg_residual(mrf, e, vals, kernel))
     }
 

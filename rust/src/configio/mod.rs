@@ -298,6 +298,17 @@ fn valid_spill(spill: f64) -> Result<f64> {
     }
 }
 
+/// Reject damping factors outside [0, 1) (and NaN) at the config
+/// boundary: 1.0 would freeze every message, so the run could never
+/// make progress.
+pub fn valid_damping(damping: f64) -> Result<f64> {
+    if (0.0..1.0).contains(&damping) {
+        Ok(damping)
+    } else {
+        bail!("damping factor must be in [0, 1), got {damping}")
+    }
+}
+
 impl PartitionSpec {
     /// Shard-affine with auto shard count (= threads) and default spill.
     pub fn affine() -> Self {
@@ -569,6 +580,13 @@ pub struct RunConfig {
     /// every page, which defeats the point of a lazy zero-copy map. The
     /// read path always verifies regardless.
     pub verify_load: bool,
+    /// Damping axis (`--damping F`): every stored message update blends
+    /// geometrically with the old value, `m' = m^{1−F}·m_old^F`, then
+    /// renormalizes. `0.0` (default) is bit-frozen to the undamped store
+    /// path; positive values trade per-update step size for stability on
+    /// loopy graphs and the distributed boundary path. Must lie in
+    /// [0, 1).
+    pub damping: f64,
 }
 
 impl RunConfig {
@@ -600,6 +618,7 @@ impl RunConfig {
             load_mode: LoadMode::Auto,
             arena: ArenaMode::Mem,
             verify_load: false,
+            damping: 0.0,
         }
     }
 
@@ -669,6 +688,12 @@ impl RunConfig {
         self
     }
 
+    /// Set the damping axis (geometric blend factor in [0, 1)).
+    pub fn with_damping(mut self, damping: f64) -> Self {
+        self.damping = damping;
+        self
+    }
+
     /// Serialize as a JSON object.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -688,6 +713,7 @@ impl RunConfig {
             ("load_mode", Json::Str(self.load_mode.label().into())),
             ("arena", Json::Str(self.arena.spec())),
             ("verify_load", Json::Bool(self.verify_load)),
+            ("damping", Json::Num(self.damping)),
         ])
     }
 
@@ -763,6 +789,14 @@ impl RunConfig {
             cfg.verify_load = b
                 .as_bool()
                 .ok_or_else(|| anyhow!("verify_load must be a boolean (true|false)"))?;
+        }
+        if let Some(d) = v.get("damping") {
+            // Configs written before the damping axis parse undamped; a
+            // present-but-malformed value is an error.
+            cfg.damping = valid_damping(
+                d.as_f64()
+                    .ok_or_else(|| anyhow!("damping must be a number in [0, 1)"))?,
+            )?;
         }
         Ok(cfg)
     }
@@ -1036,6 +1070,30 @@ mod tests {
         assert!(RunConfig::from_json(&parse(bad).unwrap()).is_err());
         let bad =
             r#"{"model": {"kind": "ising", "n": 5}, "algorithm": "rr", "verify_load": "yes"}"#;
+        assert!(RunConfig::from_json(&parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn damping_axis_roundtrip_and_back_compat() {
+        let cfg = RunConfig::new(ModelSpec::Ising { n: 6 }, AlgorithmSpec::RelaxedResidual)
+            .with_damping(0.3);
+        let j = cfg.to_json().to_string_pretty();
+        let back = RunConfig::from_json(&parse(&j).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+        assert_eq!(back.damping, 0.3);
+        // Configs written before the damping axis parse undamped.
+        let legacy = r#"{"model": {"kind": "ising", "n": 5}, "algorithm": "rr"}"#;
+        let cfg = RunConfig::from_json(&parse(legacy).unwrap()).unwrap();
+        assert_eq!(cfg.damping, 0.0);
+        // Out-of-range or malformed values are errors, not silent defaults.
+        assert!(valid_damping(0.0).is_ok());
+        assert!(valid_damping(0.99).is_ok());
+        assert!(valid_damping(1.0).is_err());
+        assert!(valid_damping(-0.1).is_err());
+        assert!(valid_damping(f64::NAN).is_err());
+        let bad = r#"{"model": {"kind": "ising", "n": 5}, "algorithm": "rr", "damping": "lots"}"#;
+        assert!(RunConfig::from_json(&parse(bad).unwrap()).is_err());
+        let bad = r#"{"model": {"kind": "ising", "n": 5}, "algorithm": "rr", "damping": 1.5}"#;
         assert!(RunConfig::from_json(&parse(bad).unwrap()).is_err());
     }
 

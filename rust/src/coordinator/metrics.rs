@@ -76,6 +76,23 @@ pub struct Counters {
     /// `msg_bytes_padded + model_bytes`. Process-wide, so max-merged;
     /// zero on platforms without procfs.
     pub peak_rss_bytes: u64,
+    /// Boundary messages this rank serialized for a peer (distributed runs
+    /// only; zero single-process). Counted at egress-buffer push time, at
+    /// the origin rank — relayed frames are not re-counted, so summed over
+    /// ranks this must equal [`Counters::boundary_msgs_recv`].
+    pub boundary_msgs_sent: u64,
+    /// Boundary messages applied into this rank's arena via the ingress
+    /// path (counted at the final destination; relay hops excluded).
+    pub boundary_msgs_recv: u64,
+    /// Payload bytes of boundary-exchange frames sent by this rank
+    /// (BATCH frames only; the handshake/token/stats control traffic is
+    /// excluded so the number tracks the paper-relevant message volume).
+    pub boundary_bytes: u64,
+    /// Coalesced BATCH frames flushed to peers by this rank.
+    pub exchange_batches: u64,
+    /// Microseconds spent blocked on network I/O (egress flushes and the
+    /// final gather); reported as `net_wait_secs` in run JSON.
+    pub net_wait_us: u64,
 }
 
 impl Counters {
@@ -100,6 +117,11 @@ impl Counters {
         self.msg_bytes_padded = self.msg_bytes_padded.max(other.msg_bytes_padded);
         self.model_bytes = self.model_bytes.max(other.model_bytes);
         self.peak_rss_bytes = self.peak_rss_bytes.max(other.peak_rss_bytes);
+        self.boundary_msgs_sent += other.boundary_msgs_sent;
+        self.boundary_msgs_recv += other.boundary_msgs_recv;
+        self.boundary_bytes += other.boundary_bytes;
+        self.exchange_batches += other.exchange_batches;
+        self.net_wait_us += other.net_wait_us;
     }
 }
 
@@ -126,6 +148,11 @@ pub struct AtomicCounters {
     msg_bytes_padded: AtomicU64,
     model_bytes: AtomicU64,
     peak_rss_bytes: AtomicU64,
+    boundary_msgs_sent: AtomicU64,
+    boundary_msgs_recv: AtomicU64,
+    boundary_bytes: AtomicU64,
+    exchange_batches: AtomicU64,
+    net_wait_us: AtomicU64,
 }
 
 impl AtomicCounters {
@@ -148,6 +175,11 @@ impl AtomicCounters {
         self.msg_bytes_padded.store(c.msg_bytes_padded, Ordering::Relaxed);
         self.model_bytes.store(c.model_bytes, Ordering::Relaxed);
         self.peak_rss_bytes.store(c.peak_rss_bytes, Ordering::Relaxed);
+        self.boundary_msgs_sent.store(c.boundary_msgs_sent, Ordering::Relaxed);
+        self.boundary_msgs_recv.store(c.boundary_msgs_recv, Ordering::Relaxed);
+        self.boundary_bytes.store(c.boundary_bytes, Ordering::Relaxed);
+        self.exchange_batches.store(c.exchange_batches, Ordering::Relaxed);
+        self.net_wait_us.store(c.net_wait_us, Ordering::Relaxed);
     }
 
     /// Read the last published snapshot.
@@ -169,6 +201,11 @@ impl AtomicCounters {
             msg_bytes_padded: self.msg_bytes_padded.load(Ordering::Relaxed),
             model_bytes: self.model_bytes.load(Ordering::Relaxed),
             peak_rss_bytes: self.peak_rss_bytes.load(Ordering::Relaxed),
+            boundary_msgs_sent: self.boundary_msgs_sent.load(Ordering::Relaxed),
+            boundary_msgs_recv: self.boundary_msgs_recv.load(Ordering::Relaxed),
+            boundary_bytes: self.boundary_bytes.load(Ordering::Relaxed),
+            exchange_batches: self.exchange_batches.load(Ordering::Relaxed),
+            net_wait_us: self.net_wait_us.load(Ordering::Relaxed),
         }
     }
 }
@@ -259,6 +296,38 @@ mod tests {
         assert_eq!(a.updates, 8);
         assert_eq!(a.wasted_pops, 1);
         assert_eq!(a.stale_pops, 2);
+    }
+
+    #[test]
+    fn boundary_counters_sum_merge() {
+        // The distributed-exchange counters are event counts (per-rank
+        // traffic), not shared-state gauges: aggregation sums them.
+        let mut a = Counters {
+            boundary_msgs_sent: 10,
+            boundary_msgs_recv: 4,
+            boundary_bytes: 1200,
+            exchange_batches: 2,
+            net_wait_us: 150,
+            ..Default::default()
+        };
+        let b = Counters {
+            boundary_msgs_sent: 5,
+            boundary_msgs_recv: 11,
+            boundary_bytes: 800,
+            exchange_batches: 3,
+            net_wait_us: 50,
+            ..Default::default()
+        };
+        a.add(&b);
+        assert_eq!(a.boundary_msgs_sent, 15);
+        assert_eq!(a.boundary_msgs_recv, 15);
+        assert_eq!(a.boundary_bytes, 2000);
+        assert_eq!(a.exchange_batches, 5);
+        assert_eq!(a.net_wait_us, 200);
+        // And they roundtrip through the atomic board like every field.
+        let board = CounterBoard::new(1);
+        board.slot(0).publish(&a);
+        assert_eq!(board.slot(0).snapshot(), a);
     }
 
     #[test]

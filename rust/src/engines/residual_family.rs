@@ -24,7 +24,7 @@ use crate::exec::{ExecCtx, TaskPolicy, WorkerPool};
 use crate::model::{EvidenceDelta, Mrf};
 use crate::sched::SchedChoice;
 use anyhow::Result;
-use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Kind {
@@ -130,6 +130,16 @@ pub(crate) struct ResidualPolicy<'a> {
     /// Delta warm start: seed only the out-edges of these (perturbed)
     /// nodes instead of every message. `None` = scratch run, full seed.
     seed_nodes: Option<Vec<u32>>,
+    /// Distributed-runtime hooks (rank-ownership filter, boundary
+    /// publication, ingress, rank-level termination); `None` keeps every
+    /// single-process path byte-identical.
+    dist: Option<&'a dyn crate::net::DistDriver>,
+    /// Ingress-activity epoch at which the last verify sweep came back
+    /// clean (`u64::MAX` = never). While a distributed rank idles waiting
+    /// for the termination token, nothing can change its residuals except
+    /// a boundary arrival — so an unchanged epoch lets the verifier skip
+    /// re-sweeping on every protocol attempt.
+    clean_epoch: AtomicU64,
 }
 
 /// Per-worker buffers for the refresh paths: the fused kernel's
@@ -139,6 +149,8 @@ pub(crate) struct RefreshScratch {
     node: NodeScratch,
     gather: MsgScratch,
     batch: Vec<(u32, f64)>,
+    /// Arrived boundary edges taken from the distributed inbox.
+    inbox: Vec<u32>,
 }
 
 impl<'a> ResidualPolicy<'a> {
@@ -158,7 +170,34 @@ impl<'a> ResidualPolicy<'a> {
         } else {
             Lookahead::init(mrf, msgs, cfg.kernel)
         };
-        ResidualPolicy { mrf, msgs, la, counts, eps: cfg.epsilon, fused: cfg.fused, seed_nodes: None }
+        ResidualPolicy {
+            mrf,
+            msgs,
+            la,
+            counts,
+            eps: cfg.epsilon,
+            fused: cfg.fused,
+            seed_nodes: None,
+            dist: None,
+            clean_epoch: AtomicU64::new(u64::MAX),
+        }
+    }
+
+    /// Distributed-rank policy: identical to [`ResidualPolicy::new`]
+    /// (plain residual priorities) but every seed/requeue site filters to
+    /// the rank's owned tasks, committed boundary values are published
+    /// through `dist`, arrived mirror updates are drained into the local
+    /// scheduler, and the pool's termination gate runs the rank-level
+    /// protocol.
+    pub(crate) fn new_dist(
+        mrf: &'a Mrf,
+        msgs: &'a Messages,
+        cfg: &RunConfig,
+        dist: &'a dyn crate::net::DistDriver,
+    ) -> Self {
+        let mut p = Self::new(mrf, msgs, cfg, false);
+        p.dist = Some(dist);
+        p
     }
 
     /// Warm-start policy over a resident `msgs` state: the lookahead cache
@@ -191,6 +230,8 @@ impl<'a> ResidualPolicy<'a> {
             eps: cfg.epsilon,
             fused: cfg.fused,
             seed_nodes: Some(nodes),
+            dist: None,
+            clean_epoch: AtomicU64::new(u64::MAX),
         }
     }
 
@@ -203,6 +244,16 @@ impl<'a> ResidualPolicy<'a> {
             Some(c) => res / (c[e as usize].load(Ordering::Relaxed).max(1) as f64),
         }
     }
+
+    /// True when this process may schedule task `e` (always, outside a
+    /// distributed run).
+    #[inline]
+    fn owned(&self, e: u32) -> bool {
+        match self.dist {
+            None => true,
+            Some(d) => d.owns(e),
+        }
+    }
 }
 
 impl TaskPolicy for ResidualPolicy<'_> {
@@ -213,13 +264,21 @@ impl TaskPolicy for ResidualPolicy<'_> {
     }
 
     fn make_scratch(&self) -> Self::Scratch {
-        RefreshScratch { node: NodeScratch::new(), gather: MsgScratch::new(), batch: Vec::new() }
+        RefreshScratch {
+            node: NodeScratch::new(),
+            gather: MsgScratch::new(),
+            batch: Vec::new(),
+            inbox: Vec::new(),
+        }
     }
 
     fn seed(&self, ctx: &mut ExecCtx<'_>) {
         match &self.seed_nodes {
             None => {
                 for e in 0..self.mrf.num_messages() as u32 {
+                    if !self.owned(e) {
+                        continue;
+                    }
                     ctx.requeue(e, self.priority(self.la.residual(e), e));
                 }
             }
@@ -234,6 +293,9 @@ impl TaskPolicy for ResidualPolicy<'_> {
                 for &i in nodes {
                     for s in self.mrf.graph.slots(i as usize) {
                         let e = self.mrf.graph.adj_out[s];
+                        if !self.owned(e) {
+                            continue;
+                        }
                         batch.push((e, self.priority(self.la.residual(e), e)));
                     }
                 }
@@ -256,6 +318,11 @@ impl TaskPolicy for ResidualPolicy<'_> {
             if let Some(counts) = &self.counts {
                 counts[e as usize].fetch_add(1, Ordering::Relaxed);
             }
+            if let Some(d) = self.dist {
+                // Owned boundary edge: ship the value that actually
+                // landed (damping included) to its remote consumers.
+                d.publish(self.mrf, self.msgs, e);
+            }
             if self.fused {
                 // Fused refresh of dst's out-set (minus the unaffected
                 // reverse edge): one O(deg) node pass, then one batched
@@ -270,6 +337,9 @@ impl TaskPolicy for ResidualPolicy<'_> {
                     &mut sc.node,
                     &mut sc.batch,
                 );
+                if self.dist.is_some() {
+                    sc.batch.retain(|&(k, _)| self.owned(k));
+                }
                 ctx.counters.refreshes += sc.batch.len() as u64;
                 if self.counts.is_some() {
                     for item in sc.batch.iter_mut() {
@@ -280,6 +350,9 @@ impl TaskPolicy for ResidualPolicy<'_> {
             } else {
                 // Edge-wise fan-out: O(deg) full gathers = O(deg²) reads.
                 for k in self.la.affected_edges(self.mrf, e) {
+                    if !self.owned(k) {
+                        continue;
+                    }
                     let r = self.la.refresh(self.mrf, self.msgs, k, &mut sc.gather);
                     ctx.counters.refreshes += 1;
                     ctx.requeue(k, self.priority(r, k));
@@ -290,9 +363,21 @@ impl TaskPolicy for ResidualPolicy<'_> {
     }
 
     fn verify_sweep(&self, ctx: &mut ExecCtx<'_>) -> bool {
-        // Full refresh of every edge repairs any residual lost to benign
-        // write races. One refresh_node per node covers every directed
-        // edge exactly once (each edge has one source node).
+        // Distributed ranks idle-wait for the termination token under
+        // quiescence, re-entering this sweep on every protocol attempt.
+        // Between attempts only a boundary arrival (which bumps the
+        // activity epoch) can change any local residual, so a clean sweep
+        // stays valid while the epoch is unchanged. The epoch is read
+        // *before* sweeping: an arrival mid-sweep invalidates the cache.
+        let epoch = self.dist.map(|d| d.activity_epoch());
+        if let Some(ep) = epoch {
+            if self.clean_epoch.load(Ordering::Acquire) == ep {
+                return true;
+            }
+        }
+        // Full refresh of every owned edge repairs any residual lost to
+        // benign write races. One refresh_node per node covers every
+        // directed edge exactly once (each edge has one source node).
         let mut found = false;
         if self.fused {
             let mut sc = NodeScratch::new();
@@ -301,6 +386,9 @@ impl TaskPolicy for ResidualPolicy<'_> {
                 batch.clear();
                 self.la.refresh_node(self.mrf, self.msgs, j, None, &mut sc, &mut batch);
                 for &(e, r) in &batch {
+                    if !self.owned(e) {
+                        continue;
+                    }
                     if ctx.requeue(e, self.priority(r, e)) {
                         found = true;
                     }
@@ -309,13 +397,69 @@ impl TaskPolicy for ResidualPolicy<'_> {
         } else {
             let mut gather = MsgScratch::new();
             for e in 0..self.mrf.num_messages() as u32 {
+                if !self.owned(e) {
+                    continue;
+                }
                 let r = self.la.refresh(self.mrf, self.msgs, e, &mut gather);
                 if ctx.requeue(e, self.priority(r, e)) {
                     found = true;
                 }
             }
         }
+        if !found {
+            if let Some(ep) = epoch {
+                self.clean_epoch.store(ep, Ordering::Release);
+            }
+        }
         !found
+    }
+
+    fn drain_ingress(&self, ctx: &mut ExecCtx<'_>, sc: &mut RefreshScratch) -> u64 {
+        let Some(d) = self.dist else { return 0 };
+        sc.inbox.clear();
+        d.take_inbox(&mut sc.inbox);
+        if sc.inbox.is_empty() {
+            return 0;
+        }
+        // A mirror cell changed: re-price the owned out-edges it feeds
+        // (the remote update's fan-out crossed the rank boundary) and
+        // requeue them shard-affine. The values themselves were already
+        // applied by the reader thread.
+        for idx in 0..sc.inbox.len() {
+            let e = sc.inbox[idx];
+            if self.fused {
+                let j = self.mrf.graph.edge_dst[e as usize];
+                sc.batch.clear();
+                self.la.refresh_node(
+                    self.mrf,
+                    self.msgs,
+                    j,
+                    Some(self.mrf.graph.reverse(e)),
+                    &mut sc.node,
+                    &mut sc.batch,
+                );
+                sc.batch.retain(|&(k, _)| self.owned(k));
+                ctx.counters.refreshes += sc.batch.len() as u64;
+                ctx.requeue_batch(&sc.batch);
+            } else {
+                for k in self.la.affected_edges(self.mrf, e) {
+                    if !self.owned(k) {
+                        continue;
+                    }
+                    let r = self.la.refresh(self.mrf, self.msgs, k, &mut sc.gather);
+                    ctx.counters.refreshes += 1;
+                    ctx.requeue(k, self.priority(r, k));
+                }
+            }
+        }
+        sc.inbox.len() as u64
+    }
+
+    fn try_finish(&self) -> bool {
+        match self.dist {
+            None => true,
+            Some(d) => d.try_finish(),
+        }
     }
 
     fn arena_bytes(&self) -> (u64, u64) {
@@ -326,8 +470,11 @@ impl TaskPolicy for ResidualPolicy<'_> {
 
     fn final_priority(&self) -> f64 {
         // Max *priority*, not raw residual: under weight decay a converged
-        // run can retain residuals above ε whose decayed priority is below.
+        // run can retain residuals above ε whose decayed priority is
+        // below. Distributed ranks report owned tasks only — a mirror's
+        // residual prices a task some other rank converged.
         (0..self.mrf.num_messages() as u32)
+            .filter(|&e| self.owned(e))
             .map(|e| self.priority(self.la.residual(e), e))
             .fold(0.0, f64::max)
     }

@@ -48,6 +48,29 @@ pub trait TaskPolicy: Sync {
     /// requeued), which ends the run.
     fn verify_sweep(&self, ctx: &mut ExecCtx<'_>) -> bool;
 
+    /// Apply work that arrived from outside the pool (boundary messages
+    /// from peer ranks in distributed runs) and requeue whatever it
+    /// activated. Called once per worker loop iteration, before the pop
+    /// phase, with the worker counted as active (`Termination::enter`
+    /// already holds), so entries inserted here are fully covered by the
+    /// quiescence accounting. Returns budget work units consumed, exactly
+    /// like [`TaskPolicy::process`]. Default: no external work, 0.
+    fn drain_ingress(&self, ctx: &mut ExecCtx<'_>, scratch: &mut Self::Scratch) -> u64 {
+        let _ = (ctx, scratch);
+        0
+    }
+
+    /// Final gate after a clean [`TaskPolicy::verify_sweep`]: may the pool
+    /// actually end the run? Local policies have no one else to wait for
+    /// (default `true`); a distributed policy uses this hook to run its
+    /// rank-level termination protocol — reporting passivity, circulating
+    /// the token — and only returns `true` once *global* termination is
+    /// established. Returning `false` keeps the workers in their idle loop
+    /// (new work may still arrive via [`TaskPolicy::drain_ingress`]).
+    fn try_finish(&self) -> bool {
+        true
+    }
+
     /// Final convergence verdict. The default equates convergence with
     /// "the budget did not expire"; policies with their own completion
     /// criterion (the optimal tree schedule) override it.

@@ -300,6 +300,25 @@ impl WorkerPool {
                     // as with single pops.
                     claimed.clear();
                     term.enter();
+                    // External work first: boundary messages from peer
+                    // ranks (distributed runs) are applied and requeued
+                    // while this worker counts as active, so the entries
+                    // they insert are covered by the quiescence accounting
+                    // before the worker can look idle. No-op for local
+                    // policies.
+                    {
+                        let mut ctx = ExecCtx::new(
+                            sched,
+                            &ts,
+                            &term,
+                            &mut rng,
+                            &mut c,
+                            tuning.insert_threshold,
+                            partition,
+                            &mut entry_buf,
+                        );
+                        since_flush += policy.drain_ingress(&mut ctx, &mut scratch);
+                    }
                     while claimed.len() < tuning.batch {
                         popped.clear();
                         let want = tuning.batch - claimed.len();
@@ -323,7 +342,12 @@ impl WorkerPool {
 
                     if claimed.is_empty() {
                         term.exit();
-                        if term.quiescent() {
+                        // `quiescent()` alone is counter-based; the
+                        // explicit sweep re-checks every sub-queue under
+                        // its lock so a momentarily-unlucky pop sample can
+                        // never let the (possibly distributed) termination
+                        // decision race a fully inserted entry.
+                        if term.quiescent() && sched.is_definitely_empty() {
                             term.try_verify(|| {
                                 let mut ctx = ExecCtx::new(
                                     sched,
@@ -335,7 +359,9 @@ impl WorkerPool {
                                     partition,
                                     &mut entry_buf,
                                 );
-                                policy.verify_sweep(&mut ctx)
+                                // Short-circuit: the rank-level termination
+                                // gate only runs on a clean local sweep.
+                                policy.verify_sweep(&mut ctx) && policy.try_finish()
                             });
                         } else {
                             idle_spins += 1;

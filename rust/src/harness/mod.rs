@@ -85,6 +85,10 @@ pub struct Harness {
     /// Run checksum + semantic validation on mapped loads
     /// (`--verify-load`).
     pub verify_load: bool,
+    /// Damping factor applied to every cell (`--damping`, the message
+    /// update blend `m' = m^{1−F}·m_old^F`); 0.0 keeps the historical
+    /// undamped trajectories bit-identical.
+    pub damping: f64,
     /// Traces recorded by [`Harness::run_cell`] since the last
     /// [`Harness::drain_traces`], keyed by cell id.
     pub trace_log: RefCell<Vec<(String, Trace)>>,
@@ -109,6 +113,7 @@ impl Default for Harness {
             load_mode: LoadMode::Auto,
             arena: ArenaMode::Mem,
             verify_load: false,
+            damping: 0.0,
             trace_log: RefCell::new(Vec::new()),
         }
     }
@@ -151,6 +156,7 @@ impl Harness {
         cfg.kernel = self.kernel;
         cfg.precision = self.precision;
         cfg.arena = self.arena.clone();
+        cfg.damping = self.damping;
         cfg
     }
 

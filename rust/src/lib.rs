@@ -31,6 +31,7 @@ pub mod engines;
 pub mod exec;
 pub mod harness;
 pub mod model;
+pub mod net;
 pub mod run;
 pub mod runtime;
 pub mod sched;

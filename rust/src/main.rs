@@ -17,7 +17,7 @@ use anyhow::{anyhow, bail, Result};
 use relaxed_bp::cli::Args;
 use relaxed_bp::configio::{
     parse_arena_mode, parse_kernel, parse_load_mode, parse_on_off, parse_precision,
-    AlgorithmSpec, ModelSpec, PartitionSpec, RunConfig,
+    valid_damping, AlgorithmSpec, ModelSpec, PartitionSpec, RunConfig,
 };
 use relaxed_bp::harness::Harness;
 use relaxed_bp::model::{builders, io as model_io, EvidenceDelta};
@@ -118,6 +118,12 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     if args.has_switch("verify-load") {
         cfg.verify_load = true;
+    }
+    if let Some(d) = args.opt_parse::<f64>("damping")? {
+        cfg.damping = valid_damping(d)?;
+    }
+    if let Some(spec) = args.opt("distributed") {
+        return relaxed_bp::net::cmd_run_distributed(&cfg, spec, args.opt("out"));
     }
 
     // Model cache legs: --load-model replaces the in-process build with a
@@ -227,6 +233,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         h.arena = parse_arena_mode(a)?;
     }
     h.verify_load = args.has_switch("verify-load");
+    if let Some(d) = args.opt_parse::<f64>("damping")? {
+        h.damping = valid_damping(d)?;
+    }
 
     match which {
         "table1" | "table2" | "table5" | "table6" | "moderate" => {
@@ -327,6 +336,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
         opts.arena = parse_arena_mode(a)?;
     }
     opts.verify_load = args.has_switch("verify-load");
+    if let Some(d) = args.opt_parse::<f64>("damping")? {
+        opts.damping = valid_damping(d)?;
+    }
     opts.check = args.has_switch("check");
 
     let outcomes = telemetry::run_bench(&opts)?;
@@ -411,13 +423,14 @@ USAGE:
                  [--config cfg.json] [--out report.json] [--marginals]
                  [--delta-fraction F] [--save-model FILE] [--load-model FILE]
                  [--load-mode read|map|auto] [--arena mem|mmap[:dir]]
-                 [--verify-load]
+                 [--verify-load] [--damping F]
+                 [--distributed spawn:N | coord:N:0 | worker:N:R:addr]
   relaxed-bp experiment <id> [--scale F] [--threads 1,2,4,8]
                  [--max-threads N] [--out-dir DIR] [--seed S] [--use-pjrt]
                  [--partition MODE] [--fused on|off] [--kernel scalar|simd]
                  [--precision f64|f32] [--save-model DIR] [--load-model DIR]
                  [--load-mode read|map|auto] [--arena mem|mmap[:dir]]
-                 [--verify-load]
+                 [--verify-load] [--damping F]
       ids: table1 table3 table4 table7 fig2 fig4 fig5 fig6 fig7 lemma2
            locality fused simd precision delta all
   relaxed-bp bench [--quick] [--families tree,ising,potts,potts32,ldpc,powerlaw]
@@ -484,6 +497,25 @@ PRECISION (the storage axis): f64 (default) = 8 messages per cache line,
         at half the arena footprint, computed in f64 registers with one
         rounding point per message store. bench records all four axes per
         baseline (base cells run f32; /f64 cells are the frozen arm).
+
+DAMPING (the update-blend axis): --damping F (default 0.0) blends every
+        stored message geometrically with its previous value,
+        m' = m^(1-F) * m_old^F, renormalized. F = 0.0 is bit-identical to
+        the undamped path; positive F trades per-update step size for
+        stability on loopy graphs and smooths the distributed boundary
+        exchange. F must lie in [0, 1).
+
+DISTRIBUTED (the multi-process axis): run --distributed spawn:N solves the
+        configured model across N local rank processes (rank 0 in this
+        process, workers forked from the same binary), each owning a
+        contiguous range of shards and exchanging boundary messages in
+        batched frames over loopback TCP. Roles for manual launch:
+        coord:N:0 listens and prints the chosen port; worker:N:R:addr
+        connects rank R to the coordinator. Termination is a Safra-style
+        token ring (no timeouts); the merged report adds
+        boundary_msgs_sent/recv, boundary_bytes, exchange_batches, and
+        net_wait_secs. Requires --partition with at least N shards (shards
+        default to the thread count times N when unset).
 
 DELTA (the warm-start axis): run --delta-fraction F converges the model,
         perturbs F of the node priors, then re-converges from the resident

@@ -21,7 +21,7 @@ pub mod storage;
 pub use delta::EvidenceDelta;
 pub use factors::{FactorPool, FactorRef, NodeFactors};
 pub use graph::{Csr, GraphBuilder};
-pub use partition::Partition;
+pub use partition::{BoundaryIndex, Partition, RankMap};
 pub use storage::ModelStorage;
 
 /// Largest variable domain supported by the stack-buffer update kernels

@@ -161,6 +161,138 @@ impl Partition {
     }
 }
 
+/// Rank-level ownership of a sharded task universe for distributed runs.
+///
+/// Each of `R` ranks owns the contiguous shard range `[r·k/R, (r+1)·k/R)`
+/// of the run's [`Partition`] — and thereby every task in those shards.
+/// Built deterministically from `(partition, ranks)` on every rank, so all
+/// processes agree on ownership without any exchange.
+#[derive(Debug, Clone)]
+pub struct RankMap {
+    /// Owning rank per task (derived from the partition's task→shard map).
+    task_rank: Vec<u32>,
+    /// Rank `r` owns shards `shard_bounds[r]..shard_bounds[r+1]`.
+    shard_bounds: Vec<u32>,
+}
+
+impl RankMap {
+    /// Assign `partition`'s shards to `ranks` processes in contiguous
+    /// blocks. Requires `1 ≤ ranks ≤ partition.num_shards()` so every rank
+    /// owns at least one shard (the distributed launcher validates this
+    /// with a proper error before construction).
+    pub fn contiguous(partition: &Partition, ranks: usize) -> RankMap {
+        let k = partition.num_shards();
+        assert!(ranks >= 1 && ranks <= k, "need 1 ≤ ranks ≤ shards, got {ranks} over {k}");
+        let mut shard_bounds = Vec::with_capacity(ranks + 1);
+        for r in 0..=ranks {
+            shard_bounds.push((r * k / ranks) as u32);
+        }
+        let mut shard_rank = vec![0u32; k];
+        for r in 0..ranks {
+            for s in shard_bounds[r] as usize..shard_bounds[r + 1] as usize {
+                shard_rank[s] = r as u32;
+            }
+        }
+        let task_rank = (0..partition.num_tasks() as u32)
+            .map(|t| shard_rank[partition.shard_of(t) as usize])
+            .collect();
+        RankMap { task_rank, shard_bounds }
+    }
+
+    /// Number of ranks.
+    pub fn ranks(&self) -> usize {
+        self.shard_bounds.len() - 1
+    }
+
+    /// Number of tasks mapped.
+    pub fn num_tasks(&self) -> usize {
+        self.task_rank.len()
+    }
+
+    /// Owning rank of `task`.
+    #[inline]
+    pub fn rank_of(&self, task: u32) -> u32 {
+        self.task_rank[task as usize]
+    }
+
+    /// True when `rank` owns `task`.
+    #[inline]
+    pub fn owns(&self, rank: u32, task: u32) -> bool {
+        self.task_rank[task as usize] == rank
+    }
+
+    /// The contiguous shard range owned by `rank`.
+    pub fn shards_of(&self, rank: u32) -> std::ops::Range<u32> {
+        self.shard_bounds[rank as usize]..self.shard_bounds[rank as usize + 1]
+    }
+
+    /// Number of tasks owned by `rank` (O(n); startup accounting only).
+    pub fn num_owned(&self, rank: u32) -> usize {
+        self.task_rank.iter().filter(|&&r| r == rank).count()
+    }
+}
+
+/// Per-edge consumer index for distributed runs: which peer ranks need a
+/// directed edge's message value.
+///
+/// The update of message `e = (u→v)` feeds the gathers (and hence the
+/// residual prices) of `v`'s out-going message tasks. A rank that owns any
+/// out-edge of `v` therefore consumes `e`'s value; every such rank other
+/// than `e`'s owner makes `e` a **boundary edge** whose committed values
+/// must be shipped over the exchange. Interior edges (every consumer
+/// colocated with the producer) have an empty peer list and never touch
+/// the network.
+#[derive(Debug, Clone)]
+pub struct BoundaryIndex {
+    /// Edge `e`'s peer ranks are `peers[offsets[e]..offsets[e+1]]`
+    /// (sorted, deduplicated).
+    offsets: Vec<u32>,
+    peers: Vec<u32>,
+}
+
+impl BoundaryIndex {
+    /// Build the consumer index of `graph`'s directed-edge universe under
+    /// `map`. Cost is O(Σ_v deg(v)) for the per-node rank sets plus
+    /// O(edges × ranks-per-node) for the flattening — linear in practice.
+    pub fn build(graph: &Csr, map: &RankMap) -> BoundaryIndex {
+        let me = graph.num_directed_edges();
+        assert_eq!(map.num_tasks(), me, "rank map must cover the edge universe");
+        // Per-node consumer set: the ranks owning at least one out-edge of
+        // the node, sorted + deduped (node-degree work, done once).
+        let n = graph.num_nodes();
+        let mut node_ranks: Vec<Vec<u32>> = Vec::with_capacity(n);
+        let mut buf: Vec<u32> = Vec::new();
+        for v in 0..n {
+            buf.clear();
+            buf.extend(graph.out_edges(v).iter().map(|&e| map.rank_of(e)));
+            buf.sort_unstable();
+            buf.dedup();
+            node_ranks.push(buf.clone());
+        }
+        let mut offsets = Vec::with_capacity(me + 1);
+        let mut peers = Vec::new();
+        offsets.push(0u32);
+        for e in 0..me as u32 {
+            let owner = map.rank_of(e);
+            let dst = graph.edge_dst[e as usize] as usize;
+            peers.extend(node_ranks[dst].iter().copied().filter(|&r| r != owner));
+            offsets.push(peers.len() as u32);
+        }
+        BoundaryIndex { offsets, peers }
+    }
+
+    /// Peer ranks consuming edge `e`'s value (empty for interior edges).
+    #[inline]
+    pub fn peers_of(&self, e: u32) -> &[u32] {
+        &self.peers[self.offsets[e as usize] as usize..self.offsets[e as usize + 1] as usize]
+    }
+
+    /// Number of boundary edges (edges with at least one remote consumer).
+    pub fn num_boundary(&self) -> usize {
+        self.offsets.windows(2).filter(|w| w[1] > w[0]).count()
+    }
+}
+
 /// BFS visit rank of every node, multi-source from node 0 with restarts on
 /// unvisited components — total over all nodes, deterministic.
 fn bfs_rank(graph: &Csr) -> Vec<u32> {
@@ -313,5 +445,71 @@ mod tests {
         let p = Partition::contiguous(0, 4);
         assert_eq!(p.num_tasks(), 0);
         p.validate();
+    }
+
+    #[test]
+    fn rank_map_contiguous_covers_all_shards() {
+        let p = Partition::contiguous(100, 8);
+        let m = RankMap::contiguous(&p, 3);
+        assert_eq!(m.ranks(), 3);
+        assert_eq!(m.num_tasks(), 100);
+        // Shard ranges tile 0..8 and every task's rank matches its
+        // shard's range.
+        let mut covered = 0u32;
+        for r in 0..3u32 {
+            let range = m.shards_of(r);
+            assert_eq!(range.start, covered);
+            covered = range.end;
+        }
+        assert_eq!(covered, 8);
+        for t in 0..100u32 {
+            let r = m.rank_of(t);
+            assert!(m.shards_of(r).contains(&p.shard_of(t)));
+            assert!(m.owns(r, t));
+        }
+        let total: usize = (0..3).map(|r| m.num_owned(r)).sum();
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "1 ≤ ranks ≤ shards")]
+    fn rank_map_rejects_more_ranks_than_shards() {
+        let p = Partition::contiguous(10, 2);
+        RankMap::contiguous(&p, 3);
+    }
+
+    #[test]
+    fn boundary_index_on_path() {
+        // Path 0-1-2-3: 6 directed edges, contiguous 2-shard split at the
+        // edge-id midpoint, one rank per shard. Edges whose destination
+        // node has an out-edge owned by the other rank are boundary.
+        let g = path(4);
+        let p = Partition::contiguous(g.num_directed_edges(), 2);
+        let m = RankMap::contiguous(&p, 2);
+        let b = BoundaryIndex::build(&g, &m);
+        assert!(b.num_boundary() > 0, "the cut must produce boundary edges");
+        for e in 0..g.num_directed_edges() as u32 {
+            let owner = m.rank_of(e);
+            let dst = g.edge_dst[e as usize] as usize;
+            let expect: std::collections::BTreeSet<u32> = g
+                .out_edges(dst)
+                .iter()
+                .map(|&o| m.rank_of(o))
+                .filter(|&r| r != owner)
+                .collect();
+            let got: std::collections::BTreeSet<u32> =
+                b.peers_of(e).iter().copied().collect();
+            assert_eq!(got, expect, "edge {e}");
+            assert!(!b.peers_of(e).contains(&owner), "never ships to itself");
+        }
+    }
+
+    #[test]
+    fn boundary_index_single_rank_is_empty() {
+        let g = path(6);
+        let p = Partition::contiguous(g.num_directed_edges(), 4);
+        let m = RankMap::contiguous(&p, 1);
+        let b = BoundaryIndex::build(&g, &m);
+        assert_eq!(b.num_boundary(), 0, "one rank owns everything");
     }
 }

@@ -1,0 +1,1270 @@
+//! Multi-process distributed execution over TCP.
+//!
+//! `run --distributed <role>:<nprocs>:<rank>[:addr]` splits one relaxed
+//! residual-BP run across N OS processes ("ranks"). Every rank builds the
+//! same model and partition deterministically from the shared config, owns
+//! a contiguous range of partition shards ([`RankMap`]), and runs the
+//! ordinary relaxed [`WorkerPool`] over its *owned* message tasks only.
+//! Non-owned message cells are **mirrors**: local read-only copies kept
+//! fresh by the boundary exchange.
+//!
+//! ## Topology
+//!
+//! Star, with rank 0 as the hub: workers connect to the coordinator and
+//! every frame carries a destination rank; rank 0's reader threads relay
+//! frames addressed to other ranks verbatim. The boundary counters are
+//! end-to-end (counted at origin and final destination; relay hops are
+//! not re-counted), so `boundary_msgs_sent == boundary_msgs_recv` holds
+//! in a merged report regardless of routing. A full mesh is a possible
+//! future optimization; the star keeps connection setup O(N) and the
+//! termination ring trivially routable.
+//!
+//! ## Boundary exchange
+//!
+//! When a rank commits an owned edge whose value some other rank reads
+//! (the [`BoundaryIndex`]), the freshly stored value is appended to a
+//! per-peer egress buffer and shipped in coalesced `BATCH` frames (flushed
+//! at a fixed entry budget, and always before the rank reports itself
+//! passive). The receiving rank's reader thread applies entries straight
+//! into the mirror cells via [`Messages::write_msg_residual_raw`] — raw
+//! because the value was already damped by its origin — and parks the
+//! arrived edge ids in an inbox. Workers drain the inbox at the top of
+//! their loop ([`drain_ingress`](crate::exec::TaskPolicy::drain_ingress)),
+//! re-pricing the affected owned out-edges and requeuing them
+//! shard-affine in one batch.
+//!
+//! ## Termination: Safra's algorithm
+//!
+//! Local quiescence (empty queues + clean verify sweep) is necessary but
+//! not sufficient: a boundary batch may be in flight. We run Safra's
+//! token-ring termination detection on top of the local protocol — no
+//! timeouts anywhere:
+//!
+//! - every rank keeps a message counter `c_i = sent − received` and a
+//!   color (blackened by every boundary receipt);
+//! - rank 0, when locally passive, circulates a token `(q, color)` around
+//!   the ring 0 → 1 → … → N−1 → 0 (routed through the hub). A passive
+//!   rank forwards the token with `q += c_i`, blackens it if the rank
+//!   itself is black, then whitens itself. Ranks only touch the token
+//!   from the verifier's `try_finish` hook, which runs strictly under
+//!   local quiescence with flushed egress and a drained inbox;
+//! - when the token returns white to a white rank 0 with
+//!   `q + c_0 == 0`, no rank is active and no message is in flight:
+//!   rank 0 broadcasts `DONE`. Any receipt after a rank whitened
+//!   re-blackens it and forces another round (re-arming on new boundary
+//!   arrivals).
+//!
+//! After `DONE`, every worker ships its owned edges (`FINAL`) and its run
+//! stats (`STATS`) to rank 0, which applies them into its own arena —
+//! yielding the complete fixed point for marginal extraction — and merges
+//! all per-rank counters into the single printed [`RunReport`].
+//!
+//! ## Wire format
+//!
+//! Length-prefixed frames over plain [`std::net`] TCP (no dependencies):
+//! `[u32 le payload_len][payload]`, payload = `[u8 kind][u32 src][u32
+//! dst][body…]`. Batch entries are `[u32 edge][u8 len][len × f64 le]`.
+
+use crate::bp::{Kernel, Messages, MsgSource};
+use crate::configio::{AlgorithmSpec, PartitionSpec, RunConfig, DEFAULT_SPILL};
+use crate::coordinator::Counters;
+use crate::engines::residual_family::ResidualPolicy;
+use crate::engines::EngineStats;
+use crate::exec::WorkerPool;
+use crate::model::{builders, partition, BoundaryIndex, Mrf, RankMap, MAX_DOMAIN};
+use crate::run::{PrepStats, RunReport};
+use crate::sched::SchedChoice;
+use crate::util::Timer;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Hard ceiling on a single frame (corrupt length-prefix guard).
+const MAX_FRAME: usize = 1 << 26;
+/// Entries per peer buffer before a `BATCH` frame is flushed.
+const FLUSH_ENTRIES: usize = 256;
+/// Owned-edge entries per `FINAL` gather frame.
+const FINAL_CHUNK: usize = 4096;
+/// Verifier idle wait between termination-protocol attempts.
+const IDLE_WAIT_US: u64 = 50;
+
+const KIND_HELLO: u8 = 1;
+const KIND_BATCH: u8 = 2;
+const KIND_TOKEN: u8 = 3;
+const KIND_DONE: u8 = 4;
+const KIND_FINAL: u8 = 5;
+const KIND_STATS: u8 = 6;
+
+// ---------------------------------------------------------------------------
+// Frame codec
+// ---------------------------------------------------------------------------
+
+fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> std::io::Result<()> {
+    stream.write_all(&(payload.len() as u32).to_le_bytes())?;
+    stream.write_all(payload)
+}
+
+fn read_frame(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Result<()> {
+    let mut len = [0u8; 4];
+    stream.read_exact(&mut len).context("read frame header")?;
+    let len = u32::from_le_bytes(len) as usize;
+    if len > MAX_FRAME {
+        bail!("frame length {len} exceeds limit (corrupt stream?)");
+    }
+    buf.resize(len, 0);
+    stream.read_exact(buf).context("read frame payload")?;
+    Ok(())
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked little-endian payload reader.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cur { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated frame: wanted {n} bytes at offset {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+/// `[kind][src][dst]` control payload with no body.
+fn control_payload(kind: u8, src: u32, dst: u32) -> Vec<u8> {
+    let mut p = vec![kind];
+    put_u32(&mut p, src);
+    put_u32(&mut p, dst);
+    p
+}
+
+// ---------------------------------------------------------------------------
+// Role spec parsing
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Role {
+    Spawn,
+    Coord,
+    Worker,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct DistSpec {
+    role: Role,
+    nprocs: u32,
+    rank: u32,
+    addr: Option<String>,
+}
+
+impl DistSpec {
+    /// Parse `spawn:N`, `coord:N:0[:addr]`, or `worker:N:R:addr` (the
+    /// address may itself contain a `:port` suffix).
+    fn parse(spec: &str) -> Result<DistSpec> {
+        let parts: Vec<&str> = spec.splitn(4, ':').collect();
+        let nprocs = |s: &str| -> Result<u32> {
+            let n: u32 = s.parse().with_context(|| format!("bad rank count {s:?}"))?;
+            if n == 0 {
+                bail!("--distributed needs at least one rank");
+            }
+            Ok(n)
+        };
+        match parts.as_slice() {
+            ["spawn", n] => Ok(DistSpec { role: Role::Spawn, nprocs: nprocs(n)?, rank: 0, addr: None }),
+            ["coord", n, r] | ["coord", n, r, _] => {
+                if *r != "0" {
+                    bail!("the coordinator is always rank 0, got {r:?}");
+                }
+                Ok(DistSpec {
+                    role: Role::Coord,
+                    nprocs: nprocs(n)?,
+                    rank: 0,
+                    addr: parts.get(3).map(|s| s.to_string()),
+                })
+            }
+            ["worker", n, r, addr] => {
+                let nprocs = nprocs(n)?;
+                let rank: u32 = r.parse().with_context(|| format!("bad rank {r:?}"))?;
+                if rank == 0 || rank >= nprocs {
+                    bail!("worker rank must be in 1..{nprocs}, got {rank}");
+                }
+                Ok(DistSpec { role: Role::Worker, nprocs, rank, addr: Some(addr.to_string()) })
+            }
+            _ => bail!(
+                "bad --distributed spec {spec:?}: expected spawn:N, coord:N:0[:addr], or worker:N:R:addr"
+            ),
+        }
+    }
+}
+
+/// Resolve the partition the distributed run shards ownership over: the
+/// locality axis must be on with at least one shard per rank. `Off` and
+/// auto (`shards: 0`) resolve to `threads × nprocs` shards; an explicit
+/// shard count below the rank count is an error, not a silent re-shard.
+fn normalize_partition(cfg: &mut RunConfig, nprocs: u32) -> Result<()> {
+    let auto = cfg.threads.max(1) * nprocs as usize;
+    match cfg.partition {
+        PartitionSpec::Off => {
+            cfg.partition = PartitionSpec::Affine { shards: auto, spill: DEFAULT_SPILL, bfs: false };
+        }
+        PartitionSpec::Affine { shards: 0, spill, bfs } => {
+            cfg.partition = PartitionSpec::Affine { shards: auto, spill, bfs };
+        }
+        PartitionSpec::Affine { shards, .. } => {
+            if shards < nprocs as usize {
+                bail!(
+                    "--distributed with {nprocs} ranks needs a partition with at least \
+                     {nprocs} shards, got {shards}"
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Runtime
+// ---------------------------------------------------------------------------
+
+/// Engine-side interface of the distributed runtime. [`ResidualPolicy`]
+/// drives everything rank-related through this trait so the policy's
+/// single-process paths stay byte-identical when it is absent.
+pub(crate) trait DistDriver: Sync {
+    /// True when this rank owns message task `e`. Non-owned tasks are
+    /// never seeded, requeued, or committed locally.
+    fn owns(&self, e: u32) -> bool;
+    /// Ship the freshly committed value of owned edge `e` to every remote
+    /// consumer (no-op for interior edges). Failures are latched, not
+    /// returned: the termination hook surfaces them.
+    fn publish(&self, mrf: &Mrf, msgs: &Messages, e: u32);
+    /// Move the arrived-edge inbox into `into` (appended; `into` is not
+    /// cleared).
+    fn take_inbox(&self, into: &mut Vec<u32>);
+    /// Monotone counter bumped on every ingress application; lets the
+    /// verifier cache a clean sweep while idle-waiting for the token.
+    fn activity_epoch(&self) -> u64;
+    /// Run one step of the rank-level termination protocol. Called only
+    /// under local quiescence with a clean verify sweep; returns true
+    /// once the run is globally done (or has failed — the caller checks).
+    fn try_finish(&self) -> bool;
+}
+
+/// Safra token: accumulated counter sum + color.
+#[derive(Debug, Clone, Copy)]
+struct Token {
+    q: i64,
+    black: bool,
+}
+
+/// Per-destination egress buffer of serialized batch entries.
+struct EgressBuf {
+    count: u32,
+    body: Vec<u8>,
+}
+
+impl EgressBuf {
+    fn take(&mut self) -> (u32, Vec<u8>) {
+        let c = self.count;
+        self.count = 0;
+        (c, std::mem::take(&mut self.body))
+    }
+}
+
+/// Write side of one TCP link. `ctrl` is an un-mutexed clone used only
+/// for `shutdown`, so a failure can always unblock a writer stuck inside
+/// the `stream` lock.
+struct PeerLink {
+    stream: Mutex<TcpStream>,
+    ctrl: TcpStream,
+}
+
+impl PeerLink {
+    fn new(stream: TcpStream) -> Result<PeerLink> {
+        let ctrl = stream.try_clone().context("clone link for shutdown control")?;
+        Ok(PeerLink { stream: Mutex::new(stream), ctrl })
+    }
+}
+
+/// Per-rank transport + termination state shared between the worker pool
+/// (through [`DistDriver`]) and the reader threads.
+struct DistRuntime {
+    rank: u32,
+    nprocs: u32,
+    kernel: Kernel,
+    map: RankMap,
+    boundary: BoundaryIndex,
+    /// Rank 0: indexed by peer rank (slot 0 empty). Workers: one slot,
+    /// the hub link.
+    links: Vec<Option<PeerLink>>,
+    /// Pending outgoing batch entries, indexed by destination rank.
+    egress: Vec<Mutex<EgressBuf>>,
+    /// Edges whose mirror value changed since the workers last drained.
+    inbox: Mutex<Vec<u32>>,
+    activity: AtomicU64,
+    /// Safra color: blackened by every boundary receipt.
+    black: AtomicBool,
+    /// Safra counter `c_i = sent − received` (batch entries).
+    counter: AtomicI64,
+    /// Token parked by the reader until the verifier is passive.
+    token: Mutex<Option<Token>>,
+    /// Rank 0 only: a token is circulating, don't initiate another.
+    token_at_large: AtomicBool,
+    done: AtomicBool,
+    failure: Mutex<Option<String>>,
+    n_sent: AtomicU64,
+    n_recv: AtomicU64,
+    n_bytes: AtomicU64,
+    n_batches: AtomicU64,
+    n_wait_us: AtomicU64,
+}
+
+impl DistRuntime {
+    fn new(
+        rank: u32,
+        nprocs: u32,
+        kernel: Kernel,
+        map: RankMap,
+        boundary: BoundaryIndex,
+        links: Vec<Option<PeerLink>>,
+    ) -> DistRuntime {
+        DistRuntime {
+            rank,
+            nprocs,
+            kernel,
+            map,
+            boundary,
+            links,
+            egress: (0..nprocs).map(|_| Mutex::new(EgressBuf { count: 0, body: Vec::new() })).collect(),
+            inbox: Mutex::new(Vec::new()),
+            activity: AtomicU64::new(0),
+            black: AtomicBool::new(false),
+            counter: AtomicI64::new(0),
+            token: Mutex::new(None),
+            token_at_large: AtomicBool::new(false),
+            done: AtomicBool::new(false),
+            failure: Mutex::new(None),
+            n_sent: AtomicU64::new(0),
+            n_recv: AtomicU64::new(0),
+            n_bytes: AtomicU64::new(0),
+            n_batches: AtomicU64::new(0),
+            n_wait_us: AtomicU64::new(0),
+        }
+    }
+
+    fn link(&self, dst: u32) -> Result<&PeerLink> {
+        let slot = if self.rank == 0 { dst as usize } else { 0 };
+        self.links
+            .get(slot)
+            .and_then(|o| o.as_ref())
+            .ok_or_else(|| anyhow!("rank {}: no link toward rank {dst}", self.rank))
+    }
+
+    /// Frame `payload` and write it on the link toward `dst`, counting
+    /// the blocked time.
+    fn send_payload(&self, dst: u32, payload: &[u8]) -> Result<()> {
+        let link = self.link(dst)?;
+        let t = Instant::now();
+        let res = {
+            let mut stream = link.stream.lock().unwrap();
+            write_frame(&mut stream, payload)
+        };
+        self.n_wait_us.fetch_add(t.elapsed().as_micros() as u64, Ordering::Relaxed);
+        res.with_context(|| format!("rank {}: send toward rank {dst}", self.rank))
+    }
+
+    /// Latch the first failure, end the local run, and shut every socket
+    /// down so blocked readers/writers (here and on the peers) wake up.
+    fn fail(&self, msg: String) {
+        {
+            let mut slot = self.failure.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(msg);
+            }
+        }
+        self.done.store(true, Ordering::SeqCst);
+        for l in self.links.iter().flatten() {
+            let _ = l.ctrl.shutdown(Shutdown::Both);
+        }
+    }
+
+    fn failed(&self) -> Option<String> {
+        self.failure.lock().unwrap().clone()
+    }
+
+    /// Assemble and send one `BATCH` frame.
+    fn send_batch(&self, dst: u32, count: u32, body: &[u8]) -> Result<()> {
+        let mut payload = Vec::with_capacity(13 + body.len());
+        payload.push(KIND_BATCH);
+        put_u32(&mut payload, self.rank);
+        put_u32(&mut payload, dst);
+        put_u32(&mut payload, count);
+        payload.extend_from_slice(body);
+        self.n_batches.fetch_add(1, Ordering::Relaxed);
+        self.n_bytes.fetch_add(payload.len() as u64, Ordering::Relaxed);
+        self.send_payload(dst, &payload)
+    }
+
+    /// Flush every non-empty egress buffer (always called before this
+    /// rank reports itself passive, so the Safra counter never runs
+    /// ahead of the wire). The egress lock is held across the send:
+    /// batches toward one destination must hit the wire in buffer
+    /// order, or a stale value could overwrite a newer one in the
+    /// peer's mirror cell.
+    fn flush_all(&self) -> Result<()> {
+        for dst in 0..self.nprocs {
+            if dst == self.rank {
+                continue;
+            }
+            let mut eg = self.egress[dst as usize].lock().unwrap();
+            if eg.count > 0 {
+                let (count, body) = eg.take();
+                self.send_batch(dst, count, &body)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply one incoming `BATCH` frame: store each entry into the mirror
+    /// cell (raw — already damped at the origin) and park changed edges
+    /// in the inbox.
+    fn apply_batch(&self, mrf: &Mrf, msgs: &Messages, cur: &mut Cur<'_>) -> Result<()> {
+        // Receipt blackens the rank *before* any counter it could affect
+        // is read by a token forward.
+        self.black.store(true, Ordering::SeqCst);
+        let count = cur.u32()?;
+        let mut vals = [0.0f64; MAX_DOMAIN];
+        let mut arrived = Vec::with_capacity(count as usize);
+        for _ in 0..count {
+            let e = cur.u32()?;
+            if e as usize >= mrf.num_messages() {
+                bail!("corrupt batch: edge {e} out of range");
+            }
+            let len = cur.u8()? as usize;
+            if len != mrf.msg_len(e) {
+                bail!("corrupt batch: edge {e} domain {len} != {}", mrf.msg_len(e));
+            }
+            for v in vals[..len].iter_mut() {
+                *v = cur.f64()?;
+            }
+            let res = msgs.write_msg_residual_raw(mrf, e, &vals[..len], self.kernel);
+            self.n_recv.fetch_add(1, Ordering::Relaxed);
+            self.counter.fetch_sub(1, Ordering::SeqCst);
+            if res > 0.0 {
+                arrived.push(e);
+            }
+        }
+        if !arrived.is_empty() {
+            self.inbox.lock().unwrap().extend_from_slice(&arrived);
+            self.activity.fetch_add(1, Ordering::SeqCst);
+        }
+        Ok(())
+    }
+
+    /// Apply a `FINAL` gather frame (owned-edge values from a worker)
+    /// into rank 0's arena.
+    fn apply_final(&self, mrf: &Mrf, msgs: &Messages, cur: &mut Cur<'_>) -> Result<()> {
+        let count = cur.u32()?;
+        let mut vals = [0.0f64; MAX_DOMAIN];
+        for _ in 0..count {
+            let e = cur.u32()?;
+            if e as usize >= mrf.num_messages() {
+                bail!("corrupt final frame: edge {e} out of range");
+            }
+            let len = cur.u8()? as usize;
+            if len != mrf.msg_len(e) {
+                bail!("corrupt final frame: edge {e} domain {len} != {}", mrf.msg_len(e));
+            }
+            for v in vals[..len].iter_mut() {
+                *v = cur.f64()?;
+            }
+            msgs.write_msg_residual_raw(mrf, e, &vals[..len], self.kernel);
+        }
+        Ok(())
+    }
+
+    fn send_token(&self, dst: u32, q: i64, black: bool) -> Result<()> {
+        let mut p = control_payload(KIND_TOKEN, self.rank, dst);
+        p.extend_from_slice(&q.to_le_bytes());
+        p.push(black as u8);
+        self.send_payload(dst, &p)
+    }
+
+    /// One Safra step, run by the passive verifier: judge or forward a
+    /// held token, or (rank 0) launch the first probe. Any transport
+    /// error bubbles up for the caller to latch via [`DistRuntime::fail`].
+    fn advance_token(&self, held: Option<Token>) -> Result<()> {
+        match held {
+            Some(tok) if self.rank == 0 => {
+                let c0 = self.counter.load(Ordering::SeqCst);
+                let black0 = self.black.load(Ordering::SeqCst);
+                if !tok.black && !black0 && tok.q + c0 == 0 {
+                    // Every rank passive, every sent entry received:
+                    // global fixed point. Release the fleet.
+                    self.done.store(true, Ordering::SeqCst);
+                    for r in 1..self.nprocs {
+                        self.send_payload(r, &control_payload(KIND_DONE, 0, r))?;
+                    }
+                } else {
+                    // Inconclusive round: start a fresh white probe.
+                    self.black.store(false, Ordering::SeqCst);
+                    self.send_token(1, 0, false)?;
+                }
+            }
+            Some(tok) => {
+                let q = tok.q + self.counter.load(Ordering::SeqCst);
+                let black = tok.black || self.black.load(Ordering::SeqCst);
+                self.black.store(false, Ordering::SeqCst);
+                self.send_token((self.rank + 1) % self.nprocs, q, black)?;
+            }
+            None => {
+                if self.rank == 0 && !self.token_at_large.swap(true, Ordering::SeqCst) {
+                    self.black.store(false, Ordering::SeqCst);
+                    self.send_token(1, 0, false)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Fold this rank's transport counters into the run's counter block.
+    fn fold_net(&self, c: &mut Counters) {
+        c.boundary_msgs_sent += self.n_sent.load(Ordering::Relaxed);
+        c.boundary_msgs_recv += self.n_recv.load(Ordering::Relaxed);
+        c.boundary_bytes += self.n_bytes.load(Ordering::Relaxed);
+        c.exchange_batches += self.n_batches.load(Ordering::Relaxed);
+        c.net_wait_us += self.n_wait_us.load(Ordering::Relaxed);
+    }
+}
+
+impl DistDriver for DistRuntime {
+    fn owns(&self, e: u32) -> bool {
+        self.map.owns(self.rank, e)
+    }
+
+    fn publish(&self, mrf: &Mrf, msgs: &Messages, e: u32) {
+        let peers = self.boundary.peers_of(e);
+        if peers.is_empty() {
+            return;
+        }
+        let mut buf = [0.0f64; MAX_DOMAIN];
+        let len = msgs.read_msg(mrf, e, &mut buf);
+        for &p in peers {
+            let mut eg = self.egress[p as usize].lock().unwrap();
+            eg.body.extend_from_slice(&e.to_le_bytes());
+            eg.body.push(len as u8);
+            for v in &buf[..len] {
+                eg.body.extend_from_slice(&v.to_le_bytes());
+            }
+            eg.count += 1;
+            // Count while the entry is still unsent: Safra's counter must
+            // never run behind the wire, or a receipt could be decremented
+            // before its send was incremented and a token round could see
+            // a spuriously balanced sum.
+            self.n_sent.fetch_add(1, Ordering::Relaxed);
+            self.counter.fetch_add(1, Ordering::SeqCst);
+            if eg.count as usize >= FLUSH_ENTRIES {
+                let (count, body) = eg.take();
+                // Send while still holding the egress lock — see
+                // `flush_all` for the per-destination ordering argument.
+                let sent = self.send_batch(p, count, &body);
+                drop(eg);
+                if let Err(err) = sent {
+                    self.fail(format!("{err:#}"));
+                    return;
+                }
+            }
+        }
+    }
+
+    fn take_inbox(&self, into: &mut Vec<u32>) {
+        let mut inbox = self.inbox.lock().unwrap();
+        into.append(&mut inbox);
+    }
+
+    fn activity_epoch(&self) -> u64 {
+        self.activity.load(Ordering::SeqCst)
+    }
+
+    fn try_finish(&self) -> bool {
+        if self.done.load(Ordering::SeqCst) {
+            return true;
+        }
+        if self.nprocs == 1 {
+            // Degenerate single-rank run: local quiescence is global.
+            return true;
+        }
+        // Passivity: everything this rank counted as sent must be on the
+        // wire before the counter can feed a token.
+        if let Err(e) = self.flush_all() {
+            self.fail(format!("{e:#}"));
+            return true;
+        }
+        // An undrained inbox means the worker loop still has seeding to
+        // do; come back after the next drain.
+        if !self.inbox.lock().unwrap().is_empty() {
+            return false;
+        }
+        let held = self.token.lock().unwrap().take();
+        if let Err(e) = self.advance_token(held) {
+            self.fail(format!("{e:#}"));
+            return true;
+        }
+        // Idle briefly so the verifier doesn't spin while the token is
+        // elsewhere in the ring; counted as network wait.
+        std::thread::sleep(std::time::Duration::from_micros(IDLE_WAIT_US));
+        self.n_wait_us.fetch_add(IDLE_WAIT_US, Ordering::Relaxed);
+        self.done.load(Ordering::SeqCst)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stats gather
+// ---------------------------------------------------------------------------
+
+/// One worker rank's run outcome, shipped to rank 0 in a `STATS` frame.
+struct RankResult {
+    counters: Counters,
+    per_thread: Vec<u64>,
+    wall: f64,
+    final_prio: f64,
+    converged: bool,
+}
+
+fn encode_counters(c: &Counters, p: &mut Vec<u8>) {
+    for v in [
+        c.updates,
+        c.useful_updates,
+        c.wasted_pops,
+        c.stale_pops,
+        c.claim_failures,
+        c.pops,
+        c.inserts,
+        c.rounds,
+        c.splashes,
+        c.refreshes,
+        c.insert_batches,
+        c.tasks_touched,
+        c.msg_bytes_logical,
+        c.msg_bytes_padded,
+        c.model_bytes,
+        c.peak_rss_bytes,
+        c.boundary_msgs_sent,
+        c.boundary_msgs_recv,
+        c.boundary_bytes,
+        c.exchange_batches,
+        c.net_wait_us,
+    ] {
+        put_u64(p, v);
+    }
+}
+
+fn decode_counters(cur: &mut Cur<'_>) -> Result<Counters> {
+    let mut c = Counters::default();
+    for f in [
+        &mut c.updates,
+        &mut c.useful_updates,
+        &mut c.wasted_pops,
+        &mut c.stale_pops,
+        &mut c.claim_failures,
+        &mut c.pops,
+        &mut c.inserts,
+        &mut c.rounds,
+        &mut c.splashes,
+        &mut c.refreshes,
+        &mut c.insert_batches,
+        &mut c.tasks_touched,
+        &mut c.msg_bytes_logical,
+        &mut c.msg_bytes_padded,
+        &mut c.model_bytes,
+        &mut c.peak_rss_bytes,
+        &mut c.boundary_msgs_sent,
+        &mut c.boundary_msgs_recv,
+        &mut c.boundary_bytes,
+        &mut c.exchange_batches,
+        &mut c.net_wait_us,
+    ] {
+        *f = cur.u64()?;
+    }
+    Ok(c)
+}
+
+fn encode_stats(src: u32, stats: &EngineStats) -> Vec<u8> {
+    let mut p = control_payload(KIND_STATS, src, 0);
+    encode_counters(&stats.metrics.total, &mut p);
+    put_u32(&mut p, stats.metrics.per_thread_updates.len() as u32);
+    for &u in &stats.metrics.per_thread_updates {
+        put_u64(&mut p, u);
+    }
+    put_f64(&mut p, stats.wall_secs);
+    put_f64(&mut p, stats.final_max_priority);
+    p.push(stats.converged as u8);
+    p
+}
+
+fn decode_stats(cur: &mut Cur<'_>) -> Result<RankResult> {
+    let counters = decode_counters(cur)?;
+    let n = cur.u32()? as usize;
+    if n > 4096 {
+        bail!("corrupt stats frame: {n} threads");
+    }
+    let mut per_thread = Vec::with_capacity(n);
+    for _ in 0..n {
+        per_thread.push(cur.u64()?);
+    }
+    let wall = cur.f64()?;
+    let final_prio = cur.f64()?;
+    let converged = cur.u8()? != 0;
+    Ok(RankResult { counters, per_thread, wall, final_prio, converged })
+}
+
+// ---------------------------------------------------------------------------
+// Reader loop
+// ---------------------------------------------------------------------------
+
+/// Drain one incoming link. On rank 0 this also relays frames addressed
+/// to other ranks and terminates once the peer's `STATS` landed; on a
+/// worker it terminates on `DONE`. An I/O error after `done` is the
+/// normal teardown; before it, it's a failure the caller latches.
+fn reader_loop(
+    rt: &DistRuntime,
+    mrf: &Mrf,
+    msgs: &Messages,
+    stream: &mut TcpStream,
+    results: Option<(&Mutex<Vec<Option<RankResult>>>, u32)>,
+) -> Result<()> {
+    let mut buf = Vec::new();
+    loop {
+        if let Err(e) = read_frame(stream, &mut buf) {
+            if rt.done.load(Ordering::SeqCst) {
+                return Ok(());
+            }
+            return Err(e);
+        }
+        let mut cur = Cur::new(&buf);
+        let kind = cur.u8()?;
+        let _src = cur.u32()?;
+        let dst = cur.u32()?;
+        if dst != rt.rank {
+            // Star relay: forward the payload verbatim. End-to-end
+            // counters are accounted at origin and destination only.
+            rt.send_payload(dst, &buf)?;
+            continue;
+        }
+        match kind {
+            KIND_BATCH => rt.apply_batch(mrf, msgs, &mut cur)?,
+            KIND_TOKEN => {
+                let q = cur.i64()?;
+                let black = cur.u8()? != 0;
+                // Park it; only the passive verifier may forward.
+                *rt.token.lock().unwrap() = Some(Token { q, black });
+            }
+            KIND_DONE => {
+                rt.done.store(true, Ordering::SeqCst);
+                return Ok(());
+            }
+            KIND_FINAL => rt.apply_final(mrf, msgs, &mut cur)?,
+            KIND_STATS => {
+                let r = decode_stats(&mut cur)?;
+                if let Some((slots, peer)) = results {
+                    slots.lock().unwrap()[peer as usize] = Some(r);
+                }
+                return Ok(());
+            }
+            KIND_HELLO => {}
+            k => bail!("unknown frame kind {k}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-rank engine run
+// ---------------------------------------------------------------------------
+
+/// Deterministic per-rank setup shared by every role: model, messages,
+/// partition, rank map, boundary index. All of it is a pure function of
+/// the (normalized) config, so every rank reconstructs identical state.
+fn build_rank_state(
+    cfg: &RunConfig,
+    nprocs: u32,
+) -> Result<(Mrf, Messages, RankMap, BoundaryIndex, PrepStats)> {
+    let mut prep = PrepStats::default();
+    let t = Timer::start();
+    let mrf = builders::build(&cfg.model, cfg.seed);
+    prep.build_secs = t.elapsed_secs();
+    let t = Timer::start();
+    let msgs = crate::run::build_messages(cfg, &mrf)?;
+    prep.init_secs = t.elapsed_secs();
+    let part = partition::for_messages(&mrf, cfg)
+        .ok_or_else(|| anyhow!("distributed runs require the locality axis (partition)"))?;
+    let map = RankMap::contiguous(&part, nprocs as usize);
+    let boundary = BoundaryIndex::build(&mrf.graph, &map);
+    Ok((mrf, msgs, map, boundary, prep))
+}
+
+/// Run the relaxed worker pool on this rank's owned tasks, then fold the
+/// transport counters into the stats and surface any latched failure.
+fn run_rank(cfg: &RunConfig, mrf: &Mrf, msgs: &Messages, rt: &DistRuntime) -> Result<EngineStats> {
+    let policy = ResidualPolicy::new_dist(mrf, msgs, cfg, rt);
+    let mut stats = WorkerPool::from_config(cfg, SchedChoice::Relaxed)
+        .with_partition(partition::for_messages(mrf, cfg))
+        .run(&policy);
+    if let Some(msg) = rt.failed() {
+        bail!("{msg}");
+    }
+    rt.fold_net(&mut stats.metrics.total);
+    Ok(stats)
+}
+
+// ---------------------------------------------------------------------------
+// Roles
+// ---------------------------------------------------------------------------
+
+/// `spawn:N`: fork N−1 worker processes against a pre-bound loopback
+/// port, run rank 0 in-process, reap the children. The listener is bound
+/// *before* the children exist, so there is no connect race to retry
+/// around. Tests (and the bench harness, when re-invoking from inside a
+/// test binary) can override the child executable via `RELAXED_BP_EXE`.
+fn cmd_spawn(cfg: &RunConfig, nprocs: u32) -> Result<RunReport> {
+    let listener = TcpListener::bind("127.0.0.1:0").context("bind spawn listener")?;
+    let port = listener.local_addr()?.port();
+    let tmp = std::env::temp_dir()
+        .join(format!("relaxed-bp-dist-{}-{port}.json", std::process::id()));
+    let tmp_s = tmp.to_string_lossy().into_owned();
+    cfg.save(&tmp_s).context("write spawn config")?;
+    let exe = match std::env::var("RELAXED_BP_EXE") {
+        Ok(p) => std::path::PathBuf::from(p),
+        Err(_) => std::env::current_exe().context("locate own executable")?,
+    };
+    let mut children = Vec::new();
+    let mut res: Result<RunReport> = Err(anyhow!("no worker spawned"));
+    let mut spawn_ok = true;
+    for r in 1..nprocs {
+        match std::process::Command::new(&exe)
+            .arg("run")
+            .arg("--config")
+            .arg(&tmp_s)
+            .arg("--distributed")
+            .arg(format!("worker:{nprocs}:{r}:127.0.0.1:{port}"))
+            .stdout(std::process::Stdio::null())
+            .spawn()
+            .with_context(|| format!("spawn worker rank {r}"))
+        {
+            Ok(child) => children.push(child),
+            Err(e) => {
+                res = Err(e);
+                spawn_ok = false;
+                break;
+            }
+        }
+    }
+    if spawn_ok {
+        res = coordinate(cfg, listener, nprocs);
+    }
+    for mut child in children {
+        if res.is_err() {
+            let _ = child.kill();
+        }
+        match child.wait() {
+            Ok(status) if !status.success() && res.is_ok() => {
+                res = Err(anyhow!("worker process exited with {status}"));
+            }
+            Ok(_) => {}
+            Err(e) if res.is_ok() => res = Err(e.into()),
+            Err(_) => {}
+        }
+    }
+    let _ = std::fs::remove_file(&tmp);
+    res
+}
+
+/// Rank 0: accept the N−1 workers, run the local shard range, detect
+/// global termination, gather `FINAL` + `STATS`, and assemble the single
+/// merged report exactly like a single-process `run` would.
+fn coordinate(cfg: &RunConfig, listener: TcpListener, nprocs: u32) -> Result<RunReport> {
+    let (mrf, msgs, map, boundary, prep) = build_rank_state(cfg, nprocs)?;
+    let mut links: Vec<Option<PeerLink>> = (0..nprocs).map(|_| None).collect();
+    let mut reader_streams = Vec::new();
+    for _ in 1..nprocs {
+        let (mut stream, _) = listener.accept().context("accept worker")?;
+        stream.set_nodelay(true).ok();
+        let mut buf = Vec::new();
+        read_frame(&mut stream, &mut buf).context("read worker hello")?;
+        let mut cur = Cur::new(&buf);
+        if cur.u8()? != KIND_HELLO {
+            bail!("worker sent a non-hello first frame");
+        }
+        let rank = cur.u32()?;
+        if rank == 0 || rank >= nprocs || links[rank as usize].is_some() {
+            bail!("bad or duplicate hello from rank {rank}");
+        }
+        links[rank as usize] = Some(PeerLink::new(stream.try_clone()?)?);
+        reader_streams.push((rank, stream));
+    }
+    let rt = Arc::new(DistRuntime::new(0, nprocs, cfg.kernel, map, boundary, links));
+    let mrf = Arc::new(mrf);
+    let msgs = Arc::new(msgs);
+    let results: Arc<Mutex<Vec<Option<RankResult>>>> =
+        Arc::new(Mutex::new((0..nprocs).map(|_| None).collect()));
+    let mut readers = Vec::new();
+    for (rank, mut stream) in reader_streams {
+        let (rt, mrf, msgs, results) =
+            (Arc::clone(&rt), Arc::clone(&mrf), Arc::clone(&msgs), Arc::clone(&results));
+        readers.push(std::thread::spawn(move || {
+            if let Err(e) = reader_loop(&rt, &mrf, &msgs, &mut stream, Some((&*results, rank))) {
+                rt.fail(format!("rank 0: link to rank {rank} failed: {e:#}"));
+            }
+        }));
+    }
+    let run_res = run_rank(cfg, &mrf, &msgs, &rt);
+    for h in readers {
+        let _ = h.join();
+    }
+    let mut stats = run_res?;
+    if let Some(msg) = rt.failed() {
+        bail!("{msg}");
+    }
+    {
+        let mut slots = results.lock().unwrap();
+        for r in 1..nprocs as usize {
+            let peer = slots[r]
+                .take()
+                .ok_or_else(|| anyhow!("rank {r} never reported its stats"))?;
+            stats.metrics.total.add(&peer.counters);
+            stats.metrics.per_thread_updates.extend(peer.per_thread);
+            stats.wall_secs = stats.wall_secs.max(peer.wall);
+            stats.final_max_priority = stats.final_max_priority.max(peer.final_prio);
+            stats.converged &= peer.converged;
+        }
+    }
+    drop(results);
+    drop(rt);
+    let mrf = Arc::try_unwrap(mrf).map_err(|_| anyhow!("internal: model still shared"))?;
+    let msgs = Arc::try_unwrap(msgs).map_err(|_| anyhow!("internal: messages still shared"))?;
+    Ok(RunReport { stats, mrf, msgs, config: cfg.clone(), prep })
+}
+
+/// A worker rank: connect to the hub, run the owned shard range, and on
+/// global termination ship the owned fixed-point slice + run stats back.
+fn run_worker(cfg: &RunConfig, nprocs: u32, rank: u32, addr: &str) -> Result<()> {
+    let (mrf, msgs, map, boundary, _prep) = build_rank_state(cfg, nprocs)?;
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("rank {rank}: connect to coordinator at {addr}"))?;
+    stream.set_nodelay(true).ok();
+    let mut reader_stream = stream.try_clone()?;
+    let links = vec![Some(PeerLink::new(stream)?)];
+    let rt = Arc::new(DistRuntime::new(rank, nprocs, cfg.kernel, map, boundary, links));
+    rt.send_payload(0, &{
+        let mut p = vec![KIND_HELLO];
+        put_u32(&mut p, rank);
+        put_u32(&mut p, 0);
+        p
+    })?;
+    let mrf = Arc::new(mrf);
+    let msgs = Arc::new(msgs);
+    {
+        // Detached on purpose: after DONE the reader returns; on the
+        // failure path it may still be blocked in a read when the process
+        // exits, and must not keep it alive.
+        let (rt, mrf, msgs) = (Arc::clone(&rt), Arc::clone(&mrf), Arc::clone(&msgs));
+        std::thread::spawn(move || {
+            if let Err(e) = reader_loop(&rt, &mrf, &msgs, &mut reader_stream, None) {
+                rt.fail(format!("rank {}: hub link failed: {e:#}", rt.rank));
+            }
+        });
+    }
+    let stats = run_rank(cfg, &mrf, &msgs, &rt)?;
+    send_results(&rt, &mrf, &msgs, &stats)?;
+    Ok(())
+}
+
+/// Ship this rank's owned edges (`FINAL`, chunked) then its `STATS`
+/// frame — the stats double as the rank's end-of-stream marker.
+fn send_results(rt: &DistRuntime, mrf: &Mrf, msgs: &Messages, stats: &EngineStats) -> Result<()> {
+    let mut vals = [0.0f64; MAX_DOMAIN];
+    let mut body = Vec::new();
+    let mut count = 0u32;
+    for e in 0..mrf.num_messages() as u32 {
+        if !rt.map.owns(rt.rank, e) {
+            continue;
+        }
+        let len = msgs.read_msg(mrf, e, &mut vals);
+        body.extend_from_slice(&e.to_le_bytes());
+        body.push(len as u8);
+        for v in &vals[..len] {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+        count += 1;
+        if count as usize == FINAL_CHUNK {
+            send_final_frame(rt, count, &body)?;
+            body.clear();
+            count = 0;
+        }
+    }
+    if count > 0 {
+        send_final_frame(rt, count, &body)?;
+    }
+    rt.send_payload(0, &encode_stats(rt.rank, stats))
+}
+
+fn send_final_frame(rt: &DistRuntime, count: u32, body: &[u8]) -> Result<()> {
+    let mut payload = control_payload(KIND_FINAL, rt.rank, 0);
+    put_u32(&mut payload, count);
+    payload.extend_from_slice(body);
+    rt.send_payload(0, &payload)
+}
+
+// ---------------------------------------------------------------------------
+// CLI entry
+// ---------------------------------------------------------------------------
+
+/// Programmatic `spawn:N` entry: solve with rank 0 in-process and N−1
+/// forked local worker processes, returning the merged [`RunReport`].
+/// The child executable defaults to the current one and can be overridden
+/// via the `RELAXED_BP_EXE` environment variable (how the test suite and
+/// the bench harness spawn workers from inside a test binary). The
+/// partition is normalized exactly like the CLI path.
+pub fn run_spawn(cfg: &RunConfig, nprocs: u32) -> Result<RunReport> {
+    if !matches!(cfg.algorithm, AlgorithmSpec::RelaxedResidual) {
+        bail!(
+            "--distributed supports only the relaxed_residual algorithm, got {}",
+            cfg.algorithm.name()
+        );
+    }
+    let mut cfg = cfg.clone();
+    normalize_partition(&mut cfg, nprocs)?;
+    cmd_spawn(&cfg, nprocs)
+}
+
+/// Entry point for `run --distributed <spec>`: parse the role, normalize
+/// the partition (ownership needs ≥ 1 shard per rank; unset shards
+/// default to `threads × nprocs`), and dispatch. Only rank 0 (and the
+/// `spawn` launcher hosting it) prints the merged report; workers exit
+/// silently on success.
+pub fn cmd_run_distributed(cfg: &RunConfig, spec: &str, out: Option<&str>) -> Result<()> {
+    let spec = DistSpec::parse(spec)?;
+    if !matches!(cfg.algorithm, AlgorithmSpec::RelaxedResidual) {
+        bail!(
+            "--distributed supports only the relaxed_residual algorithm, got {}",
+            cfg.algorithm.name()
+        );
+    }
+    let mut cfg = cfg.clone();
+    normalize_partition(&mut cfg, spec.nprocs)?;
+    let report = match spec.role {
+        Role::Spawn => cmd_spawn(&cfg, spec.nprocs)?,
+        Role::Coord => {
+            let addr = spec.addr.as_deref().unwrap_or("127.0.0.1:0");
+            let listener =
+                TcpListener::bind(addr).with_context(|| format!("bind coordinator on {addr}"))?;
+            eprintln!("coordinator listening on {}", listener.local_addr()?);
+            coordinate(&cfg, listener, spec.nprocs)?
+        }
+        Role::Worker => {
+            return run_worker(&cfg, spec.nprocs, spec.rank, spec.addr.as_deref().unwrap_or_default());
+        }
+    };
+    let json = report.to_json();
+    println!("{}", json.to_string_pretty());
+    if let Some(path) = out {
+        std::fs::write(path, json.to_string_pretty())?;
+    }
+    if !report.stats.converged {
+        bail!("run did not converge within budget");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::configio::ModelSpec;
+
+    #[test]
+    fn dist_spec_parses_all_roles() {
+        assert_eq!(
+            DistSpec::parse("spawn:4").unwrap(),
+            DistSpec { role: Role::Spawn, nprocs: 4, rank: 0, addr: None }
+        );
+        assert_eq!(
+            DistSpec::parse("coord:2:0").unwrap(),
+            DistSpec { role: Role::Coord, nprocs: 2, rank: 0, addr: None }
+        );
+        assert_eq!(
+            DistSpec::parse("coord:2:0:0.0.0.0:7000").unwrap(),
+            DistSpec { role: Role::Coord, nprocs: 2, rank: 0, addr: Some("0.0.0.0:7000".into()) }
+        );
+        assert_eq!(
+            DistSpec::parse("worker:4:3:127.0.0.1:7000").unwrap(),
+            DistSpec {
+                role: Role::Worker,
+                nprocs: 4,
+                rank: 3,
+                addr: Some("127.0.0.1:7000".into())
+            }
+        );
+    }
+
+    #[test]
+    fn dist_spec_rejects_bad_specs() {
+        assert!(DistSpec::parse("spawn:0").is_err());
+        assert!(DistSpec::parse("coord:2:1").is_err());
+        assert!(DistSpec::parse("worker:2:0:addr").is_err());
+        assert!(DistSpec::parse("worker:2:2:addr").is_err());
+        assert!(DistSpec::parse("worker:2:1").is_err());
+        assert!(DistSpec::parse("mesh:2").is_err());
+    }
+
+    #[test]
+    fn frame_roundtrip_over_loopback() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut tx = TcpStream::connect(addr).unwrap();
+        let (mut rx, _) = listener.accept().unwrap();
+        let mut payload = control_payload(KIND_TOKEN, 1, 2);
+        payload.extend_from_slice(&(-7i64).to_le_bytes());
+        payload.push(1);
+        write_frame(&mut tx, &payload).unwrap();
+        let mut buf = Vec::new();
+        read_frame(&mut rx, &mut buf).unwrap();
+        assert_eq!(buf, payload);
+        let mut cur = Cur::new(&buf);
+        assert_eq!(cur.u8().unwrap(), KIND_TOKEN);
+        assert_eq!(cur.u32().unwrap(), 1);
+        assert_eq!(cur.u32().unwrap(), 2);
+        assert_eq!(cur.i64().unwrap(), -7);
+        assert_eq!(cur.u8().unwrap(), 1);
+        assert!(cur.u8().is_err(), "cursor is exhausted");
+    }
+
+    #[test]
+    fn stats_frame_roundtrip() {
+        let mut stats = EngineStats {
+            converged: true,
+            wall_secs: 1.25,
+            metrics: crate::coordinator::MetricsReport {
+                total: Counters::default(),
+                per_thread_updates: vec![10, 20, 30],
+            },
+            final_max_priority: 3.5e-7,
+        };
+        stats.metrics.total.updates = 42;
+        stats.metrics.total.boundary_msgs_sent = 7;
+        stats.metrics.total.net_wait_us = 99;
+        let payload = encode_stats(3, &stats);
+        let mut cur = Cur::new(&payload);
+        assert_eq!(cur.u8().unwrap(), KIND_STATS);
+        assert_eq!(cur.u32().unwrap(), 3);
+        assert_eq!(cur.u32().unwrap(), 0);
+        let r = decode_stats(&mut cur).unwrap();
+        assert_eq!(r.counters.updates, 42);
+        assert_eq!(r.counters.boundary_msgs_sent, 7);
+        assert_eq!(r.counters.net_wait_us, 99);
+        assert_eq!(r.per_thread, vec![10, 20, 30]);
+        assert_eq!(r.wall, 1.25);
+        assert_eq!(r.final_prio, 3.5e-7);
+        assert!(r.converged);
+    }
+
+    #[test]
+    fn normalize_partition_defaults_and_validates() {
+        let base = RunConfig::new(ModelSpec::Ising { n: 6 }, AlgorithmSpec::RelaxedResidual)
+            .with_threads(3);
+        // Off → affine with threads × nprocs shards.
+        let mut cfg = base.clone();
+        normalize_partition(&mut cfg, 2).unwrap();
+        assert_eq!(
+            cfg.partition,
+            PartitionSpec::Affine { shards: 6, spill: DEFAULT_SPILL, bfs: false }
+        );
+        // Auto shard count resolves the same way, keeping spill/bfs.
+        let mut cfg = base
+            .clone()
+            .with_partition(PartitionSpec::Affine { shards: 0, spill: 0.2, bfs: true });
+        normalize_partition(&mut cfg, 4).unwrap();
+        assert_eq!(cfg.partition, PartitionSpec::Affine { shards: 12, spill: 0.2, bfs: true });
+        // Explicit-but-too-few shards is an error, not a silent re-shard.
+        let explicit =
+            |shards| PartitionSpec::Affine { shards, spill: DEFAULT_SPILL, bfs: false };
+        let mut cfg = base.with_partition(explicit(3));
+        assert!(normalize_partition(&mut cfg, 4).is_err());
+        // Enough explicit shards pass through untouched.
+        let mut cfg2 = RunConfig::new(ModelSpec::Ising { n: 6 }, AlgorithmSpec::RelaxedResidual)
+            .with_partition(explicit(8));
+        normalize_partition(&mut cfg2, 4).unwrap();
+        assert_eq!(cfg2.partition, explicit(8));
+    }
+
+    #[test]
+    fn counters_encode_decode_roundtrip() {
+        let c = Counters {
+            updates: 1,
+            useful_updates: 2,
+            wasted_pops: 3,
+            stale_pops: 4,
+            claim_failures: 5,
+            pops: 6,
+            inserts: 7,
+            rounds: 8,
+            splashes: 9,
+            refreshes: 10,
+            insert_batches: 11,
+            tasks_touched: 12,
+            msg_bytes_logical: 13,
+            msg_bytes_padded: 14,
+            model_bytes: 15,
+            peak_rss_bytes: 16,
+            boundary_msgs_sent: 17,
+            boundary_msgs_recv: 18,
+            boundary_bytes: 19,
+            exchange_batches: 20,
+            net_wait_us: 21,
+        };
+        let mut p = Vec::new();
+        encode_counters(&c, &mut p);
+        assert_eq!(p.len(), 21 * 8);
+        let d = decode_counters(&mut Cur::new(&p)).unwrap();
+        assert_eq!(c, d);
+    }
+}

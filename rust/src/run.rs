@@ -105,6 +105,11 @@ impl RunReport {
             ("load_mode", Json::Str(self.prep.load_mode.label().into())),
             ("arena", Json::Str(self.config.arena.label().into())),
             ("peak_rss_bytes", Json::Num(m.peak_rss_bytes as f64)),
+            ("boundary_msgs_sent", Json::Num(m.boundary_msgs_sent as f64)),
+            ("boundary_msgs_recv", Json::Num(m.boundary_msgs_recv as f64)),
+            ("boundary_bytes", Json::Num(m.boundary_bytes as f64)),
+            ("exchange_batches", Json::Num(m.exchange_batches as f64)),
+            ("net_wait_secs", Json::Num(m.net_wait_us as f64 / 1e6)),
             (
                 "updates_per_sec",
                 Json::Num(if self.stats.wall_secs > 0.0 {
@@ -232,13 +237,15 @@ pub fn run_on_model_prepped(
 /// `cfg.precision` in `cfg.arena`-backed allocations. The single
 /// resolution point shared by production runs and the parity/property
 /// test suites — keep them on this helper so the arena layout, storage
-/// precision, and backing mode can never drift from the config. Only the
-/// file-backed arena arm can fail (temp-file creation).
+/// precision, backing mode, and damping factor can never drift from the
+/// config. Only the file-backed arena arm can fail (temp-file creation).
 pub fn build_messages(cfg: &RunConfig, mrf: &Mrf) -> Result<Messages> {
-    match crate::model::partition::for_messages(mrf, cfg) {
-        Some(p) => Messages::uniform_partitioned_in(mrf, &p, cfg.precision, &cfg.arena),
-        None => Messages::uniform_in(mrf, cfg.precision, &cfg.arena),
-    }
+    let mut msgs = match crate::model::partition::for_messages(mrf, cfg) {
+        Some(p) => Messages::uniform_partitioned_in(mrf, &p, cfg.precision, &cfg.arena)?,
+        None => Messages::uniform_in(mrf, cfg.precision, &cfg.arena)?,
+    };
+    msgs.set_damping(cfg.damping);
+    Ok(msgs)
 }
 
 #[cfg(test)]

@@ -145,6 +145,18 @@ pub trait Scheduler: Send + Sync {
         }
         n
     }
+
+    /// Sweep **every** internal queue and return true only if all of them
+    /// were observed empty. Unlike a failed [`Scheduler::pop`] — which for
+    /// relaxed schedulers only proves the *sampled* queues looked empty —
+    /// this is a linearizable check against entries that were fully
+    /// inserted before the call: a termination token must not be forwarded
+    /// on the strength of an unlucky two-choice sample. Entries being
+    /// inserted concurrently may still be missed; the quiescence counters
+    /// (and, distributed, the token color) cover that window.
+    fn is_definitely_empty(&self) -> bool {
+        self.approx_len() == 0
+    }
 }
 
 /// Shard-affinity configuration handed to [`SchedChoice::build`] when the

@@ -343,6 +343,16 @@ impl Scheduler for Multiqueue {
     fn approx_len(&self) -> usize {
         self.len.load(Ordering::Relaxed)
     }
+
+    /// Lock every sub-queue in turn and report true only if each heap was
+    /// empty when visited. The relaxed `len` counter can transiently
+    /// disagree with the heaps (it is updated outside the heap locks), so
+    /// the termination path must not trust `approx_len` alone: an entry
+    /// whose insert completed before this call is guaranteed to be seen,
+    /// which is the property the distributed token ring needs.
+    fn is_definitely_empty(&self) -> bool {
+        self.queues.iter().all(|q| q.heap.lock().unwrap().is_empty())
+    }
 }
 
 #[cfg(test)]
@@ -625,6 +635,73 @@ mod tests {
         let tasks: Vec<u32> = buf.iter().map(|e| e.task).collect();
         assert_eq!(tasks, vec![9, 8, 7, 6], "exact queue pops best-first");
         assert_eq!(q.pop_batch(&mut r, None, 100, &mut buf), 6);
+    }
+
+    #[test]
+    fn definitely_empty_tracks_heaps_not_counter() {
+        let q = Multiqueue::new(8);
+        let mut r = rng();
+        assert!(q.is_definitely_empty());
+        q.insert(Entry { prio: 1.0, task: 0, epoch: 0 }, &mut r);
+        assert!(!q.is_definitely_empty());
+        q.pop(&mut r).unwrap();
+        assert!(q.is_definitely_empty());
+    }
+
+    #[test]
+    fn definitely_empty_sees_slow_inserter_entries() {
+        // Race a sweeper against an inserter that trickles entries in with
+        // deliberate pauses: whenever the sweeper observes "definitely
+        // empty", every entry whose insert had *completed* must already
+        // have been popped — is_definitely_empty must never report empty
+        // while a fully inserted entry is still sitting in some heap (the
+        // false positive a momentarily-unlucky pop sample could produce).
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let q = std::sync::Arc::new(Multiqueue::for_threads(4, 4));
+        let inserted = std::sync::Arc::new(AtomicUsize::new(0));
+        let total = 300u32;
+        std::thread::scope(|s| {
+            {
+                let q = std::sync::Arc::clone(&q);
+                let inserted = std::sync::Arc::clone(&inserted);
+                s.spawn(move || {
+                    let mut r = Xoshiro256::stream(5, 1);
+                    for t in 0..total {
+                        q.insert(Entry { prio: r.next_f64(), task: t, epoch: 0 }, &mut r);
+                        inserted.fetch_add(1, Ordering::Release);
+                        if t % 16 == 0 {
+                            // Stall with the structure nonempty so the
+                            // sweeper gets plenty of mid-stream looks.
+                            std::thread::sleep(std::time::Duration::from_micros(50));
+                        }
+                    }
+                });
+            }
+            let mut r = Xoshiro256::stream(5, 2);
+            let mut popped = 0usize;
+            loop {
+                if let Some(_e) = q.pop(&mut r) {
+                    popped += 1;
+                    continue;
+                }
+                // Snapshot completed inserts BEFORE the sweep: those
+                // entries were fully in some heap when the sweep began, so
+                // an "empty" verdict proves this thread (the only popper)
+                // already drained every one of them.
+                let done = inserted.load(Ordering::Acquire);
+                if q.is_definitely_empty() {
+                    assert!(
+                        popped >= done,
+                        "definitely-empty with {done} inserted but only {popped} popped"
+                    );
+                    if popped == total as usize {
+                        break;
+                    }
+                }
+                std::thread::yield_now();
+            }
+            assert_eq!(popped, total as usize);
+        });
     }
 
     #[test]

@@ -88,8 +88,13 @@ pub struct CellResult {
     /// Out-of-core axis: process peak resident set (`VmHWM`, bytes) after
     /// the cell's last sample — a **gauge**; 0 without procfs. Absent ⇒ 0.
     pub peak_rss_bytes: u64,
+    /// Update-blend axis: the damping factor of the cell's runs
+    /// (`RunConfig::damping`, sweep-wide like `arena`). Absent in
+    /// pre-damping baselines ⇒ 0.0 — those cells ran undamped.
+    pub damping: f64,
     /// Per-sample wall-clock seconds. For delta cells (`/delta` id
-    /// suffix) these are the *warm* re-convergence times.
+    /// suffix) these are the *warm* re-convergence times; for distributed
+    /// cells (`/dist2`) the 2-rank spawn times.
     pub wall_secs: Vec<f64>,
     /// Per-sample committed update counts.
     pub updates: Vec<f64>,
@@ -105,6 +110,24 @@ pub struct CellResult {
     /// Delta axis: seeded frontier size of the last warm sample
     /// (`Counters::tasks_touched`). 0 for non-delta cells; absent ⇒ 0.
     pub tasks_touched: u64,
+    /// Distributed axis: per-sample wall-clock of the same-run
+    /// single-process arm a `/dist2` cell's 2-rank spawn samples are
+    /// judged against. Empty for non-distributed cells; absent ⇒ empty.
+    pub sp_wall_secs: Vec<f64>,
+    /// Distributed axis: boundary messages shipped off-rank over the last
+    /// 2-rank sample, summed across ranks (origin-side count). 0 for
+    /// non-distributed cells; absent ⇒ 0.
+    pub boundary_msgs_sent: u64,
+    /// Distributed axis: boundary messages applied from the wire, summed
+    /// across ranks — equals `boundary_msgs_sent` on a clean run (the
+    /// counters are end-to-end; relay hops are excluded). Absent ⇒ 0.
+    pub boundary_msgs_recv: u64,
+    /// Distributed axis: boundary payload bytes on the wire over the last
+    /// 2-rank sample. 0 for non-distributed cells; absent ⇒ 0.
+    pub boundary_bytes: u64,
+    /// Distributed axis: coalesced exchange batches flushed over the last
+    /// 2-rank sample. 0 for non-distributed cells; absent ⇒ 0.
+    pub exchange_batches: u64,
     /// Whether every sample converged within budget.
     pub converged: bool,
     /// Convergence trace of the last sample.
@@ -150,6 +173,9 @@ impl CellResult {
             ("load_mode", Json::Str(self.load_mode.clone())),
             ("arena", Json::Str(self.arena.clone())),
             ("peak_rss_bytes", Json::Num(self.peak_rss_bytes as f64)),
+            // The update-blend axis is emitted unconditionally (0.0 when
+            // the sweep ran undamped) so schema consumers can grep for it.
+            ("damping", Json::Num(self.damping)),
             ("wall_secs", Json::Arr(self.wall_secs.iter().map(|&t| Json::Num(t)).collect())),
             ("updates", Json::Arr(self.updates.iter().map(|&u| Json::Num(u)).collect())),
             // Delta-axis fields are emitted unconditionally (zero/empty on
@@ -160,6 +186,17 @@ impl CellResult {
             ),
             ("time_to_reconverge", Json::Num(self.time_to_reconverge)),
             ("tasks_touched", Json::Num(self.tasks_touched as f64)),
+            // Distributed-axis fields are emitted unconditionally
+            // (zero/empty on non-dist cells) so schema consumers can grep
+            // for them.
+            (
+                "sp_wall_secs",
+                Json::Arr(self.sp_wall_secs.iter().map(|&t| Json::Num(t)).collect()),
+            ),
+            ("boundary_msgs_sent", Json::Num(self.boundary_msgs_sent as f64)),
+            ("boundary_msgs_recv", Json::Num(self.boundary_msgs_recv as f64)),
+            ("boundary_bytes", Json::Num(self.boundary_bytes as f64)),
+            ("exchange_batches", Json::Num(self.exchange_batches as f64)),
             ("converged", Json::Bool(self.converged)),
             ("trace", self.trace.to_json()),
         ];
@@ -225,6 +262,7 @@ impl CellResult {
                 .to_string(),
             arena: v.get("arena").and_then(Json::as_str).unwrap_or("mem").to_string(),
             peak_rss_bytes: v.get("peak_rss_bytes").and_then(Json::as_u64).unwrap_or(0),
+            damping: v.get("damping").and_then(Json::as_f64).unwrap_or(0.0),
             wall_secs: arr("wall_secs")?,
             updates: arr("updates")?,
             scratch_wall_secs: if v.get("scratch_wall_secs").is_some() {
@@ -237,6 +275,15 @@ impl CellResult {
                 .and_then(Json::as_f64)
                 .unwrap_or(0.0),
             tasks_touched: v.get("tasks_touched").and_then(Json::as_u64).unwrap_or(0),
+            sp_wall_secs: if v.get("sp_wall_secs").is_some() {
+                arr("sp_wall_secs")?
+            } else {
+                Vec::new()
+            },
+            boundary_msgs_sent: v.get("boundary_msgs_sent").and_then(Json::as_u64).unwrap_or(0),
+            boundary_msgs_recv: v.get("boundary_msgs_recv").and_then(Json::as_u64).unwrap_or(0),
+            boundary_bytes: v.get("boundary_bytes").and_then(Json::as_u64).unwrap_or(0),
+            exchange_batches: v.get("exchange_batches").and_then(Json::as_u64).unwrap_or(0),
             converged: v
                 .get("converged")
                 .and_then(Json::as_bool)
@@ -490,11 +537,17 @@ mod tests {
             load_mode: "read".into(),
             arena: "mem".into(),
             peak_rss_bytes: 1 << 22,
+            damping: 0.25,
             wall_secs: vec![secs, secs * 1.05, secs * 0.95],
             updates: vec![1000.0, 1010.0, 990.0],
             scratch_wall_secs: vec![secs * 4.0, secs * 4.2, secs * 3.8],
             time_to_reconverge: secs,
             tasks_touched: 12,
+            sp_wall_secs: vec![secs * 0.9, secs * 0.95, secs * 0.85],
+            boundary_msgs_sent: 640,
+            boundary_msgs_recv: 640,
+            boundary_bytes: 13_440,
+            exchange_batches: 5,
             converged: true,
             trace: Trace {
                 points: vec![TracePoint {
@@ -653,6 +706,48 @@ mod tests {
         assert_eq!(back.cells[0].load_mode, "read", "pre-outofcore cells used copying loads");
         assert_eq!(back.cells[0].arena, "mem", "pre-outofcore cells used heap arenas");
         assert_eq!(back.cells[0].peak_rss_bytes, 0);
+        assert!(!compare(&b, &back, DEFAULT_TOLERANCE).unwrap().has_regression());
+    }
+
+    #[test]
+    fn pre_damping_cells_parse_as_zero() {
+        let b = baseline(vec![cell("relaxed_residual/p2", 0.5)]);
+        let mut j = b.to_json();
+        // Simulate a baseline written before the update-blend axis existed.
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Arr(cells)) = o.get_mut("cells") {
+                if let Json::Obj(c) = &mut cells[0] {
+                    c.remove("damping");
+                }
+            }
+        }
+        let back = Baseline::from_json(&j).unwrap();
+        assert_eq!(back.cells[0].damping, 0.0, "pre-damping cells ran undamped");
+        assert!(!compare(&b, &back, DEFAULT_TOLERANCE).unwrap().has_regression());
+    }
+
+    #[test]
+    fn pre_distributed_cells_parse_as_zero() {
+        let b = baseline(vec![cell("relaxed_residual/p2", 0.5)]);
+        let mut j = b.to_json();
+        // Simulate a baseline written before the distributed axis existed.
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Arr(cells)) = o.get_mut("cells") {
+                if let Json::Obj(c) = &mut cells[0] {
+                    c.remove("sp_wall_secs");
+                    c.remove("boundary_msgs_sent");
+                    c.remove("boundary_msgs_recv");
+                    c.remove("boundary_bytes");
+                    c.remove("exchange_batches");
+                }
+            }
+        }
+        let back = Baseline::from_json(&j).unwrap();
+        assert!(back.cells[0].sp_wall_secs.is_empty());
+        assert_eq!(back.cells[0].boundary_msgs_sent, 0);
+        assert_eq!(back.cells[0].boundary_msgs_recv, 0);
+        assert_eq!(back.cells[0].boundary_bytes, 0);
+        assert_eq!(back.cells[0].exchange_batches, 0);
         assert!(!compare(&b, &back, DEFAULT_TOLERANCE).unwrap().has_regression());
     }
 

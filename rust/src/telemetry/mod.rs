@@ -76,9 +76,14 @@
 //!       "peak_rss_bytes": 73400320,     // out-of-core axis: process VmHWM
 //!                                       // after the last sample; a gauge
 //!                                       // (absent ⇒ 0)
+//!       "damping": 0.0,                 // update-blend axis: the sweep's
+//!                                       // damping factor (absent in
+//!                                       // pre-damping baselines ⇒ 0.0)
 //!       "wall_secs": [0.012, 0.011],    // one entry per sample; on
 //!                                       // "/delta" cells these are the
-//!                                       // warm re-convergence times
+//!                                       // warm re-convergence times, on
+//!                                       // "/dist2" cells the 2-rank
+//!                                       // spawn times
 //!       "updates": [4100, 4080],
 //!       "scratch_wall_secs": [0.05, 0.048], // delta cells: cold re-solve
 //!                                       // of the same perturbed instance
@@ -86,6 +91,13 @@
 //!       "time_to_reconverge": 0.011,    // delta cells: median warm secs
 //!       "tasks_touched": 24,            // delta cells: seeded frontier
 //!                                       // size of the last warm sample
+//!       "sp_wall_secs": [0.014, 0.013], // dist2 cells: same-run
+//!                                       // single-process arm (empty on
+//!                                       // non-dist cells)
+//!       "boundary_msgs_sent": 1500,     // dist2 cells: merged boundary
+//!       "boundary_msgs_recv": 1500,     // counters of the last 2-rank
+//!       "boundary_bytes": 31500,        // sample (0 on non-dist cells;
+//!       "exchange_batches": 12,         // absent ⇒ 0)
 //!       "converged": true,
 //!       "time_summary": { "n": 2, "mean": …, "stddev": …, "min": …,
 //!                          "max": …, "median": …, "p05": …, "p95": … },
@@ -186,6 +198,10 @@ pub struct BenchOpts {
     /// (`--verify-load`); off by default because full verification pages
     /// in every byte, costing exactly the copy pass mapping avoids.
     pub verify_load: bool,
+    /// Damping factor applied to every cell's runs (`--damping`, the
+    /// geometric message blend). Sweep-wide like `arena`; 0.0 keeps the
+    /// historical undamped trajectories bit-identical.
+    pub damping: f64,
 }
 
 impl BenchOpts {
@@ -208,6 +224,7 @@ impl BenchOpts {
             load_mode: LoadMode::Auto,
             arena: ArenaMode::Mem,
             verify_load: false,
+            damping: 0.0,
         }
     }
 
@@ -420,7 +437,8 @@ pub fn bench_family(family: &str, opts: &BenchOpts) -> Result<Baseline> {
                 .with_fused(rc.fused)
                 .with_kernel(rc.kernel)
                 .with_precision(rc.precision)
-                .with_arena(opts.arena.clone());
+                .with_arena(opts.arena.clone())
+                .with_damping(opts.damping);
             cfg.time_limit_secs = opts.time_limit;
             let rep = run_on_model_observed(&cfg, mrf.clone(), Some(&recorder))?;
             wall_secs.push(rep.stats.wall_secs);
@@ -452,16 +470,31 @@ pub fn bench_family(family: &str, opts: &BenchOpts) -> Result<Baseline> {
             load_mode: prep.load_mode.label().to_string(),
             arena: opts.arena.label().to_string(),
             peak_rss_bytes: peak_rss,
+            damping: opts.damping,
             wall_secs,
             updates,
             scratch_wall_secs: Vec::new(),
             time_to_reconverge: 0.0,
             tasks_touched: 0,
+            sp_wall_secs: Vec::new(),
+            boundary_msgs_sent: 0,
+            boundary_msgs_recv: 0,
+            boundary_bytes: 0,
+            exchange_batches: 0,
             converged,
             trace: last_trace,
         });
     }
     cells.push(bench_delta_cell(family, &spec, &mrf, opts, &recorder, &prep)?);
+    // Worker ranks exec the current binary unless RELAXED_BP_EXE points at
+    // the real CLI, so under the lib's own `cargo test` harness (where the
+    // current executable is the unit-test runner) the distributed cell is
+    // skipped unless the caller provided the binary path. Integration
+    // suites set RELAXED_BP_EXE; the production `bench` subcommand needs
+    // no override — its current executable *is* the CLI.
+    if !cfg!(test) || std::env::var("RELAXED_BP_EXE").is_ok() {
+        cells.push(bench_dist_cell(family, &spec, &mrf, opts, &recorder, &prep)?);
+    }
     Ok(Baseline {
         schema_version: SCHEMA_VERSION,
         family: family.to_string(),
@@ -520,7 +553,8 @@ fn bench_delta_cell(
             .with_fused(rc.fused)
             .with_kernel(rc.kernel)
             .with_precision(rc.precision)
-            .with_arena(opts.arena.clone());
+            .with_arena(opts.arena.clone())
+            .with_damping(opts.damping);
         cfg.time_limit_secs = opts.time_limit;
         // Cold arm: solve the perturbed instance from uniform messages.
         let mut scratch_mrf = mrf.clone();
@@ -565,11 +599,112 @@ fn bench_delta_cell(
         load_mode: prep.load_mode.label().to_string(),
         arena: opts.arena.label().to_string(),
         peak_rss_bytes: peak_rss,
+        damping: opts.damping,
         wall_secs,
         updates,
         scratch_wall_secs,
         time_to_reconverge,
         tasks_touched,
+        sp_wall_secs: Vec::new(),
+        boundary_msgs_sent: 0,
+        boundary_msgs_recv: 0,
+        boundary_bytes: 0,
+        exchange_batches: 0,
+        converged,
+        trace: last_trace,
+    })
+}
+
+/// Measure the distributed (`/dist2`) cell for one family: the relaxed
+/// contender at the highest thread count solved once per sample as a
+/// 2-rank local spawn (rank 0 in-process, the worker rank forked from the
+/// CLI binary, boundary messages batched over loopback TCP) and once
+/// single-process in the same run — the arm CI's localhost floor is
+/// judged against. `wall_secs` holds the 2-rank times, `sp_wall_secs` the
+/// single-process ones; the boundary counters come from the merged
+/// distributed report of the last sample. The trace is the
+/// single-process arm's (the spawn path crosses process boundaries and
+/// has no observer hook). Both arms rebuild the model from
+/// `(spec, seed)` — the deterministic builders make that the same
+/// instance [`bench_family`] measured.
+fn bench_dist_cell(
+    family: &str,
+    spec: &ModelSpec,
+    mrf: &crate::model::Mrf,
+    opts: &BenchOpts,
+    recorder: &TraceRecorder,
+    prep: &crate::run::PrepStats,
+) -> Result<CellResult> {
+    let max_p = opts.threads.iter().copied().max().unwrap_or(1);
+    let rc = RosterCell::new(AlgorithmSpec::RelaxedResidual, max_p, PartitionSpec::Off);
+    let id = format!("{}/dist2", rc.id());
+    eprintln!("[bench] {family} / {id} …");
+    let mut wall_secs = Vec::with_capacity(opts.samples);
+    let mut sp_wall_secs = Vec::with_capacity(opts.samples);
+    let mut updates = Vec::with_capacity(opts.samples);
+    let mut converged = true;
+    let mut last_trace = Trace::default();
+    let mut msg_bytes = (0u64, 0u64);
+    let mut boundary = (0u64, 0u64, 0u64, 0u64);
+    let mut init_secs = 0.0f64;
+    let mut peak_rss = 0u64;
+    for _ in 0..opts.samples.max(1) {
+        let mut cfg = RunConfig::new(spec.clone(), rc.alg.clone())
+            .with_threads(rc.threads)
+            .with_seed(opts.seed)
+            .with_partition(rc.partition)
+            .with_fused(rc.fused)
+            .with_kernel(rc.kernel)
+            .with_precision(rc.precision)
+            .with_arena(opts.arena.clone())
+            .with_damping(opts.damping);
+        cfg.time_limit_secs = opts.time_limit;
+        // Single-process arm (observed: the cell's trace).
+        let sp = run_on_model_observed(&cfg, mrf.clone(), Some(recorder))?;
+        sp_wall_secs.push(sp.stats.wall_secs);
+        converged &= sp.stats.converged;
+        last_trace = recorder.take();
+        init_secs = sp.prep.init_secs;
+        // 2-rank spawn arm (merged report across ranks).
+        let dist = crate::net::run_spawn(&cfg, 2)?;
+        wall_secs.push(dist.stats.wall_secs);
+        updates.push(dist.stats.metrics.total.updates as f64);
+        converged &= dist.stats.converged;
+        let t = &dist.stats.metrics.total;
+        boundary =
+            (t.boundary_msgs_sent, t.boundary_msgs_recv, t.boundary_bytes, t.exchange_batches);
+        msg_bytes = (t.msg_bytes_logical, t.msg_bytes_padded);
+        peak_rss = t.peak_rss_bytes;
+    }
+    Ok(CellResult {
+        id,
+        algorithm: rc.alg.name(),
+        scheduler: scheduler_kind(&rc.alg).to_string(),
+        threads: rc.threads,
+        partition: rc.partition.label().to_string(),
+        fused: rc.fused,
+        kernel: rc.kernel.label().to_string(),
+        precision: rc.precision.label().to_string(),
+        msg_bytes_logical: msg_bytes.0,
+        msg_bytes_padded: msg_bytes.1,
+        build_secs: prep.build_secs,
+        load_secs: prep.load_secs,
+        init_secs,
+        model_bytes: prep.model_bytes,
+        load_mode: prep.load_mode.label().to_string(),
+        arena: opts.arena.label().to_string(),
+        peak_rss_bytes: peak_rss,
+        damping: opts.damping,
+        wall_secs,
+        updates,
+        scratch_wall_secs: Vec::new(),
+        time_to_reconverge: 0.0,
+        tasks_touched: 0,
+        sp_wall_secs,
+        boundary_msgs_sent: boundary.0,
+        boundary_msgs_recv: boundary.1,
+        boundary_bytes: boundary.2,
+        exchange_batches: boundary.3,
         converged,
         trace: last_trace,
     })
@@ -807,5 +942,13 @@ mod tests {
         let base = b.cells.iter().find(|c| c.id == "relaxed_residual/p2").unwrap();
         assert!(base.scratch_wall_secs.is_empty());
         assert_eq!(base.tasks_touched, 0);
+        // The sweep ran undamped, and every cell records the axis.
+        assert!(b.cells.iter().all(|c| c.damping == 0.0));
+        // The dist2 cell needs RELAXED_BP_EXE to fork worker ranks; under
+        // the unit-test harness (no override set) it is skipped — the
+        // integration suite exercises it with the real binary.
+        if std::env::var("RELAXED_BP_EXE").is_err() {
+            assert!(!b.cells.iter().any(|c| c.id.ends_with("/dist2")));
+        }
     }
 }

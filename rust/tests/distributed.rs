@@ -1,0 +1,220 @@
+//! Distributed-execution parity and protocol tests (`net::run_spawn`).
+//!
+//! - **Fixed-point parity**: a `spawn:2` and a `spawn:4` solve reach the
+//!   single-process fixed point on {powerlaw, LDPC, Ising} × {fused,
+//!   edgewise} × {f64, f32}. Parity runs use the delta suite's tolerance
+//!   regime: ε = 1e-12 (far below both arms' discretization), marginal
+//!   L∞ ≤ 1e-9 under f64 and ≤ 1e-5 under f32 (f32 cells quantize the
+//!   stored fixed point, so bit-identical states are not guaranteed
+//!   across different schedules).
+//! - **Pop accounting**: the merged report preserves the runtime's
+//!   counter identity `pops = stale_pops + claim_failures + updates`
+//!   (each rank satisfies it, so the merged sums must too).
+//! - **Boundary-counter sanity**: counters are end-to-end (origin +
+//!   final destination, relay hops excluded), so summed over ranks
+//!   `boundary_msgs_sent == boundary_msgs_recv`, and a genuinely
+//!   multi-rank solve exchanges at least one coalesced batch.
+//! - **Disconnect**: a peer that handshakes and then drops mid-solve
+//!   produces a clean error, not a hang.
+//! - **Damping crosses the boundary exactly once**: a damped distributed
+//!   solve matches the damped single-process fixed point (boundary
+//!   values ship post-blend and apply raw — double-damping would break
+//!   this parity).
+//!
+//! Every spawn test points `RELAXED_BP_EXE` at the real CLI binary so
+//! worker ranks don't re-enter this test harness.
+
+use relaxed_bp::bp::{max_marginal_diff, Precision};
+use relaxed_bp::configio::{AlgorithmSpec, ModelSpec, RunConfig};
+use relaxed_bp::net::{cmd_run_distributed, run_spawn};
+use relaxed_bp::run::{run_config, RunReport};
+
+/// Worker ranks must exec the real CLI, not the test binary hosting us.
+fn use_real_worker_binary() {
+    std::env::set_var("RELAXED_BP_EXE", env!("CARGO_BIN_EXE_relaxed-bp"));
+}
+
+/// The parity grid's model families, at property-test sizes.
+fn families() -> Vec<ModelSpec> {
+    vec![
+        ModelSpec::PowerLaw { n: 80, m: 3 },
+        ModelSpec::Ldpc { n: 24, flip_prob: 0.05 },
+        ModelSpec::Ising { n: 6 },
+    ]
+}
+
+/// A parity config: tiny ε pins the fixed point tightly enough that two
+/// independently scheduled solves agree to the comparison bound.
+fn parity_cfg(spec: ModelSpec, fused: bool, precision: Precision) -> RunConfig {
+    let mut cfg = RunConfig::new(spec, AlgorithmSpec::RelaxedResidual)
+        .with_threads(2)
+        .with_seed(7)
+        .with_fused(fused)
+        .with_precision(precision);
+    cfg.epsilon = 1e-12;
+    cfg.time_limit_secs = 120.0;
+    cfg
+}
+
+fn assert_pop_accounting(rep: &RunReport, label: &str) {
+    let m = &rep.stats.metrics.total;
+    assert_eq!(
+        m.pops,
+        m.stale_pops + m.claim_failures + m.updates,
+        "{label}: merged pop-accounting identity broken"
+    );
+}
+
+fn assert_boundary_sanity(rep: &RunReport, label: &str) {
+    let m = &rep.stats.metrics.total;
+    assert_eq!(
+        m.boundary_msgs_sent, m.boundary_msgs_recv,
+        "{label}: end-to-end counters must balance"
+    );
+    assert!(m.boundary_msgs_sent > 0, "{label}: no boundary traffic — test is vacuous");
+    assert!(m.exchange_batches > 0, "{label}: no coalesced batches recorded");
+    assert!(m.boundary_bytes > 0, "{label}: no boundary bytes recorded");
+}
+
+/// Run one family through {fused, edgewise} × {f64, f32} at the given
+/// rank counts, asserting fixed-point parity against the single-process
+/// solve plus the counter invariants on every distributed report.
+fn parity_over_axes(spec: ModelSpec, rank_counts: &[u32]) {
+    use_real_worker_binary();
+    for fused in [true, false] {
+        for precision in [Precision::F64, Precision::F32] {
+            let cfg = parity_cfg(spec.clone(), fused, precision);
+            let single = run_config(&cfg).unwrap();
+            assert!(single.stats.converged, "{spec:?} fused={fused} {precision:?}: single");
+            let reference = single.marginals();
+            let bound = if precision == Precision::F64 { 1e-9 } else { 1e-5 };
+            for &nprocs in rank_counts {
+                let label = format!("{spec:?} fused={fused} {precision:?} ranks={nprocs}");
+                let rep = run_spawn(&cfg, nprocs).unwrap();
+                assert!(rep.stats.converged, "{label}: distributed run did not converge");
+                let diff = max_marginal_diff(&reference, &rep.marginals());
+                assert!(diff <= bound, "{label}: marginal L∞ = {diff} > {bound}");
+                assert_pop_accounting(&rep, &label);
+                assert_boundary_sanity(&rep, &label);
+            }
+        }
+    }
+}
+
+#[test]
+fn powerlaw_spawn_parity_2_and_4_ranks() {
+    parity_over_axes(ModelSpec::PowerLaw { n: 80, m: 3 }, &[2, 4]);
+}
+
+#[test]
+fn ldpc_spawn_parity_2_and_4_ranks() {
+    parity_over_axes(ModelSpec::Ldpc { n: 24, flip_prob: 0.05 }, &[2, 4]);
+}
+
+#[test]
+fn ising_spawn_parity_2_and_4_ranks() {
+    parity_over_axes(ModelSpec::Ising { n: 6 }, &[2, 4]);
+}
+
+/// Boundary values are damped exactly once: the origin rank ships the
+/// post-blend stored value and the receiver applies it raw, so a damped
+/// distributed solve must land on the damped single-process fixed point.
+/// (A double-damped boundary would converge somewhere else.)
+#[test]
+fn damped_distributed_solve_matches_damped_single_process() {
+    use_real_worker_binary();
+    let mut cfg = parity_cfg(ModelSpec::Ising { n: 6 }, true, Precision::F64);
+    cfg = cfg.with_damping(0.3);
+    let single = run_config(&cfg).unwrap();
+    assert!(single.stats.converged, "damped single-process run");
+    let rep = run_spawn(&cfg, 2).unwrap();
+    assert!(rep.stats.converged, "damped 2-rank run");
+    let diff = max_marginal_diff(&single.marginals(), &rep.marginals());
+    assert!(diff <= 1e-9, "damped distributed vs single L∞ = {diff}");
+    assert_boundary_sanity(&rep, "damped 2-rank");
+}
+
+/// The merged report is a real merge, not rank 0's view: per-thread
+/// update slots from every rank land in the report, and the merged
+/// update count splits the work across ranks.
+#[test]
+fn merged_report_covers_every_rank() {
+    use_real_worker_binary();
+    let cfg = parity_cfg(ModelSpec::PowerLaw { n: 80, m: 3 }, true, Precision::F64);
+    let rep = run_spawn(&cfg, 2).unwrap();
+    assert!(rep.stats.converged);
+    // Two ranks × two threads each.
+    assert_eq!(rep.stats.metrics.per_thread_updates.len(), 4, "per-thread slots from both ranks");
+    let from_threads: u64 = rep.stats.metrics.per_thread_updates.iter().sum();
+    assert_eq!(from_threads, rep.stats.metrics.total.updates, "merged updates are the rank sum");
+    // The merged JSON carries the distributed telemetry fields.
+    let json = rep.to_json();
+    for field in ["boundary_msgs_sent", "boundary_msgs_recv", "boundary_bytes", "exchange_batches"]
+    {
+        assert!(
+            json.get(field).and_then(|v| v.as_f64()).unwrap_or(-1.0) > 0.0,
+            "merged JSON field {field} missing or zero"
+        );
+    }
+    assert!(json.get("net_wait_secs").and_then(|v| v.as_f64()).is_some());
+}
+
+/// A peer that completes the handshake and then drops mid-solve is a
+/// clean, prompt error on the coordinator — never a hang: the reader
+/// sees EOF, latches the failure, and shuts the run down.
+#[test]
+fn peer_disconnect_is_a_clean_error_not_a_hang() {
+    use std::io::Write;
+    use std::time::{Duration, Instant};
+    // Reserve a port for the coordinator to re-bind (small race window,
+    // loopback-only).
+    let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = probe.local_addr().unwrap();
+    drop(probe);
+    let fake_worker = std::thread::spawn(move || {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            match std::net::TcpStream::connect(addr) {
+                Ok(mut s) => {
+                    // A valid HELLO frame for rank 1 ([kind][src][dst]),
+                    // then drop the connection without ever solving.
+                    let payload = [1u8, 1, 0, 0, 0, 0, 0, 0, 0];
+                    let mut frame = (payload.len() as u32).to_le_bytes().to_vec();
+                    frame.extend_from_slice(&payload);
+                    let _ = s.write_all(&frame);
+                    return;
+                }
+                Err(e) => {
+                    assert!(Instant::now() < deadline, "never reached coordinator: {e}");
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        }
+    });
+    let mut cfg = parity_cfg(ModelSpec::PowerLaw { n: 80, m: 3 }, true, Precision::F64);
+    cfg.time_limit_secs = 60.0;
+    let spec = format!("coord:2:0:{addr}");
+    let err = cmd_run_distributed(&cfg, &spec, None)
+        .expect_err("coordinator must fail when its peer disconnects");
+    fake_worker.join().unwrap();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("rank"), "failure should name the broken link, got: {msg}");
+}
+
+/// `spawn:1` degenerates to a plain single-process solve (no peers, no
+/// boundary traffic) and still produces a converged merged report.
+#[test]
+fn spawn_single_rank_degenerates_cleanly() {
+    use_real_worker_binary();
+    let cfg = parity_cfg(ModelSpec::Ising { n: 6 }, true, Precision::F64);
+    let rep = run_spawn(&cfg, 1).unwrap();
+    assert!(rep.stats.converged);
+    let m = &rep.stats.metrics.total;
+    assert_eq!(m.boundary_msgs_sent, 0);
+    assert_eq!(m.boundary_msgs_recv, 0);
+    assert_eq!(m.exchange_batches, 0);
+    assert_pop_accounting(&rep, "spawn:1");
+    let single = run_config(&cfg).unwrap();
+    let diff = max_marginal_diff(&single.marginals(), &rep.marginals());
+    assert!(diff <= 1e-9, "spawn:1 vs single L∞ = {diff}");
+}

@@ -13,6 +13,9 @@ use std::path::PathBuf;
 use std::time::Duration;
 
 fn tiny_opts(out_dir: &str) -> BenchOpts {
+    // The dist2 cell forks worker ranks; they must exec the real CLI
+    // binary, not this test harness.
+    std::env::set_var("RELAXED_BP_EXE", env!("CARGO_BIN_EXE_relaxed-bp"));
     let mut opts = BenchOpts::quick();
     opts.samples = 1;
     opts.threads = vec![2];
@@ -104,6 +107,19 @@ fn run_bench_writes_baseline_files_with_traces() {
         for c in &loaded.cells {
             assert!(!c.trace.is_empty(), "{}: empty trace", c.id);
         }
+        // The distributed cell made it through the spawn path: a 2-rank
+        // solve with balanced end-to-end boundary counters and a same-run
+        // single-process arm.
+        let d = loaded
+            .cells
+            .iter()
+            .find(|c| c.id == "relaxed_residual/p2/dist2")
+            .expect("dist2 cell missing");
+        assert!(d.converged, "dist2 arm did not converge");
+        assert_eq!(d.sp_wall_secs.len(), d.wall_secs.len());
+        assert_eq!(d.boundary_msgs_sent, d.boundary_msgs_recv);
+        assert!(d.boundary_msgs_sent > 0, "2-rank solve exchanged no boundary messages");
+        assert!(d.exchange_batches > 0 && d.boundary_bytes > 0);
     }
     // Second sweep finds the stored baselines and diffs against them.
     let outcomes = run_bench(&opts).unwrap();
